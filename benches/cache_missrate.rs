@@ -1,0 +1,144 @@
+//! **A1** (motivation, paper ref [3]): cache behaviour of matmul with and
+//! without the mmt4d layout transformation. The packed layout's unit-stride
+//! tile walks collapse the L1 miss rate — the reason `tensor.pack` exists.
+//!
+//!     cargo bench --bench cache_missrate
+
+use tenx_iree::cachesim::CacheHierarchy;
+use tenx_iree::kernels;
+use tenx_iree::rvv::{Rvv, RvvConfig};
+use tenx_iree::target::TargetDesc;
+use tenx_iree::ukernel::pack;
+use tenx_iree::util::f16::F16;
+use tenx_iree::util::prng::Rng;
+
+struct Row {
+    name: String,
+    cycles: u64,
+    macs: f64,
+    l1_miss: f64,
+    l2_miss: f64,
+    penalty: u64,
+}
+
+fn main() {
+    let target = TargetDesc::milkv_jupiter();
+    let (k, n) = (2048usize, 2048usize);
+    let cols = 64; // simulate a 64-column slice of the GEMV
+    let mut rng = Rng::new(5);
+    let x: Vec<F16> = (0..k).map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+        .collect();
+    let mut rows = Vec::new();
+
+    // 1. Unpacked row-major weights, strided column walk (upstream decode).
+    {
+        let stride = n.min(4096);
+        let b_addr = 0x4000;
+        let y_addr = b_addr + k * stride * 2 + 4096;
+        let mut m = Rvv::new(RvvConfig::jupiter(), y_addr + cols * 4 + 65536)
+            .with_cache(CacheHierarchy::for_target(&target));
+        m.write_f16_slice(0x100, &x);
+        kernels::ireegen_gemv_rvv_strided(&mut m, 0x100, b_addr, y_addr, k,
+                                          cols, stride);
+        let c = m.cache.as_ref().unwrap();
+        rows.push(Row {
+            name: "unpacked strided (upstream GEMV)".into(),
+            cycles: m.stats.cycles,
+            macs: (k * cols) as f64,
+            l1_miss: c.l1.miss_rate(),
+            l2_miss: c.l2.miss_rate(),
+            penalty: m.stats.cache_penalty_cycles,
+        });
+    }
+
+    // 2. mmt4d-packed weights, unit-stride tile walk (the paper's kernel).
+    {
+        let n0 = 64;
+        let n1 = cols / n0;
+        let b: Vec<F16> = (0..k * cols).map(|i| x[i % k]).collect();
+        let mut rhs4 = vec![F16::ZERO; n1 * k * n0];
+        pack::pack_rhs_f16(&b, k, cols, n0, 1, &mut rhs4);
+        let rhs_addr = 0x4000;
+        let out_addr = rhs_addr + rhs4.len() * 2 + 4096;
+        let mut m = Rvv::new(RvvConfig::jupiter(), out_addr + cols * 4 + 65536)
+            .with_cache(CacheHierarchy::for_target(&target));
+        m.write_f16_slice(0x100, &x);
+        m.write_f16_slice(rhs_addr, &rhs4);
+        kernels::mmt4d_decode_rvv(&mut m, 0x100, rhs_addr, out_addr, n1, k);
+        let c = m.cache.as_ref().unwrap();
+        rows.push(Row {
+            name: "mmt4d packed (10x-IREE decode)".into(),
+            cycles: m.stats.cycles,
+            macs: (k * cols) as f64,
+            l1_miss: c.l1.miss_rate(),
+            l2_miss: c.l2.miss_rate(),
+            penalty: m.stats.cache_penalty_cycles,
+        });
+    }
+
+    // 3. Prefill GEMM: tiled-but-unpacked vs packed.
+    {
+        let (mm, kk, nn) = (24usize, 1024usize, 128usize);
+        let a: Vec<F16> = (0..mm * kk)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let b: Vec<F16> = (0..kk * nn)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        // unpacked vectorized GEMM (upstream prefill)
+        let b_addr = 0x10000;
+        let c_addr = b_addr + kk * nn * 2 + 4096;
+        let mut m = Rvv::new(RvvConfig::jupiter(), c_addr + mm * nn * 4 + 65536)
+            .with_cache(CacheHierarchy::for_target(&target));
+        m.write_f16_slice(0x100, &a);
+        m.write_f16_slice(b_addr, &b);
+        kernels::ireegen_gemm_rvv(&mut m, 0x100, b_addr, c_addr, mm, kk, nn);
+        let c = m.cache.as_ref().unwrap();
+        rows.push(Row {
+            name: "unpacked vectorized (upstream GEMM)".into(),
+            cycles: m.stats.cycles,
+            macs: (mm * kk * nn) as f64,
+            l1_miss: c.l1.miss_rate(),
+            l2_miss: c.l2.miss_rate(),
+            penalty: m.stats.cache_penalty_cycles,
+        });
+        // packed mmt4d prefill
+        let (m0, n0) = (6, 32);
+        let m1 = mm.div_ceil(m0);
+        let n1 = nn / n0;
+        let mut lhs4 = vec![F16::ZERO; m1 * kk * m0];
+        let mut rhs4 = vec![F16::ZERO; n1 * kk * n0];
+        pack::pack_lhs_f16(&a, mm, kk, m0, 1, &mut lhs4);
+        pack::pack_rhs_f16(&b, kk, nn, n0, 1, &mut rhs4);
+        let rhs_addr = 0x100 + lhs4.len() * 2 + 64;
+        let out_addr = rhs_addr + rhs4.len() * 2 + 4096;
+        let mut m2 = Rvv::new(RvvConfig::jupiter(),
+                              out_addr + m1 * n1 * m0 * n0 * 4 + 65536)
+            .with_cache(CacheHierarchy::for_target(&target));
+        m2.write_f16_slice(0x100, &lhs4);
+        m2.write_f16_slice(rhs_addr, &rhs4);
+        kernels::mmt4d_prefill_rvv(&mut m2, 0x100, rhs_addr, out_addr, m1, n1,
+                                   kk);
+        let c = m2.cache.as_ref().unwrap();
+        rows.push(Row {
+            name: "mmt4d packed (10x-IREE GEMM)".into(),
+            cycles: m2.stats.cycles,
+            macs: (m1 * m0 * kk * nn) as f64,
+            l1_miss: c.l1.miss_rate(),
+            l2_miss: c.l2.miss_rate(),
+            penalty: m2.stats.cache_penalty_cycles,
+        });
+    }
+
+    println!("\n== A1: cache behaviour, packed vs unpacked (simulated Jupiter) ==");
+    println!("{:<38} {:>10} {:>10} {:>10} {:>14}", "layout", "cyc/MAC",
+             "L1 miss", "L2 miss", "penalty cyc");
+    for r in &rows {
+        println!("{:<38} {:>10.3} {:>9.1}% {:>9.1}% {:>14}", r.name,
+                 r.cycles as f64 / r.macs, r.l1_miss * 100.0,
+                 r.l2_miss * 100.0, r.penalty);
+    }
+    println!("\nThe unpacked strided walk misses L1 on essentially every \
+              access; packing collapses the miss rate to the streaming \
+              floor — the motivation for tensor.pack + linalg.mmt4d ([3]).");
+}

@@ -1,0 +1,67 @@
+//! **E2E**: serving throughput/latency of the full stack (PJRT engine +
+//! continuous-batching coordinator) on the tiny-llama artifacts, for both
+//! compilation paths. Requires `make artifacts`.
+//!
+//!     cargo bench --bench e2e_serving
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use tenx_iree::coordinator::{server, EngineBackend};
+use tenx_iree::llm::{SamplingParams, Tokenizer};
+use tenx_iree::runtime::EnginePath;
+
+fn bench_path(dir: &PathBuf, path: EnginePath, n_requests: usize,
+              max_new: usize) -> anyhow::Result<()> {
+    let tok = Tokenizer::new(512);
+    let dir2 = dir.clone();
+    let handle = server::start_with(move || EngineBackend::load(&dir2, path),
+                                    256, 7)?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            handle.submit(
+                tok.encode(match i % 4 {
+                    0 => "the sun heats the",
+                    1 => "rain falls on",
+                    2 => "a seed grows",
+                    _ => "waves move sand",
+                }),
+                max_new, SamplingParams::Greedy, None)
+        })
+        .collect::<Result<_, _>>()?;
+    let mut toks = 0usize;
+    let mut ttfts = Vec::new();
+    let mut e2es = Vec::new();
+    for rx in rxs {
+        let o = rx.recv()?;
+        toks += o.tokens.len();
+        ttfts.push(o.ttft.as_secs_f64());
+        e2es.push(o.e2e.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s_ttft = tenx_iree::util::stats::Summary::of(&ttfts);
+    let s_e2e = tenx_iree::util::stats::Summary::of(&e2es);
+    println!(
+        "{:<22} {:>8.2} tok/s   ttft p50 {:>7.1}ms p90 {:>7.1}ms   e2e p50 {:>7.1}ms   ({} req, {} tok, {:.2}s)",
+        format!("{path:?}"), toks as f64 / wall, s_ttft.p50 * 1e3,
+        s_ttft.p90 * 1e3, s_e2e.p50 * 1e3, n_requests, toks, wall
+    );
+    handle.shutdown()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping e2e_serving: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = tenx_iree::bench::quick_mode();
+    let (n, max_new) = if quick { (6, 6) } else { (16, 12) };
+    println!("== E2E serving (tiny-llama via PJRT, continuous batching) ==");
+    bench_path(&dir, EnginePath::Mmt4d, n, max_new)?;
+    bench_path(&dir, EnginePath::Baseline, n, max_new)?;
+    println!("\nnote: host-CPU wall clock; the RISC-V comparison is \
+              `table2_tokens_per_sec` on the simulated Jupiter.");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! **A3**: kernel-level cycles/MAC across the Llama-3.2-1B matmul shapes and
+//! systems on the simulated core — the per-kernel decomposition behind
+//! Table 2's end-to-end numbers, plus a roofline-style efficiency column.
+//!
+//!     cargo bench --bench fig_kernel_cycles
+
+use tenx_iree::kernels::System;
+use tenx_iree::perfmodel::{self, LlamaShapes};
+use tenx_iree::target::{Phase, TargetDesc};
+
+fn main() {
+    let target = TargetDesc::milkv_jupiter();
+    let shapes = LlamaShapes::llama32_1b();
+
+    // Peak MACs/cycle for the f16 widening path: one vfwmacc retires
+    // VLEN/16 lanes per (VLEN*2/DLEN) chimes -> DLEN/32 MACs per cycle.
+    let peak_mac_per_cyc = 128.0 / 32.0;
+
+    for phase in [Phase::Prefill, Phase::Decode] {
+        let m = if phase == Phase::Prefill { 128 } else { 1 };
+        println!("\n== kernel cycles/MAC, {} (M = {m}) ==", phase.name());
+        println!("{:<12} {:>6} {:>8} {:>14} {:>14} {:>14}", "matmul", "K",
+                 "N", "Llama.cpp", "IREE", "10x-IREE");
+        let mut seen = std::collections::BTreeSet::new();
+        for mm in shapes.weight_matmuls() {
+            if !seen.insert((mm.name, mm.k, mm.n)) {
+                continue;
+            }
+            let cost = |sys| {
+                perfmodel::measure_matmul(sys, phase, m, mm.k, mm.n, &target)
+                    .cycles_per_mac()
+            };
+            println!(
+                "{:<12} {:>6} {:>8} {:>14.3} {:>14.3} {:>14.3}",
+                mm.name, mm.k, mm.n,
+                cost(System::LlamaCpp), cost(System::UpstreamIree),
+                cost(System::TenxIree)
+            );
+        }
+        // Efficiency of the paper kernel vs the vector-unit roofline.
+        let c = perfmodel::measure_matmul(System::TenxIree, phase, m, 2048,
+                                          2048, &target);
+        let eff = (1.0 / c.cycles_per_mac()) / peak_mac_per_cyc;
+        println!("10x-IREE 2048x2048 efficiency vs vfwmacc roofline: {:.1}%",
+                 eff * 100.0);
+    }
+}

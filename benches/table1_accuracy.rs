@@ -1,0 +1,24 @@
+//! **Table 1** reproduction: accuracy equivalence between the reference
+//! compilation path and the 10x-IREE microkernel path, on synthetic
+//! ARC-like / GPQA-like multiple-choice tasks scored by loglikelihood.
+//! Requires `make artifacts`.
+//!
+//!     cargo bench --bench table1_accuracy
+
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping Table 1: run `make artifacts` first");
+        return;
+    }
+    let items = if tenx_iree::bench::quick_mode() { 8 } else { 25 };
+    match tenx_iree::experiments::table1(&dir, items) {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("table1 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

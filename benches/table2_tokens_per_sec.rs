@@ -1,0 +1,35 @@
+//! **Table 2 + Figures 1 & 2** reproduction: Llama-3.2-1B tokens/sec for
+//! prefill/decode at 1 and 8 threads, Llama.cpp vs upstream IREE vs
+//! 10x-IREE, on the simulated MILK-V Jupiter — plus the per-thread series
+//! behind the figures and a VLEN sensitivity sweep.
+//!
+//!     cargo bench --bench table2_tokens_per_sec
+
+use tenx_iree::experiments;
+use tenx_iree::kernels::System;
+use tenx_iree::perfmodel::{self, LlamaShapes};
+use tenx_iree::target::{Phase, TargetDesc};
+
+fn main() {
+    let target = TargetDesc::milkv_jupiter();
+    let prefill_tokens = 128;
+
+    println!("{}", experiments::table2(&target, prefill_tokens));
+    println!("{}", experiments::figures(&target, prefill_tokens));
+
+    // VLEN sensitivity: how the modeled gains scale with vector width.
+    println!("\n== VLEN sensitivity (decode, 1 thread) ==");
+    println!("{:<10} {:>14} {:>14} {:>8}", "VLEN", "IREE tok/s",
+             "10x tok/s", "gain");
+    let shapes = LlamaShapes::llama32_1b();
+    for vlen in [128, 256, 512, 1024] {
+        let t = TargetDesc::riscv_with_vlen(vlen);
+        let up = perfmodel::phase_perf(System::UpstreamIree, Phase::Decode, 1,
+                                       &shapes, &t, prefill_tokens)
+            .tokens_per_sec;
+        let tenx = perfmodel::phase_perf(System::TenxIree, Phase::Decode, 1,
+                                         &shapes, &t, prefill_tokens)
+            .tokens_per_sec;
+        println!("{vlen:<10} {up:>14.3} {tenx:>14.3} {:>7.1}x", tenx / up);
+    }
+}

@@ -1,0 +1,79 @@
+//! **A2**: the tile-size sweet spot. The paper: "choosing a smaller tile
+//! size leads to underutilization of hardware registers, while using bigger
+//! tile sizes increases register pressure that causes register spills and
+//! reloads and degrades performance." This sweep reproduces both cliffs on
+//! the simulated core, for GEMM (M0 sweep) and GEMV (N0 sweep).
+//!
+//!     cargo bench --bench tile_sweep
+
+use tenx_iree::cachesim::CacheHierarchy;
+use tenx_iree::config::manifest::Tile;
+use tenx_iree::kernels::{mmt4d_tile_rvv, Mmt4dLayout};
+use tenx_iree::rvv::{Rvv, RvvConfig};
+use tenx_iree::target::{vreg_pressure, TargetDesc};
+use tenx_iree::util::f16::F16;
+
+fn run_tile(target: &TargetDesc, m_total: usize, m0: usize, n0: usize,
+            n1: usize, k1: usize) -> (f64, u64) {
+    let vlen = target.vlen_bits().unwrap();
+    let m1 = m_total.div_ceil(m0);
+    let lhs_len = m1 * k1 * m0;
+    let rhs_len = n1 * k1 * n0;
+    let out_len = m1 * n1 * m0 * n0;
+    let lhs_addr = 0x1000;
+    let rhs_addr = (lhs_addr + lhs_len * 2 + 63) & !63;
+    let out_addr = (rhs_addr + rhs_len * 2 + 63) & !63;
+    let mut m = Rvv::new(RvvConfig::with_vlen(vlen),
+                         out_addr + out_len * 4 + 65536)
+        .with_cache(CacheHierarchy::for_target(target));
+    for i in 0..lhs_len {
+        m.write_f16(lhs_addr + i * 2, F16::from_f32(0.5));
+    }
+    for i in 0..rhs_len {
+        m.write_f16(rhs_addr + i * 2, F16::from_f32(0.25));
+    }
+    mmt4d_tile_rvv(&mut m, &Mmt4dLayout {
+        lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+    });
+    let macs = (m1 * m0 * n1 * n0 * k1) as f64;
+    (m.stats.cycles as f64 / macs, m.stats.spill_insns)
+}
+
+fn main() {
+    let target = TargetDesc::milkv_jupiter();
+    let vlen = target.vlen_bits().unwrap();
+
+    println!("== A2a: GEMM M0 sweep (N0 = VLEN/8 = {}) ==", vlen / 8);
+    println!("{:<6} {:>8} {:>12} {:>10} {:>10}", "M0", "vregs", "cyc/MAC",
+             "spills", "note");
+    for m0 in [1usize, 2, 3, 4, 6, 8, 10, 12, 16] {
+        let n0 = vlen / 8;
+        let (cpf, spills) = run_tile(&target, 48, m0, n0, 4, 512);
+        let pressure = vreg_pressure(Tile { m0, n0, k0: 1 }, vlen);
+        let note = if m0 == 6 { "<- paper" } else if spills > 0 { "spills" }
+                   else if m0 < 6 { "underutil" } else { "" };
+        println!("{m0:<6} {pressure:>8} {cpf:>12.3} {spills:>10} {note:>10}");
+    }
+
+    println!("\n== A2b: GEMV N0 sweep (M0 = 1) ==");
+    println!("{:<6} {:>8} {:>12} {:>10} {:>10}", "N0", "vregs", "cyc/MAC",
+             "spills", "note");
+    for n0_div in [16usize, 8, 4] {
+        let n0 = vlen / n0_div;
+        // keep total N constant at vlen lanes x 4
+        let n1 = (vlen / 4 * 4) / n0;
+        let (cpf, spills) = run_tile(&target, 1, 1, n0, n1, 2048);
+        let pressure = vreg_pressure(Tile { m0: 1, n0, k0: 1 }, vlen);
+        let note = if n0_div == 4 { "<- paper" } else { "narrower" };
+        println!("{n0:<6} {pressure:>8} {cpf:>12.3} {spills:>10} {note:>10}");
+    }
+
+    println!("\n== A2c: VLEN scaling of the paper tiles (GEMM, M0=6) ==");
+    println!("{:<8} {:>6} {:>12}", "VLEN", "N0", "cyc/MAC");
+    for vlen in [128usize, 256, 512] {
+        let t = TargetDesc::riscv_with_vlen(vlen);
+        let n0 = vlen / 8;
+        let (cpf, _) = run_tile(&t, 48, 6, n0, 4, 512);
+        println!("{vlen:<8} {n0:>6} {cpf:>12.3}");
+    }
+}

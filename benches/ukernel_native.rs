@@ -1,0 +1,66 @@
+//! **P1**: native microkernel throughput on this host — the hot path the
+//! IR interpreter and Table-1 inference run on. Wall-clock GFLOP/s across
+//! the paper's tile configurations and Llama shapes; the §Perf optimization
+//! log in EXPERIMENTS.md tracks this bench.
+//!
+//!     cargo bench --bench ukernel_native
+
+use tenx_iree::bench::{self, BenchResult};
+use tenx_iree::ukernel::{self, pack, Mmt4dParams};
+use tenx_iree::util::f16::F16;
+use tenx_iree::util::prng::Rng;
+
+fn bench_mmt4d(name: &str, m: usize, k: usize, n: usize, m0: usize, n0: usize,
+               k0: usize, results: &mut Vec<BenchResult>) {
+    let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+    let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+    let mut rng = Rng::new(1);
+    let lhs: Vec<F16> = (0..p.lhs_len())
+        .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+        .collect();
+    let rhs: Vec<F16> = (0..p.rhs_len())
+        .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+        .collect();
+    let mut out = vec![0.0f32; p.out_len()];
+    let cfg = bench::config_from_env();
+    let flops = p.flops() as f64;
+    results.push(bench::run(name, &cfg, Some(flops), || {
+        ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut out, &p);
+        std::hint::black_box(&out);
+    }));
+}
+
+fn bench_pack(name: &str, m: usize, k: usize, m0: usize, k0: usize,
+              results: &mut Vec<BenchResult>) {
+    let mut rng = Rng::new(2);
+    let src: Vec<F16> = (0..m * k)
+        .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+        .collect();
+    let (m1, k1) = (m.div_ceil(m0), k.div_ceil(k0));
+    let mut dst = vec![F16::ZERO; m1 * k1 * m0 * k0];
+    let cfg = bench::config_from_env();
+    results.push(bench::run(name, &cfg, Some((m * k) as f64), || {
+        pack::pack_lhs_f16(&src, m, k, m0, k0, &mut dst);
+        std::hint::black_box(&dst);
+    }));
+}
+
+fn main() {
+    let mut results = Vec::new();
+    // Paper tiles on Llama-1B decode/prefill shapes (scaled K for runtime).
+    bench_mmt4d("mmt4d prefill 6x32x1, 128x2048x2048", 128, 2048, 2048, 6, 32,
+                1, &mut results);
+    bench_mmt4d("mmt4d decode 1x64x1, 1x2048x2048", 1, 2048, 2048, 1, 64, 1,
+                &mut results);
+    bench_mmt4d("mmt4d prefill 6x32x1, 64x256x256 (tiny)", 64, 256, 256, 6,
+                32, 1, &mut results);
+    bench_mmt4d("mmt4d decode 1x64x1, 4x256x512 (tiny)", 4, 256, 512, 1, 64,
+                1, &mut results);
+    // Generic-path tile for comparison (k0 != 1 exercises the slow path).
+    bench_mmt4d("mmt4d generic 8x8x2, 64x256x256", 64, 256, 256, 8, 8, 2,
+                &mut results);
+    bench_pack("pack_lhs f16 6x1, 128x2048", 128, 2048, 6, 1, &mut results);
+    bench_pack("pack_lhs f16 1x1, 1x2048", 1, 2048, 1, 1, &mut results);
+    println!("{}", bench::render_table("native ukernel throughput", &results,
+                                       "FLOP/s|elem/s"));
+}

@@ -1,0 +1,83 @@
+//! Compile explorer: show what the materialize-encoding pass does across
+//! targets, VLENs and phases — the compiler-facing view of the paper.
+//!
+//!     cargo run --release --example compile_explorer
+
+use tenx_iree::ir::{build_matmul_func, printer, ElemType, Module, OpKind};
+use tenx_iree::passes::materialize_encoding::MaterializeEncoding;
+use tenx_iree::passes::{canonicalize::Canonicalize, generalize::Generalize,
+                        lower_ukernels::LowerUkernels, PassManager};
+use tenx_iree::target::{vreg_pressure, Phase, TargetDesc};
+
+fn lowered_symbols(m: &Module) -> Vec<String> {
+    m.funcs[0]
+        .body
+        .iter()
+        .filter_map(|op| match &op.kind {
+            OpKind::UkernelCall { symbol, .. } => Some(symbol.clone()),
+            _ => None,
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("contraction: C[64,2048] = A[64,2048] x B[2048,2048]  (f16 -> f32)\n");
+
+    // 1. Tile selection across targets and phases.
+    println!("{:<22} {:<8} {:>14} {:>8}", "target", "phase", "tiles M0xN0xK0",
+             "vregs");
+    for name in ["riscv64-vlen128", "milkv-jupiter", "riscv64-vlen512",
+                 "riscv64-vlen1024", "x86_64", "aarch64"] {
+        let t = TargetDesc::by_name(name).unwrap();
+        for phase in [Phase::Prefill, Phase::Decode] {
+            let tile = tenx_iree::target::select_tiles(t.arch, phase)?;
+            let pressure = t
+                .vlen_bits()
+                .map(|v| vreg_pressure(tile, v).to_string())
+                .unwrap_or_else(|| "-".into());
+            println!("{:<22} {:<8} {:>8}x{}x{} {:>10}", t.name, phase.name(),
+                     tile.m0, tile.n0, tile.k0, pressure);
+        }
+    }
+
+    // 2. The upstream gap: riscv64 without ukernels does not materialize.
+    let jupiter = TargetDesc::milkv_jupiter();
+    let mut upstream = Module {
+        funcs: vec![build_matmul_func("gemm", 64, 2048, 2048, ElemType::F16)],
+    };
+    PassManager::new()
+        .add(Generalize)
+        .add(MaterializeEncoding::upstream(jupiter.clone(), Phase::Prefill))
+        .add(LowerUkernels)
+        .add(Canonicalize)
+        .run(&mut upstream)?;
+    println!("\nupstream IREE on riscv64 (no ukernels registered):");
+    println!("{}", printer::print_module(&upstream));
+    println!("-> the contraction survives untouched and falls to default \
+              codegen; this is the 0.02 tok/s decode row of Table 2.\n");
+
+    // 3. This work: full lowering, per phase.
+    for phase in [Phase::Prefill, Phase::Decode] {
+        let mm = if phase == Phase::Prefill { 64 } else { 1 };
+        let mut m = Module {
+            funcs: vec![build_matmul_func("gemm", mm, 2048, 2048,
+                                          ElemType::F16)],
+        };
+        PassManager::standard(&jupiter, phase).run(&mut m)?;
+        println!("10x-IREE {} lowering -> {:?}", phase.name(),
+                 lowered_symbols(&m));
+    }
+
+    // 4. VLEN portability: the same module retargets by VLEN alone.
+    println!("\nVLEN portability of the decode GEMV kernel symbol:");
+    for vlen in [128, 256, 512, 1024] {
+        let t = TargetDesc::riscv_with_vlen(vlen);
+        let mut m = Module {
+            funcs: vec![build_matmul_func("gemv", 1, 2048, 2048,
+                                          ElemType::F16)],
+        };
+        PassManager::standard(&t, Phase::Decode).run(&mut m)?;
+        println!("  VLEN={vlen:<5} -> {:?}", lowered_symbols(&m).get(2));
+    }
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Table-1 reproduction as a standalone example: evaluate the same
+//! multiple-choice task sets through the reference (plain-f32) artifacts and
+//! the mmt4d (10x-IREE) artifacts and verify the scores are identical.
+//!
+//!     make artifacts && cargo run --release --example eval_accuracy
+
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()));
+    let items = 25;
+    println!("{}", tenx_iree::experiments::table1(&dir, items)?);
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! End-to-end serving driver (the repo's required E2E validation, DESIGN.md
+//! §E2E): loads the AOT tiny-llama artifacts, serves batched requests
+//! through the continuous-batching coordinator on the PJRT runtime, and
+//! reports latency/throughput for BOTH compilation paths (mmt4d "10x-IREE"
+//! vs plain-f32 "upstream") — the runtime-level analogue of Table 2.
+//!
+//!     make artifacts && cargo run --release --example serve_llm
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use tenx_iree::coordinator::{server, EngineBackend};
+use tenx_iree::llm::{SamplingParams, Tokenizer};
+use tenx_iree::runtime::EnginePath;
+
+const PROMPTS: &[&str] = &[
+    "the sun heats the", "rain falls on dry", "a seed grows in",
+    "ice melts when the", "the moon turns the", "waves move the sand",
+    "rock forms in heat", "air cools at night",
+];
+
+fn serve_path(dir: &PathBuf, path: EnginePath, n_requests: usize,
+              max_new: usize) -> anyhow::Result<(f64, f64, f64)> {
+    let tok = Tokenizer::new(512);
+    let dir2 = dir.clone();
+    let handle = server::start_with(move || EngineBackend::load(&dir2, path),
+                                    128, 42)?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            handle.submit(tok.encode(PROMPTS[i % PROMPTS.len()]), max_new,
+                          SamplingParams::Greedy, None)
+        })
+        .collect::<Result<_, _>>()?;
+    let mut total_tokens = 0usize;
+    let mut ttft_sum = 0.0;
+    for rx in rxs {
+        let out = rx.recv()?;
+        total_tokens += out.tokens.len();
+        ttft_sum += out.ttft.as_secs_f64();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", handle.metrics.report());
+    handle.shutdown()?;
+    Ok((total_tokens as f64 / wall, ttft_sum / n_requests as f64, wall))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()));
+    let n_requests = 12;
+    let max_new = 12;
+
+    println!("=== serving path: 10x-IREE (Pallas mmt4d artifacts) ===");
+    let (mm_tps, mm_ttft, mm_wall) =
+        serve_path(&dir, EnginePath::Mmt4d, n_requests, max_new)?;
+
+    println!("=== serving path: upstream baseline (plain f32 artifacts) ===");
+    let (b_tps, b_ttft, b_wall) =
+        serve_path(&dir, EnginePath::Baseline, n_requests, max_new)?;
+
+    println!("\n== end-to-end summary ({n_requests} requests x {max_new} tokens) ==");
+    println!("{:<22} {:>14} {:>12} {:>10}", "path", "gen tok/s", "mean ttft",
+             "wall");
+    println!("{:<22} {:>14.2} {:>11.1}ms {:>9.2}s", "10x-IREE (mmt4d)",
+             mm_tps, mm_ttft * 1e3, mm_wall);
+    println!("{:<22} {:>14.2} {:>11.1}ms {:>9.2}s", "baseline (f32)", b_tps,
+             b_ttft * 1e3, b_wall);
+    println!(
+        "\nnote: on this x86 host the XLA CPU backend executes both graphs; \
+         the mmt4d path carries the interpret-mode Pallas pipeline so its \
+         host wall-clock is NOT the paper's RISC-V speedup — that comparison \
+         lives in `cargo bench --bench table2_tokens_per_sec` (simulated \
+         Jupiter). This driver proves the full serving stack composes."
+    );
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT compile step: lower the L2/L1 graphs to HLO *text* artifacts.
+
+Run once via `make artifacts`; the Rust binary is self-contained afterwards.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (what the `xla`
+crate links) rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids
+so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir):
+  prefill.hlo.txt            mmt4d-path prefill graph         (10x-IREE)
+  decode.hlo.txt             mmt4d-path decode graph          (10x-IREE)
+  baseline_prefill.hlo.txt   plain-f32 prefill graph          (upstream IREE)
+  baseline_decode.hlo.txt    plain-f32 decode graph           (upstream IREE)
+  kernel_prefill.hlo.txt     standalone GEMM through pack/mmt4d/unpack
+  kernel_decode.hlo.txt      standalone GEMV through pack/mmt4d/unpack
+  weights.bin                f32 LE flat weights, param_specs order
+  manifest.txt               config + shapes + artifact inventory
+  goldens/*.txt              python-computed outputs for Rust runtime tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import encoding, model
+from .kernels import mmt4d as mmt4d_k
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides array literals
+    # as `constant({...})`, which xla_extension 0.5.1's text parser silently
+    # reads back as ZEROS — bisected via compile/probes.py + bridge_probes.rs
+    # (RoPE frequency table became all-ones and every position > 0 drifted).
+    return comp.as_hlo_text(True)
+
+
+def det_matrix(rows: int, cols: int, seed: int) -> np.ndarray:
+    """Deterministic f16-exact test pattern, reproducible bit-for-bit in Rust
+    (see rust/src/util/testdata.rs)."""
+    i = np.arange(rows)[:, None]
+    j = np.arange(cols)[None, :]
+    v = ((i * 7 + j * 13 + seed * 5) % 31).astype(np.float32)
+    return ((v - 15.0) / 16.0).astype(np.float32)
+
+
+def write_golden(path: str, arr: np.ndarray) -> None:
+    flat = np.asarray(arr, dtype=np.float32).reshape(-1)
+    with open(path, "w") as f:
+        f.write(f"# shape {'x'.join(map(str, arr.shape))}\n")
+        for v in flat:
+            f.write(f"{v:.9e}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "goldens"), exist_ok=True)
+
+    cfg, serve = model.TINY, model.SERVE
+    b, s = serve.batch, serve.prefill_seq
+    l, hk, ms, d = cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim
+
+    params = model.init_params(cfg)
+    jparams = tuple(jnp.asarray(w) for w in params)
+
+    # ---- weights.bin -----------------------------------------------------
+    with open(os.path.join(out, "weights.bin"), "wb") as f:
+        for w in params:
+            f.write(np.ascontiguousarray(w, dtype="<f4").tobytes())
+
+    # ---- shape specs -----------------------------------------------------
+    pspecs = tuple(jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in params)
+    tok_pf = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_dec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    cache = jax.ShapeDtypeStruct((l, b, hk, ms, d), jnp.float32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    artifacts = []
+
+    def lower(name, fn, *specs):
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s")
+        artifacts.append(name)
+
+    # ---- model graphs ----------------------------------------------------
+    lower("prefill.hlo.txt", model.prefill_fn(cfg, serve, True), pspecs, tok_pf)
+    lower("decode.hlo.txt", model.decode_fn(cfg, serve, True),
+          pspecs, tok_dec, cache, cache, pos)
+    lower("baseline_prefill.hlo.txt", model.prefill_fn(cfg, serve, False),
+          pspecs, tok_pf)
+    lower("baseline_decode.hlo.txt", model.decode_fn(cfg, serve, False),
+          pspecs, tok_dec, cache, cache, pos)
+
+    # ---- standalone kernels (rust kernel tests / benches) -----------------
+    km, kk, kn = b * s, cfg.d_model, cfg.d_model
+    gm, gk, gn = b, cfg.d_model, cfg.ffn_dim
+
+    def kernel_prefill(a, w):
+        return (mmt4d_k.matmul_prefill(a.astype(jnp.float16),
+                                       w.astype(jnp.float16),
+                                       cfg.vlen_bits),)
+
+    def kernel_decode(a, w):
+        return (mmt4d_k.matmul_decode(a.astype(jnp.float16),
+                                      w.astype(jnp.float16),
+                                      cfg.vlen_bits),)
+
+    lower("kernel_prefill.hlo.txt", kernel_prefill,
+          jax.ShapeDtypeStruct((km, kk), jnp.float32),
+          jax.ShapeDtypeStruct((kk, kn), jnp.float32))
+    lower("kernel_decode.hlo.txt", kernel_decode,
+          jax.ShapeDtypeStruct((gm, gk), jnp.float32),
+          jax.ShapeDtypeStruct((gk, gn), jnp.float32))
+
+    # ---- goldens -----------------------------------------------------------
+    if not args.skip_goldens:
+        t0 = time.time()
+        tokens = (np.arange(b * s, dtype=np.int32).reshape(b, s) * 17 + 3) \
+            % cfg.vocab_size
+        jt = jnp.asarray(tokens, jnp.int32)
+        logits, kc, vc = jax.jit(model.prefill_fn(cfg, serve, True))(
+            jparams, jt)
+        write_golden(os.path.join(out, "goldens", "prefill_logits.txt"),
+                     np.asarray(logits))
+        ntok = np.asarray([5, 9, 13, 17], np.int32)
+        npos = np.asarray([s, s, s, s], np.int32)
+        dlogits, _, _ = jax.jit(model.decode_fn(cfg, serve, True))(
+            jparams, jnp.asarray(ntok), kc, vc, jnp.asarray(npos))
+        write_golden(os.path.join(out, "goldens", "decode_logits.txt"),
+                     np.asarray(dlogits))
+
+        a = det_matrix(km, kk, 1)
+        w = det_matrix(kk, kn, 2)
+        write_golden(os.path.join(out, "goldens", "kernel_prefill_out.txt"),
+                     np.asarray(kernel_prefill(jnp.asarray(a),
+                                               jnp.asarray(w))[0]))
+        a = det_matrix(gm, gk, 3)
+        w = det_matrix(gk, gn, 4)
+        write_golden(os.path.join(out, "goldens", "kernel_decode_out.txt"),
+                     np.asarray(kernel_decode(jnp.asarray(a),
+                                              jnp.asarray(w))[0]))
+        print(f"goldens in {time.time()-t0:.1f}s")
+
+    # ---- manifest ----------------------------------------------------------
+    pf_tiles = encoding.riscv64_tiles(cfg.vlen_bits, encoding.PHASE_PREFILL)
+    dc_tiles = encoding.riscv64_tiles(cfg.vlen_bits, encoding.PHASE_DECODE)
+    lines = [
+        "format_version 1",
+        "[model]",
+        f"vocab_size {cfg.vocab_size}",
+        f"d_model {cfg.d_model}",
+        f"n_layers {cfg.n_layers}",
+        f"n_heads {cfg.n_heads}",
+        f"n_kv_heads {cfg.n_kv_heads}",
+        f"ffn_dim {cfg.ffn_dim}",
+        f"max_seq {cfg.max_seq}",
+        f"head_dim {cfg.head_dim}",
+        "[serve]",
+        f"batch {b}",
+        f"prefill_seq {s}",
+        "[tiles]",
+        f"vlen_bits {cfg.vlen_bits}",
+        f"prefill {pf_tiles.m0}x{pf_tiles.n0}x{pf_tiles.k0}",
+        f"decode {dc_tiles.m0}x{dc_tiles.n0}x{dc_tiles.k0}",
+        "[kernel_shapes]",
+        f"prefill {km}x{kk}x{kn}",
+        f"decode {gm}x{gk}x{gn}",
+        "[weights]",
+    ]
+    for name, shape in cfg.param_specs():
+        lines.append(f"{name} {'x'.join(map(str, shape))}")
+    lines.append("[artifacts]")
+    lines.extend(artifacts)
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("manifest + weights.bin written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Tile-size selection: the Python mirror of the Rust `materialize_encoding`
+pass logic (rust/src/passes/materialize_encoding.rs).
+
+This is the heart of the paper's compiler contribution: VLEN-aware tiling for
+the riscv64 target, with distinct shapes for the prefill (GEMM) and decode
+(GEMV) phases of an LLM:
+
+    Prefill: M0, N0, K0 = 6, VLEN/8, 1
+    Decode:  M0, N0, K0 = 1, VLEN/4, 1
+
+The paper observed that smaller tiles under-utilise the vector registers while
+larger tiles cause register spills/reloads. N0 is expressed in *elements*:
+for f16 data, VLEN/8 elements = 2 vector registers of f16 halves widened into
+4 registers of f32 accumulators (LMUL=2 -> 4 widened); VLEN/4 for the GEMV
+kernel doubles the accumulator strip since only one row is live.
+
+The same entry point also models IREE's upstream x86-64 / aarch64 choices so
+tests can check we kept parity with the targets IREE already supports.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PHASE_PREFILL = "prefill"  # GEMM: M > 1
+PHASE_DECODE = "decode"    # GEMV: M == 1 rows per sequence
+
+
+@dataclass(frozen=True)
+class TileMNK:
+    m0: int
+    n0: int
+    k0: int
+
+    def as_tuple(self):
+        return (self.m0, self.n0, self.k0)
+
+
+def riscv64_tiles(vlen_bits: int, phase: str) -> TileMNK:
+    """The paper's VLEN-aware selection for riscv64 (+V, RVA22)."""
+    if vlen_bits % 64 != 0 or vlen_bits < 64:
+        raise ValueError(f"invalid VLEN {vlen_bits}")
+    if phase == PHASE_PREFILL:
+        return TileMNK(6, vlen_bits // 8, 1)
+    if phase == PHASE_DECODE:
+        return TileMNK(1, vlen_bits // 4, 1)
+    raise ValueError(f"unknown phase {phase!r}")
+
+
+def x86_64_tiles(has_avx512: bool, phase: str) -> TileMNK:
+    """Upstream IREE f16/f32 tile shapes for x86-64 (parity model)."""
+    del phase  # upstream uses one shape; GEMV narrowing happens elsewhere
+    return TileMNK(16, 16, 1) if has_avx512 else TileMNK(8, 8, 1)
+
+
+def aarch64_tiles(phase: str) -> TileMNK:
+    """Upstream IREE f16/f32 tile shapes for aarch64 NEON (parity model)."""
+    del phase
+    return TileMNK(8, 8, 1)
+
+
+def select_tiles(arch: str, phase: str, vlen_bits: int = 256,
+                 has_avx512: bool = False) -> TileMNK:
+    if arch == "riscv64":
+        return riscv64_tiles(vlen_bits, phase)
+    if arch == "x86_64":
+        return x86_64_tiles(has_avx512, phase)
+    if arch == "aarch64":
+        return aarch64_tiles(phase)
+    raise ValueError(f"unsupported arch {arch!r}")
+
+
+# The shapes used throughout this repo's artifacts (VLEN=256 testbed):
+PREFILL_TILES = riscv64_tiles(256, PHASE_PREFILL)  # (6, 32, 1)
+DECODE_TILES = riscv64_tiles(256, PHASE_DECODE)    # (1, 64, 1)

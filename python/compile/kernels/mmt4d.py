@@ -1,0 +1,177 @@
+"""Pallas mmt4d / pack / unpack kernels (Layer 1).
+
+These are the TPU-shaped re-expression of the paper's RVV microkernels.
+Mapping (see DESIGN.md §Hardware-Adaptation):
+
+  RVV vector register strip  (N0 = VLEN/8 or VLEN/4 f16 lanes)
+      -> Pallas block minor dimension, resident in VMEM
+  vfwmacc.vf f16*f16 += f32  (widening MAC)
+      -> f32-accumulated dot over the K strip inside the kernel block
+  tensor.pack tile-contiguous layout
+      -> BlockSpec index maps: one (m1, n1) grid step touches exactly one
+         contiguous LHS tile row-strip and one contiguous RHS tile
+
+Two kernel variants, exactly like the paper:
+  * prefill (GEMM): block M0 = 6 rows    (tiles 6 x VLEN/8 x 1)
+  * decode  (GEMV): block M0 = 1 row     (tiles 1 x VLEN/4 x 1)
+The variant is just a different (m0, n0) instantiation of the same kernel
+body, mirroring how the two RVV ukernels share their structure.
+
+All kernels run under interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example/README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT; see module docstring.
+
+
+# ---------------------------------------------------------------------------
+# mmt4d kernel
+# ---------------------------------------------------------------------------
+
+def _mmt4d_kernel(lhs_ref, rhs_ref, out_ref, *, k1: int):
+    """One (m1, n1) grid step: full-K accumulation of an M0 x N0 tile.
+
+    lhs_ref: [1, K1, M0, K0] f16   (one LHS tile-row strip)
+    rhs_ref: [1, K1, N0, K0] f16   (one RHS tile strip, already transposed)
+    out_ref: [1, 1, M0, N0]  f32
+    """
+    lhs = lhs_ref[0].astype(jnp.float32)  # [K1, M0, K0]
+    rhs = rhs_ref[0].astype(jnp.float32)  # [K1, N0, K0]
+    # sum_{k1,k0} lhs[k1, m0, k0] * rhs[k1, n0, k0] — the vfwmacc chain.
+    m0 = lhs.shape[1]
+    n0 = rhs.shape[1]
+    acc = jax.lax.dot_general(
+        lhs.transpose(1, 0, 2).reshape(m0, -1),   # [M0, K1*K0]
+        rhs.transpose(1, 0, 2).reshape(n0, -1),   # [N0, K1*K0]
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    del k1
+    out_ref[0, 0] = acc
+
+
+def mmt4d(lhs4, rhs4):
+    """Packed mmt4d: [M1,K1,M0,K0] x [N1,K1,N0,K0] -> [M1,N1,M0,N0] f32."""
+    m1, k1, m0, k0 = lhs4.shape
+    n1, k1r, n0, k0r = rhs4.shape
+    assert (k1, k0) == (k1r, k0r), "LHS/RHS K tiling mismatch"
+    return pl.pallas_call(
+        functools.partial(_mmt4d_kernel, k1=k1),
+        grid=(m1, n1),
+        in_specs=[
+            pl.BlockSpec((1, k1, m0, k0), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, k1, n0, k0), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, m0, n0), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m1, n1, m0, n0), jnp.float32),
+        interpret=INTERPRET,
+    )(lhs4, rhs4)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack kernels (divisible-shape fast path; jnp handles padding)
+# ---------------------------------------------------------------------------
+
+def _pack_lhs_kernel(a_ref, out_ref):
+    # a_ref: [M0, K] block of the source; out_ref: [1, K1, M0, K0]
+    _, k1, m0, k0 = out_ref.shape
+    out_ref[0] = a_ref[...].reshape(m0, k1, k0).transpose(1, 0, 2)
+
+
+def pack_lhs(a, m0: int, k0: int):
+    """[M, K] -> [M1, K1, M0, K0]; requires M % M0 == 0 and K % K0 == 0."""
+    m, k = a.shape
+    assert m % m0 == 0 and k % k0 == 0, "use ref.pack_lhs for ragged shapes"
+    m1, k1 = m // m0, k // k0
+    return pl.pallas_call(
+        _pack_lhs_kernel,
+        grid=(m1,),
+        in_specs=[pl.BlockSpec((m0, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, k1, m0, k0), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m1, k1, m0, k0), a.dtype),
+        interpret=INTERPRET,
+    )(a)
+
+
+def _pack_rhs_kernel(b_ref, out_ref):
+    # b_ref: [K, N0] column strip; out_ref: [1, K1, N0, K0]
+    _, k1, n0, k0 = out_ref.shape
+    out_ref[0] = b_ref[...].reshape(k1, k0, n0).transpose(0, 2, 1)
+
+
+def pack_rhs(b, n0: int, k0: int):
+    """[K, N] -> [N1, K1, N0, K0]; requires N % N0 == 0 and K % K0 == 0."""
+    k, n = b.shape
+    assert n % n0 == 0 and k % k0 == 0, "use ref.pack_rhs for ragged shapes"
+    n1, k1 = n // n0, k // k0
+    return pl.pallas_call(
+        _pack_rhs_kernel,
+        grid=(n1,),
+        in_specs=[pl.BlockSpec((k, n0), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, k1, n0, k0), lambda j: (j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n1, k1, n0, k0), b.dtype),
+        interpret=INTERPRET,
+    )(b)
+
+
+def _unpack_kernel(c4_ref, out_ref):
+    # c4_ref: [1, N1, M0, N0]; out_ref: [M0, N]
+    _, n1, m0, n0 = c4_ref.shape
+    out_ref[...] = c4_ref[0].transpose(1, 0, 2).reshape(m0, n1 * n0)
+
+
+def unpack_acc(c4):
+    """[M1, N1, M0, N0] -> [M1*M0, N1*N0] (no pad drop; divisible path)."""
+    m1, n1, m0, n0 = c4.shape
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(m1,),
+        in_specs=[pl.BlockSpec((1, n1, m0, n0), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((m0, n1 * n0), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m1 * m0, n1 * n0), jnp.float32),
+        interpret=INTERPRET,
+    )(c4)
+
+
+# ---------------------------------------------------------------------------
+# Whole pipeline: the op the materialize_encoding pass emits
+# ---------------------------------------------------------------------------
+
+def matmul_mmt4d(a, b, m0: int, n0: int, k0: int):
+    """a[M,K] @ b[K,N] -> f32 [M,N] through pack -> mmt4d -> unpack.
+
+    Ragged M/N/K are padded with jnp (IREE folds this into pack's
+    padding_value); the inner compute always runs the Pallas kernels.
+    """
+    from . import ref
+
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    m1 = ref.ceil_div(m, m0)
+    n1 = ref.ceil_div(n, n0)
+    k1 = ref.ceil_div(k, k0)
+    a = jnp.pad(a, ((0, m1 * m0 - m), (0, k1 * k0 - k)))
+    b = jnp.pad(b, ((0, k1 * k0 - k), (0, n1 * n0 - n)))
+    lhs4 = pack_lhs(a, m0, k0)
+    rhs4 = pack_rhs(b, n0, k0)
+    c4 = mmt4d(lhs4, rhs4)
+    return unpack_acc(c4)[:m, :n]
+
+
+def matmul_prefill(a, b, vlen_bits: int = 256):
+    """The paper's prefill (GEMM) configuration: tiles 6 x VLEN/8 x 1."""
+    return matmul_mmt4d(a, b, 6, vlen_bits // 8, 1)
+
+
+def matmul_decode(a, b, vlen_bits: int = 256):
+    """The paper's decode (GEMV) configuration: tiles 1 x VLEN/4 x 1."""
+    return matmul_mmt4d(a, b, 1, vlen_bits // 4, 1)

@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracle for the mmt4d path.
+
+This module is the correctness anchor for everything else in the repo:
+the Pallas kernels (mmt4d.py), the Rust native ukernels, and the RVV
+simulator programs are all validated against these functions.
+
+Layouts follow IREE's mmt4d convention (see
+https://iree.dev/community/blog/2021-10-13-matrix-multiplication-with-mmt4d/):
+
+  LHS  [M, K]  --pack(M0,K0)-->   [M1, K1, M0, K0]
+  RHS  [K, N]  --pack^T(N0,K0)--> [N1, K1, N0, K0]   (the 't' in mmt4d)
+  ACC  [M, N]  <--unpack--        [M1, N1, M0, N0]
+
+  mmt4d: acc[m1,n1,m0,n0] += sum_{k1,k0} lhs[m1,k1,m0,k0] * rhs[n1,k1,n0,k0]
+
+All functions are shape-polymorphic pure jnp; f16 operands accumulate in f32
+exactly like the paper's `f16 x f16 -> f32` microkernel (vfwmacc.vf).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pack_lhs(a, m0: int, k0: int):
+    """[M, K] -> [M1, K1, M0, K0], zero padded."""
+    m, k = a.shape
+    m1, k1 = ceil_div(m, m0), ceil_div(k, k0)
+    a = jnp.pad(a, ((0, m1 * m0 - m), (0, k1 * k0 - k)))
+    return a.reshape(m1, m0, k1, k0).transpose(0, 2, 1, 3)
+
+
+def pack_rhs(b, n0: int, k0: int):
+    """[K, N] -> [N1, K1, N0, K0] (packs the *transpose* of RHS)."""
+    k, n = b.shape
+    n1, k1 = ceil_div(n, n0), ceil_div(k, k0)
+    bt = jnp.pad(b.T, ((0, n1 * n0 - n), (0, k1 * k0 - k)))
+    return bt.reshape(n1, n0, k1, k0).transpose(0, 2, 1, 3)
+
+
+def pack_acc(c, m0: int, n0: int):
+    """[M, N] -> [M1, N1, M0, N0], zero padded (for fused-init cases)."""
+    m, n = c.shape
+    m1, n1 = ceil_div(m, m0), ceil_div(n, n0)
+    c = jnp.pad(c, ((0, m1 * m0 - m), (0, n1 * n0 - n)))
+    return c.reshape(m1, m0, n1, n0).transpose(0, 2, 1, 3)
+
+
+def unpack_acc(c4, m: int, n: int):
+    """[M1, N1, M0, N0] -> [M, N] (drops padding)."""
+    m1, n1, m0, n0 = c4.shape
+    return c4.transpose(0, 2, 1, 3).reshape(m1 * m0, n1 * n0)[:m, :n]
+
+
+def mmt4d(lhs4, rhs4, acc4=None, out_dtype=jnp.float32):
+    """The mmt4d contraction on packed operands, accumulating in f32."""
+    out = jnp.einsum(
+        "mkac,nkbc->mnab",
+        lhs4.astype(out_dtype),
+        rhs4.astype(out_dtype),
+        preferred_element_type=out_dtype,
+    )
+    if acc4 is not None:
+        out = out + acc4.astype(out_dtype)
+    return out
+
+
+def matmul_via_mmt4d(a, b, m0: int, n0: int, k0: int, out_dtype=jnp.float32):
+    """Full pack -> mmt4d -> unpack pipeline: the oracle for a@b."""
+    m, _ = a.shape
+    _, n = b.shape
+    lhs4 = pack_lhs(a, m0, k0)
+    rhs4 = pack_rhs(b, n0, k0)
+    c4 = mmt4d(lhs4, rhs4, out_dtype=out_dtype)
+    return unpack_acc(c4, m, n)
+
+
+def matmul_f32(a, b):
+    """Plain f32 matmul reference (the 'upstream' non-mmt4d path)."""
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def np_matmul_f16_f32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Numpy golden: f16 operands, exact f32 accumulation."""
+    return np.matmul(a.astype(np.float32), b.astype(np.float32))

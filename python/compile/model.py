@@ -1,0 +1,278 @@
+"""Layer 2: Llama-architecture model in JAX, weight matmuls via mmt4d.
+
+This is the compute graph the Rust runtime serves. It mirrors
+Llama-3.2-1B-Instruct architecturally (RMSNorm, RoPE, GQA attention, SwiGLU
+MLP, untied f16 weights) at tiny dimensions so the interpret-mode Pallas
+kernels stay tractable on CPU. The *performance* reproduction uses the real
+1B shape schedule in rust/src/perfmodel; this module is the *functional*
+path: it proves the pack->mmt4d->unpack pipeline end-to-end and feeds the
+Table-1 accuracy-equivalence experiment.
+
+Every weight matmul (q/k/v/o, gate/up/down, lm_head) routes through the
+Pallas mmt4d kernels with the paper's tile shapes:
+  * prefill graph: GEMM tiles (6, VLEN/8, 1)
+  * decode graph:  GEMV tiles (1, VLEN/4, 1)
+with f16 operands and f32 accumulation. `use_mmt4d=False` builds the same
+model with plain f32 matmuls — the "upstream IREE" baseline artifact.
+
+Attention score/context matmuls stay jnp: in IREE those are separate
+(batch_matmul) encodings; the paper's microkernels target the weight
+contractions, which dominate FLOPs at these sequence lengths.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import mmt4d as mmt4d_k
+from .kernels import ref as ref_k
+from . import encoding
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (defaults: the repo's tiny-llama)."""
+
+    vocab_size: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    ffn_dim: int = 512
+    max_seq: int = 64
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    vlen_bits: int = 256  # testbed VLEN for tile selection
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Flat, ordered parameter list — the weights.bin / HLO param order."""
+        specs: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (self.vocab_size, self.d_model)),
+        ]
+        kv_dim = self.n_kv_heads * self.head_dim
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            specs += [
+                (p + "attn_norm", (self.d_model,)),
+                (p + "wq", (self.d_model, self.d_model)),
+                (p + "wk", (self.d_model, kv_dim)),
+                (p + "wv", (self.d_model, kv_dim)),
+                (p + "wo", (self.d_model, self.d_model)),
+                (p + "ffn_norm", (self.d_model,)),
+                (p + "w_gate", (self.d_model, self.ffn_dim)),
+                (p + "w_up", (self.d_model, self.ffn_dim)),
+                (p + "w_down", (self.ffn_dim, self.d_model)),
+            ]
+        specs += [
+            ("final_norm", (self.d_model,)),
+            ("lm_head", (self.d_model, self.vocab_size)),
+        ]
+        return specs
+
+
+# The fixed serving shapes compiled into artifacts.
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 4
+    prefill_seq: int = 16
+
+
+TINY = ModelConfig()
+SERVE = ServeConfig()
+
+
+def init_params(cfg: ModelConfig, seed: int = 42) -> List[np.ndarray]:
+    """Deterministic random-init weights (f32), scaled like Llama init."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in cfg.param_specs():
+        if name.endswith("norm"):
+            w = np.ones(shape, dtype=np.float32)
+        else:
+            std = 0.02 if name in ("embed", "lm_head") else (
+                1.0 / np.sqrt(shape[0]))
+            w = (rng.standard_normal(shape) * std).astype(np.float32)
+        out.append(w)
+    return out
+
+
+def params_dict(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {name: w for (name, _), w in zip(cfg.param_specs(), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps):
+    x = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * scale * w
+
+
+def _rope_angles(positions, head_dim, theta):
+    """positions [...,] -> cos/sin [..., head_dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                             / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta):
+    """x [..., T, H, D]; positions broadcastable to [..., T]."""
+    d = x.shape[-1]
+    cos, sin = _rope_angles(positions, d, theta)  # [..., T, D/2]
+    cos = cos[..., None, :]  # [..., T, 1, D/2]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def make_matmul(cfg: ModelConfig, phase: str, use_mmt4d: bool):
+    """Returns matmul(x2d[M,K], w[K,N]) -> f32 [M,N] for the given phase."""
+    tiles = encoding.riscv64_tiles(cfg.vlen_bits, phase)
+
+    def mm(x2d, w):
+        if not use_mmt4d:
+            return ref_k.matmul_f32(x2d, w)
+        a = x2d.astype(jnp.float16)
+        b = w.astype(jnp.float16)
+        return mmt4d_k.matmul_mmt4d(a, b, *tiles.as_tuple())
+
+    return mm
+
+
+def _attention(q, k, v, mask):
+    """q [B,T,Hq,D]; k/v [B,S,Hk,D]; mask [B,T,S] bool (True=keep)."""
+    b, t, hq, d = q.shape
+    hk = k.shape[2]
+    group = hq // hk
+    q = q.reshape(b, t, hk, group, d)
+    scores = jnp.einsum("bthgd,bshd->bhgts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(jnp.float32))
+    return ctx.reshape(b, t, hq * d)
+
+
+def _block(cfg, p, i, x, mm, k_cache, v_cache, positions, kv_len_mask):
+    """One transformer block; returns (x, new_k_cache, new_v_cache).
+
+    x [B,T,Dm]; caches [B,Hk,maxS,D]; positions [B,T]; kv_len_mask [B,T,maxS].
+    """
+    b, t, dm = x.shape
+    hq, hk, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pre = f"layer{i}."
+    h = rms_norm(x, p[pre + "attn_norm"], cfg.norm_eps)
+    h2 = h.reshape(b * t, dm)
+    q = mm(h2, p[pre + "wq"]).reshape(b, t, hq, d)
+    k = mm(h2, p[pre + "wk"]).reshape(b, t, hk, d)
+    v = mm(h2, p[pre + "wv"]).reshape(b, t, hk, d)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    # Write K/V rows into the cache at `positions`. Deliberately avoids
+    # lax.scatter: the artifacts execute on xla_extension 0.5.1 via the
+    # HLO-text bridge, and pad/select lower to ops whose semantics are
+    # stable across that version gap (see DESIGN.md §Key-decisions).
+    ms = k_cache.shape[2]
+    k_t = k.transpose(0, 2, 1, 3)  # [B,Hk,T,D]
+    v_t = v.transpose(0, 2, 1, 3)
+    if t == ms or (positions.shape[1] == t and t > 1):
+        # Prefill: positions are arange(T); the cache is new rows then zeros.
+        k_cache = jnp.pad(k_t, ((0, 0), (0, 0), (0, ms - t), (0, 0)))
+        v_cache = jnp.pad(v_t, ((0, 0), (0, 0), (0, ms - t), (0, 0)))
+    else:
+        # Decode (T == 1): select the written slot per sequence.
+        sel = (jnp.arange(ms)[None, None, :, None]
+               == positions[:, 0][:, None, None, None])  # [B,1,ms,1]
+        k_cache = jnp.where(sel, k_t, k_cache)
+        v_cache = jnp.where(sel, v_t, v_cache)
+
+    ctx = _attention(q, k_cache.transpose(0, 2, 1, 3),
+                     v_cache.transpose(0, 2, 1, 3), kv_len_mask)
+    x = x + mm(ctx.reshape(b * t, hq * d), p[pre + "wo"]).reshape(b, t, dm)
+
+    h = rms_norm(x, p[pre + "ffn_norm"], cfg.norm_eps)
+    h2 = h.reshape(b * t, dm)
+    gate = mm(h2, p[pre + "w_gate"])
+    up = mm(h2, p[pre + "w_up"])
+    act = jax.nn.silu(gate) * up
+    x = x + mm(act, p[pre + "w_down"]).reshape(b, t, dm)
+    return x, k_cache, v_cache
+
+
+def _forward(cfg, p, tokens, k_caches, v_caches, positions, kv_len_mask, mm):
+    """Shared prefill/decode body.
+
+    tokens [B,T] i32; caches [L,B,Hk,maxS,D]; positions [B,T];
+    kv_len_mask [B,T,maxS]. Returns (logits [B,T,V], k_caches, v_caches).
+    """
+    x = p["embed"][tokens]  # [B,T,Dm]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        x, kc, vc = _block(cfg, p, i, x, mm, k_caches[i], v_caches[i],
+                           positions, kv_len_mask)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    b, t, dm = x.shape
+    logits = mm(x.reshape(b * t, dm), p["lm_head"]).reshape(
+        b, t, cfg.vocab_size)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# The two serving entry points (compiled to separate artifacts)
+# ---------------------------------------------------------------------------
+
+def prefill_fn(cfg: ModelConfig, serve: ServeConfig, use_mmt4d: bool = True):
+    """Builds prefill(params..., tokens[B,S]) -> (logits[B,S,V], kc, vc)."""
+    mm = make_matmul(cfg, encoding.PHASE_PREFILL, use_mmt4d)
+    b, s = serve.batch, serve.prefill_seq
+    hk, d, l, ms = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers, cfg.max_seq
+
+    def fn(flat_params, tokens):
+        p = params_dict(cfg, flat_params)
+        k_caches = jnp.zeros((l, b, hk, ms, d), jnp.float32)
+        v_caches = jnp.zeros((l, b, hk, ms, d), jnp.float32)
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        # causal: query at t attends to cache slots <= t (slots < S filled)
+        slot = jnp.arange(ms)[None, None, :]
+        mask = slot <= positions[:, :, None]
+        logits, kc, vc = _forward(cfg, p, tokens, k_caches, v_caches,
+                                  positions, mask, mm)
+        return logits, kc, vc
+
+    return fn
+
+
+def decode_fn(cfg: ModelConfig, serve: ServeConfig, use_mmt4d: bool = True):
+    """Builds decode(params..., tokens[B], kc, vc, pos[B]) ->
+    (logits[B,V], kc, vc).  pos[b] is the cache slot the new token occupies;
+    the query attends to slots <= pos[b]."""
+    mm = make_matmul(cfg, encoding.PHASE_DECODE, use_mmt4d)
+    b = serve.batch
+    ms = cfg.max_seq
+
+    def fn(flat_params, tokens, k_caches, v_caches, pos):
+        p = params_dict(cfg, flat_params)
+        positions = pos[:, None]  # [B,1]
+        slot = jnp.arange(ms)[None, None, :]
+        mask = slot <= positions[:, :, None]
+        logits, kc, vc = _forward(cfg, p, tokens[:, None], k_caches, v_caches,
+                                  positions, mask, mm)
+        return logits[:, 0, :], kc, vc
+
+    return fn

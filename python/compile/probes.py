@@ -1,0 +1,162 @@
+"""Version-bridge probes: tiny functions covering each op family the model
+uses, lowered through the same HLO-text bridge as the real artifacts and
+paired with input/output goldens.
+
+The rust test `bridge_probes.rs` executes each probe on xla_extension 0.5.1
+and compares against these goldens — a regression suite for semantic drift
+between modern JAX lowering and the old XLA runtime (this is how the
+KV-cache/attention drift was bisected; see DESIGN.md §Key-decisions).
+
+Usage: python -m compile.probes --out-dir ../artifacts/probes
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .aot import det_matrix, to_hlo_text, write_golden
+
+
+def probe_inputs(specs):
+    """Deterministic inputs: det_matrix reshaped; i32 specs use arange."""
+    out = []
+    for i, (shape, dtype) in enumerate(specs):
+        n = int(np.prod(shape))
+        if dtype == jnp.int32:
+            out.append((np.arange(n, dtype=np.int32) * 13 % 64)
+                       .reshape(shape))
+        else:
+            out.append(det_matrix(1, n, i + 1).reshape(shape)
+                       .astype(np.float32))
+    return out
+
+
+def build_probes():
+    cfg = model.TINY
+    probes = {}
+
+    def add(name, fn, specs):
+        probes[name] = (fn, specs)
+
+    add("matmul", lambda a, b: (jnp.matmul(a, b),),
+        [((8, 16), jnp.float32), ((16, 8), jnp.float32)])
+
+    add("rsqrt_norm", lambda x, w: (model.rms_norm(x, w, 1e-5),),
+        [((4, 16, 32), jnp.float32), ((32,), jnp.float32)])
+
+    add("silu_mul", lambda g, u: (jax.nn.silu(g) * u,),
+        [((8, 32), jnp.float32), ((8, 32), jnp.float32)])
+
+    add("embed_gather", lambda e, t: (e[t],),
+        [((64, 16), jnp.float32), ((4, 8), jnp.int32)])
+
+    def rope_fn(x):
+        pos = jnp.broadcast_to(jnp.arange(16)[None, :], (2, 16))
+        return (model.apply_rope(x, pos, 10000.0),)
+
+    add("rope", rope_fn, [((2, 16, 2, 64), jnp.float32)])
+
+    def masked_softmax(scores):
+        pos = jnp.broadcast_to(jnp.arange(8)[None, :], (2, 8))
+        slot = jnp.arange(16)[None, None, :]
+        mask = slot <= pos[:, :, None]
+        s = jnp.where(mask[:, None, :, :], scores, -1e30)
+        return (jax.nn.softmax(s, axis=-1),)
+
+    add("masked_softmax", masked_softmax, [((2, 4, 8, 16), jnp.float32)])
+
+    def attention(q, k, v):
+        pos = jnp.broadcast_to(jnp.arange(8)[None, :], (2, 8))
+        slot = jnp.arange(16)[None, None, :]
+        mask = slot <= pos[:, :, None]
+        return (model._attention(q, k, v, mask),)
+
+    add("attention", attention,
+        [((2, 8, 4, 16), jnp.float32), ((2, 16, 2, 16), jnp.float32),
+         ((2, 16, 2, 16), jnp.float32)])
+
+    def cache_where(cache, new, pos):
+        sel = (jnp.arange(cache.shape[2])[None, None, :, None]
+               == pos[:, None, None, None])
+        return (jnp.where(sel, new, cache),)
+
+    add("cache_where", cache_where,
+        [((2, 2, 16, 8), jnp.float32), ((2, 2, 1, 8), jnp.float32),
+         ((2,), jnp.int32)])
+
+    def pallas_mmt4d(a, b):
+        from .kernels import mmt4d as mk
+        return (mk.matmul_mmt4d(a.astype(jnp.float16),
+                                b.astype(jnp.float16), 6, 32, 1),)
+
+    add("pallas_mmt4d", pallas_mmt4d,
+        [((12, 16), jnp.float32), ((16, 32), jnp.float32)])
+
+    def block_prefill(x, wq, wk, wv, wo, nrm):
+        p = {"layer0.attn_norm": nrm, "layer0.wq": wq, "layer0.wk": wk,
+             "layer0.wv": wv, "layer0.wo": wo,
+             "layer0.ffn_norm": nrm,
+             "layer0.w_gate": wq[:, :cfg.ffn_dim // 2].repeat(2, 1)[:, :cfg.ffn_dim],
+             "layer0.w_up": wq[:, :cfg.ffn_dim // 2].repeat(2, 1)[:, :cfg.ffn_dim],
+             "layer0.w_down": wq[:cfg.ffn_dim // 2].repeat(2, 0)[:cfg.ffn_dim]}
+        b, t = 2, 8
+        ms = 16
+        kc = jnp.zeros((b, cfg.n_kv_heads, ms, cfg.head_dim))
+        vc = jnp.zeros((b, cfg.n_kv_heads, ms, cfg.head_dim))
+        positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+        slot = jnp.arange(ms)[None, None, :]
+        mask = slot <= positions[:, :, None]
+        mm = model.make_matmul(cfg, "prefill", False)
+        y, kc2, vc2 = model._block(cfg, p, 0, x, mm, kc, vc, positions, mask)
+        return (y, kc2, vc2)
+
+    dm = cfg.d_model
+    add("block_prefill", block_prefill,
+        [((2, 8, dm), jnp.float32), ((dm, dm), jnp.float32),
+         ((dm, 128), jnp.float32), ((dm, 128), jnp.float32),
+         ((dm, dm), jnp.float32), ((dm,), jnp.float32)])
+
+    return probes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/probes")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = []
+    for name, (fn, specs) in build_probes().items():
+        inputs = probe_inputs(specs)
+        shape_specs = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in inputs]
+        text = to_hlo_text(jax.jit(fn).lower(*shape_specs))
+        with open(os.path.join(args.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        outs = jax.jit(fn)(*[jnp.asarray(x) for x in inputs])
+        for i, x in enumerate(inputs):
+            if x.dtype == np.int32:
+                write_golden(os.path.join(args.out_dir, f"{name}.in{i}.txt"),
+                             x.astype(np.float32))
+            else:
+                write_golden(os.path.join(args.out_dir, f"{name}.in{i}.txt"), x)
+        for i, o in enumerate(outs):
+            write_golden(os.path.join(args.out_dir, f"{name}.out{i}.txt"),
+                         np.asarray(o, dtype=np.float32))
+        with open(os.path.join(args.out_dir, f"{name}.meta.txt"), "w") as f:
+            f.write(f"inputs {len(inputs)}\noutputs {len(outs)}\n")
+            for i, x in enumerate(inputs):
+                f.write(f"in{i} {'x'.join(map(str, x.shape))} "
+                        f"{'i32' if x.dtype == np.int32 else 'f32'}\n")
+        names.append(name)
+        print(f"probe {name} written")
+    with open(os.path.join(args.out_dir, "index.txt"), "w") as f:
+        f.write("\n".join(names) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle vs numpy goldens.
+
+This is the CORE correctness signal of the build-time layer: every kernel
+configuration the artifacts use (and a shape/dtype sweep around them) is
+checked against ref.py and exact numpy f32 accumulation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import encoding
+from compile.kernels import mmt4d as mk
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, dtype=np.float16):
+    return (RNG.standard_normal(shape) * 0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,m0,k0", [
+    (6, 8, 6, 1), (12, 16, 6, 1), (18, 32, 6, 2), (4, 8, 1, 1),
+    (64, 256, 6, 1), (8, 8, 8, 8),
+])
+def test_pack_lhs_pallas_matches_ref(m, k, m0, k0):
+    if m % m0 or k % k0:
+        pytest.skip("pallas fast path requires divisible shapes")
+    a = jnp.asarray(rand((m, k)))
+    got = np.asarray(mk.pack_lhs(a, m0, k0))
+    want = np.asarray(ref.pack_lhs(a, m0, k0))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("k,n,n0,k0", [
+    (8, 32, 32, 1), (256, 64, 32, 1), (16, 128, 64, 1), (8, 8, 4, 2),
+])
+def test_pack_rhs_pallas_matches_ref(k, n, n0, k0):
+    b = jnp.asarray(rand((k, n)))
+    got = np.asarray(mk.pack_rhs(b, n0, k0))
+    want = np.asarray(ref.pack_rhs(b, n0, k0))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m,n,m0,n0", [(12, 64, 6, 32), (4, 64, 1, 64),
+                                       (6, 32, 6, 32)])
+def test_unpack_inverts_pack(m, n, m0, n0):
+    c = jnp.asarray(rand((m, n), np.float32))
+    c4 = ref.pack_acc(c, m0, n0)
+    got = np.asarray(mk.unpack_acc(jnp.asarray(np.asarray(c4))))
+    np.testing.assert_array_equal(got[:m, :n], np.asarray(c))
+
+
+def test_ref_pack_unpack_roundtrip_ragged():
+    c = jnp.asarray(rand((7, 33), np.float32))
+    c4 = ref.pack_acc(c, 6, 32)
+    back = ref.unpack_acc(c4, 7, 33)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# mmt4d kernel: sweep shapes x tile configs (hypothesis-style grid)
+# ---------------------------------------------------------------------------
+
+PAPER_TILES = [
+    encoding.PREFILL_TILES.as_tuple(),   # (6, 32, 1) — VLEN=256 prefill
+    encoding.DECODE_TILES.as_tuple(),    # (1, 64, 1) — VLEN=256 decode
+    encoding.riscv64_tiles(128, "prefill").as_tuple(),  # (6, 16, 1)
+    encoding.riscv64_tiles(512, "decode").as_tuple(),   # (1, 128, 1)
+]
+
+SHAPES = [(6, 8, 32), (12, 64, 64), (1, 256, 64), (64, 256, 256),
+          (5, 7, 9), (13, 31, 65), (1, 1, 1), (6, 1, 32)]
+
+
+@pytest.mark.parametrize("tiles", PAPER_TILES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_matmul_mmt4d_vs_numpy(shape, tiles):
+    m, k, n = shape
+    m0, n0, k0 = tiles
+    a = rand((m, k))
+    b = rand((k, n))
+    got = np.asarray(mk.matmul_mmt4d(jnp.asarray(a), jnp.asarray(b),
+                                     m0, n0, k0))
+    want = ref.np_matmul_f16_f32(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tiles", PAPER_TILES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_oracle_matches_numpy(shape, tiles):
+    m, k, n = shape
+    m0, n0, k0 = tiles
+    a = rand((m, k))
+    b = rand((k, n))
+    got = np.asarray(ref.matmul_via_mmt4d(jnp.asarray(a), jnp.asarray(b),
+                                          m0, n0, k0))
+    want = ref.np_matmul_f16_f32(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mmt4d_accumulate_input():
+    a = rand((12, 16))
+    b = rand((16, 64))
+    c = rand((12, 64), np.float32)
+    lhs4 = ref.pack_lhs(jnp.asarray(a), 6, 1)
+    rhs4 = ref.pack_rhs(jnp.asarray(b), 32, 1)
+    acc4 = ref.pack_acc(jnp.asarray(c), 6, 32)
+    out4 = ref.mmt4d(lhs4, rhs4, acc4=acc4)
+    got = np.asarray(ref.unpack_acc(out4, 12, 64))
+    want = ref.np_matmul_f16_f32(a, b) + c
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_f16_inputs_accumulate_in_f32_not_f16():
+    # 4096 additions of 0.0001: in f16 accumulation this collapses badly.
+    k = 4096
+    a = np.full((1, k), 0.25, np.float16)
+    b = np.full((k, 32), np.float16(0.0001), np.float16)
+    got = np.asarray(mk.matmul_mmt4d(jnp.asarray(a), jnp.asarray(b), 1, 32, 1))
+    want = ref.np_matmul_f16_f32(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+    assert got[0, 0] > 0.09  # f16 accumulation would stall near 0.06
+
+
+# ---------------------------------------------------------------------------
+# VLEN scaling of tile selection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vlen,want_pf,want_dec", [
+    (128, (6, 16, 1), (1, 32, 1)),
+    (256, (6, 32, 1), (1, 64, 1)),
+    (512, (6, 64, 1), (1, 128, 1)),
+    (1024, (6, 128, 1), (1, 256, 1)),
+])
+def test_vlen_aware_tile_selection(vlen, want_pf, want_dec):
+    assert encoding.riscv64_tiles(vlen, "prefill").as_tuple() == want_pf
+    assert encoding.riscv64_tiles(vlen, "decode").as_tuple() == want_dec
+
+
+def test_invalid_vlen_rejected():
+    with pytest.raises(ValueError):
+        encoding.riscv64_tiles(100, "prefill")
+    with pytest.raises(ValueError):
+        encoding.riscv64_tiles(256, "training")
+
+
+def test_upstream_parity_targets():
+    assert encoding.select_tiles("x86_64", "prefill",
+                                 has_avx512=True).as_tuple() == (16, 16, 1)
+    assert encoding.select_tiles("x86_64", "prefill").as_tuple() == (8, 8, 1)
+    assert encoding.select_tiles("aarch64", "decode").as_tuple() == (8, 8, 1)

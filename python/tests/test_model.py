@@ -1,0 +1,98 @@
+"""L2 correctness: model shapes, mmt4d path vs f32 baseline, KV-cache
+consistency between prefill and decode."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg, serve = model.TINY, model.SERVE
+    params = tuple(jnp.asarray(w) for w in model.init_params(cfg))
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(0, cfg.vocab_size,
+                          size=(serve.batch, serve.prefill_seq)).astype(np.int32)
+    return cfg, serve, params, jnp.asarray(tokens)
+
+
+def test_param_specs_match_init(setup):
+    cfg, _, params, _ = setup
+    specs = cfg.param_specs()
+    assert len(specs) == len(params)
+    for (name, shape), w in zip(specs, params):
+        assert tuple(w.shape) == shape, name
+
+
+def test_prefill_shapes(setup):
+    cfg, serve, params, tokens = setup
+    logits, kc, vc = jax.jit(model.prefill_fn(cfg, serve, True))(params, tokens)
+    b, s = serve.batch, serve.prefill_seq
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert kc.shape == (cfg.n_layers, b, cfg.n_kv_heads, cfg.max_seq,
+                        cfg.head_dim)
+    assert vc.shape == kc.shape
+    # cache slots beyond S are untouched zeros
+    assert float(jnp.abs(kc[:, :, :, s:, :]).max()) == 0.0
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_shapes(setup):
+    cfg, serve, params, tokens = setup
+    logits, kc, vc = jax.jit(model.prefill_fn(cfg, serve, True))(params, tokens)
+    new = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    pos = jnp.full((serve.batch,), serve.prefill_seq, jnp.int32)
+    dl, kc2, vc2 = jax.jit(model.decode_fn(cfg, serve, True))(
+        params, new, kc, vc, pos)
+    assert dl.shape == (serve.batch, cfg.vocab_size)
+    # decode writes exactly one new slot per sequence
+    diff = jnp.abs(kc2 - kc).max(axis=(0, 2, 4))  # [B, maxS]
+    for b in range(serve.batch):
+        nz = np.nonzero(np.asarray(diff[b]))[0]
+        assert list(nz) == [serve.prefill_seq]
+
+
+def test_mmt4d_path_close_to_f32_baseline(setup):
+    cfg, serve, params, tokens = setup
+    lm, _, _ = jax.jit(model.prefill_fn(cfg, serve, True))(params, tokens)
+    lb, _, _ = jax.jit(model.prefill_fn(cfg, serve, False))(params, tokens)
+    # f16 weights round-off only — small relative to logit scale
+    assert float(jnp.max(jnp.abs(lm - lb))) < 0.05
+    # and the two paths agree on argmax nearly everywhere
+    agree = (jnp.argmax(lm, -1) == jnp.argmax(lb, -1)).mean()
+    assert float(agree) > 0.95
+
+
+def test_decode_continues_prefill(setup):
+    """Prefill of [t0..t15] then decode(t16) must equal the last-position
+    logits of prefilling [t1..t16] shifted — verified via a direct
+    comparison: decode at pos S with the prefill cache reproduces the
+    teacher-forced next-step distribution computed by a second prefill."""
+    cfg, serve, params, tokens = setup
+    s = serve.prefill_seq
+    logits, kc, vc = jax.jit(model.prefill_fn(cfg, serve, True))(params, tokens)
+    nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+    pos = jnp.full((serve.batch,), s, jnp.int32)
+    dl, _, _ = jax.jit(model.decode_fn(cfg, serve, True))(
+        params, nxt, kc, vc, pos)
+    # Build the same continuation as a fresh prefill over S+1 tokens using a
+    # larger serve config (teacher forcing), compare last-position logits.
+    serve2 = model.ServeConfig(batch=serve.batch, prefill_seq=s + 1)
+    toks2 = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+    l2, _, _ = jax.jit(model.prefill_fn(cfg, serve2, True))(params, toks2)
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(l2[:, -1, :]),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_rope_positions_matter(setup):
+    cfg, serve, params, tokens = setup
+    _, kc, vc = jax.jit(model.prefill_fn(cfg, serve, True))(params, tokens)
+    new = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    p1 = jnp.full((serve.batch,), serve.prefill_seq, jnp.int32)
+    p2 = jnp.full((serve.batch,), serve.prefill_seq + 3, jnp.int32)
+    d1, _, _ = jax.jit(model.decode_fn(cfg, serve, True))(params, new, kc, vc, p1)
+    d2, _, _ = jax.jit(model.decode_fn(cfg, serve, True))(params, new, kc, vc, p2)
+    assert float(jnp.max(jnp.abs(d1 - d2))) > 1e-4

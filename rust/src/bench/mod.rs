@@ -1,0 +1,170 @@
+//! Benchmark harness (no criterion in the offline vendor set): warmup,
+//! timed iterations with robust statistics, and aligned table rendering for
+//! the paper-reproduction benches.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI / heavy benches.
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            target_time: Duration::from_millis(300),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time statistics (seconds).
+    pub secs: Summary,
+    /// Optional work units per iteration (e.g. FLOPs, tokens).
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.secs.p50)
+    }
+}
+
+/// Time `f` under the config; `work_per_iter` enables throughput reporting.
+pub fn run(name: &str, cfg: &BenchConfig, work_per_iter: Option<f64>,
+           mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let started = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (started.elapsed() < cfg.target_time && samples.len() < cfg.max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        secs: Summary::of(&samples),
+        work_per_iter,
+    }
+}
+
+/// Render a results table.
+pub fn render_table(title: &str, results: &[BenchResult],
+                    work_unit: &str) -> String {
+    let mut s = format!("\n== {title} ==\n");
+    s.push_str(&format!(
+        "{:<40} {:>8} {:>12} {:>12} {:>14}\n",
+        "benchmark", "iters", "p50", "p90", work_unit
+    ));
+    for r in results {
+        let thr = r
+            .throughput()
+            .map(|t| format_si(t))
+            .unwrap_or_else(|| "-".into());
+        s.push_str(&format!(
+            "{:<40} {:>8} {:>12} {:>12} {:>14}\n",
+            r.name, r.iters, format_secs(r.secs.p50), format_secs(r.secs.p90),
+            thr
+        ));
+    }
+    s
+}
+
+pub fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+pub fn format_si(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}K", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Is `TENX_BENCH_QUICK` set? Benches honour it to keep `cargo bench`
+/// runtime bounded.
+pub fn quick_mode() -> bool {
+    std::env::var("TENX_BENCH_QUICK").is_ok()
+}
+
+pub fn config_from_env() -> BenchConfig {
+    if quick_mode() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        let cfg = BenchConfig { warmup_iters: 1, min_iters: 5, max_iters: 5,
+                                target_time: Duration::from_millis(1) };
+        let mut n = 0u64;
+        let r = run("noop", &cfg, Some(100.0), || n += 1);
+        assert_eq!(r.iters, 5);
+        assert!(n >= 6); // warmup + iters
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_secs(2.5), "2.500s");
+        assert_eq!(format_secs(0.0025), "2.500ms");
+        assert_eq!(format_secs(2.5e-6), "2.5us");
+        assert_eq!(format_si(3.2e9), "3.20G");
+        assert_eq!(format_si(12.0), "12.00");
+    }
+
+    #[test]
+    fn table_renders() {
+        let cfg = BenchConfig { warmup_iters: 0, min_iters: 2, max_iters: 2,
+                                target_time: Duration::ZERO };
+        let r = run("x", &cfg, None, || {});
+        let t = render_table("t", &[r], "unit/s");
+        assert!(t.contains("benchmark"));
+        assert!(t.contains("x"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Set-associative LRU cache simulator (L1D + L2 hierarchy).
+//!
+//! Fed by the RVV simulator's memory accesses; produces the hit/miss counts
+//! and cycle penalties behind the paper's motivation for mmt4d ("tiled matmul
+//! has suboptimal performance if the data is not pre-arranged, leading to a
+//! high cache miss rate" — reproduced by `benches/cache_missrate.rs`).
+
+use crate::target::CacheDesc;
+
+/// One cache level: physically-indexed, set-associative, LRU, write-allocate.
+#[derive(Debug, Clone)]
+pub struct CacheLevel {
+    pub desc: CacheDesc,
+    sets: usize,
+    /// tags[set] = most-recent-first list of line tags.
+    tags: Vec<Vec<u64>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheLevel {
+    pub fn new(desc: CacheDesc) -> CacheLevel {
+        assert!(desc.line_bytes.is_power_of_two());
+        let lines = desc.size_bytes / desc.line_bytes;
+        assert!(desc.ways >= 1 && lines >= desc.ways);
+        let sets = lines / desc.ways;
+        assert!(sets.is_power_of_two(),
+                "sets must be a power of two (got {sets})");
+        CacheLevel {
+            desc,
+            sets,
+            tags: vec![Vec::new(); sets],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access one line; returns true on hit.
+    fn access_line(&mut self, line_addr: u64) -> bool {
+        let set = (line_addr as usize) & (self.sets - 1);
+        let ways = self.desc.ways;
+        let list = &mut self.tags[set];
+        if let Some(pos) = list.iter().position(|&t| t == line_addr) {
+            list.remove(pos);
+            list.insert(0, line_addr);
+            self.hits += 1;
+            true
+        } else {
+            list.insert(0, line_addr);
+            list.truncate(ways);
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.misses as f64 / total as f64
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// Two-level hierarchy; returns the cycle penalty of each access.
+#[derive(Debug, Clone)]
+pub struct CacheHierarchy {
+    pub l1: CacheLevel,
+    pub l2: CacheLevel,
+}
+
+impl CacheHierarchy {
+    pub fn new(l1: CacheDesc, l2: CacheDesc) -> CacheHierarchy {
+        CacheHierarchy { l1: CacheLevel::new(l1), l2: CacheLevel::new(l2) }
+    }
+
+    pub fn for_target(t: &crate::target::TargetDesc) -> CacheHierarchy {
+        Self::new(t.l1d, t.l2)
+    }
+
+    /// Access `size` bytes at `addr`; returns total penalty cycles
+    /// (0 on L1 hit; l1.miss_penalty on L2 hit; +l2.miss_penalty on DRAM).
+    pub fn access(&mut self, addr: u64, size: usize) -> u64 {
+        let line = self.l1.desc.line_bytes as u64;
+        let first = addr / line;
+        let last = (addr + size.max(1) as u64 - 1) / line;
+        let mut penalty = 0;
+        for line_addr in first..=last {
+            if !self.l1.access_line(line_addr) {
+                penalty += self.l1.desc.miss_penalty;
+                if !self.l2.access_line(line_addr) {
+                    penalty += self.l2.desc.miss_penalty;
+                }
+            }
+        }
+        penalty
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.l1.reset_stats();
+        self.l2.reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::target::TargetDesc;
+
+    fn small_cache() -> CacheHierarchy {
+        CacheHierarchy::new(
+            CacheDesc { size_bytes: 1024, line_bytes: 64, ways: 2,
+                        miss_penalty: 10 },
+            CacheDesc { size_bytes: 8192, line_bytes: 64, ways: 4,
+                        miss_penalty: 100 },
+        )
+    }
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = small_cache();
+        assert_eq!(c.access(0x1000, 4), 110); // cold: L1 + L2 miss
+        assert_eq!(c.access(0x1000, 4), 0); // hot
+        assert_eq!(c.access(0x1010, 4), 0); // same line
+        assert_eq!(c.l1.hits, 2);
+        assert_eq!(c.l1.misses, 1);
+    }
+
+    #[test]
+    fn straddling_access_touches_two_lines() {
+        let mut c = small_cache();
+        let p = c.access(0x103C, 8); // crosses the 0x1040 boundary
+        assert_eq!(p, 220);
+        assert_eq!(c.l1.misses, 2);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut c = small_cache();
+        // 1KB, 64B lines, 2 ways -> 8 sets. Lines mapping to set 0:
+        // line addrs 0, 8, 16 (addr 0, 512, 1024).
+        c.access(0, 1);
+        c.access(512, 1);
+        c.access(1024, 1); // evicts line 0 (LRU)
+        assert_eq!(c.l1.misses, 3);
+        c.access(512, 1); // still resident
+        assert_eq!(c.l1.hits, 1);
+        c.access(0, 1); // was evicted -> miss (but L2 hit)
+        assert_eq!(c.l1.misses, 4);
+        assert_eq!(c.l2.hits, 1);
+    }
+
+    #[test]
+    fn sequential_streaming_miss_rate_is_line_rate() {
+        // Streaming 16KB through a 1KB L1 with 64B lines: miss once per line.
+        let mut c = small_cache();
+        for i in 0..4096u64 {
+            c.access(i * 4, 4);
+        }
+        let expect_misses = 4096 * 4 / 64;
+        assert_eq!(c.l1.misses, expect_misses);
+        assert!((c.l1.miss_rate() - expect_misses as f64 / 4096.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jupiter_hierarchy_constructs() {
+        let t = TargetDesc::milkv_jupiter();
+        let mut c = CacheHierarchy::for_target(&t);
+        assert_eq!(c.access(0, 64), t.l1d.miss_penalty + t.l2.miss_penalty);
+        assert_eq!(c.access(0, 64), 0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Tiny declarative CLI parser (no clap in the offline vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, positional
+//! arguments, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    args: Vec<ArgSpec>,
+    positionals: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, args: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: Some(default),
+                                 is_flag: false, required: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: false,
+                                 required: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: true,
+                                 required: false });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push(ArgSpec { name, help, default: None,
+                                        is_flag: false, required: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  tenx {}", self.name,
+                            self.about, self.name);
+        for p in &self.positionals {
+            s.push_str(&format!(" <{}>", p.name));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for a in &self.args {
+            let kind = if a.is_flag { String::new() } else { " <value>".into() };
+            let def = match a.default {
+                Some(d) => format!(" (default: {d})"),
+                None if a.required => " (required)".into(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", a.name, a.help));
+        }
+        s
+    }
+
+    /// Parse argv (excluding program + subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos_idx = 0;
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}",
+                                           self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag, takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                let spec = self.positionals.get(pos_idx).ok_or_else(|| {
+                    format!("unexpected positional argument {a:?}\n\n{}",
+                            self.usage())
+                })?;
+                values.insert(spec.name.to_string(), a.clone());
+                pos_idx += 1;
+            }
+            i += 1;
+        }
+        for spec in self.args.iter().chain(&self.positionals) {
+            if spec.required && !values.contains_key(spec.name) {
+                return Err(format!("missing required --{}\n\n{}", spec.name,
+                                   self.usage()));
+            }
+            if let Some(d) = spec.default {
+                values.entry(spec.name.to_string()).or_insert(d.to_string());
+            }
+        }
+        Ok(Matches { values, flags })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Matches {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("arg {name} not declared"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.str(name)
+            .parse()
+            .map_err(|e| format!("invalid --{name}: {e}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.parse(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the server")
+            .opt("threads", "8", "worker threads")
+            .req("artifacts", "artifact dir")
+            .flag("verbose", "log more")
+            .positional("model", "model name")
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        let m = cmd()
+            .parse(&argv(&["tiny", "--artifacts", "a/", "--threads=4",
+                           "--verbose"]))
+            .unwrap();
+        assert_eq!(m.str("model"), "tiny");
+        assert_eq!(m.str("artifacts"), "a/");
+        assert_eq!(m.usize("threads").unwrap(), 4);
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&argv(&["tiny", "--artifacts", "x"])).unwrap();
+        assert_eq!(m.usize("threads").unwrap(), 8);
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cmd().parse(&argv(&["tiny"])).unwrap_err();
+        assert!(e.contains("--artifacts"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = cmd().parse(&argv(&["tiny", "--artifacts", "x", "--nope"]))
+            .unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--threads"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let e = cmd()
+            .parse(&argv(&["tiny", "--artifacts", "x", "--verbose=1"]))
+            .unwrap_err();
+        assert!(e.contains("flag"));
+    }
+}

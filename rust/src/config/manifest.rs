@@ -1,0 +1,253 @@
+//! Reader for artifacts/manifest.txt (written by python/compile/aot.py).
+//!
+//! The manifest is the contract between the build-time Python layer and the
+//! Rust runtime: model hyper-parameters, serving shapes, tile selections,
+//! parameter order for weights.bin, and the artifact inventory.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn_dim: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeDims {
+    pub batch: usize,
+    pub prefill_seq: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub m0: usize,
+    pub n0: usize,
+    pub k0: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub serve: ServeDims,
+    pub vlen_bits: usize,
+    pub prefill_tile: Tile,
+    pub decode_tile: Tile,
+    pub kernel_prefill_shape: KernelShape,
+    pub kernel_decode_shape: KernelShape,
+    /// (name, shape) in weights.bin / HLO parameter order.
+    pub weights: Vec<(String, Vec<usize>)>,
+    pub artifacts: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let mut section = String::new();
+        let mut kv: BTreeMap<(String, String), String> = BTreeMap::new();
+        let mut weights = Vec::new();
+        let mut artifacts = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].to_string();
+                continue;
+            }
+            match section.as_str() {
+                "weights" => {
+                    let (name, shape) = line
+                        .split_once(' ')
+                        .ok_or_else(|| anyhow::anyhow!("bad weight line {line:?}"))?;
+                    let dims = parse_dims(shape)?;
+                    weights.push((name.to_string(), dims));
+                }
+                "artifacts" => artifacts.push(line.to_string()),
+                _ => {
+                    if let Some((k, v)) = line.split_once(' ') {
+                        kv.insert((section.clone(), k.to_string()),
+                                  v.trim().to_string());
+                    }
+                }
+            }
+        }
+
+        let get = |sec: &str, key: &str| -> anyhow::Result<String> {
+            kv.get(&(sec.to_string(), key.to_string()))
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("manifest missing {sec}.{key}"))
+        };
+        let get_usize = |sec: &str, key: &str| -> anyhow::Result<usize> {
+            Ok(get(sec, key)?.parse()?)
+        };
+
+        let model = ModelDims {
+            vocab_size: get_usize("model", "vocab_size")?,
+            d_model: get_usize("model", "d_model")?,
+            n_layers: get_usize("model", "n_layers")?,
+            n_heads: get_usize("model", "n_heads")?,
+            n_kv_heads: get_usize("model", "n_kv_heads")?,
+            ffn_dim: get_usize("model", "ffn_dim")?,
+            max_seq: get_usize("model", "max_seq")?,
+            head_dim: get_usize("model", "head_dim")?,
+        };
+        let serve = ServeDims {
+            batch: get_usize("serve", "batch")?,
+            prefill_seq: get_usize("serve", "prefill_seq")?,
+        };
+        let prefill_tile = parse_tile(&get("tiles", "prefill")?)?;
+        let decode_tile = parse_tile(&get("tiles", "decode")?)?;
+        let kp = parse_dims(&get("kernel_shapes", "prefill")?)?;
+        let kd = parse_dims(&get("kernel_shapes", "decode")?)?;
+        anyhow::ensure!(kp.len() == 3 && kd.len() == 3, "kernel shapes are MxKxN");
+
+        anyhow::ensure!(!weights.is_empty(), "manifest has no weights");
+        anyhow::ensure!(!artifacts.is_empty(), "manifest has no artifacts");
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            serve,
+            vlen_bits: get_usize("tiles", "vlen_bits")?,
+            prefill_tile,
+            decode_tile,
+            kernel_prefill_shape: KernelShape { m: kp[0], k: kp[1], n: kp[2] },
+            kernel_decode_shape: KernelShape { m: kd[0], k: kd[1], n: kd[2] },
+            weights,
+            artifacts,
+        })
+    }
+
+    /// Total number of f32 weight scalars (size of weights.bin / 4).
+    pub fn total_weight_elems(&self) -> usize {
+        self.weights.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Load weights.bin as per-parameter f32 vectors in manifest order.
+    pub fn load_weights(&self) -> anyhow::Result<Vec<(Vec<usize>, Vec<f32>)>> {
+        let path = self.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)?;
+        let expect = self.total_weight_elems() * 4;
+        anyhow::ensure!(
+            bytes.len() == expect,
+            "weights.bin is {} bytes, manifest says {expect}",
+            bytes.len()
+        );
+        let mut out = Vec::with_capacity(self.weights.len());
+        let mut off = 0usize;
+        for (_, shape) in &self.weights {
+            let n: usize = shape.iter().product();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + i * 4..off + i * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            out.push((shape.clone(), v));
+        }
+        Ok(out)
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.iter().any(|a| a == name)
+    }
+}
+
+fn parse_dims(s: &str) -> anyhow::Result<Vec<usize>> {
+    s.split('x')
+        .map(|d| d.parse().map_err(|e| anyhow::anyhow!("bad dim {d:?}: {e}")))
+        .collect()
+}
+
+fn parse_tile(s: &str) -> anyhow::Result<Tile> {
+    let d = parse_dims(s)?;
+    anyhow::ensure!(d.len() == 3, "tile must be M0xN0xK0, got {s:?}");
+    Ok(Tile { m0: d[0], n0: d[1], k0: d[2] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+format_version 1
+[model]
+vocab_size 512
+d_model 256
+n_layers 4
+n_heads 4
+n_kv_heads 2
+ffn_dim 512
+max_seq 64
+head_dim 64
+[serve]
+batch 4
+prefill_seq 16
+[tiles]
+vlen_bits 256
+prefill 6x32x1
+decode 1x64x1
+[kernel_shapes]
+prefill 64x256x256
+decode 4x256x512
+[weights]
+embed 512x256
+lm_head 256x512
+[artifacts]
+prefill.hlo.txt
+decode.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.model.d_model, 256);
+        assert_eq!(m.serve.batch, 4);
+        assert_eq!(m.prefill_tile, Tile { m0: 6, n0: 32, k0: 1 });
+        assert_eq!(m.decode_tile, Tile { m0: 1, n0: 64, k0: 1 });
+        assert_eq!(m.kernel_decode_shape,
+                   KernelShape { m: 4, k: 256, n: 512 });
+        assert_eq!(m.weights.len(), 2);
+        assert_eq!(m.total_weight_elems(), 512 * 256 * 2);
+        assert!(m.has_artifact("decode.hlo.txt"));
+        assert!(!m.has_artifact("nope.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let bad = SAMPLE.replace("d_model 256\n", "");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn bad_tile_is_error() {
+        let bad = SAMPLE.replace("prefill 6x32x1", "prefill 6x32");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! Configuration: a TOML-subset parser for launcher configs plus the
+//! artifact-manifest reader (artifacts/manifest.txt, written by aot.py).
+
+pub mod manifest;
+pub mod toml;
+
+pub use manifest::Manifest;
+pub use toml::TomlDoc;
+
+use std::path::PathBuf;
+
+/// Launcher configuration for `tenx serve` (loadable from a TOML-subset
+/// file, overridable from the CLI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOpts {
+    pub artifacts_dir: PathBuf,
+    /// Use the mmt4d (10x-IREE) artifacts or the plain-f32 baseline.
+    pub use_mmt4d: bool,
+    /// Max decode steps per request.
+    pub max_new_tokens: usize,
+    /// Scheduler queue capacity before back-pressure.
+    pub queue_capacity: usize,
+    /// Number of requests to generate in the synthetic driver.
+    pub num_requests: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            artifacts_dir: PathBuf::from("artifacts"),
+            use_mmt4d: true,
+            max_new_tokens: 16,
+            queue_capacity: 64,
+            num_requests: 16,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl ServeOpts {
+    /// Layer a TOML document over defaults.
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<Self> {
+        let mut o = ServeOpts::default();
+        if let Some(v) = doc.get_str("serve", "artifacts_dir") {
+            o.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get_bool("serve", "use_mmt4d")? {
+            o.use_mmt4d = v;
+        }
+        if let Some(v) = doc.get_int("serve", "max_new_tokens")? {
+            o.max_new_tokens = v as usize;
+        }
+        if let Some(v) = doc.get_int("serve", "queue_capacity")? {
+            o.queue_capacity = v as usize;
+        }
+        if let Some(v) = doc.get_int("serve", "num_requests")? {
+            o.num_requests = v as usize;
+        }
+        if let Some(v) = doc.get_float("serve", "temperature")? {
+            o.temperature = v as f32;
+        }
+        if let Some(v) = doc.get_int("serve", "seed")? {
+            o.seed = v as u64;
+        }
+        Ok(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_opts_from_toml() {
+        let doc = TomlDoc::parse(
+            "[serve]\nartifacts_dir = \"x/y\"\nuse_mmt4d = false\n\
+             max_new_tokens = 4\ntemperature = 0.5\n",
+        )
+        .unwrap();
+        let o = ServeOpts::from_toml(&doc).unwrap();
+        assert_eq!(o.artifacts_dir, PathBuf::from("x/y"));
+        assert!(!o.use_mmt4d);
+        assert_eq!(o.max_new_tokens, 4);
+        assert_eq!(o.temperature, 0.5);
+        assert_eq!(o.queue_capacity, 64); // default kept
+    }
+}

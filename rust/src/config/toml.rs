@@ -1,0 +1,180 @@
+//! A strict TOML-subset parser: `[section]` headers, `key = value` pairs,
+//! `#` comments. Values: quoted strings, integers, floats, booleans.
+//! No nested tables, arrays, or multi-line strings — launcher configs don't
+//! need them, and a small grammar keeps failure modes obvious.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    /// section -> key -> value; top-level keys live under "".
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "line {}: unterminated section header", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("line {}: expected key = value", lineno + 1)
+            })?;
+            let key = key.trim().to_string();
+            let value = parse_value(val.trim()).map_err(|e| {
+                anyhow::anyhow!("line {}: {e}", lineno + 1)
+            })?;
+            let sect = doc.sections.entry(section.clone()).or_default();
+            if sect.insert(key.clone(), value).is_some() {
+                anyhow::bail!("line {}: duplicate key {key:?}", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<TomlDoc> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> anyhow::Result<Option<i64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Int(v)) => Ok(Some(*v)),
+            Some(other) => anyhow::bail!("{section}.{key}: expected int, got {other:?}"),
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Float(v)) => Ok(Some(*v)),
+            Some(Value::Int(v)) => Ok(Some(*v as f64)),
+            Some(other) => anyhow::bail!("{section}.{key}: expected float, got {other:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> anyhow::Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Bool(v)) => Ok(Some(*v)),
+            Some(other) => anyhow::bail!("{section}.{key}: expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string is content, not a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string {s:?}"))?;
+        anyhow::ensure!(!body.contains('"'), "embedded quote in {s:?}");
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    anyhow::bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[a]\nx = \"hi\" # comment\ny = -3\nz = 2.5\nw = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top").unwrap(), Some(1));
+        assert_eq!(doc.get_str("a", "x"), Some("hi"));
+        assert_eq!(doc.get_int("a", "y").unwrap(), Some(-3));
+        assert_eq!(doc.get_float("a", "z").unwrap(), Some(2.5));
+        assert_eq!(doc.get_bool("a", "w").unwrap(), Some(true));
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_vice_versa() {
+        let doc = TomlDoc::parse("[s]\na = 2\nb = 2.0\n").unwrap();
+        assert_eq!(doc.get_float("s", "a").unwrap(), Some(2.0));
+        assert!(doc.get_int("s", "b").is_err());
+    }
+
+    #[test]
+    fn hash_in_string_not_comment() {
+        let doc = TomlDoc::parse("[s]\na = \"x#y\"\n").unwrap();
+        assert_eq!(doc.get_str("s", "a"), Some("x#y"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+        assert!(TomlDoc::parse("a = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("a = nope\n").is_err());
+    }
+
+    #[test]
+    fn missing_returns_none() {
+        let doc = TomlDoc::parse("[s]\na = 1\n").unwrap();
+        assert_eq!(doc.get_int("s", "b").unwrap(), None);
+        assert_eq!(doc.get_int("t", "a").unwrap(), None);
+    }
+}

@@ -1,0 +1,207 @@
+//! The scheduler's model abstraction plus its PJRT and mock implementations.
+//!
+//! The backend owns the *live* batch KV cache. Prefill writes into a staging
+//! cache; `commit_slots` splices chosen slots into the live cache — the
+//! cache-manager primitive that makes continuous batching possible with
+//! whole-batch compiled artifacts.
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, EnginePath};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BackendDims {
+    pub batch: usize,
+    pub prefill_seq: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+}
+
+pub trait ModelBackend {
+    fn dims(&self) -> BackendDims;
+
+    /// Run prefill on `tokens` ([B*S] flattened) into the staging cache;
+    /// returns [B*S*V] logits.
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Splice the staged cache planes of `slots` into the live cache.
+    fn commit_slots(&mut self, slots: &[usize]) -> Result<()>;
+
+    /// One decode step over the live cache; `tokens`/`pos` are [B];
+    /// returns [B*V] logits.
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// PJRT-backed implementation over the AOT artifacts.
+pub struct EngineBackend {
+    engine: Engine,
+    live_k: xla::Literal,
+    live_v: xla::Literal,
+    staged: Option<(xla::Literal, xla::Literal)>,
+}
+
+impl EngineBackend {
+    pub fn new(engine: Engine) -> Result<EngineBackend> {
+        let live_k = engine.zero_kv()?;
+        let live_v = engine.zero_kv()?;
+        Ok(EngineBackend { engine, live_k, live_v, staged: None })
+    }
+
+    pub fn load(dir: &std::path::Path, path: EnginePath) -> Result<EngineBackend> {
+        Self::new(Engine::load(dir, path)?)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl ModelBackend for EngineBackend {
+    fn dims(&self) -> BackendDims {
+        BackendDims {
+            batch: self.engine.batch(),
+            prefill_seq: self.engine.prefill_seq(),
+            max_seq: self.engine.max_seq(),
+            vocab: self.engine.vocab(),
+        }
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let out = self.engine.prefill(tokens)?;
+        self.staged = Some((out.k_cache, out.v_cache));
+        Ok(out.logits)
+    }
+
+    fn commit_slots(&mut self, slots: &[usize]) -> Result<()> {
+        let (sk, sv) = self
+            .staged
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no staged prefill"))?;
+        for &slot in slots {
+            self.live_k = self.engine.splice_kv_slot(&self.live_k, sk, slot)?;
+            self.live_v = self.engine.splice_kv_slot(&self.live_v, sv, slot)?;
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let out = self.engine.decode(tokens, &self.live_k, &self.live_v, pos)?;
+        self.live_k = out.k_cache;
+        self.live_v = out.v_cache;
+        Ok(out.logits)
+    }
+}
+
+/// Deterministic mock for scheduler tests (no PJRT): the "model" prefers
+/// token `(prev * 7 + 13) % vocab` and tracks cache state to verify the
+/// scheduler's slot bookkeeping.
+pub struct MockBackend {
+    pub dims: BackendDims,
+    /// live[slot] = tokens whose KV is in the live cache, by position.
+    pub live: Vec<Vec<i32>>,
+    staged: Option<Vec<Vec<i32>>>,
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+}
+
+impl MockBackend {
+    pub fn new(batch: usize, prefill_seq: usize, max_seq: usize,
+               vocab: usize) -> MockBackend {
+        MockBackend {
+            dims: BackendDims { batch, prefill_seq, max_seq, vocab },
+            live: vec![vec![]; batch],
+            staged: None,
+            prefill_calls: 0,
+            decode_calls: 0,
+        }
+    }
+
+    pub fn next_token(prev: i32, vocab: usize) -> i32 {
+        (prev * 7 + 13).rem_euclid(vocab as i32)
+    }
+
+    fn favor(&self, prev: i32) -> Vec<f32> {
+        let mut row = vec![0.0f32; self.dims.vocab];
+        row[Self::next_token(prev, self.dims.vocab) as usize] = 10.0;
+        row
+    }
+}
+
+impl ModelBackend for MockBackend {
+    fn dims(&self) -> BackendDims {
+        self.dims
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let BackendDims { batch, prefill_seq, vocab, .. } = self.dims;
+        anyhow::ensure!(tokens.len() == batch * prefill_seq);
+        self.prefill_calls += 1;
+        let mut staged = Vec::with_capacity(batch);
+        let mut logits = Vec::with_capacity(batch * prefill_seq * vocab);
+        for b in 0..batch {
+            let row = &tokens[b * prefill_seq..][..prefill_seq];
+            staged.push(row.to_vec());
+            for &t in row {
+                logits.extend(self.favor(t));
+            }
+        }
+        self.staged = Some(staged);
+        Ok(logits)
+    }
+
+    fn commit_slots(&mut self, slots: &[usize]) -> Result<()> {
+        let staged = self
+            .staged
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no staged prefill"))?;
+        for &s in slots {
+            self.live[s] = staged[s].clone();
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let BackendDims { batch, vocab, max_seq, .. } = self.dims;
+        anyhow::ensure!(tokens.len() == batch && pos.len() == batch);
+        self.decode_calls += 1;
+        let mut logits = Vec::with_capacity(batch * vocab);
+        for b in 0..batch {
+            let p = pos[b] as usize;
+            anyhow::ensure!(p < max_seq, "pos out of cache");
+            // write the token into the mock cache at p
+            if self.live[b].len() <= p {
+                self.live[b].resize(p + 1, 0);
+            }
+            self.live[b][p] = tokens[b];
+            logits.extend(self.favor(tokens[b]));
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_stages_and_commits() {
+        let mut m = MockBackend::new(2, 4, 8, 32);
+        let logits = m.prefill(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        assert_eq!(logits.len(), 2 * 4 * 32);
+        m.commit_slots(&[1]).unwrap();
+        assert_eq!(m.live[0], Vec::<i32>::new());
+        assert_eq!(m.live[1], vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn mock_decode_writes_cache() {
+        let mut m = MockBackend::new(2, 4, 8, 32);
+        m.prefill(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        m.commit_slots(&[0, 1]).unwrap();
+        let l = m.decode(&[9, 10], &[4, 4]).unwrap();
+        assert_eq!(l.len(), 2 * 32);
+        assert_eq!(m.live[0][4], 9);
+        assert_eq!(MockBackend::next_token(9, 32),
+                   crate::llm::argmax(&l[..32]) as i32);
+    }
+}

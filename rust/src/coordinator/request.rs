@@ -1,0 +1,83 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::{Duration, Instant};
+
+use crate::llm::SamplingParams;
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt token ids (tokenized upstream).
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// Stop generation at this token (besides max_new_tokens).
+    pub eos_token: Option<u32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit max_new_tokens.
+    Length,
+    /// Produced the EOS token.
+    Eos,
+    /// KV cache exhausted (prompt + generation reached max_seq).
+    CacheFull,
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestTiming {
+    pub submitted: Instant,
+    pub prefill_done: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl RequestTiming {
+    pub fn new() -> RequestTiming {
+        RequestTiming { submitted: Instant::now(), prefill_done: None,
+                        finished: None }
+    }
+
+    /// Time to first token.
+    pub fn ttft(&self) -> Option<Duration> {
+        self.prefill_done.map(|t| t - self.submitted)
+    }
+
+    pub fn e2e(&self) -> Option<Duration> {
+        self.finished.map(|t| t - self.submitted)
+    }
+}
+
+impl Default for RequestTiming {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    /// Generated token ids (prompt not included).
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    pub ttft: Duration,
+    pub e2e: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_monotonic() {
+        let mut t = RequestTiming::new();
+        assert!(t.ttft().is_none());
+        t.prefill_done = Some(t.submitted + Duration::from_millis(5));
+        t.finished = Some(t.submitted + Duration::from_millis(12));
+        assert_eq!(t.ttft().unwrap(), Duration::from_millis(5));
+        assert_eq!(t.e2e().unwrap(), Duration::from_millis(12));
+    }
+}

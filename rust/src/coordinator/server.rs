@@ -1,0 +1,205 @@
+//! The serving front-end: a worker thread that owns the scheduler and a
+//! channel-based submission API (std-only; no async runtime in the offline
+//! vendor set — and none needed: PJRT execution is synchronous anyway).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::backend::ModelBackend;
+use super::request::{Request, RequestId, RequestOutput};
+use super::scheduler::Scheduler;
+use crate::llm::SamplingParams;
+use crate::metrics::ServingMetrics;
+
+enum Msg {
+    Submit(Request, Sender<RequestOutput>),
+    Shutdown,
+}
+
+/// Handle for submitting requests; dropping it (plus `shutdown`) stops the
+/// worker.
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    next_id: AtomicU64,
+    pub metrics: Arc<ServingMetrics>,
+    worker: Option<JoinHandle<Result<()>>>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns a receiver for its output.
+    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize,
+                  sampling: SamplingParams,
+                  eos_token: Option<u32>) -> Result<Receiver<RequestOutput>> {
+        let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (otx, orx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(
+                Request { id, prompt, max_new_tokens, sampling, eos_token },
+                otx,
+            ))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(orx)
+    }
+
+    /// Stop the worker after it drains all in-flight work.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the serving loop on its own thread.
+///
+/// Takes a *factory* rather than a backend: PJRT handles are not `Send`
+/// (the xla crate wraps raw pointers / Rc), so the backend must be
+/// constructed on the worker thread itself. Construction errors are
+/// surfaced synchronously.
+pub fn start_with<B, F>(factory: F, queue_capacity: usize,
+                        seed: u64) -> Result<ServerHandle>
+where
+    B: ModelBackend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
+    let metrics = Arc::new(ServingMetrics::default());
+    metrics.mark_started();
+    let m2 = metrics.clone();
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let worker = std::thread::Builder::new()
+        .name("tenx-coordinator".into())
+        .spawn(move || {
+            let backend = match factory() {
+                Ok(b) => {
+                    let _ = ready_tx.send(Ok(()));
+                    b
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let _ = ready_tx.send(Err(e));
+                    anyhow::bail!("backend init failed: {msg}");
+                }
+            };
+            worker_loop(backend, queue_capacity, seed, m2, rx)
+        })
+        .expect("spawn coordinator");
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("coordinator died during init"))??;
+    Ok(ServerHandle { tx, next_id: AtomicU64::new(1), metrics,
+                      worker: Some(worker) })
+}
+
+/// Convenience for `Send` backends (e.g. the mock): moves it into the
+/// worker directly.
+pub fn start<B: ModelBackend + Send + 'static>(backend: B,
+                                               queue_capacity: usize,
+                                               seed: u64) -> ServerHandle {
+    start_with(move || Ok(backend), queue_capacity, seed)
+        .expect("infallible backend factory")
+}
+
+fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
+                                metrics: Arc<ServingMetrics>,
+                                rx: Receiver<Msg>) -> Result<()> {
+    let mut sched = Scheduler::new(backend, queue_capacity, metrics, seed);
+    let mut waiters: Vec<(RequestId, Sender<RequestOutput>)> = Vec::new();
+    let mut shutting_down = false;
+    loop {
+        // Drain the submission channel: block when idle, poll when busy.
+        if !shutting_down {
+            if sched.has_work() {
+                for msg in rx.try_iter() {
+                    match msg {
+                        Msg::Submit(req, otx) => {
+                            if sched.submit(req.clone()) {
+                                waiters.push((req.id, otx));
+                            } // rejected: dropping otx signals the caller
+                        }
+                        Msg::Shutdown => shutting_down = true,
+                    }
+                }
+            } else {
+                match rx.recv() {
+                    Ok(Msg::Submit(req, otx)) => {
+                        if sched.submit(req.clone()) {
+                            waiters.push((req.id, otx));
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+                }
+            }
+        }
+        if shutting_down && !sched.has_work() {
+            return Ok(());
+        }
+        if sched.has_work() {
+            sched.step()?;
+            for out in sched.take_finished() {
+                if let Some(i) = waiters.iter().position(|(id, _)| *id == out.id) {
+                    let (_, otx) = waiters.swap_remove(i);
+                    let _ = otx.send(out);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+
+    #[test]
+    fn server_round_trip() {
+        let h = start(MockBackend::new(4, 8, 32, 64), 16, 7);
+        let rx1 = h.submit(vec![5], 3, SamplingParams::Greedy, None).unwrap();
+        let rx2 = h.submit(vec![9, 2], 2, SamplingParams::Greedy, None).unwrap();
+        let o1 = rx1.recv().unwrap();
+        let o2 = rx2.recv().unwrap();
+        assert_eq!(o1.tokens.len(), 3);
+        assert_eq!(o2.tokens.len(), 2);
+        assert_eq!(h.metrics.requests_completed.get(), 2);
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn many_concurrent_requests() {
+        let h = start(MockBackend::new(2, 8, 32, 64), 64, 3);
+        let rxs: Vec<_> = (0..20)
+            .map(|i| {
+                h.submit(vec![i as u32 % 50 + 1], 2, SamplingParams::Greedy,
+                         None)
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let out = rx.recv().unwrap();
+            assert_eq!(out.tokens.len(), 2);
+        }
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let h = start(MockBackend::new(2, 8, 32, 64), 16, 1);
+        let rx = h.submit(vec![1, 2], 4, SamplingParams::Greedy, None).unwrap();
+        h.shutdown().unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+    }
+}

@@ -1,0 +1,247 @@
+//! Paper-experiment renderers shared by the CLI, benches and examples:
+//! each function regenerates one table/figure of the paper (see DESIGN.md
+//! §Per-experiment index) and returns a printable report.
+
+use std::path::Path;
+
+use crate::kernels::System;
+use crate::llm::{gen_task, run_eval, TaskKind, Tokenizer};
+use crate::perfmodel::{self, LlamaShapes};
+use crate::runtime::{Engine, EnginePath};
+use crate::target::{Phase, TargetDesc};
+
+/// Paper Table 2 values (tokens/sec on the MILK-V Jupiter).
+pub const PAPER_TABLE2: &[(Phase, usize, System, f64)] = &[
+    (Phase::Prefill, 1, System::LlamaCpp, 0.04),
+    (Phase::Prefill, 1, System::UpstreamIree, 0.14),
+    (Phase::Prefill, 1, System::TenxIree, 0.18),
+    (Phase::Prefill, 8, System::LlamaCpp, 0.11),
+    (Phase::Prefill, 8, System::UpstreamIree, 0.91),
+    (Phase::Prefill, 8, System::TenxIree, 1.89),
+    (Phase::Decode, 1, System::LlamaCpp, 0.03),
+    (Phase::Decode, 1, System::UpstreamIree, 0.02),
+    (Phase::Decode, 1, System::TenxIree, 0.99),
+    (Phase::Decode, 8, System::LlamaCpp, 0.07),
+    (Phase::Decode, 8, System::UpstreamIree, 0.12),
+    (Phase::Decode, 8, System::TenxIree, 2.12),
+];
+
+pub fn paper_table2(phase: Phase, threads: usize, sys: System) -> f64 {
+    PAPER_TABLE2
+        .iter()
+        .find(|(p, t, s, _)| *p == phase && *t == threads && *s == sys)
+        .map(|(_, _, _, v)| *v)
+        .unwrap()
+}
+
+/// **Table 2**: modeled tokens/sec for Llama-3.2-1B on the simulated
+/// Jupiter, side by side with the paper's measurements and the key ratios.
+pub fn table2(target: &TargetDesc, prefill_tokens: usize) -> String {
+    let shapes = LlamaShapes::llama32_1b();
+    let rows = perfmodel::table2_rows(target, &shapes, prefill_tokens, &[1, 8]);
+    let mut s = format!(
+        "== Table 2: {} tokens/sec (model: simulated {}, prompt={}) ==\n",
+        shapes.name, target.name, prefill_tokens
+    );
+    s.push_str(&format!(
+        "{:<8} {:>3} {:<10} {:>12} {:>12} {:>10}\n",
+        "phase", "T", "system", "model tok/s", "paper tok/s", "bound"
+    ));
+    for r in &rows {
+        s.push_str(&format!(
+            "{:<8} {:>3} {:<10} {:>12.3} {:>12.2} {:>10}\n",
+            r.phase.name(), r.threads, r.system.name(), r.tokens_per_sec,
+            paper_table2(r.phase, r.threads, r.system),
+            if r.compute_bound { "compute" } else { "dram" }
+        ));
+    }
+    let get = |phase, t, sys| {
+        rows.iter()
+            .find(|r| r.phase == phase && r.threads == t && r.system == sys)
+            .unwrap()
+            .tokens_per_sec
+    };
+    s.push_str("\nkey ratios (model vs paper):\n");
+    for (label, phase, t, a, b, paper) in [
+        ("decode 10x/IREE @1T", Phase::Decode, 1, System::TenxIree,
+         System::UpstreamIree, 0.99 / 0.02),
+        ("decode 10x/IREE @8T", Phase::Decode, 8, System::TenxIree,
+         System::UpstreamIree, 2.12 / 0.12),
+        ("prefill 10x/IREE @1T", Phase::Prefill, 1, System::TenxIree,
+         System::UpstreamIree, 0.18 / 0.14),
+        ("prefill 10x/IREE @8T", Phase::Prefill, 8, System::TenxIree,
+         System::UpstreamIree, 1.89 / 0.91),
+        ("decode llama.cpp/IREE @1T", Phase::Decode, 1, System::LlamaCpp,
+         System::UpstreamIree, 0.03 / 0.02),
+    ] {
+        let model = get(phase, t, a) / get(phase, t, b);
+        s.push_str(&format!("  {label:<28} model {model:>7.1}x   paper {paper:>6.1}x\n"));
+    }
+    s
+}
+
+/// **Figures 1 & 2**: IREE vs 10x-IREE tokens/sec across thread counts
+/// (prefill = Fig 1, decode = Fig 2), as a plottable series + ASCII chart.
+pub fn figures(target: &TargetDesc, prefill_tokens: usize) -> String {
+    let shapes = LlamaShapes::llama32_1b();
+    let threads: Vec<usize> = (1..=target.cores).collect();
+    let mut s = String::new();
+    for (fig, phase) in [("Figure 1 (prefill)", Phase::Prefill),
+                         ("Figure 2 (decode)", Phase::Decode)] {
+        s.push_str(&format!("\n== {fig}: IREE vs 10x-IREE, tokens/sec by threads ==\n"));
+        s.push_str(&format!("{:<8} {:>12} {:>12} {:>8}\n", "threads",
+                            "IREE", "10x-IREE", "gain"));
+        let mut series = Vec::new();
+        for &t in &threads {
+            let up = perfmodel::phase_perf(System::UpstreamIree, phase, t,
+                                           &shapes, target, prefill_tokens)
+                .tokens_per_sec;
+            let tenx = perfmodel::phase_perf(System::TenxIree, phase, t,
+                                             &shapes, target, prefill_tokens)
+                .tokens_per_sec;
+            s.push_str(&format!("{t:<8} {up:>12.3} {tenx:>12.3} {:>7.1}x\n",
+                                tenx / up));
+            series.push((t, up, tenx));
+        }
+        // ASCII bars scaled to the max value
+        let maxv = series.iter().map(|(_, _, b)| *b).fold(0.0, f64::max);
+        for (t, up, tenx) in series {
+            let bar = |v: f64| "#".repeat(((v / maxv) * 40.0).round() as usize);
+            s.push_str(&format!("{t:>2}T IREE     |{}\n", bar(up)));
+            s.push_str(&format!("{t:>2}T 10x-IREE |{}\n", bar(tenx)));
+        }
+    }
+    s
+}
+
+/// **Table 1**: accuracy equivalence — the same synthetic ARC-like and
+/// GPQA-like task sets evaluated through the reference (baseline-f32)
+/// artifacts and the mmt4d (10x-IREE) artifacts must produce identical
+/// scores, item for item.
+pub fn table1(artifacts_dir: &Path, items_per_task: usize) -> anyhow::Result<String> {
+    let mut reference = Engine::load(artifacts_dir, EnginePath::Baseline)?;
+    let mut tenx = Engine::load(artifacts_dir, EnginePath::Mmt4d)?;
+    let tok = Tokenizer::new(reference.vocab());
+    let max_seq = reference.prefill_seq();
+
+    let mut s = String::from(
+        "== Table 1: accuracy equivalence (reference vs 10x-IREE path) ==\n");
+    s.push_str(&format!("{:<12} {:>10} {:>10} {:>12} {:>10}\n", "benchmark",
+                        "reference", "10x-IREE", "items-agree", "items"));
+    let mut all_equal = true;
+    for kind in [TaskKind::ArcLike, TaskKind::GpqaLike] {
+        let items = gen_task(kind, items_per_task, &tok, max_seq, 40);
+        let r_ref = run_eval(&mut reference, kind, &items)?;
+        let r_tenx = run_eval(&mut tenx, kind, &items)?;
+        let agree = r_ref
+            .predictions
+            .iter()
+            .zip(&r_tenx.predictions)
+            .filter(|(a, b)| a == b)
+            .count();
+        all_equal &= agree == items.len();
+        s.push_str(&format!(
+            "{:<12} {:>9.1}% {:>9.1}% {:>9}/{:<3} {:>8}\n",
+            kind.name(), r_ref.accuracy * 100.0, r_tenx.accuracy * 100.0,
+            agree, items.len(), items.len()
+        ));
+    }
+    s.push_str(&format!(
+        "\npath equivalence: {}\n(paper: ARC_c 59.4% == 59.4%, GPQA 27.2% == 27.2% — \
+         the claim reproduced is per-item score equality between compilation \
+         paths; absolute scores differ because the model here is a tiny \
+         random-init llama, see DESIGN.md §2)\n",
+        if all_equal { "EXACT (all items agree)" } else { "MISMATCH" }
+    ));
+    Ok(s)
+}
+
+/// **A2 ablation**: the tile-size sweet spot (cycles/MAC vs M0), showing
+/// under-utilisation below the paper's choice and spill cost above it.
+pub fn tile_sweep(target: &TargetDesc) -> String {
+    use crate::cachesim::CacheHierarchy;
+    use crate::kernels::{mmt4d_tile_rvv, Mmt4dLayout};
+    use crate::rvv::{Rvv, RvvConfig};
+    use crate::util::f16::F16;
+
+    let vlen = target.vlen_bits().unwrap_or(256);
+    let n0 = vlen / 8;
+    let (n1, k1) = (4usize, 512usize);
+    let mut s = format!(
+        "== Tile sweep (A2): M0 x {n0} x 1 GEMM tiles at VLEN={vlen} ==\n{:<6} {:>10} {:>12} {:>12} {:>8}\n",
+        "M0", "vregs", "cyc/MAC", "spill-insns", "note"
+    );
+    for m0 in [1usize, 2, 4, 6, 8, 10, 12] {
+        let tile = crate::config::manifest::Tile { m0, n0, k0: 1 };
+        let pressure = crate::target::vreg_pressure(tile, vlen);
+        let m1 = 12usize.div_ceil(m0);
+        let lhs_len = m1 * k1 * m0;
+        let rhs_len = n1 * k1 * n0;
+        let out_len = m1 * n1 * m0 * n0;
+        let lhs_addr = 0x1000;
+        let rhs_addr = (lhs_addr + lhs_len * 2 + 63) & !63;
+        let out_addr = (rhs_addr + rhs_len * 2 + 63) & !63;
+        let mut mach = Rvv::new(RvvConfig::with_vlen(vlen),
+                                out_addr + out_len * 4 + 65536)
+            .with_cache(CacheHierarchy::for_target(target));
+        for i in 0..lhs_len {
+            mach.write_f16(lhs_addr + i * 2, F16::from_f32(0.5));
+        }
+        for i in 0..rhs_len {
+            mach.write_f16(rhs_addr + i * 2, F16::from_f32(0.25));
+        }
+        mmt4d_tile_rvv(&mut mach, &Mmt4dLayout {
+            lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+        });
+        let macs = (m1 * m0 * n1 * n0 * k1) as f64;
+        let note = if m0 == 6 {
+            "<- paper"
+        } else if mach.stats.spill_insns > 0 {
+            "spills"
+        } else if m0 < 6 {
+            "underutil"
+        } else {
+            ""
+        };
+        s.push_str(&format!(
+            "{:<6} {:>10} {:>12.3} {:>12} {:>8}\n",
+            m0, pressure, mach.stats.cycles as f64 / macs,
+            mach.stats.spill_insns, note
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_values_complete() {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for t in [1, 8] {
+                for sys in System::all() {
+                    assert!(paper_table2(phase, t, sys) > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_sweep_paper_point_is_best_nonspilling() {
+        let out = tile_sweep(&TargetDesc::milkv_jupiter());
+        assert!(out.contains("<- paper"));
+        // parse cyc/MAC column and confirm M0=6 beats M0=1 and M0=12
+        let rows: Vec<(usize, f64)> = out
+            .lines()
+            .skip(2)
+            .filter_map(|l| {
+                let f: Vec<&str> = l.split_whitespace().collect();
+                Some((f.first()?.parse().ok()?, f.get(2)?.parse().ok()?))
+            })
+            .collect();
+        let get = |m0| rows.iter().find(|(m, _)| *m == m0).unwrap().1;
+        assert!(get(6) < get(1), "M0=6 must beat M0=1 (amortized RHS loads)");
+        assert!(get(6) < get(12), "M0=6 must beat a spilling tile");
+    }
+}

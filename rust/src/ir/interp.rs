@@ -1,0 +1,251 @@
+//! Reference interpreter for the IR.
+//!
+//! Plays the role of IREE's runtime executing a compiled dispatch: structural
+//! ops (pack/unpack/mmt4d/ukernel.call) dispatch into the native microkernel
+//! library; un-lowered contraction ops run naive loops, which is also how the
+//! pipeline-preserves-semantics property tests get their oracle.
+
+use std::collections::BTreeMap;
+
+use super::ops::{Func, OpKind, PackKind, Value};
+use super::tensor::Tensor;
+use super::types::ElemType;
+use crate::ukernel;
+
+/// Execute `f` on `inputs`; returns the values named by `return`.
+pub fn run_func(f: &Func, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+    anyhow::ensure!(inputs.len() == f.num_args(),
+                    "func @{} takes {} args, got {}", f.name, f.num_args(),
+                    inputs.len());
+    for (i, (inp, want)) in inputs.iter().zip(&f.arg_types).enumerate() {
+        anyhow::ensure!(&inp.ty() == want,
+                        "arg {i}: expected {want}, got {}", inp.ty());
+    }
+    let mut env: BTreeMap<Value, Tensor> = BTreeMap::new();
+    for (i, inp) in inputs.iter().enumerate() {
+        env.insert(Value(i as u32), inp.clone());
+    }
+    for op in &f.body {
+        let get = |v: Value| -> anyhow::Result<&Tensor> {
+            env.get(&v).ok_or_else(|| anyhow::anyhow!("missing value {v}"))
+        };
+        let out = match &op.kind {
+            OpKind::Matmul { lhs, rhs } => {
+                let (l, r) = (get(*lhs)?, get(*rhs)?);
+                naive_matmul(l, r)?
+            }
+            OpKind::Matvec { lhs, rhs } => {
+                let (l, r) = (get(*lhs)?, get(*rhs)?);
+                let (m, k) = (l.shape[0], l.shape[1]);
+                let l2 = reshaped(l, vec![m, k]);
+                let r2 = reshaped(r, vec![k, 1]);
+                let c = naive_matmul(&l2, &r2)?;
+                reshaped(&c, vec![m])
+            }
+            OpKind::Vecmat { lhs, rhs } => {
+                let (l, r) = (get(*lhs)?, get(*rhs)?);
+                let (k, n) = (r.shape[0], r.shape[1]);
+                let l2 = reshaped(l, vec![1, k]);
+                let c = naive_matmul(&l2, r)?;
+                reshaped(&c, vec![n])
+            }
+            OpKind::BatchMatmul { lhs, rhs } => {
+                let (l, r) = (get(*lhs)?, get(*rhs)?);
+                let (b, m, k) = (l.shape[0], l.shape[1], l.shape[2]);
+                let n = r.shape[2];
+                let lf = l.to_f32_vec();
+                let rf = r.to_f32_vec();
+                let mut out = vec![0.0f32; b * m * n];
+                for bi in 0..b {
+                    matmul_f32_slices(
+                        &lf[bi * m * k..][..m * k],
+                        &rf[bi * k * n..][..k * n],
+                        &mut out[bi * m * n..][..m * n],
+                        m, k, n,
+                    );
+                }
+                Tensor::f32(vec![b, m, n], out)
+            }
+            OpKind::Pack { src, kind, tile0, tile1 } => {
+                let s = get(*src)?;
+                let uop = match kind {
+                    PackKind::Lhs | PackKind::Acc => ukernel::UkernelOp::PackLhs {
+                        elem: s.elem_type(), m0: *tile0, k0: *tile1,
+                    },
+                    PackKind::Rhs => ukernel::UkernelOp::PackRhs {
+                        elem: s.elem_type(), n0: *tile0, k0: *tile1,
+                    },
+                };
+                ukernel::execute(&uop, &[s], &op.result_type.shape)?
+            }
+            OpKind::Unpack { src } => {
+                let s = get(*src)?;
+                let uop = ukernel::UkernelOp::Unpack {
+                    elem: ElemType::F32, m0: s.shape[2], n0: s.shape[3],
+                };
+                ukernel::execute(&uop, &[s], &op.result_type.shape)?
+            }
+            OpKind::Mmt4d { lhs, rhs } => {
+                let (l, r) = (get(*lhs)?, get(*rhs)?);
+                let uop = ukernel::UkernelOp::Mmt4d {
+                    lhs: l.elem_type(), rhs: r.elem_type(),
+                    out: op.result_type.elem,
+                    m0: l.shape[2], n0: r.shape[2], k0: l.shape[3],
+                };
+                ukernel::execute(&uop, &[l, r], &op.result_type.shape)?
+            }
+            OpKind::Cast { src } => get(*src)?.cast(op.result_type.elem),
+            OpKind::UkernelCall { symbol, args } => {
+                let uop = ukernel::parse_symbol(symbol)?;
+                let tensors: Vec<&Tensor> = args
+                    .iter()
+                    .map(|a| get(*a))
+                    .collect::<anyhow::Result<_>>()?;
+                ukernel::execute(&uop, &tensors, &op.result_type.shape)?
+            }
+            OpKind::Zero => Tensor::zeros(&op.result_type),
+        };
+        anyhow::ensure!(out.ty() == op.result_type,
+                        "{}: computed {} but op declares {}",
+                        op.result, out.ty(), op.result_type);
+        env.insert(op.result, out);
+    }
+    f.results
+        .iter()
+        .map(|r| {
+            env.get(r)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("missing result {r}"))
+        })
+        .collect()
+}
+
+fn reshaped(t: &Tensor, shape: Vec<usize>) -> Tensor {
+    assert_eq!(t.num_elems(), shape.iter().product::<usize>());
+    let mut out = t.clone();
+    out.shape = shape;
+    out
+}
+
+/// Naive matmul with f32 accumulation; result elem is always f32 (the IR's
+/// contraction ops produce the accumulator type, matching linalg semantics
+/// after the cast canonicalization).
+fn naive_matmul(l: &Tensor, r: &Tensor) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(l.shape.len() == 2 && r.shape.len() == 2);
+    let (m, k) = (l.shape[0], l.shape[1]);
+    let n = r.shape[1];
+    anyhow::ensure!(r.shape[0] == k, "K mismatch");
+    let lf = l.to_f32_vec();
+    let rf = r.to_f32_vec();
+    let mut out = vec![0.0f32; m * n];
+    matmul_f32_slices(&lf, &rf, &mut out, m, k, n);
+    Ok(Tensor::f32(vec![m, n], out))
+}
+
+fn matmul_f32_slices(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
+                     n: usize) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a[i * k + l] * b[l * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+    use crate::util::prng::Rng;
+
+    fn rand_f16_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::f16_from_f32(shape, &rng.f32_vec(n, 1.0))
+    }
+
+    #[test]
+    fn matmul_vs_packed_pipeline_same_result() {
+        let text = "\
+func @plain(%0: tensor<10x8xf16>, %1: tensor<8x40xf16>) {
+  %2 = linalg.matmul %0, %1 : tensor<10x40xf32>
+  return %2
+}
+func @packed(%0: tensor<10x8xf16>, %1: tensor<8x40xf16>) {
+  %2 = tensor.pack %0 kind(lhs) tiles(6, 1) : tensor<2x8x6x1xf16>
+  %3 = tensor.pack %1 kind(rhs) tiles(32, 1) : tensor<2x8x32x1xf16>
+  %4 = linalg.mmt4d %2, %3 : tensor<2x2x6x32xf32>
+  %5 = tensor.unpack %4 : tensor<10x40xf32>
+  return %5
+}
+";
+        let m = parse_module(text).unwrap();
+        crate::ir::verify::verify_module(&m).unwrap();
+        let mut rng = Rng::new(17);
+        let a = rand_f16_tensor(&mut rng, vec![10, 8]);
+        let b = rand_f16_tensor(&mut rng, vec![8, 40]);
+        let plain = run_func(m.get("plain").unwrap(), &[a.clone(), b.clone()]).unwrap();
+        let packed = run_func(m.get("packed").unwrap(), &[a, b]).unwrap();
+        // identical f32 accumulation order per element -> exact equality
+        assert_eq!(plain[0].as_f32().unwrap(), packed[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn matvec_and_vecmat() {
+        let text = "\
+func @mv(%0: tensor<4x8xf32>, %1: tensor<8xf32>) {
+  %2 = linalg.matvec %0, %1 : tensor<4xf32>
+  return %2
+}
+func @vm(%0: tensor<8xf32>, %1: tensor<8x4xf32>) {
+  %2 = linalg.vecmat %0, %1 : tensor<4xf32>
+  return %2
+}
+";
+        let m = parse_module(text).unwrap();
+        let a = Tensor::f32(vec![4, 8], (0..32).map(|i| i as f32).collect());
+        let x = Tensor::f32(vec![8], vec![1.0; 8]);
+        let y = run_func(m.get("mv").unwrap(), &[a, x.clone()]).unwrap();
+        // row i sums 8i..8i+7 -> 8*8i + 28
+        assert_eq!(y[0].as_f32().unwrap(), &[28.0, 92.0, 156.0, 220.0]);
+
+        let b = Tensor::f32(vec![8, 4], (0..32).map(|i| (i % 4) as f32).collect());
+        let z = run_func(m.get("vm").unwrap(), &[x, b]).unwrap();
+        assert_eq!(z[0].as_f32().unwrap(), &[0.0, 8.0, 16.0, 24.0]);
+    }
+
+    #[test]
+    fn ukernel_call_dispatch() {
+        let text = "\
+func @uk(%0: tensor<12x8xf16>, %1: tensor<8x32xf16>) {
+  %2 = ukernel.call @iree_uk_pack_lhs_f16_6x1(%0) : tensor<2x8x6x1xf16>
+  %3 = ukernel.call @iree_uk_pack_rhs_f16_32x1(%1) : tensor<1x8x32x1xf16>
+  %4 = ukernel.call @iree_uk_mmt4d_f16f16f32_6x32x1(%2, %3) : tensor<2x1x6x32xf32>
+  %5 = ukernel.call @iree_uk_unpack_f32_6x32(%4) : tensor<12x32xf32>
+  return %5
+}
+func @plain(%0: tensor<12x8xf16>, %1: tensor<8x32xf16>) {
+  %2 = linalg.matmul %0, %1 : tensor<12x32xf32>
+  return %2
+}
+";
+        let m = parse_module(text).unwrap();
+        crate::ir::verify::verify_module(&m).unwrap();
+        let mut rng = Rng::new(23);
+        let a = rand_f16_tensor(&mut rng, vec![12, 8]);
+        let b = rand_f16_tensor(&mut rng, vec![8, 32]);
+        let uk = run_func(m.get("uk").unwrap(), &[a.clone(), b.clone()]).unwrap();
+        let pl = run_func(m.get("plain").unwrap(), &[a, b]).unwrap();
+        assert_eq!(uk[0].as_f32().unwrap(), pl[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn wrong_arg_types_rejected() {
+        let text = "func @f(%0: tensor<2x2xf32>) {\n  return %0\n}\n";
+        let m = parse_module(text).unwrap();
+        let bad = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert!(run_func(m.get("f").unwrap(), &[bad]).is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! A linalg-like tensor IR: the slice of MLIR the paper's pass pipeline
+//! operates on (contraction ops, the pack/mmt4d/unpack trio, ukernel calls),
+//! with a textual format, verifier and reference interpreter.
+
+pub mod interp;
+pub mod ops;
+pub mod parser;
+pub mod printer;
+pub mod tensor;
+pub mod types;
+pub mod verify;
+
+pub use ops::{Func, Module, Op, OpKind, PackKind, Value};
+pub use tensor::{Tensor, TensorData};
+pub use types::{ElemType, TensorType};
+
+/// Build a single-matmul function: the canonical pass-pipeline input
+/// (`C[M,N] = A[M,K] x B[K,N]` on the given element type).
+pub fn build_matmul_func(name: &str, m: usize, k: usize, n: usize,
+                         elem: ElemType) -> Func {
+    let mut f = Func::new(
+        name,
+        vec![
+            TensorType::new(vec![m, k], elem),
+            TensorType::new(vec![k, n], elem),
+        ],
+    );
+    let c = f.push(
+        OpKind::Matmul { lhs: f.arg(0), rhs: f.arg(1) },
+        TensorType::new(vec![m, n], ElemType::F32),
+    );
+    f.results = vec![c];
+    f
+}
+
+/// Build a matvec function (`y[M] = A[M,K] x x[K]`) — the decode-phase shape.
+pub fn build_matvec_func(name: &str, m: usize, k: usize, elem: ElemType) -> Func {
+    let mut f = Func::new(
+        name,
+        vec![
+            TensorType::new(vec![m, k], elem),
+            TensorType::new(vec![k], elem),
+        ],
+    );
+    let y = f.push(
+        OpKind::Matvec { lhs: f.arg(0), rhs: f.arg(1) },
+        TensorType::new(vec![m], ElemType::F32),
+    );
+    f.results = vec![y];
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_verify() {
+        let m = Module {
+            funcs: vec![
+                build_matmul_func("mm", 64, 256, 256, ElemType::F16),
+                build_matvec_func("mv", 512, 256, ElemType::F16),
+            ],
+        };
+        verify::verify_module(&m).unwrap();
+    }
+
+    #[test]
+    fn builder_roundtrip_through_text() {
+        let m = Module {
+            funcs: vec![build_matmul_func("mm", 4, 8, 12, ElemType::F32)],
+        };
+        let text = printer::print_module(&m);
+        assert_eq!(parser::parse_module(&text).unwrap(), m);
+    }
+}

@@ -1,0 +1,240 @@
+//! SSA ops, functions and modules of the linalg-like IR.
+//!
+//! The op set is the slice of MLIR that the paper's pass pipeline touches:
+//! `linalg` contraction ops (`matmul`, `matvec`, `vecmat`, `batch_matmul`),
+//! the mmt4d data-tiling trio (`tensor.pack`, `linalg.mmt4d`,
+//! `tensor.unpack`), element casts, and the terminal lowering target
+//! `ukernel.call` (IREE's `iree_codegen.ukernel.generic`).
+
+use super::types::TensorType;
+
+/// SSA value id. `%0, %1, ...`; function arguments come first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Value(pub u32);
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// Where pack's inner tiles come from, mirroring tensor.pack's
+/// `inner_dims_pos`: Lhs packs rows-major [M,K]->[M1,K1,M0,K0]; Rhs packs the
+/// transpose [K,N]->[N1,K1,N0,K0]; Acc packs [M,N]->[M1,N1,M0,N0].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackKind {
+    Lhs,
+    Rhs,
+    Acc,
+}
+
+impl PackKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PackKind::Lhs => "lhs",
+            PackKind::Rhs => "rhs",
+            PackKind::Acc => "acc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "lhs" => PackKind::Lhs,
+            "rhs" => PackKind::Rhs,
+            "acc" => PackKind::Acc,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// `linalg.matmul` C[M,N] (+)= A[M,K] * B[K,N]
+    Matmul { lhs: Value, rhs: Value },
+    /// `linalg.matvec` y[M] = A[M,K] * x[K]
+    Matvec { lhs: Value, rhs: Value },
+    /// `linalg.vecmat` y[N] = x[K] * B[K,N]
+    Vecmat { lhs: Value, rhs: Value },
+    /// `linalg.batch_matmul` C[B,M,N] = A[B,M,K] * B[B,K,N]
+    BatchMatmul { lhs: Value, rhs: Value },
+    /// `tensor.pack` with mmt4d layout; `tile0 x tile1` are the inner tiles
+    /// ((M0,K0) for Lhs, (N0,K0) for Rhs, (M0,N0) for Acc).
+    Pack { src: Value, kind: PackKind, tile0: usize, tile1: usize },
+    /// `tensor.unpack` back to `[M,N]` (shape carried by the result type).
+    Unpack { src: Value },
+    /// `linalg.mmt4d` on packed operands.
+    Mmt4d { lhs: Value, rhs: Value },
+    /// Element-type cast (`arith.truncf` / `arith.extf`).
+    Cast { src: Value },
+    /// Call into the microkernel registry (terminal lowering form).
+    UkernelCall { symbol: String, args: Vec<Value> },
+    /// Zero-filled tensor (`linalg.fill 0`), used for accumulator init.
+    Zero,
+}
+
+impl OpKind {
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Matmul { .. } => "linalg.matmul",
+            OpKind::Matvec { .. } => "linalg.matvec",
+            OpKind::Vecmat { .. } => "linalg.vecmat",
+            OpKind::BatchMatmul { .. } => "linalg.batch_matmul",
+            OpKind::Pack { .. } => "tensor.pack",
+            OpKind::Unpack { .. } => "tensor.unpack",
+            OpKind::Mmt4d { .. } => "linalg.mmt4d",
+            OpKind::Cast { .. } => "arith.cast",
+            OpKind::UkernelCall { .. } => "ukernel.call",
+            OpKind::Zero => "linalg.zero",
+        }
+    }
+
+    pub fn operands(&self) -> Vec<Value> {
+        match self {
+            OpKind::Matmul { lhs, rhs }
+            | OpKind::Matvec { lhs, rhs }
+            | OpKind::Vecmat { lhs, rhs }
+            | OpKind::BatchMatmul { lhs, rhs }
+            | OpKind::Mmt4d { lhs, rhs } => vec![*lhs, *rhs],
+            OpKind::Pack { src, .. }
+            | OpKind::Unpack { src }
+            | OpKind::Cast { src } => vec![*src],
+            OpKind::UkernelCall { args, .. } => args.clone(),
+            OpKind::Zero => vec![],
+        }
+    }
+
+    /// Remap operand values (used by rewrite passes).
+    pub fn map_operands(&mut self, f: impl Fn(Value) -> Value) {
+        match self {
+            OpKind::Matmul { lhs, rhs }
+            | OpKind::Matvec { lhs, rhs }
+            | OpKind::Vecmat { lhs, rhs }
+            | OpKind::BatchMatmul { lhs, rhs }
+            | OpKind::Mmt4d { lhs, rhs } => {
+                *lhs = f(*lhs);
+                *rhs = f(*rhs);
+            }
+            OpKind::Pack { src, .. }
+            | OpKind::Unpack { src }
+            | OpKind::Cast { src } => *src = f(*src),
+            OpKind::UkernelCall { args, .. } => {
+                for a in args {
+                    *a = f(*a);
+                }
+            }
+            OpKind::Zero => {}
+        }
+    }
+}
+
+/// One SSA op: `result = kind : result_type`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    pub result: Value,
+    pub kind: OpKind,
+    pub result_type: TensorType,
+}
+
+/// A function: typed arguments, a straight-line body (no control flow — the
+/// pass pipeline operates on dispatch regions, which are DAGs in IREE too),
+/// and returned values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Func {
+    pub name: String,
+    pub arg_types: Vec<TensorType>,
+    pub body: Vec<Op>,
+    pub results: Vec<Value>,
+}
+
+impl Func {
+    pub fn new(name: &str, arg_types: Vec<TensorType>) -> Self {
+        Func { name: name.to_string(), arg_types, body: Vec::new(),
+               results: Vec::new() }
+    }
+
+    pub fn num_args(&self) -> usize {
+        self.arg_types.len()
+    }
+
+    /// Value id for argument `i`.
+    pub fn arg(&self, i: usize) -> Value {
+        assert!(i < self.arg_types.len());
+        Value(i as u32)
+    }
+
+    /// Next fresh value id: one past all arguments and op results.
+    pub fn next_value(&self) -> Value {
+        let past_ops = self.body.iter().map(|op| op.result.0 + 1).max().unwrap_or(0);
+        Value(past_ops.max(self.arg_types.len() as u32))
+    }
+
+    /// Append an op, allocating its result id.
+    pub fn push(&mut self, kind: OpKind, result_type: TensorType) -> Value {
+        let id = self.next_value();
+        self.body.push(Op { result: id, kind, result_type });
+        id
+    }
+
+    /// Type of a value (argument or op result).
+    pub fn type_of(&self, v: Value) -> Option<&TensorType> {
+        let idx = v.0 as usize;
+        if idx < self.arg_types.len() {
+            return Some(&self.arg_types[idx]);
+        }
+        self.body.iter().find(|op| op.result == v).map(|op| &op.result_type)
+    }
+
+    pub fn find_op(&self, v: Value) -> Option<&Op> {
+        self.body.iter().find(|op| op.result == v)
+    }
+}
+
+/// A module: a set of functions (IREE: an executable with dispatch entry
+/// points).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Module {
+    pub funcs: Vec<Func>,
+}
+
+impl Module {
+    pub fn get(&self, name: &str) -> Option<&Func> {
+        self.funcs.iter().find(|f| f.name == name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Func> {
+        self.funcs.iter_mut().find(|f| f.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::ElemType;
+
+    fn tt(shape: &[usize], e: ElemType) -> TensorType {
+        TensorType::new(shape.to_vec(), e)
+    }
+
+    #[test]
+    fn push_allocates_sequential_ids() {
+        let mut f = Func::new("t", vec![tt(&[4, 8], ElemType::F16),
+                                        tt(&[8, 16], ElemType::F16)]);
+        let a = f.arg(0);
+        let b = f.arg(1);
+        let c = f.push(OpKind::Matmul { lhs: a, rhs: b },
+                       tt(&[4, 16], ElemType::F32));
+        assert_eq!(c, Value(2));
+        let d = f.push(OpKind::Cast { src: c }, tt(&[4, 16], ElemType::F16));
+        assert_eq!(d, Value(3));
+        assert_eq!(f.type_of(c).unwrap().shape, vec![4, 16]);
+        assert_eq!(f.type_of(a).unwrap().elem, ElemType::F16);
+    }
+
+    #[test]
+    fn operands_and_remap() {
+        let mut k = OpKind::Matmul { lhs: Value(0), rhs: Value(1) };
+        assert_eq!(k.operands(), vec![Value(0), Value(1)]);
+        k.map_operands(|v| Value(v.0 + 10));
+        assert_eq!(k.operands(), vec![Value(10), Value(11)]);
+    }
+}

@@ -1,0 +1,221 @@
+//! Parser for the textual IR (inverse of printer.rs).
+
+use super::ops::{Func, Module, Op, OpKind, PackKind, Value};
+use super::types::{parse_tensor_type, TensorType};
+
+pub fn parse_module(text: &str) -> anyhow::Result<Module> {
+    let mut funcs = Vec::new();
+    let mut lines = text.lines().enumerate().peekable();
+    while let Some((lineno, raw)) = lines.next() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("func @") {
+            let mut func = parse_func_header(rest)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            // Body until the closing brace.
+            loop {
+                let (lno, braw) = lines
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("unterminated func @{}", func.name))?;
+                let bline = braw.trim();
+                if bline.is_empty() || bline.starts_with("//") {
+                    continue;
+                }
+                if bline == "}" {
+                    break;
+                }
+                if let Some(rets) = bline.strip_prefix("return") {
+                    func.results = parse_value_list(rets)
+                        .map_err(|e| anyhow::anyhow!("line {}: {e}", lno + 1))?;
+                    continue;
+                }
+                let op = parse_op(bline)
+                    .map_err(|e| anyhow::anyhow!("line {}: {e}", lno + 1))?;
+                func.body.push(op);
+            }
+            funcs.push(func);
+        } else {
+            anyhow::bail!("line {}: expected `func @...`, got {line:?}", lineno + 1);
+        }
+    }
+    Ok(Module { funcs })
+}
+
+fn parse_func_header(rest: &str) -> anyhow::Result<Func> {
+    // rest: `name(%0: type, %1: type) {`
+    let open = rest
+        .find('(')
+        .ok_or_else(|| anyhow::anyhow!("missing ( in func header"))?;
+    let name = rest[..open].to_string();
+    let close = rest
+        .rfind(')')
+        .ok_or_else(|| anyhow::anyhow!("missing ) in func header"))?;
+    let args_str = &rest[open + 1..close];
+    anyhow::ensure!(rest[close..].trim_end() == ") {",
+                    "func header must end with `) {{`");
+    let mut arg_types = Vec::new();
+    if !args_str.trim().is_empty() {
+        for (i, part) in args_str.split(',').enumerate() {
+            let (v, t) = part
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad arg {part:?}"))?;
+            let got: u32 = v
+                .trim()
+                .strip_prefix('%')
+                .ok_or_else(|| anyhow::anyhow!("bad arg name {v:?}"))?
+                .parse()?;
+            anyhow::ensure!(got == i as u32, "args must be %0, %1, ... in order");
+            arg_types.push(parse_tensor_type(t.trim())?);
+        }
+    }
+    Ok(Func::new(&name, arg_types))
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    Ok(Value(
+        s.trim()
+            .strip_prefix('%')
+            .ok_or_else(|| anyhow::anyhow!("expected %N, got {s:?}"))?
+            .parse()?,
+    ))
+}
+
+fn parse_value_list(s: &str) -> anyhow::Result<Vec<Value>> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(',').map(parse_value).collect()
+}
+
+fn parse_op(line: &str) -> anyhow::Result<Op> {
+    // `%N = MNEMONIC ... : type`
+    let (lhs, rest) = line
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("op must be `%N = ...`"))?;
+    let result = parse_value(lhs)?;
+    let (body, ty) = rest
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow::anyhow!("op missing result type"))?;
+    let result_type: TensorType = parse_tensor_type(ty.trim())?;
+    let body = body.trim();
+    let (mnemonic, operands) = match body.find(' ') {
+        Some(i) => (&body[..i], body[i + 1..].trim()),
+        None => (body, ""),
+    };
+    let kind = match mnemonic {
+        "linalg.matmul" | "linalg.matvec" | "linalg.vecmat"
+        | "linalg.batch_matmul" | "linalg.mmt4d" => {
+            let vs = parse_value_list(operands)?;
+            anyhow::ensure!(vs.len() == 2, "{mnemonic} takes 2 operands");
+            let (lhs, rhs) = (vs[0], vs[1]);
+            match mnemonic {
+                "linalg.matmul" => OpKind::Matmul { lhs, rhs },
+                "linalg.matvec" => OpKind::Matvec { lhs, rhs },
+                "linalg.vecmat" => OpKind::Vecmat { lhs, rhs },
+                "linalg.batch_matmul" => OpKind::BatchMatmul { lhs, rhs },
+                _ => OpKind::Mmt4d { lhs, rhs },
+            }
+        }
+        "tensor.pack" => {
+            // `%src kind(lhs) tiles(6, 1)`
+            let (src_str, rest) = operands
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("pack needs kind+tiles"))?;
+            let src = parse_value(src_str)?;
+            let kind_str = extract_paren(rest, "kind")?;
+            let kind = PackKind::parse(kind_str.trim())
+                .ok_or_else(|| anyhow::anyhow!("bad pack kind {kind_str:?}"))?;
+            let tiles_str = extract_paren(rest, "tiles")?;
+            let tiles: Vec<usize> = tiles_str
+                .split(',')
+                .map(|t| t.trim().parse())
+                .collect::<Result<_, _>>()?;
+            anyhow::ensure!(tiles.len() == 2, "tiles(a, b)");
+            OpKind::Pack { src, kind, tile0: tiles[0], tile1: tiles[1] }
+        }
+        "tensor.unpack" => OpKind::Unpack { src: parse_value(operands)? },
+        "arith.cast" => OpKind::Cast { src: parse_value(operands)? },
+        "linalg.zero" => {
+            anyhow::ensure!(operands.is_empty(), "zero takes no operands");
+            OpKind::Zero
+        }
+        "ukernel.call" => {
+            // `@symbol(%a, %b)`
+            let sym_body = operands
+                .strip_prefix('@')
+                .ok_or_else(|| anyhow::anyhow!("ukernel.call needs @symbol"))?;
+            let open = sym_body
+                .find('(')
+                .ok_or_else(|| anyhow::anyhow!("ukernel.call needs (args)"))?;
+            let symbol = sym_body[..open].to_string();
+            let args_str = sym_body[open + 1..]
+                .strip_suffix(')')
+                .ok_or_else(|| anyhow::anyhow!("unterminated ukernel args"))?;
+            OpKind::UkernelCall { symbol, args: parse_value_list(args_str)? }
+        }
+        other => anyhow::bail!("unknown op {other:?}"),
+    };
+    Ok(Op { result, kind, result_type })
+}
+
+/// Extract `X` from `... name(X) ...`.
+fn extract_paren<'a>(s: &'a str, name: &str) -> anyhow::Result<&'a str> {
+    let start = s
+        .find(&format!("{name}("))
+        .ok_or_else(|| anyhow::anyhow!("missing {name}(...)"))?
+        + name.len()
+        + 1;
+    let end = s[start..]
+        .find(')')
+        .ok_or_else(|| anyhow::anyhow!("unterminated {name}(...)"))?;
+    Ok(&s[start..start + end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_module;
+    use crate::ir::types::ElemType;
+
+    #[test]
+    fn roundtrip_handwritten() {
+        let text = "\
+func @gemm(%0: tensor<4x8xf16>, %1: tensor<8x16xf16>) {
+  %2 = linalg.matmul %0, %1 : tensor<4x16xf32>
+  %3 = tensor.pack %2 kind(acc) tiles(6, 32) : tensor<1x1x6x32xf32>
+  %4 = tensor.unpack %3 : tensor<4x16xf32>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32(%0, %1) : tensor<4x16xf32>
+  return %4, %5
+}
+";
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.funcs.len(), 1);
+        let f = &m.funcs[0];
+        assert_eq!(f.body.len(), 4);
+        assert_eq!(f.results.len(), 2);
+        assert_eq!(f.arg_types[0].elem, ElemType::F16);
+        // printer -> parser round-trip is exact
+        let printed = print_module(&m);
+        let m2 = parse_module(&printed).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn empty_args_func() {
+        let text = "func @noargs() {\n  %0 = linalg.zero : tensor<4xf32>\n  return %0\n}\n";
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.funcs[0].num_args(), 0);
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(parse_module("func @f(%1: tensor<2xf32>) {\n}\n").is_err());
+        assert!(parse_module("garbage\n").is_err());
+        assert!(parse_module("func @f() {\n  %0 = bogus.op : tensor<1xf32>\n  return\n}\n").is_err());
+        assert!(parse_module("func @f() {\n  %0 = linalg.zero : tensor<1xf32>\n").is_err());
+    }
+}

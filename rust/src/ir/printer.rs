@@ -1,0 +1,123 @@
+//! Textual form of the IR (MLIR-flavoured). `print_module` and
+//! `parser::parse_module` round-trip exactly — checked by property tests.
+//!
+//! Example:
+//! ```text
+//! func @gemm(%0: tensor<64x256xf16>, %1: tensor<256x256xf16>) {
+//!   %2 = linalg.matmul %0, %1 : tensor<64x256xf32>
+//!   return %2
+//! }
+//! ```
+
+use super::ops::{Func, Module, Op, OpKind};
+
+pub fn print_module(m: &Module) -> String {
+    let mut out = String::new();
+    for (i, f) in m.funcs.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        print_func(f, &mut out);
+    }
+    out
+}
+
+pub fn print_func(f: &Func, out: &mut String) {
+    out.push_str(&format!("func @{}(", f.name));
+    for (i, t) in f.arg_types.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("%{i}: {t}"));
+    }
+    out.push_str(") {\n");
+    for op in &f.body {
+        out.push_str("  ");
+        print_op(op, out);
+        out.push('\n');
+    }
+    out.push_str("  return");
+    for (i, r) in f.results.iter().enumerate() {
+        out.push_str(if i == 0 { " " } else { ", " });
+        out.push_str(&r.to_string());
+    }
+    out.push_str("\n}\n");
+}
+
+fn print_op(op: &Op, out: &mut String) {
+    out.push_str(&format!("{} = ", op.result));
+    match &op.kind {
+        OpKind::Matmul { lhs, rhs } => {
+            out.push_str(&format!("linalg.matmul {lhs}, {rhs}"));
+        }
+        OpKind::Matvec { lhs, rhs } => {
+            out.push_str(&format!("linalg.matvec {lhs}, {rhs}"));
+        }
+        OpKind::Vecmat { lhs, rhs } => {
+            out.push_str(&format!("linalg.vecmat {lhs}, {rhs}"));
+        }
+        OpKind::BatchMatmul { lhs, rhs } => {
+            out.push_str(&format!("linalg.batch_matmul {lhs}, {rhs}"));
+        }
+        OpKind::Pack { src, kind, tile0, tile1 } => {
+            out.push_str(&format!(
+                "tensor.pack {src} kind({}) tiles({tile0}, {tile1})",
+                kind.name()
+            ));
+        }
+        OpKind::Unpack { src } => {
+            out.push_str(&format!("tensor.unpack {src}"));
+        }
+        OpKind::Mmt4d { lhs, rhs } => {
+            out.push_str(&format!("linalg.mmt4d {lhs}, {rhs}"));
+        }
+        OpKind::Cast { src } => {
+            out.push_str(&format!("arith.cast {src}"));
+        }
+        OpKind::UkernelCall { symbol, args } => {
+            out.push_str(&format!("ukernel.call @{symbol}("));
+            for (i, a) in args.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&a.to_string());
+            }
+            out.push(')');
+        }
+        OpKind::Zero => out.push_str("linalg.zero"),
+    }
+    out.push_str(&format!(" : {}", op.result_type));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ops::{OpKind, PackKind};
+    use crate::ir::types::{ElemType, TensorType};
+
+    #[test]
+    fn prints_expected_text() {
+        let mut f = Func::new(
+            "gemm",
+            vec![
+                TensorType::new(vec![4, 8], ElemType::F16),
+                TensorType::new(vec![8, 16], ElemType::F16),
+            ],
+        );
+        let c = f.push(
+            OpKind::Matmul { lhs: f.arg(0), rhs: f.arg(1) },
+            TensorType::new(vec![4, 16], ElemType::F32),
+        );
+        let p = f.push(
+            OpKind::Pack { src: c, kind: PackKind::Lhs, tile0: 6, tile1: 1 },
+            TensorType::new(vec![1, 16, 6, 1], ElemType::F32),
+        );
+        f.results = vec![p];
+        let m = Module { funcs: vec![f] };
+        let text = print_module(&m);
+        assert!(text.contains("func @gemm(%0: tensor<4x8xf16>, %1: tensor<8x16xf16>)"));
+        assert!(text.contains("%2 = linalg.matmul %0, %1 : tensor<4x16xf32>"));
+        assert!(text.contains("%3 = tensor.pack %2 kind(lhs) tiles(6, 1) : tensor<1x16x6x1xf32>"));
+        assert!(text.contains("return %3"));
+    }
+}

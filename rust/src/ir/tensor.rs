@@ -1,0 +1,154 @@
+//! Runtime tensors for the IR interpreter and the ukernel library.
+
+use crate::util::f16::F16;
+
+use super::types::{ElemType, TensorType};
+
+/// A shaped, typed, row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    F16(Vec<F16>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn f16(shape: Vec<usize>, data: Vec<F16>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F16(data) }
+    }
+
+    pub fn f16_from_f32(shape: Vec<usize>, data: &[f32]) -> Tensor {
+        Tensor::f16(shape, data.iter().map(|&v| F16::from_f32(v)).collect())
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(ty: &TensorType) -> Tensor {
+        let n = ty.num_elems();
+        let data = match ty.elem {
+            ElemType::F32 => TensorData::F32(vec![0.0; n]),
+            ElemType::F16 | ElemType::BF16 => TensorData::F16(vec![F16::ZERO; n]),
+            ElemType::I32 => TensorData::I32(vec![0; n]),
+            ElemType::I8 => TensorData::I8(vec![0; n]),
+        };
+        Tensor { shape: ty.shape.clone(), data }
+    }
+
+    pub fn elem_type(&self) -> ElemType {
+        match &self.data {
+            TensorData::F32(_) => ElemType::F32,
+            TensorData::F16(_) => ElemType::F16,
+            TensorData::I32(_) => ElemType::I32,
+            TensorData::I8(_) => ElemType::I8,
+        }
+    }
+
+    pub fn ty(&self) -> TensorType {
+        TensorType::new(self.shape.clone(), self.elem_type())
+    }
+
+    pub fn num_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Widen/convert to a flat f32 vector (exact for f16/i8/i32-in-range).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.data {
+            TensorData::F32(v) => v.clone(),
+            TensorData::F16(v) => v.iter().map(|h| h.to_f32()).collect(),
+            TensorData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::I8(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f16(&self) -> Option<&[F16]> {
+        match &self.data {
+            TensorData::F16(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i8(&self) -> Option<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I8(data) }
+    }
+
+    /// Cast to another element type (f32<->f16 rounding as hardware would).
+    pub fn cast(&self, to: ElemType) -> Tensor {
+        let f32s = self.to_f32_vec();
+        let data = match to {
+            ElemType::F32 => TensorData::F32(f32s),
+            ElemType::F16 | ElemType::BF16 => {
+                TensorData::F16(f32s.iter().map(|&v| F16::from_f32(v)).collect())
+            }
+            ElemType::I32 => TensorData::I32(f32s.iter().map(|&v| v as i32).collect()),
+            ElemType::I8 => TensorData::I8(f32s.iter().map(|&v| v as i8).collect()),
+        };
+        Tensor { shape: self.shape.clone(), data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_types() {
+        let t = Tensor::zeros(&TensorType::new(vec![2, 3], ElemType::F16));
+        assert_eq!(t.num_elems(), 6);
+        assert_eq!(t.elem_type(), ElemType::F16);
+        assert_eq!(t.to_f32_vec(), vec![0.0; 6]);
+    }
+
+    #[test]
+    fn cast_roundtrip_f16() {
+        let t = Tensor::f32(vec![3], vec![0.5, -1.25, 3.0]);
+        let h = t.cast(ElemType::F16);
+        assert_eq!(h.elem_type(), ElemType::F16);
+        assert_eq!(h.to_f32_vec(), vec![0.5, -1.25, 3.0]); // exact values
+        assert_eq!(h.cast(ElemType::F32).as_f32().unwrap(), &[0.5, -1.25, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Element and tensor types for the linalg-like IR.
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElemType {
+    F32,
+    F16,
+    BF16,
+    I32,
+    I8,
+}
+
+impl ElemType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElemType::F32 | ElemType::I32 => 4,
+            ElemType::F16 | ElemType::BF16 => 2,
+            ElemType::I8 => 1,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, ElemType::F32 | ElemType::F16 | ElemType::BF16)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F32 => "f32",
+            ElemType::F16 => "f16",
+            ElemType::BF16 => "bf16",
+            ElemType::I32 => "i32",
+            ElemType::I8 => "i8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ElemType> {
+        Some(match s {
+            "f32" => ElemType::F32,
+            "f16" => ElemType::F16,
+            "bf16" => ElemType::BF16,
+            "i32" => ElemType::I32,
+            "i8" => ElemType::I8,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for ElemType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A statically-shaped ranked tensor type, e.g. `tensor<64x256xf16>`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub shape: Vec<usize>,
+    pub elem: ElemType,
+}
+
+impl TensorType {
+    pub fn new(shape: Vec<usize>, elem: ElemType) -> Self {
+        TensorType { shape, elem }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn num_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.num_elems() * self.elem.size_bytes()
+    }
+}
+
+impl fmt::Display for TensorType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tensor<")?;
+        for d in &self.shape {
+            write!(f, "{d}x")?;
+        }
+        write!(f, "{}>", self.elem)
+    }
+}
+
+/// Parse `tensor<AxBx..xELEM>`.
+pub fn parse_tensor_type(s: &str) -> anyhow::Result<TensorType> {
+    let body = s
+        .strip_prefix("tensor<")
+        .and_then(|t| t.strip_suffix('>'))
+        .ok_or_else(|| anyhow::anyhow!("bad tensor type {s:?}"))?;
+    let parts: Vec<&str> = body.split('x').collect();
+    anyhow::ensure!(!parts.is_empty(), "empty tensor type");
+    let elem = ElemType::parse(parts[parts.len() - 1])
+        .ok_or_else(|| anyhow::anyhow!("bad element type in {s:?}"))?;
+    let shape = parts[..parts.len() - 1]
+        .iter()
+        .map(|d| d.parse().map_err(|e| anyhow::anyhow!("bad dim {d:?}: {e}")))
+        .collect::<anyhow::Result<Vec<usize>>>()?;
+    Ok(TensorType { shape, elem })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_roundtrip() {
+        for t in [
+            TensorType::new(vec![64, 256], ElemType::F16),
+            TensorType::new(vec![1], ElemType::I32),
+            TensorType::new(vec![2, 3, 4, 5], ElemType::F32),
+            TensorType::new(vec![], ElemType::F32),
+        ] {
+            let s = t.to_string();
+            assert_eq!(parse_tensor_type(&s).unwrap(), t, "{s}");
+        }
+    }
+
+    #[test]
+    fn sizes() {
+        let t = TensorType::new(vec![4, 8], ElemType::F16);
+        assert_eq!(t.num_elems(), 32);
+        assert_eq!(t.size_bytes(), 64);
+        assert_eq!(t.rank(), 2);
+    }
+
+    #[test]
+    fn bad_types_rejected() {
+        assert!(parse_tensor_type("tensor<axf32>").is_err());
+        assert!(parse_tensor_type("tensor<4x8>").is_err());
+        assert!(parse_tensor_type("vector<4xf32>").is_err());
+    }
+}

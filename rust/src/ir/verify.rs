@@ -1,0 +1,196 @@
+//! IR verifier: SSA dominance (straight-line: def-before-use), shape and
+//! element-type rules per op. Passes run the verifier after every rewrite in
+//! debug builds and in all tests.
+
+use super::ops::{Func, Module, Op, OpKind, PackKind, Value};
+use super::types::TensorType;
+use crate::ukernel;
+
+pub fn verify_module(m: &Module) -> anyhow::Result<()> {
+    for f in &m.funcs {
+        verify_func(f).map_err(|e| anyhow::anyhow!("func @{}: {e}", f.name))?;
+    }
+    Ok(())
+}
+
+pub fn verify_func(f: &Func) -> anyhow::Result<()> {
+    let mut defined: Vec<Value> = (0..f.arg_types.len() as u32).map(Value).collect();
+    for op in &f.body {
+        for used in op.kind.operands() {
+            anyhow::ensure!(
+                defined.contains(&used),
+                "{} uses undefined value {used}", op.result
+            );
+        }
+        anyhow::ensure!(
+            !defined.contains(&op.result),
+            "value {} redefined", op.result
+        );
+        verify_op(f, op).map_err(|e| anyhow::anyhow!("{} = {}: {e}",
+                                                     op.result,
+                                                     op.kind.mnemonic()))?;
+        defined.push(op.result);
+    }
+    for r in &f.results {
+        anyhow::ensure!(defined.contains(r), "returned value {r} undefined");
+    }
+    Ok(())
+}
+
+fn ty<'f>(f: &'f Func, v: Value) -> anyhow::Result<&'f TensorType> {
+    f.type_of(v).ok_or_else(|| anyhow::anyhow!("no type for {v}"))
+}
+
+fn verify_op(f: &Func, op: &Op) -> anyhow::Result<()> {
+    let rt = &op.result_type;
+    match &op.kind {
+        OpKind::Matmul { lhs, rhs } => {
+            let (l, r) = (ty(f, *lhs)?, ty(f, *rhs)?);
+            anyhow::ensure!(l.rank() == 2 && r.rank() == 2, "operands must be 2-d");
+            anyhow::ensure!(l.shape[1] == r.shape[0], "K mismatch: {l} vs {r}");
+            anyhow::ensure!(rt.shape == vec![l.shape[0], r.shape[1]],
+                            "result shape {rt} wrong for {l} x {r}");
+            anyhow::ensure!(l.elem == r.elem, "mixed operand dtypes");
+        }
+        OpKind::Matvec { lhs, rhs } => {
+            let (l, r) = (ty(f, *lhs)?, ty(f, *rhs)?);
+            anyhow::ensure!(l.rank() == 2 && r.rank() == 1, "matvec is [M,K] x [K]");
+            anyhow::ensure!(l.shape[1] == r.shape[0], "K mismatch");
+            anyhow::ensure!(rt.shape == vec![l.shape[0]], "result must be [M]");
+        }
+        OpKind::Vecmat { lhs, rhs } => {
+            let (l, r) = (ty(f, *lhs)?, ty(f, *rhs)?);
+            anyhow::ensure!(l.rank() == 1 && r.rank() == 2, "vecmat is [K] x [K,N]");
+            anyhow::ensure!(l.shape[0] == r.shape[0], "K mismatch");
+            anyhow::ensure!(rt.shape == vec![r.shape[1]], "result must be [N]");
+        }
+        OpKind::BatchMatmul { lhs, rhs } => {
+            let (l, r) = (ty(f, *lhs)?, ty(f, *rhs)?);
+            anyhow::ensure!(l.rank() == 3 && r.rank() == 3, "operands must be 3-d");
+            anyhow::ensure!(l.shape[0] == r.shape[0], "batch mismatch");
+            anyhow::ensure!(l.shape[2] == r.shape[1], "K mismatch");
+            anyhow::ensure!(rt.shape == vec![l.shape[0], l.shape[1], r.shape[2]],
+                            "bad batch_matmul result shape");
+        }
+        OpKind::Pack { src, kind, tile0, tile1 } => {
+            let s = ty(f, *src)?;
+            anyhow::ensure!(s.rank() == 2, "pack source must be 2-d");
+            anyhow::ensure!(*tile0 > 0 && *tile1 > 0, "zero tile");
+            let (d0, d1) = (s.shape[0], s.shape[1]);
+            let expect = match kind {
+                // [M,K] -> [M1,K1,M0,K0]
+                PackKind::Lhs | PackKind::Acc => vec![
+                    d0.div_ceil(*tile0), d1.div_ceil(*tile1), *tile0, *tile1,
+                ],
+                // [K,N] -> [N1,K1,N0,K0]
+                PackKind::Rhs => vec![
+                    d1.div_ceil(*tile0), d0.div_ceil(*tile1), *tile0, *tile1,
+                ],
+            };
+            anyhow::ensure!(rt.shape == expect,
+                            "pack result {rt}, expected {expect:?}");
+            anyhow::ensure!(rt.elem == s.elem, "pack cannot change dtype");
+        }
+        OpKind::Unpack { src } => {
+            let s = ty(f, *src)?;
+            anyhow::ensure!(s.rank() == 4, "unpack source must be 4-d");
+            anyhow::ensure!(rt.rank() == 2, "unpack result must be 2-d");
+            anyhow::ensure!(rt.shape[0] <= s.shape[0] * s.shape[2]
+                            && rt.shape[0] > (s.shape[0] - 1) * s.shape[2],
+                            "unpack M inconsistent with tiling");
+            anyhow::ensure!(rt.shape[1] <= s.shape[1] * s.shape[3]
+                            && rt.shape[1] > (s.shape[1] - 1) * s.shape[3],
+                            "unpack N inconsistent with tiling");
+        }
+        OpKind::Mmt4d { lhs, rhs } => {
+            let (l, r) = (ty(f, *lhs)?, ty(f, *rhs)?);
+            anyhow::ensure!(l.rank() == 4 && r.rank() == 4, "mmt4d operands 4-d");
+            anyhow::ensure!(l.shape[1] == r.shape[1] && l.shape[3] == r.shape[3],
+                            "K tiling mismatch: {l} vs {r}");
+            anyhow::ensure!(
+                rt.shape == vec![l.shape[0], r.shape[0], l.shape[2], r.shape[2]],
+                "mmt4d result shape {rt} wrong"
+            );
+        }
+        OpKind::Cast { src } => {
+            let s = ty(f, *src)?;
+            anyhow::ensure!(s.shape == rt.shape, "cast cannot reshape");
+            anyhow::ensure!(s.elem != rt.elem, "cast must change dtype");
+        }
+        OpKind::UkernelCall { symbol, args } => {
+            let op = ukernel::parse_symbol(symbol)?;
+            let n_expected = match op {
+                ukernel::UkernelOp::Mmt4d { .. } => 2,
+                _ => 1,
+            };
+            anyhow::ensure!(args.len() == n_expected,
+                            "{symbol} takes {n_expected} args");
+            for a in args {
+                ty(f, *a)?;
+            }
+        }
+        OpKind::Zero => {}
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    fn ok(text: &str) {
+        verify_module(&parse_module(text).unwrap()).unwrap();
+    }
+
+    fn bad(text: &str, needle: &str) {
+        let err = verify_module(&parse_module(text).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(needle), "error {err:?} missing {needle:?}");
+    }
+
+    #[test]
+    fn valid_pipeline_verifies() {
+        ok("\
+func @f(%0: tensor<10x8xf16>, %1: tensor<8x40xf16>) {
+  %2 = tensor.pack %0 kind(lhs) tiles(6, 1) : tensor<2x8x6x1xf16>
+  %3 = tensor.pack %1 kind(rhs) tiles(32, 1) : tensor<2x8x32x1xf16>
+  %4 = linalg.mmt4d %2, %3 : tensor<2x2x6x32xf32>
+  %5 = tensor.unpack %4 : tensor<10x40xf32>
+  return %5
+}
+");
+    }
+
+    #[test]
+    fn catches_bad_shapes() {
+        bad("func @f(%0: tensor<4x8xf16>, %1: tensor<9x4xf16>) {\n  %2 = linalg.matmul %0, %1 : tensor<4x4xf32>\n  return %2\n}\n",
+            "K mismatch");
+        bad("func @f(%0: tensor<4x8xf16>, %1: tensor<8x4xf16>) {\n  %2 = linalg.matmul %0, %1 : tensor<4x5xf32>\n  return %2\n}\n",
+            "result shape");
+        bad("func @f(%0: tensor<4x8xf16>) {\n  %1 = tensor.pack %0 kind(lhs) tiles(6, 1) : tensor<2x8x6x1xf16>\n  return %1\n}\n",
+            "pack result");
+    }
+
+    #[test]
+    fn catches_ssa_violations() {
+        bad("func @f(%0: tensor<4x8xf16>) {\n  %1 = arith.cast %2 : tensor<4x8xf32>\n  %2 = arith.cast %0 : tensor<4x8xf32>\n  return %2\n}\n",
+            "undefined");
+        bad("func @f(%0: tensor<4x8xf16>) {\n  return %3\n}\n", "undefined");
+    }
+
+    #[test]
+    fn catches_bad_ukernel_arity() {
+        bad("func @f(%0: tensor<1x8x6x1xf16>) {\n  %1 = ukernel.call @iree_uk_mmt4d_f16f16f32_6x32x1(%0) : tensor<1x1x6x32xf32>\n  return %1\n}\n",
+            "takes 2 args");
+    }
+
+    #[test]
+    fn cast_rules() {
+        bad("func @f(%0: tensor<4x8xf16>) {\n  %1 = arith.cast %0 : tensor<4x8xf16>\n  return %1\n}\n",
+            "must change dtype");
+        bad("func @f(%0: tensor<4x8xf16>) {\n  %1 = arith.cast %0 : tensor<8x4xf32>\n  return %1\n}\n",
+            "cannot reshape");
+    }
+}

@@ -1,0 +1,216 @@
+//! The paper's RVV mmt4d microkernels, expressed as instruction streams on
+//! the simulator.
+//!
+//! Prefill (GEMM) kernel — tiles (6, VLEN/8, 1):
+//!   per (i1, j1) tile: zero 6 widened accumulator groups; for each k:
+//!     vle16 the N0-wide RHS strip once, then 6 x { flh lhs scalar,
+//!     vfwmacc.vf } — the RHS load is amortized over the 6 rows, accumulators
+//!     never leave the register file. 6*4 + 2 + 1 = 27 of 32 vregs live.
+//!
+//! Decode (GEMV) kernel — tiles (1, VLEN/4, 1):
+//!   one row in flight, double-width strip: per k one vle16 (LMUL=4) and one
+//!   vfwmacc.vf into an LMUL=8 accumulator group.
+//!
+//! `mmt4d_tile_rvv` generalizes over M0/N0 and *emits spill traffic* when the
+//! accumulator tile exceeds the register file — the mechanism behind the
+//! paper's "bigger tile sizes increase register pressure that causes register
+//! spills and reloads" (reproduced in benches/tile_sweep.rs).
+
+use crate::rvv::{Rvv, Sew};
+
+/// Memory layout descriptor for one packed mmt4d problem resident in the
+/// simulator's memory.
+#[derive(Debug, Clone, Copy)]
+pub struct Mmt4dLayout {
+    pub lhs_addr: usize, // [M1, K1, M0, 1] f16
+    pub rhs_addr: usize, // [N1, K1, N0, 1] f16
+    pub out_addr: usize, // [M1, N1, M0, N0] f32
+    pub m1: usize,
+    pub n1: usize,
+    pub k1: usize,
+    pub m0: usize,
+    pub n0: usize,
+}
+
+/// Scratch area for spills (past the operand buffers).
+const SPILL_BASE_OFFSET: usize = 64;
+
+/// Generic mmt4d tile kernel with automatic spill modelling.
+pub fn mmt4d_tile_rvv(m: &mut Rvv, l: &Mmt4dLayout) {
+    let vlen = m.cfg.vlen_bits;
+    // e16 LMUL for an N0-wide f16 strip, and its widened e32 group size.
+    let lmul16 = (l.n0 * 16).div_ceil(vlen).next_power_of_two();
+    let lmul32 = lmul16 * 2;
+    assert!(lmul16 <= 4, "N0 {} too wide for VLEN {vlen}", l.n0);
+
+    // Register allocation (groups aligned to their LMUL):
+    //   v0..                  RHS strip        (lmul16 regs)
+    //   v[lmul32]..           spill scratch    (lmul32 regs)
+    //   v[2*lmul32]..         accumulator rows (lmul32 regs each)
+    // For the paper's prefill tile at VLEN=256 this is exactly rhs v0-v1,
+    // scratch v4-v7, acc v8..v31 = 6 resident rows.
+    let rhs_v = 0;
+    let scratch_v = lmul32;
+    let acc_base = 2 * lmul32;
+    let regs_for_acc = m.cfg.vector_regs - acc_base;
+    let resident_rows = (regs_for_acc / lmul32).min(l.m0);
+    let spill_rows = l.m0 - resident_rows;
+    let spill_base = m.mem.len() - SPILL_BASE_OFFSET - spill_rows.max(1) * l.n0 * 4;
+
+    for i1 in 0..l.m1 {
+        for j1 in 0..l.n1 {
+            m.vsetvli(l.n0, Sew::E16, lmul16);
+            // zero accumulators (resident) / zero spill slots (memory)
+            for r in 0..resident_rows {
+                m.vzero_f32(acc_base + r * lmul32, l.n0, lmul32);
+            }
+            for s in 0..spill_rows {
+                m.vzero_f32(scratch_v, l.n0, lmul32);
+                m.vse32(scratch_v, spill_base + s * l.n0 * 4, l.n0, lmul32);
+                m.stats.spill_insns += 1;
+            }
+            for k in 0..l.k1 {
+                let rhs_tile = l.rhs_addr + ((j1 * l.k1 + k) * l.n0) * 2;
+                m.vle16(rhs_v, rhs_tile);
+                let lhs_col = l.lhs_addr + ((i1 * l.k1 + k) * l.m0) * 2;
+                for r in 0..l.m0 {
+                    m.flh(1, lhs_col + r * 2);
+                    if r < resident_rows {
+                        m.vfwmacc_vf(acc_base + r * lmul32, 1, rhs_v);
+                    } else {
+                        // Spilled row: reload, update, store back.
+                        let slot = spill_base + (r - resident_rows) * l.n0 * 4;
+                        m.vle32_raw(scratch_v, slot, l.n0, lmul32);
+                        m.vfwmacc_vf(scratch_v, 1, rhs_v);
+                        m.vse32(scratch_v, slot, l.n0, lmul32);
+                        m.stats.spill_insns += 2;
+                    }
+                }
+                m.scalar_ops(2); // k-loop: addi + bnez
+            }
+            // write the tile out
+            let out_tile = l.out_addr + ((i1 * l.n1 + j1) * l.m0 * l.n0) * 4;
+            for r in 0..l.m0 {
+                if r < resident_rows {
+                    m.vse32(acc_base + r * lmul32, out_tile + r * l.n0 * 4,
+                            l.n0, lmul32);
+                } else {
+                    let slot = spill_base + (r - resident_rows) * l.n0 * 4;
+                    m.vle32_raw(scratch_v, slot, l.n0, lmul32);
+                    m.vse32(scratch_v, out_tile + r * l.n0 * 4, l.n0, lmul32);
+                    m.stats.spill_insns += 1;
+                }
+            }
+            m.scalar_ops(3); // tile-loop overhead
+        }
+    }
+}
+
+/// The paper's prefill kernel: tiles (6, VLEN/8, 1).
+pub fn mmt4d_prefill_rvv(m: &mut Rvv, lhs_addr: usize, rhs_addr: usize,
+                         out_addr: usize, m1: usize, n1: usize, k1: usize) {
+    let n0 = m.cfg.vlen_bits / 8;
+    mmt4d_tile_rvv(m, &Mmt4dLayout {
+        lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0: 6, n0,
+    });
+}
+
+/// The paper's decode kernel: tiles (1, VLEN/4, 1).
+pub fn mmt4d_decode_rvv(m: &mut Rvv, lhs_addr: usize, rhs_addr: usize,
+                        out_addr: usize, n1: usize, k1: usize) {
+    let n0 = m.cfg.vlen_bits / 4;
+    mmt4d_tile_rvv(m, &Mmt4dLayout {
+        lhs_addr, rhs_addr, out_addr, m1: 1, n1, k1, m0: 1, n0,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rvv::RvvConfig;
+    use crate::ukernel::{self, Mmt4dParams};
+    use crate::util::f16::F16;
+    use crate::util::prng::Rng;
+
+    /// Run the simulated kernel and the native ukernel on the same packed
+    /// data; results must be bit-identical (same accumulation order).
+    fn check_against_native(m0: usize, n0_of: fn(usize) -> usize, vlen: usize,
+                            m1: usize, n1: usize, k1: usize) -> crate::rvv::ExecStats {
+        let n0 = n0_of(vlen);
+        let p = Mmt4dParams { m1, n1, k1, m0, n0, k0: 1, accumulate: false };
+        let mut rng = Rng::new(42);
+        let lhs: Vec<F16> = (0..p.lhs_len())
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let rhs: Vec<F16> = (0..p.rhs_len())
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let mut want = vec![0.0f32; p.out_len()];
+        ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut want, &p);
+
+        let lhs_addr = 0x1000;
+        let rhs_addr = lhs_addr + lhs.len() * 2;
+        let out_addr = (rhs_addr + rhs.len() * 2 + 63) & !63;
+        let mem = out_addr + want.len() * 4 + 4096;
+        let mut mach = Rvv::new(RvvConfig::with_vlen(vlen), mem);
+        mach.write_f16_slice(lhs_addr, &lhs);
+        mach.write_f16_slice(rhs_addr, &rhs);
+        mmt4d_tile_rvv(&mut mach, &Mmt4dLayout {
+            lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+        });
+        let got = mach.read_f32_slice(out_addr, want.len());
+        assert_eq!(got, want, "simulated kernel != native ukernel");
+        mach.stats.clone()
+    }
+
+    #[test]
+    fn prefill_kernel_bit_exact_vs_native() {
+        let s = check_against_native(6, |v| v / 8, 256, 2, 3, 16);
+        assert_eq!(s.spill_insns, 0, "paper prefill tile must not spill");
+    }
+
+    #[test]
+    fn decode_kernel_bit_exact_vs_native() {
+        let s = check_against_native(1, |v| v / 4, 256, 1, 4, 32);
+        assert_eq!(s.spill_insns, 0);
+    }
+
+    #[test]
+    fn other_vlens() {
+        check_against_native(6, |v| v / 8, 128, 2, 2, 8);
+        check_against_native(6, |v| v / 8, 512, 1, 2, 8);
+        check_against_native(1, |v| v / 4, 128, 1, 3, 8);
+    }
+
+    #[test]
+    fn oversized_tile_spills_and_still_correct() {
+        // M0=10 at VLEN=256: 10 * 4 + overhead > 32 regs -> spills, but the
+        // numbers must still be exact.
+        let s = check_against_native(10, |v| v / 8, 256, 1, 2, 8);
+        assert!(s.spill_insns > 0, "expected spill traffic");
+    }
+
+    #[test]
+    fn spilled_tile_is_slower_per_flop() {
+        // Same total FLOPs, paper tile vs oversized tile.
+        let fit = check_against_native(6, |v| v / 8, 256, 4, 2, 24); // 48 rows
+        let spill = check_against_native(12, |v| v / 8, 256, 2, 2, 24); // 48 rows...
+        let fit_flops = 4 * 6 * 2 * 32 * 24;
+        let spill_flops = 2 * 12 * 2 * 32 * 24;
+        assert_eq!(fit_flops, spill_flops);
+        let fit_cpf = fit.cycles as f64 / fit_flops as f64;
+        let spill_cpf = spill.cycles as f64 / spill_flops as f64;
+        assert!(spill_cpf > fit_cpf * 1.15,
+                "spilling tile should cost >15% more: {fit_cpf} vs {spill_cpf}");
+    }
+
+    #[test]
+    fn rhs_load_amortized_over_rows() {
+        // Prefill (M0=6) must issue ~1/6 the vector loads per FLOP of M0=1.
+        let six = check_against_native(6, |v| v / 8, 256, 2, 2, 16);
+        let one = check_against_native(1, |v| v / 8, 256, 12, 2, 16);
+        // Same FLOPs (12 rows each).
+        let ratio = one.vector_loads as f64 / six.vector_loads as f64;
+        assert!(ratio > 3.0, "expected RHS-load amortization, ratio {ratio}");
+    }
+}

@@ -1,0 +1,38 @@
+//! RVV microkernel programs for the simulated testbed: the paper's
+//! prefill/decode mmt4d kernels plus the two baselines of Table 2
+//! (upstream-IREE default codegen, llama.cpp/ggml scalar dot kernels).
+//!
+//! Every program computes real numerics on the simulator's memory and is
+//! validated against the native ukernels / naive oracle, so the cycle and
+//! cache statistics come from semantically correct executions.
+
+pub mod baselines;
+pub mod mmt4d_rvv;
+
+pub use baselines::{ireegen_gemm_rvv, ireegen_gemv_rvv,
+                    ireegen_gemv_rvv_strided, llamacpp_dot_rvv,
+                    llamacpp_gemm_rvv, GGML_F16_TABLE_BYTES};
+pub use mmt4d_rvv::{mmt4d_decode_rvv, mmt4d_prefill_rvv, mmt4d_tile_rvv,
+                    Mmt4dLayout};
+
+/// Which system a kernel program models (Table 2 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum System {
+    LlamaCpp,
+    UpstreamIree,
+    TenxIree,
+}
+
+impl System {
+    pub fn name(self) -> &'static str {
+        match self {
+            System::LlamaCpp => "Llama.cpp",
+            System::UpstreamIree => "IREE",
+            System::TenxIree => "10x-IREE",
+        }
+    }
+
+    pub fn all() -> [System; 3] {
+        [System::LlamaCpp, System::UpstreamIree, System::TenxIree]
+    }
+}

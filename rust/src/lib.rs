@@ -1,0 +1,33 @@
+//! # tenx-iree
+//!
+//! A three-layer reproduction of *"Accelerating GenAI Workloads by Enabling
+//! RISC-V Microkernel Support in IREE"* (10xEngineers, 2025).
+//!
+//! * **Layer 1/2 (build time, Python)** — Pallas mmt4d/pack/unpack kernels and
+//!   a Llama-architecture model, AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — the compiler pipeline (`ir`, `passes`,
+//!   `target`), the microkernel library (`ukernel`), the simulated RISC-V
+//!   testbed (`rvv`, `cachesim`, `kernels`), the performance model
+//!   (`perfmodel`), the serving runtime (`runtime`, `coordinator`) and the
+//!   evaluation harness (`llm`).
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod cachesim;
+pub mod cliargs;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod ir;
+pub mod kernels;
+pub mod llm;
+pub mod metrics;
+pub mod passes;
+pub mod perfmodel;
+pub mod propcheck;
+pub mod runtime;
+pub mod rvv;
+pub mod target;
+pub mod ukernel;
+pub mod util;

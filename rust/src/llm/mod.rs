@@ -1,0 +1,10 @@
+//! LLM utilities: tokenizer, sampling, and the multiple-choice evaluation
+//! harness behind Table 1.
+
+pub mod eval;
+pub mod sampling;
+pub mod tokenizer;
+
+pub use eval::{gen_task, run_eval, EvalItem, EvalResult, LogitsBackend, TaskKind};
+pub use sampling::{argmax, log_softmax, sample, SamplingParams};
+pub use tokenizer::{Tokenizer, BOS, EOS, PAD};

@@ -1,0 +1,121 @@
+//! Token sampling: greedy, temperature, top-k. Used by the serving
+//! coordinator's decode loop.
+
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplingParams {
+    Greedy,
+    /// Softmax sampling at the given temperature, optionally top-k-truncated.
+    Temperature { temperature: f32, top_k: Option<usize> },
+}
+
+impl SamplingParams {
+    pub fn from_temperature(t: f32) -> SamplingParams {
+        if t <= 0.0 {
+            SamplingParams::Greedy
+        } else {
+            SamplingParams::Temperature { temperature: t, top_k: Some(40) }
+        }
+    }
+}
+
+/// Numerically-stable log-softmax.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    logits.iter().map(|&x| x - lse).collect()
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Sample one token id.
+pub fn sample(logits: &[f32], params: SamplingParams, rng: &mut Rng) -> u32 {
+    match params {
+        SamplingParams::Greedy => argmax(logits),
+        SamplingParams::Temperature { temperature, top_k } => {
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            if let Some(k) = top_k {
+                idx.truncate(k.max(1));
+            }
+            let scaled: Vec<f32> = idx.iter()
+                .map(|&i| logits[i] / temperature.max(1e-6))
+                .collect();
+            let probs = softmax(&scaled);
+            let mut u = rng.f64() as f32;
+            for (j, &p) in probs.iter().enumerate() {
+                u -= p;
+                if u <= 0.0 {
+                    return idx[j] as u32;
+                }
+            }
+            idx[probs.len() - 1] as u32
+        }
+    }
+}
+
+fn softmax(xs: &[f32]) -> Vec<f32> {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0 - 1e-6]), 1);
+        assert_eq!(sample(&[0.0, 9.0, 1.0], SamplingParams::Greedy,
+                          &mut Rng::new(0)), 1);
+    }
+
+    #[test]
+    fn log_softmax_sums_to_one() {
+        let ls = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = ls.iter().map(|&x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(ls.iter().all(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn log_softmax_stable_for_huge_logits() {
+        let ls = log_softmax(&[1e4, 1e4 - 1.0]);
+        assert!(ls.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn temperature_sampling_respects_topk() {
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        let params = SamplingParams::Temperature { temperature: 1.0,
+                                                   top_k: Some(2) };
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let t = sample(&logits, params, &mut rng);
+            assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let logits = vec![1.0, 1.5, 0.0];
+        let params = SamplingParams::Temperature { temperature: 0.05,
+                                                   top_k: None };
+        let mut rng = Rng::new(3);
+        let hits = (0..200)
+            .filter(|_| sample(&logits, params, &mut rng) == 1)
+            .count();
+        assert!(hits > 195, "{hits}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Byte-level tokenizer for the tiny-llama vocabulary (512 ids).
+//!
+//! Layout: id 0 = BOS, 1 = EOS, 2 = PAD, 3..=258 = bytes 0..=255,
+//! 259.. = a fixed merge table of frequent English bigrams (gives the
+//! synthetic eval tasks some token diversity beyond raw bytes).
+
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+pub const PAD: u32 = 2;
+const BYTE_BASE: u32 = 3;
+
+/// Frequent bigrams promoted to single tokens (deterministic, ordered).
+const MERGES: &[&str] = &[
+    "th", "he", "in", "er", "an", "re", "on", "at", "en", "nd", "ti", "es",
+    "or", "te", "of", "ed", "is", "it", "al", "ar", "st", "to", "nt", "ng",
+    "se", "ha", "as", "ou", "io", "le", "ve", "co", "me", "de", "hi", "ri",
+    "ro", "ic", "ne", "ea", "ra", "ce", "li", "ch", "ll", "be", "ma", "si",
+    "om", "ur",
+];
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size >= (BYTE_BASE as usize + 256),
+                "vocab must cover all bytes");
+        Tokenizer { vocab_size }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    fn merge_id(&self, i: usize) -> u32 {
+        BYTE_BASE + 256 + i as u32
+    }
+
+    fn num_merges(&self) -> usize {
+        MERGES.len().min(self.vocab_size - (BYTE_BASE as usize + 256))
+    }
+
+    /// Encode UTF-8 text: greedy longest-match over the merge table, byte
+    /// fallback. No BOS/EOS added.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let bytes = text.as_bytes();
+        let mut out = Vec::with_capacity(bytes.len());
+        let mut i = 0;
+        'outer: while i < bytes.len() {
+            if i + 1 < bytes.len() {
+                for (mi, m) in MERGES[..self.num_merges()].iter().enumerate() {
+                    if bytes[i..].starts_with(m.as_bytes()) {
+                        out.push(self.merge_id(mi));
+                        i += m.len();
+                        continue 'outer;
+                    }
+                }
+            }
+            out.push(BYTE_BASE + bytes[i] as u32);
+            i += 1;
+        }
+        out
+    }
+
+    /// Decode ids back to text (lossy on invalid UTF-8).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id < BYTE_BASE {
+                continue; // specials render as nothing
+            }
+            let id = id - BYTE_BASE;
+            if id < 256 {
+                bytes.push(id as u8);
+            } else {
+                let mi = (id - 256) as usize;
+                if mi < self.num_merges() {
+                    bytes.extend_from_slice(MERGES[mi].as_bytes());
+                }
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new(512);
+        for s in ["hello world", "the rain in spain", "x", "",
+                  "unicode: héllo ✓"] {
+            assert_eq!(t.decode(&t.encode(s)), s, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn merges_shrink_english() {
+        let t = Tokenizer::new(512);
+        let s = "the weather is nice in the north";
+        let ids = t.encode(s);
+        assert!(ids.len() < s.len(), "{} vs {}", ids.len(), s.len());
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = Tokenizer::new(512);
+        for id in t.encode("every token must fit the tiny vocabulary ☃") {
+            assert!((id as usize) < t.vocab_size());
+        }
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = Tokenizer::new(512);
+        let mut ids = vec![BOS];
+        ids.extend(t.encode("ok"));
+        ids.push(EOS);
+        assert_eq!(t.decode(&ids), "ok");
+    }
+}

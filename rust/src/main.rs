@@ -1,0 +1,198 @@
+//! `tenx` — the leader binary: serve the model, run the compiler pipeline,
+//! reproduce the paper's tables, or poke the RVV simulator.
+
+use std::path::PathBuf;
+
+use tenx_iree::cliargs::Command;
+use tenx_iree::coordinator::{self, EngineBackend};
+use tenx_iree::ir::{build_matmul_func, ElemType, Module};
+use tenx_iree::kernels::System;
+use tenx_iree::llm::{SamplingParams, Tokenizer};
+use tenx_iree::passes::PassManager;
+use tenx_iree::perfmodel::{self, LlamaShapes};
+use tenx_iree::runtime::EnginePath;
+use tenx_iree::target::{Phase, TargetDesc};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "tenx — RISC-V mmt4d microkernel support for an IREE-like stack\n\n\
+     USAGE:\n  tenx <COMMAND> [OPTIONS]\n\nCOMMANDS:\n  \
+     serve      serve the tiny-llama artifacts with continuous batching\n  \
+     compile    run the materialize-encoding pipeline on a matmul and print IR\n  \
+     table1     accuracy-equivalence eval (reference vs mmt4d path)\n  \
+     table2     modeled tokens/sec on the simulated MILK-V Jupiter\n  \
+     info       print manifest + target information\n\n\
+     Run `tenx <COMMAND> --help` for options."
+        .to_string()
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.get(1) else {
+        return Err(usage());
+    };
+    let rest = &args[2..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "compile" => cmd_compile(rest),
+        "table1" => cmd_table1(rest),
+        "table2" => cmd_table2(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => Err(usage()),
+        other => Err(format!("unknown command {other:?}\n\n{}", usage())),
+    }
+}
+
+fn err_str<E: std::fmt::Display>(e: E) -> String {
+    format!("error: {e}")
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("serve", "serve tiny-llama with continuous batching")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("requests", "12", "number of synthetic requests")
+        .opt("max-new-tokens", "16", "decode budget per request")
+        .opt("temperature", "0", "sampling temperature (0 = greedy)")
+        .flag("baseline", "serve the non-mmt4d baseline artifacts");
+    let m = cmd.parse(argv)?;
+    let dir = PathBuf::from(m.str("artifacts"));
+    let n: usize = m.usize("requests")?;
+    let max_new: usize = m.usize("max-new-tokens")?;
+    let temp: f32 = m.parse("temperature")?;
+    let path = if m.flag("baseline") { EnginePath::Baseline } else { EnginePath::Mmt4d };
+
+    eprintln!("loading artifacts from {dir:?} ({path:?})...");
+    let manifest = tenx_iree::config::Manifest::load(&dir).map_err(err_str)?;
+    let tok = Tokenizer::new(manifest.model.vocab_size);
+    let dir2 = dir.clone();
+    let handle = coordinator::server::start_with(
+        move || EngineBackend::load(&dir2, path), 64, 42)
+        .map_err(err_str)?;
+
+    let prompts = [
+        "the sun heats", "rain falls on", "a seed grows", "ice melts when",
+        "the moon turns", "waves move the", "rock forms in", "air cools at",
+    ];
+    let sampling = SamplingParams::from_temperature(temp);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let p = tok.encode(prompts[i % prompts.len()]);
+            handle.submit(p, max_new, sampling, None).map_err(err_str)
+        })
+        .collect::<Result<_, _>>()?;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().map_err(err_str)?;
+        println!(
+            "req {i:>2}: {:>2} tokens in {:?} (ttft {:?}) -> {:?}",
+            out.tokens.len(), out.e2e, out.ttft,
+            tok.decode(&out.tokens)
+        );
+    }
+    println!("\n{}", handle.metrics.report());
+    handle.shutdown().map_err(err_str)
+}
+
+fn cmd_compile(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("compile", "run the pass pipeline on a matmul")
+        .opt("target", "milkv-jupiter", "target name (milkv-jupiter, x86_64, aarch64, riscv64-vlenN)")
+        .opt("phase", "prefill", "prefill | decode")
+        .opt("m", "64", "M dimension")
+        .opt("k", "256", "K dimension")
+        .opt("n", "256", "N dimension")
+        .flag("upstream", "model the upstream (no riscv64 ukernels) registry");
+    let m = cmd.parse(argv)?;
+    let target = TargetDesc::by_name(m.str("target"))
+        .ok_or_else(|| format!("unknown target {:?}", m.str("target")))?;
+    let phase = Phase::parse(m.str("phase"))
+        .ok_or_else(|| format!("unknown phase {:?}", m.str("phase")))?;
+    let (mm, kk, nn) = (m.usize("m")?, m.usize("k")?, m.usize("n")?);
+
+    let mut module = Module {
+        funcs: vec![build_matmul_func("main", mm, kk, nn, ElemType::F16)],
+    };
+    println!("// before:\n{}", tenx_iree::ir::printer::print_module(&module));
+    let pm = if m.flag("upstream") {
+        PassManager::new()
+            .add(tenx_iree::passes::generalize::Generalize)
+            .add(tenx_iree::passes::materialize_encoding::MaterializeEncoding::upstream(
+                target.clone(), phase))
+            .add(tenx_iree::passes::lower_ukernels::LowerUkernels)
+            .add(tenx_iree::passes::canonicalize::Canonicalize)
+    } else {
+        PassManager::standard(&target, phase)
+    };
+    let report = pm.run(&mut module).map_err(err_str)?;
+    println!("// after ({} {}):\n{}", target.name, phase.name(),
+             tenx_iree::ir::printer::print_module(&module));
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_table1(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("table1", "accuracy equivalence eval")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("items", "25", "items per task");
+    let m = cmd.parse(argv)?;
+    let dir = PathBuf::from(m.str("artifacts"));
+    let items: usize = m.usize("items")?;
+    let table = tenx_iree::experiments::table1(&dir, items).map_err(err_str)?;
+    println!("{table}");
+    Ok(())
+}
+
+fn cmd_table2(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("table2", "modeled tokens/sec (Table 2)")
+        .opt("target", "milkv-jupiter", "RISC-V target")
+        .opt("prefill-tokens", "128", "prompt length for the prefill phase");
+    let m = cmd.parse(argv)?;
+    let target = TargetDesc::by_name(m.str("target"))
+        .ok_or_else(|| format!("unknown target {:?}", m.str("target")))?;
+    let pf: usize = m.usize("prefill-tokens")?;
+    println!("{}", tenx_iree::experiments::table2(&target, pf));
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("info", "print manifest + target info")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let m = cmd.parse(argv)?;
+    let dir = PathBuf::from(m.str("artifacts"));
+    match tenx_iree::config::Manifest::load(&dir) {
+        Ok(man) => {
+            println!("model: d_model={} layers={} vocab={} heads={}/{}kv",
+                     man.model.d_model, man.model.n_layers,
+                     man.model.vocab_size, man.model.n_heads,
+                     man.model.n_kv_heads);
+            println!("serve: batch={} prefill_seq={} max_seq={}",
+                     man.serve.batch, man.serve.prefill_seq, man.model.max_seq);
+            println!("tiles: VLEN={} prefill={}x{}x{} decode={}x{}x{}",
+                     man.vlen_bits,
+                     man.prefill_tile.m0, man.prefill_tile.n0, man.prefill_tile.k0,
+                     man.decode_tile.m0, man.decode_tile.n0, man.decode_tile.k0);
+            println!("artifacts: {:?}", man.artifacts);
+        }
+        Err(e) => println!("no artifacts loaded ({e})"),
+    }
+    let t = TargetDesc::milkv_jupiter();
+    let shapes = LlamaShapes::llama32_1b();
+    println!("\ntestbed: {} — {} cores @ {} GHz, VLEN={:?}, {} GB/s DRAM",
+             t.name, t.cores, t.freq_ghz, t.vlen_bits(), t.dram_gbps);
+    println!("workload: {} — {:.2} GMAC/token decode",
+             shapes.name, shapes.macs_per_token() / 1e9);
+    // quick single-matmul cost preview
+    let c = perfmodel::measure_matmul(System::TenxIree, Phase::Decode, 1,
+                                      shapes.d_model, shapes.d_model, &t);
+    println!("decode wq matmul: {:.2} cyc/MAC on the 10x-IREE kernel",
+             c.cycles_per_mac());
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Serving metrics: counters, gauges and latency histograms with a text
+//! report (the coordinator's observability surface).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exponential bucket bounds (microseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds_us: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 100us .. ~100s, x2 per bucket
+        let bounds: Vec<u64> = (0..21).map(|i| 100u64 << i).collect();
+        Histogram {
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            bounds_us: bounds,
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self
+            .bounds_us
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds_us.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                let us = if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    *self.bounds_us.last().unwrap() * 2
+                };
+                return Duration::from_micros(us);
+            }
+        }
+        Duration::from_micros(*self.bounds_us.last().unwrap() * 2)
+    }
+}
+
+/// The serving metric set.
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    pub requests_submitted: Counter,
+    pub requests_completed: Counter,
+    pub prefill_batches: Counter,
+    pub decode_steps: Counter,
+    pub tokens_prefilled: Counter,
+    pub tokens_decoded: Counter,
+    pub queue_rejections: Counter,
+    pub prefill_latency: Histogram,
+    pub decode_step_latency: Histogram,
+    pub ttft: Histogram,
+    pub e2e_latency: Histogram,
+    /// Padded-out slots across decode steps (batching efficiency).
+    pub idle_slot_steps: Counter,
+    pub started: Mutex<Option<std::time::Instant>>,
+}
+
+impl ServingMetrics {
+    pub fn mark_started(&self) {
+        *self.started.lock().unwrap() = Some(std::time::Instant::now());
+    }
+
+    pub fn report(&self) -> String {
+        let elapsed = self
+            .started
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        let dec_tok = self.tokens_decoded.get();
+        let pre_tok = self.tokens_prefilled.get();
+        let mut s = String::from("== serving metrics ==\n");
+        s.push_str(&format!(
+            "requests: {} submitted, {} completed, {} rejected\n",
+            self.requests_submitted.get(),
+            self.requests_completed.get(),
+            self.queue_rejections.get()
+        ));
+        s.push_str(&format!(
+            "prefill: {} batches, {} tokens, mean {:?}\n",
+            self.prefill_batches.get(), pre_tok, self.prefill_latency.mean()
+        ));
+        s.push_str(&format!(
+            "decode: {} steps, {} tokens, mean step {:?}, idle-slot steps {}\n",
+            self.decode_steps.get(), dec_tok,
+            self.decode_step_latency.mean(), self.idle_slot_steps.get()
+        ));
+        s.push_str(&format!(
+            "ttft: mean {:?} p90 {:?}\ne2e: mean {:?} p90 {:?}\n",
+            self.ttft.mean(), self.ttft.quantile(0.9),
+            self.e2e_latency.mean(), self.e2e_latency.quantile(0.9)
+        ));
+        if elapsed > 0.0 {
+            s.push_str(&format!(
+                "throughput: {:.2} prefill tok/s, {:.2} decode tok/s over {elapsed:.2}s\n",
+                pre_tok as f64 / elapsed, dec_tok as f64 / elapsed
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::default();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.observe(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.quantile(0.5) <= Duration::from_millis(8));
+        assert!(h.quantile(1.0) >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = ServingMetrics::default();
+        m.mark_started();
+        m.requests_submitted.inc();
+        m.tokens_decoded.add(10);
+        let r = m.report();
+        assert!(r.contains("requests: 1 submitted"));
+        assert!(r.contains("decode:"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Canonicalize pass: dead-op elimination plus trivial folds
+//! (cast-of-cast to the original type, unpack(pack-like mmt4d results) is
+//! left to the encoding pass which owns layout decisions).
+
+use std::collections::BTreeSet;
+
+use super::Pass;
+use crate::ir::{Module, OpKind, Value};
+
+pub struct Canonicalize;
+
+impl Pass for Canonicalize {
+    fn name(&self) -> &str {
+        "canonicalize"
+    }
+
+    fn run(&self, module: &mut Module) -> anyhow::Result<bool> {
+        let mut changed = false;
+        for f in &mut module.funcs {
+            changed |= fold_casts(f);
+            changed |= dce(f);
+        }
+        Ok(changed)
+    }
+}
+
+/// cast(cast(x)) where the outer cast returns x's original type -> x.
+fn fold_casts(f: &mut crate::ir::Func) -> bool {
+    let mut replace: Vec<(Value, Value)> = Vec::new();
+    for op in &f.body {
+        if let OpKind::Cast { src } = op.kind {
+            if let Some(inner) = f.find_op(src) {
+                if let OpKind::Cast { src: orig } = inner.kind {
+                    if f.type_of(orig) == Some(&op.result_type) {
+                        replace.push((op.result, orig));
+                    }
+                }
+            }
+        }
+    }
+    if replace.is_empty() {
+        return false;
+    }
+    let subst = |v: Value| {
+        replace.iter().find(|(from, _)| *from == v).map(|(_, to)| *to).unwrap_or(v)
+    };
+    for op in &mut f.body {
+        op.kind.map_operands(subst);
+    }
+    for r in &mut f.results {
+        *r = subst(*r);
+    }
+    // The folded casts are now dead; dce will drop them.
+    true
+}
+
+/// Remove ops whose results are unused (transitively).
+fn dce(f: &mut crate::ir::Func) -> bool {
+    let mut live: BTreeSet<Value> = f.results.iter().copied().collect();
+    // Walk backwards marking operands of live ops.
+    for op in f.body.iter().rev() {
+        if live.contains(&op.result) {
+            for v in op.kind.operands() {
+                live.insert(v);
+            }
+        }
+    }
+    let before = f.body.len();
+    f.body.retain(|op| live.contains(&op.result));
+    f.body.len() != before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+    use crate::ir::printer::print_module;
+    use crate::ir::verify;
+    use crate::passes::PassManager;
+
+    #[test]
+    fn dce_drops_dead_ops() {
+        let text = "\
+func @f(%0: tensor<4x4xf32>, %1: tensor<4x4xf32>) {
+  %2 = linalg.matmul %0, %1 : tensor<4x4xf32>
+  %3 = linalg.matmul %1, %0 : tensor<4x4xf32>
+  %4 = linalg.matmul %2, %1 : tensor<4x4xf32>
+  return %4
+}
+";
+        let mut m = parse_module(text).unwrap();
+        let rep = PassManager::new().add(Canonicalize).run(&mut m).unwrap();
+        assert!(rep.passes[0].1);
+        verify::verify_module(&m).unwrap();
+        let printed = print_module(&m);
+        assert!(!printed.contains("%3 ="), "dead op kept:\n{printed}");
+        assert!(printed.contains("%4 ="));
+    }
+
+    #[test]
+    fn cast_of_cast_folds() {
+        let text = "\
+func @f(%0: tensor<4x4xf16>) {
+  %1 = arith.cast %0 : tensor<4x4xf32>
+  %2 = arith.cast %1 : tensor<4x4xf16>
+  %3 = arith.cast %2 : tensor<4x4xf32>
+  return %3
+}
+";
+        // %2 = cast(cast(%0)) back to f16 == %0, so %3 = cast %0.
+        let mut m = parse_module(text).unwrap();
+        PassManager::new().add(Canonicalize).run(&mut m).unwrap();
+        verify::verify_module(&m).unwrap();
+        let f = &m.funcs[0];
+        assert_eq!(f.body.len(), 1, "{}", print_module(&m));
+        assert!(matches!(f.body[0].kind, OpKind::Cast { src: Value(0) }));
+    }
+
+    #[test]
+    fn live_chain_untouched() {
+        let text = "\
+func @f(%0: tensor<4x4xf32>, %1: tensor<4x4xf32>) {
+  %2 = linalg.matmul %0, %1 : tensor<4x4xf32>
+  %3 = linalg.matmul %2, %1 : tensor<4x4xf32>
+  return %3
+}
+";
+        let mut m = parse_module(text).unwrap();
+        let before = m.clone();
+        let rep = PassManager::new().add(Canonicalize).run(&mut m).unwrap();
+        assert!(!rep.passes[0].1);
+        assert_eq!(m, before);
+    }
+}

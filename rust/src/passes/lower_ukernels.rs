@@ -1,0 +1,151 @@
+//! Lower pass: structural pack/mmt4d/unpack ops -> `ukernel.call @iree_uk_*`
+//! symbols resolved against the microkernel registry (IREE's
+//! `iree-codegen-lower-ukernel-ops` equivalent).
+
+use super::Pass;
+use crate::ir::{ElemType, Module, OpKind, PackKind};
+use crate::ukernel::{symbol_for, UkernelOp};
+
+pub struct LowerUkernels;
+
+impl Pass for LowerUkernels {
+    fn name(&self) -> &str {
+        "lower-ukernels"
+    }
+
+    fn run(&self, module: &mut Module) -> anyhow::Result<bool> {
+        let mut changed = false;
+        for f in &mut module.funcs {
+            // Collect operand types first (immutable pass over body).
+            let op_tys: Vec<Option<crate::ir::TensorType>> = f
+                .body
+                .iter()
+                .map(|op| {
+                    op.kind.operands().first().and_then(|v| f.type_of(*v)).cloned()
+                })
+                .collect();
+            for (i, op) in f.body.iter_mut().enumerate() {
+                let new_kind = match &op.kind {
+                    OpKind::Pack { src, kind, tile0, tile1 } => {
+                        let elem = op.result_type.elem;
+                        let uop = match kind {
+                            PackKind::Lhs | PackKind::Acc => UkernelOp::PackLhs {
+                                elem, m0: *tile0, k0: *tile1,
+                            },
+                            PackKind::Rhs => UkernelOp::PackRhs {
+                                elem, n0: *tile0, k0: *tile1,
+                            },
+                        };
+                        Some(OpKind::UkernelCall {
+                            symbol: symbol_for(&uop),
+                            args: vec![*src],
+                        })
+                    }
+                    OpKind::Unpack { src } => {
+                        let st = op_tys[i]
+                            .clone()
+                            .ok_or_else(|| anyhow::anyhow!("unpack src untyped"))?;
+                        let uop = UkernelOp::Unpack {
+                            elem: ElemType::F32,
+                            m0: st.shape[2],
+                            n0: st.shape[3],
+                        };
+                        let _ = src;
+                        Some(OpKind::UkernelCall {
+                            symbol: symbol_for(&uop),
+                            args: vec![op.kind.operands()[0]],
+                        })
+                    }
+                    OpKind::Mmt4d { lhs, rhs } => {
+                        let lt = op_tys[i]
+                            .clone()
+                            .ok_or_else(|| anyhow::anyhow!("mmt4d lhs untyped"))?;
+                        let uop = UkernelOp::Mmt4d {
+                            lhs: lt.elem,
+                            rhs: lt.elem,
+                            out: op.result_type.elem,
+                            m0: lt.shape[2],
+                            n0: op.result_type.shape[3],
+                            k0: lt.shape[3],
+                        };
+                        Some(OpKind::UkernelCall {
+                            symbol: symbol_for(&uop),
+                            args: vec![*lhs, *rhs],
+                        })
+                    }
+                    _ => None,
+                };
+                if let Some(k) = new_kind {
+                    op.kind = k;
+                    changed = true;
+                }
+            }
+        }
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{build_matmul_func, verify, ElemType, Module};
+    use crate::passes::materialize_encoding::MaterializeEncoding;
+    use crate::passes::PassManager;
+    use crate::target::{Phase, TargetDesc};
+
+    #[test]
+    fn lowers_to_expected_symbols() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 64, 256, 256, ElemType::F16)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Prefill))
+            .add(LowerUkernels)
+            .run(&mut m)
+            .unwrap();
+        verify::verify_module(&m).unwrap();
+        let symbols: Vec<String> = m.funcs[0]
+            .body
+            .iter()
+            .filter_map(|o| match &o.kind {
+                OpKind::UkernelCall { symbol, .. } => Some(symbol.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(symbols, vec![
+            "iree_uk_pack_lhs_f16_6x1",
+            "iree_uk_pack_rhs_f16_32x1",
+            "iree_uk_mmt4d_f16f16f32_6x32x1",
+            "iree_uk_unpack_f32_6x32",
+        ]);
+    }
+
+    #[test]
+    fn decode_symbols() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mv", 1, 256, 512, ElemType::F16)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Decode))
+            .add(LowerUkernels)
+            .run(&mut m)
+            .unwrap();
+        let has = |s: &str| {
+            m.funcs[0].body.iter().any(|o| matches!(&o.kind,
+                OpKind::UkernelCall { symbol, .. } if symbol == s))
+        };
+        assert!(has("iree_uk_mmt4d_f16f16f32_1x64x1"),
+                "decode GEMV kernel symbol");
+    }
+
+    #[test]
+    fn noop_without_structural_ops() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 4, 4, 4, ElemType::F32)],
+        };
+        let rep = PassManager::new().add(LowerUkernels).run(&mut m).unwrap();
+        assert!(!rep.passes[0].1);
+    }
+}

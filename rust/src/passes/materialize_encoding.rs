@@ -1,0 +1,294 @@
+//! **The paper's pass**: `iree-codegen-materialize-device-encoding` extended
+//! for riscv64.
+//!
+//! For every `linalg.matmul` whose operand/result types have a ukernel in the
+//! registry for the target, rewrite
+//!
+//!   %c = linalg.matmul %a, %b : tensor<MxNxf32>
+//!
+//! into the data-tiled pipeline
+//!
+//!   %ap = tensor.pack %a kind(lhs) tiles(M0, K0)
+//!   %bp = tensor.pack %b kind(rhs) tiles(N0, K0)
+//!   %c4 = linalg.mmt4d %ap, %bp
+//!   %c  = tensor.unpack %c4
+//!
+//! with (M0, N0, K0) chosen by `target::select_tiles` — for riscv64 the
+//! VLEN-aware selection with distinct prefill/decode shapes. A shape
+//! heuristic picks the decode (GEMV) encoding automatically when M == 1,
+//! matching how the two phases reach the pass with different static shapes;
+//! the constructor's `phase` sets the default for ambiguous GEMMs.
+//!
+//! On targets without registered ukernels (upstream riscv64!) the pass is a
+//! no-op and the contraction falls through to default codegen — that is
+//! exactly the performance gap Table 2's "IREE" column measures.
+
+use super::Pass;
+use crate::ir::{Module, Op, OpKind, PackKind, TensorType, Value};
+use crate::target::{select_tiles, Phase, TargetDesc};
+use crate::ukernel;
+
+pub struct MaterializeEncoding {
+    pub target: TargetDesc,
+    pub default_phase: Phase,
+    /// Model the upstream registry (no riscv64 entries) for baselines.
+    pub upstream_registry: bool,
+}
+
+impl MaterializeEncoding {
+    pub fn new(target: TargetDesc, phase: Phase) -> Self {
+        MaterializeEncoding { target, default_phase: phase,
+                              upstream_registry: false }
+    }
+
+    pub fn upstream(target: TargetDesc, phase: Phase) -> Self {
+        MaterializeEncoding { target, default_phase: phase,
+                              upstream_registry: true }
+    }
+
+    fn phase_for(&self, m: usize) -> Phase {
+        if m == 1 {
+            Phase::Decode // GEMV shape
+        } else {
+            self.default_phase
+        }
+    }
+}
+
+impl Pass for MaterializeEncoding {
+    fn name(&self) -> &str {
+        "materialize-encoding"
+    }
+
+    fn run(&self, module: &mut Module) -> anyhow::Result<bool> {
+        if !ukernel::target_has_ukernels(self.target.arch.name(),
+                                         self.upstream_registry) {
+            return Ok(false); // upstream riscv64: nothing to materialize
+        }
+        let mut changed = false;
+        for f in &mut module.funcs {
+            let mut new_body: Vec<Op> = Vec::with_capacity(f.body.len());
+            // Fresh ids start past everything existing.
+            let mut next_id = f
+                .body
+                .iter()
+                .map(|o| o.result.0 + 1)
+                .max()
+                .unwrap_or(f.arg_types.len() as u32)
+                .max(f.arg_types.len() as u32);
+            // Types of all values (args + already-emitted ops).
+            let mut types: Vec<(Value, TensorType)> = f
+                .arg_types
+                .iter()
+                .enumerate()
+                .map(|(i, t)| (Value(i as u32), t.clone()))
+                .collect();
+
+            for op in f.body.drain(..) {
+                let ty_of = |v: Value, ts: &[(Value, TensorType)]| {
+                    ts.iter().find(|(x, _)| *x == v).map(|(_, t)| t.clone())
+                };
+                match op.kind {
+                    OpKind::Matmul { lhs, rhs } => {
+                        let lt = ty_of(lhs, &types)
+                            .ok_or_else(|| anyhow::anyhow!("no type for {lhs}"))?;
+                        let rt = ty_of(rhs, &types)
+                            .ok_or_else(|| anyhow::anyhow!("no type for {rhs}"))?;
+                        // Only the dtype combos with registry entries.
+                        let supported = matches!(
+                            (lt.elem, rt.elem, op.result_type.elem),
+                            (crate::ir::ElemType::F16, crate::ir::ElemType::F16,
+                             crate::ir::ElemType::F32)
+                                | (crate::ir::ElemType::F32,
+                                   crate::ir::ElemType::F32,
+                                   crate::ir::ElemType::F32)
+                        );
+                        if !supported {
+                            types.push((op.result, op.result_type.clone()));
+                            new_body.push(op);
+                            continue;
+                        }
+                        let (m, k) = (lt.shape[0], lt.shape[1]);
+                        let n = rt.shape[1];
+                        let phase = self.phase_for(m);
+                        let tile = select_tiles(self.target.arch, phase)?;
+                        let (m0, n0, k0) = (tile.m0, tile.n0, tile.k0);
+                        let (m1, n1, k1) =
+                            (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+
+                        let mut emit = |kind: OpKind, ty: TensorType| -> Value {
+                            let v = Value(next_id);
+                            next_id += 1;
+                            types.push((v, ty.clone()));
+                            new_body.push(Op { result: v, kind,
+                                               result_type: ty });
+                            v
+                        };
+                        let ap = emit(
+                            OpKind::Pack { src: lhs, kind: PackKind::Lhs,
+                                           tile0: m0, tile1: k0 },
+                            TensorType::new(vec![m1, k1, m0, k0], lt.elem),
+                        );
+                        let bp = emit(
+                            OpKind::Pack { src: rhs, kind: PackKind::Rhs,
+                                           tile0: n0, tile1: k0 },
+                            TensorType::new(vec![n1, k1, n0, k0], rt.elem),
+                        );
+                        let c4 = emit(
+                            OpKind::Mmt4d { lhs: ap, rhs: bp },
+                            TensorType::new(vec![m1, n1, m0, n0],
+                                            op.result_type.elem),
+                        );
+                        // Unpack keeps the original result id so downstream
+                        // uses stay valid.
+                        types.push((op.result, op.result_type.clone()));
+                        new_body.push(Op {
+                            result: op.result,
+                            kind: OpKind::Unpack { src: c4 },
+                            result_type: op.result_type,
+                        });
+                        changed = true;
+                    }
+                    _ => {
+                        types.push((op.result, op.result_type.clone()));
+                        new_body.push(op);
+                    }
+                }
+            }
+            f.body = new_body;
+        }
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{build_matmul_func, verify, ElemType, Module};
+    use crate::passes::PassManager;
+
+    fn count_ops(m: &Module, pred: impl Fn(&OpKind) -> bool) -> usize {
+        m.funcs.iter().flat_map(|f| &f.body).filter(|o| pred(&o.kind)).count()
+    }
+
+    #[test]
+    fn riscv_matmul_materializes_paper_tiles() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 64, 256, 256, ElemType::F16)],
+        };
+        let target = TargetDesc::milkv_jupiter();
+        PassManager::new()
+            .add(MaterializeEncoding::new(target, Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        verify::verify_module(&m).unwrap();
+        assert_eq!(count_ops(&m, |k| matches!(k, OpKind::Matmul { .. })), 0);
+        assert_eq!(count_ops(&m, |k| matches!(k, OpKind::Mmt4d { .. })), 1);
+        // prefill tiles 6x32x1 at VLEN=256
+        let f = &m.funcs[0];
+        let pack_tiles: Vec<(usize, usize)> = f
+            .body
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Pack { tile0, tile1, .. } => Some((tile0, tile1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(pack_tiles, vec![(6, 1), (32, 1)]);
+    }
+
+    #[test]
+    fn gemv_shape_picks_decode_tiles_automatically() {
+        // M == 1 -> decode encoding even when the pass default is prefill.
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mv", 1, 256, 512, ElemType::F16)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        let f = &m.funcs[0];
+        let tiles: Vec<(usize, usize)> = f
+            .body
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Pack { tile0, tile1, .. } => Some((tile0, tile1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tiles, vec![(1, 1), (64, 1)]); // decode: 1 x VLEN/4 x 1
+    }
+
+    #[test]
+    fn upstream_riscv_is_noop_the_paper_gap() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 64, 256, 256, ElemType::F16)],
+        };
+        let before = m.clone();
+        let rep = PassManager::new()
+            .add(MaterializeEncoding::upstream(TargetDesc::milkv_jupiter(),
+                                               Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        assert!(!rep.passes[0].1, "upstream riscv64 must not materialize");
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn x86_still_materializes_with_upstream_registry() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 64, 256, 256, ElemType::F16)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::upstream(TargetDesc::generic_x86(),
+                                               Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        assert_eq!(count_ops(&m, |k| matches!(k, OpKind::Mmt4d { .. })), 1);
+        let tiles: Vec<(usize, usize)> = m.funcs[0]
+            .body
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Pack { tile0, tile1, .. } => Some((tile0, tile1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tiles, vec![(16, 1), (16, 1)]); // AVX-512 16x16x1
+    }
+
+    #[test]
+    fn unsupported_dtype_left_alone() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 8, 8, 8, ElemType::I8)],
+        };
+        // i8 result here is f32 per builder; i8xi8->f32 has no ukernel entry
+        let rep = PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        assert!(!rep.passes[0].1);
+    }
+
+    #[test]
+    fn vlen_512_tiles() {
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 12, 64, 128, ElemType::F16)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::riscv_with_vlen(512),
+                                          Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        let tiles: Vec<(usize, usize)> = m.funcs[0]
+            .body
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Pack { tile0, tile1, .. } => Some((tile0, tile1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tiles, vec![(6, 1), (64, 1)]); // N0 = 512/8
+    }
+}

@@ -1,0 +1,289 @@
+//! Performance model: Llama-3.2-1B shape schedule x simulated kernel costs
+//! -> tokens/sec — the machinery behind Table 2 and Figures 1-2.
+//!
+//! Method (DESIGN.md §6): for every weight matmul in the model, run the
+//! corresponding kernel program on the RVV+cache simulator over a
+//! *representative sub-problem* (full K, a slice of N/M), extrapolate cycles
+//! linearly in the tiled dimensions, then combine per-token cycles with a
+//! multicore roofline:
+//!
+//!   time(T) = max( cycles / (T * freq), dram_bytes / BW ) + sync(T)
+//!
+//! Decode streams every weight once per token, so it saturates DRAM long
+//! before 8 cores are busy — reproducing the paper's sub-linear decode
+//! scaling (0.99 -> 2.12 tok/s) while prefill keeps scaling.
+
+pub mod schedule;
+
+pub use schedule::{LlamaShapes, MatmulShape};
+
+use crate::cachesim::CacheHierarchy;
+use crate::kernels::{self, System};
+use crate::rvv::{Rvv, RvvConfig};
+use crate::target::{Phase, TargetDesc};
+use crate::util::f16::F16;
+use crate::util::prng::Rng;
+
+/// Measured cost of one matmul, extrapolated to full size.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulCost {
+    pub cycles: f64,
+    /// Bytes that must come from DRAM (weights dominate: streamed once).
+    pub dram_bytes: f64,
+    pub macs: f64,
+}
+
+impl MatmulCost {
+    pub fn cycles_per_mac(&self) -> f64 {
+        self.cycles / self.macs
+    }
+}
+
+fn fill_f16(m: &mut Rvv, addr: usize, n: usize, rng: &mut Rng) {
+    for i in 0..n {
+        let v = F16::from_f32(rng.f32_range(-0.5, 0.5));
+        m.write_f16(addr + i * 2, v);
+    }
+}
+
+/// Simulate + extrapolate the cost of `M x K x N` for a system/phase on the
+/// given RISC-V target. Deterministic (seeded by the shape).
+pub fn measure_matmul(system: System, phase: Phase, m: usize, k: usize,
+                      n: usize, target: &TargetDesc) -> MatmulCost {
+    let vlen = target.vlen_bits().expect("perf model needs a RISC-V target");
+    let macs = (m as f64) * (k as f64) * (n as f64);
+    // Weights [K,N] f16 streamed from DRAM; activations assumed resident.
+    let dram_bytes = (k as f64) * (n as f64) * 2.0;
+    let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
+
+    let mk_machine = |mem: usize| {
+        Rvv::new(RvvConfig::with_vlen(vlen), mem)
+            .with_cache(CacheHierarchy::for_target(target))
+    };
+
+    let cycles = match (system, phase) {
+        (System::TenxIree, _) => {
+            // mmt4d kernel on packed data. Sub-sample tiles of N (and M for
+            // prefill); K in full.
+            let (m0, n0) = match phase {
+                Phase::Prefill => (6usize, vlen / 8),
+                Phase::Decode => (1usize, vlen / 4),
+            };
+            let m1 = m.div_ceil(m0);
+            let n1 = n.div_ceil(n0);
+            let k1 = k;
+            let sim_m1 = m1.min(2);
+            let sim_n1 = n1.min(3);
+            let lhs_len = sim_m1 * k1 * m0;
+            let rhs_len = sim_n1 * k1 * n0;
+            let out_len = sim_m1 * sim_n1 * m0 * n0;
+            let lhs_addr = 0x1000;
+            let rhs_addr = (lhs_addr + lhs_len * 2 + 63) & !63;
+            let out_addr = (rhs_addr + rhs_len * 2 + 63) & !63;
+            let mut mach = mk_machine(out_addr + out_len * 4 + 4096);
+            fill_f16(&mut mach, lhs_addr, lhs_len, &mut rng);
+            fill_f16(&mut mach, rhs_addr, rhs_len, &mut rng);
+            kernels::mmt4d_tile_rvv(&mut mach, &kernels::Mmt4dLayout {
+                lhs_addr, rhs_addr, out_addr,
+                m1: sim_m1, n1: sim_n1, k1, m0, n0,
+            });
+            // Extrapolate over the un-simulated tiles + LHS pack cost
+            // (RHS/weights are packed at compile time in IREE).
+            let scale = (m1 as f64 / sim_m1 as f64) * (n1 as f64 / sim_n1 as f64);
+            let pack_cycles = pack_cost_cycles(m, k, target);
+            mach.stats.cycles as f64 * scale + pack_cycles
+        }
+        (System::UpstreamIree, Phase::Prefill) => {
+            // Vectorized-but-unwidened GEMM, M0=4 blocking.
+            let sim_m = m.min(8);
+            let sim_n = n.min(4 * (vlen / 8)).min(n);
+            let a_addr = 0x1000;
+            let b_addr = (a_addr + sim_m * k * 2 + 63) & !63;
+            let c_addr = (b_addr + k * sim_n * 2 + 63) & !63;
+            let mut mach = mk_machine(c_addr + sim_m * sim_n * 4 + 4096);
+            fill_f16(&mut mach, a_addr, sim_m * k, &mut rng);
+            fill_f16(&mut mach, b_addr, k * sim_n, &mut rng);
+            kernels::ireegen_gemm_rvv(&mut mach, a_addr, b_addr, c_addr,
+                                      sim_m, k, sim_n);
+            let scale = (m as f64 / sim_m as f64) * (n as f64 / sim_n as f64);
+            mach.stats.cycles as f64 * scale
+        }
+        (System::UpstreamIree, Phase::Decode) => {
+            // Scalar column-walk GEMV: the stride (= N) is what matters for
+            // the cache, so keep the true row stride but only compute a
+            // column slice (stride capped to bound the backing allocation —
+            // at LLM sizes every strided access misses either way).
+            let sim_cols = 32.min(n);
+            let stride_n = n.min(4096);
+            let x_addr = 0x100;
+            let b_addr = 0x4000;
+            let y_addr = b_addr + k * stride_n * 2 + 4096;
+            let mut mach = mk_machine(y_addr + sim_cols * 4 + 4096);
+            fill_f16(&mut mach, x_addr, k, &mut rng);
+            kernels::ireegen_gemv_rvv_strided(
+                &mut mach, x_addr, b_addr, y_addr, k, sim_cols, stride_n);
+            let scale = n as f64 / sim_cols as f64;
+            mach.stats.cycles as f64 * scale
+        }
+        (System::LlamaCpp, _) => {
+            // ggml scalar dot kernels over [N,K] rows; prefill repeats per
+            // input row with no blocking. Simulate a row slice.
+            let sim_rows = 16.min(n);
+            let w_addr = 0x10000;
+            let x_addr = 0x100;
+            let y_addr = w_addr + sim_rows * k * 2 + 4096;
+            let table = y_addr + sim_rows * 4 + 4096;
+            let mut mach = mk_machine(table + kernels::GGML_F16_TABLE_BYTES);
+            fill_f16(&mut mach, x_addr, k, &mut rng);
+            fill_f16(&mut mach, w_addr, sim_rows * k, &mut rng);
+            kernels::llamacpp_dot_rvv(&mut mach, w_addr, x_addr, y_addr,
+                                      sim_rows, k, table);
+            let scale = (n as f64 / sim_rows as f64) * (m as f64);
+            mach.stats.cycles as f64 * scale
+        }
+    };
+
+    MatmulCost { cycles, dram_bytes, macs }
+}
+
+/// Analytic cost of packing the LHS (activations) at runtime: a streaming
+/// rearrangement, ~1 cycle per 16 bytes moved + cold misses on the source.
+fn pack_cost_cycles(m: usize, k: usize, target: &TargetDesc) -> f64 {
+    let bytes = (m * k * 2) as f64;
+    let move_cycles = bytes / 16.0;
+    let miss_cycles = (bytes / target.l1d.line_bytes as f64)
+        * target.l1d.miss_penalty as f64;
+    move_cycles + miss_cycles
+}
+
+/// Performance of one phase of the model on `threads` cores.
+#[derive(Debug, Clone)]
+pub struct PhasePerf {
+    pub system: System,
+    pub phase: Phase,
+    pub threads: usize,
+    pub tokens_per_sec: f64,
+    pub cycles_per_token: f64,
+    pub dram_gb_per_token: f64,
+    pub compute_bound: bool,
+}
+
+/// Model a full forward pass and convert to tokens/sec.
+///
+/// `prefill_tokens` is the prompt length processed by one prefill pass.
+pub fn phase_perf(system: System, phase: Phase, threads: usize,
+                  shapes: &LlamaShapes, target: &TargetDesc,
+                  prefill_tokens: usize) -> PhasePerf {
+    let m = match phase {
+        Phase::Prefill => prefill_tokens,
+        Phase::Decode => 1,
+    };
+    let mut cycles = 0.0;
+    let mut dram = 0.0;
+    for mm in shapes.weight_matmuls() {
+        let c = measure_matmul(system, phase, m, mm.k, mm.n, target);
+        cycles += c.cycles;
+        dram += c.dram_bytes;
+    }
+    // Attention & element-wise ops: small next to the weight matmuls at
+    // these sizes; folded into a 5% overhead (documented in EXPERIMENTS.md).
+    cycles *= 1.05;
+
+    let freq = target.freq_ghz * 1e9;
+    let compute_t = cycles / (threads as f64 * freq);
+    let mem_t = dram / (target.dram_gbps * 1e9);
+    // Per-layer barrier sync: grows mildly with thread count.
+    let sync_t = shapes.n_layers as f64 * 8e-6 * (threads as f64).ln_1p();
+    let total = compute_t.max(mem_t) + sync_t;
+    let tokens = match phase {
+        Phase::Prefill => prefill_tokens as f64,
+        Phase::Decode => 1.0,
+    };
+    PhasePerf {
+        system,
+        phase,
+        threads,
+        tokens_per_sec: tokens / total,
+        cycles_per_token: cycles / tokens,
+        dram_gb_per_token: dram / tokens / 1e9,
+        compute_bound: compute_t > mem_t,
+    }
+}
+
+/// One Table-2 cell set: all systems x phases for the given thread counts.
+pub fn table2_rows(target: &TargetDesc, shapes: &LlamaShapes,
+                   prefill_tokens: usize, threads: &[usize]) -> Vec<PhasePerf> {
+    let mut out = Vec::new();
+    for &phase in &[Phase::Prefill, Phase::Decode] {
+        for &t in threads {
+            for sys in System::all() {
+                out.push(phase_perf(sys, phase, t, shapes, target,
+                                    prefill_tokens));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jupiter() -> TargetDesc {
+        TargetDesc::milkv_jupiter()
+    }
+
+    #[test]
+    fn decode_cost_ordering_matches_table2() {
+        // Single matmul sanity: 10x < llama.cpp < upstream in cycles.
+        let t = jupiter();
+        let tenx = measure_matmul(System::TenxIree, Phase::Decode, 1, 2048,
+                                  2048, &t);
+        let lcpp = measure_matmul(System::LlamaCpp, Phase::Decode, 1, 2048,
+                                  2048, &t);
+        let up = measure_matmul(System::UpstreamIree, Phase::Decode, 1, 2048,
+                                2048, &t);
+        assert!(tenx.cycles < lcpp.cycles,
+                "10x {} vs llama.cpp {}", tenx.cycles, lcpp.cycles);
+        assert!(lcpp.cycles < up.cycles,
+                "llama.cpp {} vs upstream {}", lcpp.cycles, up.cycles);
+        // The headline: order-tens speedup on decode.
+        let gain = up.cycles / tenx.cycles;
+        assert!(gain > 10.0 && gain < 300.0, "decode gain {gain}");
+    }
+
+    #[test]
+    fn prefill_gain_is_modest() {
+        let t = jupiter();
+        let tenx = measure_matmul(System::TenxIree, Phase::Prefill, 64, 2048,
+                                  2048, &t);
+        let up = measure_matmul(System::UpstreamIree, Phase::Prefill, 64,
+                                2048, 2048, &t);
+        let gain = up.cycles / tenx.cycles;
+        assert!(gain > 1.0 && gain < 8.0,
+                "prefill gain should be modest, got {gain}");
+    }
+
+    #[test]
+    fn decode_saturates_bandwidth_prefill_scales() {
+        let t = jupiter();
+        let shapes = LlamaShapes::llama32_1b();
+        let d1 = phase_perf(System::TenxIree, Phase::Decode, 1, &shapes, &t, 128);
+        let d8 = phase_perf(System::TenxIree, Phase::Decode, 8, &shapes, &t, 128);
+        let p1 = phase_perf(System::TenxIree, Phase::Prefill, 1, &shapes, &t, 128);
+        let p8 = phase_perf(System::TenxIree, Phase::Prefill, 8, &shapes, &t, 128);
+        let d_scale = d8.tokens_per_sec / d1.tokens_per_sec;
+        let p_scale = p8.tokens_per_sec / p1.tokens_per_sec;
+        assert!(d_scale < p_scale,
+                "decode must scale worse than prefill: {d_scale} vs {p_scale}");
+        assert!(!d8.compute_bound, "8-thread decode should be DRAM bound");
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = jupiter();
+        let a = measure_matmul(System::TenxIree, Phase::Decode, 1, 512, 512, &t);
+        let b = measure_matmul(System::TenxIree, Phase::Decode, 1, 512, 512, &t);
+        assert_eq!(a.cycles, b.cycles);
+    }
+}

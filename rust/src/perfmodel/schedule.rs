@@ -1,0 +1,119 @@
+//! The weight-matmul schedule of a Llama-architecture model — the shapes the
+//! perf model prices. Llama-3.2-1B's dimensions are public; this is the exact
+//! per-token contraction list the paper's Table 2 workload executes.
+
+/// Model shape hyper-parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LlamaShapes {
+    pub name: &'static str,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+}
+
+/// One weight contraction: activations [M, k] x weights [k, n].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatmulShape {
+    pub name: &'static str,
+    pub k: usize,
+    pub n: usize,
+    /// How many times it runs per forward pass.
+    pub count: usize,
+}
+
+impl LlamaShapes {
+    /// Llama-3.2-1B-Instruct (public architecture).
+    pub fn llama32_1b() -> LlamaShapes {
+        LlamaShapes {
+            name: "llama-3.2-1b",
+            vocab_size: 128_256,
+            d_model: 2048,
+            n_layers: 16,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 64,
+            ffn_dim: 8192,
+        }
+    }
+
+    /// This repo's tiny serving model (matches python/compile/model.py).
+    pub fn tiny() -> LlamaShapes {
+        LlamaShapes {
+            name: "tiny-llama",
+            vocab_size: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 64,
+            ffn_dim: 512,
+        }
+    }
+
+    /// The distinct weight matmuls of one forward pass, with multiplicities.
+    pub fn weight_matmuls(&self) -> Vec<MatmulShape> {
+        let kv_dim = self.n_kv_heads * self.head_dim;
+        let q_dim = self.n_heads * self.head_dim;
+        let l = self.n_layers;
+        vec![
+            MatmulShape { name: "wq", k: self.d_model, n: q_dim, count: l },
+            MatmulShape { name: "wk", k: self.d_model, n: kv_dim, count: l },
+            MatmulShape { name: "wv", k: self.d_model, n: kv_dim, count: l },
+            MatmulShape { name: "wo", k: q_dim, n: self.d_model, count: l },
+            MatmulShape { name: "w_gate", k: self.d_model, n: self.ffn_dim, count: l },
+            MatmulShape { name: "w_up", k: self.d_model, n: self.ffn_dim, count: l },
+            MatmulShape { name: "w_down", k: self.ffn_dim, n: self.d_model, count: l },
+            MatmulShape { name: "lm_head", k: self.d_model, n: self.vocab_size, count: 1 },
+        ]
+        .into_iter()
+        .flat_map(|m| std::iter::repeat_n(m, m.count))
+        .collect()
+    }
+
+    /// MACs per token in decode (M = 1).
+    pub fn macs_per_token(&self) -> f64 {
+        self.weight_matmuls()
+            .iter()
+            .map(|m| (m.k * m.n) as f64)
+            .sum()
+    }
+
+    /// Total weight parameters in the matmul schedule (excludes embeddings
+    /// and norms, which are not contraction ops).
+    pub fn matmul_params(&self) -> f64 {
+        self.macs_per_token()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_1b_macs_are_about_1_2g() {
+        let s = LlamaShapes::llama32_1b();
+        let g = s.macs_per_token() / 1e9;
+        // 16*(2048*2048 + 2*2048*512 + 2048*2048 + 3*2048*8192) + 2048*128256
+        assert!(g > 1.0 && g < 1.5, "got {g} GMAC/token");
+    }
+
+    #[test]
+    fn schedule_has_expected_entries() {
+        let s = LlamaShapes::llama32_1b();
+        let mm = s.weight_matmuls();
+        assert_eq!(mm.len(), 16 * 7 + 1);
+        assert_eq!(mm.last().unwrap().name, "lm_head");
+        assert_eq!(mm.last().unwrap().n, 128_256);
+    }
+
+    #[test]
+    fn tiny_matches_manifest_dims() {
+        let s = LlamaShapes::tiny();
+        assert_eq!(s.d_model, 256);
+        assert_eq!(s.weight_matmuls().len(), 4 * 7 + 1);
+    }
+}

@@ -1,0 +1,230 @@
+//! Minimal property-based testing framework (the offline vendor set has no
+//! proptest/quickcheck). Supports seeded generators, configurable case
+//! counts, and greedy shrinking of failing integer tuples.
+//!
+//! Usage (`no_run`: doctest binaries don't get the xla rpath):
+//! ```no_run
+//! use tenx_iree::propcheck::{forall, prop_assert, Config};
+//! forall(Config::default().cases(200), |g| {
+//!     let m = g.usize_in(1, 64);
+//!     let n = g.usize_in(1, 64);
+//!     prop_assert(m * n >= m, "area >= side")
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Property outcome; use `prop_assert` to build one.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0xC0FFEE, max_shrink_steps: 500 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Generator handle passed to properties. Records every drawn integer so a
+/// failing case can be shrunk and replayed.
+pub struct Gen {
+    rng: Rng,
+    /// (value, lo, hi) of each draw, for shrinking.
+    draws: Vec<(i64, i64, i64)>,
+    /// When replaying a shrunk case, draws come from here instead.
+    replay: Option<Vec<i64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), draws: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn replay_of(values: Vec<i64>, seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            draws: Vec::new(),
+            replay: Some(values),
+            cursor: 0,
+        }
+    }
+
+    /// Draw an integer in [lo, hi] inclusive.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let v = if let Some(replay) = &self.replay {
+            // Clamp replayed values into range (ranges can drift as earlier
+            // draws shrink).
+            let raw = replay.get(self.cursor).copied().unwrap_or(lo);
+            raw.clamp(lo, hi)
+        } else {
+            self.rng.range(lo, hi + 1)
+        };
+        self.cursor += 1;
+        self.draws.push((v, lo, hi));
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_in(lo as i64, hi as i64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.i64_in(0, 1) == 1
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        // 24-bit resolution keeps draws shrinkable as integers.
+        self.i64_in(0, (1 << 24) - 1) as f32 / (1 << 24) as f32
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32_unit() * (hi - lo)
+    }
+
+    /// Vec of f32 in [-scale, scale) with generated length in [min_len, max_len].
+    pub fn f32_vec(&mut self, min_len: usize, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f32_in(-scale, scale)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases; on failure, shrink the drawn
+/// integers toward their lower bounds and panic with the minimal case found.
+pub fn forall(cfg: Config, prop: impl Fn(&mut Gen) -> PropResult) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            let draws = g.draws.clone();
+            let (min_draws, min_msg) = shrink(&cfg, &prop, draws, msg, seed);
+            panic!(
+                "property failed (case {case}, seed {seed:#x}): {min_msg}\n  minimal draws: {:?}",
+                min_draws
+            );
+        }
+    }
+}
+
+fn shrink(
+    cfg: &Config,
+    prop: &impl Fn(&mut Gen) -> PropResult,
+    draws: Vec<(i64, i64, i64)>,
+    msg: String,
+    seed: u64,
+) -> (Vec<i64>, String) {
+    let mut current: Vec<i64> = draws.iter().map(|d| d.0).collect();
+    let lows: Vec<i64> = draws.iter().map(|d| d.1).collect();
+    let mut cur_msg = msg;
+    let mut steps = 0;
+    let mut progress = true;
+    while progress && steps < cfg.max_shrink_steps {
+        progress = false;
+        for i in 0..current.len() {
+            // Bisect for the smallest failing value of draw i (holding the
+            // other draws fixed): invariant — `hi` fails, values < `lo_cand`
+            // are either passing or untested lower bound.
+            let lo = lows.get(i).copied().unwrap_or(0);
+            let mut hi = current[i];
+            let mut lo_cand = lo;
+            while lo_cand < hi && steps < cfg.max_shrink_steps {
+                steps += 1;
+                let mid = lo_cand + (hi - lo_cand) / 2;
+                let saved = current[i];
+                current[i] = mid;
+                let mut g = Gen::replay_of(current.clone(), seed);
+                match prop(&mut g) {
+                    Err(m) => {
+                        cur_msg = m;
+                        hi = mid;
+                        if saved != mid {
+                            progress = true;
+                        }
+                    }
+                    Ok(()) => {
+                        lo_cand = mid + 1;
+                    }
+                }
+                current[i] = hi;
+            }
+        }
+    }
+    (current, cur_msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(Config::default().cases(50), |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            prop_assert(a + b >= a, "monotone add")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(Config::default().cases(200), |g| {
+            let a = g.usize_in(0, 1000);
+            prop_assert(a < 900, "a < 900")
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            forall(Config::default().cases(100), |g| {
+                let a = g.i64_in(0, 1_000_000);
+                prop_assert(a < 5000, "a < 5000")
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        // The shrinker should drive the draw down to exactly 5000.
+        assert!(msg.contains("[5000]"), "unshrunk: {msg}");
+    }
+
+    #[test]
+    fn f32_draws_in_range() {
+        forall(Config::default().cases(100), |g| {
+            let v = g.f32_in(-2.0, 3.0);
+            prop_assert((-2.0..=3.0).contains(&v), "range")
+        });
+    }
+}

@@ -1,0 +1,540 @@
+//! RVV 1.0 subset simulator — the stand-in for the MILK-V Jupiter testbed.
+//!
+//! Functional + timing simulation of the vector instructions the paper's
+//! microkernels use (`vsetvli`, unit-stride loads/stores, `vfwmacc.vf`,
+//! `vfmacc.vf`, reductions, moves) plus scalar loads and loop-overhead
+//! accounting. Kernels are expressed as Rust driver functions that issue
+//! instructions to the machine (a macro-op trace — control flow costs are
+//! issued explicitly as scalar ops), which keeps the simulator simple while
+//! preserving exactly what the paper's claims depend on: instruction counts,
+//! VLEN scaling, register-group pressure, and cache behaviour of the memory
+//! stream.
+//!
+//! The cost model is an in-order single-issue pipe with per-chime vector
+//! costs (a VLEN-wide op retires in `VLEN/dlen` chimes, SpacemiT X60-style
+//! dlen = 128) and additive cache penalties from `cachesim`.
+
+use crate::cachesim::CacheHierarchy;
+use crate::util::f16::F16;
+
+/// Selected element width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sew {
+    E16,
+    E32,
+}
+
+impl Sew {
+    pub fn bytes(self) -> usize {
+        match self {
+            Sew::E16 => 2,
+            Sew::E32 => 4,
+        }
+    }
+}
+
+/// Execution statistics (the profile the benches report).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExecStats {
+    pub cycles: u64,
+    pub vector_insns: u64,
+    pub scalar_insns: u64,
+    pub vector_loads: u64,
+    pub vector_stores: u64,
+    pub scalar_loads: u64,
+    pub bytes_loaded: u64,
+    pub bytes_stored: u64,
+    pub cache_penalty_cycles: u64,
+    /// Spill traffic (vse32/vle32 pairs emitted because a tile exceeded the
+    /// register file) — the paper's "register spills and reloads".
+    pub spill_insns: u64,
+}
+
+impl ExecStats {
+    pub fn l1_miss_rate(&self, cache: &Option<CacheHierarchy>) -> f64 {
+        cache.as_ref().map(|c| c.l1.miss_rate()).unwrap_or(0.0)
+    }
+}
+
+/// Machine configuration.
+#[derive(Debug, Clone)]
+pub struct RvvConfig {
+    pub vlen_bits: usize,
+    /// Datapath width in bits: a VLEN-wide op takes VLEN/dlen chimes.
+    pub dlen_bits: usize,
+    pub vector_regs: usize,
+    /// Unit-stride load/store issue cycles per chime.
+    pub mem_chime_cycles: u64,
+    /// Arithmetic issue cycles per chime.
+    pub alu_chime_cycles: u64,
+    /// Scalar instruction cycles.
+    pub scalar_cycles: u64,
+    /// Extra cycles for a reduction (log-depth tree + scalar move).
+    pub reduction_extra: u64,
+}
+
+impl RvvConfig {
+    /// SpacemiT X60-flavoured core (MILK-V Jupiter): VLEN=256, DLEN=128.
+    pub fn jupiter() -> RvvConfig {
+        RvvConfig {
+            vlen_bits: 256,
+            dlen_bits: 128,
+            vector_regs: 32,
+            mem_chime_cycles: 1,
+            alu_chime_cycles: 1,
+            scalar_cycles: 1,
+            reduction_extra: 6,
+        }
+    }
+
+    pub fn with_vlen(vlen_bits: usize) -> RvvConfig {
+        RvvConfig { vlen_bits, ..Self::jupiter() }
+    }
+
+    pub fn vlen_bytes(&self) -> usize {
+        self.vlen_bits / 8
+    }
+
+    /// VLMAX for a given SEW/LMUL.
+    pub fn vlmax(&self, sew: Sew, lmul: usize) -> usize {
+        self.vlen_bits * lmul / (sew.bytes() * 8)
+    }
+
+    fn chimes(&self, lmul: usize) -> u64 {
+        ((self.vlen_bits * lmul).div_ceil(self.dlen_bits)) as u64
+    }
+}
+
+/// The simulated machine.
+pub struct Rvv {
+    pub cfg: RvvConfig,
+    /// 32 vector registers, raw bytes.
+    vregs: Vec<Vec<u8>>,
+    /// Scalar FP registers (f32 domain; f16 loads widen on read like flh+fcvt).
+    pub fregs: [f32; 32],
+    /// Flat byte-addressed memory.
+    pub mem: Vec<u8>,
+    /// Current vtype/vl.
+    pub vl: usize,
+    pub sew: Sew,
+    pub lmul: usize,
+    pub stats: ExecStats,
+    pub cache: Option<CacheHierarchy>,
+}
+
+impl Rvv {
+    pub fn new(cfg: RvvConfig, mem_bytes: usize) -> Rvv {
+        let vbytes = cfg.vlen_bytes();
+        Rvv {
+            vregs: vec![vec![0u8; vbytes]; cfg.vector_regs],
+            fregs: [0.0; 32],
+            mem: vec![0u8; mem_bytes],
+            vl: 0,
+            sew: Sew::E16,
+            lmul: 1,
+            stats: ExecStats::default(),
+            cache: None,
+            cfg,
+        }
+    }
+
+    pub fn with_cache(mut self, cache: CacheHierarchy) -> Rvv {
+        self.cache = Some(cache);
+        self
+    }
+
+    // ---- memory helpers -------------------------------------------------
+
+    pub fn write_f16(&mut self, addr: usize, v: F16) {
+        self.mem[addr..addr + 2].copy_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn write_f16_slice(&mut self, addr: usize, vs: &[F16]) {
+        for (i, v) in vs.iter().enumerate() {
+            self.write_f16(addr + i * 2, *v);
+        }
+    }
+
+    pub fn write_f32_slice(&mut self, addr: usize, vs: &[f32]) {
+        for (i, v) in vs.iter().enumerate() {
+            self.mem[addr + i * 4..addr + i * 4 + 4]
+                .copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn read_f16(&self, addr: usize) -> F16 {
+        F16::from_bits(u16::from_le_bytes([self.mem[addr], self.mem[addr + 1]]))
+    }
+
+    pub fn read_f32(&self, addr: usize) -> f32 {
+        f32::from_le_bytes([
+            self.mem[addr], self.mem[addr + 1], self.mem[addr + 2],
+            self.mem[addr + 3],
+        ])
+    }
+
+    pub fn read_f32_slice(&self, addr: usize, n: usize) -> Vec<f32> {
+        (0..n).map(|i| self.read_f32(addr + 4 * i)).collect()
+    }
+
+    fn mem_access(&mut self, addr: usize, size: usize) {
+        if let Some(c) = &mut self.cache {
+            let p = c.access(addr as u64, size);
+            self.stats.cache_penalty_cycles += p;
+            self.stats.cycles += p;
+        }
+    }
+
+    // ---- vector register lane accessors ----------------------------------
+
+    fn lane_f16(&self, vreg: usize, lane: usize) -> F16 {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 2) / vb;
+        let off = (lane * 2) % vb;
+        F16::from_bits(u16::from_le_bytes([
+            self.vregs[reg][off],
+            self.vregs[reg][off + 1],
+        ]))
+    }
+
+    fn set_lane_f16(&mut self, vreg: usize, lane: usize, v: F16) {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 2) / vb;
+        let off = (lane * 2) % vb;
+        self.vregs[reg][off..off + 2].copy_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn lane_f32(&self, vreg: usize, lane: usize) -> f32 {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 4) / vb;
+        let off = (lane * 4) % vb;
+        f32::from_le_bytes([
+            self.vregs[reg][off],
+            self.vregs[reg][off + 1],
+            self.vregs[reg][off + 2],
+            self.vregs[reg][off + 3],
+        ])
+    }
+
+    fn set_lane_f32(&mut self, vreg: usize, lane: usize, v: f32) {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 4) / vb;
+        let off = (lane * 4) % vb;
+        self.vregs[reg][off..off + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    fn check_group(&self, vreg: usize, lmul: usize) {
+        assert!(vreg + lmul <= self.cfg.vector_regs,
+                "vector group v{vreg}..v{} exceeds register file",
+                vreg + lmul - 1);
+    }
+
+    // ---- instructions -----------------------------------------------------
+
+    /// `vsetvli` — configure SEW/LMUL, return vl = min(avl, VLMAX).
+    pub fn vsetvli(&mut self, avl: usize, sew: Sew, lmul: usize) -> usize {
+        assert!(matches!(lmul, 1 | 2 | 4 | 8), "invalid LMUL {lmul}");
+        self.sew = sew;
+        self.lmul = lmul;
+        self.vl = avl.min(self.cfg.vlmax(sew, lmul));
+        self.stats.scalar_insns += 1;
+        self.stats.cycles += self.cfg.scalar_cycles;
+        self.vl
+    }
+
+    /// `vle16.v vd, (addr)` — unit-stride f16 load of vl lanes.
+    pub fn vle16(&mut self, vd: usize, addr: usize) {
+        assert_eq!(self.sew, Sew::E16, "vle16 needs SEW=16");
+        self.check_group(vd, self.lmul);
+        for lane in 0..self.vl {
+            let v = self.read_f16(addr + lane * 2);
+            self.set_lane_f16(vd, lane, v);
+        }
+        let bytes = self.vl * 2;
+        self.stats.vector_insns += 1;
+        self.stats.vector_loads += 1;
+        self.stats.bytes_loaded += bytes as u64;
+        self.stats.cycles += self.cfg.mem_chime_cycles * self.cfg.chimes(self.lmul);
+        self.mem_access(addr, bytes);
+    }
+
+    /// `vle32.v vd, (addr)` — unit-stride f32 load (LMUL from vtype).
+    pub fn vle32(&mut self, vd: usize, addr: usize) {
+        assert_eq!(self.sew, Sew::E32, "vle32 needs SEW=32");
+        self.check_group(vd, self.lmul);
+        for lane in 0..self.vl {
+            let v = self.read_f32(addr + lane * 4);
+            self.set_lane_f32(vd, lane, v);
+        }
+        let bytes = self.vl * 4;
+        self.stats.vector_insns += 1;
+        self.stats.vector_loads += 1;
+        self.stats.bytes_loaded += bytes as u64;
+        self.stats.cycles += self.cfg.mem_chime_cycles * self.cfg.chimes(self.lmul);
+        self.mem_access(addr, bytes);
+    }
+
+    /// `vse32.v vs, (addr)` — unit-stride f32 store. The store data group has
+    /// EEW=32: when the *current* vtype is e16/mX, the widened group is 2X.
+    pub fn vse32(&mut self, vs: usize, addr: usize, lanes: usize, lmul32: usize) {
+        self.check_group(vs, lmul32);
+        for lane in 0..lanes {
+            let v = self.lane_f32(vs, lane);
+            self.mem[addr + lane * 4..addr + lane * 4 + 4]
+                .copy_from_slice(&v.to_le_bytes());
+        }
+        let bytes = lanes * 4;
+        self.stats.vector_insns += 1;
+        self.stats.vector_stores += 1;
+        self.stats.bytes_stored += bytes as u64;
+        self.stats.cycles += self.cfg.mem_chime_cycles * self.cfg.chimes(lmul32);
+        self.mem_access(addr, bytes);
+    }
+
+    /// Reload counterpart of `vse32` (spill restore).
+    pub fn vle32_raw(&mut self, vd: usize, addr: usize, lanes: usize,
+                     lmul32: usize) {
+        self.check_group(vd, lmul32);
+        for lane in 0..lanes {
+            let v = self.read_f32(addr + lane * 4);
+            self.set_lane_f32(vd, lane, v);
+        }
+        let bytes = lanes * 4;
+        self.stats.vector_insns += 1;
+        self.stats.vector_loads += 1;
+        self.stats.bytes_loaded += bytes as u64;
+        self.stats.cycles += self.cfg.mem_chime_cycles * self.cfg.chimes(lmul32);
+        self.mem_access(addr, bytes);
+    }
+
+    /// `flh` + implicit widen: load a f16 scalar into an f register.
+    pub fn flh(&mut self, fd: usize, addr: usize) {
+        self.fregs[fd] = self.read_f16(addr).to_f32();
+        self.stats.scalar_insns += 1;
+        self.stats.scalar_loads += 1;
+        self.stats.bytes_loaded += 2;
+        self.stats.cycles += self.cfg.scalar_cycles;
+        self.mem_access(addr, 2);
+    }
+
+    /// `flw` — f32 scalar load.
+    pub fn flw(&mut self, fd: usize, addr: usize) {
+        self.fregs[fd] = self.read_f32(addr);
+        self.stats.scalar_insns += 1;
+        self.stats.scalar_loads += 1;
+        self.stats.bytes_loaded += 4;
+        self.stats.cycles += self.cfg.scalar_cycles;
+        self.mem_access(addr, 4);
+    }
+
+    /// Scalar FMA `fmadd.s fd += fa * fb` (used by the scalar baselines).
+    pub fn fmadd(&mut self, fd: usize, fa: usize, fb: usize) {
+        self.fregs[fd] += self.fregs[fa] * self.fregs[fb];
+        self.stats.scalar_insns += 1;
+        self.stats.cycles += self.cfg.scalar_cycles;
+    }
+
+    /// `fsw` — f32 scalar store.
+    pub fn fsw(&mut self, fs: usize, addr: usize) {
+        let v = self.fregs[fs];
+        self.mem[addr..addr + 4].copy_from_slice(&v.to_le_bytes());
+        self.stats.scalar_insns += 1;
+        self.stats.bytes_stored += 4;
+        self.stats.cycles += self.cfg.scalar_cycles;
+        self.mem_access(addr, 4);
+    }
+
+    /// `vmv.v.i vd, 0` over an EEW=32 group of `lmul32` regs (acc zeroing).
+    pub fn vzero_f32(&mut self, vd: usize, lanes: usize, lmul32: usize) {
+        self.check_group(vd, lmul32);
+        for lane in 0..lanes {
+            self.set_lane_f32(vd, lane, 0.0);
+        }
+        self.stats.vector_insns += 1;
+        self.stats.cycles += self.cfg.alu_chime_cycles * self.cfg.chimes(lmul32);
+    }
+
+    /// `vfwmacc.vf vd, fs, vs2` — widening FMA: f32(vd) += f16(fs) * f16(vs2).
+    /// vs2 has EEW=16 (current vtype LMUL); vd has EEW=32 (2x LMUL group).
+    pub fn vfwmacc_vf(&mut self, vd: usize, fs: usize, vs2: usize) {
+        assert_eq!(self.sew, Sew::E16, "vfwmacc.vf operates on e16 sources");
+        self.check_group(vs2, self.lmul);
+        self.check_group(vd, self.lmul * 2);
+        let a = F16::from_f32(self.fregs[fs]).to_f32(); // scalar already f16-exact
+        for lane in 0..self.vl {
+            let b = self.lane_f16(vs2, lane).to_f32();
+            let acc = self.lane_f32(vd, lane);
+            self.set_lane_f32(vd, lane, acc + a * b);
+        }
+        self.stats.vector_insns += 1;
+        // widening op produces a 2*LMUL result: cost scales with output chimes
+        self.stats.cycles += self.cfg.alu_chime_cycles * self.cfg.chimes(self.lmul * 2);
+    }
+
+    /// `vfmacc.vf vd, fs, vs2` — f32 FMA on an EEW=32 group.
+    pub fn vfmacc_vf(&mut self, vd: usize, fs: usize, vs2: usize) {
+        assert_eq!(self.sew, Sew::E32, "vfmacc.vf here operates on e32");
+        self.check_group(vs2, self.lmul);
+        self.check_group(vd, self.lmul);
+        let a = self.fregs[fs];
+        for lane in 0..self.vl {
+            let b = self.lane_f32(vs2, lane);
+            let acc = self.lane_f32(vd, lane);
+            self.set_lane_f32(vd, lane, acc + a * b);
+        }
+        self.stats.vector_insns += 1;
+        self.stats.cycles += self.cfg.alu_chime_cycles * self.cfg.chimes(self.lmul);
+    }
+
+    /// `vfwmul` + `vfredusum` fused helper: widening dot-product reduction of
+    /// two e16 groups (llama.cpp-style row dot product). Returns the f32 sum
+    /// of f16(vs1)*f16(vs2) over vl lanes, sequential order.
+    pub fn vfwdot_red(&mut self, vs1: usize, vs2: usize) -> f32 {
+        assert_eq!(self.sew, Sew::E16);
+        self.check_group(vs1, self.lmul);
+        self.check_group(vs2, self.lmul);
+        let mut acc = 0.0f32;
+        for lane in 0..self.vl {
+            acc += self.lane_f16(vs1, lane).to_f32()
+                * self.lane_f16(vs2, lane).to_f32();
+        }
+        self.stats.vector_insns += 2; // vfwmul + vfredusum
+        self.stats.cycles += self.cfg.alu_chime_cycles
+            * (self.cfg.chimes(self.lmul * 2) + self.cfg.chimes(self.lmul * 2))
+            + self.cfg.reduction_extra;
+        acc
+    }
+
+    /// Zero-cost lane write: used by kernel models whose conversion op's
+    /// *cost* is issued separately (e.g. `vfwcvt` modelled as one ALU op)
+    /// but whose data path is easiest to express per-lane.
+    pub fn poke_f32_lane(&mut self, vreg: usize, lane: usize, v: f32) {
+        self.set_lane_f32(vreg, lane, v);
+    }
+
+    /// Loop/control overhead: `n` scalar instructions (addi/bnez/mv...).
+    pub fn scalar_ops(&mut self, n: u64) {
+        self.stats.scalar_insns += n;
+        self.stats.cycles += n * self.cfg.scalar_cycles;
+    }
+
+    /// Read back an EEW=32 accumulator group (test introspection).
+    pub fn acc_f32(&self, vd: usize, lanes: usize) -> Vec<f32> {
+        (0..lanes).map(|l| self.lane_f32(vd, l)).collect()
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+        if let Some(c) = &mut self.cache {
+            c.reset_stats();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine(vlen: usize) -> Rvv {
+        Rvv::new(RvvConfig::with_vlen(vlen), 1 << 16)
+    }
+
+    #[test]
+    fn vsetvli_caps_at_vlmax() {
+        let mut m = machine(256);
+        assert_eq!(m.vsetvli(1000, Sew::E16, 2), 32); // 256*2/16
+        assert_eq!(m.vsetvli(10, Sew::E16, 2), 10);
+        assert_eq!(m.vsetvli(1000, Sew::E32, 8), 64);
+        assert_eq!(m.vsetvli(1000, Sew::E16, 1), 16);
+    }
+
+    #[test]
+    fn load_compute_store_roundtrip() {
+        let mut m = machine(256);
+        let xs: Vec<F16> = (0..32).map(|i| F16::from_f32(i as f32 / 4.0)).collect();
+        m.write_f16_slice(0x100, &xs);
+        m.vsetvli(32, Sew::E16, 2);
+        m.vle16(8, 0x100);
+        // acc zero in v16 (e32 group of 4), fs=1.0 broadcast FMA
+        m.vzero_f32(16, 32, 4);
+        m.fregs[1] = 2.0;
+        m.vfwmacc_vf(16, 1, 8);
+        let acc = m.acc_f32(16, 32);
+        for (i, a) in acc.iter().enumerate() {
+            assert_eq!(*a, 2.0 * (i as f32 / 4.0));
+        }
+        m.vse32(16, 0x1000, 32, 4);
+        assert_eq!(m.read_f32_slice(0x1000, 32), acc);
+    }
+
+    #[test]
+    fn vfwmacc_widens_exactly() {
+        // f16 inputs whose product is not representable in f16 but is in f32.
+        let mut m = machine(128);
+        m.vsetvli(8, Sew::E16, 1);
+        let v = F16::from_f32(0.1); // inexact in f16
+        let exact = v.to_f32();
+        m.write_f16_slice(0, &vec![v; 8]);
+        m.vle16(2, 0);
+        m.vzero_f32(4, 8, 2);
+        m.fregs[0] = exact;
+        m.vfwmacc_vf(4, 0, 2);
+        for a in m.acc_f32(4, 8) {
+            assert_eq!(a, exact * exact); // full f32 product, no f16 rounding
+        }
+    }
+
+    #[test]
+    fn cycle_costs_scale_with_lmul_and_vlen() {
+        // VLEN=256, DLEN=128: LMUL=2 op = 4 chimes; widened acc = 8 chimes.
+        let mut m = machine(256);
+        m.vsetvli(32, Sew::E16, 2);
+        let c0 = m.stats.cycles;
+        m.vle16(0, 0);
+        assert_eq!(m.stats.cycles - c0, 4);
+        let c1 = m.stats.cycles;
+        m.fregs[0] = 1.0;
+        m.vfwmacc_vf(8, 0, 0);
+        assert_eq!(m.stats.cycles - c1, 8);
+    }
+
+    #[test]
+    fn group_overflow_panics() {
+        let mut m = machine(256);
+        m.vsetvli(16, Sew::E16, 4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.vfwmacc_vf(28, 0, 0); // dest group v28..v35 overflows
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn dot_reduction_matches_scalar() {
+        let mut m = machine(256);
+        let a: Vec<F16> = (0..32).map(|i| F16::from_f32(0.25 * i as f32)).collect();
+        let b: Vec<F16> = (0..32).map(|i| F16::from_f32(0.5 - i as f32 * 0.01)).collect();
+        m.write_f16_slice(0, &a);
+        m.write_f16_slice(0x100, &b);
+        m.vsetvli(32, Sew::E16, 2);
+        m.vle16(0, 0);
+        m.vle16(2, 0x100);
+        let got = m.vfwdot_red(0, 2);
+        let want: f32 = a.iter().zip(&b)
+            .map(|(x, y)| x.to_f32() * y.to_f32())
+            .sum();
+        assert!((got - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cache_penalties_accumulate() {
+        let t = crate::target::TargetDesc::milkv_jupiter();
+        let mut m = Rvv::new(RvvConfig::jupiter(), 1 << 16)
+            .with_cache(CacheHierarchy::for_target(&t));
+        m.vsetvli(32, Sew::E16, 2);
+        m.vle16(0, 0); // cold miss: L1 + L2 penalties
+        let pen = m.stats.cache_penalty_cycles;
+        assert_eq!(pen, t.l1d.miss_penalty + t.l2.miss_penalty);
+        m.vle16(0, 0); // hot
+        assert_eq!(m.stats.cache_penalty_cycles, pen);
+    }
+}

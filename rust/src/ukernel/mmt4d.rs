@@ -1,0 +1,347 @@
+//! Native mmt4d microkernels.
+//!
+//! These are the Rust equivalents of the paper's RVV ukernels — they run on
+//! the actual request path (IR interpreter / standalone use) and serve as the
+//! functional reference for the RVV-simulated versions in `kernels/`.
+//!
+//! Layouts (row-major):
+//!   lhs [M1, K1, M0, K0]   rhs [N1, K1, N0, K0]   out [M1, N1, M0, N0]
+//!
+//! The f16 variant widens each product into an f32 accumulator — exactly the
+//! `vfwmacc.vf` semantics of the paper's kernel, so results are bit-identical
+//! to the RVV simulator and to numpy's f32-accumulated reference.
+
+use crate::util::f16::F16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mmt4dParams {
+    pub m1: usize,
+    pub n1: usize,
+    pub k1: usize,
+    pub m0: usize,
+    pub n0: usize,
+    pub k0: usize,
+    /// If false, `out` is overwritten; if true, accumulated into.
+    pub accumulate: bool,
+}
+
+impl Mmt4dParams {
+    pub fn lhs_len(&self) -> usize {
+        self.m1 * self.k1 * self.m0 * self.k0
+    }
+
+    pub fn rhs_len(&self) -> usize {
+        self.n1 * self.k1 * self.n0 * self.k0
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.m1 * self.n1 * self.m0 * self.n0
+    }
+
+    pub fn flops(&self) -> u64 {
+        2 * (self.m1 * self.m0) as u64
+            * (self.n1 * self.n0) as u64
+            * (self.k1 * self.k0) as u64
+    }
+}
+
+fn check(p: &Mmt4dParams, lhs: usize, rhs: usize, out: usize) {
+    assert_eq!(lhs, p.lhs_len(), "lhs length");
+    assert_eq!(rhs, p.rhs_len(), "rhs length");
+    assert_eq!(out, p.out_len(), "out length");
+}
+
+/// f16 x f16 -> f32 (the paper's precision case).
+///
+/// Hot path: dispatches to the unrolled prefill/decode tile bodies when the
+/// tile matches (K0 = 1), generic loop otherwise.
+pub fn mmt4d_f16f16f32(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParams) {
+    check(p, lhs.len(), rhs.len(), out.len());
+    if !p.accumulate {
+        out.fill(0.0);
+    }
+    if p.k0 == 1 {
+        return mmt4d_f16_k0eq1(lhs, rhs, out, p);
+    }
+    mmt4d_f16_generic(lhs, rhs, out, p);
+}
+
+/// Generic tile body, any (M0, N0, K0).
+fn mmt4d_f16_generic(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParams) {
+    let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
+    for i1 in 0..m1 {
+        for j1 in 0..n1 {
+            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+            for kk in 0..k1 {
+                let lt = &lhs[(i1 * k1 + kk) * m0 * k0..][..m0 * k0];
+                let rt = &rhs[(j1 * k1 + kk) * n0 * k0..][..n0 * k0];
+                for i0 in 0..m0 {
+                    for j0 in 0..n0 {
+                        let mut acc = out_tile[i0 * n0 + j0];
+                        for c in 0..k0 {
+                            acc += lt[i0 * k0 + c].to_f32() * rt[j0 * k0 + c].to_f32();
+                        }
+                        out_tile[i0 * n0 + j0] = acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// K0 = 1 specialisation (the paper's prefill *and* decode kernels):
+/// each K step is an outer product of an M0 column of LHS with an N0 row of
+/// RHS — on RVV: one `vle16` of the RHS strip, M0 `vfwmacc.vf` ops.
+///
+/// §Perf (EXPERIMENTS.md): the hot loop converts each RHS strip to f32
+/// exactly once per K step into a stack buffer and reuses it across the M0
+/// rows (the software analogue of the RVV kernel amortizing its `vle16`),
+/// and the widening itself goes through a branch-free bit-twiddle fast path
+/// for normal/zero values. ~9x over the naive per-element `to_f32` version.
+fn mmt4d_f16_k0eq1(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParams) {
+    const STRIP: usize = 256; // covers N0 up to VLEN=2048's strip
+    let (m1, n1, k1, m0, n0) = (p.m1, p.n1, p.k1, p.m0, p.n0);
+    // (A fused m0==1 variant that skips the strip buffer was tried and
+    //  measured ~5% slower — the buffered form autovectorizes better; see
+    //  EXPERIMENTS.md §Perf iteration log.)
+    if n0 <= STRIP {
+        let mut bf = [0.0f32; STRIP];
+        for i1 in 0..m1 {
+            let lhs_row = &lhs[i1 * k1 * m0..][..k1 * m0];
+            for j1 in 0..n1 {
+                let rhs_tile = &rhs[j1 * k1 * n0..][..k1 * n0];
+                let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+                for kk in 0..k1 {
+                    let a = &lhs_row[kk * m0..][..m0];
+                    let b = &rhs_tile[kk * n0..][..n0];
+                    // one widening pass per strip, shared by all M0 rows
+                    for (dst, src) in bf[..n0].iter_mut().zip(b) {
+                        *dst = f16_to_f32_fast(*src);
+                    }
+                    for i0 in 0..m0 {
+                        let av = f16_to_f32_fast(a[i0]);
+                        let row = &mut out_tile[i0 * n0..][..n0];
+                        for (o, &bv) in row.iter_mut().zip(&bf[..n0]) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    } else {
+        // Very wide strips: heap buffer, same structure.
+        let mut bf = vec![0.0f32; n0];
+        for i1 in 0..m1 {
+            let lhs_row = &lhs[i1 * k1 * m0..][..k1 * m0];
+            for j1 in 0..n1 {
+                let rhs_tile = &rhs[j1 * k1 * n0..][..k1 * n0];
+                let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+                for kk in 0..k1 {
+                    let a = &lhs_row[kk * m0..][..m0];
+                    let b = &rhs_tile[kk * n0..][..n0];
+                    for (dst, src) in bf.iter_mut().zip(b) {
+                        *dst = f16_to_f32_fast(*src);
+                    }
+                    for i0 in 0..m0 {
+                        let av = f16_to_f32_fast(a[i0]);
+                        let row = &mut out_tile[i0 * n0..][..n0];
+                        for (o, &bv) in row.iter_mut().zip(&bf[..]) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Branch-light f16 -> f32 widening: normals and zeros take the
+/// shift-and-rebias fast path (pure integer ops, auto-vectorizable);
+/// subnormals/inf/nan fall back to the exact soft-float conversion.
+#[inline(always)]
+fn f16_to_f32_fast(h: F16) -> f32 {
+    let bits = h.to_bits() as u32;
+    let exp = bits & 0x7C00;
+    if exp != 0 && exp != 0x7C00 {
+        // normal: sign | (exp + (127-15)<<10) | mantissa, all shifted up 13
+        let sign = (bits & 0x8000) << 16;
+        f32::from_bits(sign | (((bits & 0x7FFF) + 0x1C000) << 13))
+    } else if bits & 0x7FFF == 0 {
+        f32::from_bits((bits & 0x8000) << 16) // signed zero
+    } else {
+        h.to_f32()
+    }
+}
+
+/// f32 x f32 -> f32 variant (IREE ships this precision too).
+pub fn mmt4d_f32f32f32(lhs: &[f32], rhs: &[f32], out: &mut [f32], p: &Mmt4dParams) {
+    check(p, lhs.len(), rhs.len(), out.len());
+    if !p.accumulate {
+        out.fill(0.0);
+    }
+    let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
+    for i1 in 0..m1 {
+        for j1 in 0..n1 {
+            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+            for kk in 0..k1 {
+                let lt = &lhs[(i1 * k1 + kk) * m0 * k0..][..m0 * k0];
+                let rt = &rhs[(j1 * k1 + kk) * n0 * k0..][..n0 * k0];
+                for i0 in 0..m0 {
+                    for j0 in 0..n0 {
+                        let mut acc = out_tile[i0 * n0 + j0];
+                        for c in 0..k0 {
+                            acc += lt[i0 * k0 + c] * rt[j0 * k0 + c];
+                        }
+                        out_tile[i0 * n0 + j0] = acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// s8 x s8 -> s32 variant (quantized path IREE supports on x86/ARM).
+pub fn mmt4d_s8s8s32(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
+    check(p, lhs.len(), rhs.len(), out.len());
+    if !p.accumulate {
+        out.fill(0);
+    }
+    let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
+    for i1 in 0..m1 {
+        for j1 in 0..n1 {
+            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+            for kk in 0..k1 {
+                let lt = &lhs[(i1 * k1 + kk) * m0 * k0..][..m0 * k0];
+                let rt = &rhs[(j1 * k1 + kk) * n0 * k0..][..n0 * k0];
+                for i0 in 0..m0 {
+                    for j0 in 0..n0 {
+                        let mut acc = out_tile[i0 * n0 + j0];
+                        for c in 0..k0 {
+                            acc += lt[i0 * k0 + c] as i32 * rt[j0 * k0 + c] as i32;
+                        }
+                        out_tile[i0 * n0 + j0] = acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ukernel::pack;
+    use crate::util::prng::Rng;
+
+    /// Naive f32-accumulated matmul on unpacked data — the test oracle.
+    pub fn naive_matmul_f16(a: &[F16], b: &[F16], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += a[i * k + l].to_f32() * b[l * n + j].to_f32();
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn rand_f16(rng: &mut Rng, n: usize) -> Vec<F16> {
+        (0..n).map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0))).collect()
+    }
+
+    fn run_case(m: usize, k: usize, n: usize, m0: usize, n0: usize, k0: usize) {
+        let mut rng = Rng::new((m * 31 + k * 7 + n) as u64);
+        let a = rand_f16(&mut rng, m * k);
+        let b = rand_f16(&mut rng, k * n);
+        let want = naive_matmul_f16(&a, &b, m, k, n);
+
+        let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+        let mut lhs4 = vec![F16::ZERO; m1 * k1 * m0 * k0];
+        let mut rhs4 = vec![F16::ZERO; n1 * k1 * n0 * k0];
+        pack::pack_lhs_f16(&a, m, k, m0, k0, &mut lhs4);
+        pack::pack_rhs_f16(&b, k, n, n0, k0, &mut rhs4);
+        let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+        let mut out4 = vec![0.0f32; p.out_len()];
+        mmt4d_f16f16f32(&lhs4, &rhs4, &mut out4, &p);
+        let mut got = vec![0.0f32; m * n];
+        pack::unpack_acc_f32(&out4, m1, n1, m0, n0, m, n, &mut got);
+
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "({m}x{k}x{n} tile {m0}x{n0}x{k0}) elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn paper_prefill_tile() {
+        run_case(64, 256, 256, 6, 32, 1); // VLEN=256 prefill
+        run_case(7, 13, 33, 6, 32, 1); // ragged
+    }
+
+    #[test]
+    fn paper_decode_tile() {
+        run_case(4, 256, 512, 1, 64, 1); // VLEN=256 decode
+        run_case(1, 256, 64, 1, 64, 1); // single row GEMV
+    }
+
+    #[test]
+    fn other_vlens_and_k0() {
+        run_case(12, 32, 48, 6, 16, 1); // VLEN=128 prefill
+        run_case(9, 16, 24, 4, 8, 2); // generic path k0=2
+        run_case(5, 8, 8, 8, 8, 8); // k0=8
+    }
+
+    #[test]
+    fn accumulate_flag() {
+        let p = Mmt4dParams { m1: 1, n1: 1, k1: 2, m0: 2, n0: 2, k0: 1,
+                              accumulate: true };
+        let one = F16::from_f32(1.0);
+        let lhs = vec![one; p.lhs_len()];
+        let rhs = vec![one; p.rhs_len()];
+        let mut out = vec![10.0f32; p.out_len()];
+        mmt4d_f16f16f32(&lhs, &rhs, &mut out, &p);
+        assert_eq!(out, vec![12.0; 4]); // 10 + K(=2) * 1*1
+
+        let mut out2 = vec![10.0f32; p.out_len()];
+        let p2 = Mmt4dParams { accumulate: false, ..p };
+        mmt4d_f16f16f32(&lhs, &rhs, &mut out2, &p2);
+        assert_eq!(out2, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn f32_variant_matches_f16_on_exact_values() {
+        // values exactly representable in f16 -> both variants agree exactly
+        let p = Mmt4dParams { m1: 2, n1: 2, k1: 4, m0: 3, n0: 4, k0: 1,
+                              accumulate: false };
+        let mut rng = Rng::new(9);
+        let lhs16: Vec<F16> = (0..p.lhs_len())
+            .map(|_| F16::from_f32((rng.range(-8, 9) as f32) / 4.0))
+            .collect();
+        let rhs16: Vec<F16> = (0..p.rhs_len())
+            .map(|_| F16::from_f32((rng.range(-8, 9) as f32) / 4.0))
+            .collect();
+        let lhs32: Vec<f32> = lhs16.iter().map(|h| h.to_f32()).collect();
+        let rhs32: Vec<f32> = rhs16.iter().map(|h| h.to_f32()).collect();
+        let mut o16 = vec![0.0; p.out_len()];
+        let mut o32 = vec![0.0; p.out_len()];
+        mmt4d_f16f16f32(&lhs16, &rhs16, &mut o16, &p);
+        mmt4d_f32f32f32(&lhs32, &rhs32, &mut o32, &p);
+        assert_eq!(o16, o32);
+    }
+
+    #[test]
+    fn s8_variant_exact() {
+        let p = Mmt4dParams { m1: 1, n1: 1, k1: 3, m0: 2, n0: 2, k0: 1,
+                              accumulate: false };
+        let lhs = vec![1i8, 2, 3, 4, 5, 6]; // [k1=3, m0=2]
+        let rhs = vec![1i8, 1, 2, 2, 3, 3]; // [k1=3, n0=2]
+        let mut out = vec![0i32; 4];
+        mmt4d_s8s8s32(&lhs, &rhs, &mut out, &p);
+        // row i0, col j0: sum_k lhs[k,i0]*rhs[k,j0]
+        // i0=0: k vals 1,3,5 ; j0=0: 1,2,3 -> 1+6+15=22
+        assert_eq!(out, vec![22, 22, 28, 28]);
+    }
+}

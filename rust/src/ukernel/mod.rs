@@ -1,0 +1,396 @@
+//! Microkernel library: native implementations + the symbol registry the
+//! `lower_to_ukernels` pass targets (IREE's `iree_uk_*` naming scheme).
+//!
+//! Symbols encode op, dtypes and tile shape, mirroring how IREE selects a
+//! ukernel variant at materialization time:
+//!
+//!   iree_uk_mmt4d_f16f16f32_6x32x1      (M0 x N0 x K0)
+//!   iree_uk_pack_lhs_f16_6x1            (M0 x K0)
+//!   iree_uk_pack_rhs_f16_32x1           (N0 x K0)
+//!   iree_uk_unpack_f32_6x32             (M0 x N0)
+
+pub mod mmt4d;
+pub mod pack;
+
+pub use mmt4d::{mmt4d_f16f16f32, mmt4d_f32f32f32, mmt4d_s8s8s32, Mmt4dParams};
+
+use crate::ir::tensor::Tensor;
+use crate::ir::types::ElemType;
+use crate::util::f16::F16;
+
+/// Parsed ukernel symbol.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UkernelOp {
+    Mmt4d { lhs: ElemType, rhs: ElemType, out: ElemType, m0: usize, n0: usize, k0: usize },
+    PackLhs { elem: ElemType, m0: usize, k0: usize },
+    PackRhs { elem: ElemType, n0: usize, k0: usize },
+    Unpack { elem: ElemType, m0: usize, n0: usize },
+}
+
+/// Format the registry symbol for an op.
+pub fn symbol_for(op: &UkernelOp) -> String {
+    match op {
+        UkernelOp::Mmt4d { lhs, rhs, out, m0, n0, k0 } => {
+            format!("iree_uk_mmt4d_{}{}{}_{m0}x{n0}x{k0}", lhs.name(),
+                    rhs.name(), out.name())
+        }
+        UkernelOp::PackLhs { elem, m0, k0 } => {
+            format!("iree_uk_pack_lhs_{}_{m0}x{k0}", elem.name())
+        }
+        UkernelOp::PackRhs { elem, n0, k0 } => {
+            format!("iree_uk_pack_rhs_{}_{n0}x{k0}", elem.name())
+        }
+        UkernelOp::Unpack { elem, m0, n0 } => {
+            format!("iree_uk_unpack_{}_{m0}x{n0}", elem.name())
+        }
+    }
+}
+
+/// Parse a registry symbol back into its op descriptor.
+pub fn parse_symbol(sym: &str) -> anyhow::Result<UkernelOp> {
+    let rest = sym
+        .strip_prefix("iree_uk_")
+        .ok_or_else(|| anyhow::anyhow!("not a ukernel symbol: {sym:?}"))?;
+    let (op_dtype, tiles) = rest
+        .rsplit_once('_')
+        .ok_or_else(|| anyhow::anyhow!("bad symbol {sym:?}"))?;
+    let dims: Vec<usize> = tiles
+        .split('x')
+        .map(|d| d.parse().map_err(|_| anyhow::anyhow!("bad tile in {sym:?}")))
+        .collect::<anyhow::Result<_>>()?;
+    if let Some(dt) = op_dtype.strip_prefix("mmt4d_") {
+        anyhow::ensure!(dims.len() == 3, "mmt4d tiles are M0xN0xK0");
+        let (lhs, rhs, out) = parse_dtype_triple(dt)?;
+        return Ok(UkernelOp::Mmt4d { lhs, rhs, out, m0: dims[0], n0: dims[1],
+                                     k0: dims[2] });
+    }
+    if let Some(dt) = op_dtype.strip_prefix("pack_lhs_") {
+        anyhow::ensure!(dims.len() == 2, "pack tiles are 2-d");
+        let elem = ElemType::parse(dt)
+            .ok_or_else(|| anyhow::anyhow!("bad dtype in {sym:?}"))?;
+        return Ok(UkernelOp::PackLhs { elem, m0: dims[0], k0: dims[1] });
+    }
+    if let Some(dt) = op_dtype.strip_prefix("pack_rhs_") {
+        anyhow::ensure!(dims.len() == 2, "pack tiles are 2-d");
+        let elem = ElemType::parse(dt)
+            .ok_or_else(|| anyhow::anyhow!("bad dtype in {sym:?}"))?;
+        return Ok(UkernelOp::PackRhs { elem, n0: dims[0], k0: dims[1] });
+    }
+    if let Some(dt) = op_dtype.strip_prefix("unpack_") {
+        anyhow::ensure!(dims.len() == 2, "unpack tiles are 2-d");
+        let elem = ElemType::parse(dt)
+            .ok_or_else(|| anyhow::anyhow!("bad dtype in {sym:?}"))?;
+        return Ok(UkernelOp::Unpack { elem, m0: dims[0], n0: dims[1] });
+    }
+    anyhow::bail!("unknown ukernel op in {sym:?}")
+}
+
+fn parse_dtype_triple(s: &str) -> anyhow::Result<(ElemType, ElemType, ElemType)> {
+    // e.g. "f16f16f32", "s8s8s32" (s8 = i8, s32 = i32 in IREE's naming)
+    let norm = s.replace("s8", "i8").replace("s32", "i32");
+    let mut out = Vec::new();
+    let mut rest = norm.as_str();
+    while !rest.is_empty() {
+        let mut matched = false;
+        for cand in ["bf16", "f16", "f32", "i8", "i32"] {
+            if let Some(r) = rest.strip_prefix(cand) {
+                out.push(ElemType::parse(cand).unwrap());
+                rest = r;
+                matched = true;
+                break;
+            }
+        }
+        anyhow::ensure!(matched, "bad dtype triple {s:?}");
+    }
+    anyhow::ensure!(out.len() == 3, "dtype triple must have 3 entries: {s:?}");
+    Ok((out[0], out[1], out[2]))
+}
+
+/// Is this symbol available in the registry for the given target arch?
+/// Mirrors the paper's gap: upstream IREE has x86_64/aarch64 ukernels only;
+/// this repo adds riscv64. Used by `materialize_encoding` to decide whether
+/// lowering to ukernels is profitable.
+pub fn target_has_ukernels(arch: &str, upstream_only: bool) -> bool {
+    match arch {
+        "x86_64" | "aarch64" => true,
+        "riscv64" => !upstream_only,
+        _ => false,
+    }
+}
+
+/// Execute a ukernel symbol on tensors (the IR interpreter's dispatch).
+///
+/// Argument conventions (matching the lowering pass):
+///   mmt4d:    [lhs4, rhs4]           -> out4
+///   pack_*:   [src]                  -> packed   (padding from result shape)
+///   unpack:   [src4]                 -> unpacked (target shape from result)
+pub fn execute(op: &UkernelOp, args: &[&Tensor],
+               result_shape: &[usize]) -> anyhow::Result<Tensor> {
+    match op {
+        UkernelOp::Mmt4d { lhs: lt, rhs: rt, out: ot, m0, n0, k0 } => {
+            anyhow::ensure!(args.len() == 2, "mmt4d takes lhs, rhs");
+            let (l, r) = (args[0], args[1]);
+            anyhow::ensure!(l.shape.len() == 4 && r.shape.len() == 4,
+                            "mmt4d operands are 4-d");
+            let (m1, k1) = (l.shape[0], l.shape[1]);
+            let n1 = r.shape[0];
+            anyhow::ensure!(r.shape[1] == k1, "K tiling mismatch");
+            anyhow::ensure!(l.shape[2] == *m0 && l.shape[3] == *k0,
+                            "lhs inner tile mismatch");
+            anyhow::ensure!(r.shape[2] == *n0 && r.shape[3] == *k0,
+                            "rhs inner tile mismatch");
+            let p = Mmt4dParams { m1, n1, k1, m0: *m0, n0: *n0, k0: *k0,
+                                  accumulate: false };
+            match (lt, rt, ot) {
+                (ElemType::F16, ElemType::F16, ElemType::F32) => {
+                    let lv = l.as_f16().ok_or_else(|| anyhow::anyhow!("lhs not f16"))?;
+                    let rv = r.as_f16().ok_or_else(|| anyhow::anyhow!("rhs not f16"))?;
+                    let mut out = vec![0.0f32; p.out_len()];
+                    mmt4d_f16f16f32(lv, rv, &mut out, &p);
+                    Ok(Tensor::f32(vec![m1, n1, *m0, *n0], out))
+                }
+                (ElemType::F32, ElemType::F32, ElemType::F32) => {
+                    let lv = l.as_f32().ok_or_else(|| anyhow::anyhow!("lhs not f32"))?;
+                    let rv = r.as_f32().ok_or_else(|| anyhow::anyhow!("rhs not f32"))?;
+                    let mut out = vec![0.0f32; p.out_len()];
+                    mmt4d_f32f32f32(lv, rv, &mut out, &p);
+                    Ok(Tensor::f32(vec![m1, n1, *m0, *n0], out))
+                }
+                (ElemType::I8, ElemType::I8, ElemType::I32) => {
+                    let lv = l.as_i8().ok_or_else(|| anyhow::anyhow!("lhs not i8"))?;
+                    let rv = r.as_i8().ok_or_else(|| anyhow::anyhow!("rhs not i8"))?;
+                    let mut out = vec![0i32; p.out_len()];
+                    mmt4d_s8s8s32(lv, rv, &mut out, &p);
+                    Ok(Tensor::i32(vec![m1, n1, *m0, *n0], out))
+                }
+                other => anyhow::bail!("unsupported mmt4d dtype combo {other:?}"),
+            }
+        }
+        UkernelOp::PackLhs { elem, m0, k0 } => {
+            anyhow::ensure!(args.len() == 1);
+            let s = args[0];
+            anyhow::ensure!(s.shape.len() == 2, "pack src is 2-d");
+            let (m, k) = (s.shape[0], s.shape[1]);
+            let (m1, k1) = (m.div_ceil(*m0), k.div_ceil(*k0));
+            anyhow::ensure!(result_shape == [m1, k1, *m0, *k0],
+                            "pack result shape mismatch");
+            match elem {
+                ElemType::F16 => {
+                    let sv = s.as_f16().ok_or_else(|| anyhow::anyhow!("src not f16"))?;
+                    let mut dst = vec![F16::ZERO; m1 * k1 * m0 * k0];
+                    pack::pack_lhs_f16(sv, m, k, *m0, *k0, &mut dst);
+                    Ok(Tensor::f16(result_shape.to_vec(), dst))
+                }
+                ElemType::F32 => {
+                    let sv = s.as_f32().ok_or_else(|| anyhow::anyhow!("src not f32"))?;
+                    let mut dst = vec![0.0; m1 * k1 * m0 * k0];
+                    pack::pack_lhs_f32(sv, m, k, *m0, *k0, &mut dst);
+                    Ok(Tensor::f32(result_shape.to_vec(), dst))
+                }
+                ElemType::I8 => {
+                    let sv = s.as_i8().ok_or_else(|| anyhow::anyhow!("src not i8"))?;
+                    let mut dst = vec![0i8; m1 * k1 * m0 * k0];
+                    pack::pack_lhs_i8(sv, m, k, *m0, *k0, &mut dst);
+                    Ok(Tensor::i8(result_shape.to_vec(), dst))
+                }
+                other => anyhow::bail!("pack_lhs: unsupported dtype {other:?}"),
+            }
+        }
+        UkernelOp::PackRhs { elem, n0, k0 } => {
+            anyhow::ensure!(args.len() == 1);
+            let s = args[0];
+            anyhow::ensure!(s.shape.len() == 2, "pack src is 2-d");
+            let (k, n) = (s.shape[0], s.shape[1]);
+            let (n1, k1) = (n.div_ceil(*n0), k.div_ceil(*k0));
+            anyhow::ensure!(result_shape == [n1, k1, *n0, *k0],
+                            "pack result shape mismatch");
+            match elem {
+                ElemType::F16 => {
+                    let sv = s.as_f16().ok_or_else(|| anyhow::anyhow!("src not f16"))?;
+                    let mut dst = vec![F16::ZERO; n1 * k1 * n0 * k0];
+                    pack::pack_rhs_f16(sv, k, n, *n0, *k0, &mut dst);
+                    Ok(Tensor::f16(result_shape.to_vec(), dst))
+                }
+                ElemType::F32 => {
+                    let sv = s.as_f32().ok_or_else(|| anyhow::anyhow!("src not f32"))?;
+                    let mut dst = vec![0.0; n1 * k1 * n0 * k0];
+                    pack::pack_rhs_f32(sv, k, n, *n0, *k0, &mut dst);
+                    Ok(Tensor::f32(result_shape.to_vec(), dst))
+                }
+                ElemType::I8 => {
+                    let sv = s.as_i8().ok_or_else(|| anyhow::anyhow!("src not i8"))?;
+                    let mut dst = vec![0i8; n1 * k1 * n0 * k0];
+                    pack::pack_rhs_i8(sv, k, n, *n0, *k0, &mut dst);
+                    Ok(Tensor::i8(result_shape.to_vec(), dst))
+                }
+                other => anyhow::bail!("pack_rhs: unsupported dtype {other:?}"),
+            }
+        }
+        UkernelOp::Unpack { elem, m0, n0 } => {
+            anyhow::ensure!(args.len() == 1);
+            anyhow::ensure!(*elem == ElemType::F32, "unpack supports f32");
+            let s = args[0];
+            anyhow::ensure!(s.shape.len() == 4, "unpack src is 4-d");
+            let (m1, n1) = (s.shape[0], s.shape[1]);
+            anyhow::ensure!(s.shape[2] == *m0 && s.shape[3] == *n0,
+                            "unpack tile mismatch");
+            anyhow::ensure!(result_shape.len() == 2, "unpack result is 2-d");
+            let (m, n) = (result_shape[0], result_shape[1]);
+            let sv = s.as_f32().ok_or_else(|| anyhow::anyhow!("src not f32"))?;
+            let mut dst = vec![0.0f32; m * n];
+            pack::unpack_acc_f32(sv, m1, n1, *m0, *n0, m, n, &mut dst);
+            Ok(Tensor::f32(vec![m, n], dst))
+        }
+    }
+}
+
+/// Convenience: full matmul through pack -> mmt4d -> unpack with the given
+/// tiles, on f16 data with f32 accumulation. Used by tests, benches and the
+/// Table-1 microkernel inference path.
+pub fn matmul_f16_via_mmt4d(a: &[F16], b: &[F16], m: usize, k: usize, n: usize,
+                            m0: usize, n0: usize, k0: usize) -> Vec<f32> {
+    let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+    let mut lhs4 = vec![F16::ZERO; m1 * k1 * m0 * k0];
+    let mut rhs4 = vec![F16::ZERO; n1 * k1 * n0 * k0];
+    pack::pack_lhs_f16(a, m, k, m0, k0, &mut lhs4);
+    pack::pack_rhs_f16(b, k, n, n0, k0, &mut rhs4);
+    let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+    let mut out4 = vec![0.0f32; p.out_len()];
+    mmt4d_f16f16f32(&lhs4, &rhs4, &mut out4, &p);
+    let mut out = vec![0.0f32; m * n];
+    pack::unpack_acc_f32(&out4, m1, n1, m0, n0, m, n, &mut out);
+    out
+}
+
+/// Quantized matmul through pack -> s8s8s32 mmt4d -> (unpacked i32):
+/// the IREE quantized-path parity entry point.
+pub fn matmul_s8_via_mmt4d(a: &[i8], b: &[i8], m: usize, k: usize, n: usize,
+                           m0: usize, n0: usize, k0: usize) -> Vec<i32> {
+    let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+    let mut lhs4 = vec![0i8; m1 * k1 * m0 * k0];
+    let mut rhs4 = vec![0i8; n1 * k1 * n0 * k0];
+    pack::pack_lhs_i8(a, m, k, m0, k0, &mut lhs4);
+    pack::pack_rhs_i8(b, k, n, n0, k0, &mut rhs4);
+    let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+    let mut out4 = vec![0i32; p.out_len()];
+    mmt4d_s8s8s32(&lhs4, &rhs4, &mut out4, &p);
+    // unpack i32 (same layout math as f32)
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let (i1, i0) = (i / m0, i % m0);
+        for j in 0..n {
+            let (j1, j0) = (j / n0, j % n0);
+            out[i * n + j] = out4[((i1 * n1 + j1) * m0 + i0) * n0 + j0];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symbol_roundtrip() {
+        let ops = [
+            UkernelOp::Mmt4d { lhs: ElemType::F16, rhs: ElemType::F16,
+                               out: ElemType::F32, m0: 6, n0: 32, k0: 1 },
+            UkernelOp::Mmt4d { lhs: ElemType::I8, rhs: ElemType::I8,
+                               out: ElemType::I32, m0: 8, n0: 8, k0: 2 },
+            UkernelOp::PackLhs { elem: ElemType::F16, m0: 6, k0: 1 },
+            UkernelOp::PackRhs { elem: ElemType::F16, n0: 64, k0: 1 },
+            UkernelOp::Unpack { elem: ElemType::F32, m0: 1, n0: 64 },
+        ];
+        for op in ops {
+            let sym = symbol_for(&op);
+            assert_eq!(parse_symbol(&sym).unwrap(), op, "{sym}");
+        }
+    }
+
+    #[test]
+    fn paper_symbols_spelled_right() {
+        assert_eq!(
+            symbol_for(&UkernelOp::Mmt4d {
+                lhs: ElemType::F16, rhs: ElemType::F16, out: ElemType::F32,
+                m0: 6, n0: 32, k0: 1
+            }),
+            "iree_uk_mmt4d_f16f16f32_6x32x1"
+        );
+    }
+
+    #[test]
+    fn s8_alias_parses() {
+        let op = parse_symbol("iree_uk_mmt4d_s8s8s32_8x8x1").unwrap();
+        assert_eq!(op, UkernelOp::Mmt4d { lhs: ElemType::I8, rhs: ElemType::I8,
+                                          out: ElemType::I32, m0: 8, n0: 8,
+                                          k0: 1 });
+    }
+
+    #[test]
+    fn bad_symbols_rejected() {
+        assert!(parse_symbol("not_a_symbol").is_err());
+        assert!(parse_symbol("iree_uk_mmt4d_f16f16f32_6x32").is_err());
+        assert!(parse_symbol("iree_uk_mystery_f32_1x1").is_err());
+    }
+
+    #[test]
+    fn upstream_gap_modelled() {
+        assert!(target_has_ukernels("x86_64", true));
+        assert!(target_has_ukernels("aarch64", true));
+        assert!(!target_has_ukernels("riscv64", true)); // the paper's gap
+        assert!(target_has_ukernels("riscv64", false)); // this work
+    }
+
+    #[test]
+    fn quantized_s8_pipeline_exact() {
+        use crate::util::prng::Rng;
+        let (m, k, n) = (5, 11, 19);
+        let mut rng = Rng::new(8);
+        let a: Vec<i8> = (0..m * k).map(|_| rng.range(-128, 128) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| rng.range(-128, 128) as i8).collect();
+        let got = matmul_s8_via_mmt4d(&a, &b, m, k, n, 8, 8, 2);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k)
+                    .map(|l| a[i * k + l] as i32 * b[l * n + j] as i32)
+                    .sum();
+                assert_eq!(got[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_i8_mmt4d_via_registry() {
+        use crate::ir::Tensor;
+        let lhs = Tensor::i8(vec![1, 4, 8, 2], vec![1i8; 64]);
+        let rhs = Tensor::i8(vec![1, 4, 8, 2], vec![2i8; 64]);
+        let op = parse_symbol("iree_uk_mmt4d_s8s8s32_8x8x2").unwrap();
+        let out = execute(&op, &[&lhs, &rhs], &[1, 1, 8, 8]).unwrap();
+        // K = 4*2 = 8 terms of 1*2
+        assert_eq!(out.as_i32().unwrap(), &[16i32; 64][..]);
+    }
+
+    #[test]
+    fn execute_matmul_pipeline() {
+        use crate::util::prng::Rng;
+        let (m, k, n) = (7, 9, 40);
+        let mut rng = Rng::new(5);
+        let a: Vec<F16> = (0..m * k)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let b: Vec<F16> = (0..k * n)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let got = matmul_f16_via_mmt4d(&a, &b, m, k, n, 6, 32, 1);
+        // naive oracle
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += a[i * k + l].to_f32() * b[l * n + j].to_f32();
+                }
+                assert!((got[i * n + j] - acc).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Pack / unpack microkernels (tensor.pack / tensor.unpack).
+//!
+//! pack_lhs:  A[M,K]   -> [M1,K1,M0,K0]   (zero padding at the edges)
+//! pack_rhs:  B[K,N]   -> [N1,K1,N0,K0]   (packs B-transposed: mmt4d's 't')
+//! unpack:    C4[M1,N1,M0,N0] -> C[M,N]   (drops padding)
+//!
+//! Generic over the element via small traits would cost readability; the
+//! handful of concrete instantiations below mirrors how IREE's C ukernels
+//! are stamped out per dtype.
+
+use crate::util::f16::F16;
+
+macro_rules! impl_pack_lhs {
+    ($name:ident, $t:ty, $zero:expr) => {
+        /// Pack LHS `[M,K] -> [M1,K1,M0,K0]`; `dst` must hold `M1*K1*M0*K0`.
+        pub fn $name(src: &[$t], m: usize, k: usize, m0: usize, k0: usize,
+                     dst: &mut [$t]) {
+            assert_eq!(src.len(), m * k);
+            let m1 = m.div_ceil(m0);
+            let k1 = k.div_ceil(k0);
+            assert_eq!(dst.len(), m1 * k1 * m0 * k0);
+            for i1 in 0..m1 {
+                let full_rows = i1 * m0 + m0 <= m;
+                if k0 == 1 && full_rows {
+                    // §Perf fast path: K0=1 full tiles — the inner tile
+                    // element (kk, i0) reads src[(i1*m0+i0)*k + kk]; iterate
+                    // i0-major so reads are contiguous rows, no bounds
+                    // branches.
+                    let block = &mut dst[i1 * k1 * m0..][..k1 * m0];
+                    for i0 in 0..m0 {
+                        let row = &src[(i1 * m0 + i0) * k..][..k];
+                        for (kk, &v) in row.iter().enumerate() {
+                            block[kk * m0 + i0] = v;
+                        }
+                    }
+                    continue;
+                }
+                for kk in 0..k1 {
+                    let tile = &mut dst[(i1 * k1 + kk) * m0 * k0..][..m0 * k0];
+                    for i0 in 0..m0 {
+                        let i = i1 * m0 + i0;
+                        for c in 0..k0 {
+                            let kidx = kk * k0 + c;
+                            tile[i0 * k0 + c] = if i < m && kidx < k {
+                                src[i * k + kidx]
+                            } else {
+                                $zero
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    };
+}
+
+macro_rules! impl_pack_rhs {
+    ($name:ident, $t:ty, $zero:expr) => {
+        /// Pack RHS `[K,N] -> [N1,K1,N0,K0]` (transposed layout).
+        pub fn $name(src: &[$t], k: usize, n: usize, n0: usize, k0: usize,
+                     dst: &mut [$t]) {
+            assert_eq!(src.len(), k * n);
+            let n1 = n.div_ceil(n0);
+            let k1 = k.div_ceil(k0);
+            assert_eq!(dst.len(), n1 * k1 * n0 * k0);
+            for j1 in 0..n1 {
+                for kk in 0..k1 {
+                    let tile = &mut dst[(j1 * k1 + kk) * n0 * k0..][..n0 * k0];
+                    for j0 in 0..n0 {
+                        let j = j1 * n0 + j0;
+                        for c in 0..k0 {
+                            let kidx = kk * k0 + c;
+                            tile[j0 * k0 + c] = if j < n && kidx < k {
+                                src[kidx * n + j]
+                            } else {
+                                $zero
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    };
+}
+
+impl_pack_lhs!(pack_lhs_f16, F16, F16::ZERO);
+impl_pack_lhs!(pack_lhs_f32, f32, 0.0);
+impl_pack_lhs!(pack_lhs_i8, i8, 0);
+impl_pack_rhs!(pack_rhs_f16, F16, F16::ZERO);
+impl_pack_rhs!(pack_rhs_f32, f32, 0.0);
+impl_pack_rhs!(pack_rhs_i8, i8, 0);
+
+/// Pack an accumulator `[M,N] -> [M1,N1,M0,N0]`.
+pub fn pack_acc_f32(src: &[f32], m: usize, n: usize, m0: usize, n0: usize,
+                    dst: &mut [f32]) {
+    assert_eq!(src.len(), m * n);
+    let m1 = m.div_ceil(m0);
+    let n1 = n.div_ceil(n0);
+    assert_eq!(dst.len(), m1 * n1 * m0 * n0);
+    for i1 in 0..m1 {
+        for j1 in 0..n1 {
+            let tile = &mut dst[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+            for i0 in 0..m0 {
+                let i = i1 * m0 + i0;
+                for j0 in 0..n0 {
+                    let j = j1 * n0 + j0;
+                    tile[i0 * n0 + j0] =
+                        if i < m && j < n { src[i * n + j] } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+/// Unpack `[M1,N1,M0,N0] -> [M,N]`, dropping tile padding.
+pub fn unpack_acc_f32(src: &[f32], m1: usize, n1: usize, m0: usize, n0: usize,
+                      m: usize, n: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), m1 * n1 * m0 * n0);
+    assert_eq!(dst.len(), m * n);
+    assert!(m <= m1 * m0 && n <= n1 * n0);
+    for i in 0..m {
+        let (i1, i0) = (i / m0, i % m0);
+        for j in 0..n {
+            let (j1, j0) = (j / n0, j % n0);
+            dst[i * n + j] = src[((i1 * n1 + j1) * m0 + i0) * n0 + j0];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{forall, prop_assert, Config};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pack_lhs_layout() {
+        // 2x3 matrix, tiles (2,2): M1=1 K1=2, padding in K
+        let src = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut dst = vec![-1.0f32; 1 * 2 * 2 * 2];
+        pack_lhs_f32(&src, 2, 3, 2, 2, &mut dst);
+        // tile (0,0): rows 0..2, cols 0..2 -> [1,2,4,5]
+        // tile (0,1): rows 0..2, cols 2..4 -> [3,0,6,0]
+        assert_eq!(dst, vec![1.0, 2.0, 4.0, 5.0, 3.0, 0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_rhs_transposes() {
+        // B [2,2]; tiles n0=2, k0=1 -> N1=1, K1=2: tile k=0 is row b[0,:]? no:
+        // layout [N1,K1,N0,K0]; entry (j1=0,k=0) = column values b[0, j]
+        let src = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut dst = vec![0.0f32; 4];
+        pack_rhs_f32(&src, 2, 2, 2, 1, &mut dst);
+        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0]); // [k=0: (b00,b01)][k=1: (b10,b11)]
+    }
+
+    #[test]
+    fn unpack_inverts_pack_acc() {
+        forall(Config::default().cases(60), |g| {
+            let m = g.usize_in(1, 20);
+            let n = g.usize_in(1, 40);
+            let m0 = g.usize_in(1, 8);
+            let n0 = g.usize_in(1, 16);
+            let mut rng = Rng::new((m * 1000 + n) as u64);
+            let src = rng.f32_vec(m * n, 2.0);
+            let (m1, n1) = (m.div_ceil(m0), n.div_ceil(n0));
+            let mut packed = vec![0.0f32; m1 * n1 * m0 * n0];
+            pack_acc_f32(&src, m, n, m0, n0, &mut packed);
+            let mut back = vec![0.0f32; m * n];
+            unpack_acc_f32(&packed, m1, n1, m0, n0, m, n, &mut back);
+            prop_assert(back == src, "unpack(pack(x)) == x")
+        });
+    }
+
+    #[test]
+    fn pack_lhs_pads_with_zero() {
+        let src = vec![1.0f32; 5 * 3]; // M=5, K=3, tiles (6,1)
+        let mut dst = vec![9.0f32; 1 * 3 * 6 * 1];
+        pack_lhs_f32(&src, 5, 3, 6, 1, &mut dst);
+        // row 5 (padding) of each K tile must be zero
+        for kk in 0..3 {
+            assert_eq!(dst[kk * 6 + 5], 0.0);
+        }
+        assert_eq!(dst.iter().filter(|&&v| v == 1.0).count(), 15);
+    }
+
+    #[test]
+    fn f16_pack_matches_f32_pack_bitwise() {
+        let mut rng = Rng::new(3);
+        let vals: Vec<f32> = (0..12 * 8)
+            .map(|_| (rng.range(-16, 17) as f32) / 8.0)
+            .collect();
+        let v16: Vec<F16> = vals.iter().map(|&v| F16::from_f32(v)).collect();
+        let mut d32 = vec![0.0f32; 2 * 8 * 6 * 1];
+        let mut d16 = vec![F16::ZERO; 2 * 8 * 6 * 1];
+        pack_lhs_f32(&vals, 12, 8, 6, 1, &mut d32);
+        pack_lhs_f16(&v16, 12, 8, 6, 1, &mut d16);
+        for (a, b) in d32.iter().zip(&d16) {
+            assert_eq!(*a, b.to_f32());
+        }
+    }
+}

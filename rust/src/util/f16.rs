@@ -1,0 +1,257 @@
+//! IEEE 754 binary16 ("half") soft-float.
+//!
+//! The vendored crate set has no `half` crate, and the paper's microkernels
+//! are `f16 x f16 -> f32` (RVV `vfwmacc.vf` widens f16 products into f32
+//! accumulators), so the ukernel library and the RVV simulator both need a
+//! bit-exact half type. Conversions implement round-to-nearest-even and are
+//! validated against numpy's behaviour in the integration tests (goldens
+//! produced by python use numpy f16).
+
+/// A 16-bit IEEE 754 half-precision float, stored as its bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite f16 value (65504.0).
+    pub const MAX: F16 = F16(0x7BFF);
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> Self {
+        F16(bits)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// f32 -> f16 with round-to-nearest-even (matches numpy / hardware).
+    pub fn from_f32(value: f32) -> Self {
+        let bits = value.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let mant = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN. Preserve a NaN payload bit so NaN stays NaN.
+            let payload = if mant != 0 { 0x0200 | ((mant >> 13) as u16) } else { 0 };
+            return F16(sign | 0x7C00 | payload);
+        }
+
+        // Unbiased exponent.
+        let unbiased = exp - 127;
+        if unbiased > 15 {
+            // Overflow -> infinity.
+            return F16(sign | 0x7C00);
+        }
+        if unbiased >= -14 {
+            // Normal range. 23 -> 10 bits of mantissa: round off 13 bits.
+            let mant16 = (mant >> 13) as u16;
+            let rest = mant & 0x1FFF;
+            let half = 0x1000;
+            let mut out = sign | (((unbiased + 15) as u16) << 10) | mant16;
+            if rest > half || (rest == half && (mant16 & 1) == 1) {
+                out = out.wrapping_add(1); // may carry into exponent: correct
+            }
+            return F16(out);
+        }
+        if unbiased >= -25 {
+            // Subnormal f16. Implicit leading 1 becomes explicit.
+            let full = mant | 0x80_0000;
+            let shift = (-14 - unbiased + 13) as u32; // 13..=24
+            let mant16 = (full >> shift) as u16;
+            let rest = full & ((1u32 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            let mut out = sign | mant16;
+            if rest > half || (rest == half && (mant16 & 1) == 1) {
+                out = out.wrapping_add(1);
+            }
+            return F16(out);
+        }
+        // Underflow to signed zero.
+        F16(sign)
+    }
+
+    /// f16 -> f32, exact.
+    pub fn to_f32(self) -> f32 {
+        let bits = self.0 as u32;
+        let sign = (bits & 0x8000) << 16;
+        let exp = (bits >> 10) & 0x1F;
+        let mant = bits & 0x3FF;
+        let out = if exp == 0 {
+            if mant == 0 {
+                sign // signed zero
+            } else {
+                // Subnormal: value = mant * 2^-24. Normalize around the
+                // highest set bit p: value = 2^(p-24) * (1 + rest/2^p).
+                let p = 31 - mant.leading_zeros();
+                let exp32 = 103 + p; // 127 + (p - 24)
+                let m32 = (mant << (23 - p)) & 0x7F_FFFF;
+                sign | (exp32 << 23) | m32
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (mant << 13) // inf / nan
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (mant << 13)
+        };
+        f32::from_bits(out)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(v: f32) -> Self {
+        F16::from_f32(v)
+    }
+}
+
+impl From<F16> for f32 {
+    fn from(v: F16) -> Self {
+        v.to_f32()
+    }
+}
+
+/// bfloat16 (used by some IREE ukernel variants; provided for the registry's
+/// bf16 entries and tested for parity with f32 truncation semantics).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub fn from_f32(value: f32) -> Self {
+        let bits = value.to_bits();
+        // round-to-nearest-even on the low 16 bits
+        let rest = bits & 0xFFFF;
+        let half = 0x8000;
+        let mut hi = (bits >> 16) as u16;
+        let exp_all_ones = (hi & 0x7F80) == 0x7F80;
+        if !exp_all_ones && (rest > half || (rest == half && (hi & 1) == 1)) {
+            hi = hi.wrapping_add(1);
+        }
+        if value.is_nan() {
+            hi |= 0x0040; // keep NaN
+        }
+        Bf16(hi)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Convert an f32 slice to f16 bit patterns.
+pub fn f32_slice_to_f16(src: &[f32]) -> Vec<F16> {
+    src.iter().map(|&v| F16::from_f32(v)).collect()
+}
+
+/// Convert an f16 slice to f32.
+pub fn f16_slice_to_f32(src: &[F16]) -> Vec<f32> {
+    src.iter().map(|v| v.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0,
+                  0.25, 1.5, 3.140625] {
+            let h = F16::from_f32(v);
+            assert_eq!(h.to_f32(), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(F16::from_f32(1.0).to_bits(), 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).to_bits(), 0xC000);
+        assert_eq!(F16::from_f32(65504.0).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32(6.1035156e-5).to_bits(), 0x0400); // min normal
+        assert_eq!(F16::from_f32(5.9604645e-8).to_bits(), 0x0001); // min subnormal
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert_eq!(F16::from_f32(70000.0), F16::INFINITY);
+        assert_eq!(F16::from_f32(-70000.0), F16::NEG_INFINITY);
+        assert_eq!(F16::from_f32(f32::INFINITY), F16::INFINITY);
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        assert_eq!(F16::from_f32(1e-10).to_bits(), 0);
+        assert_eq!(F16::from_f32(-1e-10).to_bits(), 0x8000);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::NAN.to_f32().is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: rounds to even (1.0)
+        let v = 1.0 + (2.0f32).powi(-11);
+        assert_eq!(F16::from_f32(v).to_bits(), 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds to even (1+2^-9)
+        let v = 1.0 + 3.0 * (2.0f32).powi(-11);
+        assert_eq!(F16::from_f32(v).to_bits(), 0x3C02);
+        // just above halfway rounds up
+        let v = 1.0 + (2.0f32).powi(-11) + (2.0f32).powi(-20);
+        assert_eq!(F16::from_f32(v).to_bits(), 0x3C01);
+    }
+
+    #[test]
+    fn rounding_carries_into_exponent() {
+        // largest mantissa at exp e rounds up into exp e+1
+        let v = 2.0 - (2.0f32).powi(-11); // rounds to 2.0
+        assert_eq!(F16::from_f32(v).to_f32(), 2.0);
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        for bits in [0x0001u16, 0x0010, 0x03FF, 0x0400] {
+            let h = F16::from_bits(bits);
+            assert_eq!(F16::from_f32(h.to_f32()).to_bits(), bits);
+        }
+    }
+
+    #[test]
+    fn exhaustive_f16_to_f32_to_f16_identity() {
+        // Every finite f16 round-trips exactly through f32.
+        for bits in 0..=0xFFFFu16 {
+            let h = F16::from_bits(bits);
+            if h.is_nan() {
+                continue;
+            }
+            assert_eq!(F16::from_f32(h.to_f32()).to_bits(), bits, "bits {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 3.0, 1e30, -1e-30] {
+            let b = Bf16::from_f32(v);
+            let back = b.to_f32();
+            if v != 0.0 {
+                assert!(((back - v) / v).abs() < 0.01, "{v} -> {back}");
+            }
+        }
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+}

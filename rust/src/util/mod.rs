@@ -1,0 +1,40 @@
+//! Shared substrates: soft-float, PRNG, statistics, deterministic test data,
+//! timing. Everything here is dependency-free (offline vendor set).
+
+pub mod f16;
+pub mod prng;
+pub mod stats;
+pub mod testdata;
+pub mod timer;
+
+/// Ceiling division for tile counts.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 6), 0);
+        assert_eq!(ceil_div(1, 6), 1);
+        assert_eq!(ceil_div(6, 6), 1);
+        assert_eq!(ceil_div(7, 6), 2);
+    }
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(7, 6), 12);
+        assert_eq!(round_up(12, 6), 12);
+        assert_eq!(round_up(0, 32), 0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Deterministic test matrices, bit-identical to python/compile/aot.py's
+//! `det_matrix` — the bridge that lets Rust tests check artifact outputs
+//! against python-written goldens without shipping the inputs.
+
+/// `v[i,j] = (((i*7 + j*13 + seed*5) % 31) - 15) / 16`  (row-major).
+///
+/// Values are multiples of 1/16 in [-15/16, 15/16]: exactly representable in
+/// f16 *and* f32, so casts between the two never round.
+pub fn det_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            let v = ((i as u64 * 7 + j as u64 * 13 + seed * 5) % 31) as f32;
+            out.push((v - 15.0) / 16.0);
+        }
+    }
+    out
+}
+
+/// Parse a golden file written by aot.py's `write_golden`:
+/// first line `# shape AxBxC`, then one `%.9e` float per line.
+pub fn load_golden(path: &std::path::Path) -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty golden file {path:?}"))?;
+    let shape_str = header
+        .strip_prefix("# shape ")
+        .ok_or_else(|| anyhow::anyhow!("bad golden header {header:?}"))?;
+    let shape: Vec<usize> = shape_str
+        .split('x')
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()?;
+    let data: Vec<f32> = lines
+        .filter(|l| !l.is_empty())
+        .map(|l| l.parse())
+        .collect::<Result<_, _>>()?;
+    let expect: usize = shape.iter().product();
+    anyhow::ensure!(
+        data.len() == expect,
+        "golden {path:?}: {} values, shape says {expect}",
+        data.len()
+    );
+    Ok((shape, data))
+}
+
+/// Max absolute difference between two equally-sized slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn det_matrix_is_f16_exact() {
+        use crate::util::f16::F16;
+        for &v in det_matrix(8, 8, 3).iter() {
+            assert_eq!(F16::from_f32(v).to_f32(), v);
+        }
+    }
+
+    #[test]
+    fn det_matrix_matches_python_formula() {
+        // spot values computed by hand from the formula
+        let m = det_matrix(2, 3, 1);
+        // i=0,j=0,seed=1: (5 % 31 - 15)/16 = -10/16
+        assert_eq!(m[0], -10.0 / 16.0);
+        // i=0,j=1: (18 % 31 - 15)/16 = 3/16
+        assert_eq!(m[1], 3.0 / 16.0);
+        // i=1,j=2: (7+26+5)%31=7 -> (7-15)/16 = -0.5
+        assert_eq!(m[5], -0.5);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+}

@@ -1,0 +1,69 @@
+//! Wall-clock timing helpers for the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Times a closure, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// A simple scope timer that accumulates into a named bucket.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    count: u64,
+}
+
+impl Stopwatch {
+    pub fn record(&mut self, d: Duration) {
+        self.total += d;
+        self.count += 1;
+    }
+
+    pub fn measure<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::default();
+        sw.record(Duration::from_millis(2));
+        sw.record(Duration::from_millis(4));
+        assert_eq!(sw.count(), 2);
+        assert_eq!(sw.total(), Duration::from_millis(6));
+        assert_eq!(sw.mean(), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,116 @@
+//! Version-bridge regression suite: executes each probe artifact (written by
+//! python/compile/probes.py) on xla_extension 0.5.1 and compares against the
+//! python goldens. Catches semantic drift between modern JAX lowering and
+//! the old XLA runtime per op family.
+
+use std::path::{Path, PathBuf};
+
+use tenx_iree::util::testdata::{load_golden, max_abs_diff};
+use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
+
+fn probes_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("probes");
+    if dir.join("index.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `python -m compile.probes` first");
+        None
+    }
+}
+
+struct ProbeMeta {
+    inputs: usize,
+    outputs: usize,
+    /// (shape, is_i32) per input.
+    in_specs: Vec<(Vec<i64>, bool)>,
+}
+
+fn read_meta(dir: &Path, name: &str) -> ProbeMeta {
+    let text = std::fs::read_to_string(dir.join(format!("{name}.meta.txt")))
+        .unwrap();
+    let mut inputs = 0;
+    let mut outputs = 0;
+    let mut in_specs = Vec::new();
+    for line in text.lines() {
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("inputs") => inputs = parts.next().unwrap().parse().unwrap(),
+            Some("outputs") => outputs = parts.next().unwrap().parse().unwrap(),
+            Some(k) if k.starts_with("in") => {
+                let dims: Vec<i64> = parts
+                    .next()
+                    .unwrap()
+                    .split('x')
+                    .map(|d| d.parse().unwrap())
+                    .collect();
+                let is_i32 = parts.next() == Some("i32");
+                in_specs.push((dims, is_i32));
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(in_specs.len(), inputs);
+    ProbeMeta { inputs, outputs, in_specs }
+}
+
+fn run_probe(client: &PjRtClient, dir: &Path, name: &str) -> Vec<(usize, f32)> {
+    let meta = read_meta(dir, name);
+    let proto = HloModuleProto::from_text_file(
+        dir.join(format!("{name}.hlo.txt")).to_str().unwrap(),
+    )
+    .unwrap();
+    let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+    let mut lits = Vec::new();
+    for i in 0..meta.inputs {
+        let (_, data) = load_golden(&dir.join(format!("{name}.in{i}.txt")))
+            .unwrap();
+        let (dims, is_i32) = &meta.in_specs[i];
+        let lit = if *is_i32 {
+            let ints: Vec<i32> = data.iter().map(|&v| v as i32).collect();
+            Literal::vec1(&ints).reshape(dims).unwrap()
+        } else {
+            Literal::vec1(&data).reshape(dims).unwrap()
+        };
+        lits.push(lit);
+    }
+    let result = exe.execute::<&Literal>(&lits.iter().collect::<Vec<_>>())
+        .unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let outs = result.to_tuple().unwrap();
+    assert_eq!(outs.len(), meta.outputs, "{name}: output arity");
+    let mut drifts = Vec::new();
+    for (i, out) in outs.iter().enumerate() {
+        let got = out.to_vec::<f32>().unwrap();
+        let (_, want) = load_golden(&dir.join(format!("{name}.out{i}.txt")))
+            .unwrap();
+        // Relative drift: old/new XLA reassociate f32 reductions differently,
+        // so compare against the output's own magnitude.
+        let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+        drifts.push((i, max_abs_diff(&got, &want) / scale));
+    }
+    drifts
+}
+
+#[test]
+fn all_probes_match_goldens() {
+    let Some(dir) = probes_dir() else { return };
+    let names: Vec<String> = std::fs::read_to_string(dir.join("index.txt"))
+        .unwrap()
+        .lines()
+        .map(|s| s.to_string())
+        .collect();
+    let client = PjRtClient::cpu().unwrap();
+    let mut failures = Vec::new();
+    for name in &names {
+        for (i, drift) in run_probe(&client, &dir, name) {
+            eprintln!("probe {name} out{i}: max drift {drift:e}");
+            if drift > 2e-3 {
+                failures.push(format!("{name}.out{i}: {drift}"));
+            }
+        }
+    }
+    assert!(failures.is_empty(), "bridge drift:\n{}", failures.join("\n"));
+}

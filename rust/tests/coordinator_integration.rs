@@ -1,0 +1,139 @@
+//! Integration: the serving coordinator over the REAL PJRT engine
+//! (requires `make artifacts`; skips otherwise) plus heavier mock-based
+//! scheduler stress tests that don't need artifacts.
+
+use std::path::PathBuf;
+
+use tenx_iree::coordinator::{server, EngineBackend, MockBackend};
+use tenx_iree::llm::{SamplingParams, Tokenizer};
+use tenx_iree::runtime::EnginePath;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn serve_real_engine_continuous_batching() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = server::start_with(
+        move || EngineBackend::load(&dir, EnginePath::Mmt4d), 64, 3)
+        .unwrap();
+    let tok = Tokenizer::new(512);
+    // 6 requests through a batch-4 engine forces slot reuse.
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            handle.submit(tok.encode(["sun", "rain", "seed", "ice", "moon",
+                                      "wave"][i]),
+                          5, SamplingParams::Greedy, None)
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let out = rx.recv().unwrap();
+        assert_eq!(out.tokens.len(), 5);
+        assert!(out.tokens.iter().all(|&t| (t as usize) < 512));
+        assert!(out.ttft <= out.e2e);
+    }
+    assert_eq!(handle.metrics.requests_completed.get(), 6);
+    assert!(handle.metrics.prefill_batches.get() >= 2);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn greedy_generation_is_deterministic_across_paths_start() {
+    // The same greedy request twice must produce identical tokens
+    // (PJRT execution is deterministic).
+    let Some(dir) = artifacts_dir() else { return };
+    let d2 = dir.clone();
+    let handle = server::start_with(
+        move || EngineBackend::load(&d2, EnginePath::Mmt4d), 64, 3)
+        .unwrap();
+    let tok = Tokenizer::new(512);
+    let p = tok.encode("the sun heats");
+    let a = handle
+        .submit(p.clone(), 6, SamplingParams::Greedy, None)
+        .unwrap()
+        .recv()
+        .unwrap();
+    let b = handle
+        .submit(p, 6, SamplingParams::Greedy, None)
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy decode must be deterministic");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn mmt4d_and_baseline_paths_generate_same_greedy_tokens() {
+    // The runtime-level Table-1 statement: both compilation paths produce
+    // the same greedy generations on the same prompts (f16 rounding does
+    // not flip any argmax on this model/prompt set).
+    let Some(dir) = artifacts_dir() else { return };
+    let tok = Tokenizer::new(512);
+    let prompts = ["the sun heats", "rain falls", "a seed grows"];
+    let mut outs = Vec::new();
+    for path in [EnginePath::Mmt4d, EnginePath::Baseline] {
+        let d2 = dir.clone();
+        let handle = server::start_with(
+            move || EngineBackend::load(&d2, path), 64, 3)
+            .unwrap();
+        let toks: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| {
+                handle.submit(tok.encode(p), 4, SamplingParams::Greedy, None)
+                    .unwrap()
+                    .recv()
+                    .unwrap()
+                    .tokens
+            })
+            .collect();
+        handle.shutdown().unwrap();
+        outs.push(toks);
+    }
+    assert_eq!(outs[0], outs[1],
+               "mmt4d and baseline paths diverged on greedy decode");
+}
+
+#[test]
+fn mock_stress_hundreds_of_requests() {
+    let handle = server::start(MockBackend::new(4, 8, 32, 64), 512, 1);
+    let rxs: Vec<_> = (0..200)
+        .map(|i| {
+            handle.submit(vec![(i % 60 + 1) as u32], 1 + (i % 4) as usize,
+                          SamplingParams::Greedy, None)
+                .unwrap()
+        })
+        .collect();
+    let mut total = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap();
+        assert_eq!(out.tokens.len(), 1 + (i % 4));
+        total += out.tokens.len();
+    }
+    assert_eq!(handle.metrics.tokens_decoded.get()
+               + handle.metrics.prefill_batches.get() * 0 // decoded excludes firsts
+               + handle.metrics.requests_completed.get(), // first tokens
+               total as u64);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn temperature_sampling_stays_in_vocab() {
+    let handle = server::start(MockBackend::new(2, 8, 32, 64), 64, 9);
+    let rx = handle
+        .submit(vec![5, 6], 20,
+                SamplingParams::Temperature { temperature: 1.5, top_k: Some(8) },
+                None)
+        .unwrap();
+    let out = rx.recv().unwrap();
+    assert_eq!(out.tokens.len(), 20);
+    assert!(out.tokens.iter().all(|&t| t < 64));
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,194 @@
+//! Cross-module property-based tests (propcheck): the invariants DESIGN.md
+//! §9 calls out, exercised with generated shapes/data.
+
+use tenx_iree::config::manifest::Tile;
+use tenx_iree::propcheck::{forall, prop_assert, Config};
+use tenx_iree::target::{self, Arch, Phase};
+use tenx_iree::ukernel::{self, pack, Mmt4dParams};
+use tenx_iree::util::f16::F16;
+use tenx_iree::util::prng::Rng;
+
+fn rand_f16_vec(rng: &mut Rng, n: usize) -> Vec<F16> {
+    (0..n).map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0))).collect()
+}
+
+/// pack_lhs then "unpack" by reading tile layout must reproduce the source
+/// for arbitrary shapes/tiles (padding dropped).
+#[test]
+fn prop_pack_lhs_preserves_all_elements() {
+    forall(Config::default().cases(120), |g| {
+        let m = g.usize_in(1, 25);
+        let k = g.usize_in(1, 33);
+        let m0 = g.usize_in(1, 9);
+        let k0 = g.usize_in(1, 5);
+        let mut rng = Rng::new((m * 100 + k) as u64);
+        let src = rand_f16_vec(&mut rng, m * k);
+        let (m1, k1) = (m.div_ceil(m0), k.div_ceil(k0));
+        let mut dst = vec![F16::from_f32(9.0); m1 * k1 * m0 * k0];
+        pack::pack_lhs_f16(&src, m, k, m0, k0, &mut dst);
+        for i in 0..m {
+            for j in 0..k {
+                let (i1, i0) = (i / m0, i % m0);
+                let (j1, j0) = (j / k0, j % k0);
+                let v = dst[((i1 * k1 + j1) * m0 + i0) * k0 + j0];
+                if v != src[i * k + j] {
+                    return Err(format!("element ({i},{j}) lost"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// mmt4d on packed operands == naive matmul, for arbitrary shapes and tiles
+/// (the paper's Table-1 invariant at the ukernel level).
+#[test]
+fn prop_mmt4d_equals_naive_matmul() {
+    forall(Config::default().cases(60), |g| {
+        let m = g.usize_in(1, 18);
+        let k = g.usize_in(1, 24);
+        let n = g.usize_in(1, 40);
+        let m0 = g.usize_in(1, 7);
+        let n0 = g.usize_in(1, 17);
+        let k0 = g.usize_in(1, 3);
+        let mut rng = Rng::new((m * 7 + k * 5 + n * 3) as u64);
+        let a = rand_f16_vec(&mut rng, m * k);
+        let b = rand_f16_vec(&mut rng, k * n);
+        let got = ukernel::matmul_f16_via_mmt4d(&a, &b, m, k, n, m0, n0, k0);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += a[i * k + l].to_f32() * b[l * n + j].to_f32();
+                }
+                let d = (got[i * n + j] - acc).abs();
+                if d > 1e-4 * acc.abs().max(1.0) {
+                    return Err(format!("({i},{j}): {d} off"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tile selection: N0 always a whole number of f16 vector registers, K0 = 1,
+/// and the selected tiles never spill on the target's register file.
+#[test]
+fn prop_selected_tiles_never_spill() {
+    forall(Config::default().cases(50), |g| {
+        let vlen = 64 << g.usize_in(1, 4); // 128..1024
+        let phase = if g.bool() { Phase::Prefill } else { Phase::Decode };
+        let tile = target::select_tiles(Arch::Riscv64 { vlen_bits: vlen },
+                                        phase)
+            .map_err(|e| e.to_string())?;
+        prop_assert(tile.k0 == 1, "paper tiles use K0 = 1")?;
+        prop_assert((tile.n0 * 16) % vlen == 0,
+                    "N0 must fill whole vector registers")?;
+        prop_assert(!target::tile_spills(tile, vlen, 32),
+                    "selected tile must fit the register file")
+    });
+}
+
+/// The simulated RVV kernel is bit-identical to the native ukernel for
+/// arbitrary packed problems (same accumulation order).
+#[test]
+fn prop_rvv_sim_matches_native_ukernel() {
+    use tenx_iree::kernels::{mmt4d_tile_rvv, Mmt4dLayout};
+    use tenx_iree::rvv::{Rvv, RvvConfig};
+    forall(Config::default().cases(25), |g| {
+        let vlen = 128 << g.usize_in(0, 2); // 128/256/512
+        let m0 = g.usize_in(1, 8);
+        let n0 = vlen / 8;
+        let m1 = g.usize_in(1, 3);
+        let n1 = g.usize_in(1, 3);
+        let k1 = g.usize_in(1, 40);
+        let p = Mmt4dParams { m1, n1, k1, m0, n0, k0: 1, accumulate: false };
+        let mut rng = Rng::new((vlen + m0 * 7 + k1) as u64);
+        let lhs = rand_f16_vec(&mut rng, p.lhs_len());
+        let rhs = rand_f16_vec(&mut rng, p.rhs_len());
+        let mut want = vec![0.0f32; p.out_len()];
+        ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut want, &p);
+
+        let lhs_addr = 0x1000;
+        let rhs_addr = (lhs_addr + lhs.len() * 2 + 63) & !63;
+        let out_addr = (rhs_addr + rhs.len() * 2 + 63) & !63;
+        let mut mach = Rvv::new(RvvConfig::with_vlen(vlen),
+                                out_addr + want.len() * 4 + 65536);
+        mach.write_f16_slice(lhs_addr, &lhs);
+        mach.write_f16_slice(rhs_addr, &rhs);
+        mmt4d_tile_rvv(&mut mach, &Mmt4dLayout {
+            lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+        });
+        let got = mach.read_f32_slice(out_addr, want.len());
+        prop_assert(got == want, "sim must be bit-identical to native")
+    });
+}
+
+/// vreg pressure model is monotone in M0 and N0.
+#[test]
+fn prop_vreg_pressure_monotone() {
+    forall(Config::default().cases(80), |g| {
+        let vlen = 64 << g.usize_in(1, 4);
+        let m0 = g.usize_in(1, 15);
+        let n0 = (g.usize_in(1, 8) * vlen) / 16;
+        let base = target::vreg_pressure(Tile { m0, n0, k0: 1 }, vlen);
+        let more_m = target::vreg_pressure(Tile { m0: m0 + 1, n0, k0: 1 }, vlen);
+        let more_n = target::vreg_pressure(
+            Tile { m0, n0: n0 + vlen / 16, k0: 1 }, vlen);
+        prop_assert(more_m >= base, "monotone in M0")?;
+        prop_assert(more_n >= base, "monotone in N0")
+    });
+}
+
+/// Scheduler invariant under generated workloads: every accepted request
+/// finishes exactly once with the requested token budget respected.
+#[test]
+fn prop_scheduler_conserves_requests() {
+    use std::sync::Arc;
+    use tenx_iree::coordinator::{MockBackend, Scheduler};
+    use tenx_iree::coordinator::request::Request;
+    use tenx_iree::llm::SamplingParams;
+    use tenx_iree::metrics::ServingMetrics;
+
+    forall(Config::default().cases(20), |g| {
+        let batch = g.usize_in(1, 6);
+        let n_req = g.usize_in(1, 30);
+        let max_seq = 24;
+        let mut s = Scheduler::new(MockBackend::new(batch, 8, max_seq, 64),
+                                   64, Arc::new(ServingMetrics::default()),
+                                   7);
+        let mut want_ids = Vec::new();
+        for id in 0..n_req as u64 {
+            let plen = 1 + (id as usize % 6);
+            let req = Request {
+                id,
+                prompt: (0..plen).map(|i| i as u32 + 1).collect(),
+                max_new_tokens: 1 + (id as usize % 5),
+                sampling: SamplingParams::Greedy,
+                eos_token: None,
+            };
+            if s.submit(req) {
+                want_ids.push(id);
+            }
+        }
+        let mut iters = 0;
+        while s.has_work() {
+            s.step().map_err(|e| e.to_string())?;
+            iters += 1;
+            if iters > 10_000 {
+                return Err("scheduler did not converge".into());
+            }
+        }
+        let done = s.take_finished();
+        let mut got: Vec<u64> = done.iter().map(|d| d.id).collect();
+        got.sort();
+        prop_assert(got == want_ids, "each request finishes exactly once")?;
+        for d in &done {
+            let budget = 1 + (d.id as usize % 5);
+            if d.tokens.len() > budget {
+                return Err(format!("req {} over budget", d.id));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,128 @@
+//! Integration tests over the real AOT artifacts: the Python-compiled HLO
+//! graphs must load, execute, and agree with python-written goldens.
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::path::{Path, PathBuf};
+
+use tenx_iree::runtime::{Engine, EnginePath, KernelRunner};
+use tenx_iree::util::testdata::{det_matrix, load_golden, max_abs_diff};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn golden(dir: &Path, name: &str) -> (Vec<usize>, Vec<f32>) {
+    load_golden(&dir.join("goldens").join(name)).unwrap()
+}
+
+#[test]
+fn kernel_prefill_artifact_matches_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let kr = KernelRunner::load(&dir, false).unwrap();
+    let a = det_matrix(kr.m, kr.k, 1);
+    let b = det_matrix(kr.k, kr.n, 2);
+    let got = kr.matmul(&a, &b).unwrap();
+    let (shape, want) = golden(&dir, "kernel_prefill_out.txt");
+    assert_eq!(shape, vec![kr.m, kr.n]);
+    assert!(max_abs_diff(&got, &want) < 1e-4,
+            "prefill kernel drifted from golden");
+}
+
+#[test]
+fn kernel_decode_artifact_matches_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let kr = KernelRunner::load(&dir, true).unwrap();
+    let a = det_matrix(kr.m, kr.k, 3);
+    let b = det_matrix(kr.k, kr.n, 4);
+    let got = kr.matmul(&a, &b).unwrap();
+    let (shape, want) = golden(&dir, "kernel_decode_out.txt");
+    assert_eq!(shape, vec![kr.m, kr.n]);
+    assert!(max_abs_diff(&got, &want) < 1e-4,
+            "decode kernel drifted from golden");
+}
+
+#[test]
+fn prefill_and_decode_match_python_goldens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, EnginePath::Mmt4d).unwrap();
+    let (b, s) = (engine.batch(), engine.prefill_seq());
+    let vocab = engine.vocab() as i64;
+    // Same tokens as aot.py: (arange(B*S) * 17 + 3) % vocab
+    let tokens: Vec<i32> = (0..(b * s) as i64)
+        .map(|i| ((i * 17 + 3) % vocab) as i32)
+        .collect();
+    let out = engine.prefill(&tokens).unwrap();
+    let (shape, want) = golden(&dir, "prefill_logits.txt");
+    assert_eq!(shape, vec![b, s, engine.vocab()]);
+    let diff = max_abs_diff(&out.logits, &want);
+    assert!(diff < 1e-3, "prefill logits drift {diff}");
+
+    // Decode step from the prefill cache, matching aot.py's golden inputs.
+    let ntok = vec![5, 9, 13, 17];
+    let pos = vec![s as i32; b];
+    let dec = engine
+        .decode(&ntok, &out.k_cache, &out.v_cache, &pos)
+        .unwrap();
+    let (dshape, dwant) = golden(&dir, "decode_logits.txt");
+    assert_eq!(dshape, vec![b, engine.vocab()]);
+    let ddiff = max_abs_diff(&dec.logits, &dwant);
+    assert!(ddiff < 1e-3, "decode logits drift {ddiff}");
+}
+
+#[test]
+fn baseline_and_mmt4d_engines_agree_closely() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mm = Engine::load(&dir, EnginePath::Mmt4d).unwrap();
+    let base = Engine::load(&dir, EnginePath::Baseline).unwrap();
+    let (b, s) = (mm.batch(), mm.prefill_seq());
+    let tokens: Vec<i32> = (0..(b * s) as i32).map(|i| (i * 7 + 1) % 512).collect();
+    let o1 = mm.prefill(&tokens).unwrap();
+    let o2 = base.prefill(&tokens).unwrap();
+    // f16-rounding differences only
+    let diff = max_abs_diff(&o1.logits, &o2.logits);
+    assert!(diff < 0.05, "paths diverge: {diff}");
+    // and argmax agreement on nearly every position (Table-1 mechanism)
+    let v = mm.vocab();
+    let mut agree = 0;
+    let total = b * s;
+    for i in 0..total {
+        let row1 = &o1.logits[i * v..][..v];
+        let row2 = &o2.logits[i * v..][..v];
+        if tenx_iree::llm::argmax(row1) == tenx_iree::llm::argmax(row2) {
+            agree += 1;
+        }
+    }
+    assert!(agree as f64 / total as f64 > 0.95,
+            "argmax agreement too low: {agree}/{total}");
+}
+
+#[test]
+fn kv_splice_moves_exactly_one_slot() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, EnginePath::Mmt4d).unwrap();
+    let (b, s) = (engine.batch(), engine.prefill_seq());
+    let t1: Vec<i32> = vec![7; b * s];
+    let t2: Vec<i32> = vec![11; b * s];
+    let o1 = engine.prefill(&t1).unwrap();
+    let o2 = engine.prefill(&t2).unwrap();
+    let spliced = engine.splice_kv_slot(&o1.k_cache, &o2.k_cache, 2).unwrap();
+    let sv = spliced.to_vec::<f32>().unwrap();
+    let v1 = o1.k_cache.to_vec::<f32>().unwrap();
+    let v2 = o2.k_cache.to_vec::<f32>().unwrap();
+    let [l, bb, h, ms, d] = engine.kv_dims();
+    let plane = h * ms * d;
+    for li in 0..l {
+        for slot in 0..bb {
+            let off = (li * bb + slot) * plane;
+            let want = if slot == 2 { &v2 } else { &v1 };
+            assert_eq!(&sv[off..off + plane], &want[off..off + plane],
+                       "layer {li} slot {slot}");
+        }
+    }
+}
