@@ -17,11 +17,32 @@ fn main() {
     println!("{}", experiments::table2(&target, prefill_tokens));
     println!("{}", experiments::figures(&target, prefill_tokens));
 
+    // Quantized serving: the int8 mmt4d path next to the paper's f16 path.
+    // Decode at scale is DRAM-bound, so int8 weights (half the stream)
+    // buy most of their win there.
+    println!("\n== int8 (s8s8s32) vs f16 10x-IREE, modeled tokens/sec ==");
+    println!("{:<8} {:>3} {:>12} {:>12} {:>8} {:>10}", "phase", "T",
+             "f16 tok/s", "int8 tok/s", "gain", "int8 bound");
+    let shapes = LlamaShapes::llama32_1b();
+    for phase in [Phase::Prefill, Phase::Decode] {
+        for threads in [1usize, 8] {
+            let f16 = perfmodel::phase_perf(System::TenxIree, phase, threads,
+                                            &shapes, &target, prefill_tokens);
+            let i8 = perfmodel::phase_perf_quant(phase, threads, &shapes,
+                                                 &target, prefill_tokens);
+            println!(
+                "{:<8} {:>3} {:>12.3} {:>12.3} {:>7.2}x {:>10}",
+                phase.name(), threads, f16.tokens_per_sec, i8.tokens_per_sec,
+                i8.tokens_per_sec / f16.tokens_per_sec,
+                if i8.compute_bound { "compute" } else { "dram" }
+            );
+        }
+    }
+
     // VLEN sensitivity: how the modeled gains scale with vector width.
     println!("\n== VLEN sensitivity (decode, 1 thread) ==");
     println!("{:<10} {:>14} {:>14} {:>8}", "VLEN", "IREE tok/s",
              "10x tok/s", "gain");
-    let shapes = LlamaShapes::llama32_1b();
     for vlen in [128, 256, 512, 1024] {
         let t = TargetDesc::riscv_with_vlen(vlen);
         let up = perfmodel::phase_perf(System::UpstreamIree, Phase::Decode, 1,

@@ -6,7 +6,7 @@
 //!     cargo bench --bench ukernel_native
 
 use tenx_iree::bench::{self, BenchResult};
-use tenx_iree::ukernel::{self, pack, Mmt4dParams};
+use tenx_iree::ukernel::{self, pack, quant, Mmt4dParams};
 use tenx_iree::util::f16::F16;
 use tenx_iree::util::prng::Rng;
 
@@ -26,6 +26,40 @@ fn bench_mmt4d(name: &str, m: usize, k: usize, n: usize, m0: usize, n0: usize,
     let flops = p.flops() as f64;
     results.push(bench::run(name, &cfg, Some(flops), || {
         ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut out, &p);
+        std::hint::black_box(&out);
+    }));
+}
+
+fn bench_mmt4d_i8(name: &str, m: usize, k: usize, n: usize, m0: usize,
+                  n0: usize, k0: usize, results: &mut Vec<BenchResult>) {
+    let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+    let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+    let mut rng = Rng::new(3);
+    let lhs: Vec<i8> = (0..p.lhs_len()).map(|_| rng.range(-128, 128) as i8).collect();
+    let rhs: Vec<i8> = (0..p.rhs_len()).map(|_| rng.range(-128, 128) as i8).collect();
+    let mut out = vec![0i32; p.out_len()];
+    let cfg = bench::config_from_env();
+    let flops = p.flops() as f64;
+    results.push(bench::run(name, &cfg, Some(flops), || {
+        ukernel::mmt4d_s8s8s32(&lhs, &rhs, &mut out, &p);
+        std::hint::black_box(&out);
+    }));
+}
+
+/// End-to-end quantized matmul: quantize activations + pack + s8s8s32
+/// mmt4d + unpack + dequantize, against pre-packed int8 weights — the
+/// serving-path shape of the quantized workload.
+fn bench_quantized_e2e(name: &str, m: usize, k: usize, n: usize, m0: usize,
+                       n0: usize, k0: usize, results: &mut Vec<BenchResult>) {
+    let mut rng = Rng::new(4);
+    let a = rng.f32_vec(m * k, 1.0);
+    let b = rng.f32_vec(k * n, 1.0);
+    let (qb, pb) = quant::quantize(&b);
+    let rhs4 = quant::pack_quant_rhs(&qb, k, n, n0, k0);
+    let cfg = bench::config_from_env();
+    let flops = 2.0 * (m as f64) * (k as f64) * (n as f64);
+    results.push(bench::run(name, &cfg, Some(flops), || {
+        let out = quant::matmul_prepacked_rhs(&a, &rhs4, pb, m, k, n, m0, n0, k0);
         std::hint::black_box(&out);
     }));
 }
@@ -61,6 +95,18 @@ fn main() {
                 &mut results);
     bench_pack("pack_lhs f16 6x1, 128x2048", 128, 2048, 6, 1, &mut results);
     bench_pack("pack_lhs f16 1x1, 1x2048", 1, 2048, 1, 1, &mut results);
+    // Quantized path: raw s8s8s32 kernels on the int8 tiles, then the full
+    // quantize->pack->mmt4d->unpack->dequantize serving shape.
+    bench_mmt4d_i8("mmt4d i8 prefill 7x32x1, 128x2048x2048", 128, 2048, 2048,
+                   7, 32, 1, &mut results);
+    bench_mmt4d_i8("mmt4d i8 decode 1x128x1, 1x2048x2048", 1, 2048, 2048, 1,
+                   128, 1, &mut results);
+    bench_mmt4d_i8("mmt4d i8 prefill 7x32x1, 64x256x256 (tiny)", 64, 256,
+                   256, 7, 32, 1, &mut results);
+    bench_quantized_e2e("quantized e2e 7x32x1, 128x2048x2048", 128, 2048,
+                        2048, 7, 32, 1, &mut results);
+    bench_quantized_e2e("quantized e2e 1x128x1, 1x2048x2048", 1, 2048, 2048,
+                        1, 128, 1, &mut results);
     println!("{}", bench::render_table("native ukernel throughput", &results,
                                        "FLOP/s|elem/s"));
 }

@@ -36,14 +36,37 @@ class TileMNK:
         return (self.m0, self.n0, self.k0)
 
 
+def _check_vlen(vlen_bits: int) -> None:
+    """Mirror of Rust ``target::check_vlen``: >= 64 and a power of two
+    (non-power-of-two VLENs break the kernels' LMUL math)."""
+    if (vlen_bits < 64 or vlen_bits % 64 != 0
+            or vlen_bits & (vlen_bits - 1) != 0):
+        raise ValueError(f"invalid VLEN {vlen_bits}")
+
+
 def riscv64_tiles(vlen_bits: int, phase: str) -> TileMNK:
     """The paper's VLEN-aware selection for riscv64 (+V, RVA22)."""
-    if vlen_bits % 64 != 0 or vlen_bits < 64:
-        raise ValueError(f"invalid VLEN {vlen_bits}")
+    _check_vlen(vlen_bits)
     if phase == PHASE_PREFILL:
         return TileMNK(6, vlen_bits // 8, 1)
     if phase == PHASE_DECODE:
         return TileMNK(1, vlen_bits // 4, 1)
+    raise ValueError(f"unknown phase {phase!r}")
+
+
+def riscv64_tiles_i8(vlen_bits: int, phase: str) -> TileMNK:
+    """Int8 (s8s8s32) selection for riscv64 — mirror of Rust
+    ``target::select_tiles_for(.., ElemType::I8)``.
+
+    The e8 strip is twice as dense as f16: the strip plus its sign-extended
+    e16 image fit one aligned register block, freeing a 7th resident
+    accumulator row for prefill; decode doubles the strip to VLEN/2 lanes.
+    """
+    _check_vlen(vlen_bits)
+    if phase == PHASE_PREFILL:
+        return TileMNK(7, vlen_bits // 8, 1)
+    if phase == PHASE_DECODE:
+        return TileMNK(1, vlen_bits // 2, 1)
     raise ValueError(f"unknown phase {phase!r}")
 
 
@@ -60,12 +83,25 @@ def aarch64_tiles(phase: str) -> TileMNK:
 
 
 def select_tiles(arch: str, phase: str, vlen_bits: int = 256,
-                 has_avx512: bool = False) -> TileMNK:
+                 has_avx512: bool = False, dtype: str = "f16") -> TileMNK:
+    """Dtype-aware tile selection (dtype: "f16" | "f32" | "i8").
+
+    i8 on the upstream parity targets packs K pairs/quads the way
+    VNNI / SDOT kernels consume them, mirroring Rust ``select_tiles_for``.
+    """
+    if dtype not in ("f16", "f32", "i8"):
+        raise ValueError(f"unsupported dtype {dtype!r}")
     if arch == "riscv64":
+        if dtype == "i8":
+            return riscv64_tiles_i8(vlen_bits, phase)
         return riscv64_tiles(vlen_bits, phase)
     if arch == "x86_64":
+        if dtype == "i8":
+            return TileMNK(16, 16, 2)
         return x86_64_tiles(has_avx512, phase)
     if arch == "aarch64":
+        if dtype == "i8":
+            return TileMNK(8, 8, 4)
         return aarch64_tiles(phase)
     raise ValueError(f"unsupported arch {arch!r}")
 
@@ -73,3 +109,6 @@ def select_tiles(arch: str, phase: str, vlen_bits: int = 256,
 # The shapes used throughout this repo's artifacts (VLEN=256 testbed):
 PREFILL_TILES = riscv64_tiles(256, PHASE_PREFILL)  # (6, 32, 1)
 DECODE_TILES = riscv64_tiles(256, PHASE_DECODE)    # (1, 64, 1)
+# Quantized-path shapes at the same VLEN:
+PREFILL_TILES_I8 = riscv64_tiles_i8(256, PHASE_PREFILL)  # (7, 32, 1)
+DECODE_TILES_I8 = riscv64_tiles_i8(256, PHASE_DECODE)    # (1, 128, 1)

@@ -36,44 +36,57 @@ INTERPRET = True  # CPU PJRT; see module docstring.
 # mmt4d kernel
 # ---------------------------------------------------------------------------
 
-def _mmt4d_kernel(lhs_ref, rhs_ref, out_ref, *, k1: int):
+def _mmt4d_kernel(lhs_ref, rhs_ref, out_ref, *, k1: int, acc_dtype):
     """One (m1, n1) grid step: full-K accumulation of an M0 x N0 tile.
 
-    lhs_ref: [1, K1, M0, K0] f16   (one LHS tile-row strip)
-    rhs_ref: [1, K1, N0, K0] f16   (one RHS tile strip, already transposed)
-    out_ref: [1, 1, M0, N0]  f32
+    lhs_ref: [1, K1, M0, K0]   (one LHS tile-row strip)
+    rhs_ref: [1, K1, N0, K0]   (one RHS tile strip, already transposed)
+    out_ref: [1, 1, M0, N0]    accumulator (f32 for f16/f32 inputs — the
+                               vfwmacc chain — or exact i32 for the int8
+                               path's vsext.vf2 + vwmacc.vx chain)
     """
-    lhs = lhs_ref[0].astype(jnp.float32)  # [K1, M0, K0]
-    rhs = rhs_ref[0].astype(jnp.float32)  # [K1, N0, K0]
-    # sum_{k1,k0} lhs[k1, m0, k0] * rhs[k1, n0, k0] — the vfwmacc chain.
+    lhs = lhs_ref[0].astype(acc_dtype)  # [K1, M0, K0]
+    rhs = rhs_ref[0].astype(acc_dtype)  # [K1, N0, K0]
+    # sum_{k1,k0} lhs[k1, m0, k0] * rhs[k1, n0, k0] — the widening MAC chain.
     m0 = lhs.shape[1]
     n0 = rhs.shape[1]
     acc = jax.lax.dot_general(
         lhs.transpose(1, 0, 2).reshape(m0, -1),   # [M0, K1*K0]
         rhs.transpose(1, 0, 2).reshape(n0, -1),   # [N0, K1*K0]
         dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=acc_dtype,
     )
     del k1
     out_ref[0, 0] = acc
 
 
-def mmt4d(lhs4, rhs4):
-    """Packed mmt4d: [M1,K1,M0,K0] x [N1,K1,N0,K0] -> [M1,N1,M0,N0] f32."""
+def _mmt4d_call(lhs4, rhs4, acc_dtype):
+    """Shared pallas_call plumbing for the f32- and i32-accumulated mmt4d."""
     m1, k1, m0, k0 = lhs4.shape
     n1, k1r, n0, k0r = rhs4.shape
     assert (k1, k0) == (k1r, k0r), "LHS/RHS K tiling mismatch"
     return pl.pallas_call(
-        functools.partial(_mmt4d_kernel, k1=k1),
+        functools.partial(_mmt4d_kernel, k1=k1, acc_dtype=acc_dtype),
         grid=(m1, n1),
         in_specs=[
             pl.BlockSpec((1, k1, m0, k0), lambda i, j: (i, 0, 0, 0)),
             pl.BlockSpec((1, k1, n0, k0), lambda i, j: (j, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, m0, n0), lambda i, j: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((m1, n1, m0, n0), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m1, n1, m0, n0), acc_dtype),
         interpret=INTERPRET,
     )(lhs4, rhs4)
+
+
+def mmt4d(lhs4, rhs4):
+    """Packed mmt4d: [M1,K1,M0,K0] x [N1,K1,N0,K0] -> [M1,N1,M0,N0] f32."""
+    return _mmt4d_call(lhs4, rhs4, jnp.float32)
+
+
+def mmt4d_s8(lhs4, rhs4):
+    """Quantized mmt4d: i8 [M1,K1,M0,K0] x i8 [N1,K1,N0,K0] -> exact i32."""
+    assert lhs4.dtype == jnp.int8 and rhs4.dtype == jnp.int8
+    return _mmt4d_call(lhs4, rhs4, jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -129,14 +142,18 @@ def _unpack_kernel(c4_ref, out_ref):
 
 
 def unpack_acc(c4):
-    """[M1, N1, M0, N0] -> [M1*M0, N1*N0] (no pad drop; divisible path)."""
+    """[M1, N1, M0, N0] -> [M1*M0, N1*N0] (no pad drop; divisible path).
+
+    Accumulator dtype rides through (f32 for the float kernels, i32 for the
+    quantized path).
+    """
     m1, n1, m0, n0 = c4.shape
     return pl.pallas_call(
         _unpack_kernel,
         grid=(m1,),
         in_specs=[pl.BlockSpec((1, n1, m0, n0), lambda i: (i, 0, 0, 0))],
         out_specs=pl.BlockSpec((m0, n1 * n0), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m1 * m0, n1 * n0), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m1 * m0, n1 * n0), c4.dtype),
         interpret=INTERPRET,
     )(c4)
 
@@ -145,11 +162,12 @@ def unpack_acc(c4):
 # Whole pipeline: the op the materialize_encoding pass emits
 # ---------------------------------------------------------------------------
 
-def matmul_mmt4d(a, b, m0: int, n0: int, k0: int):
-    """a[M,K] @ b[K,N] -> f32 [M,N] through pack -> mmt4d -> unpack.
+def _matmul_via(a, b, m0: int, n0: int, k0: int, mm):
+    """Shared pad -> pack -> `mm` -> unpack pipeline body.
 
     Ragged M/N/K are padded with jnp (IREE folds this into pack's
     padding_value); the inner compute always runs the Pallas kernels.
+    Padding contributes exact zero products in both accumulator dtypes.
     """
     from . import ref
 
@@ -163,8 +181,13 @@ def matmul_mmt4d(a, b, m0: int, n0: int, k0: int):
     b = jnp.pad(b, ((0, k1 * k0 - k), (0, n1 * n0 - n)))
     lhs4 = pack_lhs(a, m0, k0)
     rhs4 = pack_rhs(b, n0, k0)
-    c4 = mmt4d(lhs4, rhs4)
+    c4 = mm(lhs4, rhs4)
     return unpack_acc(c4)[:m, :n]
+
+
+def matmul_mmt4d(a, b, m0: int, n0: int, k0: int):
+    """a[M,K] @ b[K,N] -> f32 [M,N] through pack -> mmt4d -> unpack."""
+    return _matmul_via(a, b, m0, n0, k0, mmt4d)
 
 
 def matmul_prefill(a, b, vlen_bits: int = 256):
@@ -175,3 +198,25 @@ def matmul_prefill(a, b, vlen_bits: int = 256):
 def matmul_decode(a, b, vlen_bits: int = 256):
     """The paper's decode (GEMV) configuration: tiles 1 x VLEN/4 x 1."""
     return matmul_mmt4d(a, b, 1, vlen_bits // 4, 1)
+
+
+# ---------------------------------------------------------------------------
+# Quantized (i8 x i8 -> i32) pipeline — mirror of rust/src/ukernel/quant.rs
+# ---------------------------------------------------------------------------
+
+def matmul_mmt4d_s8(a, b, m0: int, n0: int, k0: int):
+    """i8 a[M,K] @ i8 b[K,N] -> exact i32 [M,N] through the Pallas kernels
+    (bit-identical to a plain int32 matmul for any tiling)."""
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    return _matmul_via(a, b, m0, n0, k0, mmt4d_s8)
+
+
+def matmul_quantized(a, b, m0: int = 7, n0: int = 32, k0: int = 1):
+    """f32 matmul routed through the int8 path: quantize -> s8s8s32 mmt4d ->
+    dequantize. Default tiles are the VLEN=256 int8 prefill selection."""
+    from . import ref
+
+    qa, sa = ref.quantize_sym(a)
+    qb, sb = ref.quantize_sym(b)
+    acc = matmul_mmt4d_s8(qa, qb, m0, n0, k0)
+    return acc.astype(jnp.float32) * (sa * sb)

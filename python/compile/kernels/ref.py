@@ -91,3 +91,28 @@ def matmul_f32(a, b):
 def np_matmul_f16_f32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Numpy golden: f16 operands, exact f32 accumulation."""
     return np.matmul(a.astype(np.float32), b.astype(np.float32))
+
+
+def quantize_sym(x, bits: int = 8):
+    """Symmetric per-tensor int8 quantization (mirror of
+    rust/src/ukernel/quant.rs): ``q = round(x / scale)`` with
+    ``scale = max|x| / 127``; returns ``(q_int8, scale)``.
+
+    Ties round half-away-from-zero to match Rust's ``f32::round`` —
+    ``jnp.round`` would round half-to-even and diverge from the Rust
+    quantizer on half-step inputs.
+    """
+    qmax = float(2 ** (bits - 1) - 1)  # 127: symmetric, no -128
+    max_abs = jnp.max(jnp.abs(x))
+    scale = jnp.where(max_abs > 0, max_abs / qmax, 1.0).astype(jnp.float32)
+    y = x / scale
+    rounded = jnp.sign(y) * jnp.floor(jnp.abs(y) + 0.5)
+    q = jnp.clip(rounded, -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def np_matmul_s8_s32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Numpy golden for the quantized path: i8 operands, exact i32
+    accumulation."""
+    assert a.dtype == np.int8 and b.dtype == np.int8
+    return np.matmul(a.astype(np.int32), b.astype(np.int32))

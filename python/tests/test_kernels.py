@@ -149,6 +149,11 @@ def test_invalid_vlen_rejected():
         encoding.riscv64_tiles(100, "prefill")
     with pytest.raises(ValueError):
         encoding.riscv64_tiles(256, "training")
+    # non-power-of-two VLENs are rejected like Rust target::check_vlen
+    with pytest.raises(ValueError):
+        encoding.riscv64_tiles(192, "prefill")
+    with pytest.raises(ValueError):
+        encoding.riscv64_tiles_i8(192, "decode")
 
 
 def test_upstream_parity_targets():
@@ -156,3 +161,84 @@ def test_upstream_parity_targets():
                                  has_avx512=True).as_tuple() == (16, 16, 1)
     assert encoding.select_tiles("x86_64", "prefill").as_tuple() == (8, 8, 1)
     assert encoding.select_tiles("aarch64", "decode").as_tuple() == (8, 8, 1)
+
+
+# ---------------------------------------------------------------------------
+# int8 (s8s8s32) quantized path — mirror of the Rust quant/mmt4d_rvv_i8 work
+# ---------------------------------------------------------------------------
+
+I8_TILES = [
+    encoding.PREFILL_TILES_I8.as_tuple(),   # (7, 32, 1) — VLEN=256 prefill
+    encoding.DECODE_TILES_I8.as_tuple(),    # (1, 128, 1) — VLEN=256 decode
+    (16, 16, 2),                            # x86-64 VNNI parity shape
+    (8, 8, 4),                              # aarch64 SDOT parity shape
+]
+
+I8_SHAPES = [(7, 8, 32), (14, 64, 64), (1, 256, 128), (5, 7, 9),
+             (13, 31, 65), (1, 1, 1)]
+
+
+def rand_i8(shape):
+    return RNG.integers(-128, 128, size=shape, dtype=np.int8)
+
+
+@pytest.mark.parametrize("tiles", I8_TILES)
+@pytest.mark.parametrize("shape", I8_SHAPES)
+def test_matmul_mmt4d_s8_bit_exact(shape, tiles):
+    # Integer accumulation is exact: the tiled pipeline must match the
+    # numpy int32 golden bit for bit, for every shape x tile combination.
+    m, k, n = shape
+    m0, n0, k0 = tiles
+    a = rand_i8((m, k))
+    b = rand_i8((k, n))
+    got = np.asarray(mk.matmul_mmt4d_s8(jnp.asarray(a), jnp.asarray(b),
+                                        m0, n0, k0))
+    want = ref.np_matmul_s8_s32(a, b)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_s8_oracle_matches_numpy():
+    a = rand_i8((12, 40))
+    b = rand_i8((40, 48))
+    lhs4 = ref.pack_lhs(jnp.asarray(a), 7, 1)
+    rhs4 = ref.pack_rhs(jnp.asarray(b), 32, 1)
+    c4 = ref.mmt4d(lhs4, rhs4, out_dtype=jnp.int32)
+    got = np.asarray(ref.unpack_acc(c4, 12, 48))
+    np.testing.assert_array_equal(got, ref.np_matmul_s8_s32(a, b))
+
+
+def test_quantize_sym_roundtrip_bounded():
+    x = jnp.asarray(rand((64,), np.float32))
+    q, scale = ref.quantize_sym(x)
+    back = np.asarray(q, np.float32) * float(scale)
+    assert np.max(np.abs(back - np.asarray(x))) <= float(scale) / 2 + 1e-6
+
+
+def test_quantized_matmul_tracks_f32():
+    m, k, n = 12, 64, 33
+    a = jnp.asarray(rand((m, k), np.float32))
+    b = jnp.asarray(rand((k, n), np.float32))
+    got = np.asarray(mk.matmul_quantized(a, b))
+    want = np.asarray(ref.matmul_f32(a, b))
+    _, sa = ref.quantize_sym(a)
+    _, sb = ref.quantize_sym(b)
+    bound = k * float(sa) * float(sb) * 128.0
+    assert np.max(np.abs(got - want)) <= bound
+
+
+def test_i8_tile_selection_mirrors_rust():
+    for vlen, want_pf, want_dec in [
+        (128, (7, 16, 1), (1, 64, 1)),
+        (256, (7, 32, 1), (1, 128, 1)),
+        (512, (7, 64, 1), (1, 256, 1)),
+    ]:
+        assert encoding.riscv64_tiles_i8(vlen, "prefill").as_tuple() == want_pf
+        assert encoding.riscv64_tiles_i8(vlen, "decode").as_tuple() == want_dec
+    assert encoding.select_tiles("riscv64", "prefill",
+                                 dtype="i8").as_tuple() == (7, 32, 1)
+    assert encoding.select_tiles("x86_64", "prefill",
+                                 dtype="i8").as_tuple() == (16, 16, 2)
+    assert encoding.select_tiles("aarch64", "decode",
+                                 dtype="i8").as_tuple() == (8, 8, 4)
+    with pytest.raises(ValueError):
+        encoding.select_tiles("riscv64", "prefill", dtype="i4")

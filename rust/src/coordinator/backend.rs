@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, EnginePath};
+use crate::runtime::{Engine, EnginePath, Literal};
 
 #[derive(Debug, Clone, Copy)]
 pub struct BackendDims {
@@ -35,9 +35,9 @@ pub trait ModelBackend {
 /// PJRT-backed implementation over the AOT artifacts.
 pub struct EngineBackend {
     engine: Engine,
-    live_k: xla::Literal,
-    live_v: xla::Literal,
-    staged: Option<(xla::Literal, xla::Literal)>,
+    live_k: Literal,
+    live_v: Literal,
+    staged: Option<(Literal, Literal)>,
 }
 
 impl EngineBackend {

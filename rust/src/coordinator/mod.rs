@@ -1,13 +1,15 @@
 //! The serving coordinator (Layer 3): request types, the model-backend
-//! abstraction (PJRT engine or mock), the continuous-batching scheduler and
-//! the threaded server front-end.
+//! abstraction (PJRT engine, native-ukernel, or mock), the
+//! continuous-batching scheduler and the threaded server front-end.
 
 pub mod backend;
+pub mod native;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use backend::{BackendDims, EngineBackend, MockBackend, ModelBackend};
+pub use native::{NativeBackend, Precision};
 pub use request::{FinishReason, Request, RequestId, RequestOutput};
 pub use scheduler::Scheduler;
 pub use server::{start, start_with, ServerHandle};

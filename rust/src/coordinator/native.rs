@@ -1,0 +1,362 @@
+//! Native microkernel serving backend: a [`ModelBackend`] whose logits are
+//! computed on this host through the actual mmt4d ukernel library — no PJRT,
+//! no artifacts. The "model" is a tiny deterministic embedding + LM-head
+//! (hidden = embed[token], logits = hidden @ W), which is exactly the shape
+//! of work the paper's kernels serve, so the coordinator's full
+//! continuous-batching path (prefill batches, KV-slot bookkeeping, decode
+//! steps) exercises real pack/mmt4d/unpack calls per request.
+//!
+//! The backend is precision-selectable — [`Precision::F16`] runs the
+//! f16f16f32 kernels, [`Precision::Int8`] quantizes the head at load time
+//! ([`quant::pack_quant_rhs`]) and routes the same matmuls through the
+//! s8s8s32 kernels — which is what lets `tenx serve --native` and the
+//! benches run the quantized workload next to f32/f16 with no other change.
+
+#![deny(missing_docs)]
+
+use anyhow::Result;
+
+use super::backend::{BackendDims, ModelBackend};
+use crate::config::manifest::Tile;
+use crate::ir::ElemType;
+use crate::target::{select_tiles_for, Arch, Phase};
+use crate::ukernel::{self, quant};
+use crate::util::f16::F16;
+use crate::util::prng::Rng;
+
+/// Numeric path the native backend serves with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// f16 operands, f32 accumulation (the paper's precision case).
+    F16,
+    /// Symmetric int8 weights/activations, exact i32 accumulation.
+    Int8,
+}
+
+impl Precision {
+    /// Lower-case CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F16 => "f16",
+            Precision::Int8 => "i8",
+        }
+    }
+
+    /// Parse `"f16"` / `"i8"` (also accepts `"int8"`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f16" => Some(Precision::F16),
+            "i8" | "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// A [`ModelBackend`] over the native ukernel library (see module docs).
+pub struct NativeBackend {
+    dims: BackendDims,
+    d_model: usize,
+    precision: Precision,
+    /// Token embedding [V, D] f16.
+    embed: Vec<F16>,
+    /// LM head [D, V] f16 (the f16 path's RHS; empty in Int8 mode, which
+    /// keeps only the quantized copies below).
+    head: Vec<F16>,
+    /// Quantized head: scale + RHS pre-packed for each phase's tiles.
+    head_scale: quant::QuantParams,
+    head_q_prefill: Vec<i8>,
+    head_q_decode: Vec<i8>,
+    prefill_tile: Tile,
+    decode_tile: Tile,
+    /// live[slot] = tokens whose state is committed, by position (the same
+    /// KV-slot bookkeeping contract the scheduler tests drive on the mock).
+    pub live: Vec<Vec<i32>>,
+    staged: Option<Vec<Vec<i32>>>,
+}
+
+impl NativeBackend {
+    /// Build a backend with deterministic random-init weights. Tiles come
+    /// from the paper's VLEN=256 selection per precision.
+    pub fn new(batch: usize, prefill_seq: usize, max_seq: usize, vocab: usize,
+               d_model: usize, precision: Precision, seed: u64) -> NativeBackend {
+        // The tied head writes column next_token(t) per token t; that map is
+        // a bijection (and the favoured-token property holds) only when 7
+        // and the vocab size are coprime.
+        assert!(vocab % 7 != 0,
+                "NativeBackend vocab must not be a multiple of 7");
+        let arch = Arch::Riscv64 { vlen_bits: 256 };
+        let elem = match precision {
+            Precision::F16 => ElemType::F16,
+            Precision::Int8 => ElemType::I8,
+        };
+        let prefill_tile = select_tiles_for(arch, Phase::Prefill, elem)
+            .expect("VLEN=256 tiles");
+        let decode_tile = select_tiles_for(arch, Phase::Decode, elem)
+            .expect("VLEN=256 tiles");
+
+        let mut rng = Rng::new(seed);
+        let embed: Vec<F16> = (0..vocab * d_model)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        // Head [D, V] tied to the embedding so that logits(t) peak at
+        // `next_token(t)` — the same favoured-token convention as
+        // `MockBackend`, except the peak emerges from a *real* matmul
+        // (`logits(t)[next(t)] = ||embed[t]||^2 >> cross terms` once
+        // `d_model` is a few dozen). Scheduler tests can predict chains,
+        // and the f16 vs int8 argmax margin is wide by construction.
+        let mut head = vec![F16::ZERO; d_model * vocab];
+        for t in 0..vocab {
+            let fav = Self::next_token(t as i32, vocab) as usize;
+            for dd in 0..d_model {
+                head[dd * vocab + fav] = embed[t * d_model + dd];
+            }
+        }
+        // Each precision keeps only the weight representation it serves
+        // with: Int8 quantizes + pre-packs the head per phase and drops the
+        // f16 copy; F16 keeps the f16 head and no quantized state.
+        let (head, head_scale, head_q_prefill, head_q_decode) = match precision {
+            Precision::Int8 => {
+                let (head_q, scale) = quant::quantize_f16(&head);
+                (Vec::new(),
+                 scale,
+                 quant::pack_quant_rhs(&head_q, d_model, vocab,
+                                       prefill_tile.n0, prefill_tile.k0),
+                 quant::pack_quant_rhs(&head_q, d_model, vocab,
+                                       decode_tile.n0, decode_tile.k0))
+            }
+            Precision::F16 => {
+                (head, quant::QuantParams { scale: 1.0 }, Vec::new(),
+                 Vec::new())
+            }
+        };
+
+        NativeBackend {
+            dims: BackendDims { batch, prefill_seq, max_seq, vocab },
+            d_model,
+            precision,
+            embed,
+            head,
+            head_scale,
+            head_q_prefill,
+            head_q_decode,
+            prefill_tile,
+            decode_tile,
+            live: vec![vec![]; batch],
+            staged: None,
+        }
+    }
+
+    /// Which numeric path this backend serves with.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// The token this model's logits favour after `prev` (same convention
+    /// as `MockBackend::next_token`).
+    pub fn next_token(prev: i32, vocab: usize) -> i32 {
+        (prev * 7 + 13).rem_euclid(vocab as i32)
+    }
+
+    /// Logits for `rows` hidden vectors (one per token), [rows, V], through
+    /// the mmt4d path of the configured precision.
+    fn logits_for_tokens(&self, tokens: &[i32], phase: Phase) -> Vec<f32> {
+        let (d, v) = (self.d_model, self.dims.vocab);
+        let rows = tokens.len();
+        let tile = match phase {
+            Phase::Prefill => self.prefill_tile,
+            Phase::Decode => self.decode_tile,
+        };
+        match self.precision {
+            Precision::F16 => {
+                let mut lhs = Vec::with_capacity(rows * d);
+                for &t in tokens {
+                    let row = &self.embed[(t as usize % self.dims.vocab) * d..][..d];
+                    lhs.extend_from_slice(row);
+                }
+                ukernel::matmul_f16_via_mmt4d(&lhs, &self.head, rows, d, v,
+                                              tile.m0, tile.n0, tile.k0)
+            }
+            Precision::Int8 => {
+                let mut lhs = Vec::with_capacity(rows * d);
+                for &t in tokens {
+                    let row = &self.embed[(t as usize % self.dims.vocab) * d..][..d];
+                    lhs.extend(row.iter().map(|h| h.to_f32()));
+                }
+                let rhs4 = match phase {
+                    Phase::Prefill => &self.head_q_prefill,
+                    Phase::Decode => &self.head_q_decode,
+                };
+                // Row-wise activation scales: a request's logits must not
+                // depend on which other requests share the batch.
+                quant::matmul_prepacked_rhs_rowwise(&lhs, rhs4,
+                                                    self.head_scale, rows, d,
+                                                    v, tile.m0, tile.n0,
+                                                    tile.k0)
+            }
+        }
+    }
+}
+
+impl ModelBackend for NativeBackend {
+    fn dims(&self) -> BackendDims {
+        self.dims
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let BackendDims { batch, prefill_seq, .. } = self.dims;
+        anyhow::ensure!(tokens.len() == batch * prefill_seq,
+                        "prefill takes B*S tokens");
+        let mut staged = Vec::with_capacity(batch);
+        for b in 0..batch {
+            staged.push(tokens[b * prefill_seq..][..prefill_seq].to_vec());
+        }
+        self.staged = Some(staged);
+        Ok(self.logits_for_tokens(tokens, Phase::Prefill))
+    }
+
+    fn commit_slots(&mut self, slots: &[usize]) -> Result<()> {
+        let staged = self
+            .staged
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no staged prefill"))?;
+        for &s in slots {
+            anyhow::ensure!(s < self.live.len(), "slot {s} out of range");
+            self.live[s] = staged[s].clone();
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let BackendDims { batch, max_seq, .. } = self.dims;
+        anyhow::ensure!(tokens.len() == batch && pos.len() == batch);
+        for b in 0..batch {
+            let p = pos[b] as usize;
+            anyhow::ensure!(p < max_seq, "pos out of cache");
+            if self.live[b].len() <= p {
+                self.live[b].resize(p + 1, 0);
+            }
+            self.live[b][p] = tokens[b];
+        }
+        Ok(self.logits_for_tokens(tokens, Phase::Decode))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::argmax;
+
+    fn backend(p: Precision) -> NativeBackend {
+        // d_model = 64 gives the structured head a wide argmax margin
+        // (signal ~ D/3 vs cross-term noise ~ sqrt(D)/3).
+        NativeBackend::new(4, 8, 32, 128, 64, p, 42)
+    }
+
+    #[test]
+    fn prefill_and_decode_shapes() {
+        for p in [Precision::F16, Precision::Int8] {
+            let mut b = backend(p);
+            let logits = b.prefill(&vec![3i32; 4 * 8]).unwrap();
+            assert_eq!(logits.len(), 4 * 8 * 128, "{p:?}");
+            b.commit_slots(&[0, 2]).unwrap();
+            let l2 = b.decode(&[1, 2, 3, 4], &[8, 8, 8, 8]).unwrap();
+            assert_eq!(l2.len(), 4 * 128, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_token() {
+        for p in [Precision::F16, Precision::Int8] {
+            let mut b = backend(p);
+            let a = b.decode(&[7, 7, 7, 7], &[1, 1, 1, 1]).unwrap();
+            let c = b.decode(&[7, 7, 7, 7], &[2, 2, 2, 2]).unwrap();
+            assert_eq!(a, c, "{p:?}: logits depend only on the token");
+            // all four rows identical (same token)
+            assert_eq!(&a[..128], &a[128..256], "{p:?}");
+        }
+    }
+
+    #[test]
+    fn int8_logits_independent_of_co_batched_tokens() {
+        // Row-wise activation scales: token 7's logits must be bit-identical
+        // no matter which tokens share the decode batch.
+        let mut b = backend(Precision::Int8);
+        let x = b.decode(&[7, 1, 2, 3], &[1, 1, 1, 1]).unwrap();
+        let y = b.decode(&[7, 100, 90, 80], &[2, 2, 2, 2]).unwrap();
+        assert_eq!(&x[..128], &y[..128],
+                   "token 7's logits changed with its batch neighbours");
+    }
+
+    #[test]
+    fn logits_favour_next_token_through_real_matmuls() {
+        let mut b = backend(Precision::F16);
+        let toks: Vec<i32> = (0..32).collect();
+        let logits = b.prefill(&toks).unwrap();
+        let v = 128;
+        for (i, &t) in toks.iter().enumerate() {
+            assert_eq!(argmax(&logits[i * v..][..v]) as i32,
+                       NativeBackend::next_token(t, v),
+                       "token {t}");
+        }
+    }
+
+    #[test]
+    fn int8_tracks_f16_argmax() {
+        // The quantized path's Table-1-style claim at serving level:
+        // symmetric int8 preserves the head's argmax on this model (the
+        // structured head's margin dwarfs the quantization error).
+        let mut f = backend(Precision::F16);
+        let mut q = backend(Precision::Int8);
+        let toks: Vec<i32> = (0..32).collect();
+        let lf = f.prefill(&toks).unwrap();
+        let lq = q.prefill(&toks).unwrap();
+        let v = 128;
+        for i in 0..32 {
+            assert_eq!(argmax(&lf[i * v..][..v]), argmax(&lq[i * v..][..v]),
+                       "row {i}");
+        }
+    }
+
+    #[test]
+    fn serves_through_the_coordinator() {
+        use crate::coordinator::server;
+        use crate::llm::SamplingParams;
+        for p in [Precision::F16, Precision::Int8] {
+            let h = server::start(
+                NativeBackend::new(2, 8, 32, 64, 64, p, 7), 64, 3);
+            let rx = h.submit(vec![5, 6], 4, SamplingParams::Greedy, None)
+                .unwrap();
+            let out = rx.recv().unwrap();
+            assert_eq!(out.tokens.len(), 4, "{p:?}");
+            assert!(out.tokens.iter().all(|&t| (t as usize) < 64));
+            h.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn both_precisions_greedy_decode_agree() {
+        // End-to-end generation equality between the f16 and int8 serving
+        // paths on a prompt set (greedy; argmax-preserving quantization).
+        use crate::coordinator::server;
+        use crate::llm::SamplingParams;
+        let mut outs = Vec::new();
+        for p in [Precision::F16, Precision::Int8] {
+            let h = server::start(
+                NativeBackend::new(2, 8, 32, 64, 64, p, 7), 64, 3);
+            let toks: Vec<Vec<u32>> = [vec![3u32, 9], vec![11u32]]
+                .iter()
+                .map(|prompt| {
+                    h.submit(prompt.clone(), 4, SamplingParams::Greedy, None)
+                        .unwrap()
+                        .recv()
+                        .unwrap()
+                        .tokens
+                })
+                .collect();
+            h.shutdown().unwrap();
+            outs.push(toks);
+        }
+        assert_eq!(outs[0], outs[1],
+                   "f16 and int8 serving paths diverged on greedy decode");
+    }
+}

@@ -32,7 +32,11 @@ pub fn run_func(f: &Func, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
         let out = match &op.kind {
             OpKind::Matmul { lhs, rhs } => {
                 let (l, r) = (get(*lhs)?, get(*rhs)?);
-                naive_matmul(l, r)?
+                if op.result_type.elem == ElemType::I32 {
+                    naive_matmul_i32(l, r)? // quantized: exact i32 accumulate
+                } else {
+                    naive_matmul(l, r)?
+                }
             }
             OpKind::Matvec { lhs, rhs } => {
                 let (l, r) = (get(*lhs)?, get(*rhs)?);
@@ -81,7 +85,7 @@ pub fn run_func(f: &Func, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
             OpKind::Unpack { src } => {
                 let s = get(*src)?;
                 let uop = ukernel::UkernelOp::Unpack {
-                    elem: ElemType::F32, m0: s.shape[2], n0: s.shape[3],
+                    elem: op.result_type.elem, m0: s.shape[2], n0: s.shape[3],
                 };
                 ukernel::execute(&uop, &[s], &op.result_type.shape)?
             }
@@ -125,6 +129,29 @@ fn reshaped(t: &Tensor, shape: Vec<usize>) -> Tensor {
     let mut out = t.clone();
     out.shape = shape;
     out
+}
+
+/// Naive i8 x i8 -> i32 matmul: the quantized path's oracle. Integer
+/// accumulation is exact, so this agrees bit-for-bit with the lowered
+/// pack/mmt4d/unpack pipeline regardless of tiling.
+fn naive_matmul_i32(l: &Tensor, r: &Tensor) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(l.shape.len() == 2 && r.shape.len() == 2);
+    let (m, k) = (l.shape[0], l.shape[1]);
+    let n = r.shape[1];
+    anyhow::ensure!(r.shape[0] == k, "K mismatch");
+    let lv = l.as_i8().ok_or_else(|| anyhow::anyhow!("i32 matmul takes i8 lhs"))?;
+    let rv = r.as_i8().ok_or_else(|| anyhow::anyhow!("i32 matmul takes i8 rhs"))?;
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for c in 0..k {
+                acc += lv[i * k + c] as i32 * rv[c * n + j] as i32;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Ok(Tensor::i32(vec![m, n], out))
 }
 
 /// Naive matmul with f32 accumulation; result elem is always f32 (the IR's
@@ -190,6 +217,37 @@ func @packed(%0: tensor<10x8xf16>, %1: tensor<8x40xf16>) {
         let packed = run_func(m.get("packed").unwrap(), &[a, b]).unwrap();
         // identical f32 accumulation order per element -> exact equality
         assert_eq!(plain[0].as_f32().unwrap(), packed[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn i8_matmul_vs_packed_pipeline_bit_identical() {
+        // The quantized path's Table-1 statement at IR level: integer
+        // accumulation is exact, so naive and tiled must agree bit-for-bit.
+        let text = "\
+func @plain(%0: tensor<10x8xi8>, %1: tensor<8x40xi8>) {
+  %2 = linalg.matmul %0, %1 : tensor<10x40xi32>
+  return %2
+}
+func @packed(%0: tensor<10x8xi8>, %1: tensor<8x40xi8>) {
+  %2 = tensor.pack %0 kind(lhs) tiles(7, 1) : tensor<2x8x7x1xi8>
+  %3 = tensor.pack %1 kind(rhs) tiles(32, 1) : tensor<2x8x32x1xi8>
+  %4 = linalg.mmt4d %2, %3 : tensor<2x2x7x32xi32>
+  %5 = tensor.unpack %4 : tensor<10x40xi32>
+  return %5
+}
+";
+        let m = parse_module(text).unwrap();
+        crate::ir::verify::verify_module(&m).unwrap();
+        let mut rng = Rng::new(29);
+        let mk = |rng: &mut Rng, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::i8(shape, (0..n).map(|_| rng.range(-128, 128) as i8).collect())
+        };
+        let a = mk(&mut rng, vec![10, 8]);
+        let b = mk(&mut rng, vec![8, 40]);
+        let plain = run_func(m.get("plain").unwrap(), &[a.clone(), b.clone()]).unwrap();
+        let packed = run_func(m.get("packed").unwrap(), &[a, b]).unwrap();
+        assert_eq!(plain[0].as_i32().unwrap(), packed[0].as_i32().unwrap());
     }
 
     #[test]

@@ -33,6 +33,26 @@ pub fn build_matmul_func(name: &str, m: usize, k: usize, n: usize,
     f
 }
 
+/// Build a quantized single-matmul function: i8 operands with an exact i32
+/// accumulator (`C[M,N] = A[M,K] x B[K,N]`, s8s8s32) — the canonical input
+/// of the int8 mmt4d pipeline.
+pub fn build_quant_matmul_func(name: &str, m: usize, k: usize,
+                               n: usize) -> Func {
+    let mut f = Func::new(
+        name,
+        vec![
+            TensorType::new(vec![m, k], ElemType::I8),
+            TensorType::new(vec![k, n], ElemType::I8),
+        ],
+    );
+    let c = f.push(
+        OpKind::Matmul { lhs: f.arg(0), rhs: f.arg(1) },
+        TensorType::new(vec![m, n], ElemType::I32),
+    );
+    f.results = vec![c];
+    f
+}
+
 /// Build a matvec function (`y[M] = A[M,K] x x[K]`) — the decode-phase shape.
 pub fn build_matvec_func(name: &str, m: usize, k: usize, elem: ElemType) -> Func {
     let mut f = Func::new(
@@ -60,6 +80,7 @@ mod tests {
             funcs: vec![
                 build_matmul_func("mm", 64, 256, 256, ElemType::F16),
                 build_matvec_func("mv", 512, 256, ElemType::F16),
+                build_quant_matmul_func("qmm", 64, 256, 256),
             ],
         };
         verify::verify_module(&m).unwrap();

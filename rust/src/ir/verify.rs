@@ -51,6 +51,11 @@ fn verify_op(f: &Func, op: &Op) -> anyhow::Result<()> {
             anyhow::ensure!(rt.shape == vec![l.shape[0], r.shape[1]],
                             "result shape {rt} wrong for {l} x {r}");
             anyhow::ensure!(l.elem == r.elem, "mixed operand dtypes");
+            // i32 results are the quantized accumulator: i8 operands only.
+            if rt.elem == super::types::ElemType::I32 {
+                anyhow::ensure!(l.elem == super::types::ElemType::I8,
+                                "i32-accumulated matmul takes i8 operands");
+            }
         }
         OpKind::Matvec { lhs, rhs } => {
             let (l, r) = (ty(f, *lhs)?, ty(f, *rhs)?);
@@ -101,6 +106,8 @@ fn verify_op(f: &Func, op: &Op) -> anyhow::Result<()> {
             anyhow::ensure!(rt.shape[1] <= s.shape[1] * s.shape[3]
                             && rt.shape[1] > (s.shape[1] - 1) * s.shape[3],
                             "unpack N inconsistent with tiling");
+            anyhow::ensure!(rt.elem == s.elem,
+                            "unpack cannot change the accumulator dtype");
         }
         OpKind::Mmt4d { lhs, rhs } => {
             let (l, r) = (ty(f, *lhs)?, ty(f, *rhs)?);
@@ -184,6 +191,18 @@ func @f(%0: tensor<10x8xf16>, %1: tensor<8x40xf16>) {
     fn catches_bad_ukernel_arity() {
         bad("func @f(%0: tensor<1x8x6x1xf16>) {\n  %1 = ukernel.call @iree_uk_mmt4d_f16f16f32_6x32x1(%0) : tensor<1x1x6x32xf32>\n  return %1\n}\n",
             "takes 2 args");
+    }
+
+    #[test]
+    fn quantized_matmul_rules() {
+        // i8 x i8 -> i32 is legal…
+        ok("func @q(%0: tensor<4x8xi8>, %1: tensor<8x4xi8>) {\n  %2 = linalg.matmul %0, %1 : tensor<4x4xi32>\n  return %2\n}\n");
+        // …but an i32 accumulator over float operands is not.
+        bad("func @q(%0: tensor<4x8xf16>, %1: tensor<8x4xf16>) {\n  %2 = linalg.matmul %0, %1 : tensor<4x4xi32>\n  return %2\n}\n",
+            "i8 operands");
+        // unpack must preserve the accumulator dtype.
+        bad("func @q(%0: tensor<1x1x7x32xi32>) {\n  %1 = tensor.unpack %0 : tensor<7x32xf32>\n  return %1\n}\n",
+            "accumulator dtype");
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! The int8 (s8 x s8 -> s32) RVV mmt4d microkernels on the simulator — the
+//! quantized counterpart of `mmt4d_rvv.rs`, built from widening integer MACs
+//! the way the f16 kernels are built from `vfwmacc.vf`.
+//!
+//! Per K step the kernel loads one N0-wide e8 RHS strip (`vle8.v`),
+//! sign-extends it once into an e16 image (`vsext.vf2`), then broadcasts M0
+//! LHS bytes (`lb` + `vwmacc.vx`) into e32 accumulator groups. int8 data is
+//! twice as dense as f16, so at the same N0 the strip occupies half the
+//! registers — which is what buys the i8 prefill tile its 7th resident
+//! accumulator row and the decode tile its doubled VLEN/2 strip
+//! (`target::select_tiles_for`).
+//!
+//! Register allocation (groups aligned to their LMUL; lmul32 = 4 * lmul8):
+//!
+//!   v0..                   RHS e8 strip       (lmul8 regs)
+//!   v[2*lmul8]..           e16 sign-extension (2*lmul8 regs)
+//!   v[lmul32]..            accumulator rows   (lmul32 regs each)
+//!
+//! i.e. one lmul32-aligned block for the strip + its widened image, then one
+//! e32 group per LHS row — `target::vreg_pressure_i8` is the closed form.
+//! When the e32 footprint exceeds LMUL=8 (the VLEN/2 decode strip), each
+//! e32 op is issued as two legal LMUL=8 half-group instructions with the
+//! same register footprint and chime total.
+//! Spill scratch is allocated *lazily*: only when M0 exceeds the resident
+//! capacity does the kernel sacrifice one accumulator row as an e32 scratch
+//! group and emit spill traffic, so `target::tile_spills_i8` predicts
+//! exactly when `spill_insns` becomes non-zero.
+
+#![deny(missing_docs)]
+
+use super::mmt4d_rvv::Mmt4dLayout;
+use crate::rvv::{Rvv, Sew};
+
+/// Scratch area for spills (past the operand buffers), mirroring the f16
+/// kernel's layout.
+const SPILL_BASE_OFFSET: usize = 64;
+
+/// Generic int8 mmt4d tile kernel with lazy spill modelling.
+///
+/// Layout interpretation (row-major, K0 = 1):
+///   `lhs_addr` [M1, K1, M0] i8, `rhs_addr` [N1, K1, N0] i8,
+///   `out_addr` [M1, N1, M0, N0] i32.
+pub fn mmt4d_tile_rvv_i8(m: &mut Rvv, l: &Mmt4dLayout) {
+    let vlen = m.cfg.vlen_bits;
+    // e8 LMUL for an N0-wide i8 strip; its e16 image and e32 accumulators.
+    let lmul8 = (l.n0 * 8).div_ceil(vlen).next_power_of_two();
+    let lmul16 = lmul8 * 2;
+    let lmul32 = lmul8 * 4;
+    assert!(lmul16 <= 8, "N0 {} too wide for VLEN {vlen}", l.n0);
+    // RVV 1.0 caps LMUL at 8: when the widened e32 footprint exceeds that
+    // (the VLEN/2 decode strip: lmul32 = 16), every e32 op is issued as
+    // `segs` half-strip instructions on legal LMUL = lmul32/segs <= 8
+    // groups. The register footprint and chime totals are unchanged —
+    // only the instruction count splits.
+    let segs = lmul32.div_ceil(8);
+    let seg_l16 = lmul16 / segs; // e16 source group per segment
+    let seg_l32 = lmul32 / segs; // e32 group per segment (<= 8)
+    assert!(segs == 1 || l.n0 * 16 == lmul16 * vlen,
+            "segmented e32 accumulation needs a register-exact strip");
+    let seg_lanes = l.n0 / segs;
+
+    let strip_v = 0;
+    let image_v = lmul16; // 2*lmul8, aligned to its own LMUL
+    let acc_base = lmul32;
+    let capacity = (m.cfg.vector_regs - acc_base) / lmul32;
+    // Lazy scratch: only a spilling tile gives up a row for scratch.
+    let (resident_rows, scratch_v) = if l.m0 <= capacity {
+        (l.m0, 0) // scratch never used
+    } else {
+        (capacity - 1, acc_base + (capacity - 1) * lmul32)
+    };
+    let spill_rows = l.m0 - resident_rows;
+    let spill_base = m.mem.len() - SPILL_BASE_OFFSET - spill_rows.max(1) * l.n0 * 4;
+
+    // One logical e32 op over the lmul32 footprint = `segs` legal
+    // LMUL<=8 instructions.
+    let seg = SegE32 { segs, seg_l16, seg_l32, seg_lanes, image_v };
+
+    for i1 in 0..l.m1 {
+        for j1 in 0..l.n1 {
+            m.vsetvli(seg_lanes, Sew::E16, seg_l16);
+            // zero accumulators (resident) / zero spill slots (memory)
+            for r in 0..resident_rows {
+                seg.zero(m, acc_base + r * lmul32);
+            }
+            for s in 0..spill_rows {
+                seg.zero(m, scratch_v);
+                seg.store(m, scratch_v, spill_base + s * l.n0 * 4);
+                m.stats.spill_insns += 1;
+            }
+            for k in 0..l.k1 {
+                let rhs_tile = l.rhs_addr + (j1 * l.k1 + k) * l.n0;
+                m.vle8_raw(strip_v, rhs_tile, l.n0, lmul8);
+                m.vsext_vf2(image_v, strip_v, l.n0, lmul16);
+                let lhs_col = l.lhs_addr + (i1 * l.k1 + k) * l.m0;
+                for r in 0..l.m0 {
+                    m.lb(1, lhs_col + r);
+                    if r < resident_rows {
+                        seg.mac(m, acc_base + r * lmul32);
+                    } else {
+                        // Spilled row: reload, update, store back.
+                        let slot = spill_base + (r - resident_rows) * l.n0 * 4;
+                        seg.load(m, scratch_v, slot);
+                        seg.mac(m, scratch_v);
+                        seg.store(m, scratch_v, slot);
+                        m.stats.spill_insns += 2;
+                    }
+                }
+                m.scalar_ops(2); // k-loop: addi + bnez
+            }
+            // write the tile out
+            let out_tile = l.out_addr + ((i1 * l.n1 + j1) * l.m0 * l.n0) * 4;
+            for r in 0..l.m0 {
+                if r < resident_rows {
+                    seg.store(m, acc_base + r * lmul32,
+                              out_tile + r * l.n0 * 4);
+                } else {
+                    let slot = spill_base + (r - resident_rows) * l.n0 * 4;
+                    seg.load(m, scratch_v, slot);
+                    seg.store(m, scratch_v, out_tile + r * l.n0 * 4);
+                    m.stats.spill_insns += 1;
+                }
+            }
+            m.scalar_ops(3); // tile-loop overhead
+        }
+    }
+}
+
+/// Issues one logical e32 operation over the (possibly LMUL>8) accumulator
+/// footprint as `segs` legal LMUL<=8 half-group instructions.
+struct SegE32 {
+    segs: usize,
+    seg_l16: usize,
+    seg_l32: usize,
+    seg_lanes: usize,
+    image_v: usize,
+}
+
+impl SegE32 {
+    fn zero(&self, m: &mut Rvv, v: usize) {
+        for h in 0..self.segs {
+            m.vzero_i32(v + h * self.seg_l32, self.seg_lanes, self.seg_l32);
+        }
+    }
+
+    fn store(&self, m: &mut Rvv, v: usize, addr: usize) {
+        for h in 0..self.segs {
+            m.vse32i(v + h * self.seg_l32, addr + h * self.seg_lanes * 4,
+                     self.seg_lanes, self.seg_l32);
+        }
+    }
+
+    fn load(&self, m: &mut Rvv, v: usize, addr: usize) {
+        for h in 0..self.segs {
+            m.vle32i_raw(v + h * self.seg_l32, addr + h * self.seg_lanes * 4,
+                         self.seg_lanes, self.seg_l32);
+        }
+    }
+
+    fn mac(&self, m: &mut Rvv, acc_v: usize) {
+        for h in 0..self.segs {
+            m.vwmacc_vx(acc_v + h * self.seg_l32, 1,
+                        self.image_v + h * self.seg_l16);
+        }
+    }
+}
+
+/// The int8 prefill kernel: tiles (7, VLEN/8, 1) — the denser e8 strip frees
+/// a 7th resident accumulator row relative to the f16 kernel's 6.
+pub fn mmt4d_prefill_rvv_i8(m: &mut Rvv, lhs_addr: usize, rhs_addr: usize,
+                            out_addr: usize, m1: usize, n1: usize, k1: usize) {
+    let n0 = m.cfg.vlen_bits / 8;
+    mmt4d_tile_rvv_i8(m, &Mmt4dLayout {
+        lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0: 7, n0,
+    });
+}
+
+/// The int8 decode (GEMV) kernel: tiles (1, VLEN/2, 1) — with one row live,
+/// byte-dense data doubles the strip width over the f16 decode kernel.
+pub fn mmt4d_decode_rvv_i8(m: &mut Rvv, lhs_addr: usize, rhs_addr: usize,
+                           out_addr: usize, n1: usize, k1: usize) {
+    let n0 = m.cfg.vlen_bits / 2;
+    mmt4d_tile_rvv_i8(m, &Mmt4dLayout {
+        lhs_addr, rhs_addr, out_addr, m1: 1, n1, k1, m0: 1, n0,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::manifest::Tile;
+    use crate::rvv::RvvConfig;
+    use crate::ukernel::{self, Mmt4dParams};
+    use crate::util::prng::Rng;
+
+    /// Run the simulated int8 kernel and the native s8s8s32 ukernel on the
+    /// same packed data; results must be bit-identical.
+    fn check_against_native(m0: usize, n0: usize, vlen: usize, m1: usize,
+                            n1: usize, k1: usize) -> crate::rvv::ExecStats {
+        let p = Mmt4dParams { m1, n1, k1, m0, n0, k0: 1, accumulate: false };
+        let mut rng = Rng::new((vlen + m0 * 13 + n0) as u64);
+        let lhs: Vec<i8> = (0..p.lhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let rhs: Vec<i8> = (0..p.rhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let mut want = vec![0i32; p.out_len()];
+        ukernel::mmt4d_s8s8s32(&lhs, &rhs, &mut want, &p);
+
+        let lhs_addr = 0x1000;
+        let rhs_addr = (lhs_addr + lhs.len() + 63) & !63;
+        let out_addr = (rhs_addr + rhs.len() + 63) & !63;
+        let mem = out_addr + want.len() * 4 + 65536;
+        let mut mach = Rvv::new(RvvConfig::with_vlen(vlen), mem);
+        mach.write_i8_slice(lhs_addr, &lhs);
+        mach.write_i8_slice(rhs_addr, &rhs);
+        mmt4d_tile_rvv_i8(&mut mach, &Mmt4dLayout {
+            lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+        });
+        let got = mach.read_i32_slice(out_addr, want.len());
+        assert_eq!(got, want, "simulated i8 kernel != native ukernel");
+        mach.stats.clone()
+    }
+
+    #[test]
+    fn prefill_kernel_bit_exact_vs_native() {
+        let s = check_against_native(7, 256 / 8, 256, 2, 3, 16);
+        assert_eq!(s.spill_insns, 0, "i8 prefill tile must not spill");
+    }
+
+    #[test]
+    fn decode_kernel_bit_exact_vs_native() {
+        let s = check_against_native(1, 256 / 2, 256, 1, 4, 32);
+        assert_eq!(s.spill_insns, 0, "i8 decode tile must not spill");
+    }
+
+    #[test]
+    fn other_vlens() {
+        check_against_native(7, 128 / 8, 128, 2, 2, 8);
+        check_against_native(7, 512 / 8, 512, 1, 2, 8);
+        check_against_native(1, 128 / 2, 128, 1, 3, 8);
+        check_against_native(3, 256 / 4, 256, 2, 2, 5); // odd M0, mid strip
+    }
+
+    #[test]
+    fn oversized_tile_spills_and_still_correct() {
+        // M0=8 at the i8 prefill strip exhausts the 32-register file
+        // (pressure 4 + 8*4 = 36): spill traffic, exact numbers.
+        let s = check_against_native(8, 256 / 8, 256, 1, 2, 8);
+        assert!(s.spill_insns > 0, "expected spill traffic");
+    }
+
+    #[test]
+    fn spill_onset_matches_pressure_model() {
+        // The kernel emits spill traffic exactly when the register-file
+        // model says the tile no longer fits.
+        for vlen in [128usize, 256, 512] {
+            for m0 in 1..=10 {
+                let n0 = vlen / 8;
+                let s = check_against_native(m0, n0, vlen, 1, 1, 4);
+                let tile = Tile { m0, n0, k0: 1 };
+                assert_eq!(
+                    s.spill_insns > 0,
+                    crate::target::tile_spills_i8(tile, vlen, 32),
+                    "VLEN={vlen} M0={m0}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rhs_load_amortized_over_rows() {
+        // Prefill (M0=7) must issue far fewer strip loads per MAC than M0=1
+        // over the same total work (14 rows each).
+        let seven = check_against_native(7, 256 / 8, 256, 2, 2, 16);
+        let one = check_against_native(1, 256 / 8, 256, 14, 2, 16);
+        let ratio = one.vector_loads as f64 / seven.vector_loads as f64;
+        assert!(ratio > 3.0, "expected RHS-load amortization, ratio {ratio}");
+    }
+
+    #[test]
+    fn i8_decode_moves_half_the_strip_bytes_of_f16() {
+        // Same logical N coverage: f16 decode strip (VLEN/4 lanes x 2B) vs
+        // i8 strip (VLEN/2 lanes x 1B) — i8 covers twice the N per strip at
+        // the same bytes, i.e. half the RHS bytes for a fixed [K, N].
+        let vlen = 256;
+        let (k1, n) = (32usize, 512usize);
+        let n0_f16 = vlen / 4;
+        let n0_i8 = vlen / 2;
+        let f16_loads = (n / n0_f16) * k1; // strips per full sweep
+        let i8_loads = (n / n0_i8) * k1;
+        assert_eq!(f16_loads, 2 * i8_loads);
+        // and the simulator agrees on bytes: each strip is VLEN/8 bytes…
+        let s = check_against_native(1, n0_i8, vlen, 1, n / n0_i8, k1);
+        let strip_bytes = (n0_i8) as u64 * (n / n0_i8) as u64 * k1 as u64;
+        assert!(s.bytes_loaded >= strip_bytes,
+                "strip traffic unaccounted: {} < {strip_bytes}",
+                s.bytes_loaded);
+    }
+}

@@ -1,6 +1,7 @@
 //! RVV microkernel programs for the simulated testbed: the paper's
-//! prefill/decode mmt4d kernels plus the two baselines of Table 2
-//! (upstream-IREE default codegen, llama.cpp/ggml scalar dot kernels).
+//! prefill/decode mmt4d kernels, their quantized s8s8s32 counterparts
+//! (`mmt4d_rvv_i8`), plus the two baselines of Table 2 (upstream-IREE
+//! default codegen, llama.cpp/ggml scalar dot kernels).
 //!
 //! Every program computes real numerics on the simulator's memory and is
 //! validated against the native ukernels / naive oracle, so the cycle and
@@ -8,12 +9,15 @@
 
 pub mod baselines;
 pub mod mmt4d_rvv;
+pub mod mmt4d_rvv_i8;
 
 pub use baselines::{ireegen_gemm_rvv, ireegen_gemv_rvv,
                     ireegen_gemv_rvv_strided, llamacpp_dot_rvv,
                     llamacpp_gemm_rvv, GGML_F16_TABLE_BYTES};
 pub use mmt4d_rvv::{mmt4d_decode_rvv, mmt4d_prefill_rvv, mmt4d_tile_rvv,
                     Mmt4dLayout};
+pub use mmt4d_rvv_i8::{mmt4d_decode_rvv_i8, mmt4d_prefill_rvv_i8,
+                       mmt4d_tile_rvv_i8};
 
 /// Which system a kernel program models (Table 2 columns).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

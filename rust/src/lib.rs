@@ -6,12 +6,14 @@
 //! * **Layer 1/2 (build time, Python)** — Pallas mmt4d/pack/unpack kernels and
 //!   a Llama-architecture model, AOT-lowered to HLO text artifacts.
 //! * **Layer 3 (this crate)** — the compiler pipeline (`ir`, `passes`,
-//!   `target`), the microkernel library (`ukernel`), the simulated RISC-V
+//!   `target`), the microkernel library (`ukernel`, including the int8
+//!   s8s8s32 quantized path and its `quant` shim), the simulated RISC-V
 //!   testbed (`rvv`, `cachesim`, `kernels`), the performance model
 //!   (`perfmodel`), the serving runtime (`runtime`, `coordinator`) and the
 //!   evaluation harness (`llm`).
 //!
-//! See DESIGN.md for the full system inventory and experiment index.
+//! See docs/ARCHITECTURE.md for the module-by-module map onto the paper's
+//! pipeline and docs/BENCHMARKS.md for the bench ↔ figure index.
 
 pub mod bench;
 pub mod cachesim;

@@ -4,7 +4,7 @@
 use std::path::PathBuf;
 
 use tenx_iree::cliargs::Command;
-use tenx_iree::coordinator::{self, EngineBackend};
+use tenx_iree::coordinator::{self, EngineBackend, NativeBackend, Precision};
 use tenx_iree::ir::{build_matmul_func, ElemType, Module};
 use tenx_iree::kernels::System;
 use tenx_iree::llm::{SamplingParams, Tokenizer};
@@ -28,7 +28,8 @@ fn main() {
 fn usage() -> String {
     "tenx — RISC-V mmt4d microkernel support for an IREE-like stack\n\n\
      USAGE:\n  tenx <COMMAND> [OPTIONS]\n\nCOMMANDS:\n  \
-     serve      serve the tiny-llama artifacts with continuous batching\n  \
+     serve      serve with continuous batching (artifacts, or --native \
+     [--precision f16|i8])\n  \
      compile    run the materialize-encoding pipeline on a matmul and print IR\n  \
      table1     accuracy-equivalence eval (reference vs mmt4d path)\n  \
      table2     modeled tokens/sec on the simulated MILK-V Jupiter\n  \
@@ -63,6 +64,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("requests", "12", "number of synthetic requests")
         .opt("max-new-tokens", "16", "decode budget per request")
         .opt("temperature", "0", "sampling temperature (0 = greedy)")
+        .opt("precision", "f16", "native numeric path: f16 | i8 (quantized)")
+        .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
     let dir = PathBuf::from(m.str("artifacts"));
@@ -71,13 +74,30 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let temp: f32 = m.parse("temperature")?;
     let path = if m.flag("baseline") { EnginePath::Baseline } else { EnginePath::Mmt4d };
 
-    eprintln!("loading artifacts from {dir:?} ({path:?})...");
-    let manifest = tenx_iree::config::Manifest::load(&dir).map_err(err_str)?;
-    let tok = Tokenizer::new(manifest.model.vocab_size);
-    let dir2 = dir.clone();
-    let handle = coordinator::server::start_with(
-        move || EngineBackend::load(&dir2, path), 64, 42)
-        .map_err(err_str)?;
+    let (handle, vocab) = if m.flag("native") {
+        if m.flag("baseline") {
+            return Err("--baseline selects an artifact engine path; with \
+                        --native pick the numeric path via --precision"
+                .into());
+        }
+        let precision = Precision::parse(m.str("precision"))
+            .ok_or_else(|| format!("unknown precision {:?}", m.str("precision")))?;
+        let vocab = 512;
+        eprintln!("serving the native mmt4d backend ({} path)...",
+                  precision.name());
+        let backend = NativeBackend::new(4, 16, 64, vocab, 64, precision, 42);
+        (coordinator::server::start(backend, 64, 42), vocab)
+    } else {
+        eprintln!("loading artifacts from {dir:?} ({path:?})...");
+        let manifest = tenx_iree::config::Manifest::load(&dir).map_err(err_str)?;
+        let vocab = manifest.model.vocab_size;
+        let dir2 = dir.clone();
+        let handle = coordinator::server::start_with(
+            move || EngineBackend::load(&dir2, path), 64, 42)
+            .map_err(err_str)?;
+        (handle, vocab)
+    };
+    let tok = Tokenizer::new(vocab);
 
     let prompts = [
         "the sun heats", "rain falls on", "a seed grows", "ice melts when",

@@ -3,7 +3,7 @@
 //! `iree-codegen-lower-ukernel-ops` equivalent).
 
 use super::Pass;
-use crate::ir::{ElemType, Module, OpKind, PackKind};
+use crate::ir::{Module, OpKind, PackKind};
 use crate::ukernel::{symbol_for, UkernelOp};
 
 pub struct LowerUkernels;
@@ -45,8 +45,10 @@ impl Pass for LowerUkernels {
                         let st = op_tys[i]
                             .clone()
                             .ok_or_else(|| anyhow::anyhow!("unpack src untyped"))?;
+                        // Accumulator dtype rides on the result type: f32 for
+                        // the float kernels, i32 for the quantized path.
                         let uop = UkernelOp::Unpack {
-                            elem: ElemType::F32,
+                            elem: op.result_type.elem,
                             m0: st.shape[2],
                             n0: st.shape[3],
                         };
@@ -138,6 +140,35 @@ mod tests {
         };
         assert!(has("iree_uk_mmt4d_f16f16f32_1x64x1"),
                 "decode GEMV kernel symbol");
+    }
+
+    #[test]
+    fn i8_pipeline_lowers_to_quantized_symbols() {
+        use crate::ir::build_quant_matmul_func;
+        let mut m = Module {
+            funcs: vec![build_quant_matmul_func("qmm", 64, 256, 256)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Prefill))
+            .add(LowerUkernels)
+            .run(&mut m)
+            .unwrap();
+        verify::verify_module(&m).unwrap();
+        let symbols: Vec<String> = m.funcs[0]
+            .body
+            .iter()
+            .filter_map(|o| match &o.kind {
+                OpKind::UkernelCall { symbol, .. } => Some(symbol.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(symbols, vec![
+            "iree_uk_pack_lhs_i8_7x1",
+            "iree_uk_pack_rhs_i8_32x1",
+            "iree_uk_mmt4d_i8i8i32_7x32x1",
+            "iree_uk_unpack_i32_7x32",
+        ]);
     }
 
     #[test]

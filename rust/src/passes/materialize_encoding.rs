@@ -25,7 +25,7 @@
 
 use super::Pass;
 use crate::ir::{Module, Op, OpKind, PackKind, TensorType, Value};
-use crate::target::{select_tiles, Phase, TargetDesc};
+use crate::target::{select_tiles_for, Phase, TargetDesc};
 use crate::ukernel;
 
 pub struct MaterializeEncoding {
@@ -94,7 +94,9 @@ impl Pass for MaterializeEncoding {
                             .ok_or_else(|| anyhow::anyhow!("no type for {lhs}"))?;
                         let rt = ty_of(rhs, &types)
                             .ok_or_else(|| anyhow::anyhow!("no type for {rhs}"))?;
-                        // Only the dtype combos with registry entries.
+                        // Only the dtype combos with registry entries
+                        // (f16/f32 accumulate in f32; the quantized i8 path
+                        // accumulates in i32).
                         let supported = matches!(
                             (lt.elem, rt.elem, op.result_type.elem),
                             (crate::ir::ElemType::F16, crate::ir::ElemType::F16,
@@ -102,6 +104,9 @@ impl Pass for MaterializeEncoding {
                                 | (crate::ir::ElemType::F32,
                                    crate::ir::ElemType::F32,
                                    crate::ir::ElemType::F32)
+                                | (crate::ir::ElemType::I8,
+                                   crate::ir::ElemType::I8,
+                                   crate::ir::ElemType::I32)
                         );
                         if !supported {
                             types.push((op.result, op.result_type.clone()));
@@ -111,7 +116,11 @@ impl Pass for MaterializeEncoding {
                         let (m, k) = (lt.shape[0], lt.shape[1]);
                         let n = rt.shape[1];
                         let phase = self.phase_for(m);
-                        let tile = select_tiles(self.target.arch, phase)?;
+                        // Dtype-aware selection: i8 gets the denser
+                        // widening-MAC tiles (7 x VLEN/8 prefill,
+                        // 1 x VLEN/2 decode on riscv64).
+                        let tile = select_tiles_for(self.target.arch, phase,
+                                                    lt.elem)?;
                         let (m0, n0, k0) = (tile.m0, tile.n0, tile.k0);
                         let (m1, n1, k1) =
                             (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
@@ -255,6 +264,54 @@ mod tests {
             })
             .collect();
         assert_eq!(tiles, vec![(16, 1), (16, 1)]); // AVX-512 16x16x1
+    }
+
+    #[test]
+    fn i8_matmul_materializes_int8_tiles() {
+        use crate::ir::build_quant_matmul_func;
+        let mut m = Module {
+            funcs: vec![build_quant_matmul_func("qmm", 64, 256, 256)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        verify::verify_module(&m).unwrap();
+        assert_eq!(count_ops(&m, |k| matches!(k, OpKind::Mmt4d { .. })), 1);
+        // int8 prefill tiles 7x32x1 at VLEN=256 (vs f16's 6x32x1)
+        let tiles: Vec<(usize, usize)> = m.funcs[0]
+            .body
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Pack { tile0, tile1, .. } => Some((tile0, tile1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tiles, vec![(7, 1), (32, 1)]);
+    }
+
+    #[test]
+    fn i8_gemv_gets_doubled_decode_strip() {
+        use crate::ir::build_quant_matmul_func;
+        let mut m = Module {
+            funcs: vec![build_quant_matmul_func("qmv", 1, 256, 512)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Prefill))
+            .run(&mut m)
+            .unwrap();
+        verify::verify_module(&m).unwrap();
+        let tiles: Vec<(usize, usize)> = m.funcs[0]
+            .body
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Pack { tile0, tile1, .. } => Some((tile0, tile1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tiles, vec![(1, 1), (128, 1)]); // 1 x VLEN/2 x 1
     }
 
     #[test]

@@ -145,6 +145,54 @@ mod tests {
         });
     }
 
+    /// Quantized-pipeline property: for random shapes the fully lowered
+    /// i8 x i8 -> i32 module is *bit-identical* to the naive integer oracle
+    /// (integer accumulation has no rounding to hide behind).
+    #[test]
+    fn pipeline_preserves_quantized_matmul_semantics() {
+        let target = TargetDesc::milkv_jupiter();
+        forall(Config::default().cases(25), |g| {
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 48);
+            let n = g.usize_in(1, 80);
+            let phase = if g.bool() { Phase::Prefill } else { Phase::Decode };
+
+            let f = crate::ir::build_quant_matmul_func("qmm", m, k, n);
+            let mut module = Module { funcs: vec![f] };
+            let reference = module.clone();
+
+            PassManager::standard(&target, phase).run(&mut module)
+                .map_err(|e| e.to_string())?;
+            let residual = module.funcs[0]
+                .body
+                .iter()
+                .filter(|op| !matches!(op.kind,
+                    crate::ir::OpKind::UkernelCall { .. }
+                    | crate::ir::OpKind::Cast { .. }))
+                .count();
+            if residual != 0 {
+                return Err(format!("{residual} structural ops left"));
+            }
+
+            let mut rng = Rng::new((m * 131 + k * 37 + n) as u64);
+            let mk = |rng: &mut Rng, shape: Vec<usize>| {
+                let len: usize = shape.iter().product();
+                Tensor::i8(shape,
+                           (0..len).map(|_| rng.range(-128, 128) as i8).collect())
+            };
+            let a = mk(&mut rng, vec![m, k]);
+            let b = mk(&mut rng, vec![k, n]);
+            let want = run_func(&reference.funcs[0], &[a.clone(), b.clone()])
+                .map_err(|e| e.to_string())?;
+            let got = run_func(&module.funcs[0], &[a, b])
+                .map_err(|e| e.to_string())?;
+            prop_assert(
+                want[0].as_i32().unwrap() == got[0].as_i32().unwrap(),
+                "lowered quantized pipeline must be bit-identical",
+            )
+        });
+    }
+
     #[test]
     fn report_renders() {
         let target = TargetDesc::milkv_jupiter();

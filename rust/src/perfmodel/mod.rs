@@ -12,6 +12,10 @@
 //! Decode streams every weight once per token, so it saturates DRAM long
 //! before 8 cores are busy — reproducing the paper's sub-linear decode
 //! scaling (0.99 -> 2.12 tok/s) while prefill keeps scaling.
+//!
+//! [`measure_matmul_quant`] / [`phase_perf_quant`] price the same schedule
+//! on the int8 (s8s8s32) kernels: byte-dense weights halve the per-token
+//! DRAM stream, which is where quantized serving wins at scale.
 
 pub mod schedule;
 
@@ -46,6 +50,53 @@ fn fill_f16(m: &mut Rvv, addr: usize, n: usize, rng: &mut Rng) {
     }
 }
 
+fn fill_i8(m: &mut Rvv, addr: usize, n: usize, rng: &mut Rng) {
+    for i in 0..n {
+        m.mem[addr + i] = rng.range(-128, 128) as i8 as u8;
+    }
+}
+
+/// Sub-sampled mmt4d problem shared by the f16 and int8 cost probes: full
+/// K, a slice of the M/N tile grid, and the linear extrapolation factor for
+/// the tiles left unsimulated.
+struct MmtSubsample {
+    lhs_addr: usize,
+    rhs_addr: usize,
+    out_addr: usize,
+    mem_bytes: usize,
+    sim_m1: usize,
+    sim_n1: usize,
+    lhs_len: usize,
+    rhs_len: usize,
+    /// Multiply simulated cycles by this to cover the full tile grid.
+    scale: f64,
+}
+
+fn subsample_mmt4d(m: usize, k: usize, n: usize, m0: usize, n0: usize,
+                   elem_bytes: usize, slack: usize) -> MmtSubsample {
+    let m1 = m.div_ceil(m0);
+    let n1 = n.div_ceil(n0);
+    let sim_m1 = m1.min(2);
+    let sim_n1 = n1.min(3);
+    let lhs_len = sim_m1 * k * m0;
+    let rhs_len = sim_n1 * k * n0;
+    let out_len = sim_m1 * sim_n1 * m0 * n0;
+    let lhs_addr = 0x1000;
+    let rhs_addr = (lhs_addr + lhs_len * elem_bytes + 63) & !63;
+    let out_addr = (rhs_addr + rhs_len * elem_bytes + 63) & !63;
+    MmtSubsample {
+        lhs_addr,
+        rhs_addr,
+        out_addr,
+        mem_bytes: out_addr + out_len * 4 + slack,
+        sim_m1,
+        sim_n1,
+        lhs_len,
+        rhs_len,
+        scale: (m1 as f64 / sim_m1 as f64) * (n1 as f64 / sim_n1 as f64),
+    }
+}
+
 /// Simulate + extrapolate the cost of `M x K x N` for a system/phase on the
 /// given RISC-V target. Deterministic (seeded by the shape).
 pub fn measure_matmul(system: System, phase: Phase, m: usize, k: usize,
@@ -65,33 +116,22 @@ pub fn measure_matmul(system: System, phase: Phase, m: usize, k: usize,
         (System::TenxIree, _) => {
             // mmt4d kernel on packed data. Sub-sample tiles of N (and M for
             // prefill); K in full.
-            let (m0, n0) = match phase {
-                Phase::Prefill => (6usize, vlen / 8),
-                Phase::Decode => (1usize, vlen / 4),
-            };
-            let m1 = m.div_ceil(m0);
-            let n1 = n.div_ceil(n0);
-            let k1 = k;
-            let sim_m1 = m1.min(2);
-            let sim_n1 = n1.min(3);
-            let lhs_len = sim_m1 * k1 * m0;
-            let rhs_len = sim_n1 * k1 * n0;
-            let out_len = sim_m1 * sim_n1 * m0 * n0;
-            let lhs_addr = 0x1000;
-            let rhs_addr = (lhs_addr + lhs_len * 2 + 63) & !63;
-            let out_addr = (rhs_addr + rhs_len * 2 + 63) & !63;
-            let mut mach = mk_machine(out_addr + out_len * 4 + 4096);
-            fill_f16(&mut mach, lhs_addr, lhs_len, &mut rng);
-            fill_f16(&mut mach, rhs_addr, rhs_len, &mut rng);
+            let tile = crate::target::select_tiles_for(
+                target.arch, phase, crate::ir::ElemType::F16)
+                .expect("f16 tiles for a validated RISC-V target");
+            let (m0, n0) = (tile.m0, tile.n0);
+            let s = subsample_mmt4d(m, k, n, m0, n0, 2, 4096);
+            let mut mach = mk_machine(s.mem_bytes);
+            fill_f16(&mut mach, s.lhs_addr, s.lhs_len, &mut rng);
+            fill_f16(&mut mach, s.rhs_addr, s.rhs_len, &mut rng);
             kernels::mmt4d_tile_rvv(&mut mach, &kernels::Mmt4dLayout {
-                lhs_addr, rhs_addr, out_addr,
-                m1: sim_m1, n1: sim_n1, k1, m0, n0,
+                lhs_addr: s.lhs_addr, rhs_addr: s.rhs_addr,
+                out_addr: s.out_addr,
+                m1: s.sim_m1, n1: s.sim_n1, k1: k, m0, n0,
             });
             // Extrapolate over the un-simulated tiles + LHS pack cost
             // (RHS/weights are packed at compile time in IREE).
-            let scale = (m1 as f64 / sim_m1 as f64) * (n1 as f64 / sim_n1 as f64);
-            let pack_cycles = pack_cost_cycles(m, k, target);
-            mach.stats.cycles as f64 * scale + pack_cycles
+            mach.stats.cycles as f64 * s.scale + pack_cost_cycles(m, k, target)
         }
         (System::UpstreamIree, Phase::Prefill) => {
             // Vectorized-but-unwidened GEMM, M0=4 blocking.
@@ -149,11 +189,61 @@ pub fn measure_matmul(system: System, phase: Phase, m: usize, k: usize,
 /// Analytic cost of packing the LHS (activations) at runtime: a streaming
 /// rearrangement, ~1 cycle per 16 bytes moved + cold misses on the source.
 fn pack_cost_cycles(m: usize, k: usize, target: &TargetDesc) -> f64 {
-    let bytes = (m * k * 2) as f64;
+    pack_cost_cycles_bytes((m * k * 2) as f64, target)
+}
+
+fn pack_cost_cycles_bytes(bytes: f64, target: &TargetDesc) -> f64 {
     let move_cycles = bytes / 16.0;
     let miss_cycles = (bytes / target.l1d.line_bytes as f64)
         * target.l1d.miss_penalty as f64;
     move_cycles + miss_cycles
+}
+
+/// Quantized (s8s8s32) cost of `M x K x N` on the 10x-IREE int8 mmt4d
+/// kernel: the same sub-sample-and-extrapolate method as [`measure_matmul`],
+/// but running `kernels::mmt4d_tile_rvv_i8` with the int8 tiles
+/// (`target::select_tiles_for`) over byte-dense operands — and, crucially
+/// for decode, streaming int8 weights from DRAM at *half* the f16 byte
+/// traffic. Quantize/dequantize of the activations is priced like a pack
+/// pass (one streaming rewrite of the LHS).
+pub fn measure_matmul_quant(phase: Phase, m: usize, k: usize, n: usize,
+                            target: &TargetDesc) -> MatmulCost {
+    let vlen = target.vlen_bits().expect("perf model needs a RISC-V target");
+    let macs = (m as f64) * (k as f64) * (n as f64);
+    // Weights [K,N] int8 streamed from DRAM; activations assumed resident.
+    let dram_bytes = (k as f64) * (n as f64);
+    let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64 ^ 0x18);
+
+    let tile = crate::target::select_tiles_for(target.arch, phase,
+                                               crate::ir::ElemType::I8)
+        .expect("int8 tiles for a validated RISC-V target");
+    let (m0, n0) = (tile.m0, tile.n0);
+    let s = subsample_mmt4d(m, k, n, m0, n0, 1, 65536);
+    let mut mach = Rvv::new(RvvConfig::with_vlen(vlen), s.mem_bytes)
+        .with_cache(CacheHierarchy::for_target(target));
+    fill_i8(&mut mach, s.lhs_addr, s.lhs_len, &mut rng);
+    fill_i8(&mut mach, s.rhs_addr, s.rhs_len, &mut rng);
+    kernels::mmt4d_tile_rvv_i8(&mut mach, &kernels::Mmt4dLayout {
+        lhs_addr: s.lhs_addr, rhs_addr: s.rhs_addr, out_addr: s.out_addr,
+        m1: s.sim_m1, n1: s.sim_n1, k1: k, m0, n0,
+    });
+    // Extrapolate over the un-simulated tiles; add the activation
+    // quantize+pack cost (weights are quantized and packed at load time).
+    let quant_pack_cycles = pack_cost_cycles_bytes((m * k * 2) as f64, target)
+        + pack_cost_cycles_bytes((m * k) as f64, target);
+    let cycles = mach.stats.cycles as f64 * s.scale + quant_pack_cycles;
+
+    MatmulCost { cycles, dram_bytes, macs }
+}
+
+/// Quantized counterpart of [`phase_perf`]: the 10x-IREE system serving the
+/// same model through the int8 kernels (int8 weights halve the per-token
+/// DRAM stream, which is where the decode win comes from).
+pub fn phase_perf_quant(phase: Phase, threads: usize, shapes: &LlamaShapes,
+                        target: &TargetDesc,
+                        prefill_tokens: usize) -> PhasePerf {
+    roofline(System::TenxIree, phase, threads, shapes, target, prefill_tokens,
+             |m, k, n| measure_matmul_quant(phase, m, k, n, target))
 }
 
 /// Performance of one phase of the model on `threads` cores.
@@ -174,6 +264,15 @@ pub struct PhasePerf {
 pub fn phase_perf(system: System, phase: Phase, threads: usize,
                   shapes: &LlamaShapes, target: &TargetDesc,
                   prefill_tokens: usize) -> PhasePerf {
+    roofline(system, phase, threads, shapes, target, prefill_tokens,
+             |m, k, n| measure_matmul(system, phase, m, k, n, target))
+}
+
+/// The shared schedule-walk + multicore-roofline body behind [`phase_perf`]
+/// and [`phase_perf_quant`]: `measure` prices one `M x K x N` weight matmul.
+fn roofline(system: System, phase: Phase, threads: usize,
+            shapes: &LlamaShapes, target: &TargetDesc, prefill_tokens: usize,
+            measure: impl Fn(usize, usize, usize) -> MatmulCost) -> PhasePerf {
     let m = match phase {
         Phase::Prefill => prefill_tokens,
         Phase::Decode => 1,
@@ -181,7 +280,7 @@ pub fn phase_perf(system: System, phase: Phase, threads: usize,
     let mut cycles = 0.0;
     let mut dram = 0.0;
     for mm in shapes.weight_matmuls() {
-        let c = measure_matmul(system, phase, m, mm.k, mm.n, target);
+        let c = measure(m, mm.k, mm.n);
         cycles += c.cycles;
         dram += c.dram_bytes;
     }
@@ -285,5 +384,51 @@ mod tests {
         let a = measure_matmul(System::TenxIree, Phase::Decode, 1, 512, 512, &t);
         let b = measure_matmul(System::TenxIree, Phase::Decode, 1, 512, 512, &t);
         assert_eq!(a.cycles, b.cycles);
+        let qa = measure_matmul_quant(Phase::Decode, 1, 512, 512, &t);
+        let qb = measure_matmul_quant(Phase::Decode, 1, 512, 512, &t);
+        assert_eq!(qa.cycles, qb.cycles);
+    }
+
+    #[test]
+    fn int8_weights_halve_the_dram_stream() {
+        let t = jupiter();
+        let f = measure_matmul(System::TenxIree, Phase::Decode, 1, 2048, 2048, &t);
+        let q = measure_matmul_quant(Phase::Decode, 1, 2048, 2048, &t);
+        assert_eq!(q.dram_bytes * 2.0, f.dram_bytes);
+        assert_eq!(q.macs, f.macs);
+    }
+
+    #[test]
+    fn quant_decode_beats_f16_decode_where_dram_bound() {
+        // Multi-threaded decode is DRAM-bound: halving the weight stream
+        // must raise modeled tokens/sec materially (V-Seek-style int8 win).
+        // Single-threaded decode is compute-bound, where the int8 widening
+        // chain only has to hold roughly even.
+        let t = jupiter();
+        let shapes = LlamaShapes::llama32_1b();
+        let f16_8 = phase_perf(System::TenxIree, Phase::Decode, 8, &shapes,
+                               &t, 128);
+        let i8_8 = phase_perf_quant(Phase::Decode, 8, &shapes, &t, 128);
+        assert!(!f16_8.compute_bound, "8T f16 decode should be DRAM bound");
+        assert!(i8_8.tokens_per_sec > f16_8.tokens_per_sec * 1.2,
+                "8T: int8 {} vs f16 {}", i8_8.tokens_per_sec,
+                f16_8.tokens_per_sec);
+        let f16_1 = phase_perf(System::TenxIree, Phase::Decode, 1, &shapes,
+                               &t, 128);
+        let i8_1 = phase_perf_quant(Phase::Decode, 1, &shapes, &t, 128);
+        assert!(i8_1.tokens_per_sec > f16_1.tokens_per_sec * 0.8,
+                "1T: int8 {} vs f16 {}", i8_1.tokens_per_sec,
+                f16_1.tokens_per_sec);
+    }
+
+    #[test]
+    fn quant_prefill_not_slower() {
+        let t = jupiter();
+        let shapes = LlamaShapes::llama32_1b();
+        let f16 = phase_perf(System::TenxIree, Phase::Prefill, 1, &shapes, &t, 128);
+        let i8 = phase_perf_quant(Phase::Prefill, 1, &shapes, &t, 128);
+        assert!(i8.tokens_per_sec > f16.tokens_per_sec * 0.8,
+                "int8 prefill regressed: {} vs {}", i8.tokens_per_sec,
+                f16.tokens_per_sec);
     }
 }

@@ -1,18 +1,20 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, written by
-//! python/compile/aot.py) and executes them on the request path. This is the
-//! IREE-runtime analogue of the stack: HLO text -> XlaComputation ->
+//! Serving runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, written
+//! by python/compile/aot.py) and executes them on the request path. This is
+//! the IREE-runtime analogue of the stack: HLO text -> XlaComputation ->
 //! PjRtLoadedExecutable, with typed marshalling for the serving loop.
 //!
 //! Python never runs here: the engine is fully self-contained given the
 //! artifacts directory (weights come from weights.bin).
-
-use std::path::Path;
-
-use anyhow::{Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
-          XlaComputation};
-
-use crate::config::manifest::Manifest;
+//!
+//! Two build configurations:
+//!
+//! * `--features pjrt` — the real PJRT execution path ([`pjrt`]); requires
+//!   the `xla` crate (xla-rs + a libxla_extension build) to be vendored, see
+//!   Cargo.toml.
+//! * default — an offline stub with the identical public API whose
+//!   constructors report PJRT as unavailable. Everything that does not need
+//!   the compiled artifacts (the compiler pipeline, the microkernel library,
+//!   the RVV simulator, the mock/native serving backends) works without it.
 
 /// Which artifact pair to serve (the Table-2 comparison at runtime level).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,14 +26,16 @@ pub enum EnginePath {
 }
 
 impl EnginePath {
-    fn prefill_file(self) -> &'static str {
+    /// Prefill artifact filename for this path.
+    pub fn prefill_file(self) -> &'static str {
         match self {
             EnginePath::Mmt4d => "prefill.hlo.txt",
             EnginePath::Baseline => "baseline_prefill.hlo.txt",
         }
     }
 
-    fn decode_file(self) -> &'static str {
+    /// Decode artifact filename for this path.
+    pub fn decode_file(self) -> &'static str {
         match self {
             EnginePath::Mmt4d => "decode.hlo.txt",
             EnginePath::Baseline => "baseline_decode.hlo.txt",
@@ -39,222 +43,12 @@ impl EnginePath {
     }
 }
 
-/// Output of a prefill pass. KV caches stay as opaque literals that can be
-/// fed straight back into decode without a host copy.
-pub struct PrefillOutput {
-    /// [B, S, V] flattened.
-    pub logits: Vec<f32>,
-    pub k_cache: Literal,
-    pub v_cache: Literal,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{DecodeOutput, Engine, KernelRunner, Literal, PrefillOutput};
 
-/// Output of one decode step.
-pub struct DecodeOutput {
-    /// [B, V] flattened.
-    pub logits: Vec<f32>,
-    pub k_cache: Literal,
-    pub v_cache: Literal,
-}
-
-pub struct Engine {
-    pub manifest: Manifest,
-    pub path: EnginePath,
-    #[allow(dead_code)]
-    client: PjRtClient,
-    prefill_exe: PjRtLoadedExecutable,
-    decode_exe: PjRtLoadedExecutable,
-    /// Weight literals in manifest/HLO parameter order.
-    weights: Vec<Literal>,
-}
-
-fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
-    let proto = HloModuleProto::from_text_file(
-        path.to_str().context("non-utf8 artifact path")?,
-    )
-    .with_context(|| format!("parsing HLO text {path:?}"))?;
-    let comp = XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compiling {path:?}"))
-}
-
-impl Engine {
-    /// Load + compile the artifacts. `make artifacts` must have run once.
-    pub fn load(artifacts_dir: &Path, path: EnginePath) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        anyhow::ensure!(manifest.has_artifact(path.prefill_file()),
-                        "artifact {} missing", path.prefill_file());
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let prefill_exe = compile(&client,
-                                  &manifest.artifact_path(path.prefill_file()))?;
-        let decode_exe = compile(&client,
-                                 &manifest.artifact_path(path.decode_file()))?;
-        let weights = manifest
-            .load_weights()?
-            .into_iter()
-            .map(|(shape, data)| {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                Literal::vec1(&data).reshape(&dims).map_err(anyhow::Error::from)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Engine { manifest, path, client, prefill_exe, decode_exe, weights })
-    }
-
-    pub fn batch(&self) -> usize {
-        self.manifest.serve.batch
-    }
-
-    pub fn prefill_seq(&self) -> usize {
-        self.manifest.serve.prefill_seq
-    }
-
-    pub fn vocab(&self) -> usize {
-        self.manifest.model.vocab_size
-    }
-
-    pub fn max_seq(&self) -> usize {
-        self.manifest.model.max_seq
-    }
-
-    /// KV cache tensor dims [L, B, Hk, maxS, D].
-    pub fn kv_dims(&self) -> [usize; 5] {
-        let m = &self.manifest.model;
-        [m.n_layers, self.manifest.serve.batch, m.n_kv_heads, m.max_seq,
-         m.head_dim]
-    }
-
-    /// Zero-filled KV cache literal (fresh batch state).
-    pub fn zero_kv(&self) -> Result<Literal> {
-        let n: usize = self.kv_dims().iter().product();
-        let dims: Vec<i64> = self.kv_dims().iter().map(|&d| d as i64).collect();
-        Ok(Literal::vec1(&vec![0.0f32; n]).reshape(&dims)?)
-    }
-
-    /// Run prefill on `tokens` (flattened [B, S] row-major).
-    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOutput> {
-        let (b, s) = (self.batch(), self.prefill_seq());
-        anyhow::ensure!(tokens.len() == b * s, "prefill takes B*S tokens");
-        let tok = Literal::vec1(tokens).reshape(&[b as i64, s as i64])?;
-        let mut args: Vec<&Literal> = self.weights.iter().collect();
-        args.push(&tok);
-        let result = self.prefill_exe.execute::<&Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        anyhow::ensure!(parts.len() == 3, "prefill returns (logits, kc, vc)");
-        let mut it = parts.into_iter();
-        let logits = it.next().unwrap().to_vec::<f32>()?;
-        let k_cache = it.next().unwrap();
-        let v_cache = it.next().unwrap();
-        Ok(PrefillOutput { logits, k_cache, v_cache })
-    }
-
-    /// Run one decode step: `tokens` [B], `pos` [B] are this step's cache
-    /// slots; caches are literals from prefill / the previous step.
-    pub fn decode(&self, tokens: &[i32], k_cache: &Literal, v_cache: &Literal,
-                  pos: &[i32]) -> Result<DecodeOutput> {
-        let b = self.batch();
-        anyhow::ensure!(tokens.len() == b && pos.len() == b);
-        let tok = Literal::vec1(tokens).reshape(&[b as i64])?;
-        let posl = Literal::vec1(pos).reshape(&[b as i64])?;
-        let mut args: Vec<&Literal> = self.weights.iter().collect();
-        args.push(&tok);
-        args.push(k_cache);
-        args.push(v_cache);
-        args.push(&posl);
-        let result = self.decode_exe.execute::<&Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        anyhow::ensure!(parts.len() == 3, "decode returns (logits, kc, vc)");
-        let mut it = parts.into_iter();
-        let logits = it.next().unwrap().to_vec::<f32>()?;
-        let k_cache = it.next().unwrap();
-        let v_cache = it.next().unwrap();
-        Ok(DecodeOutput { logits, k_cache, v_cache })
-    }
-
-    /// Splice the KV rows of `slot` from `src` into `dst` (host-side copy) —
-    /// the cache-manager primitive behind continuous batching: a freshly
-    /// prefilled sequence's cache plane is merged into the live batch cache.
-    pub fn splice_kv_slot(&self, dst: &Literal, src: &Literal, slot: usize)
-                          -> Result<Literal> {
-        let [l, b, h, s, d] = self.kv_dims();
-        anyhow::ensure!(slot < b, "slot {slot} out of range");
-        let mut dstv = dst.to_vec::<f32>()?;
-        let srcv = src.to_vec::<f32>()?;
-        anyhow::ensure!(dstv.len() == l * b * h * s * d);
-        anyhow::ensure!(srcv.len() == dstv.len());
-        let plane = h * s * d;
-        for li in 0..l {
-            let off = (li * b + slot) * plane;
-            dstv[off..off + plane].copy_from_slice(&srcv[off..off + plane]);
-        }
-        let dims: Vec<i64> = self.kv_dims().iter().map(|&x| x as i64).collect();
-        Ok(Literal::vec1(&dstv).reshape(&dims)?)
-    }
-}
-
-/// Table-1 logits backend over the engine's prefill graph.
-impl crate::llm::LogitsBackend for Engine {
-    fn batch_logits(&mut self, tokens: &[Vec<i32>]) -> Result<Vec<Vec<Vec<f32>>>> {
-        let (b, s, v) = (self.batch(), self.prefill_seq(), self.vocab());
-        anyhow::ensure!(tokens.len() == b, "need exactly B sequences");
-        let mut flat = Vec::with_capacity(b * s);
-        for seq in tokens {
-            anyhow::ensure!(seq.len() == s, "sequences must be S long");
-            flat.extend_from_slice(seq);
-        }
-        let out = self.prefill(&flat)?;
-        Ok((0..b)
-            .map(|bi| {
-                (0..s)
-                    .map(|si| out.logits[(bi * s + si) * v..][..v].to_vec())
-                    .collect()
-            })
-            .collect())
-    }
-
-    fn batch_size(&self) -> usize {
-        self.batch()
-    }
-
-    fn seq_len(&self) -> usize {
-        self.prefill_seq()
-    }
-}
-
-/// Standalone-kernel artifact runner (kernel_prefill/kernel_decode): used by
-/// integration tests and the L1 perf bench to execute the Pallas kernels via
-/// PJRT against golden outputs.
-pub struct KernelRunner {
-    #[allow(dead_code)]
-    client: PjRtClient,
-    exe: PjRtLoadedExecutable,
-    pub m: usize,
-    pub k: usize,
-    pub n: usize,
-}
-
-impl KernelRunner {
-    pub fn load(artifacts_dir: &Path, decode: bool) -> Result<KernelRunner> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let (file, shape) = if decode {
-            ("kernel_decode.hlo.txt", manifest.kernel_decode_shape)
-        } else {
-            ("kernel_prefill.hlo.txt", manifest.kernel_prefill_shape)
-        };
-        let client = PjRtClient::cpu()?;
-        let exe = compile(&client, &manifest.artifact_path(file))?;
-        Ok(KernelRunner { client, exe, m: shape.m, k: shape.k, n: shape.n })
-    }
-
-    /// c[M,N] = f32(f16(a) @ f16(b)) through the Pallas mmt4d pipeline.
-    pub fn matmul(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(a.len() == self.m * self.k);
-        anyhow::ensure!(b.len() == self.k * self.n);
-        let al = Literal::vec1(a).reshape(&[self.m as i64, self.k as i64])?;
-        let bl = Literal::vec1(b).reshape(&[self.k as i64, self.n as i64])?;
-        let out = self.exe.execute::<&Literal>(&[&al, &bl])?[0][0]
-            .to_literal_sync()?;
-        Ok(out.to_tuple1()?.to_vec::<f32>()?)
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{DecodeOutput, Engine, KernelRunner, Literal, PrefillOutput};

@@ -1,0 +1,144 @@
+//! Offline stand-in for the PJRT runtime (default build, no `pjrt` feature):
+//! the same public API as the PJRT variant, with constructors that report
+//! PJRT as unavailable. Keeps every consumer (coordinator, experiments,
+//! benches, integration tests) compiling and running in environments without
+//! a vendored xla toolchain; the artifact-driven tests skip themselves when
+//! `artifacts/manifest.txt` is absent, so nothing ever reaches the
+//! unavailable paths in a default build.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::EnginePath;
+use crate::config::manifest::Manifest;
+
+fn unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "PJRT runtime not built: this binary was compiled without the `pjrt` \
+         feature (vendor xla-rs and build with `--features pjrt` to execute \
+         the AOT artifacts)"
+    )
+}
+
+/// Opaque stand-in for `xla::Literal`: carries no data; every accessor
+/// reports PJRT as unavailable.
+pub struct Literal(());
+
+impl Literal {
+    /// Mirror of `xla::Literal::to_vec`; always fails in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Output of a prefill pass (mirror of the PJRT variant).
+pub struct PrefillOutput {
+    /// [B, S, V] flattened.
+    pub logits: Vec<f32>,
+    pub k_cache: Literal,
+    pub v_cache: Literal,
+}
+
+/// Output of one decode step (mirror of the PJRT variant).
+pub struct DecodeOutput {
+    /// [B, V] flattened.
+    pub logits: Vec<f32>,
+    pub k_cache: Literal,
+    pub v_cache: Literal,
+}
+
+/// Stub engine: `load` always fails with a build-configuration message, so
+/// values of this type are never observed outside a `pjrt` build.
+pub struct Engine {
+    pub manifest: Manifest,
+    pub path: EnginePath,
+}
+
+impl Engine {
+    /// Always fails in the stub build (after validating the manifest, so the
+    /// error distinguishes "no artifacts" from "no PJRT").
+    pub fn load(artifacts_dir: &Path, path: EnginePath) -> Result<Engine> {
+        let _ = (Manifest::load(artifacts_dir)?, path);
+        Err(unavailable())
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.serve.batch
+    }
+
+    pub fn prefill_seq(&self) -> usize {
+        self.manifest.serve.prefill_seq
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.model.vocab_size
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.manifest.model.max_seq
+    }
+
+    /// KV cache tensor dims [L, B, Hk, maxS, D].
+    pub fn kv_dims(&self) -> [usize; 5] {
+        let m = &self.manifest.model;
+        [m.n_layers, self.manifest.serve.batch, m.n_kv_heads, m.max_seq,
+         m.head_dim]
+    }
+
+    /// Always fails in the stub build.
+    pub fn zero_kv(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Always fails in the stub build.
+    pub fn prefill(&self, _tokens: &[i32]) -> Result<PrefillOutput> {
+        Err(unavailable())
+    }
+
+    /// Always fails in the stub build.
+    pub fn decode(&self, _tokens: &[i32], _k_cache: &Literal,
+                  _v_cache: &Literal, _pos: &[i32]) -> Result<DecodeOutput> {
+        Err(unavailable())
+    }
+
+    /// Always fails in the stub build.
+    pub fn splice_kv_slot(&self, _dst: &Literal, _src: &Literal,
+                          _slot: usize) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+impl crate::llm::LogitsBackend for Engine {
+    fn batch_logits(&mut self, _tokens: &[Vec<i32>]) -> Result<Vec<Vec<Vec<f32>>>> {
+        Err(unavailable())
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.prefill_seq()
+    }
+}
+
+/// Stub kernel-artifact runner: `load` always fails.
+pub struct KernelRunner {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl KernelRunner {
+    /// Always fails in the stub build.
+    pub fn load(artifacts_dir: &Path, decode: bool) -> Result<KernelRunner> {
+        let _ = (Manifest::load(artifacts_dir)?, decode);
+        Err(unavailable())
+    }
+
+    /// Always fails in the stub build.
+    pub fn matmul(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}

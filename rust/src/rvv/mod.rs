@@ -2,7 +2,8 @@
 //!
 //! Functional + timing simulation of the vector instructions the paper's
 //! microkernels use (`vsetvli`, unit-stride loads/stores, `vfwmacc.vf`,
-//! `vfmacc.vf`, reductions, moves) plus scalar loads and loop-overhead
+//! `vfmacc.vf`, reductions, moves — plus the int8 path's `vle8`,
+//! `vsext.vf2` and `vwmacc.vx`) plus scalar loads and loop-overhead
 //! accounting. Kernels are expressed as Rust driver functions that issue
 //! instructions to the machine (a macro-op trace — control flow costs are
 //! issued explicitly as scalar ops), which keeps the simulator simple while
@@ -20,6 +21,7 @@ use crate::util::f16::F16;
 /// Selected element width.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Sew {
+    E8,
     E16,
     E32,
 }
@@ -27,6 +29,7 @@ pub enum Sew {
 impl Sew {
     pub fn bytes(self) -> usize {
         match self {
+            Sew::E8 => 1,
             Sew::E16 => 2,
             Sew::E32 => 4,
         }
@@ -112,6 +115,9 @@ pub struct Rvv {
     vregs: Vec<Vec<u8>>,
     /// Scalar FP registers (f32 domain; f16 loads widen on read like flh+fcvt).
     pub fregs: [f32; 32],
+    /// Scalar integer registers (i64 domain; `lb` sign-extends on load —
+    /// the int8 kernels broadcast LHS bytes from here via `vwmacc.vx`).
+    pub xregs: [i64; 32],
     /// Flat byte-addressed memory.
     pub mem: Vec<u8>,
     /// Current vtype/vl.
@@ -128,6 +134,7 @@ impl Rvv {
         Rvv {
             vregs: vec![vec![0u8; vbytes]; cfg.vector_regs],
             fregs: [0.0; 32],
+            xregs: [0; 32],
             mem: vec![0u8; mem_bytes],
             vl: 0,
             sew: Sew::E16,
@@ -177,6 +184,34 @@ impl Rvv {
         (0..n).map(|i| self.read_f32(addr + 4 * i)).collect()
     }
 
+    pub fn write_i8_slice(&mut self, addr: usize, vs: &[i8]) {
+        for (i, v) in vs.iter().enumerate() {
+            self.mem[addr + i] = *v as u8;
+        }
+    }
+
+    pub fn read_i8(&self, addr: usize) -> i8 {
+        self.mem[addr] as i8
+    }
+
+    pub fn read_i32(&self, addr: usize) -> i32 {
+        i32::from_le_bytes([
+            self.mem[addr], self.mem[addr + 1], self.mem[addr + 2],
+            self.mem[addr + 3],
+        ])
+    }
+
+    pub fn write_i32_slice(&mut self, addr: usize, vs: &[i32]) {
+        for (i, v) in vs.iter().enumerate() {
+            self.mem[addr + i * 4..addr + i * 4 + 4]
+                .copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn read_i32_slice(&self, addr: usize, n: usize) -> Vec<i32> {
+        (0..n).map(|i| self.read_i32(addr + 4 * i)).collect()
+    }
+
     fn mem_access(&mut self, addr: usize, size: usize) {
         if let Some(c) = &mut self.cache {
             let p = c.access(addr as u64, size);
@@ -217,6 +252,53 @@ impl Rvv {
     }
 
     fn set_lane_f32(&mut self, vreg: usize, lane: usize, v: f32) {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 4) / vb;
+        let off = (lane * 4) % vb;
+        self.vregs[reg][off..off + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    fn lane_i8(&self, vreg: usize, lane: usize) -> i8 {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + lane / vb;
+        let off = lane % vb;
+        self.vregs[reg][off] as i8
+    }
+
+    fn set_lane_i8(&mut self, vreg: usize, lane: usize, v: i8) {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + lane / vb;
+        let off = lane % vb;
+        self.vregs[reg][off] = v as u8;
+    }
+
+    fn lane_i16(&self, vreg: usize, lane: usize) -> i16 {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 2) / vb;
+        let off = (lane * 2) % vb;
+        i16::from_le_bytes([self.vregs[reg][off], self.vregs[reg][off + 1]])
+    }
+
+    fn set_lane_i16(&mut self, vreg: usize, lane: usize, v: i16) {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 2) / vb;
+        let off = (lane * 2) % vb;
+        self.vregs[reg][off..off + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    fn lane_i32(&self, vreg: usize, lane: usize) -> i32 {
+        let vb = self.cfg.vlen_bytes();
+        let reg = vreg + (lane * 4) / vb;
+        let off = (lane * 4) % vb;
+        i32::from_le_bytes([
+            self.vregs[reg][off],
+            self.vregs[reg][off + 1],
+            self.vregs[reg][off + 2],
+            self.vregs[reg][off + 3],
+        ])
+    }
+
+    fn set_lane_i32(&mut self, vreg: usize, lane: usize, v: i32) {
         let vb = self.cfg.vlen_bytes();
         let reg = vreg + (lane * 4) / vb;
         let off = (lane * 4) % vb;
@@ -405,6 +487,120 @@ impl Rvv {
         acc
     }
 
+    // ---- integer instructions (int8 mmt4d path) --------------------------
+
+    /// `vle8.v vd, (addr)` — unit-stride EEW=8 load of `lanes` bytes into an
+    /// e8 group of `lmul8` registers. Loads carry their own EEW in RVV 1.0,
+    /// so this is legal under any vtype; the group is passed explicitly like
+    /// `vse32`'s.
+    pub fn vle8_raw(&mut self, vd: usize, addr: usize, lanes: usize,
+                    lmul8: usize) {
+        self.check_group(vd, lmul8);
+        for lane in 0..lanes {
+            let v = self.read_i8(addr + lane);
+            self.set_lane_i8(vd, lane, v);
+        }
+        let bytes = lanes;
+        self.stats.vector_insns += 1;
+        self.stats.vector_loads += 1;
+        self.stats.bytes_loaded += bytes as u64;
+        self.stats.cycles += self.cfg.mem_chime_cycles
+            * self.cfg.chimes(lmul8.max(1));
+        self.mem_access(addr, bytes);
+    }
+
+    /// `lb rd, (addr)` — scalar sign-extending byte load (the int8 kernels'
+    /// LHS broadcast source, the integer analogue of `flh`).
+    pub fn lb(&mut self, rd: usize, addr: usize) {
+        self.xregs[rd] = self.read_i8(addr) as i64;
+        self.stats.scalar_insns += 1;
+        self.stats.scalar_loads += 1;
+        self.stats.bytes_loaded += 1;
+        self.stats.cycles += self.cfg.scalar_cycles;
+        self.mem_access(addr, 1);
+    }
+
+    /// `vsext.vf2 vd, vs2` — sign-extend an EEW=8 group of `lmul16 / 2`
+    /// registers into the EEW=16 group `vd` of `lmul16` registers
+    /// (`lanes` live lanes). One ALU op whose cost scales with the widened
+    /// output group.
+    pub fn vsext_vf2(&mut self, vd: usize, vs2: usize, lanes: usize,
+                     lmul16: usize) {
+        assert!(lmul16 >= 2 && lmul16 % 2 == 0, "vsext.vf2 needs 2x groups");
+        self.check_group(vs2, lmul16 / 2);
+        self.check_group(vd, lmul16);
+        for lane in 0..lanes {
+            let v = self.lane_i8(vs2, lane) as i16;
+            self.set_lane_i16(vd, lane, v);
+        }
+        self.stats.vector_insns += 1;
+        self.stats.cycles += self.cfg.alu_chime_cycles * self.cfg.chimes(lmul16);
+    }
+
+    /// `vwmacc.vx vd, rs1, vs2` — widening integer multiply-accumulate, the
+    /// int8 kernel's MAC (integer mirror of `vfwmacc.vf`):
+    /// i32(vd) += i16(x[rs1]) * i16(vs2) per lane. vs2 has EEW=16 (current
+    /// vtype LMUL); vd has EEW=32 (2x LMUL group).
+    pub fn vwmacc_vx(&mut self, vd: usize, rs1: usize, vs2: usize) {
+        assert_eq!(self.sew, Sew::E16, "vwmacc.vx here operates on e16 sources");
+        self.check_group(vs2, self.lmul);
+        self.check_group(vd, self.lmul * 2);
+        let a = self.xregs[rs1] as i16 as i32;
+        for lane in 0..self.vl {
+            let b = self.lane_i16(vs2, lane) as i32;
+            let acc = self.lane_i32(vd, lane);
+            self.set_lane_i32(vd, lane, acc.wrapping_add(a.wrapping_mul(b)));
+        }
+        self.stats.vector_insns += 1;
+        // widening op produces a 2*LMUL result: cost scales with output chimes
+        self.stats.cycles += self.cfg.alu_chime_cycles
+            * self.cfg.chimes(self.lmul * 2);
+    }
+
+    /// `vmv.v.i vd, 0` over an EEW=32 integer group (acc zeroing).
+    pub fn vzero_i32(&mut self, vd: usize, lanes: usize, lmul32: usize) {
+        self.check_group(vd, lmul32);
+        for lane in 0..lanes {
+            self.set_lane_i32(vd, lane, 0);
+        }
+        self.stats.vector_insns += 1;
+        self.stats.cycles += self.cfg.alu_chime_cycles * self.cfg.chimes(lmul32);
+    }
+
+    /// `vse32.v` of an EEW=32 integer group (int accumulator write-out and
+    /// spill store).
+    pub fn vse32i(&mut self, vs: usize, addr: usize, lanes: usize,
+                  lmul32: usize) {
+        self.check_group(vs, lmul32);
+        for lane in 0..lanes {
+            let v = self.lane_i32(vs, lane);
+            self.mem[addr + lane * 4..addr + lane * 4 + 4]
+                .copy_from_slice(&v.to_le_bytes());
+        }
+        let bytes = lanes * 4;
+        self.stats.vector_insns += 1;
+        self.stats.vector_stores += 1;
+        self.stats.bytes_stored += bytes as u64;
+        self.stats.cycles += self.cfg.mem_chime_cycles * self.cfg.chimes(lmul32);
+        self.mem_access(addr, bytes);
+    }
+
+    /// Reload counterpart of `vse32i` (integer spill restore).
+    pub fn vle32i_raw(&mut self, vd: usize, addr: usize, lanes: usize,
+                      lmul32: usize) {
+        self.check_group(vd, lmul32);
+        for lane in 0..lanes {
+            let v = self.read_i32(addr + lane * 4);
+            self.set_lane_i32(vd, lane, v);
+        }
+        let bytes = lanes * 4;
+        self.stats.vector_insns += 1;
+        self.stats.vector_loads += 1;
+        self.stats.bytes_loaded += bytes as u64;
+        self.stats.cycles += self.cfg.mem_chime_cycles * self.cfg.chimes(lmul32);
+        self.mem_access(addr, bytes);
+    }
+
     /// Zero-cost lane write: used by kernel models whose conversion op's
     /// *cost* is issued separately (e.g. `vfwcvt` modelled as one ALU op)
     /// but whose data path is easiest to express per-lane.
@@ -421,6 +617,11 @@ impl Rvv {
     /// Read back an EEW=32 accumulator group (test introspection).
     pub fn acc_f32(&self, vd: usize, lanes: usize) -> Vec<f32> {
         (0..lanes).map(|l| self.lane_f32(vd, l)).collect()
+    }
+
+    /// Read back an EEW=32 integer accumulator group (test introspection).
+    pub fn acc_i32(&self, vd: usize, lanes: usize) -> Vec<i32> {
+        (0..lanes).map(|l| self.lane_i32(vd, l)).collect()
     }
 
     pub fn reset_stats(&mut self) {
@@ -523,6 +724,73 @@ mod tests {
             .map(|(x, y)| x.to_f32() * y.to_f32())
             .sum();
         assert!((got - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn int8_load_extend_mac_roundtrip() {
+        // vle8 -> vsext.vf2 -> vwmacc.vx -> vse32i, checked against scalar.
+        let mut m = machine(256);
+        let xs: Vec<i8> = (0..32).map(|i| (i as i8) - 16).collect();
+        m.write_i8_slice(0x100, &xs);
+        m.vsetvli(32, Sew::E16, 2);
+        m.vle8_raw(0, 0x100, 32, 1);
+        m.vsext_vf2(2, 0, 32, 2);
+        m.vzero_i32(4, 32, 4);
+        m.xregs[5] = -3;
+        m.vwmacc_vx(4, 5, 2);
+        let acc = m.acc_i32(4, 32);
+        for (i, a) in acc.iter().enumerate() {
+            assert_eq!(*a, -3 * (i as i32 - 16));
+        }
+        m.vse32i(4, 0x1000, 32, 4);
+        assert_eq!(m.read_i32_slice(0x1000, 32), acc);
+        m.vle32i_raw(8, 0x1000, 32, 4);
+        assert_eq!(m.acc_i32(8, 32), acc);
+    }
+
+    #[test]
+    fn vwmacc_accumulates_in_i32_not_i16() {
+        // 127 * 127 = 16129 overflows i8 and repeated accumulation would
+        // saturate i16; the widened accumulator must hold the exact value.
+        let mut m = machine(128);
+        m.write_i8_slice(0, &[127i8; 8]);
+        m.vsetvli(8, Sew::E16, 1);
+        m.vle8_raw(0, 0, 8, 1);
+        m.vsext_vf2(2, 0, 8, 2);
+        m.vzero_i32(4, 8, 2);
+        m.xregs[1] = 127;
+        for _ in 0..4 {
+            m.vwmacc_vx(4, 1, 2);
+        }
+        for a in m.acc_i32(4, 8) {
+            assert_eq!(a, 4 * 127 * 127); // 64516 > i16::MAX
+        }
+    }
+
+    #[test]
+    fn lb_sign_extends() {
+        let mut m = machine(128);
+        m.write_i8_slice(0x10, &[-5i8, 7]);
+        m.lb(3, 0x10);
+        assert_eq!(m.xregs[3], -5);
+        m.lb(4, 0x11);
+        assert_eq!(m.xregs[4], 7);
+        assert_eq!(m.stats.scalar_loads, 2);
+        assert_eq!(m.stats.bytes_loaded, 2);
+    }
+
+    #[test]
+    fn int_cycle_costs_mirror_float_widening() {
+        // VLEN=256, DLEN=128: e16/m2 vwmacc writes an m4 group -> 8 chimes,
+        // exactly like vfwmacc at the same vtype.
+        let mut m = machine(256);
+        m.vsetvli(32, Sew::E16, 2);
+        let c0 = m.stats.cycles;
+        m.vwmacc_vx(8, 0, 0);
+        assert_eq!(m.stats.cycles - c0, 8);
+        let c1 = m.stats.cycles;
+        m.vle8_raw(0, 0, 32, 1);
+        assert_eq!(m.stats.cycles - c1, 2); // e8 strip: half the e16 load cost
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Target descriptions and VLEN-aware tile selection — the compiler-side
+//! knowledge the paper adds to IREE's riscv64 backend.
+//!
+//! [`TargetDesc`] models a deployment target (ISA + core count + cache
+//! hierarchy + DRAM bandwidth); the MILK-V Jupiter (SpacemiT X60, VLEN=256)
+//! is the paper's testbed. [`select_tiles`] / [`select_tiles_for`] implement
+//! the paper's mmt4d (M0, N0, K0) selection:
+//!
+//! | dtype      | prefill (GEMM)    | decode (GEMV)     |
+//! |------------|-------------------|-------------------|
+//! | f16/f32    | 6 x VLEN/8  x 1   | 1 x VLEN/4  x 1   |
+//! | i8 (s8s8s32)| 7 x VLEN/8 x 1   | 1 x VLEN/2  x 1   |
+//!
+//! The f16 kernel keeps 6 accumulator rows resident (RHS strip LMUL=2, its
+//! widened image LMUL=4, a spill-scratch group, 6 x LMUL=4 accumulators =
+//! 30/32 vregs). The i8 kernel's e8 strip occupies a single register and its
+//! sign-extended e16 image two, so the whole strip machinery fits in one
+//! LMUL=4-aligned block and a 7th accumulator row becomes resident; on the
+//! decode side int8 data is twice as dense, so the strip doubles to VLEN/2
+//! lanes with a 16-register e32 accumulator footprint (issued as two
+//! LMUL=8 half-groups — RVV 1.0 caps LMUL at 8).
+//! [`vreg_pressure`] / [`vreg_pressure_i8`] are the register-file cost
+//! models behind the paper's "bigger tiles spill" observation
+//! (`benches/tile_sweep.rs`).
+
+use crate::config::manifest::Tile;
+use crate::ir::ElemType;
+
+/// Instruction-set architecture of a target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// RISC-V 64 with the V extension at the given VLEN (bits).
+    Riscv64 {
+        /// Vector register length in bits.
+        vlen_bits: usize,
+    },
+    /// x86-64 (AVX-512 class, the upstream-IREE parity model).
+    X86_64,
+    /// aarch64 (NEON class, the upstream-IREE parity model).
+    Aarch64,
+}
+
+impl Arch {
+    /// The registry key for this architecture (`ukernel::target_has_ukernels`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::Riscv64 { .. } => "riscv64",
+            Arch::X86_64 => "x86_64",
+            Arch::Aarch64 => "aarch64",
+        }
+    }
+}
+
+/// Which phase of LLM inference a dispatch belongs to. The two phases reach
+/// the compiler with different static shapes (GEMM vs GEMV) and get
+/// different tile encodings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Prompt processing: M > 1 (GEMM-shaped contractions).
+    Prefill,
+    /// Token generation: M == 1 (GEMV-shaped contractions).
+    Decode,
+}
+
+impl Phase {
+    /// Lower-case phase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+
+    /// Parse `"prefill"` / `"decode"`.
+    pub fn parse(s: &str) -> Option<Phase> {
+        match s {
+            "prefill" => Some(Phase::Prefill),
+            "decode" => Some(Phase::Decode),
+            _ => None,
+        }
+    }
+}
+
+/// One cache level's geometry and miss cost (consumed by `cachesim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheDesc {
+    /// Total capacity in bytes.
+    pub size_bytes: usize,
+    /// Line size in bytes (power of two).
+    pub line_bytes: usize,
+    /// Associativity.
+    pub ways: usize,
+    /// Extra cycles on a miss at this level.
+    pub miss_penalty: u64,
+}
+
+/// A deployment target: ISA, core count, clock, DRAM bandwidth and cache
+/// hierarchy. Cloneable and cheap; passed by value into passes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TargetDesc {
+    /// Human-readable target name (also the `by_name` key).
+    pub name: &'static str,
+    /// Instruction-set architecture.
+    pub arch: Arch,
+    /// Number of cores for the multicore roofline.
+    pub cores: usize,
+    /// Core clock in GHz.
+    pub freq_ghz: f64,
+    /// Sustained DRAM bandwidth in GB/s.
+    pub dram_gbps: f64,
+    /// L1 data cache.
+    pub l1d: CacheDesc,
+    /// Unified L2.
+    pub l2: CacheDesc,
+}
+
+impl TargetDesc {
+    /// The paper's testbed: MILK-V Jupiter (SpacemiT X60, 8 cores, VLEN=256,
+    /// DLEN=128).
+    pub fn milkv_jupiter() -> TargetDesc {
+        TargetDesc {
+            name: "milkv-jupiter",
+            arch: Arch::Riscv64 { vlen_bits: 256 },
+            cores: 8,
+            freq_ghz: 1.6,
+            dram_gbps: 8.0,
+            l1d: CacheDesc { size_bytes: 32 * 1024, line_bytes: 64, ways: 8,
+                             miss_penalty: 12 },
+            l2: CacheDesc { size_bytes: 512 * 1024, line_bytes: 64, ways: 8,
+                            miss_penalty: 80 },
+        }
+    }
+
+    /// A Jupiter-like RISC-V core with a different VLEN (scaling studies).
+    pub fn riscv_with_vlen(vlen_bits: usize) -> TargetDesc {
+        let name = match vlen_bits {
+            64 => "riscv64-vlen64",
+            128 => "riscv64-vlen128",
+            256 => "riscv64-vlen256",
+            512 => "riscv64-vlen512",
+            1024 => "riscv64-vlen1024",
+            2048 => "riscv64-vlen2048",
+            _ => "riscv64-custom",
+        };
+        TargetDesc {
+            name,
+            arch: Arch::Riscv64 { vlen_bits },
+            ..Self::milkv_jupiter()
+        }
+    }
+
+    /// Generic AVX-512-class x86-64 (upstream-IREE registry parity model).
+    pub fn generic_x86() -> TargetDesc {
+        TargetDesc {
+            name: "x86_64",
+            arch: Arch::X86_64,
+            cores: 8,
+            freq_ghz: 3.0,
+            dram_gbps: 50.0,
+            l1d: CacheDesc { size_bytes: 32 * 1024, line_bytes: 64, ways: 8,
+                             miss_penalty: 4 },
+            l2: CacheDesc { size_bytes: 1024 * 1024, line_bytes: 64, ways: 16,
+                            miss_penalty: 40 },
+        }
+    }
+
+    /// Generic NEON-class aarch64 (upstream-IREE registry parity model).
+    pub fn generic_arm() -> TargetDesc {
+        TargetDesc {
+            name: "aarch64",
+            arch: Arch::Aarch64,
+            cores: 8,
+            freq_ghz: 2.5,
+            dram_gbps: 30.0,
+            l1d: CacheDesc { size_bytes: 64 * 1024, line_bytes: 64, ways: 4,
+                             miss_penalty: 4 },
+            l2: CacheDesc { size_bytes: 1024 * 1024, line_bytes: 64, ways: 8,
+                            miss_penalty: 40 },
+        }
+    }
+
+    /// Resolve a CLI target name: `milkv-jupiter`, `x86_64`, `aarch64`, or
+    /// `riscv64-vlenN`.
+    pub fn by_name(name: &str) -> Option<TargetDesc> {
+        match name {
+            "milkv-jupiter" => Some(Self::milkv_jupiter()),
+            "x86_64" => Some(Self::generic_x86()),
+            "aarch64" => Some(Self::generic_arm()),
+            _ => {
+                let v: usize = name.strip_prefix("riscv64-vlen")?.parse().ok()?;
+                Some(Self::riscv_with_vlen(v))
+            }
+        }
+    }
+
+    /// VLEN in bits for RISC-V targets, `None` otherwise.
+    pub fn vlen_bits(&self) -> Option<usize> {
+        match self.arch {
+            Arch::Riscv64 { vlen_bits } => Some(vlen_bits),
+            _ => None,
+        }
+    }
+}
+
+fn check_vlen(vlen_bits: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(vlen_bits >= 64 && vlen_bits % 64 == 0
+                    && vlen_bits.is_power_of_two(),
+                    "invalid VLEN {vlen_bits}");
+    Ok(())
+}
+
+/// The paper's VLEN-aware tile selection for the f16/f32 microkernels
+/// (mirrored by `python/compile/encoding.py::riscv64_tiles`).
+pub fn select_tiles(arch: Arch, phase: Phase) -> anyhow::Result<Tile> {
+    select_tiles_for(arch, phase, ElemType::F16)
+}
+
+/// Dtype-aware tile selection: f16/f32 use the paper's tiles, i8 uses the
+/// int8 widening-MAC tiles (see the module docs for the register math).
+pub fn select_tiles_for(arch: Arch, phase: Phase,
+                        elem: ElemType) -> anyhow::Result<Tile> {
+    match arch {
+        Arch::Riscv64 { vlen_bits } => {
+            check_vlen(vlen_bits)?;
+            let tile = match (elem, phase) {
+                (ElemType::I8, Phase::Prefill) => {
+                    Tile { m0: 7, n0: vlen_bits / 8, k0: 1 }
+                }
+                (ElemType::I8, Phase::Decode) => {
+                    Tile { m0: 1, n0: vlen_bits / 2, k0: 1 }
+                }
+                (ElemType::I32, _) => {
+                    anyhow::bail!("no mmt4d ukernel takes i32 operands")
+                }
+                (_, Phase::Prefill) => Tile { m0: 6, n0: vlen_bits / 8, k0: 1 },
+                (_, Phase::Decode) => Tile { m0: 1, n0: vlen_bits / 4, k0: 1 },
+            };
+            Ok(tile)
+        }
+        // Upstream parity models: one shape per arch; i8 packs K pairs/quads
+        // the way VNNI / SDOT kernels consume them.
+        Arch::X86_64 => Ok(match elem {
+            ElemType::I8 => Tile { m0: 16, n0: 16, k0: 2 },
+            _ => Tile { m0: 16, n0: 16, k0: 1 },
+        }),
+        Arch::Aarch64 => Ok(match elem {
+            ElemType::I8 => Tile { m0: 8, n0: 8, k0: 4 },
+            _ => Tile { m0: 8, n0: 8, k0: 1 },
+        }),
+    }
+}
+
+/// LMUL of an e16 group holding `n0` half-precision lanes at `vlen` bits.
+fn lmul16_for(n0: usize, vlen: usize) -> usize {
+    (n0 * 16).div_ceil(vlen).next_power_of_two()
+}
+
+/// LMUL of an e8 group holding `n0` byte lanes at `vlen` bits.
+fn lmul8_for(n0: usize, vlen: usize) -> usize {
+    (n0 * 8).div_ceil(vlen).next_power_of_two()
+}
+
+/// Vector registers the f16 mmt4d kernel needs for `tile` at `vlen`:
+/// the RHS strip (e16), a spill-scratch group (e32), and one widened e32
+/// accumulator group per LHS row. Matches `kernels::mmt4d_tile_rvv`'s
+/// allocation, so `tile_spills` predicts exactly when that kernel emits
+/// spill traffic.
+pub fn vreg_pressure(tile: Tile, vlen: usize) -> usize {
+    let lmul16 = lmul16_for(tile.n0, vlen);
+    let lmul32 = 2 * lmul16;
+    lmul16 + lmul32 + tile.m0 * lmul32
+}
+
+/// Does the f16 kernel for `tile` spill on a file of `regs` vector registers?
+pub fn tile_spills(tile: Tile, vlen: usize, regs: usize) -> bool {
+    vreg_pressure(tile, vlen) > regs
+}
+
+/// Vector registers the i8 mmt4d kernel needs: one LMUL=4·lmul8-aligned
+/// block holding the e8 strip and its e16 sign-extension, plus one e32
+/// accumulator group per LHS row. Matches
+/// `kernels::mmt4d_tile_rvv_i8`'s lazy-scratch allocation.
+pub fn vreg_pressure_i8(tile: Tile, vlen: usize) -> usize {
+    let lmul8 = lmul8_for(tile.n0, vlen);
+    let lmul32 = 4 * lmul8;
+    lmul32 + tile.m0 * lmul32
+}
+
+/// Does the i8 kernel for `tile` spill on a file of `regs` vector registers?
+pub fn tile_spills_i8(tile: Tile, vlen: usize, regs: usize) -> bool {
+    vreg_pressure_i8(tile, vlen) > regs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tiles_at_vlen256() {
+        let arch = Arch::Riscv64 { vlen_bits: 256 };
+        assert_eq!(select_tiles(arch, Phase::Prefill).unwrap(),
+                   Tile { m0: 6, n0: 32, k0: 1 });
+        assert_eq!(select_tiles(arch, Phase::Decode).unwrap(),
+                   Tile { m0: 1, n0: 64, k0: 1 });
+    }
+
+    #[test]
+    fn i8_tiles_differ_from_f16() {
+        let arch = Arch::Riscv64 { vlen_bits: 256 };
+        let pf = select_tiles_for(arch, Phase::Prefill, ElemType::I8).unwrap();
+        let dec = select_tiles_for(arch, Phase::Decode, ElemType::I8).unwrap();
+        assert_eq!(pf, Tile { m0: 7, n0: 32, k0: 1 });
+        assert_eq!(dec, Tile { m0: 1, n0: 128, k0: 1 });
+        // and neither spills on the 32-register file
+        assert!(!tile_spills_i8(pf, 256, 32));
+        assert!(!tile_spills_i8(dec, 256, 32));
+        // one more row / a wider strip would spill
+        assert!(tile_spills_i8(Tile { m0: 8, ..pf }, 256, 32));
+        assert!(tile_spills_i8(Tile { n0: 256, ..dec }, 256, 32));
+    }
+
+    #[test]
+    fn f16_pressure_matches_kernel_allocation() {
+        // paper prefill tile: rhs 2 + scratch 4 + 6 acc rows x 4 = 30
+        assert_eq!(vreg_pressure(Tile { m0: 6, n0: 32, k0: 1 }, 256), 30);
+        assert!(!tile_spills(Tile { m0: 6, n0: 32, k0: 1 }, 256, 32));
+        // M0=10 exceeds the file — the oversized-tile spill case
+        assert!(tile_spills(Tile { m0: 10, n0: 32, k0: 1 }, 256, 32));
+        // decode tile: rhs 4 + scratch 8 + 1 acc row x 8 = 20
+        assert_eq!(vreg_pressure(Tile { m0: 1, n0: 64, k0: 1 }, 256), 20);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["milkv-jupiter", "x86_64", "aarch64", "riscv64-vlen128",
+                     "riscv64-vlen512", "riscv64-vlen1024"] {
+            let t = TargetDesc::by_name(name).unwrap();
+            assert_eq!(t.name, name);
+        }
+        assert!(TargetDesc::by_name("riscv64-vlenX").is_none());
+        assert!(TargetDesc::by_name("sparc").is_none());
+    }
+
+    #[test]
+    fn vlen_validation() {
+        assert!(select_tiles(Arch::Riscv64 { vlen_bits: 100 },
+                             Phase::Prefill).is_err());
+        assert!(select_tiles(Arch::Riscv64 { vlen_bits: 0 },
+                             Phase::Prefill).is_err());
+        assert!(select_tiles(Arch::Riscv64 { vlen_bits: 512 },
+                             Phase::Prefill).is_ok());
+    }
+
+    #[test]
+    fn upstream_parity_tiles() {
+        assert_eq!(select_tiles(Arch::X86_64, Phase::Prefill).unwrap(),
+                   Tile { m0: 16, n0: 16, k0: 1 });
+        assert_eq!(select_tiles(Arch::Aarch64, Phase::Decode).unwrap(),
+                   Tile { m0: 8, n0: 8, k0: 1 });
+        assert_eq!(
+            select_tiles_for(Arch::X86_64, Phase::Prefill, ElemType::I8)
+                .unwrap(),
+            Tile { m0: 16, n0: 16, k0: 2 }
+        );
+    }
+
+    #[test]
+    fn jupiter_caches_are_simulable() {
+        // cachesim requires power-of-two set counts at every level.
+        for c in [TargetDesc::milkv_jupiter().l1d,
+                  TargetDesc::milkv_jupiter().l2,
+                  TargetDesc::generic_x86().l1d, TargetDesc::generic_x86().l2,
+                  TargetDesc::generic_arm().l1d, TargetDesc::generic_arm().l2] {
+            let sets = c.size_bytes / c.line_bytes / c.ways;
+            assert!(sets.is_power_of_two(), "{c:?}: {sets} sets");
+        }
+    }
+}

@@ -200,12 +200,25 @@ pub fn mmt4d_f32f32f32(lhs: &[f32], rhs: &[f32], out: &mut [f32], p: &Mmt4dParam
     }
 }
 
-/// s8 x s8 -> s32 variant (quantized path IREE supports on x86/ARM).
+/// s8 x s8 -> s32 variant — the quantized path: IREE ships it on x86/ARM,
+/// this repo adds the riscv64 kernel (`kernels::mmt4d_tile_rvv_i8`).
+///
+/// Integer accumulation is exact and order-independent, so this native
+/// kernel, the RVV-simulated kernel and a naive i32 matmul are all
+/// bit-identical by construction — the property `propcheck` tests pin down.
 pub fn mmt4d_s8s8s32(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
     check(p, lhs.len(), rhs.len(), out.len());
     if !p.accumulate {
         out.fill(0);
     }
+    if p.k0 == 1 {
+        return mmt4d_s8_k0eq1(lhs, rhs, out, p);
+    }
+    mmt4d_s8_generic(lhs, rhs, out, p);
+}
+
+/// Generic int8 tile body, any (M0, N0, K0).
+fn mmt4d_s8_generic(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
     let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
     for i1 in 0..m1 {
         for j1 in 0..n1 {
@@ -220,6 +233,52 @@ pub fn mmt4d_s8s8s32(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
                             acc += lt[i0 * k0 + c] as i32 * rt[j0 * k0 + c] as i32;
                         }
                         out_tile[i0 * n0 + j0] = acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// K0 = 1 specialisation (the int8 prefill *and* decode kernels): per K step
+/// the N0-wide RHS strip is sign-extended to i32 exactly once into a stack
+/// buffer and reused across the M0 rows — the software analogue of the RVV
+/// kernel amortizing its `vle8`/`vsext.vf2` over M0 `vwmacc.vx` ops
+/// (§Perf: same buffered-strip structure that made the f16 kernel ~9x).
+fn mmt4d_s8_k0eq1(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
+    const STRIP: usize = 256; // covers N0 up to VLEN=512's i8 strip
+    if p.n0 <= STRIP {
+        let mut bw = [0i32; STRIP];
+        mmt4d_s8_k0eq1_body(lhs, rhs, out, p, &mut bw[..p.n0]);
+    } else {
+        // Very wide strips: heap buffer, same body.
+        let mut bw = vec![0i32; p.n0];
+        mmt4d_s8_k0eq1_body(lhs, rhs, out, p, &mut bw);
+    }
+}
+
+/// The K0=1 loop nest, over a caller-provided N0-long widening buffer.
+fn mmt4d_s8_k0eq1_body(lhs: &[i8], rhs: &[i8], out: &mut [i32],
+                       p: &Mmt4dParams, bw: &mut [i32]) {
+    let (m1, n1, k1, m0, n0) = (p.m1, p.n1, p.k1, p.m0, p.n0);
+    debug_assert_eq!(bw.len(), n0);
+    for i1 in 0..m1 {
+        let lhs_row = &lhs[i1 * k1 * m0..][..k1 * m0];
+        for j1 in 0..n1 {
+            let rhs_tile = &rhs[j1 * k1 * n0..][..k1 * n0];
+            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+            for kk in 0..k1 {
+                let a = &lhs_row[kk * m0..][..m0];
+                let b = &rhs_tile[kk * n0..][..n0];
+                // one widening pass per strip, shared by all M0 rows
+                for (dst, src) in bw.iter_mut().zip(b) {
+                    *dst = *src as i32;
+                }
+                for i0 in 0..m0 {
+                    let av = a[i0] as i32;
+                    let row = &mut out_tile[i0 * n0..][..n0];
+                    for (o, &bv) in row.iter_mut().zip(bw.iter()) {
+                        *o += av * bv;
                     }
                 }
             }
@@ -330,6 +389,42 @@ mod tests {
         mmt4d_f16f16f32(&lhs16, &rhs16, &mut o16, &p);
         mmt4d_f32f32f32(&lhs32, &rhs32, &mut o32, &p);
         assert_eq!(o16, o32);
+    }
+
+    #[test]
+    fn s8_fast_path_matches_generic() {
+        // The K0=1 strip-buffered fast path must agree bit-for-bit with the
+        // generic loop on identical packed data.
+        let p = Mmt4dParams { m1: 2, n1: 3, k1: 9, m0: 7, n0: 32, k0: 1,
+                              accumulate: false };
+        let mut rng = Rng::new(31);
+        let lhs: Vec<i8> = (0..p.lhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let rhs: Vec<i8> = (0..p.rhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let mut fast = vec![0i32; p.out_len()];
+        let mut slow = vec![0i32; p.out_len()];
+        mmt4d_s8s8s32(&lhs, &rhs, &mut fast, &p);
+        mmt4d_s8_generic(&lhs, &rhs, &mut slow, &p);
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn s8_accumulate_flag() {
+        let p = Mmt4dParams { m1: 1, n1: 1, k1: 2, m0: 2, n0: 2, k0: 1,
+                              accumulate: true };
+        let lhs = vec![1i8; p.lhs_len()];
+        let rhs = vec![3i8; p.rhs_len()];
+        let mut out = vec![10i32; p.out_len()];
+        mmt4d_s8s8s32(&lhs, &rhs, &mut out, &p);
+        assert_eq!(out, vec![16; 4]); // 10 + K(=2) * 1*3
+
+        let mut out2 = vec![10i32; p.out_len()];
+        let p2 = Mmt4dParams { accumulate: false, ..p };
+        mmt4d_s8s8s32(&lhs, &rhs, &mut out2, &p2);
+        assert_eq!(out2, vec![6; 4]);
     }
 
     #[test]

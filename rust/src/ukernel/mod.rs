@@ -5,12 +5,15 @@
 //! ukernel variant at materialization time:
 //!
 //!   iree_uk_mmt4d_f16f16f32_6x32x1      (M0 x N0 x K0)
+//!   iree_uk_mmt4d_i8i8i32_7x32x1        (quantized path; s8/s32 aliases ok)
 //!   iree_uk_pack_lhs_f16_6x1            (M0 x K0)
 //!   iree_uk_pack_rhs_f16_32x1           (N0 x K0)
 //!   iree_uk_unpack_f32_6x32             (M0 x N0)
+//!   iree_uk_unpack_i32_7x32             (quantized accumulator write-back)
 
 pub mod mmt4d;
 pub mod pack;
+pub mod quant;
 
 pub use mmt4d::{mmt4d_f16f16f32, mmt4d_f32f32f32, mmt4d_s8s8s32, Mmt4dParams};
 
@@ -228,7 +231,6 @@ pub fn execute(op: &UkernelOp, args: &[&Tensor],
         }
         UkernelOp::Unpack { elem, m0, n0 } => {
             anyhow::ensure!(args.len() == 1);
-            anyhow::ensure!(*elem == ElemType::F32, "unpack supports f32");
             let s = args[0];
             anyhow::ensure!(s.shape.len() == 4, "unpack src is 4-d");
             let (m1, n1) = (s.shape[0], s.shape[1]);
@@ -236,10 +238,22 @@ pub fn execute(op: &UkernelOp, args: &[&Tensor],
                             "unpack tile mismatch");
             anyhow::ensure!(result_shape.len() == 2, "unpack result is 2-d");
             let (m, n) = (result_shape[0], result_shape[1]);
-            let sv = s.as_f32().ok_or_else(|| anyhow::anyhow!("src not f32"))?;
-            let mut dst = vec![0.0f32; m * n];
-            pack::unpack_acc_f32(sv, m1, n1, *m0, *n0, m, n, &mut dst);
-            Ok(Tensor::f32(vec![m, n], dst))
+            match elem {
+                ElemType::F32 => {
+                    let sv = s.as_f32().ok_or_else(|| anyhow::anyhow!("src not f32"))?;
+                    let mut dst = vec![0.0f32; m * n];
+                    pack::unpack_acc_f32(sv, m1, n1, *m0, *n0, m, n, &mut dst);
+                    Ok(Tensor::f32(vec![m, n], dst))
+                }
+                ElemType::I32 => {
+                    let sv = s.as_i32().ok_or_else(|| anyhow::anyhow!("src not i32"))?;
+                    let mut dst = vec![0i32; m * n];
+                    pack::unpack_acc_i32(sv, m1, n1, *m0, *n0, m, n, &mut dst);
+                    Ok(Tensor::i32(vec![m, n], dst))
+                }
+                other => anyhow::bail!("unpack supports f32/i32 accumulators, \
+                                        got {other:?}"),
+            }
         }
     }
 }
@@ -274,15 +288,8 @@ pub fn matmul_s8_via_mmt4d(a: &[i8], b: &[i8], m: usize, k: usize, n: usize,
     let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
     let mut out4 = vec![0i32; p.out_len()];
     mmt4d_s8s8s32(&lhs4, &rhs4, &mut out4, &p);
-    // unpack i32 (same layout math as f32)
     let mut out = vec![0i32; m * n];
-    for i in 0..m {
-        let (i1, i0) = (i / m0, i % m0);
-        for j in 0..n {
-            let (j1, j0) = (j / n0, j % n0);
-            out[i * n + j] = out4[((i1 * n1 + j1) * m0 + i0) * n0 + j0];
-        }
-    }
+    pack::unpack_acc_i32(&out4, m1, n1, m0, n0, m, n, &mut out);
     out
 }
 

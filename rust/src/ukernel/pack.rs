@@ -112,20 +112,28 @@ pub fn pack_acc_f32(src: &[f32], m: usize, n: usize, m0: usize, n0: usize,
     }
 }
 
-/// Unpack `[M1,N1,M0,N0] -> [M,N]`, dropping tile padding.
-pub fn unpack_acc_f32(src: &[f32], m1: usize, n1: usize, m0: usize, n0: usize,
-                      m: usize, n: usize, dst: &mut [f32]) {
-    assert_eq!(src.len(), m1 * n1 * m0 * n0);
-    assert_eq!(dst.len(), m * n);
-    assert!(m <= m1 * m0 && n <= n1 * n0);
-    for i in 0..m {
-        let (i1, i0) = (i / m0, i % m0);
-        for j in 0..n {
-            let (j1, j0) = (j / n0, j % n0);
-            dst[i * n + j] = src[((i1 * n1 + j1) * m0 + i0) * n0 + j0];
+macro_rules! impl_unpack_acc {
+    ($name:ident, $t:ty) => {
+        /// Unpack an accumulator `[M1,N1,M0,N0] -> [M,N]`, dropping tile
+        /// padding (f32 for the float kernels, i32 for the quantized path).
+        pub fn $name(src: &[$t], m1: usize, n1: usize, m0: usize, n0: usize,
+                     m: usize, n: usize, dst: &mut [$t]) {
+            assert_eq!(src.len(), m1 * n1 * m0 * n0);
+            assert_eq!(dst.len(), m * n);
+            assert!(m <= m1 * m0 && n <= n1 * n0);
+            for i in 0..m {
+                let (i1, i0) = (i / m0, i % m0);
+                for j in 0..n {
+                    let (j1, j0) = (j / n0, j % n0);
+                    dst[i * n + j] = src[((i1 * n1 + j1) * m0 + i0) * n0 + j0];
+                }
+            }
         }
-    }
+    };
 }
+
+impl_unpack_acc!(unpack_acc_f32, f32);
+impl_unpack_acc!(unpack_acc_i32, i32);
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,260 @@
+//! Symmetric int8 quantization shim around the s8s8s32 mmt4d path.
+//!
+//! This is the glue that lets f32/f16 workloads (the serving backend, the
+//! benches, the accuracy harness) run on the quantized kernels: per-tensor
+//! symmetric scales (`q = round(x / scale)`, `scale = max|x| / 127`), an
+//! i8 x i8 -> i32 mmt4d matmul, and a dequantize of the exact integer
+//! accumulator back to f32 (`x ~ q * scale`, so `C ~ acc * scale_a *
+//! scale_b`). The integer core is bit-exact; all quantization error is
+//! introduced by — and bounded by — the rounding step, which is what the
+//! accuracy tests pin down.
+
+#![deny(missing_docs)]
+
+use super::{matmul_s8_via_mmt4d, pack, Mmt4dParams};
+use crate::util::f16::F16;
+
+/// Per-tensor symmetric quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Real value represented by one integer step; `x ~ q * scale`.
+    pub scale: f32,
+}
+
+impl QuantParams {
+    /// Choose the symmetric scale covering `data` with the full +/-127
+    /// integer range (127, not 128, keeps the range symmetric).
+    pub fn for_data(data: &[f32]) -> QuantParams {
+        let max_abs = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        QuantParams { scale: if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 } }
+    }
+
+    /// Quantize one value: round-to-nearest, clamped to [-127, 127].
+    pub fn quantize_one(&self, v: f32) -> i8 {
+        (v / self.scale).round().clamp(-127.0, 127.0) as i8
+    }
+
+    /// Dequantize one integer step count.
+    pub fn dequantize_one(&self, q: i8) -> f32 {
+        q as f32 * self.scale
+    }
+}
+
+/// Quantize a tensor's data with its own per-tensor scale.
+pub fn quantize(data: &[f32]) -> (Vec<i8>, QuantParams) {
+    let p = QuantParams::for_data(data);
+    (data.iter().map(|&v| p.quantize_one(v)).collect(), p)
+}
+
+/// Quantize f16 data (the serving path's weight dtype) by widening first.
+pub fn quantize_f16(data: &[F16]) -> (Vec<i8>, QuantParams) {
+    let wide: Vec<f32> = data.iter().map(|h| h.to_f32()).collect();
+    quantize(&wide)
+}
+
+/// Dequantize an i32 mmt4d accumulator: each entry is an exact sum of
+/// `q_a * q_b` products, so the real-valued estimate is `acc * sa * sb`.
+pub fn dequantize_acc(acc: &[i32], a: QuantParams, b: QuantParams) -> Vec<f32> {
+    let s = a.scale * b.scale;
+    acc.iter().map(|&v| v as f32 * s).collect()
+}
+
+/// f32 matmul routed through the quantized path:
+/// quantize -> pack -> s8s8s32 mmt4d -> unpack -> dequantize.
+///
+/// The drop-in quantized replacement for `matmul_f16_via_mmt4d` on the
+/// serving/bench side; `c[M,N] ~ a[M,K] @ b[K,N]` with symmetric per-tensor
+/// error.
+pub fn matmul_f32_via_s8_mmt4d(a: &[f32], b: &[f32], m: usize, k: usize,
+                               n: usize, m0: usize, n0: usize,
+                               k0: usize) -> Vec<f32> {
+    let (qa, pa) = quantize(a);
+    let (qb, pb) = quantize(b);
+    let acc = matmul_s8_via_mmt4d(&qa, &qb, m, k, n, m0, n0, k0);
+    dequantize_acc(&acc, pa, pb)
+}
+
+/// Quantized matmul with *pre-quantized* RHS (weights): the serving-path
+/// shape, where weights are quantized once at load time and only the
+/// activations pay the per-call quantization cost.
+pub fn matmul_prequant_rhs(a: &[f32], qb: &[i8], pb: QuantParams, m: usize,
+                           k: usize, n: usize, m0: usize, n0: usize,
+                           k0: usize) -> Vec<f32> {
+    let (qa, pa) = quantize(a);
+    let acc = matmul_s8_via_mmt4d(&qa, qb, m, k, n, m0, n0, k0);
+    dequantize_acc(&acc, pa, pb)
+}
+
+/// Pre-pack quantized weights into the mmt4d RHS layout `[N1,K1,N0,K0]`
+/// (IREE packs weights at compile time; the serving backend does it at
+/// load time).
+pub fn pack_quant_rhs(qb: &[i8], k: usize, n: usize, n0: usize,
+                      k0: usize) -> Vec<i8> {
+    let (n1, k1) = (n.div_ceil(n0), k.div_ceil(k0));
+    let mut dst = vec![0i8; n1 * k1 * n0 * k0];
+    pack::pack_rhs_i8(qb, k, n, n0, k0, &mut dst);
+    dst
+}
+
+/// Quantized matmul against an RHS already packed by [`pack_quant_rhs`]:
+/// only the activations are quantized and packed per call — the hot serving
+/// configuration.
+pub fn matmul_prepacked_rhs(a: &[f32], rhs4: &[i8], pb: QuantParams, m: usize,
+                            k: usize, n: usize, m0: usize, n0: usize,
+                            k0: usize) -> Vec<f32> {
+    let (qa, pa) = quantize(a);
+    let acc = matmul_qa_prepacked(&qa, rhs4, m, k, n, m0, n0, k0);
+    dequantize_acc(&acc, pa, pb)
+}
+
+/// Like [`matmul_prepacked_rhs`] but with a *per-row* activation scale:
+/// each LHS row is quantized against its own max, so a row's quantized
+/// image — and therefore its output — is independent of whatever other
+/// rows share the batch. This is the batching-invariance the serving
+/// backend needs (a request's logits must not change with its co-batched
+/// neighbours), and it also tightens the activation quantization error.
+pub fn matmul_prepacked_rhs_rowwise(a: &[f32], rhs4: &[i8], pb: QuantParams,
+                                    m: usize, k: usize, n: usize, m0: usize,
+                                    n0: usize, k0: usize) -> Vec<f32> {
+    let mut qa = vec![0i8; m * k];
+    let mut row_scales = Vec::with_capacity(m);
+    for i in 0..m {
+        let (qrow, p) = quantize(&a[i * k..][..k]);
+        qa[i * k..][..k].copy_from_slice(&qrow);
+        row_scales.push(p.scale);
+    }
+    let acc = matmul_qa_prepacked(&qa, rhs4, m, k, n, m0, n0, k0);
+    (0..m * n)
+        .map(|idx| acc[idx] as f32 * row_scales[idx / n] * pb.scale)
+        .collect()
+}
+
+/// Shared core: pre-quantized LHS x pre-packed RHS -> exact i32 accumulator.
+fn matmul_qa_prepacked(qa: &[i8], rhs4: &[i8], m: usize, k: usize, n: usize,
+                       m0: usize, n0: usize, k0: usize) -> Vec<i32> {
+    let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+    let mut lhs4 = vec![0i8; m1 * k1 * m0 * k0];
+    pack::pack_lhs_i8(qa, m, k, m0, k0, &mut lhs4);
+    let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+    let mut out4 = vec![0i32; p.out_len()];
+    super::mmt4d_s8s8s32(&lhs4, rhs4, &mut out4, &p);
+    let mut acc = vec![0i32; m * n];
+    pack::unpack_acc_i32(&out4, m1, n1, m0, n0, m, n, &mut acc);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(7);
+        let data = rng.f32_vec(512, 3.0);
+        let (q, p) = quantize(&data);
+        for (v, qi) in data.iter().zip(&q) {
+            let back = p.dequantize_one(*qi);
+            assert!((back - v).abs() <= p.scale * 0.5 + 1e-6,
+                    "{v} -> {qi} -> {back} (scale {})", p.scale);
+        }
+    }
+
+    #[test]
+    fn integer_valued_data_is_exact() {
+        // Data already on the integer grid (scale 1): quantization is
+        // lossless and the quantized matmul equals the exact product.
+        let (m, k, n) = (5, 16, 9);
+        let mut rng = Rng::new(3);
+        let mut a: Vec<f32> = (0..m * k).map(|_| rng.range(-126, 127) as f32).collect();
+        let mut b: Vec<f32> = (0..k * n).map(|_| rng.range(-126, 127) as f32).collect();
+        a[0] = 127.0; // pin max_abs so the scale is exactly 1.0
+        b[0] = 127.0;
+        let got = matmul_f32_via_s8_mmt4d(&a, &b, m, k, n, 7, 32, 1);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|l| a[i * k + l] * b[l * n + j]).sum();
+                assert_eq!(got[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn random_matmul_error_small_relative_to_magnitude() {
+        let (m, k, n) = (12, 64, 33);
+        let mut rng = Rng::new(11);
+        let a = rng.f32_vec(m * k, 1.0);
+        let b = rng.f32_vec(k * n, 1.0);
+        let got = matmul_f32_via_s8_mmt4d(&a, &b, m, k, n, 7, 32, 1);
+        // Error budget: each product off by O(scale), K of them per entry.
+        let tol = (k as f32).sqrt() * 0.05;
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|l| a[i * k + l] * b[l * n + j]).sum();
+                assert!((got[i * n + j] - want).abs() < tol,
+                        "({i},{j}): {} vs {want}", got[i * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn prequant_rhs_matches_full_quant() {
+        let (m, k, n) = (4, 24, 40);
+        let mut rng = Rng::new(19);
+        let a = rng.f32_vec(m * k, 0.8);
+        let b = rng.f32_vec(k * n, 0.8);
+        let full = matmul_f32_via_s8_mmt4d(&a, &b, m, k, n, 1, 64, 1);
+        let (qb, pb) = quantize(&b);
+        let pre = matmul_prequant_rhs(&a, &qb, pb, m, k, n, 1, 64, 1);
+        assert_eq!(full, pre, "weight pre-quantization must not change bits");
+        let rhs4 = pack_quant_rhs(&qb, k, n, 64, 1);
+        let packed = matmul_prepacked_rhs(&a, &rhs4, pb, m, k, n, 1, 64, 1);
+        assert_eq!(full, packed, "weight pre-packing must not change bits");
+    }
+
+    #[test]
+    fn rowwise_scales_make_rows_batch_invariant() {
+        // A row's output must be bit-identical whether it is batched with
+        // small neighbours or with a large-magnitude row that would dominate
+        // a per-tensor scale.
+        let (k, n) = (24, 40);
+        let mut rng = Rng::new(29);
+        let row = rng.f32_vec(k, 0.5);
+        let quiet = rng.f32_vec(k, 0.5);
+        let mut loud = rng.f32_vec(k, 0.5);
+        loud[0] = 100.0;
+        let b = rng.f32_vec(k * n, 0.8);
+        let (qb, pb) = quantize(&b);
+        let rhs4 = pack_quant_rhs(&qb, k, n, 32, 1);
+
+        let batch = |other: &[f32]| {
+            let mut a = row.clone();
+            a.extend_from_slice(other);
+            matmul_prepacked_rhs_rowwise(&a, &rhs4, pb, 2, k, n, 7, 32, 1)
+        };
+        let with_quiet = batch(&quiet);
+        let with_loud = batch(&loud);
+        assert_eq!(&with_quiet[..n], &with_loud[..n],
+                   "row 0's logits changed with its co-batched neighbour");
+    }
+
+    #[test]
+    fn zero_tensor_does_not_divide_by_zero() {
+        let (q, p) = quantize(&[0.0; 8]);
+        assert_eq!(q, vec![0i8; 8]);
+        assert_eq!(p.scale, 1.0);
+        assert_eq!(p.quantize_one(0.0), 0);
+    }
+
+    #[test]
+    fn f16_weights_quantize_like_f32() {
+        let mut rng = Rng::new(23);
+        let data = rng.f32_vec(64, 1.0);
+        let h: Vec<F16> = data.iter().map(|&v| F16::from_f32(v)).collect();
+        let wide: Vec<f32> = h.iter().map(|x| x.to_f32()).collect();
+        let (qh, ph) = quantize_f16(&h);
+        let (qw, pw) = quantize(&wide);
+        assert_eq!(qh, qw);
+        assert_eq!(ph, pw);
+    }
+}

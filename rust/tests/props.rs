@@ -124,6 +124,143 @@ fn prop_rvv_sim_matches_native_ukernel() {
     });
 }
 
+/// Int8 three-way agreement: the native s8s8s32 ukernel, the RVV-simulated
+/// int8 kernel and a naive i32 reference computed straight off the packed
+/// layout must be BIT-IDENTICAL for arbitrary packed problems — integer
+/// accumulation leaves no rounding to hide behind.
+#[test]
+fn prop_i8_native_rvv_sim_and_naive_all_bit_identical() {
+    use tenx_iree::kernels::{mmt4d_tile_rvv_i8, Mmt4dLayout};
+    use tenx_iree::rvv::{Rvv, RvvConfig};
+    forall(Config::default().cases(25), |g| {
+        let vlen = 128 << g.usize_in(0, 2); // 128/256/512
+        let m0 = g.usize_in(1, 8);
+        let n0 = vlen / 8;
+        let m1 = g.usize_in(1, 3);
+        let n1 = g.usize_in(1, 3);
+        let k1 = g.usize_in(1, 40);
+        let p = Mmt4dParams { m1, n1, k1, m0, n0, k0: 1, accumulate: false };
+        let mut rng = Rng::new((vlen + m0 * 11 + k1) as u64);
+        let lhs: Vec<i8> = (0..p.lhs_len()).map(|_| rng.range(-128, 128) as i8).collect();
+        let rhs: Vec<i8> = (0..p.rhs_len()).map(|_| rng.range(-128, 128) as i8).collect();
+
+        // 1. native ukernel
+        let mut native = vec![0i32; p.out_len()];
+        ukernel::mmt4d_s8s8s32(&lhs, &rhs, &mut native, &p);
+
+        // 2. naive i32 reference straight off the packed layout
+        let mut naive = vec![0i32; p.out_len()];
+        for i1 in 0..m1 {
+            for j1 in 0..n1 {
+                for i0 in 0..m0 {
+                    for j0 in 0..n0 {
+                        let mut acc = 0i32;
+                        for kk in 0..k1 {
+                            acc += lhs[(i1 * k1 + kk) * m0 + i0] as i32
+                                * rhs[(j1 * k1 + kk) * n0 + j0] as i32;
+                        }
+                        naive[((i1 * n1 + j1) * m0 + i0) * n0 + j0] = acc;
+                    }
+                }
+            }
+        }
+        prop_assert(native == naive, "native ukernel != naive i32 reference")?;
+
+        // 3. RVV-simulated kernel
+        let lhs_addr = 0x1000;
+        let rhs_addr = (lhs_addr + lhs.len() + 63) & !63;
+        let out_addr = (rhs_addr + rhs.len() + 63) & !63;
+        let mut mach = Rvv::new(RvvConfig::with_vlen(vlen),
+                                out_addr + native.len() * 4 + 65536);
+        mach.write_i8_slice(lhs_addr, &lhs);
+        mach.write_i8_slice(rhs_addr, &rhs);
+        mmt4d_tile_rvv_i8(&mut mach, &Mmt4dLayout {
+            lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+        });
+        let sim = mach.read_i32_slice(out_addr, native.len());
+        prop_assert(sim == native, "RVV-simulated i8 kernel != native")
+    });
+}
+
+/// Unpacked-level int8 agreement: pack -> s8s8s32 mmt4d -> unpack equals a
+/// naive i32 matmul for arbitrary shapes AND arbitrary tiles (padding
+/// contributes exact zeros).
+#[test]
+fn prop_i8_matmul_via_mmt4d_equals_naive() {
+    forall(Config::default().cases(60), |g| {
+        let m = g.usize_in(1, 18);
+        let k = g.usize_in(1, 24);
+        let n = g.usize_in(1, 40);
+        let m0 = g.usize_in(1, 8);
+        let n0 = g.usize_in(1, 17);
+        let k0 = g.usize_in(1, 3);
+        let mut rng = Rng::new((m * 17 + k * 3 + n * 29) as u64);
+        let a: Vec<i8> = (0..m * k).map(|_| rng.range(-128, 128) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| rng.range(-128, 128) as i8).collect();
+        let got = ukernel::matmul_s8_via_mmt4d(&a, &b, m, k, n, m0, n0, k0);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k)
+                    .map(|l| a[i * k + l] as i32 * b[l * n + j] as i32)
+                    .sum();
+                if got[i * n + j] != want {
+                    return Err(format!("({i},{j}): {} != {want}", got[i * n + j]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized f32 matmul error bound: every product's quantization error is
+/// at most scale_a*|b| / 2 + scale_b*|a| / 2 + scale_a*scale_b / 4, so per
+/// entry the K-term sum is bounded by K * sa * sb * 128 — checked for
+/// arbitrary shapes, tiles and data.
+#[test]
+fn prop_quantized_matmul_error_bounded() {
+    use tenx_iree::ukernel::quant;
+    forall(Config::default().cases(40), |g| {
+        let m = g.usize_in(1, 10);
+        let k = g.usize_in(1, 64);
+        let n = g.usize_in(1, 24);
+        let m0 = g.usize_in(1, 8);
+        let n0 = g.usize_in(1, 33);
+        let mut rng = Rng::new((m * 41 + k * 13 + n * 7) as u64);
+        let a = rng.f32_vec(m * k, 2.0);
+        let b = rng.f32_vec(k * n, 2.0);
+        let (_, pa) = quant::quantize(&a);
+        let (_, pb) = quant::quantize(&b);
+        let bound = k as f32 * pa.scale * pb.scale * 128.0 + 1e-5;
+        let got = quant::matmul_f32_via_s8_mmt4d(&a, &b, m, k, n, m0, n0, 1);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|l| a[i * k + l] * b[l * n + j]).sum();
+                let err = (got[i * n + j] - want).abs();
+                if err > bound {
+                    return Err(format!("({i},{j}): err {err} > bound {bound}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Selected int8 tiles never spill on the 32-register file, at any VLEN.
+#[test]
+fn prop_selected_i8_tiles_never_spill() {
+    use tenx_iree::ir::ElemType;
+    forall(Config::default().cases(50), |g| {
+        let vlen = 64 << g.usize_in(1, 4); // 128..1024
+        let phase = if g.bool() { Phase::Prefill } else { Phase::Decode };
+        let tile = target::select_tiles_for(Arch::Riscv64 { vlen_bits: vlen },
+                                            phase, ElemType::I8)
+            .map_err(|e| e.to_string())?;
+        prop_assert(tile.k0 == 1, "int8 riscv64 tiles use K0 = 1")?;
+        prop_assert(!target::tile_spills_i8(tile, vlen, 32),
+                    "selected int8 tile must fit the register file")
+    });
+}
+
 /// vreg pressure model is monotone in M0 and N0.
 #[test]
 fn prop_vreg_pressure_monotone() {

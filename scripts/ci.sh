@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Full local CI gate (documented in README.md):
+#   release build, Rust test suite, rustdoc, Python test suite.
+# Benches are smoke-run in quick mode when RUN_BENCHES=1.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps =="
+RUSTDOCFLAGS="${RUSTDOCFLAGS:-}" cargo doc --no-deps --quiet
+
+echo "== pytest (python mirror + model layer) =="
+if command -v pytest >/dev/null 2>&1; then
+    (cd python && python3 -m pytest tests -q)
+else
+    echo "pytest not installed; skipping the Python suite"
+fi
+
+if [ "${RUN_BENCHES:-0}" = "1" ]; then
+    echo "== offline benches (quick mode) =="
+    for b in table2_tokens_per_sec fig_kernel_cycles tile_sweep \
+             cache_missrate ukernel_native; do
+        TENX_BENCH_QUICK=1 cargo bench --bench "$b"
+    done
+fi
+
+echo "CI gate passed."
