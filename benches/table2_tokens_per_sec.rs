@@ -1,13 +1,17 @@
 //! **Table 2 + Figures 1 & 2** reproduction: Llama-3.2-1B tokens/sec for
 //! prefill/decode at 1 and 8 threads, Llama.cpp vs upstream IREE vs
 //! 10x-IREE, on the simulated MILK-V Jupiter — plus the per-thread series
-//! behind the figures and a VLEN sensitivity sweep.
+//! behind the figures, a VLEN sensitivity sweep, and **measured** 1/N-thread
+//! rows of the native taskpool-sharded kernels on this host (the real
+//! counterpart of the paper's 1- and 8-thread columns).
 //!
 //!     cargo bench --bench table2_tokens_per_sec
+//!     cargo bench --bench table2_tokens_per_sec -- --threads 8
 
+use tenx_iree::bench;
 use tenx_iree::experiments;
 use tenx_iree::kernels::System;
-use tenx_iree::perfmodel::{self, LlamaShapes};
+use tenx_iree::perfmodel::{self, LlamaShapes, ThreadModel};
 use tenx_iree::target::{Phase, TargetDesc};
 
 fn main() {
@@ -36,6 +40,38 @@ fn main() {
                 i8.tokens_per_sec / f16.tokens_per_sec,
                 if i8.compute_bound { "compute" } else { "dram" }
             );
+        }
+    }
+
+    // Measured native rows: the same Llama schedule through the real
+    // taskpool-sharded f16 kernels on THIS host, at 1 and N threads — the
+    // paper's thread columns, reproduced by execution instead of modeling.
+    // N sub-sampled per probe like the simulator's cost model (full K).
+    let threads = bench::threads_from_env();
+    let (n_cap, measured_prefill_tokens) = if bench::quick_mode() {
+        (512, 32)
+    } else {
+        (2048, 128)
+    };
+    println!("\n== measured native mmt4d serving on this host (f16, \
+              taskpool, N<= {n_cap} probe) ==");
+    println!("{:<8} {:>3} {:>12} {:>9} {:>15} {:>15}", "phase", "T",
+             "tok/s", "speedup", "implied serial", "Amdahl model");
+    for phase in [Phase::Prefill, Phase::Decode] {
+        let base = perfmodel::measure_native_phase(
+            phase, 1, &shapes, measured_prefill_tokens, n_cap);
+        let model = perfmodel::native_thread_model(phase);
+        println!("{:<8} {:>3} {:>12.3} {:>8.2}x {:>15} {:>14.2}x",
+                 phase.name(), 1, base.tokens_per_sec, 1.0, "-", 1.0);
+        if threads > 1 {
+            let multi = perfmodel::measure_native_phase(
+                phase, threads, &shapes, measured_prefill_tokens, n_cap);
+            let speedup = multi.tokens_per_sec / base.tokens_per_sec;
+            let implied = ThreadModel::implied(threads, speedup);
+            println!("{:<8} {:>3} {:>12.3} {:>8.2}x {:>14.0}% {:>14.2}x",
+                     phase.name(), threads, multi.tokens_per_sec, speedup,
+                     implied.serial_fraction * 100.0,
+                     model.speedup(threads));
         }
     }
 

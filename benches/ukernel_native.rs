@@ -4,14 +4,25 @@
 //! log in EXPERIMENTS.md tracks this bench.
 //!
 //!     cargo bench --bench ukernel_native
+//!     cargo bench --bench ukernel_native -- --threads 4   # threaded rows
+//!
+//! The `@NT` rows run the same kernels with the taskpool sharding the
+//! outer-tile grid over N workers (`TENX_THREADS` works too); a speedup
+//! summary against the matching `@1T` rows prints after the table.
 
 use tenx_iree::bench::{self, BenchResult};
+use tenx_iree::taskpool::Parallelism;
 use tenx_iree::ukernel::{self, pack, quant, Mmt4dParams};
 use tenx_iree::util::f16::F16;
 use tenx_iree::util::prng::Rng;
 
+/// f16 mmt4d row at a given pool width. `threads == 1` exercises the exact
+/// serial walk (`_par` with a serial config IS the serial kernel — the
+/// bit-identity invariant this PR property-tests), so serial and threaded
+/// rows share one setup and can't drift apart.
+#[allow(clippy::too_many_arguments)]
 fn bench_mmt4d(name: &str, m: usize, k: usize, n: usize, m0: usize, n0: usize,
-               k0: usize, results: &mut Vec<BenchResult>) {
+               k0: usize, threads: usize, results: &mut Vec<BenchResult>) {
     let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
     let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
     let mut rng = Rng::new(1);
@@ -24,14 +35,18 @@ fn bench_mmt4d(name: &str, m: usize, k: usize, n: usize, m0: usize, n0: usize,
     let mut out = vec![0.0f32; p.out_len()];
     let cfg = bench::config_from_env();
     let flops = p.flops() as f64;
+    let par = Parallelism::new(threads);
     results.push(bench::run(name, &cfg, Some(flops), || {
-        ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut out, &p);
+        ukernel::mmt4d_f16f16f32_par(&lhs, &rhs, &mut out, &p, par);
         std::hint::black_box(&out);
     }));
 }
 
+/// i8 (s8s8s32) mmt4d row at a given pool width; see [`bench_mmt4d`].
+#[allow(clippy::too_many_arguments)]
 fn bench_mmt4d_i8(name: &str, m: usize, k: usize, n: usize, m0: usize,
-                  n0: usize, k0: usize, results: &mut Vec<BenchResult>) {
+                  n0: usize, k0: usize, threads: usize,
+                  results: &mut Vec<BenchResult>) {
     let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
     let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
     let mut rng = Rng::new(3);
@@ -40,8 +55,9 @@ fn bench_mmt4d_i8(name: &str, m: usize, k: usize, n: usize, m0: usize,
     let mut out = vec![0i32; p.out_len()];
     let cfg = bench::config_from_env();
     let flops = p.flops() as f64;
+    let par = Parallelism::new(threads);
     results.push(bench::run(name, &cfg, Some(flops), || {
-        ukernel::mmt4d_s8s8s32(&lhs, &rhs, &mut out, &p);
+        ukernel::mmt4d_s8s8s32_par(&lhs, &rhs, &mut out, &p, par);
         std::hint::black_box(&out);
     }));
 }
@@ -81,32 +97,72 @@ fn bench_pack(name: &str, m: usize, k: usize, m0: usize, k0: usize,
 
 fn main() {
     let mut results = Vec::new();
-    // Paper tiles on Llama-1B decode/prefill shapes (scaled K for runtime).
+    // Paper tiles on Llama-1B decode/prefill shapes (scaled K for runtime);
+    // these baseline rows run the serial schedule (1 worker).
     bench_mmt4d("mmt4d prefill 6x32x1, 128x2048x2048", 128, 2048, 2048, 6, 32,
-                1, &mut results);
+                1, 1, &mut results);
     bench_mmt4d("mmt4d decode 1x64x1, 1x2048x2048", 1, 2048, 2048, 1, 64, 1,
-                &mut results);
-    bench_mmt4d("mmt4d prefill 6x32x1, 64x256x256 (tiny)", 64, 256, 256, 6,
-                32, 1, &mut results);
-    bench_mmt4d("mmt4d decode 1x64x1, 4x256x512 (tiny)", 4, 256, 512, 1, 64,
                 1, &mut results);
+    bench_mmt4d("mmt4d prefill 6x32x1, 64x256x256 (tiny)", 64, 256, 256, 6,
+                32, 1, 1, &mut results);
+    bench_mmt4d("mmt4d decode 1x64x1, 4x256x512 (tiny)", 4, 256, 512, 1, 64,
+                1, 1, &mut results);
     // Generic-path tile for comparison (k0 != 1 exercises the slow path).
-    bench_mmt4d("mmt4d generic 8x8x2, 64x256x256", 64, 256, 256, 8, 8, 2,
+    bench_mmt4d("mmt4d generic 8x8x2, 64x256x256", 64, 256, 256, 8, 8, 2, 1,
                 &mut results);
     bench_pack("pack_lhs f16 6x1, 128x2048", 128, 2048, 6, 1, &mut results);
     bench_pack("pack_lhs f16 1x1, 1x2048", 1, 2048, 1, 1, &mut results);
     // Quantized path: raw s8s8s32 kernels on the int8 tiles, then the full
     // quantize->pack->mmt4d->unpack->dequantize serving shape.
     bench_mmt4d_i8("mmt4d i8 prefill 7x32x1, 128x2048x2048", 128, 2048, 2048,
-                   7, 32, 1, &mut results);
+                   7, 32, 1, 1, &mut results);
     bench_mmt4d_i8("mmt4d i8 decode 1x128x1, 1x2048x2048", 1, 2048, 2048, 1,
-                   128, 1, &mut results);
+                   128, 1, 1, &mut results);
     bench_mmt4d_i8("mmt4d i8 prefill 7x32x1, 64x256x256 (tiny)", 64, 256,
-                   256, 7, 32, 1, &mut results);
+                   256, 7, 32, 1, 1, &mut results);
     bench_quantized_e2e("quantized e2e 7x32x1, 128x2048x2048", 128, 2048,
                         2048, 7, 32, 1, &mut results);
     bench_quantized_e2e("quantized e2e 1x128x1, 1x2048x2048", 1, 2048, 2048,
                         1, 128, 1, &mut results);
+
+    // Threaded rows: the same kernels with the outer-tile grid sharded over
+    // the taskpool (Table 2's 8-thread column, measured on this host).
+    // `--threads N` / TENX_THREADS picks N; default min(4, cores).
+    let threads = bench::threads_from_env();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    if threads > 1 {
+        let cases: [(&str, usize, usize, usize, usize, usize, bool); 3] = [
+            ("mmt4d prefill 6x32x1, 128x2048x2048", 128, 2048, 2048, 6, 32,
+             false),
+            ("mmt4d decode 1x64x1, 8x2048x2048", 8, 2048, 2048, 1, 64,
+             false),
+            ("mmt4d i8 prefill 7x32x1, 128x2048x2048", 128, 2048, 2048, 7,
+             32, true),
+        ];
+        for (name, m, k, n, m0, n0, int8) in cases {
+            let base = results.len();
+            for t in [1, threads] {
+                let row = format!("{name} @{t}T");
+                if int8 {
+                    bench_mmt4d_i8(&row, m, k, n, m0, n0, 1, t, &mut results);
+                } else {
+                    bench_mmt4d(&row, m, k, n, m0, n0, 1, t, &mut results);
+                }
+            }
+            let ratio = results[base].secs.p50 / results[base + 1].secs.p50;
+            speedups.push((name.to_string(), ratio));
+        }
+    }
+
     println!("{}", bench::render_table("native ukernel throughput", &results,
                                        "FLOP/s|elem/s"));
+    if threads > 1 {
+        println!("threading: {threads}T vs 1T GFLOP/s (p50)");
+        for (name, s) in &speedups {
+            println!("  {name}: {s:.2}x");
+        }
+    } else {
+        println!("threaded rows skipped (--threads 1); pass --threads N or \
+                  set TENX_THREADS");
+    }
 }

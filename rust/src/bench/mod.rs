@@ -126,6 +126,34 @@ pub fn quick_mode() -> bool {
     std::env::var("TENX_BENCH_QUICK").is_ok()
 }
 
+/// Worker-thread count for threaded bench rows: `--threads N|auto` on the
+/// bench's argv (`cargo bench --bench x -- --threads 4`), else the
+/// `TENX_THREADS` env var, else min(4, available cores). Malformed values
+/// abort the bench rather than silently running a different configuration.
+pub fn threads_from_env() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    let parse = |source: &str, v: &str| {
+        crate::cliargs::parse_thread_count(v)
+            .unwrap_or_else(|e| panic!("{source}: {e}"))
+    };
+    for (i, a) in args.iter().enumerate() {
+        if a == "--threads" {
+            let v = args.get(i + 1).expect("--threads needs a value");
+            return parse("--threads", v.as_str());
+        }
+        if let Some(v) = a.strip_prefix("--threads=") {
+            return parse("--threads", v);
+        }
+    }
+    if let Ok(v) = std::env::var("TENX_THREADS") {
+        return parse("TENX_THREADS", &v);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
+}
+
 pub fn config_from_env() -> BenchConfig {
     if quick_mode() {
         BenchConfig::quick()

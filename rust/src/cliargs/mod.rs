@@ -133,6 +133,21 @@ impl Command {
     }
 }
 
+/// Parse a `--threads` value: a positive integer, or `auto` for one worker
+/// per available core. Shared by `tenx serve` and the bench binaries.
+pub fn parse_thread_count(s: &str) -> Result<usize, String> {
+    if s == "auto" {
+        return Ok(std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1));
+    }
+    match s.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(format!("invalid thread count {s:?} (want a positive \
+                          integer or \"auto\")")),
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Matches {
     values: BTreeMap<String, String>,
@@ -221,6 +236,16 @@ mod tests {
         let e = cmd().parse(&argv(&["--help"])).unwrap_err();
         assert!(e.contains("USAGE"));
         assert!(e.contains("--threads"));
+    }
+
+    #[test]
+    fn thread_counts_parse() {
+        assert_eq!(parse_thread_count("1"), Ok(1));
+        assert_eq!(parse_thread_count("8"), Ok(8));
+        assert!(parse_thread_count("auto").unwrap() >= 1);
+        assert!(parse_thread_count("0").is_err());
+        assert!(parse_thread_count("-2").is_err());
+        assert!(parse_thread_count("many").is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use super::backend::{BackendDims, ModelBackend};
 use crate::config::manifest::Tile;
 use crate::ir::ElemType;
 use crate::target::{select_tiles_for, Arch, Phase};
+use crate::taskpool::Parallelism;
 use crate::ukernel::{self, quant};
 use crate::util::f16::F16;
 use crate::util::prng::Rng;
@@ -57,6 +58,10 @@ pub struct NativeBackend {
     dims: BackendDims,
     d_model: usize,
     precision: Precision,
+    /// Worker-pool width the kernel calls run with (default: serial).
+    /// Parallel and serial execution are bit-identical, so this only
+    /// changes latency, never tokens.
+    parallelism: Parallelism,
     /// Token embedding [V, D] f16.
     embed: Vec<F16>,
     /// LM head [D, V] f16 (the f16 path's RHS; empty in Int8 mode, which
@@ -134,6 +139,7 @@ impl NativeBackend {
             dims: BackendDims { batch, prefill_seq, max_seq, vocab },
             d_model,
             precision,
+            parallelism: Parallelism::serial(),
             embed,
             head,
             head_scale,
@@ -149,6 +155,13 @@ impl NativeBackend {
     /// Which numeric path this backend serves with.
     pub fn precision(&self) -> Precision {
         self.precision
+    }
+
+    /// Serve with a worker pool of `par.threads` threads (`serve --threads`).
+    /// Builder-style so existing constructors stay source-compatible.
+    pub fn with_parallelism(mut self, par: Parallelism) -> NativeBackend {
+        self.parallelism = par;
+        self
     }
 
     /// The token this model's logits favour after `prev` (same convention
@@ -173,8 +186,9 @@ impl NativeBackend {
                     let row = &self.embed[(t as usize % self.dims.vocab) * d..][..d];
                     lhs.extend_from_slice(row);
                 }
-                ukernel::matmul_f16_via_mmt4d(&lhs, &self.head, rows, d, v,
-                                              tile.m0, tile.n0, tile.k0)
+                ukernel::matmul_f16_via_mmt4d_par(&lhs, &self.head, rows, d,
+                                                  v, tile.m0, tile.n0,
+                                                  tile.k0, self.parallelism)
             }
             Precision::Int8 => {
                 let mut lhs = Vec::with_capacity(rows * d);
@@ -188,10 +202,11 @@ impl NativeBackend {
                 };
                 // Row-wise activation scales: a request's logits must not
                 // depend on which other requests share the batch.
-                quant::matmul_prepacked_rhs_rowwise(&lhs, rhs4,
-                                                    self.head_scale, rows, d,
-                                                    v, tile.m0, tile.n0,
-                                                    tile.k0)
+                quant::matmul_prepacked_rhs_rowwise_par(&lhs, rhs4,
+                                                        self.head_scale,
+                                                        rows, d, v, tile.m0,
+                                                        tile.n0, tile.k0,
+                                                        self.parallelism)
             }
         }
     }
@@ -314,6 +329,25 @@ mod tests {
         for i in 0..32 {
             assert_eq!(argmax(&lf[i * v..][..v]), argmax(&lq[i * v..][..v]),
                        "row {i}");
+        }
+    }
+
+    #[test]
+    fn threaded_backend_logits_bit_identical_to_serial() {
+        // The taskpool guarantee surfaced at the serving boundary: a pool
+        // of any width computes the same logits bits as serial, for both
+        // precisions.
+        for p in [Precision::F16, Precision::Int8] {
+            let mut serial = backend(p);
+            let mut pooled = backend(p).with_parallelism(Parallelism::new(4));
+            let toks: Vec<i32> = (0..32).collect();
+            assert_eq!(serial.prefill(&toks).unwrap(),
+                       pooled.prefill(&toks).unwrap(), "{p:?} prefill");
+            serial.commit_slots(&[0, 1]).unwrap();
+            pooled.commit_slots(&[0, 1]).unwrap();
+            assert_eq!(serial.decode(&[9, 8, 7, 6], &[8; 4]).unwrap(),
+                       pooled.decode(&[9, 8, 7, 6], &[8; 4]).unwrap(),
+                       "{p:?} decode");
         }
     }
 

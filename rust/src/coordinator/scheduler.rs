@@ -102,9 +102,11 @@ impl<B: ModelBackend> Scheduler<B> {
             return Ok(());
         }
         let n = free.len().min(self.pending.len());
+        let admit_t = Instant::now();
         let admitted: Vec<(usize, Request, RequestTiming)> = (0..n)
             .map(|i| {
                 let (req, t) = self.pending.pop_front().unwrap();
+                self.metrics.queue_wait.observe(admit_t - t.submitted);
                 (free[i], req, t)
             })
             .collect();
@@ -347,6 +349,21 @@ mod tests {
         assert_eq!(done[0].finish, FinishReason::CacheFull);
         // pos goes 8..11: tokens at 8,9,10,11 -> but pos+1 >= 12 stops at 11
         assert!(done[0].tokens.len() <= 4);
+    }
+
+    #[test]
+    fn queue_wait_observed_per_admitted_request() {
+        let mut s = sched(2);
+        for id in 0..3 {
+            assert!(s.submit(mk_req(id, vec![1], 1)));
+        }
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        // Every admitted request contributes exactly one queue-wait sample,
+        // across both admission waves (batch 2, 3 requests).
+        assert_eq!(s.metrics.queue_wait.count(), 3);
+        assert_eq!(s.take_finished().len(), 3);
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! Every program computes real numerics on the simulator's memory and is
 //! validated against the native ukernels / naive oracle, so the cycle and
 //! cache statistics come from semantically correct executions.
+//!
+//! The simulator is a single core, so these programs always describe ONE
+//! worker's instruction stream. Multi-threaded execution lives a level up:
+//! `taskpool` shards the outer-tile grid across workers on the native path
+//! (each worker running the per-tile body these programs mirror), and
+//! `perfmodel` extends one simulated core to N via the multicore roofline
+//! (`phase_perf`) and the measured host model (`perfmodel::threading`).
 
 pub mod baselines;
 pub mod mmt4d_rvv;

@@ -9,8 +9,9 @@
 //!   `target`), the microkernel library (`ukernel`, including the int8
 //!   s8s8s32 quantized path and its `quant` shim), the simulated RISC-V
 //!   testbed (`rvv`, `cachesim`, `kernels`), the performance model
-//!   (`perfmodel`), the serving runtime (`runtime`, `coordinator`) and the
-//!   evaluation harness (`llm`).
+//!   (`perfmodel`), the IREE-style thread-pool task system that shards the
+//!   mmt4d tile grid across cores (`taskpool`), the serving runtime
+//!   (`runtime`, `coordinator`) and the evaluation harness (`llm`).
 //!
 //! See docs/ARCHITECTURE.md for the module-by-module map onto the paper's
 //! pipeline and docs/BENCHMARKS.md for the bench ↔ figure index.
@@ -31,5 +32,6 @@ pub mod propcheck;
 pub mod runtime;
 pub mod rvv;
 pub mod target;
+pub mod taskpool;
 pub mod ukernel;
 pub mod util;

@@ -3,7 +3,7 @@
 
 use std::path::PathBuf;
 
-use tenx_iree::cliargs::Command;
+use tenx_iree::cliargs::{parse_thread_count, Command};
 use tenx_iree::coordinator::{self, EngineBackend, NativeBackend, Precision};
 use tenx_iree::ir::{build_matmul_func, ElemType, Module};
 use tenx_iree::kernels::System;
@@ -12,6 +12,7 @@ use tenx_iree::passes::PassManager;
 use tenx_iree::perfmodel::{self, LlamaShapes};
 use tenx_iree::runtime::EnginePath;
 use tenx_iree::target::{Phase, TargetDesc};
+use tenx_iree::taskpool::Parallelism;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -29,7 +30,7 @@ fn usage() -> String {
     "tenx — RISC-V mmt4d microkernel support for an IREE-like stack\n\n\
      USAGE:\n  tenx <COMMAND> [OPTIONS]\n\nCOMMANDS:\n  \
      serve      serve with continuous batching (artifacts, or --native \
-     [--precision f16|i8])\n  \
+     [--precision f16|i8] [--threads N])\n  \
      compile    run the materialize-encoding pipeline on a matmul and print IR\n  \
      table1     accuracy-equivalence eval (reference vs mmt4d path)\n  \
      table2     modeled tokens/sec on the simulated MILK-V Jupiter\n  \
@@ -65,6 +66,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("max-new-tokens", "16", "decode budget per request")
         .opt("temperature", "0", "sampling temperature (0 = greedy)")
         .opt("precision", "f16", "native numeric path: f16 | i8 (quantized)")
+        .opt("threads", "1",
+             "kernel worker threads for the native backend (N or \"auto\")")
+        .opt("queue-capacity", "64",
+             "pending-request queue bound (submissions beyond it are rejected)")
         .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
@@ -72,6 +77,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let n: usize = m.usize("requests")?;
     let max_new: usize = m.usize("max-new-tokens")?;
     let temp: f32 = m.parse("temperature")?;
+    let threads = parse_thread_count(m.str("threads"))?;
+    let queue_capacity: usize = m.usize("queue-capacity")?;
     let path = if m.flag("baseline") { EnginePath::Baseline } else { EnginePath::Mmt4d };
 
     let (handle, vocab) = if m.flag("native") {
@@ -83,18 +90,28 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         let precision = Precision::parse(m.str("precision"))
             .ok_or_else(|| format!("unknown precision {:?}", m.str("precision")))?;
         let vocab = 512;
-        eprintln!("serving the native mmt4d backend ({} path)...",
-                  precision.name());
-        let backend = NativeBackend::new(4, 16, 64, vocab, 64, precision, 42);
-        (coordinator::server::start(backend, 64, 42), vocab)
+        eprintln!("serving the native mmt4d backend ({} path, {threads} \
+                   kernel thread{})...",
+                  precision.name(), if threads == 1 { "" } else { "s" });
+        let backend = NativeBackend::new(4, 16, 64, vocab, 64, precision, 42)
+            .with_parallelism(Parallelism::new(threads));
+        let handle = coordinator::server::start(backend, queue_capacity, 42);
+        handle.metrics.compute_threads.add(threads as u64);
+        (handle, vocab)
     } else {
+        if threads != 1 {
+            eprintln!("note: --threads applies to the native backend; the \
+                       artifact engine executes via PJRT");
+        }
         eprintln!("loading artifacts from {dir:?} ({path:?})...");
         let manifest = tenx_iree::config::Manifest::load(&dir).map_err(err_str)?;
         let vocab = manifest.model.vocab_size;
         let dir2 = dir.clone();
         let handle = coordinator::server::start_with(
-            move || EngineBackend::load(&dir2, path), 64, 42)
+            move || EngineBackend::load(&dir2, path), queue_capacity, 42)
             .map_err(err_str)?;
+        // PJRT execution ignores the taskpool; record the serial truth.
+        handle.metrics.compute_threads.add(1);
         (handle, vocab)
     };
     let tok = Tokenizer::new(vocab);

@@ -102,18 +102,29 @@ pub struct ServingMetrics {
     pub tokens_prefilled: Counter,
     pub tokens_decoded: Counter,
     pub queue_rejections: Counter,
+    /// Time a request spends in the pending queue before its prefill batch
+    /// is admitted (submit -> admission).
+    pub queue_wait: Histogram,
     pub prefill_latency: Histogram,
     pub decode_step_latency: Histogram,
     pub ttft: Histogram,
     pub e2e_latency: Histogram,
     /// Padded-out slots across decode steps (batching efficiency).
     pub idle_slot_steps: Counter,
+    /// Kernel worker-pool width the backend was configured with (1 =
+    /// serial). Set once at server start; 0 means "not recorded".
+    pub compute_threads: Counter,
     pub started: Mutex<Option<std::time::Instant>>,
+    /// Taskpool counter snapshot at `mark_started`, so the report shows
+    /// this server's pool activity rather than process-wide totals.
+    pool_baseline: Mutex<Option<crate::taskpool::PoolStats>>,
 }
 
 impl ServingMetrics {
     pub fn mark_started(&self) {
         *self.started.lock().unwrap() = Some(std::time::Instant::now());
+        *self.pool_baseline.lock().unwrap() =
+            Some(crate::taskpool::pool_stats());
     }
 
     pub fn report(&self) -> String {
@@ -142,9 +153,26 @@ impl ServingMetrics {
             self.decode_step_latency.mean(), self.idle_slot_steps.get()
         ));
         s.push_str(&format!(
+            "queue: mean wait {:?} p90 {:?}\n",
+            self.queue_wait.mean(), self.queue_wait.quantile(0.9)
+        ));
+        s.push_str(&format!(
             "ttft: mean {:?} p90 {:?}\ne2e: mean {:?} p90 {:?}\n",
             self.ttft.mean(), self.ttft.quantile(0.9),
             self.e2e_latency.mean(), self.e2e_latency.quantile(0.9)
+        ));
+        // Scope the process-global pool counters to this server's lifetime
+        // (other backends/benches in the same process don't pollute it).
+        let base = self.pool_baseline.lock().unwrap().unwrap_or_default();
+        let pool = crate::taskpool::pool_stats().delta_since(base);
+        let threads = match self.compute_threads.get() {
+            0 => "not recorded".to_string(),
+            t => format!("{t} configured"),
+        };
+        s.push_str(&format!(
+            "compute: threads {threads}; taskpool {} regions, {} tile \
+             tasks, {:.0}% worker occupancy\n",
+            pool.regions, pool.tasks, pool.occupancy() * 100.0
         ));
         if elapsed > 0.0 {
             s.push_str(&format!(
@@ -186,8 +214,16 @@ mod tests {
         m.mark_started();
         m.requests_submitted.inc();
         m.tokens_decoded.add(10);
+        m.queue_wait.observe(Duration::from_millis(2));
+        m.compute_threads.add(4);
         let r = m.report();
         assert!(r.contains("requests: 1 submitted"));
         assert!(r.contains("decode:"));
+        assert!(r.contains("queue: mean wait"));
+        assert!(r.contains("compute: threads 4 configured"));
+        assert!(r.contains("worker occupancy"));
+        // the 0 sentinel is reported as such, not silently shown as 1
+        let unset = ServingMetrics::default();
+        assert!(unset.report().contains("threads not recorded"));
     }
 }

@@ -16,10 +16,18 @@
 //! [`measure_matmul_quant`] / [`phase_perf_quant`] price the same schedule
 //! on the int8 (s8s8s32) kernels: byte-dense weights halve the per-token
 //! DRAM stream, which is where quantized serving wins at scale.
+//!
+//! [`threading`] is the *measured* counterpart for the native host path:
+//! wall-clock tokens/sec of the taskpool-sharded kernels at 1..N workers,
+//! plus an Amdahl [`ThreadModel`] over the pipeline's pack/reduction serial
+//! fractions — the machinery behind the bench's measured 1/8-thread rows.
 
 pub mod schedule;
+pub mod threading;
 
 pub use schedule::{LlamaShapes, MatmulShape};
+pub use threading::{measure_native_phase, native_thread_model,
+                    NativePhasePerf, ThreadModel};
 
 use crate::cachesim::CacheHierarchy;
 use crate::kernels::{self, System};

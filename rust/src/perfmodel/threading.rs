@@ -1,0 +1,224 @@
+//! Multi-thread phase model for the **native** kernel path — the measured
+//! companion to the simulated multicore roofline in [`super`].
+//!
+//! The simulated model (`phase_perf`) prices the MILK-V Jupiter; this
+//! module prices *this host* running the actual `taskpool`-sharded kernels,
+//! which is what lets `table2_tokens_per_sec` print measured 1/N-thread
+//! rows next to the paper's measured 1/8-thread rows.
+//!
+//! Two pieces:
+//!
+//! * [`ThreadModel`] — Amdahl's law over the pipeline's serial fraction.
+//!   In the threaded pipeline the packs, the quantize loop and the mmt4d
+//!   tile grid all shard across workers; what stays serial is the
+//!   accumulator unpack/dequantize epilogue (a reduction-shaped rewrite of
+//!   the output) plus per-region pool spawn/join. Those are the
+//!   "pack/reduction serial fractions" the speedup curve saturates on.
+//! * [`measure_native_phase`] — wall-clock tokens/sec of one phase of a
+//!   Llama-shaped schedule through `matmul_f16_via_mmt4d_par` at a given
+//!   worker count, sub-sampled in N (full K) exactly like the simulator's
+//!   cost probes and extrapolated linearly in the tiled dimension.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use super::LlamaShapes;
+use crate::bench::{self, BenchConfig};
+use crate::target::Phase;
+use crate::taskpool::Parallelism;
+use crate::ukernel;
+use crate::util::f16::F16;
+use crate::util::prng::Rng;
+
+/// Amdahl-style per-thread speedup model: a `serial_fraction` of each
+/// parallel region's work cannot shard (unpack/dequantize epilogue, pool
+/// spawn/join), the rest scales with workers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThreadModel {
+    /// Fraction of one region's serial runtime that stays serial (0..=1).
+    pub serial_fraction: f64,
+}
+
+impl ThreadModel {
+    /// Build a model; the fraction is clamped into `[0, 1]`.
+    pub fn new(serial_fraction: f64) -> ThreadModel {
+        ThreadModel { serial_fraction: serial_fraction.clamp(0.0, 1.0) }
+    }
+
+    /// Modeled speedup at `threads` workers:
+    /// `1 / (s + (1 - s) / threads)`.
+    pub fn speedup(&self, threads: usize) -> f64 {
+        let t = threads.max(1) as f64;
+        1.0 / (self.serial_fraction + (1.0 - self.serial_fraction) / t)
+    }
+
+    /// The saturation ceiling (`threads -> inf`): `1 / s`.
+    pub fn max_speedup(&self) -> f64 {
+        if self.serial_fraction <= 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.serial_fraction
+        }
+    }
+
+    /// Invert Amdahl: the serial fraction implied by observing `speedup`
+    /// at `threads` workers. The diagnostic the bench prints next to each
+    /// measured row ("how much of the pipeline behaved serially").
+    pub fn implied(threads: usize, speedup: f64) -> ThreadModel {
+        let t = threads.max(1) as f64;
+        if t <= 1.0 || speedup <= 0.0 {
+            return ThreadModel::new(0.0);
+        }
+        ThreadModel::new((t / speedup - 1.0) / (t - 1.0))
+    }
+}
+
+/// Expected serial fractions of the native pipeline, from the byte/flop
+/// shape of each phase: the serial epilogue moves the `M x N` accumulator
+/// once, while the sharded mmt4d does `M x K x N` MACs — so the fraction
+/// shrinks with K and is larger for decode (tiny M deflates the parallel
+/// share but not the per-region spawn cost, folded in as a constant).
+pub fn native_thread_model(phase: Phase) -> ThreadModel {
+    match phase {
+        // Large-M prefill: epilogue ~ 1/K of the MACs, plus ~2% observed
+        // pool overhead on the bench host.
+        Phase::Prefill => ThreadModel::new(0.03),
+        // Decode: same 1/K epilogue but far fewer tiles per region, so
+        // spawn/join and the final unpack weigh ~3x heavier.
+        Phase::Decode => ThreadModel::new(0.10),
+    }
+}
+
+/// One measured native row: tokens/sec of a phase on this host.
+#[derive(Debug, Clone, Copy)]
+pub struct NativePhasePerf {
+    pub phase: Phase,
+    pub threads: usize,
+    pub tokens_per_sec: f64,
+    /// Wall time of one full forward pass (extrapolated).
+    pub pass_seconds: f64,
+}
+
+/// Measure one phase of `shapes` through the threaded f16 pipeline.
+///
+/// Every distinct weight matmul is timed once (multiplicities folded in),
+/// with N clamped to `n_cap` columns and the time extrapolated linearly in
+/// the N tile count — the same full-K sub-sampling the simulator's cost
+/// probes use, so the lm_head's 128k columns don't need a 500 MB buffer.
+/// Each probe is the p50 of three timed passes after a warm pass (via
+/// [`bench::run`]), so one scheduler preemption can't skew a row.
+/// Uses the paper's VLEN=256 host tiles (prefill 6x32x1, decode 1x64x1).
+pub fn measure_native_phase(phase: Phase, threads: usize,
+                            shapes: &LlamaShapes, prefill_tokens: usize,
+                            n_cap: usize) -> NativePhasePerf {
+    let (m, tile_m0, tile_n0) = match phase {
+        Phase::Prefill => (prefill_tokens.max(1), 6, 32),
+        Phase::Decode => (1, 1, 64),
+    };
+    let par = Parallelism::new(threads);
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 3,
+        target_time: Duration::ZERO,
+    };
+
+    // Group identical (k, n) shapes: time one probe, multiply by count.
+    let mut groups: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for mm in shapes.weight_matmuls() {
+        *groups.entry((mm.k, mm.n)).or_insert(0) += 1;
+    }
+
+    let mut pass_seconds = 0.0;
+    for (&(k, n), &count) in &groups {
+        let n_probe = n.min(n_cap.max(tile_n0));
+        let mut rng = Rng::new((k * 31 + n) as u64);
+        let a: Vec<F16> = (0..m * k)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let b: Vec<F16> = (0..k * n_probe)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let r = bench::run("native probe", &cfg, None, || {
+            std::hint::black_box(ukernel::matmul_f16_via_mmt4d_par(
+                &a, &b, m, k, n_probe, tile_m0, tile_n0, 1, par));
+        });
+        let scale = n.div_ceil(tile_n0) as f64 / n_probe.div_ceil(tile_n0) as f64;
+        pass_seconds += r.secs.p50 * scale * count as f64;
+    }
+
+    let tokens = match phase {
+        Phase::Prefill => prefill_tokens.max(1) as f64,
+        Phase::Decode => 1.0,
+    };
+    NativePhasePerf {
+        phase,
+        threads,
+        tokens_per_sec: tokens / pass_seconds,
+        pass_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_is_amdahl_shaped() {
+        let m = ThreadModel::new(0.2);
+        assert_eq!(m.speedup(1), 1.0);
+        // monotone non-decreasing in threads
+        let mut prev = 0.0;
+        for t in 1..=32 {
+            let s = m.speedup(t);
+            assert!(s >= prev, "speedup dipped at {t}");
+            prev = s;
+        }
+        // bounded by the saturation ceiling
+        assert!(m.speedup(1024) < m.max_speedup());
+        assert!((m.max_speedup() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fully_parallel_model_is_linear() {
+        let m = ThreadModel::new(0.0);
+        assert_eq!(m.speedup(8), 8.0);
+        assert_eq!(m.max_speedup(), f64::INFINITY);
+    }
+
+    #[test]
+    fn implied_inverts_speedup() {
+        for s in [0.05, 0.2, 0.5] {
+            let m = ThreadModel::new(s);
+            let got = ThreadModel::implied(8, m.speedup(8));
+            assert!((got.serial_fraction - s).abs() < 1e-9,
+                    "{s}: implied {}", got.serial_fraction);
+        }
+        // degenerate cases clamp instead of dividing by zero
+        assert_eq!(ThreadModel::implied(1, 1.0).serial_fraction, 0.0);
+        assert_eq!(ThreadModel::implied(4, 0.0).serial_fraction, 0.0);
+        // super-linear observations clamp at 0
+        assert_eq!(ThreadModel::implied(4, 8.0).serial_fraction, 0.0);
+    }
+
+    #[test]
+    fn clamped_fractions() {
+        assert_eq!(ThreadModel::new(-0.5).serial_fraction, 0.0);
+        assert_eq!(ThreadModel::new(1.5).serial_fraction, 1.0);
+        assert!(native_thread_model(Phase::Decode).serial_fraction
+                > native_thread_model(Phase::Prefill).serial_fraction);
+    }
+
+    #[test]
+    fn measured_native_phase_smoke() {
+        // Tiny model, tiny N cap: finishes in milliseconds and must report
+        // a positive, finite rate for both phases.
+        let shapes = LlamaShapes::tiny();
+        for phase in [Phase::Prefill, Phase::Decode] {
+            let r = measure_native_phase(phase, 1, &shapes, 4, 64);
+            assert!(r.tokens_per_sec.is_finite() && r.tokens_per_sec > 0.0,
+                    "{phase:?}: {r:?}");
+            assert!(r.pass_seconds > 0.0);
+        }
+    }
+}

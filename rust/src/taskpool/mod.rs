@@ -1,0 +1,367 @@
+//! Thread-pool task system for the native kernel path (std-only).
+//!
+//! IREE's runtime executes a dispatch by slicing its iteration space into
+//! tiles and handing them to a worker pool (`iree_task_dispatch_shard_t`);
+//! workers pull shards off a shared grid cursor so fast cores steal work
+//! from slow ones. This module is that design reduced to its load-bearing
+//! core for the mmt4d path:
+//!
+//! * [`run_tasks`] — N independent tasks, a pool of scoped worker threads,
+//!   one shared `AtomicUsize` grid cursor. Each `fetch_add` hands a task
+//!   index to exactly one worker, which is both the work-stealing schedule
+//!   (idle workers keep pulling) and the safety argument for
+//!   [`parallel_tiles`] below.
+//! * [`parallel_tiles`] / [`parallel_tiles2`] — shard a `&mut [T]` (or a
+//!   pair) into fixed-size disjoint chunks, one per task: the shape of
+//!   every consumer here (mmt4d outer-tile grid, pack row-blocks, per-row
+//!   quantization), which keeps all `unsafe` inside this module.
+//!
+//! Parallel mmt4d output is **bit-identical** to serial by construction:
+//! sharding is over the M1×N1 *outer* tile grid, each output tile is owned
+//! by exactly one task, and the per-tile K-loop (the only place floating
+//! point accumulates) is the same code in both paths — no cross-thread
+//! reductions exist. `rust/tests/props.rs` pins this for f16 and i8.
+//!
+//! Scoped threads are spawned per region rather than parked in a persistent
+//! pool: spawn cost (~10s of µs) is noise next to the matmuls worth
+//! parallelizing, and [`Parallelism::threads_for`] keeps tiny grids serial.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How much worker parallelism a kernel call may use.
+///
+/// Threaded from the CLI (`serve --threads`, bench `--threads`) through the
+/// serving backend down to the ukernel library. `threads == 1` is exact
+/// serial execution (no pool, no atomics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Worker count ceiling (>= 1).
+    pub threads: usize,
+}
+
+impl Parallelism {
+    /// Serial execution — the default everywhere a config isn't threaded in.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// A pool of up to `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Parallelism {
+        Parallelism { threads: threads.max(1) }
+    }
+
+    /// One worker per available core (`std::thread::available_parallelism`).
+    pub fn auto() -> Parallelism {
+        Parallelism::new(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+
+    /// Effective worker count for a region of `n_tasks` tasks totalling
+    /// `work` units (FLOPs / elements): never more workers than tasks, and
+    /// serial when the whole region is below [`MIN_PARALLEL_WORK`] — tiny
+    /// serving matmuls should not pay thread-spawn latency.
+    pub fn threads_for(&self, n_tasks: usize, work: u64) -> usize {
+        if self.threads <= 1 || n_tasks <= 1 || work < MIN_PARALLEL_WORK {
+            1
+        } else {
+            self.threads.min(n_tasks)
+        }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::serial()
+    }
+}
+
+/// Below this much total work (FLOPs for mmt4d, elements for pack), a
+/// region runs serially even when a pool is configured: ~100 µs of compute
+/// at a few GFLOP/s, the break-even against spawning scoped workers.
+pub const MIN_PARALLEL_WORK: u64 = 1 << 18;
+
+/// Global pool occupancy counters (process-wide, monotone): the
+/// observability hook `ServingMetrics::report` reads. Relaxed atomics —
+/// these are statistics, not synchronization.
+static REGIONS: AtomicUsize = AtomicUsize::new(0);
+static TASKS: AtomicUsize = AtomicUsize::new(0);
+static WORKER_TURNS: AtomicUsize = AtomicUsize::new(0);
+static WORKER_SLOTS: AtomicUsize = AtomicUsize::new(0);
+
+/// Snapshot of the pool counters since process start.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel regions executed (multi-worker `run_tasks` calls).
+    pub regions: usize,
+    /// Tile tasks executed inside those regions.
+    pub tasks: usize,
+    /// (region, worker) pairs where the worker ran at least one task.
+    pub worker_turns: usize,
+    /// (region, worker) pairs spawned in total.
+    pub worker_slots: usize,
+}
+
+impl PoolStats {
+    /// Fraction of spawned workers that found work before the grid cursor
+    /// ran dry — 1.0 means every worker in every region stayed busy.
+    pub fn occupancy(&self) -> f64 {
+        if self.worker_slots == 0 {
+            return 1.0;
+        }
+        self.worker_turns as f64 / self.worker_slots as f64
+    }
+
+    /// Counters accumulated since `base` was snapshotted — how a consumer
+    /// scopes the process-global totals to its own lifetime (e.g. one
+    /// server's metrics report). Saturating, so a stale/foreign baseline
+    /// degrades to zeros rather than wrapping.
+    pub fn delta_since(&self, base: PoolStats) -> PoolStats {
+        PoolStats {
+            regions: self.regions.saturating_sub(base.regions),
+            tasks: self.tasks.saturating_sub(base.tasks),
+            worker_turns: self.worker_turns.saturating_sub(base.worker_turns),
+            worker_slots: self.worker_slots.saturating_sub(base.worker_slots),
+        }
+    }
+}
+
+/// Read the global pool counters.
+pub fn pool_stats() -> PoolStats {
+    PoolStats {
+        regions: REGIONS.load(Ordering::Relaxed),
+        tasks: TASKS.load(Ordering::Relaxed),
+        worker_turns: WORKER_TURNS.load(Ordering::Relaxed),
+        worker_slots: WORKER_SLOTS.load(Ordering::Relaxed),
+    }
+}
+
+/// Run `n_tasks` independent tasks on up to `threads` scoped workers.
+///
+/// Workers share one atomic grid cursor: each `fetch_add(1)` claims the
+/// next unclaimed task index, so load balances dynamically (a worker stuck
+/// on a slow tile simply claims fewer). `threads <= 1` or `n_tasks <= 1`
+/// degenerates to a plain serial loop with no pool machinery.
+///
+/// Panics in a task propagate: the scope join re-raises them on the caller.
+pub fn run_tasks(threads: usize, n_tasks: usize, task: impl Fn(usize) + Sync) {
+    if threads <= 1 || n_tasks <= 1 {
+        for i in 0..n_tasks {
+            task(i);
+        }
+        return;
+    }
+    let workers = threads.min(n_tasks);
+    let cursor = AtomicUsize::new(0);
+    REGIONS.fetch_add(1, Ordering::Relaxed);
+    TASKS.fetch_add(n_tasks, Ordering::Relaxed);
+    WORKER_SLOTS.fetch_add(workers, Ordering::Relaxed);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let mut ran_any = false;
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_tasks {
+                        break;
+                    }
+                    ran_any = true;
+                    task(i);
+                }
+                if ran_any {
+                    WORKER_TURNS.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+}
+
+/// Shard `data` into `data.len() / chunk` disjoint fixed-size chunks and
+/// run `f(chunk_index, &mut chunk)` for each, on up to `threads` workers.
+///
+/// This is the write-side companion of [`run_tasks`] shaped for the mmt4d
+/// grid: the `[M1,N1,M0,N0]` output is exactly `M1*N1` contiguous
+/// `M0*N0`-element tiles in task order, so tile `t`'s output IS chunk `t`.
+/// Safety: the grid cursor hands each index to exactly one worker, so each
+/// chunk is mutably borrowed exactly once; the ranges are disjoint by
+/// construction. All `unsafe` stays here.
+pub fn parallel_tiles<T: Send>(threads: usize, data: &mut [T], chunk: usize,
+                               f: impl Fn(usize, &mut [T]) + Sync) {
+    // Degenerate shapes (K=0 packs, zero-area tiles) produce an empty
+    // shard set — a no-op, like the serial loops they replaced. A zero
+    // chunk is only legal then.
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk > 0 && data.len() % chunk == 0,
+            "data ({}) must be whole chunks of {chunk}", data.len());
+    let n_tasks = data.len() / chunk;
+    if threads <= 1 || n_tasks <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    run_tasks(threads, n_tasks, |i| {
+        // SAFETY: i in 0..n_tasks, issued to exactly one worker by the grid
+        // cursor; chunks [i*chunk, (i+1)*chunk) are in-bounds and disjoint.
+        let c = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(i * chunk), chunk)
+        };
+        f(i, c);
+    });
+}
+
+/// Two-output variant of [`parallel_tiles`]: shard `a` (chunks of
+/// `chunk_a`) and `b` (chunks of `chunk_b`) over the same task grid. Used
+/// by per-row quantization, which emits a quantized row and its scale.
+pub fn parallel_tiles2<T: Send, U: Send>(
+    threads: usize, a: &mut [T], chunk_a: usize, b: &mut [U], chunk_b: usize,
+    f: impl Fn(usize, &mut [T], &mut [U]) + Sync,
+) {
+    // As in parallel_tiles: an empty primary shard set (e.g. K=0 rows to
+    // quantize) is a no-op and leaves `b` untouched.
+    if a.is_empty() {
+        return;
+    }
+    assert!(chunk_a > 0 && a.len() % chunk_a == 0, "a must be whole chunks");
+    assert!(chunk_b > 0 && b.len() % chunk_b == 0, "b must be whole chunks");
+    let n_tasks = a.len() / chunk_a;
+    assert_eq!(n_tasks, b.len() / chunk_b, "a and b must shard identically");
+    if threads <= 1 || n_tasks <= 1 {
+        for (i, (ca, cb)) in
+            a.chunks_mut(chunk_a).zip(b.chunks_mut(chunk_b)).enumerate()
+        {
+            f(i, ca, cb);
+        }
+        return;
+    }
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    run_tasks(threads, n_tasks, |i| {
+        // SAFETY: as in parallel_tiles — index i is claimed exactly once,
+        // and both chunk ranges are in-bounds and disjoint per index.
+        let (ca, cb) = unsafe {
+            (std::slice::from_raw_parts_mut(pa.0.add(i * chunk_a), chunk_a),
+             std::slice::from_raw_parts_mut(pb.0.add(i * chunk_b), chunk_b))
+        };
+        f(i, ca, cb);
+    });
+}
+
+/// Raw-pointer wrapper that may cross the scoped-thread boundary. Sound
+/// because every dereference in this module targets a chunk owned by a
+/// single task index (see the SAFETY notes at the deref sites).
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            let n = 101;
+            let hits: Vec<AtomicU64> =
+                (0..n).map(|_| AtomicU64::new(0)).collect();
+            run_tasks(threads, n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_tiles_writes_every_chunk() {
+        for threads in [1, 2, 4] {
+            let mut data = vec![0u32; 12 * 5];
+            parallel_tiles(threads, &mut data, 5, |i, c| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = (i * 5 + j) as u32;
+                }
+            });
+            let want: Vec<u32> = (0..12 * 5).map(|v| v as u32).collect();
+            assert_eq!(data, want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_tiles2_shards_both_outputs() {
+        let mut rows = vec![0i32; 7 * 3];
+        let mut sums = vec![0i32; 7];
+        parallel_tiles2(4, &mut rows, 3, &mut sums, 1, |i, r, s| {
+            for (j, v) in r.iter_mut().enumerate() {
+                *v = (i * 10 + j) as i32;
+            }
+            s[0] = r.iter().sum();
+        });
+        for i in 0..7 {
+            assert_eq!(sums[i], (0..3).map(|j| (i * 10 + j) as i32).sum::<i32>());
+        }
+    }
+
+    #[test]
+    fn zero_and_one_task_degenerate() {
+        use std::sync::atomic::AtomicBool;
+        run_tasks(4, 0, |_| panic!("no tasks to run"));
+        let hit = AtomicBool::new(false);
+        run_tasks(4, 1, |i| {
+            assert_eq!(i, 0);
+            hit.store(true, Ordering::Relaxed);
+        });
+        assert!(hit.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn empty_shard_sets_are_no_ops() {
+        // K=0-style degenerate shapes: no panic, no task runs, second
+        // output untouched.
+        let mut empty: Vec<u32> = vec![];
+        parallel_tiles(4, &mut empty, 0, |_, _: &mut [u32]| {
+            panic!("no chunks to run")
+        });
+        parallel_tiles(4, &mut empty, 3, |_, _: &mut [u32]| {
+            panic!("no chunks to run")
+        });
+        let mut ea: Vec<f32> = vec![];
+        let mut b = vec![7i32; 5];
+        parallel_tiles2(2, &mut ea, 0, &mut b, 1,
+                        |_, _: &mut [f32], _: &mut [i32]| {
+            panic!("no tasks to run")
+        });
+        assert_eq!(b, vec![7; 5]);
+    }
+
+    #[test]
+    fn threads_for_gates_tiny_work() {
+        let p = Parallelism::new(8);
+        assert_eq!(p.threads_for(64, MIN_PARALLEL_WORK), 8);
+        assert_eq!(p.threads_for(64, MIN_PARALLEL_WORK - 1), 1);
+        assert_eq!(p.threads_for(3, u64::MAX), 3, "never more than tasks");
+        assert_eq!(Parallelism::serial().threads_for(64, u64::MAX), 1);
+        assert_eq!(Parallelism::new(0).threads, 1, "clamped to 1");
+        assert!(Parallelism::auto().threads >= 1);
+    }
+
+    #[test]
+    fn stats_accumulate_and_occupancy_bounded() {
+        let before = pool_stats();
+        run_tasks(2, 64, |_| {});
+        let after = pool_stats();
+        assert!(after.regions > before.regions);
+        assert!(after.tasks >= before.tasks + 64);
+        let occ = after.occupancy();
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+        // delta_since scopes the process-global totals to an interval
+        // (concurrent tests may add their own regions on top of ours).
+        let d = after.delta_since(before);
+        assert!(d.regions >= 1 && d.tasks >= 64, "{d:?}");
+        assert_eq!(after.delta_since(after), PoolStats::default());
+    }
+}

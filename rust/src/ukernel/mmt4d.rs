@@ -10,7 +10,16 @@
 //! The f16 variant widens each product into an f32 accumulator — exactly the
 //! `vfwmacc.vf` semantics of the paper's kernel, so results are bit-identical
 //! to the RVV simulator and to numpy's f32-accumulated reference.
+//!
+//! **Threading.** Every kernel is written as a per-tile body over one
+//! `(i1, j1)` outer tile; the serial entry points walk the M1×N1 grid in
+//! order, and the `_par` entry points shard the same grid across a
+//! [`taskpool`](crate::taskpool) worker pool. Because a tile's K-loop — the
+//! only place floating point accumulates — is the *same code* either way and
+//! each output tile has exactly one owner, parallel output is bit-identical
+//! to serial (pinned by `rust/tests/props.rs`).
 
+use crate::taskpool::{self, Parallelism};
 use crate::util::f16::F16;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,6 +60,20 @@ fn check(p: &Mmt4dParams, lhs: usize, rhs: usize, out: usize) {
     assert_eq!(out, p.out_len(), "out length");
 }
 
+/// Stack widening-buffer size: covers N0 up to VLEN=2048's f16 strip and
+/// VLEN=512's i8 strip; wider tiles fall back to a per-thread heap buffer.
+const STRIP: usize = 256;
+
+// Widening buffers for the rare N0 > STRIP tiles: thread-local so each
+// taskpool worker (and the serial caller) allocates at most once, not once
+// per tile. Contents are fully rewritten every K step, so reuse is safe.
+thread_local! {
+    static WIDE_F32: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+    static WIDE_I32: std::cell::RefCell<Vec<i32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// f16 x f16 -> f32 (the paper's precision case).
 ///
 /// Hot path: dispatches to the unrolled prefill/decode tile bodies when the
@@ -60,96 +83,125 @@ pub fn mmt4d_f16f16f32(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParam
     if !p.accumulate {
         out.fill(0.0);
     }
-    if p.k0 == 1 {
-        return mmt4d_f16_k0eq1(lhs, rhs, out, p);
-    }
-    mmt4d_f16_generic(lhs, rhs, out, p);
+    mmt4d_f16_grid_serial(lhs, rhs, out, p);
 }
 
-/// Generic tile body, any (M0, N0, K0).
-fn mmt4d_f16_generic(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParams) {
+/// Multi-threaded f16 kernel: same numerics as [`mmt4d_f16f16f32`], with the
+/// M1×N1 outer-tile grid sharded across `par.threads` workers. Bit-identical
+/// to the serial kernel for every input (each tile has one owner and the
+/// per-tile K-loop is shared code). Falls back to the serial walk when the
+/// grid or the total work is too small to win.
+pub fn mmt4d_f16f16f32_par(lhs: &[F16], rhs: &[F16], out: &mut [f32],
+                           p: &Mmt4dParams, par: Parallelism) {
+    check(p, lhs.len(), rhs.len(), out.len());
+    if !p.accumulate {
+        out.fill(0.0);
+    }
+    let threads = par.threads_for(p.m1 * p.n1, p.flops());
+    if threads <= 1 {
+        return mmt4d_f16_grid_serial(lhs, rhs, out, p);
+    }
+    let (n1, k1, m0, n0, k0) = (p.n1, p.k1, p.m0, p.n0, p.k0);
+    taskpool::parallel_tiles(threads, out, m0 * n0, |t, out_tile| {
+        let (i1, j1) = (t / n1, t % n1);
+        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
+        let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
+        mmt4d_f16_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
+    });
+}
+
+/// Serial M1×N1 grid walk (post-fill) over the shared per-tile dispatch.
+fn mmt4d_f16_grid_serial(lhs: &[F16], rhs: &[F16], out: &mut [f32],
+                         p: &Mmt4dParams) {
     let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
     for i1 in 0..m1 {
+        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
         for j1 in 0..n1 {
+            let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
             let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
-            for kk in 0..k1 {
-                let lt = &lhs[(i1 * k1 + kk) * m0 * k0..][..m0 * k0];
-                let rt = &rhs[(j1 * k1 + kk) * n0 * k0..][..n0 * k0];
-                for i0 in 0..m0 {
-                    for j0 in 0..n0 {
-                        let mut acc = out_tile[i0 * n0 + j0];
-                        for c in 0..k0 {
-                            acc += lt[i0 * k0 + c].to_f32() * rt[j0 * k0 + c].to_f32();
-                        }
-                        out_tile[i0 * n0 + j0] = acc;
-                    }
+            mmt4d_f16_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
+        }
+    }
+}
+
+/// One (i1, j1) f16 output tile: the single dispatch point (K0=1 strip
+/// fast path — stack buffer, or the thread-local wide buffer — vs generic
+/// body) shared by the serial walk and every taskpool worker, so the two
+/// schedules can never diverge.
+fn mmt4d_f16_tile(lhs_row: &[F16], rhs_tile: &[F16], out_tile: &mut [f32],
+                  k1: usize, m0: usize, n0: usize, k0: usize) {
+    if k0 != 1 {
+        return mmt4d_f16_tile_generic(lhs_row, rhs_tile, out_tile, k1, m0,
+                                      n0, k0);
+    }
+    if n0 <= STRIP {
+        let mut bf = [0.0f32; STRIP];
+        mmt4d_f16_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
+                             &mut bf[..n0]);
+    } else {
+        WIDE_F32.with(|b| {
+            let mut bf = b.borrow_mut();
+            if bf.len() < n0 {
+                bf.resize(n0, 0.0);
+            }
+            mmt4d_f16_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
+                                 &mut bf[..n0]);
+        });
+    }
+}
+
+/// Generic tile body, any (M0, N0, K0): one (i1, j1) output tile.
+/// `lhs_row` is LHS block i1 `[K1,M0,K0]`; `rhs_tile` is RHS block j1
+/// `[K1,N0,K0]`.
+fn mmt4d_f16_tile_generic(lhs_row: &[F16], rhs_tile: &[F16],
+                          out_tile: &mut [f32], k1: usize, m0: usize,
+                          n0: usize, k0: usize) {
+    for kk in 0..k1 {
+        let lt = &lhs_row[kk * m0 * k0..][..m0 * k0];
+        let rt = &rhs_tile[kk * n0 * k0..][..n0 * k0];
+        for i0 in 0..m0 {
+            for j0 in 0..n0 {
+                let mut acc = out_tile[i0 * n0 + j0];
+                for c in 0..k0 {
+                    acc += lt[i0 * k0 + c].to_f32() * rt[j0 * k0 + c].to_f32();
                 }
+                out_tile[i0 * n0 + j0] = acc;
             }
         }
     }
 }
 
-/// K0 = 1 specialisation (the paper's prefill *and* decode kernels):
-/// each K step is an outer product of an M0 column of LHS with an N0 row of
-/// RHS — on RVV: one `vle16` of the RHS strip, M0 `vfwmacc.vf` ops.
+/// K0 = 1 tile body (the paper's prefill *and* decode kernels): each K step
+/// is an outer product of an M0 column of LHS with an N0 row of RHS — on
+/// RVV: one `vle16` of the RHS strip, M0 `vfwmacc.vf` ops. `bf` is the
+/// caller's N0-long widening buffer (a per-tile stack array, or the
+/// thread-local heap buffer for wide strips — fully rewritten per K step,
+/// so reuse never changes results).
 ///
 /// §Perf (EXPERIMENTS.md): the hot loop converts each RHS strip to f32
-/// exactly once per K step into a stack buffer and reuses it across the M0
+/// exactly once per K step into the buffer and reuses it across the M0
 /// rows (the software analogue of the RVV kernel amortizing its `vle16`),
 /// and the widening itself goes through a branch-free bit-twiddle fast path
 /// for normal/zero values. ~9x over the naive per-element `to_f32` version.
-fn mmt4d_f16_k0eq1(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParams) {
-    const STRIP: usize = 256; // covers N0 up to VLEN=2048's strip
-    let (m1, n1, k1, m0, n0) = (p.m1, p.n1, p.k1, p.m0, p.n0);
-    // (A fused m0==1 variant that skips the strip buffer was tried and
-    //  measured ~5% slower — the buffered form autovectorizes better; see
-    //  EXPERIMENTS.md §Perf iteration log.)
-    if n0 <= STRIP {
-        let mut bf = [0.0f32; STRIP];
-        for i1 in 0..m1 {
-            let lhs_row = &lhs[i1 * k1 * m0..][..k1 * m0];
-            for j1 in 0..n1 {
-                let rhs_tile = &rhs[j1 * k1 * n0..][..k1 * n0];
-                let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
-                for kk in 0..k1 {
-                    let a = &lhs_row[kk * m0..][..m0];
-                    let b = &rhs_tile[kk * n0..][..n0];
-                    // one widening pass per strip, shared by all M0 rows
-                    for (dst, src) in bf[..n0].iter_mut().zip(b) {
-                        *dst = f16_to_f32_fast(*src);
-                    }
-                    for i0 in 0..m0 {
-                        let av = f16_to_f32_fast(a[i0]);
-                        let row = &mut out_tile[i0 * n0..][..n0];
-                        for (o, &bv) in row.iter_mut().zip(&bf[..n0]) {
-                            *o += av * bv;
-                        }
-                    }
-                }
-            }
+/// (A fused m0==1 variant that skips the strip buffer was tried and
+/// measured ~5% slower — the buffered form autovectorizes better; see
+/// EXPERIMENTS.md §Perf iteration log.)
+fn mmt4d_f16_tile_k0eq1(lhs_row: &[F16], rhs_tile: &[F16],
+                        out_tile: &mut [f32], k1: usize, m0: usize,
+                        n0: usize, bf: &mut [f32]) {
+    debug_assert_eq!(bf.len(), n0);
+    for kk in 0..k1 {
+        let a = &lhs_row[kk * m0..][..m0];
+        let b = &rhs_tile[kk * n0..][..n0];
+        // one widening pass per strip, shared by all M0 rows
+        for (dst, src) in bf.iter_mut().zip(b) {
+            *dst = f16_to_f32_fast(*src);
         }
-    } else {
-        // Very wide strips: heap buffer, same structure.
-        let mut bf = vec![0.0f32; n0];
-        for i1 in 0..m1 {
-            let lhs_row = &lhs[i1 * k1 * m0..][..k1 * m0];
-            for j1 in 0..n1 {
-                let rhs_tile = &rhs[j1 * k1 * n0..][..k1 * n0];
-                let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
-                for kk in 0..k1 {
-                    let a = &lhs_row[kk * m0..][..m0];
-                    let b = &rhs_tile[kk * n0..][..n0];
-                    for (dst, src) in bf.iter_mut().zip(b) {
-                        *dst = f16_to_f32_fast(*src);
-                    }
-                    for i0 in 0..m0 {
-                        let av = f16_to_f32_fast(a[i0]);
-                        let row = &mut out_tile[i0 * n0..][..n0];
-                        for (o, &bv) in row.iter_mut().zip(&bf[..]) {
-                            *o += av * bv;
-                        }
-                    }
-                }
+        for i0 in 0..m0 {
+            let av = f16_to_f32_fast(a[i0]);
+            let row = &mut out_tile[i0 * n0..][..n0];
+            for (o, &bv) in row.iter_mut().zip(bf.iter()) {
+                *o += av * bv;
             }
         }
     }
@@ -211,76 +263,125 @@ pub fn mmt4d_s8s8s32(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
     if !p.accumulate {
         out.fill(0);
     }
-    if p.k0 == 1 {
-        return mmt4d_s8_k0eq1(lhs, rhs, out, p);
-    }
-    mmt4d_s8_generic(lhs, rhs, out, p);
+    mmt4d_s8_grid_serial(lhs, rhs, out, p);
 }
 
-/// Generic int8 tile body, any (M0, N0, K0).
-fn mmt4d_s8_generic(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
+/// Multi-threaded s8s8s32 kernel: the int8 counterpart of
+/// [`mmt4d_f16f16f32_par`]. Integer accumulation is exact, so parallel and
+/// serial agree bit-for-bit regardless of schedule; the grid sharding only
+/// decides who computes which tile.
+pub fn mmt4d_s8s8s32_par(lhs: &[i8], rhs: &[i8], out: &mut [i32],
+                         p: &Mmt4dParams, par: Parallelism) {
+    check(p, lhs.len(), rhs.len(), out.len());
+    if !p.accumulate {
+        out.fill(0);
+    }
+    let threads = par.threads_for(p.m1 * p.n1, p.flops());
+    if threads <= 1 {
+        return mmt4d_s8_grid_serial(lhs, rhs, out, p);
+    }
+    let (n1, k1, m0, n0, k0) = (p.n1, p.k1, p.m0, p.n0, p.k0);
+    taskpool::parallel_tiles(threads, out, m0 * n0, |t, out_tile| {
+        let (i1, j1) = (t / n1, t % n1);
+        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
+        let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
+        mmt4d_s8_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
+    });
+}
+
+/// Serial int8 M1×N1 grid walk (post-fill) over the shared per-tile
+/// dispatch.
+fn mmt4d_s8_grid_serial(lhs: &[i8], rhs: &[i8], out: &mut [i32],
+                        p: &Mmt4dParams) {
     let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
     for i1 in 0..m1 {
+        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
         for j1 in 0..n1 {
+            let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
             let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
-            for kk in 0..k1 {
-                let lt = &lhs[(i1 * k1 + kk) * m0 * k0..][..m0 * k0];
-                let rt = &rhs[(j1 * k1 + kk) * n0 * k0..][..n0 * k0];
-                for i0 in 0..m0 {
-                    for j0 in 0..n0 {
-                        let mut acc = out_tile[i0 * n0 + j0];
-                        for c in 0..k0 {
-                            acc += lt[i0 * k0 + c] as i32 * rt[j0 * k0 + c] as i32;
-                        }
-                        out_tile[i0 * n0 + j0] = acc;
-                    }
+            mmt4d_s8_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
+        }
+    }
+}
+
+/// One (i1, j1) int8 output tile: the single dispatch point shared by the
+/// serial walk and every taskpool worker (see [`mmt4d_f16_tile`]).
+fn mmt4d_s8_tile(lhs_row: &[i8], rhs_tile: &[i8], out_tile: &mut [i32],
+                 k1: usize, m0: usize, n0: usize, k0: usize) {
+    if k0 != 1 {
+        return mmt4d_s8_tile_generic(lhs_row, rhs_tile, out_tile, k1, m0,
+                                     n0, k0);
+    }
+    if n0 <= STRIP {
+        let mut bw = [0i32; STRIP];
+        mmt4d_s8_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
+                            &mut bw[..n0]);
+    } else {
+        WIDE_I32.with(|b| {
+            let mut bw = b.borrow_mut();
+            if bw.len() < n0 {
+                bw.resize(n0, 0);
+            }
+            mmt4d_s8_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
+                                &mut bw[..n0]);
+        });
+    }
+}
+
+/// Generic int8 tile body, any (M0, N0, K0): one (i1, j1) output tile.
+fn mmt4d_s8_tile_generic(lhs_row: &[i8], rhs_tile: &[i8], out_tile: &mut [i32],
+                         k1: usize, m0: usize, n0: usize, k0: usize) {
+    for kk in 0..k1 {
+        let lt = &lhs_row[kk * m0 * k0..][..m0 * k0];
+        let rt = &rhs_tile[kk * n0 * k0..][..n0 * k0];
+        for i0 in 0..m0 {
+            for j0 in 0..n0 {
+                let mut acc = out_tile[i0 * n0 + j0];
+                for c in 0..k0 {
+                    acc += lt[i0 * k0 + c] as i32 * rt[j0 * k0 + c] as i32;
                 }
+                out_tile[i0 * n0 + j0] = acc;
             }
         }
     }
 }
 
-/// K0 = 1 specialisation (the int8 prefill *and* decode kernels): per K step
-/// the N0-wide RHS strip is sign-extended to i32 exactly once into a stack
-/// buffer and reused across the M0 rows — the software analogue of the RVV
-/// kernel amortizing its `vle8`/`vsext.vf2` over M0 `vwmacc.vx` ops
-/// (§Perf: same buffered-strip structure that made the f16 kernel ~9x).
-fn mmt4d_s8_k0eq1(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
-    const STRIP: usize = 256; // covers N0 up to VLEN=512's i8 strip
-    if p.n0 <= STRIP {
-        let mut bw = [0i32; STRIP];
-        mmt4d_s8_k0eq1_body(lhs, rhs, out, p, &mut bw[..p.n0]);
-    } else {
-        // Very wide strips: heap buffer, same body.
-        let mut bw = vec![0i32; p.n0];
-        mmt4d_s8_k0eq1_body(lhs, rhs, out, p, &mut bw);
+/// Generic int8 grid walk, any (M0, N0, K0) — the fast path's test oracle
+/// (`s8_fast_path_matches_generic`); production dispatch goes through
+/// [`mmt4d_s8_tile`].
+#[cfg(test)]
+fn mmt4d_s8_generic(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
+    let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
+    for i1 in 0..m1 {
+        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
+        for j1 in 0..n1 {
+            let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
+            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
+            mmt4d_s8_tile_generic(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
+        }
     }
 }
 
-/// The K0=1 loop nest, over a caller-provided N0-long widening buffer.
-fn mmt4d_s8_k0eq1_body(lhs: &[i8], rhs: &[i8], out: &mut [i32],
-                       p: &Mmt4dParams, bw: &mut [i32]) {
-    let (m1, n1, k1, m0, n0) = (p.m1, p.n1, p.k1, p.m0, p.n0);
+/// K0 = 1 int8 tile body (the int8 prefill *and* decode kernels): per K
+/// step the N0-wide RHS strip is sign-extended to i32 exactly once into the
+/// caller's buffer and reused across the M0 rows — the software analogue of
+/// the RVV kernel amortizing its `vle8`/`vsext.vf2` over M0 `vwmacc.vx`
+/// ops (§Perf: same buffered-strip structure that made the f16 kernel ~9x).
+fn mmt4d_s8_tile_k0eq1(lhs_row: &[i8], rhs_tile: &[i8], out_tile: &mut [i32],
+                       k1: usize, m0: usize, n0: usize, bw: &mut [i32]) {
     debug_assert_eq!(bw.len(), n0);
-    for i1 in 0..m1 {
-        let lhs_row = &lhs[i1 * k1 * m0..][..k1 * m0];
-        for j1 in 0..n1 {
-            let rhs_tile = &rhs[j1 * k1 * n0..][..k1 * n0];
-            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
-            for kk in 0..k1 {
-                let a = &lhs_row[kk * m0..][..m0];
-                let b = &rhs_tile[kk * n0..][..n0];
-                // one widening pass per strip, shared by all M0 rows
-                for (dst, src) in bw.iter_mut().zip(b) {
-                    *dst = *src as i32;
-                }
-                for i0 in 0..m0 {
-                    let av = a[i0] as i32;
-                    let row = &mut out_tile[i0 * n0..][..n0];
-                    for (o, &bv) in row.iter_mut().zip(bw.iter()) {
-                        *o += av * bv;
-                    }
-                }
+    for kk in 0..k1 {
+        let a = &lhs_row[kk * m0..][..m0];
+        let b = &rhs_tile[kk * n0..][..n0];
+        // one widening pass per strip, shared by all M0 rows
+        for (dst, src) in bw.iter_mut().zip(b) {
+            *dst = *src as i32;
+        }
+        for i0 in 0..m0 {
+            let av = a[i0] as i32;
+            let row = &mut out_tile[i0 * n0..][..n0];
+            for (o, &bv) in row.iter_mut().zip(bw.iter()) {
+                *o += av * bv;
             }
         }
     }
@@ -332,6 +433,17 @@ mod tests {
             assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0),
                     "({m}x{k}x{n} tile {m0}x{n0}x{k0}) elem {i}: {g} vs {w}");
         }
+
+        // The parallel kernel must agree bit-for-bit on the same inputs,
+        // at every pool width (threads_for may serialize small cases —
+        // that degenerate path must agree too).
+        for threads in [1, 2, 4] {
+            let mut out_par = vec![0.0f32; p.out_len()];
+            mmt4d_f16f16f32_par(&lhs4, &rhs4, &mut out_par, &p,
+                                Parallelism::new(threads));
+            assert_eq!(out4, out_par,
+                       "parallel ({threads}T) diverged from serial");
+        }
     }
 
     #[test]
@@ -368,6 +480,11 @@ mod tests {
         let p2 = Mmt4dParams { accumulate: false, ..p };
         mmt4d_f16f16f32(&lhs, &rhs, &mut out2, &p2);
         assert_eq!(out2, vec![2.0; 4]);
+
+        // accumulate=true must also hold on the parallel entry point.
+        let mut out3 = vec![10.0f32; p.out_len()];
+        mmt4d_f16f16f32_par(&lhs, &rhs, &mut out3, &p, Parallelism::new(2));
+        assert_eq!(out3, vec![12.0; 4]);
     }
 
     #[test]
@@ -394,7 +511,8 @@ mod tests {
     #[test]
     fn s8_fast_path_matches_generic() {
         // The K0=1 strip-buffered fast path must agree bit-for-bit with the
-        // generic loop on identical packed data.
+        // generic loop on identical packed data — and so must the parallel
+        // kernel at any pool width.
         let p = Mmt4dParams { m1: 2, n1: 3, k1: 9, m0: 7, n0: 32, k0: 1,
                               accumulate: false };
         let mut rng = Rng::new(31);
@@ -409,6 +527,13 @@ mod tests {
         mmt4d_s8s8s32(&lhs, &rhs, &mut fast, &p);
         mmt4d_s8_generic(&lhs, &rhs, &mut slow, &p);
         assert_eq!(fast, slow);
+
+        for threads in [2, 3] {
+            let mut par = vec![0i32; p.out_len()];
+            mmt4d_s8s8s32_par(&lhs, &rhs, &mut par, &p,
+                              Parallelism::new(threads));
+            assert_eq!(fast, par, "parallel ({threads}T) diverged");
+        }
     }
 
     #[test]
@@ -438,5 +563,26 @@ mod tests {
         // row i0, col j0: sum_k lhs[k,i0]*rhs[k,j0]
         // i0=0: k vals 1,3,5 ; j0=0: 1,2,3 -> 1+6+15=22
         assert_eq!(out, vec![22, 22, 28, 28]);
+    }
+
+    #[test]
+    fn wide_strip_heap_path_parallel_matches_serial() {
+        // n0 > STRIP forces the heap widening buffer in both kernels; k1 is
+        // sized so the grid clears MIN_PARALLEL_WORK and the pool really
+        // spins up.
+        let p = Mmt4dParams { m1: 2, n1: 2, k1: 80, m0: 2, n0: STRIP + 8,
+                              k0: 1, accumulate: false };
+        let mut rng = Rng::new(17);
+        let lhs: Vec<F16> = (0..p.lhs_len())
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let rhs: Vec<F16> = (0..p.rhs_len())
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let mut serial = vec![0.0f32; p.out_len()];
+        let mut par = vec![0.0f32; p.out_len()];
+        mmt4d_f16f16f32(&lhs, &rhs, &mut serial, &p);
+        mmt4d_f16f16f32_par(&lhs, &rhs, &mut par, &p, Parallelism::new(4));
+        assert_eq!(serial, par);
     }
 }

@@ -15,10 +15,12 @@ pub mod mmt4d;
 pub mod pack;
 pub mod quant;
 
-pub use mmt4d::{mmt4d_f16f16f32, mmt4d_f32f32f32, mmt4d_s8s8s32, Mmt4dParams};
+pub use mmt4d::{mmt4d_f16f16f32, mmt4d_f16f16f32_par, mmt4d_f32f32f32,
+                mmt4d_s8s8s32, mmt4d_s8s8s32_par, Mmt4dParams};
 
 use crate::ir::tensor::Tensor;
 use crate::ir::types::ElemType;
+use crate::taskpool::Parallelism;
 use crate::util::f16::F16;
 
 /// Parsed ukernel symbol.
@@ -263,14 +265,23 @@ pub fn execute(op: &UkernelOp, args: &[&Tensor],
 /// Table-1 microkernel inference path.
 pub fn matmul_f16_via_mmt4d(a: &[F16], b: &[F16], m: usize, k: usize, n: usize,
                             m0: usize, n0: usize, k0: usize) -> Vec<f32> {
+    matmul_f16_via_mmt4d_par(a, b, m, k, n, m0, n0, k0, Parallelism::serial())
+}
+
+/// Multi-threaded [`matmul_f16_via_mmt4d`]: pack and mmt4d stages shard
+/// over the taskpool worker pool; bit-identical to the serial pipeline.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_f16_via_mmt4d_par(a: &[F16], b: &[F16], m: usize, k: usize,
+                                n: usize, m0: usize, n0: usize, k0: usize,
+                                par: Parallelism) -> Vec<f32> {
     let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
     let mut lhs4 = vec![F16::ZERO; m1 * k1 * m0 * k0];
     let mut rhs4 = vec![F16::ZERO; n1 * k1 * n0 * k0];
-    pack::pack_lhs_f16(a, m, k, m0, k0, &mut lhs4);
-    pack::pack_rhs_f16(b, k, n, n0, k0, &mut rhs4);
+    pack::pack_lhs_f16_par(a, m, k, m0, k0, &mut lhs4, par);
+    pack::pack_rhs_f16_par(b, k, n, n0, k0, &mut rhs4, par);
     let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
     let mut out4 = vec![0.0f32; p.out_len()];
-    mmt4d_f16f16f32(&lhs4, &rhs4, &mut out4, &p);
+    mmt4d_f16f16f32_par(&lhs4, &rhs4, &mut out4, &p, par);
     let mut out = vec![0.0f32; m * n];
     pack::unpack_acc_f32(&out4, m1, n1, m0, n0, m, n, &mut out);
     out

@@ -7,88 +7,123 @@
 //! Generic over the element via small traits would cost readability; the
 //! handful of concrete instantiations below mirrors how IREE's C ukernels
 //! are stamped out per dtype.
+//!
+//! Each pack has a `_par` variant that shards its independent output blocks
+//! (M1 row-blocks for LHS, N1 column-blocks for RHS) across the
+//! [`taskpool`](crate::taskpool) — packing is a pure rearrangement, so the
+//! parallel output is trivially identical to serial.
 
+use crate::taskpool::{self, Parallelism};
 use crate::util::f16::F16;
 
 macro_rules! impl_pack_lhs {
-    ($name:ident, $t:ty, $zero:expr) => {
+    ($name:ident, $par_name:ident, $block_name:ident, $t:ty, $zero:expr) => {
+        /// One `[K1,M0,K0]` row-block of the packed LHS: block `i1` of
+        /// `dst`, written entirely from `src` rows `i1*M0..`.
+        fn $block_name(src: &[$t], m: usize, k: usize, m0: usize, k0: usize,
+                       k1: usize, i1: usize, block: &mut [$t]) {
+            let full_rows = i1 * m0 + m0 <= m;
+            if k0 == 1 && full_rows {
+                // §Perf fast path: K0=1 full tiles — the inner tile
+                // element (kk, i0) reads src[(i1*m0+i0)*k + kk]; iterate
+                // i0-major so reads are contiguous rows, no bounds
+                // branches.
+                for i0 in 0..m0 {
+                    let row = &src[(i1 * m0 + i0) * k..][..k];
+                    for (kk, &v) in row.iter().enumerate() {
+                        block[kk * m0 + i0] = v;
+                    }
+                }
+                return;
+            }
+            for kk in 0..k1 {
+                let tile = &mut block[kk * m0 * k0..][..m0 * k0];
+                for i0 in 0..m0 {
+                    let i = i1 * m0 + i0;
+                    for c in 0..k0 {
+                        let kidx = kk * k0 + c;
+                        tile[i0 * k0 + c] = if i < m && kidx < k {
+                            src[i * k + kidx]
+                        } else {
+                            $zero
+                        };
+                    }
+                }
+            }
+        }
+
         /// Pack LHS `[M,K] -> [M1,K1,M0,K0]`; `dst` must hold `M1*K1*M0*K0`.
         pub fn $name(src: &[$t], m: usize, k: usize, m0: usize, k0: usize,
                      dst: &mut [$t]) {
+            $par_name(src, m, k, m0, k0, dst, Parallelism::serial());
+        }
+
+        /// Multi-threaded LHS pack: M1 row-blocks sharded over the pool.
+        pub fn $par_name(src: &[$t], m: usize, k: usize, m0: usize, k0: usize,
+                         dst: &mut [$t], par: Parallelism) {
             assert_eq!(src.len(), m * k);
             let m1 = m.div_ceil(m0);
             let k1 = k.div_ceil(k0);
             assert_eq!(dst.len(), m1 * k1 * m0 * k0);
-            for i1 in 0..m1 {
-                let full_rows = i1 * m0 + m0 <= m;
-                if k0 == 1 && full_rows {
-                    // §Perf fast path: K0=1 full tiles — the inner tile
-                    // element (kk, i0) reads src[(i1*m0+i0)*k + kk]; iterate
-                    // i0-major so reads are contiguous rows, no bounds
-                    // branches.
-                    let block = &mut dst[i1 * k1 * m0..][..k1 * m0];
-                    for i0 in 0..m0 {
-                        let row = &src[(i1 * m0 + i0) * k..][..k];
-                        for (kk, &v) in row.iter().enumerate() {
-                            block[kk * m0 + i0] = v;
-                        }
-                    }
-                    continue;
-                }
-                for kk in 0..k1 {
-                    let tile = &mut dst[(i1 * k1 + kk) * m0 * k0..][..m0 * k0];
-                    for i0 in 0..m0 {
-                        let i = i1 * m0 + i0;
-                        for c in 0..k0 {
-                            let kidx = kk * k0 + c;
-                            tile[i0 * k0 + c] = if i < m && kidx < k {
-                                src[i * k + kidx]
-                            } else {
-                                $zero
-                            };
-                        }
-                    }
-                }
-            }
+            let threads = par.threads_for(m1, (m * k) as u64);
+            taskpool::parallel_tiles(threads, dst, k1 * m0 * k0,
+                                     |i1, block| {
+                $block_name(src, m, k, m0, k0, k1, i1, block);
+            });
         }
     };
 }
 
 macro_rules! impl_pack_rhs {
-    ($name:ident, $t:ty, $zero:expr) => {
-        /// Pack RHS `[K,N] -> [N1,K1,N0,K0]` (transposed layout).
-        pub fn $name(src: &[$t], k: usize, n: usize, n0: usize, k0: usize,
-                     dst: &mut [$t]) {
-            assert_eq!(src.len(), k * n);
-            let n1 = n.div_ceil(n0);
-            let k1 = k.div_ceil(k0);
-            assert_eq!(dst.len(), n1 * k1 * n0 * k0);
-            for j1 in 0..n1 {
-                for kk in 0..k1 {
-                    let tile = &mut dst[(j1 * k1 + kk) * n0 * k0..][..n0 * k0];
-                    for j0 in 0..n0 {
-                        let j = j1 * n0 + j0;
-                        for c in 0..k0 {
-                            let kidx = kk * k0 + c;
-                            tile[j0 * k0 + c] = if j < n && kidx < k {
-                                src[kidx * n + j]
-                            } else {
-                                $zero
-                            };
-                        }
+    ($name:ident, $par_name:ident, $block_name:ident, $t:ty, $zero:expr) => {
+        /// One `[K1,N0,K0]` column-block of the packed (transposed) RHS:
+        /// block `j1` of `dst`, from `src` columns `j1*N0..`.
+        fn $block_name(src: &[$t], k: usize, n: usize, n0: usize, k0: usize,
+                       k1: usize, j1: usize, block: &mut [$t]) {
+            for kk in 0..k1 {
+                let tile = &mut block[kk * n0 * k0..][..n0 * k0];
+                for j0 in 0..n0 {
+                    let j = j1 * n0 + j0;
+                    for c in 0..k0 {
+                        let kidx = kk * k0 + c;
+                        tile[j0 * k0 + c] = if j < n && kidx < k {
+                            src[kidx * n + j]
+                        } else {
+                            $zero
+                        };
                     }
                 }
             }
         }
+
+        /// Pack RHS `[K,N] -> [N1,K1,N0,K0]` (transposed layout).
+        pub fn $name(src: &[$t], k: usize, n: usize, n0: usize, k0: usize,
+                     dst: &mut [$t]) {
+            $par_name(src, k, n, n0, k0, dst, Parallelism::serial());
+        }
+
+        /// Multi-threaded RHS pack: N1 column-blocks sharded over the pool.
+        pub fn $par_name(src: &[$t], k: usize, n: usize, n0: usize, k0: usize,
+                         dst: &mut [$t], par: Parallelism) {
+            assert_eq!(src.len(), k * n);
+            let n1 = n.div_ceil(n0);
+            let k1 = k.div_ceil(k0);
+            assert_eq!(dst.len(), n1 * k1 * n0 * k0);
+            let threads = par.threads_for(n1, (k * n) as u64);
+            taskpool::parallel_tiles(threads, dst, k1 * n0 * k0,
+                                     |j1, block| {
+                $block_name(src, k, n, n0, k0, k1, j1, block);
+            });
+        }
     };
 }
 
-impl_pack_lhs!(pack_lhs_f16, F16, F16::ZERO);
-impl_pack_lhs!(pack_lhs_f32, f32, 0.0);
-impl_pack_lhs!(pack_lhs_i8, i8, 0);
-impl_pack_rhs!(pack_rhs_f16, F16, F16::ZERO);
-impl_pack_rhs!(pack_rhs_f32, f32, 0.0);
-impl_pack_rhs!(pack_rhs_i8, i8, 0);
+impl_pack_lhs!(pack_lhs_f16, pack_lhs_f16_par, pack_lhs_f16_block, F16, F16::ZERO);
+impl_pack_lhs!(pack_lhs_f32, pack_lhs_f32_par, pack_lhs_f32_block, f32, 0.0);
+impl_pack_lhs!(pack_lhs_i8, pack_lhs_i8_par, pack_lhs_i8_block, i8, 0);
+impl_pack_rhs!(pack_rhs_f16, pack_rhs_f16_par, pack_rhs_f16_block, F16, F16::ZERO);
+impl_pack_rhs!(pack_rhs_f32, pack_rhs_f32_par, pack_rhs_f32_block, f32, 0.0);
+impl_pack_rhs!(pack_rhs_i8, pack_rhs_i8_par, pack_rhs_i8_block, i8, 0);
 
 /// Pack an accumulator `[M,N] -> [M1,N1,M0,N0]`.
 pub fn pack_acc_f32(src: &[f32], m: usize, n: usize, m0: usize, n0: usize,
@@ -190,6 +225,59 @@ mod tests {
             assert_eq!(dst[kk * 6 + 5], 0.0);
         }
         assert_eq!(dst.iter().filter(|&&v| v == 1.0).count(), 15);
+    }
+
+    #[test]
+    fn parallel_pack_identical_to_serial() {
+        forall(Config::default().cases(40), |g| {
+            let m = g.usize_in(1, 30);
+            let k = g.usize_in(1, 30);
+            let m0 = g.usize_in(1, 7);
+            let k0 = g.usize_in(1, 3);
+            let threads = g.usize_in(2, 4);
+            let mut rng = Rng::new((m * 37 + k * 5 + threads) as u64);
+            let src = rng.f32_vec(m * k, 2.0);
+            let (m1, k1) = (m.div_ceil(m0), k.div_ceil(k0));
+            let mut serial = vec![-1.0f32; m1 * k1 * m0 * k0];
+            let mut par = vec![-2.0f32; m1 * k1 * m0 * k0];
+            pack_lhs_f32(&src, m, k, m0, k0, &mut serial);
+            pack_lhs_f32_par(&src, m, k, m0, k0, &mut par,
+                             crate::taskpool::Parallelism::new(threads));
+            prop_assert(serial == par, "lhs pack diverged")?;
+            // RHS: reinterpret src as [k, m] and pack columns.
+            let (n1b, k1b) = (m.div_ceil(m0), k.div_ceil(k0));
+            let mut rs = vec![-1.0f32; n1b * k1b * m0 * k0];
+            let mut rp = vec![-2.0f32; n1b * k1b * m0 * k0];
+            pack_rhs_f32(&src, k, m, m0, k0, &mut rs);
+            pack_rhs_f32_par(&src, k, m, m0, k0, &mut rp,
+                             crate::taskpool::Parallelism::new(threads));
+            prop_assert(rs == rp, "rhs pack diverged")
+        });
+    }
+
+    #[test]
+    fn zero_k_pack_is_a_no_op() {
+        // Degenerate K=0: empty src and dst, no panic (the serial wrappers
+        // route through the _par variants, which must keep this behavior).
+        let mut dst: Vec<f32> = vec![];
+        pack_lhs_f32(&[], 3, 0, 2, 1, &mut dst);
+        pack_rhs_f32(&[], 0, 3, 2, 1, &mut dst);
+        assert!(dst.is_empty());
+    }
+
+    #[test]
+    fn parallel_pack_runs_above_work_gate() {
+        // Big enough that threads_for really engages the pool.
+        let (m, k) = (512, 512);
+        let mut rng = Rng::new(13);
+        let src = rng.f32_vec(m * k, 1.0);
+        let (m1, k1) = (m.div_ceil(6), k);
+        let mut serial = vec![0.0f32; m1 * k1 * 6];
+        let mut par = vec![1.0f32; m1 * k1 * 6];
+        pack_lhs_f32(&src, m, k, 6, 1, &mut serial);
+        pack_lhs_f32_par(&src, m, k, 6, 1, &mut par,
+                         crate::taskpool::Parallelism::new(4));
+        assert_eq!(serial, par);
     }
 
     #[test]

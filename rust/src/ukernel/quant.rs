@@ -12,6 +12,7 @@
 #![deny(missing_docs)]
 
 use super::{matmul_s8_via_mmt4d, pack, Mmt4dParams};
+use crate::taskpool::{self, Parallelism};
 use crate::util::f16::F16;
 
 /// Per-tensor symmetric quantization parameters.
@@ -102,8 +103,20 @@ pub fn pack_quant_rhs(qb: &[i8], k: usize, n: usize, n0: usize,
 pub fn matmul_prepacked_rhs(a: &[f32], rhs4: &[i8], pb: QuantParams, m: usize,
                             k: usize, n: usize, m0: usize, n0: usize,
                             k0: usize) -> Vec<f32> {
+    matmul_prepacked_rhs_par(a, rhs4, pb, m, k, n, m0, n0, k0,
+                             Parallelism::serial())
+}
+
+/// Multi-threaded [`matmul_prepacked_rhs`]: the activation pack and the
+/// mmt4d tile grid run on the pool. Bit-identical to serial (the integer
+/// core is exact; quantization is per-element).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_prepacked_rhs_par(a: &[f32], rhs4: &[i8], pb: QuantParams,
+                                m: usize, k: usize, n: usize, m0: usize,
+                                n0: usize, k0: usize,
+                                par: Parallelism) -> Vec<f32> {
     let (qa, pa) = quantize(a);
-    let acc = matmul_qa_prepacked(&qa, rhs4, m, k, n, m0, n0, k0);
+    let acc = matmul_qa_prepacked(&qa, rhs4, m, k, n, m0, n0, k0, par);
     dequantize_acc(&acc, pa, pb)
 }
 
@@ -116,28 +129,49 @@ pub fn matmul_prepacked_rhs(a: &[f32], rhs4: &[i8], pb: QuantParams, m: usize,
 pub fn matmul_prepacked_rhs_rowwise(a: &[f32], rhs4: &[i8], pb: QuantParams,
                                     m: usize, k: usize, n: usize, m0: usize,
                                     n0: usize, k0: usize) -> Vec<f32> {
+    matmul_prepacked_rhs_rowwise_par(a, rhs4, pb, m, k, n, m0, n0, k0,
+                                     Parallelism::serial())
+}
+
+/// Multi-threaded [`matmul_prepacked_rhs_rowwise`] — the native serving
+/// backend's hot path. Per-row quantization is embarrassingly parallel
+/// (each row emits its own quantized image + scale), the activation pack
+/// shards over M1 row-blocks, and the mmt4d shards over the M1×N1 tile
+/// grid; every stage is bit-identical to its serial form.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_prepacked_rhs_rowwise_par(a: &[f32], rhs4: &[i8],
+                                        pb: QuantParams, m: usize, k: usize,
+                                        n: usize, m0: usize, n0: usize,
+                                        k0: usize,
+                                        par: Parallelism) -> Vec<f32> {
     let mut qa = vec![0i8; m * k];
-    let mut row_scales = Vec::with_capacity(m);
-    for i in 0..m {
-        let (qrow, p) = quantize(&a[i * k..][..k]);
-        qa[i * k..][..k].copy_from_slice(&qrow);
-        row_scales.push(p.scale);
-    }
-    let acc = matmul_qa_prepacked(&qa, rhs4, m, k, n, m0, n0, k0);
+    let mut row_scales = vec![0.0f32; m];
+    let threads = par.threads_for(m, (m * k) as u64);
+    taskpool::parallel_tiles2(threads, &mut qa, k, &mut row_scales, 1,
+                              |i, qrow, scale| {
+        let p = QuantParams::for_data(&a[i * k..][..k]);
+        for (dst, &v) in qrow.iter_mut().zip(&a[i * k..][..k]) {
+            *dst = p.quantize_one(v);
+        }
+        scale[0] = p.scale;
+    });
+    let acc = matmul_qa_prepacked(&qa, rhs4, m, k, n, m0, n0, k0, par);
     (0..m * n)
         .map(|idx| acc[idx] as f32 * row_scales[idx / n] * pb.scale)
         .collect()
 }
 
 /// Shared core: pre-quantized LHS x pre-packed RHS -> exact i32 accumulator.
+#[allow(clippy::too_many_arguments)]
 fn matmul_qa_prepacked(qa: &[i8], rhs4: &[i8], m: usize, k: usize, n: usize,
-                       m0: usize, n0: usize, k0: usize) -> Vec<i32> {
+                       m0: usize, n0: usize, k0: usize,
+                       par: Parallelism) -> Vec<i32> {
     let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
     let mut lhs4 = vec![0i8; m1 * k1 * m0 * k0];
-    pack::pack_lhs_i8(qa, m, k, m0, k0, &mut lhs4);
+    pack::pack_lhs_i8_par(qa, m, k, m0, k0, &mut lhs4, par);
     let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
     let mut out4 = vec![0i32; p.out_len()];
-    super::mmt4d_s8s8s32(&lhs4, rhs4, &mut out4, &p);
+    super::mmt4d::mmt4d_s8s8s32_par(&lhs4, rhs4, &mut out4, &p, par);
     let mut acc = vec![0i32; m * n];
     pack::unpack_acc_i32(&out4, m1, n1, m0, n0, m, n, &mut acc);
     acc
@@ -236,6 +270,30 @@ mod tests {
         let with_loud = batch(&loud);
         assert_eq!(&with_quiet[..n], &with_loud[..n],
                    "row 0's logits changed with its co-batched neighbour");
+    }
+
+    #[test]
+    fn parallel_quantized_matmuls_bit_identical_to_serial() {
+        let (m, k, n) = (9, 40, 65);
+        let mut rng = Rng::new(41);
+        let a = rng.f32_vec(m * k, 1.5);
+        let b = rng.f32_vec(k * n, 0.9);
+        let (qb, pb) = quantize(&b);
+        let rhs4 = pack_quant_rhs(&qb, k, n, 32, 1);
+        let serial = matmul_prepacked_rhs(&a, &rhs4, pb, m, k, n, 7, 32, 1);
+        let rowwise = matmul_prepacked_rhs_rowwise(&a, &rhs4, pb, m, k, n, 7,
+                                                   32, 1);
+        for threads in [2, 4] {
+            let par = Parallelism::new(threads);
+            assert_eq!(serial,
+                       matmul_prepacked_rhs_par(&a, &rhs4, pb, m, k, n, 7,
+                                                32, 1, par),
+                       "{threads}T per-tensor path diverged");
+            assert_eq!(rowwise,
+                       matmul_prepacked_rhs_rowwise_par(&a, &rhs4, pb, m, k,
+                                                        n, 7, 32, 1, par),
+                       "{threads}T rowwise path diverged");
+        }
     }
 
     #[test]

@@ -182,6 +182,109 @@ fn prop_i8_native_rvv_sim_and_naive_all_bit_identical() {
     });
 }
 
+/// Parallel(N threads) ↔ serial bit-identity for the f16 kernel: sharding
+/// the M1×N1 outer-tile grid over the taskpool must not change a single
+/// output bit, for arbitrary shapes, tiles, pool widths and both
+/// accumulate modes. (f32 addition is not associative — this passes only
+/// because the schedule never splits a tile's K loop across workers.)
+#[test]
+fn prop_parallel_f16_mmt4d_bit_identical_to_serial() {
+    use tenx_iree::taskpool::Parallelism;
+    forall(Config::default().cases(30), |g| {
+        let m1 = g.usize_in(1, 6);
+        let n1 = g.usize_in(1, 6);
+        let k1 = g.usize_in(1, 48);
+        let m0 = g.usize_in(1, 7);
+        let n0 = g.usize_in(1, 40);
+        let k0 = g.usize_in(1, 3);
+        let threads = g.usize_in(2, 6);
+        let accumulate = g.bool();
+        let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate };
+        let mut rng = Rng::new((m1 * 13 + n1 * 7 + k1 + threads) as u64);
+        let lhs = rand_f16_vec(&mut rng, p.lhs_len());
+        let rhs = rand_f16_vec(&mut rng, p.rhs_len());
+        let init: Vec<f32> = (0..p.out_len())
+            .map(|_| rng.f32_range(-2.0, 2.0))
+            .collect();
+        let mut serial = init.clone();
+        ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut serial, &p);
+        let mut par = init;
+        ukernel::mmt4d_f16f16f32_par(&lhs, &rhs, &mut par, &p,
+                                     Parallelism::new(threads));
+        prop_assert(serial == par,
+                    "parallel f16 mmt4d diverged from serial")
+    });
+}
+
+/// Parallel(N threads) ↔ serial bit-identity for the int8 kernel, same
+/// sharding argument (and exact integer accumulation besides).
+#[test]
+fn prop_parallel_i8_mmt4d_bit_identical_to_serial() {
+    use tenx_iree::taskpool::Parallelism;
+    forall(Config::default().cases(30), |g| {
+        let m1 = g.usize_in(1, 6);
+        let n1 = g.usize_in(1, 6);
+        let k1 = g.usize_in(1, 48);
+        let m0 = g.usize_in(1, 8);
+        let n0 = g.usize_in(1, 40);
+        let k0 = g.usize_in(1, 3);
+        let threads = g.usize_in(2, 6);
+        let accumulate = g.bool();
+        let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate };
+        let mut rng = Rng::new((m1 * 19 + n1 * 3 + k1 + threads) as u64);
+        let lhs: Vec<i8> = (0..p.lhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let rhs: Vec<i8> = (0..p.rhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let init: Vec<i32> = (0..p.out_len())
+            .map(|_| rng.range(-1000, 1000) as i32)
+            .collect();
+        let mut serial = init.clone();
+        ukernel::mmt4d_s8s8s32(&lhs, &rhs, &mut serial, &p);
+        let mut par = init;
+        ukernel::mmt4d_s8s8s32_par(&lhs, &rhs, &mut par, &p,
+                                   Parallelism::new(threads));
+        prop_assert(serial == par,
+                    "parallel i8 mmt4d diverged from serial")
+    });
+}
+
+/// The guaranteed-above-the-work-gate case: a grid big enough that the
+/// pool really spins up, at every pool width up to 2x the host cores —
+/// parallel f16 and i8 stay bit-identical to serial.
+#[test]
+fn parallel_kernels_bit_identical_on_large_grid() {
+    use tenx_iree::taskpool::Parallelism;
+    let p = Mmt4dParams { m1: 11, n1: 9, k1: 64, m0: 6, n0: 32, k0: 1,
+                          accumulate: false };
+    let mut rng = Rng::new(77);
+    let lhs = rand_f16_vec(&mut rng, p.lhs_len());
+    let rhs = rand_f16_vec(&mut rng, p.rhs_len());
+    let mut serial = vec![0.0f32; p.out_len()];
+    ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut serial, &p);
+    let max_threads = 2 * std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    for threads in 2..=max_threads.min(16) {
+        let mut par = vec![0.0f32; p.out_len()];
+        ukernel::mmt4d_f16f16f32_par(&lhs, &rhs, &mut par, &p,
+                                     Parallelism::new(threads));
+        assert_eq!(serial, par, "f16 {threads}T");
+    }
+    let lhs8: Vec<i8> = (0..p.lhs_len()).map(|_| rng.range(-128, 128) as i8).collect();
+    let rhs8: Vec<i8> = (0..p.rhs_len()).map(|_| rng.range(-128, 128) as i8).collect();
+    let mut serial8 = vec![0i32; p.out_len()];
+    ukernel::mmt4d_s8s8s32(&lhs8, &rhs8, &mut serial8, &p);
+    for threads in 2..=max_threads.min(16) {
+        let mut par8 = vec![0i32; p.out_len()];
+        ukernel::mmt4d_s8s8s32_par(&lhs8, &rhs8, &mut par8, &p,
+                                   Parallelism::new(threads));
+        assert_eq!(serial8, par8, "i8 {threads}T");
+    }
+}
+
 /// Unpacked-level int8 agreement: pack -> s8s8s32 mmt4d -> unpack equals a
 /// naive i32 matmul for arbitrary shapes AND arbitrary tiles (padding
 /// contributes exact zeros).

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Full local CI gate (documented in README.md):
-#   release build, Rust test suite, rustdoc, Python test suite.
-# Benches are smoke-run in quick mode when RUN_BENCHES=1.
+#   release build, Rust test suite, rustdoc, a quick 2-worker run of the
+#   ukernel bench (threaded rows always get smoke coverage), a docs link
+#   check, and the Python test suite.
+# The remaining benches are smoke-run in quick mode when RUN_BENCHES=1.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -15,6 +17,35 @@ cargo test -q
 echo "== cargo doc --no-deps =="
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-}" cargo doc --no-deps --quiet
 
+echo "== threaded ukernel bench (quick, 2 workers) =="
+TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
+
+echo "== docs link check =="
+# Every relative link in the markdown docs must resolve to a real file.
+# Skipped: http(s)/mailto links, intra-page #anchors, fenced code blocks
+# (awk strips them), and optional markdown link titles ([x](path "title")).
+link_errors=0
+for f in docs/*.md README.md ROADMAP.md; do
+    while IFS= read -r link; do
+        case "$link" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        target="${link%%#*}"
+        target="${target%% *}"
+        [ -z "$target" ] && continue
+        if [ ! -e "$(dirname "$f")/$target" ]; then
+            echo "BROKEN LINK in $f: $link"
+            link_errors=$((link_errors + 1))
+        fi
+    done < <(awk '/^[[:space:]]*```/{fence=!fence; next} !fence' "$f" \
+             | grep -oE '\]\([^)]+\)' | sed 's/^](//; s/)$//')
+done
+if [ "$link_errors" -gt 0 ]; then
+    echo "$link_errors broken doc link(s)"
+    exit 1
+fi
+echo "all doc links resolve"
+
 echo "== pytest (python mirror + model layer) =="
 if command -v pytest >/dev/null 2>&1; then
     (cd python && python3 -m pytest tests -q)
@@ -24,8 +55,9 @@ fi
 
 if [ "${RUN_BENCHES:-0}" = "1" ]; then
     echo "== offline benches (quick mode) =="
+    # ukernel_native already ran above (threaded smoke), so skip it here.
     for b in table2_tokens_per_sec fig_kernel_cycles tile_sweep \
-             cache_missrate ukernel_native; do
+             cache_missrate; do
         TENX_BENCH_QUICK=1 cargo bench --bench "$b"
     done
 fi
