@@ -4,39 +4,31 @@
 //! reloads and degrades performance." This sweep reproduces both cliffs on
 //! the simulated core, for GEMM (M0 sweep) and GEMV (N0 sweep).
 //!
+//! The measurement itself lives in `autotune::measure` (the same code the
+//! `tenx autotune` tuner prices candidates with); this bench is the
+//! human-readable view. Set `TENX_TUNING_PROFILE=<profile.toml>` to append
+//! **A2d** — the tuned tile from that profile measured head-to-head against
+//! the paper's static tile (the autotuner acceptance check: tuned must be
+//! at or below static cycles/MAC with zero spills; a 5% tolerance absorbs
+//! quick-vs-full measurement-shape mismatch, and anything beyond it fails
+//! the bench).
+//!
 //!     cargo bench --bench tile_sweep
+//!     TENX_TUNING_PROFILE=config/tuning-milkv-jupiter.toml \
+//!         cargo bench --bench tile_sweep
 
-use tenx_iree::cachesim::CacheHierarchy;
+use tenx_iree::autotune::{measure_tile, MeasureConfig, TileRegistry};
+use tenx_iree::bench;
 use tenx_iree::config::manifest::Tile;
-use tenx_iree::kernels::{mmt4d_tile_rvv, Mmt4dLayout};
-use tenx_iree::rvv::{Rvv, RvvConfig};
-use tenx_iree::target::{vreg_pressure, TargetDesc};
-use tenx_iree::util::f16::F16;
+use tenx_iree::ir::ElemType;
+use tenx_iree::target::{vreg_pressure, Phase, TargetDesc};
 
 fn run_tile(target: &TargetDesc, m_total: usize, m0: usize, n0: usize,
             n1: usize, k1: usize) -> (f64, u64) {
-    let vlen = target.vlen_bits().unwrap();
-    let m1 = m_total.div_ceil(m0);
-    let lhs_len = m1 * k1 * m0;
-    let rhs_len = n1 * k1 * n0;
-    let out_len = m1 * n1 * m0 * n0;
-    let lhs_addr = 0x1000;
-    let rhs_addr = (lhs_addr + lhs_len * 2 + 63) & !63;
-    let out_addr = (rhs_addr + rhs_len * 2 + 63) & !63;
-    let mut m = Rvv::new(RvvConfig::with_vlen(vlen),
-                         out_addr + out_len * 4 + 65536)
-        .with_cache(CacheHierarchy::for_target(target));
-    for i in 0..lhs_len {
-        m.write_f16(lhs_addr + i * 2, F16::from_f32(0.5));
-    }
-    for i in 0..rhs_len {
-        m.write_f16(rhs_addr + i * 2, F16::from_f32(0.25));
-    }
-    mmt4d_tile_rvv(&mut m, &Mmt4dLayout {
-        lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
-    });
-    let macs = (m1 * m0 * n1 * n0 * k1) as f64;
-    (m.stats.cycles as f64 / macs, m.stats.spill_insns)
+    let m = measure_tile(target, ElemType::F16, Tile { m0, n0, k0: 1 },
+                         &MeasureConfig { m_total, n1, k1 })
+        .expect("legal f16 tile");
+    (m.cycles_per_mac, m.spill_insns)
 }
 
 fn main() {
@@ -75,5 +67,76 @@ fn main() {
         let n0 = vlen / 8;
         let (cpf, _) = run_tile(&t, 48, 6, n0, 4, 512);
         println!("{vlen:<8} {n0:>6} {cpf:>12.3}");
+    }
+
+    // A2d: autotuned vs static tiles, when a profile is supplied. Measured
+    // on the tuner's own election shapes so the comparison is apples to
+    // apples; "eff cyc/MAC" is cycles per useful (unpadded) MAC — the
+    // metric the tuner minimizes.
+    let Ok(profile) = std::env::var("TENX_TUNING_PROFILE") else {
+        println!("\n(set TENX_TUNING_PROFILE=<profile.toml> for the tuned-vs-\
+                  static A2d section)");
+        return;
+    };
+    let reg = TileRegistry::load_path(std::path::Path::new(&profile))
+        .unwrap_or_else(|e| panic!("TENX_TUNING_PROFILE: {e}"));
+    let quick = bench::quick_mode();
+    println!("\n== A2d: autotuned vs static tiles ({profile}) ==");
+    println!("{:<10} {:<8} {:<12} {:>13} {:>8} {:>10}", "dtype", "phase",
+             "tile", "eff cyc/MAC", "spills", "note");
+    let mut regression = false;
+    let mut all_at_or_below = true;
+    for elem in [ElemType::F16, ElemType::I8] {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            let stat = tenx_iree::target::select_tiles_for(target.arch, phase,
+                                                           elem)
+                .unwrap();
+            let tuned = reg.select(target.arch, phase, elem, 1).unwrap();
+            let eff = |tile: Tile| {
+                let cfg = MeasureConfig::for_phase(phase, vlen, tile.n0,
+                                                   quick);
+                let m = measure_tile(&target, elem, tile, &cfg)
+                    .expect("profile tiles are kernel-legal");
+                (m.cycles_per_useful_mac(), m.spill_insns)
+            };
+            let (stat_cpm, stat_sp) = eff(stat);
+            // The common case is tuned == static (ci.sh pins it at
+            // VLEN=256): skip the duplicate deterministic simulation.
+            let (tuned_cpm, tuned_sp) = if tuned == stat {
+                (stat_cpm, stat_sp)
+            } else {
+                eff(tuned)
+            };
+            println!("{:<10} {:<8} {:<12} {stat_cpm:>13.4} {stat_sp:>8} \
+                      {:>10}",
+                     elem.name(), phase.name(),
+                     format!("{}x{}x{}", stat.m0, stat.n0, stat.k0), "static");
+            // The hard gate allows 5% — a profile generated on the full
+            // election shapes re-measured under TENX_BENCH_QUICK=1 (or vice
+            // versa) prices the same tile slightly differently.
+            let at_or_below = tuned_cpm <= stat_cpm;
+            let ok = tuned_sp == 0 && tuned_cpm <= stat_cpm * 1.05;
+            let note = if tuned == stat { "= static" }
+                       else if at_or_below { "OK" }
+                       else if ok { "tolerated" } else { "REGRESSION" };
+            println!("{:<10} {:<8} {:<12} {tuned_cpm:>13.4} {tuned_sp:>8} \
+                      {note:>10}",
+                     elem.name(), phase.name(),
+                     format!("{}x{}x{}", tuned.m0, tuned.n0, tuned.k0));
+            regression |= !ok;
+            all_at_or_below &= tuned_sp == 0 && at_or_below;
+        }
+    }
+    if regression {
+        eprintln!("A2d: tuned tile regressed against the static table");
+        std::process::exit(1);
+    }
+    if all_at_or_below {
+        println!("A2d: every tuned tile at or below its static tile, zero \
+                  spills");
+    } else {
+        println!("A2d: tuned tiles within the 5% cross-shape tolerance of \
+                  static (zero spills); re-measure with the shapes the \
+                  profile was tuned on for an exact comparison");
     }
 }

@@ -9,8 +9,15 @@
 //! The `@NT` rows run the same kernels with the taskpool sharding the
 //! outer-tile grid over N workers (`TENX_THREADS` works too); a speedup
 //! summary against the matching `@1T` rows prints after the table.
+//!
+//! Set `TENX_TUNING_PROFILE=<profile.toml>` (from `tenx autotune`) to add
+//! `tuned` rows: the profile's elected tiles on the same Llama shapes as
+//! the static-tile rows, so tuned-vs-paper GFLOP/s lands in one table.
 
+use tenx_iree::autotune::TileRegistry;
 use tenx_iree::bench::{self, BenchResult};
+use tenx_iree::ir::ElemType;
+use tenx_iree::target::Phase;
 use tenx_iree::taskpool::Parallelism;
 use tenx_iree::ukernel::{self, pack, quant, Mmt4dParams};
 use tenx_iree::util::f16::F16;
@@ -124,6 +131,40 @@ fn main() {
                         2048, 7, 32, 1, &mut results);
     bench_quantized_e2e("quantized e2e 1x128x1, 1x2048x2048", 1, 2048, 2048,
                         1, 128, 1, &mut results);
+
+    // Tuned-profile rows: the autotuner's elected tiles on the same shapes
+    // as the static rows above (skipped without TENX_TUNING_PROFILE).
+    if let Ok(profile) = std::env::var("TENX_TUNING_PROFILE") {
+        let reg = TileRegistry::load_path(std::path::Path::new(&profile))
+            .unwrap_or_else(|e| panic!("TENX_TUNING_PROFILE: {e}"));
+        let cases: [(&str, Phase, ElemType, usize, usize, usize); 4] = [
+            ("tuned f16 prefill", Phase::Prefill, ElemType::F16, 128, 2048,
+             2048),
+            ("tuned f16 decode", Phase::Decode, ElemType::F16, 1, 2048, 2048),
+            ("tuned i8 prefill", Phase::Prefill, ElemType::I8, 128, 2048,
+             2048),
+            ("tuned i8 decode", Phase::Decode, ElemType::I8, 1, 2048, 2048),
+        ];
+        for (label, phase, elem, m, k, n) in cases {
+            // Only rows the profile actually tunes: reg.select would fall
+            // back to the static tables and re-bench the static rows above
+            // under a misleading "tuned" label.
+            let Some(tuned) = reg.tuned(256, elem, phase, 1) else {
+                println!("({label}: no riscv64-vlen256 entry in the profile; \
+                          row skipped)");
+                continue;
+            };
+            let t = tuned.tile;
+            let name = format!("mmt4d {label} {}x{}x{}, {m}x{k}x{n}", t.m0,
+                               t.n0, t.k0);
+            if elem == ElemType::I8 {
+                bench_mmt4d_i8(&name, m, k, n, t.m0, t.n0, t.k0, 1,
+                               &mut results);
+            } else {
+                bench_mmt4d(&name, m, k, n, t.m0, t.n0, t.k0, 1, &mut results);
+            }
+        }
+    }
 
     // Threaded rows: the same kernels with the outer-tile grid sharded over
     // the taskpool (Table 2's 8-thread column, measured on this host).

@@ -1,0 +1,225 @@
+//! Empirical tile measurement on the simulated RISC-V testbed — the
+//! `benches/tile_sweep.rs` harness promoted to library code so the
+//! autotuner (and the bench, which now calls back into this module) share
+//! one measurement path.
+//!
+//! A candidate tile is priced by running the real kernel instruction stream
+//! (`kernels::mmt4d_tile_rvv` / `mmt4d_tile_rvv_i8`) on an [`Rvv`] machine
+//! with the target's cache hierarchy attached, and reading back
+//! cycles/MAC + spill traffic. The simulator computes real numerics, so a
+//! measurement is also an execution of semantically correct code.
+
+#![deny(missing_docs)]
+
+use crate::cachesim::CacheHierarchy;
+use crate::config::manifest::Tile;
+use crate::ir::ElemType;
+use crate::kernels::{mmt4d_tile_rvv, mmt4d_tile_rvv_i8, Mmt4dLayout};
+use crate::rvv::{Rvv, RvvConfig};
+use crate::target::TargetDesc;
+use crate::util::f16::F16;
+
+use super::registry;
+
+/// Problem shape a candidate is measured on. `m1` is derived from
+/// `m_total.div_ceil(m0)` so different M0 candidates cover the same logical
+/// rows (padding included in the MAC count, as in the A2 sweep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeasureConfig {
+    /// Logical LHS rows to cover (1 for GEMV-shaped decode).
+    pub m_total: usize,
+    /// Outer RHS tiles.
+    pub n1: usize,
+    /// K-loop trip count.
+    pub k1: usize,
+}
+
+impl MeasureConfig {
+    /// Prefill (GEMM) measurement shape at `vlen` for a candidate strip
+    /// width `n0`: a fixed column budget (so every candidate covers the
+    /// same logical N) and a K deep enough to amortize tile setup.
+    pub fn prefill(vlen: usize, n0: usize, quick: bool) -> MeasureConfig {
+        let total_cols = vlen / 2; // e.g. 128 columns at VLEN=256
+        MeasureConfig {
+            m_total: 48,
+            n1: total_cols.div_ceil(n0).max(1),
+            k1: if quick { 128 } else { 512 },
+        }
+    }
+
+    /// Decode (GEMV) measurement shape at `vlen` for strip width `n0`.
+    pub fn decode(vlen: usize, n0: usize, quick: bool) -> MeasureConfig {
+        let total_cols = vlen; // e.g. 256 columns at VLEN=256
+        MeasureConfig {
+            m_total: 1,
+            n1: total_cols.div_ceil(n0).max(1),
+            k1: if quick { 128 } else { 1024 },
+        }
+    }
+
+    /// The phase-appropriate shape.
+    pub fn for_phase(phase: crate::target::Phase, vlen: usize, n0: usize,
+                     quick: bool) -> MeasureConfig {
+        match phase {
+            crate::target::Phase::Prefill => Self::prefill(vlen, n0, quick),
+            crate::target::Phase::Decode => Self::decode(vlen, n0, quick),
+        }
+    }
+}
+
+/// What one simulated kernel run cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// Total simulated cycles (including cache penalties).
+    pub cycles: u64,
+    /// MACs performed (padded tile grid — the A2 sweep's denominator).
+    pub macs: u64,
+    /// MACs on *logical* data only (`m_total` rows): the election's
+    /// denominator. A tile whose M0 does not divide `m_total` pays for its
+    /// padding rows here instead of getting them for free.
+    pub useful_macs: u64,
+    /// `cycles / macs` — kernel-intrinsic efficiency (tile_sweep's metric).
+    pub cycles_per_mac: f64,
+    /// Spill instructions the kernel emitted (register-file overflow).
+    pub spill_insns: u64,
+    /// Outer M1×N1 tiles — the unit the taskpool shards across workers.
+    pub outer_tiles: usize,
+}
+
+impl Measurement {
+    /// `cycles / useful_macs` — what the autotuner minimizes.
+    pub fn cycles_per_useful_mac(&self) -> f64 {
+        self.cycles as f64 / self.useful_macs as f64
+    }
+}
+
+/// Run the dtype's mmt4d kernel for `tile` on the simulated `target` and
+/// report its cost. Spilling tiles are measurable (that is how the A2 sweep
+/// shows the cliff); tiles the kernel cannot express (partial-register
+/// strips, K0 ≠ 1, i32) are an error.
+pub fn measure_tile(target: &TargetDesc, elem: ElemType, tile: Tile,
+                    cfg: &MeasureConfig) -> anyhow::Result<Measurement> {
+    let vlen = target.vlen_bits().ok_or_else(|| {
+        anyhow::anyhow!("autotune measures RISC-V targets, not {}", target.name)
+    })?;
+    anyhow::ensure!(registry::tile_is_legal(vlen, elem, tile),
+                    "tile {}x{}x{} is not a legal {} kernel variant at \
+                     VLEN={vlen}",
+                    tile.m0, tile.n0, tile.k0, elem.name());
+    anyhow::ensure!(cfg.m_total >= 1 && cfg.n1 >= 1 && cfg.k1 >= 1,
+                    "degenerate measurement shape {cfg:?}");
+
+    let (m0, n0) = (tile.m0, tile.n0);
+    let m1 = cfg.m_total.div_ceil(m0);
+    let (n1, k1) = (cfg.n1, cfg.k1);
+    let lhs_len = m1 * k1 * m0;
+    let rhs_len = n1 * k1 * n0;
+    let out_len = m1 * n1 * m0 * n0;
+    let lhs_addr = 0x1000usize;
+
+    let stats = match elem {
+        ElemType::I8 => {
+            let rhs_addr = (lhs_addr + lhs_len + 63) & !63;
+            let out_addr = (rhs_addr + rhs_len + 63) & !63;
+            let mut m = Rvv::new(RvvConfig::with_vlen(vlen),
+                                 out_addr + out_len * 4 + 65536)
+                .with_cache(CacheHierarchy::for_target(target));
+            m.write_i8_slice(lhs_addr, &vec![3i8; lhs_len]);
+            m.write_i8_slice(rhs_addr, &vec![-5i8; rhs_len]);
+            mmt4d_tile_rvv_i8(&mut m, &Mmt4dLayout {
+                lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+            });
+            m.stats.clone()
+        }
+        _ => {
+            let rhs_addr = (lhs_addr + lhs_len * 2 + 63) & !63;
+            let out_addr = (rhs_addr + rhs_len * 2 + 63) & !63;
+            let mut m = Rvv::new(RvvConfig::with_vlen(vlen),
+                                 out_addr + out_len * 4 + 65536)
+                .with_cache(CacheHierarchy::for_target(target));
+            for i in 0..lhs_len {
+                m.write_f16(lhs_addr + i * 2, F16::from_f32(0.5));
+            }
+            for i in 0..rhs_len {
+                m.write_f16(rhs_addr + i * 2, F16::from_f32(0.25));
+            }
+            mmt4d_tile_rvv(&mut m, &Mmt4dLayout {
+                lhs_addr, rhs_addr, out_addr, m1, n1, k1, m0, n0,
+            });
+            m.stats.clone()
+        }
+    };
+
+    let macs = (m1 * m0 * n1 * n0 * k1) as u64;
+    let useful_macs = (cfg.m_total * n1 * n0 * k1) as u64;
+    Ok(Measurement {
+        cycles: stats.cycles,
+        macs,
+        useful_macs,
+        cycles_per_mac: stats.cycles as f64 / macs as f64,
+        spill_insns: stats.spill_insns,
+        outer_tiles: m1 * n1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::target::{Phase, TargetDesc};
+
+    #[test]
+    fn paper_tiles_measure_spill_free() {
+        let t = TargetDesc::milkv_jupiter();
+        for (elem, tile, phase) in [
+            (ElemType::F16, Tile { m0: 6, n0: 32, k0: 1 }, Phase::Prefill),
+            (ElemType::F16, Tile { m0: 1, n0: 64, k0: 1 }, Phase::Decode),
+            (ElemType::I8, Tile { m0: 7, n0: 32, k0: 1 }, Phase::Prefill),
+            (ElemType::I8, Tile { m0: 1, n0: 128, k0: 1 }, Phase::Decode),
+        ] {
+            let cfg = MeasureConfig::for_phase(phase, 256, tile.n0, true);
+            let m = measure_tile(&t, elem, tile, &cfg).unwrap();
+            assert_eq!(m.spill_insns, 0, "{elem:?} {tile:?}");
+            assert!(m.cycles_per_mac > 0.0 && m.cycles_per_mac < 5.0,
+                    "{elem:?} {tile:?}: {}", m.cycles_per_mac);
+        }
+    }
+
+    #[test]
+    fn oversized_tile_measures_spills() {
+        let t = TargetDesc::milkv_jupiter();
+        let cfg = MeasureConfig::prefill(256, 32, true);
+        let fit = measure_tile(&t, ElemType::F16,
+                               Tile { m0: 6, n0: 32, k0: 1 }, &cfg).unwrap();
+        let spill = measure_tile(&t, ElemType::F16,
+                                 Tile { m0: 10, n0: 32, k0: 1 }, &cfg).unwrap();
+        assert_eq!(fit.spill_insns, 0);
+        assert!(spill.spill_insns > 0);
+        assert!(spill.cycles_per_mac > fit.cycles_per_mac,
+                "spilling tile must cost more per MAC");
+    }
+
+    #[test]
+    fn illegal_tiles_rejected() {
+        let t = TargetDesc::milkv_jupiter();
+        let cfg = MeasureConfig::prefill(256, 33, true);
+        // partial-register strip
+        assert!(measure_tile(&t, ElemType::F16,
+                             Tile { m0: 6, n0: 33, k0: 1 }, &cfg).is_err());
+        // K0 != 1
+        assert!(measure_tile(&t, ElemType::F16,
+                             Tile { m0: 6, n0: 32, k0: 2 }, &cfg).is_err());
+        // non-RISC-V target
+        assert!(measure_tile(&TargetDesc::generic_x86(), ElemType::F16,
+                             Tile { m0: 6, n0: 32, k0: 1 }, &cfg).is_err());
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let t = TargetDesc::riscv_with_vlen(128);
+        let cfg = MeasureConfig::decode(128, 32, true);
+        let tile = Tile { m0: 1, n0: 32, k0: 1 };
+        let a = measure_tile(&t, ElemType::F16, tile, &cfg).unwrap();
+        let b = measure_tile(&t, ElemType::F16, tile, &cfg).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,505 @@
+//! Kernel-variant registry: the set of legal mmt4d tile shapes per
+//! VLEN/dtype/phase, and the tuning-profile overlay that makes selection
+//! measurement-driven.
+//!
+//! [`enumerate_candidates`] derives the legal (M0, N0, K0) space from the
+//! same register-file models the kernels are written against
+//! (`target::vreg_pressure` / `vreg_pressure_i8`): N0 must fill whole vector
+//! registers within the kernels' LMUL caps, K0 is 1 (the paper's strip
+//! kernels), and M0 stops where the pressure model says the tile would
+//! spill. The paper's static tiles are always members of this set.
+//!
+//! [`TileRegistry`] holds tuned winners keyed by
+//! `(vlen, dtype, phase, threads)`, persisted as a TOML-subset profile
+//! (`config/tuning-<target>.toml`, written by `tenx autotune`). Selection
+//! falls back in order: exact thread count → single-thread entry → the
+//! paper's static tables (`target::select_tiles_for`) — so with no profile
+//! on disk the stack behaves bit-identically to the static selection.
+
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::manifest::Tile;
+use crate::config::toml::TomlDoc;
+use crate::ir::ElemType;
+use crate::target::{check_vlen, select_tiles_for, tile_spills, tile_spills_i8,
+                    vreg_pressure, vreg_pressure_i8, Arch, Phase};
+
+/// Hard cap on M0 during enumeration (the pressure models cut earlier at
+/// every real VLEN; this only bounds the loop).
+const MAX_M0: usize = 16;
+
+/// Profile format version written/accepted by this build.
+pub const PROFILE_FORMAT_VERSION: i64 = 1;
+
+/// Is `tile` a shape the RVV kernel instruction streams can execute at
+/// `vlen` — whole-register N0 strip within the kernels' LMUL caps
+/// (`mmt4d_tile_rvv` asserts LMUL16 ≤ 4; `mmt4d_tile_rvv_i8` asserts
+/// LMUL8 ≤ 4), K0 = 1? (Spilling tiles are legal: the kernels model the
+/// spill traffic; fitting the register file is the *tuner's* job.)
+pub fn tile_is_legal(vlen: usize, elem: ElemType, tile: Tile) -> bool {
+    if check_vlen(vlen).is_err() || tile.m0 == 0 || tile.n0 == 0 || tile.k0 != 1 {
+        return false;
+    }
+    let (bits, max_lmul) = match elem {
+        ElemType::I8 => (8, 4),             // e8 strip, vsext image ≤ LMUL 8
+        ElemType::F16 | ElemType::F32 | ElemType::BF16 => (16, 4),
+        ElemType::I32 => return false,      // no mmt4d ukernel takes i32 operands
+    };
+    let strip_bits = tile.n0 * bits;
+    if strip_bits % vlen != 0 {
+        return false; // partial register: not a registry variant
+    }
+    let lmul = strip_bits / vlen;
+    lmul.is_power_of_two() && lmul <= max_lmul
+}
+
+/// Register pressure of `tile` under the dtype's kernel model.
+pub fn pressure_for(vlen: usize, elem: ElemType, tile: Tile) -> usize {
+    match elem {
+        ElemType::I8 => vreg_pressure_i8(tile, vlen),
+        _ => vreg_pressure(tile, vlen),
+    }
+}
+
+/// The legal strip widths (N0) per dtype at `vlen`: one, two and four
+/// e16 registers for the float kernels; one, two and four e8 registers for
+/// int8 (whose widened e32 image is issued as LMUL ≤ 8 half-groups).
+pub fn candidate_n0s(vlen: usize, elem: ElemType) -> Vec<usize> {
+    match elem {
+        ElemType::I8 => vec![vlen / 8, vlen / 4, vlen / 2],
+        _ => vec![vlen / 16, vlen / 8, vlen / 4],
+    }
+}
+
+/// Every legal, non-spilling (M0, N0, K0) candidate for
+/// `(vlen, dtype, phase)`. Decode (GEMV) keeps M0 = 1 — there is only one
+/// LHS row in flight; prefill sweeps M0 up to the register-file cliff.
+pub fn enumerate_candidates(vlen: usize, elem: ElemType,
+                            phase: Phase) -> Vec<Tile> {
+    let mut out = Vec::new();
+    let max_m0 = match phase {
+        Phase::Decode => 1,
+        Phase::Prefill => MAX_M0,
+    };
+    for n0 in candidate_n0s(vlen, elem) {
+        for m0 in 1..=max_m0 {
+            let tile = Tile { m0, n0, k0: 1 };
+            if !tile_is_legal(vlen, elem, tile) {
+                continue;
+            }
+            let spills = match elem {
+                ElemType::I8 => tile_spills_i8(tile, vlen, 32),
+                _ => tile_spills(tile, vlen, 32),
+            };
+            if !spills {
+                out.push(tile);
+            }
+        }
+    }
+    out
+}
+
+/// Smoke-mode candidate set: per strip width, only the smallest, middle and
+/// largest fitting M0 (the three regimes of the paper's A2 sweep:
+/// underutilized, mid, at-the-cliff). Always contains the static tiles.
+pub fn enumerate_candidates_quick(vlen: usize, elem: ElemType,
+                                  phase: Phase) -> Vec<Tile> {
+    let full = enumerate_candidates(vlen, elem, phase);
+    let mut out: Vec<Tile> = Vec::new();
+    for n0 in candidate_n0s(vlen, elem) {
+        let group: Vec<Tile> =
+            full.iter().copied().filter(|t| t.n0 == n0).collect();
+        if group.is_empty() {
+            continue;
+        }
+        for pick in [0, group.len() / 2, group.len() - 1] {
+            let t = group[pick];
+            if !out.contains(&t) {
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+/// One tuned registry entry: the winning tile plus the measurement that
+/// elected it (kept in the profile so regressions are diffable).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedTile {
+    /// The elected tile shape.
+    pub tile: Tile,
+    /// Simulated cycles per MAC of the winning candidate.
+    pub cycles_per_mac: f64,
+    /// Spill instructions observed (0 for every tuner-elected tile).
+    pub spills: u64,
+    /// Register pressure under the dtype's model.
+    pub pressure: usize,
+}
+
+/// Tuned tile selections keyed by `(vlen, dtype, phase, threads)`, with
+/// static-table fallback. See the module docs for the fallback order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TileRegistry {
+    /// Canonical section key (`riscv64-vlen256.f16.prefill.t1`) → entry.
+    entries: BTreeMap<String, TunedTile>,
+}
+
+fn key_of(vlen: usize, elem: ElemType, phase: Phase, threads: usize) -> String {
+    // f32/bf16 run the f16 kernels (the static table treats them alike), so
+    // they share the f16 tuning entries.
+    let dtype = match elem {
+        ElemType::I8 => "i8",
+        _ => "f16",
+    };
+    format!("riscv64-vlen{vlen}.{dtype}.{}.t{threads}", phase.name())
+}
+
+fn parse_key(s: &str) -> anyhow::Result<(usize, ElemType, Phase, usize)> {
+    let parts: Vec<&str> = s.split('.').collect();
+    anyhow::ensure!(parts.len() == 4,
+                    "profile section {s:?} is not <arch>.<dtype>.<phase>.tN");
+    let vlen: usize = parts[0]
+        .strip_prefix("riscv64-vlen")
+        .ok_or_else(|| anyhow::anyhow!("profile section {s:?}: unknown arch"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("profile section {s:?}: bad VLEN ({e})"))?;
+    check_vlen(vlen)?;
+    let elem = ElemType::parse(parts[1])
+        .ok_or_else(|| anyhow::anyhow!("profile section {s:?}: bad dtype"))?;
+    let phase = Phase::parse(parts[2])
+        .ok_or_else(|| anyhow::anyhow!("profile section {s:?}: bad phase"))?;
+    let threads: usize = parts[3]
+        .strip_prefix('t')
+        .ok_or_else(|| anyhow::anyhow!("profile section {s:?}: bad threads"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("profile section {s:?}: bad threads ({e})"))?;
+    anyhow::ensure!(threads >= 1, "profile section {s:?}: threads must be >= 1");
+    Ok((vlen, elem, phase, threads))
+}
+
+impl TileRegistry {
+    /// A registry with no tuned entries: selection is exactly the paper's
+    /// static tables.
+    pub fn empty() -> TileRegistry {
+        TileRegistry::default()
+    }
+
+    /// Number of tuned entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no profile is loaded (pure static fallback).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record a tuned winner for `(vlen, dtype, phase, threads)`.
+    pub fn insert(&mut self, vlen: usize, elem: ElemType, phase: Phase,
+                  threads: usize, tuned: TunedTile) {
+        self.entries.insert(key_of(vlen, elem, phase, threads), tuned);
+    }
+
+    /// The tuned entry for the key, falling back to the single-thread entry
+    /// for the same `(vlen, dtype, phase)`.
+    pub fn tuned(&self, vlen: usize, elem: ElemType, phase: Phase,
+                 threads: usize) -> Option<TunedTile> {
+        self.entries
+            .get(&key_of(vlen, elem, phase, threads))
+            .or_else(|| self.entries.get(&key_of(vlen, elem, phase, 1)))
+            .copied()
+    }
+
+    /// Tile selection through the registry: tuned entry when one matches,
+    /// else the paper's static tables. With an empty registry this is
+    /// bit-identical to [`crate::target::select_tiles_for`].
+    pub fn select(&self, arch: Arch, phase: Phase, elem: ElemType,
+                  threads: usize) -> anyhow::Result<Tile> {
+        if elem != ElemType::I32 {
+            if let Arch::Riscv64 { vlen_bits } = arch {
+                check_vlen(vlen_bits)?;
+                if let Some(t) = self.tuned(vlen_bits, elem, phase, threads) {
+                    return Ok(t.tile);
+                }
+            }
+        }
+        select_tiles_for(arch, phase, elem)
+    }
+
+    /// Iterate entries as `(section key, entry)` in canonical order.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &TunedTile)> {
+        self.entries.iter()
+    }
+
+    /// Render the profile as TOML (the format `load_path` reads back).
+    pub fn render_toml(&self, target_name: &str) -> String {
+        let mut s = String::new();
+        s.push_str("# mmt4d tile tuning profile — generated by `tenx autotune`.\n");
+        s.push_str("# Winners measured on the RVV simulator; selection falls\n");
+        s.push_str("# back to the paper's static tables for any missing key.\n\n");
+        s.push_str("[meta]\n");
+        s.push_str(&format!("format_version = {PROFILE_FORMAT_VERSION}\n"));
+        s.push_str(&format!("target = \"{target_name}\"\n"));
+        for (key, t) in &self.entries {
+            s.push_str(&format!("\n[{key}]\n"));
+            s.push_str(&format!("m0 = {}\n", t.tile.m0));
+            s.push_str(&format!("n0 = {}\n", t.tile.n0));
+            s.push_str(&format!("k0 = {}\n", t.tile.k0));
+            // f64 Display is shortest-round-trip: the loaded profile's
+            // measurement compares bit-equal to the in-memory one.
+            s.push_str(&format!("cycles_per_mac = {}\n", t.cycles_per_mac));
+            s.push_str(&format!("spills = {}\n", t.spills));
+            s.push_str(&format!("pressure = {}\n", t.pressure));
+        }
+        s
+    }
+
+    /// Write the profile to `path` (creating parent directories).
+    pub fn save(&self, path: &Path, target_name: &str) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render_toml(target_name))?;
+        Ok(())
+    }
+
+    /// Parse a profile document. Every non-`meta` section must be a valid
+    /// tuning key with a kernel-legal tile — a malformed profile is an
+    /// error, never a silent fallback.
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<TileRegistry> {
+        if let Some(v) = doc.get_int("meta", "format_version")? {
+            anyhow::ensure!(v == PROFILE_FORMAT_VERSION,
+                            "unsupported profile format_version {v}");
+        }
+        let mut reg = TileRegistry::empty();
+        for section in doc.sections() {
+            if section == "meta" || section.is_empty() {
+                continue;
+            }
+            let (vlen, elem, phase, threads) = parse_key(section)?;
+            // f32/bf16 sections alias onto the f16 canonical key (shared
+            // kernels); two sections landing on one key would silently
+            // last-write-win, so collisions are an error instead.
+            anyhow::ensure!(
+                !reg.entries.contains_key(&key_of(vlen, elem, phase, threads)),
+                "profile sections alias the same tuning key {:?} (f32/bf16 \
+                 share the f16 entries)",
+                key_of(vlen, elem, phase, threads)
+            );
+            let get = |k: &str| -> anyhow::Result<usize> {
+                let v = doc.get_int(section, k)?.ok_or_else(|| {
+                    anyhow::anyhow!("profile section [{section}] missing {k}")
+                })?;
+                anyhow::ensure!(v >= 0, "[{section}] {k} must be >= 0");
+                Ok(v as usize)
+            };
+            let tile = Tile { m0: get("m0")?, n0: get("n0")?, k0: get("k0")? };
+            anyhow::ensure!(
+                tile_is_legal(vlen, elem, tile),
+                "profile section [{section}]: tile {}x{}x{} is not a legal \
+                 {} kernel variant at VLEN={vlen}",
+                tile.m0, tile.n0, tile.k0, elem.name()
+            );
+            let tuned = TunedTile {
+                tile,
+                cycles_per_mac: doc
+                    .get_float(section, "cycles_per_mac")?
+                    .unwrap_or(0.0),
+                spills: doc.get_int(section, "spills")?.unwrap_or(0).max(0)
+                    as u64,
+                pressure: doc
+                    .get_int(section, "pressure")?
+                    .map(|v| v.max(0) as usize)
+                    .unwrap_or_else(|| pressure_for(vlen, elem, tile)),
+            };
+            reg.insert(vlen, elem, phase, threads, tuned);
+        }
+        Ok(reg)
+    }
+
+    /// Load a profile from disk.
+    pub fn load_path(path: &Path) -> anyhow::Result<TileRegistry> {
+        let doc = TomlDoc::load(path)
+            .map_err(|e| anyhow::anyhow!("reading tuning profile {path:?}: {e}"))?;
+        Self::from_toml(&doc)
+            .map_err(|e| anyhow::anyhow!("tuning profile {path:?}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tiles_are_candidates_and_legal() {
+        for vlen in [128usize, 256, 512] {
+            let arch = Arch::Riscv64 { vlen_bits: vlen };
+            for phase in [Phase::Prefill, Phase::Decode] {
+                for elem in [ElemType::F16, ElemType::I8] {
+                    let tile = select_tiles_for(arch, phase, elem).unwrap();
+                    assert!(tile_is_legal(vlen, elem, tile),
+                            "{vlen} {elem:?} {phase:?}");
+                    let full = enumerate_candidates(vlen, elem, phase);
+                    assert!(full.contains(&tile),
+                            "static tile missing from candidates: {vlen} \
+                             {elem:?} {phase:?}");
+                    let quick = enumerate_candidates_quick(vlen, elem, phase);
+                    assert!(quick.contains(&tile),
+                            "static tile missing from quick set: {vlen} \
+                             {elem:?} {phase:?}");
+                    assert!(quick.len() <= full.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_never_spill_and_fill_whole_registers() {
+        for vlen in [128usize, 256, 512, 1024] {
+            for elem in [ElemType::F16, ElemType::I8] {
+                for phase in [Phase::Prefill, Phase::Decode] {
+                    for t in enumerate_candidates(vlen, elem, phase) {
+                        assert_eq!(t.k0, 1);
+                        assert!(pressure_for(vlen, elem, t) <= 32,
+                                "{vlen} {elem:?} {t:?}");
+                        let bits = if elem == ElemType::I8 { 8 } else { 16 };
+                        assert_eq!((t.n0 * bits) % vlen, 0, "{vlen} {t:?}");
+                        if phase == Phase::Decode {
+                            assert_eq!(t.m0, 1);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_registry_is_the_static_tables() {
+        let reg = TileRegistry::empty();
+        for vlen in [128usize, 256, 512] {
+            let arch = Arch::Riscv64 { vlen_bits: vlen };
+            for phase in [Phase::Prefill, Phase::Decode] {
+                for elem in [ElemType::F16, ElemType::F32, ElemType::I8] {
+                    assert_eq!(reg.select(arch, phase, elem, 1).unwrap(),
+                               select_tiles_for(arch, phase, elem).unwrap());
+                }
+            }
+        }
+        // non-riscv targets and i32 behave exactly like the static path too
+        assert_eq!(reg.select(Arch::X86_64, Phase::Prefill, ElemType::F16, 1)
+                       .unwrap(),
+                   Tile { m0: 16, n0: 16, k0: 1 });
+        assert!(reg.select(Arch::Riscv64 { vlen_bits: 256 }, Phase::Prefill,
+                           ElemType::I32, 1).is_err());
+    }
+
+    #[test]
+    fn tuned_entry_overrides_and_threads_fall_back() {
+        let mut reg = TileRegistry::empty();
+        let tuned = TunedTile {
+            tile: Tile { m0: 4, n0: 32, k0: 1 },
+            cycles_per_mac: 0.5,
+            spills: 0,
+            pressure: pressure_for(256, ElemType::F16, Tile { m0: 4, n0: 32,
+                                                              k0: 1 }),
+        };
+        reg.insert(256, ElemType::F16, Phase::Prefill, 1, tuned);
+        let arch = Arch::Riscv64 { vlen_bits: 256 };
+        // exact hit
+        assert_eq!(reg.select(arch, Phase::Prefill, ElemType::F16, 1).unwrap(),
+                   tuned.tile);
+        // t8 missing -> falls back to the t1 entry
+        assert_eq!(reg.select(arch, Phase::Prefill, ElemType::F16, 8).unwrap(),
+                   tuned.tile);
+        // f32 shares the f16 entries
+        assert_eq!(reg.select(arch, Phase::Prefill, ElemType::F32, 1).unwrap(),
+                   tuned.tile);
+        // other keys stay static
+        assert_eq!(reg.select(arch, Phase::Decode, ElemType::F16, 1).unwrap(),
+                   Tile { m0: 1, n0: 64, k0: 1 });
+        assert_eq!(reg.select(arch, Phase::Prefill, ElemType::I8, 1).unwrap(),
+                   Tile { m0: 7, n0: 32, k0: 1 });
+        // a VLEN without entries stays static
+        assert_eq!(reg.select(Arch::Riscv64 { vlen_bits: 128 }, Phase::Prefill,
+                              ElemType::F16, 1).unwrap(),
+                   Tile { m0: 6, n0: 16, k0: 1 });
+    }
+
+    #[test]
+    fn profile_round_trips_through_toml() {
+        let mut reg = TileRegistry::empty();
+        reg.insert(256, ElemType::F16, Phase::Prefill, 1, TunedTile {
+            tile: Tile { m0: 6, n0: 32, k0: 1 },
+            cycles_per_mac: 0.3125,
+            spills: 0,
+            pressure: 30,
+        });
+        reg.insert(256, ElemType::I8, Phase::Decode, 8, TunedTile {
+            tile: Tile { m0: 1, n0: 128, k0: 1 },
+            cycles_per_mac: 0.46875,
+            spills: 0,
+            pressure: 32,
+        });
+        let text = reg.render_toml("milkv-jupiter");
+        let doc = TomlDoc::parse(&text).unwrap();
+        assert_eq!(doc.get_str("meta", "target"), Some("milkv-jupiter"));
+        let back = TileRegistry::from_toml(&doc).unwrap();
+        assert_eq!(back, reg);
+        assert_eq!(back.tuned(256, ElemType::I8, Phase::Decode, 8).unwrap()
+                       .tile,
+                   Tile { m0: 1, n0: 128, k0: 1 });
+    }
+
+    #[test]
+    fn malformed_profiles_rejected() {
+        // bad section name
+        let doc = TomlDoc::parse("[riscv64-vlen256.f16.prefill]\nm0 = 6\n\
+                                  n0 = 32\nk0 = 1\n").unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
+        // illegal tile (partial register strip)
+        let doc = TomlDoc::parse("[riscv64-vlen256.f16.prefill.t1]\nm0 = 6\n\
+                                  n0 = 33\nk0 = 1\n").unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
+        // missing m0
+        let doc = TomlDoc::parse("[riscv64-vlen256.f16.prefill.t1]\n\
+                                  n0 = 32\nk0 = 1\n").unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
+        // wrong format version
+        let doc = TomlDoc::parse("[meta]\nformat_version = 99\n").unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
+        // bad VLEN in the key
+        let doc = TomlDoc::parse("[riscv64-vlen100.f16.prefill.t1]\nm0 = 6\n\
+                                  n0 = 32\nk0 = 1\n").unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
+        // f32 section aliases the f16 canonical key: collision is an error,
+        // never a silent overwrite
+        let doc = TomlDoc::parse(
+            "[riscv64-vlen256.f16.prefill.t1]\nm0 = 6\nn0 = 32\nk0 = 1\n\
+             [riscv64-vlen256.f32.prefill.t1]\nm0 = 4\nn0 = 32\nk0 = 1\n",
+        )
+        .unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn save_and_load_path_round_trip() {
+        let mut reg = TileRegistry::empty();
+        reg.insert(512, ElemType::F16, Phase::Decode, 1, TunedTile {
+            tile: Tile { m0: 1, n0: 128, k0: 1 },
+            cycles_per_mac: 0.421875,
+            spills: 0,
+            pressure: 20,
+        });
+        let dir = std::env::temp_dir().join("tenx-autotune-test");
+        let path = dir.join("tuning-riscv64-vlen512.toml");
+        reg.save(&path, "riscv64-vlen512").unwrap();
+        let back = TileRegistry::load_path(&path).unwrap();
+        assert_eq!(back, reg);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

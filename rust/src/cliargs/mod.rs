@@ -148,6 +148,25 @@ pub fn parse_thread_count(s: &str) -> Result<usize, String> {
     }
 }
 
+/// Parse a comma-separated `--threads` list (`"1"`, `"1,8"`, `"2,auto"`):
+/// each entry via [`parse_thread_count`], deduplicated, ascending. Used by
+/// `tenx autotune` to tune one profile entry per worker count.
+pub fn parse_thread_list(s: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            return Err(format!("empty entry in thread list {s:?}"));
+        }
+        let n = parse_thread_count(part)?;
+        if !out.contains(&n) {
+            out.push(n);
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
 #[derive(Debug, Clone)]
 pub struct Matches {
     values: BTreeMap<String, String>,
@@ -246,6 +265,17 @@ mod tests {
         assert!(parse_thread_count("0").is_err());
         assert!(parse_thread_count("-2").is_err());
         assert!(parse_thread_count("many").is_err());
+    }
+
+    #[test]
+    fn thread_lists_parse() {
+        assert_eq!(parse_thread_list("1"), Ok(vec![1]));
+        assert_eq!(parse_thread_list("8,1"), Ok(vec![1, 8]));
+        assert_eq!(parse_thread_list("4, 2, 4"), Ok(vec![2, 4]));
+        assert!(parse_thread_list("auto").unwrap()[0] >= 1);
+        assert!(parse_thread_list("").is_err());
+        assert!(parse_thread_list("1,,2").is_err());
+        assert!(parse_thread_list("1,zero").is_err());
     }
 
     #[test]

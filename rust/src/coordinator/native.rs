@@ -17,9 +17,10 @@
 use anyhow::Result;
 
 use super::backend::{BackendDims, ModelBackend};
+use crate::autotune::TileRegistry;
 use crate::config::manifest::Tile;
 use crate::ir::ElemType;
-use crate::target::{select_tiles_for, Arch, Phase};
+use crate::target::{Arch, Phase};
 use crate::taskpool::Parallelism;
 use crate::ukernel::{self, quant};
 use crate::util::f16::F16;
@@ -84,20 +85,34 @@ impl NativeBackend {
     /// from the paper's VLEN=256 selection per precision.
     pub fn new(batch: usize, prefill_seq: usize, max_seq: usize, vocab: usize,
                d_model: usize, precision: Precision, seed: u64) -> NativeBackend {
+        Self::new_with_tiles(batch, prefill_seq, max_seq, vocab, d_model,
+                             precision, seed, &TileRegistry::empty(), 1)
+            .expect("static VLEN=256 tiles are always selectable")
+    }
+
+    /// [`NativeBackend::new`] with tile selection routed through a tuning
+    /// profile for the serving kernels (the static tables when `tiles` is
+    /// empty or has no matching key). `threads` is the worker count the
+    /// backend will serve with — tuned profiles may elect different tiles
+    /// per thread count (taskpool occupancy), and the int8 path pre-packs
+    /// its weights per tile, so the choice must be known at load time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_tiles(batch: usize, prefill_seq: usize, max_seq: usize,
+                          vocab: usize, d_model: usize, precision: Precision,
+                          seed: u64, tiles: &TileRegistry,
+                          threads: usize) -> Result<NativeBackend> {
         // The tied head writes column next_token(t) per token t; that map is
         // a bijection (and the favoured-token property holds) only when 7
         // and the vocab size are coprime.
-        assert!(vocab % 7 != 0,
-                "NativeBackend vocab must not be a multiple of 7");
+        anyhow::ensure!(vocab % 7 != 0,
+                        "NativeBackend vocab must not be a multiple of 7");
         let arch = Arch::Riscv64 { vlen_bits: 256 };
         let elem = match precision {
             Precision::F16 => ElemType::F16,
             Precision::Int8 => ElemType::I8,
         };
-        let prefill_tile = select_tiles_for(arch, Phase::Prefill, elem)
-            .expect("VLEN=256 tiles");
-        let decode_tile = select_tiles_for(arch, Phase::Decode, elem)
-            .expect("VLEN=256 tiles");
+        let prefill_tile = tiles.select(arch, Phase::Prefill, elem, threads)?;
+        let decode_tile = tiles.select(arch, Phase::Decode, elem, threads)?;
 
         let mut rng = Rng::new(seed);
         let embed: Vec<F16> = (0..vocab * d_model)
@@ -135,7 +150,7 @@ impl NativeBackend {
             }
         };
 
-        NativeBackend {
+        Ok(NativeBackend {
             dims: BackendDims { batch, prefill_seq, max_seq, vocab },
             d_model,
             precision,
@@ -149,7 +164,12 @@ impl NativeBackend {
             decode_tile,
             live: vec![vec![]; batch],
             staged: None,
-        }
+        })
+    }
+
+    /// The (prefill, decode) tiles this backend's matmuls run on.
+    pub fn tiles(&self) -> (Tile, Tile) {
+        (self.prefill_tile, self.decode_tile)
     }
 
     /// Which numeric path this backend serves with.
@@ -347,6 +367,44 @@ mod tests {
             pooled.commit_slots(&[0, 1]).unwrap();
             assert_eq!(serial.decode(&[9, 8, 7, 6], &[8; 4]).unwrap(),
                        pooled.decode(&[9, 8, 7, 6], &[8; 4]).unwrap(),
+                       "{p:?} decode");
+        }
+    }
+
+    #[test]
+    fn tuned_tiles_change_kernels_not_logits() {
+        // A tuning profile re-tiles the serving matmuls; with K0 = 1 every
+        // output element still accumulates over K in ascending order, so
+        // the logits must stay bit-identical to the static-tile backend —
+        // for both precisions (the int8 path re-packs its weights for the
+        // tuned tiles at load time).
+        use crate::autotune::{pressure_for, TileRegistry, TunedTile};
+        let mut reg = TileRegistry::empty();
+        for (elem, phase, tile) in [
+            (ElemType::F16, Phase::Prefill, Tile { m0: 4, n0: 16, k0: 1 }),
+            (ElemType::F16, Phase::Decode, Tile { m0: 1, n0: 32, k0: 1 }),
+            (ElemType::I8, Phase::Prefill, Tile { m0: 5, n0: 32, k0: 1 }),
+            (ElemType::I8, Phase::Decode, Tile { m0: 1, n0: 64, k0: 1 }),
+        ] {
+            reg.insert(256, elem, phase, 1, TunedTile {
+                tile,
+                cycles_per_mac: 0.5,
+                spills: 0,
+                pressure: pressure_for(256, elem, tile),
+            });
+        }
+        for p in [Precision::F16, Precision::Int8] {
+            let mut stat = backend(p);
+            let mut tuned = NativeBackend::new_with_tiles(
+                4, 8, 32, 128, 64, p, 42, &reg, 1).unwrap();
+            assert_ne!(stat.tiles(), tuned.tiles(), "{p:?}: tiles overridden");
+            let toks: Vec<i32> = (0..32).collect();
+            assert_eq!(stat.prefill(&toks).unwrap(),
+                       tuned.prefill(&toks).unwrap(), "{p:?} prefill");
+            stat.commit_slots(&[0, 1]).unwrap();
+            tuned.commit_slots(&[0, 1]).unwrap();
+            assert_eq!(stat.decode(&[9, 8, 7, 6], &[8; 4]).unwrap(),
+                       tuned.decode(&[9, 8, 7, 6], &[8; 4]).unwrap(),
                        "{p:?} decode");
         }
     }

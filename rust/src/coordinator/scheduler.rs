@@ -352,6 +352,65 @@ mod tests {
     }
 
     #[test]
+    fn cache_full_exactly_at_max_seq_boundary() {
+        // The next decode step would write slot pos + 1; the scheduler must
+        // cut the sequence off with CacheFull exactly when that slot hits
+        // max_seq — never asking the backend for an out-of-cache position
+        // (MockBackend::decode errors on pos >= max_seq, so an off-by-one
+        // here fails the unwrap below). max_seq = prefill_seq + 1 is the
+        // finish-on-first-token edge: CacheFull before any decode step.
+        for (max_seq, want_tokens) in [(9usize, 1usize), (10, 2), (12, 4)] {
+            let mut s = Scheduler::new(MockBackend::new(1, 8, max_seq, 64), 4,
+                                       Arc::new(ServingMetrics::default()), 1);
+            s.submit(mk_req(1, (0..8).collect(), 100));
+            while s.has_work() {
+                s.step().unwrap();
+            }
+            let done = s.take_finished();
+            assert_eq!(done.len(), 1, "max_seq={max_seq}");
+            assert_eq!(done[0].finish, FinishReason::CacheFull,
+                       "max_seq={max_seq}");
+            assert_eq!(done[0].tokens.len(), want_tokens, "max_seq={max_seq}");
+            // generation stops exactly at the cache boundary, token-exact
+            assert_eq!(done[0].prompt_len + done[0].tokens.len(), max_seq,
+                       "max_seq={max_seq}");
+        }
+    }
+
+    #[test]
+    fn admission_is_fifo_when_batch_full_and_queue_nonempty() {
+        // One slot, four queued requests: while the batch is full no
+        // admission (and no prefill call) may happen, and when the slot
+        // frees the *head* of the queue gets it — completions come out in
+        // exact submission order, one prefill wave per request.
+        let mut s = sched(1);
+        for id in 0..4 {
+            assert!(s.submit(mk_req(id, vec![1 + id as u32], 3)));
+        }
+        assert_eq!(s.pending_count(), 4);
+        let mut finish_order = Vec::new();
+        let mut steps = 0;
+        while s.has_work() {
+            let was_full = s.active_count() == 1;
+            let prefills_before = s.backend.prefill_calls;
+            let pending_before = s.pending_count();
+            s.step().unwrap();
+            if was_full {
+                assert_eq!(s.backend.prefill_calls, prefills_before,
+                           "admitted into a full batch");
+                assert_eq!(s.pending_count(), pending_before,
+                           "queue drained while the batch was full");
+            }
+            finish_order.extend(s.take_finished().into_iter().map(|d| d.id));
+            steps += 1;
+            assert!(steps < 100, "stuck");
+        }
+        assert_eq!(finish_order, vec![0, 1, 2, 3], "FIFO admission order");
+        assert_eq!(s.backend.prefill_calls, 4, "one admission wave each");
+        assert_eq!(s.metrics.queue_rejections.get(), 0);
+    }
+
+    #[test]
     fn queue_wait_observed_per_admitted_request() {
         let mut s = sched(2);
         for id in 0..3 {

@@ -6,7 +6,9 @@
 //! * **Layer 1/2 (build time, Python)** — Pallas mmt4d/pack/unpack kernels and
 //!   a Llama-architecture model, AOT-lowered to HLO text artifacts.
 //! * **Layer 3 (this crate)** — the compiler pipeline (`ir`, `passes`,
-//!   `target`), the microkernel library (`ukernel`, including the int8
+//!   `target`), the kernel-variant registry + empirical tile autotuner
+//!   (`autotune`, `tenx autotune`), the microkernel library (`ukernel`,
+//!   including the int8
 //!   s8s8s32 quantized path and its `quant` shim), the simulated RISC-V
 //!   testbed (`rvv`, `cachesim`, `kernels`), the performance model
 //!   (`perfmodel`), the IREE-style thread-pool task system that shards the
@@ -16,6 +18,7 @@
 //! See docs/ARCHITECTURE.md for the module-by-module map onto the paper's
 //! pipeline and docs/BENCHMARKS.md for the bench ↔ figure index.
 
+pub mod autotune;
 pub mod bench;
 pub mod cachesim;
 pub mod cliargs;

@@ -3,7 +3,8 @@
 
 use std::path::PathBuf;
 
-use tenx_iree::cliargs::{parse_thread_count, Command};
+use tenx_iree::autotune::{self, TileRegistry};
+use tenx_iree::cliargs::{parse_thread_count, parse_thread_list, Command};
 use tenx_iree::coordinator::{self, EngineBackend, NativeBackend, Precision};
 use tenx_iree::ir::{build_matmul_func, ElemType, Module};
 use tenx_iree::kernels::System;
@@ -32,6 +33,8 @@ fn usage() -> String {
      serve      serve with continuous batching (artifacts, or --native \
      [--precision f16|i8] [--threads N])\n  \
      compile    run the materialize-encoding pipeline on a matmul and print IR\n  \
+     autotune   measure mmt4d tile candidates on the RVV simulator and \
+     write a tuning profile\n  \
      table1     accuracy-equivalence eval (reference vs mmt4d path)\n  \
      table2     modeled tokens/sec on the simulated MILK-V Jupiter\n  \
      info       print manifest + target information\n\n\
@@ -47,6 +50,7 @@ fn run(args: &[String]) -> Result<(), String> {
     match cmd.as_str() {
         "serve" => cmd_serve(rest),
         "compile" => cmd_compile(rest),
+        "autotune" => cmd_autotune(rest),
         "table1" => cmd_table1(rest),
         "table2" => cmd_table2(rest),
         "info" => cmd_info(rest),
@@ -57,6 +61,16 @@ fn run(args: &[String]) -> Result<(), String> {
 
 fn err_str<E: std::fmt::Display>(e: E) -> String {
     format!("error: {e}")
+}
+
+/// Load a `--tuning-profile` argument: empty means the paper's static
+/// tables (an empty registry).
+fn load_tiles(path: &str) -> Result<TileRegistry, String> {
+    if path.is_empty() {
+        Ok(TileRegistry::empty())
+    } else {
+        TileRegistry::load_path(std::path::Path::new(path)).map_err(err_str)
+    }
 }
 
 fn cmd_serve(argv: &[String]) -> Result<(), String> {
@@ -70,6 +84,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
              "kernel worker threads for the native backend (N or \"auto\")")
         .opt("queue-capacity", "64",
              "pending-request queue bound (submissions beyond it are rejected)")
+        .opt("tuning-profile", "",
+             "TOML tile-tuning profile from `tenx autotune` for the native \
+              kernels (empty = the paper's static tiles)")
         .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
@@ -89,11 +106,30 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         }
         let precision = Precision::parse(m.str("precision"))
             .ok_or_else(|| format!("unknown precision {:?}", m.str("precision")))?;
+        let tiles = load_tiles(m.str("tuning-profile"))?;
+        // The native backend is a VLEN=256 deployment: only profile entries
+        // for that key can take effect. Report what actually applies.
+        let elem = match precision {
+            Precision::F16 => ElemType::F16,
+            Precision::Int8 => ElemType::I8,
+        };
+        let tuned_active = tiles.tuned(256, elem, Phase::Prefill, threads)
+            .is_some()
+            || tiles.tuned(256, elem, Phase::Decode, threads).is_some();
+        if !tiles.is_empty() && !tuned_active {
+            eprintln!("note: tuning profile has no riscv64-vlen256 {} \
+                       entries; serving with the paper's static tiles",
+                      precision.name());
+        }
         let vocab = 512;
         eprintln!("serving the native mmt4d backend ({} path, {threads} \
-                   kernel thread{})...",
-                  precision.name(), if threads == 1 { "" } else { "s" });
-        let backend = NativeBackend::new(4, 16, 64, vocab, 64, precision, 42)
+                   kernel thread{}{})...",
+                  precision.name(), if threads == 1 { "" } else { "s" },
+                  if tuned_active { ", tuned tiles" } else { "" });
+        let backend = NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
+                                                    precision, 42, &tiles,
+                                                    threads)
+            .map_err(err_str)?
             .with_parallelism(Parallelism::new(threads));
         let handle = coordinator::server::start(backend, queue_capacity, 42);
         handle.metrics.compute_threads.add(threads as u64);
@@ -102,6 +138,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         if threads != 1 {
             eprintln!("note: --threads applies to the native backend; the \
                        artifact engine executes via PJRT");
+        }
+        if !m.str("tuning-profile").is_empty() {
+            eprintln!("note: --tuning-profile applies to the native \
+                       backend; artifact tiles are baked in at AOT time");
         }
         eprintln!("loading artifacts from {dir:?} ({path:?})...");
         let manifest = tenx_iree::config::Manifest::load(&dir).map_err(err_str)?;
@@ -146,12 +186,33 @@ fn cmd_compile(argv: &[String]) -> Result<(), String> {
         .opt("m", "64", "M dimension")
         .opt("k", "256", "K dimension")
         .opt("n", "256", "N dimension")
+        .opt("tuning-profile", "",
+             "TOML tile-tuning profile from `tenx autotune` (empty = the \
+              paper's static tiles)")
         .flag("upstream", "model the upstream (no riscv64 ukernels) registry");
     let m = cmd.parse(argv)?;
     let target = TargetDesc::by_name(m.str("target"))
         .ok_or_else(|| format!("unknown target {:?}", m.str("target")))?;
     let phase = Phase::parse(m.str("phase"))
         .ok_or_else(|| format!("unknown phase {:?}", m.str("phase")))?;
+    let tiles = load_tiles(m.str("tuning-profile"))?;
+    // The compile pipeline selects at the t1 key (see
+    // `TileRegistry::select`'s fallback order); flag a profile that can't
+    // apply to this target so the printed IR isn't mistaken for tuned.
+    if !tiles.is_empty() {
+        let applies = target.vlen_bits().is_some_and(|v| {
+            [ElemType::F16, ElemType::I8].iter().any(|&e| {
+                [Phase::Prefill, Phase::Decode]
+                    .iter()
+                    .any(|&p| tiles.tuned(v, e, p, 1).is_some())
+            })
+        });
+        if !applies {
+            eprintln!("note: tuning profile has no t1 entries for target \
+                       {}; compiling with the paper's static tiles",
+                      target.name);
+        }
+    }
     let (mm, kk, nn) = (m.usize("m")?, m.usize("k")?, m.usize("n")?);
 
     let mut module = Module {
@@ -166,12 +227,64 @@ fn cmd_compile(argv: &[String]) -> Result<(), String> {
             .add(tenx_iree::passes::lower_ukernels::LowerUkernels)
             .add(tenx_iree::passes::canonicalize::Canonicalize)
     } else {
-        PassManager::standard(&target, phase)
+        PassManager::standard_with_tiles(&target, phase, tiles)
     };
     let report = pm.run(&mut module).map_err(err_str)?;
     println!("// after ({} {}):\n{}", target.name, phase.name(),
              tenx_iree::ir::printer::print_module(&module));
     println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_autotune(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "autotune",
+        "measure every legal mmt4d tile candidate on the RVV simulator and \
+         write the winners as a TOML tuning profile")
+        .opt("target", "milkv-jupiter",
+             "RISC-V target (milkv-jupiter, riscv64-vlenN — e.g. \
+              riscv64-vlen128, riscv64-vlen512)")
+        .opt("dtype", "all", "kernel family to tune: f16 | i8 | all")
+        .opt("threads", "1",
+             "comma-separated worker counts to elect winners for, e.g. 1,8")
+        .opt("out", "",
+             "profile path (default config/tuning-<target>.toml; \"-\" = \
+              print the profile to stdout only)")
+        .flag("quick", "smoke mode: thinned candidate set, short simulations");
+    let m = cmd.parse(argv)?;
+    let target = TargetDesc::by_name(m.str("target"))
+        .ok_or_else(|| format!("unknown target {:?}", m.str("target")))?;
+    if target.vlen_bits().is_none() {
+        return Err(format!("autotune needs a RISC-V target, got {:?}",
+                           m.str("target")));
+    }
+    let dtypes = match m.str("dtype") {
+        "f16" => vec![ElemType::F16],
+        "i8" | "int8" => vec![ElemType::I8],
+        "all" => vec![ElemType::F16, ElemType::I8],
+        other => return Err(format!("unknown dtype {other:?} (f16|i8|all)")),
+    };
+    let threads = parse_thread_list(m.str("threads"))?;
+    let cfg = autotune::AutotuneConfig { dtypes, threads,
+                                         quick: m.flag("quick") };
+
+    let (reg, report) = autotune::tune_target(&target, &cfg).map_err(err_str)?;
+    println!("{}", report.render());
+    let out = m.str("out");
+    if out == "-" {
+        println!("{}", reg.render_toml(target.name));
+        return Ok(());
+    }
+    let path = if out.is_empty() {
+        PathBuf::from(format!("config/tuning-{}.toml", target.name))
+    } else {
+        PathBuf::from(out)
+    };
+    reg.save(&path, target.name).map_err(err_str)?;
+    println!("wrote {} tuned entr{} to {}", reg.len(),
+             if reg.len() == 1 { "y" } else { "ies" }, path.display());
+    println!("use it with: tenx serve --native --tuning-profile {}  (or \
+              TENX_TUNING_PROFILE for the benches)", path.display());
     Ok(())
 }
 

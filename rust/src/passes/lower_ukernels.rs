@@ -1,12 +1,31 @@
 //! Lower pass: structural pack/mmt4d/unpack ops -> `ukernel.call @iree_uk_*`
 //! symbols resolved against the microkernel registry (IREE's
 //! `iree-codegen-lower-ukernel-ops` equivalent).
+//!
+//! Every emitted symbol is checked against the registry grammar before it
+//! lands in the IR: `parse_symbol(symbol_for(op))` must reproduce the op
+//! exactly, so a tile shape the registry cannot name (however it got into
+//! the types — static tables, a tuning profile, hand-built IR) fails the
+//! pass instead of producing an unresolvable `ukernel.call`.
 
 use super::Pass;
 use crate::ir::{Module, OpKind, PackKind};
-use crate::ukernel::{symbol_for, UkernelOp};
+use crate::ukernel::{parse_symbol, symbol_for, UkernelOp};
 
 pub struct LowerUkernels;
+
+/// Format `uop`'s registry symbol and verify it round-trips (the registry
+/// consultation described in the module docs).
+fn registry_symbol(uop: &UkernelOp) -> anyhow::Result<String> {
+    let sym = symbol_for(uop);
+    let back = parse_symbol(&sym).map_err(|e| {
+        anyhow::anyhow!("emitted symbol {sym:?} is not in the registry \
+                         grammar: {e}")
+    })?;
+    anyhow::ensure!(&back == uop,
+                    "symbol {sym:?} does not round-trip to its op");
+    Ok(sym)
+}
 
 impl Pass for LowerUkernels {
     fn name(&self) -> &str {
@@ -37,7 +56,7 @@ impl Pass for LowerUkernels {
                             },
                         };
                         Some(OpKind::UkernelCall {
-                            symbol: symbol_for(&uop),
+                            symbol: registry_symbol(&uop)?,
                             args: vec![*src],
                         })
                     }
@@ -54,7 +73,7 @@ impl Pass for LowerUkernels {
                         };
                         let _ = src;
                         Some(OpKind::UkernelCall {
-                            symbol: symbol_for(&uop),
+                            symbol: registry_symbol(&uop)?,
                             args: vec![op.kind.operands()[0]],
                         })
                     }
@@ -71,7 +90,7 @@ impl Pass for LowerUkernels {
                             k0: lt.shape[3],
                         };
                         Some(OpKind::UkernelCall {
-                            symbol: symbol_for(&uop),
+                            symbol: registry_symbol(&uop)?,
                             args: vec![*lhs, *rhs],
                         })
                     }
@@ -169,6 +188,29 @@ mod tests {
             "iree_uk_mmt4d_i8i8i32_7x32x1",
             "iree_uk_unpack_i32_7x32",
         ]);
+    }
+
+    #[test]
+    fn emitted_symbols_round_trip_through_the_registry() {
+        // The pass's registry consultation, observed from outside: every
+        // symbol it lands in the IR parses back to a registry op.
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 64, 256, 256, ElemType::F16)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::riscv_with_vlen(512),
+                                          Phase::Prefill))
+            .add(LowerUkernels)
+            .run(&mut m)
+            .unwrap();
+        let mut calls = 0;
+        for op in &m.funcs[0].body {
+            if let OpKind::UkernelCall { symbol, .. } = &op.kind {
+                crate::ukernel::parse_symbol(symbol).unwrap();
+                calls += 1;
+            }
+        }
+        assert_eq!(calls, 4);
     }
 
     #[test]

@@ -24,8 +24,9 @@
 //! exactly the performance gap Table 2's "IREE" column measures.
 
 use super::Pass;
+use crate::autotune::TileRegistry;
 use crate::ir::{Module, Op, OpKind, PackKind, TensorType, Value};
-use crate::target::{select_tiles_for, Phase, TargetDesc};
+use crate::target::{Phase, TargetDesc};
 use crate::ukernel;
 
 pub struct MaterializeEncoding {
@@ -33,17 +34,30 @@ pub struct MaterializeEncoding {
     pub default_phase: Phase,
     /// Model the upstream registry (no riscv64 entries) for baselines.
     pub upstream_registry: bool,
+    /// Tile selection: tuned profile entries when loaded (`tenx autotune`),
+    /// the paper's static tables otherwise. An empty registry is
+    /// bit-identical to calling `target::select_tiles_for` directly —
+    /// pinned by `rust/tests/golden_lowering.rs`.
+    pub tiles: TileRegistry,
 }
 
 impl MaterializeEncoding {
     pub fn new(target: TargetDesc, phase: Phase) -> Self {
         MaterializeEncoding { target, default_phase: phase,
-                              upstream_registry: false }
+                              upstream_registry: false,
+                              tiles: TileRegistry::empty() }
     }
 
     pub fn upstream(target: TargetDesc, phase: Phase) -> Self {
         MaterializeEncoding { target, default_phase: phase,
-                              upstream_registry: true }
+                              upstream_registry: true,
+                              tiles: TileRegistry::empty() }
+    }
+
+    /// Select tiles through a tuning profile instead of the static tables.
+    pub fn with_tiles(mut self, tiles: TileRegistry) -> Self {
+        self.tiles = tiles;
+        self
     }
 
     fn phase_for(&self, m: usize) -> Phase {
@@ -116,11 +130,13 @@ impl Pass for MaterializeEncoding {
                         let (m, k) = (lt.shape[0], lt.shape[1]);
                         let n = rt.shape[1];
                         let phase = self.phase_for(m);
-                        // Dtype-aware selection: i8 gets the denser
-                        // widening-MAC tiles (7 x VLEN/8 prefill,
+                        // Dtype-aware selection through the kernel-variant
+                        // registry: a tuned profile entry when one matches,
+                        // else the paper's static tables (i8 gets the denser
+                        // widening-MAC tiles: 7 x VLEN/8 prefill,
                         // 1 x VLEN/2 decode on riscv64).
-                        let tile = select_tiles_for(self.target.arch, phase,
-                                                    lt.elem)?;
+                        let tile = self.tiles.select(self.target.arch, phase,
+                                                     lt.elem, 1)?;
                         let (m0, n0, k0) = (tile.m0, tile.n0, tile.k0);
                         let (m1, n1, k1) =
                             (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
@@ -312,6 +328,40 @@ mod tests {
             })
             .collect();
         assert_eq!(tiles, vec![(1, 1), (128, 1)]); // 1 x VLEN/2 x 1
+    }
+
+    #[test]
+    fn tuned_registry_overrides_static_tiles() {
+        use crate::autotune::{pressure_for, TileRegistry, TunedTile};
+        use crate::config::manifest::Tile;
+        use crate::ir::ElemType as ET;
+        let tuned_tile = Tile { m0: 4, n0: 32, k0: 1 };
+        let mut reg = TileRegistry::empty();
+        reg.insert(256, ET::F16, Phase::Prefill, 1, TunedTile {
+            tile: tuned_tile,
+            cycles_per_mac: 0.4,
+            spills: 0,
+            pressure: pressure_for(256, ET::F16, tuned_tile),
+        });
+        let mut m = Module {
+            funcs: vec![build_matmul_func("mm", 64, 256, 256, ElemType::F16)],
+        };
+        PassManager::new()
+            .add(MaterializeEncoding::new(TargetDesc::milkv_jupiter(),
+                                          Phase::Prefill)
+                .with_tiles(reg))
+            .run(&mut m)
+            .unwrap();
+        verify::verify_module(&m).unwrap();
+        let tiles: Vec<(usize, usize)> = m.funcs[0]
+            .body
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Pack { tile0, tile1, .. } => Some((tile0, tile1)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tiles, vec![(4, 1), (32, 1)], "tuned prefill tile");
     }
 
     #[test]

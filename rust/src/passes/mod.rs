@@ -60,10 +60,20 @@ impl PassManager {
     /// The paper's full pipeline for a target+phase.
     pub fn standard(target: &crate::target::TargetDesc,
                     phase: crate::target::Phase) -> Self {
+        Self::standard_with_tiles(target, phase,
+                                  crate::autotune::TileRegistry::empty())
+    }
+
+    /// [`PassManager::standard`] with tile selection routed through a tuning
+    /// profile (`tenx autotune`); an empty registry is the static pipeline.
+    pub fn standard_with_tiles(target: &crate::target::TargetDesc,
+                               phase: crate::target::Phase,
+                               tiles: crate::autotune::TileRegistry) -> Self {
         PassManager::new()
             .add(generalize::Generalize)
             .add(materialize_encoding::MaterializeEncoding::new(
-                target.clone(), phase))
+                target.clone(), phase)
+                .with_tiles(tiles))
             .add(lower_ukernels::LowerUkernels)
             .add(canonicalize::Canonicalize)
     }

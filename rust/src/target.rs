@@ -202,7 +202,9 @@ impl TargetDesc {
     }
 }
 
-fn check_vlen(vlen_bits: usize) -> anyhow::Result<()> {
+/// Validate a VLEN (>= 64, a power of two, multiple of 64) — shared with
+/// the autotune registry's profile loader.
+pub(crate) fn check_vlen(vlen_bits: usize) -> anyhow::Result<()> {
     anyhow::ensure!(vlen_bits >= 64 && vlen_bits % 64 == 0
                     && vlen_bits.is_power_of_two(),
                     "invalid VLEN {vlen_bits}");

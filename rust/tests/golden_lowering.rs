@@ -1,0 +1,277 @@
+//! Golden snapshot tests for the pass pipeline: the exact `ir::printer`
+//! text of matmul → mmt4d lowering at VLEN ∈ {128, 256, 512} for f16 and
+//! i8, both phases. Tile-selection regressions (static tables, registry
+//! fallback, pass plumbing) show up here as readable one-line diffs in the
+//! `iree_uk_*` symbols and packed tensor shapes.
+//!
+//! These tests run the pipeline with NO tuning profile, so they also pin
+//! the acceptance invariant: with no profile on disk, selected tiles are
+//! bit-identical to the paper's static tables.
+
+use tenx_iree::autotune::{pressure_for, TileRegistry, TunedTile};
+use tenx_iree::config::manifest::Tile;
+use tenx_iree::ir::{build_matmul_func, build_quant_matmul_func, printer,
+                    ElemType, Module};
+use tenx_iree::passes::lower_ukernels::LowerUkernels;
+use tenx_iree::passes::materialize_encoding::MaterializeEncoding;
+use tenx_iree::passes::PassManager;
+use tenx_iree::target::{Phase, TargetDesc};
+
+/// Lower one matmul through materialize-encoding (static tables — the
+/// "no profile on disk" configuration) and optionally lower-ukernels, and
+/// print it. Decode cases use M = 1: the pass's GEMV shape heuristic picks
+/// the decode encoding exactly as serving traffic would.
+fn lowered(vlen: usize, elem: ElemType, m: usize, k: usize, n: usize,
+           to_symbols: bool, tiles: Option<TileRegistry>) -> String {
+    let f = match elem {
+        ElemType::I8 => build_quant_matmul_func("mm", m, k, n),
+        _ => build_matmul_func("mm", m, k, n, elem),
+    };
+    let mut module = Module { funcs: vec![f] };
+    let mut enc = MaterializeEncoding::new(TargetDesc::riscv_with_vlen(vlen),
+                                           Phase::Prefill);
+    if let Some(reg) = tiles {
+        enc = enc.with_tiles(reg);
+    }
+    let pm = if to_symbols {
+        PassManager::new().add(enc).add(LowerUkernels)
+    } else {
+        PassManager::new().add(enc)
+    };
+    pm.run(&mut module).unwrap();
+    printer::print_module(&module)
+}
+
+#[track_caller]
+fn assert_golden(got: &str, want: &str, what: &str) {
+    assert_eq!(got, want,
+               "golden mismatch: {what}\n--- want ---\n{want}\n--- got ---\n\
+                {got}");
+}
+
+const PREFILL_F16_VLEN128: &str = "\
+func @mm(%0: tensor<12x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_f16_6x1(%0) : tensor<2x64x6x1xf16>
+  %4 = ukernel.call @iree_uk_pack_rhs_f16_16x1(%1) : tensor<8x64x16x1xf16>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32_6x16x1(%3, %4) : tensor<2x8x6x16xf32>
+  %2 = ukernel.call @iree_uk_unpack_f32_6x16(%5) : tensor<12x128xf32>
+  return %2
+}
+";
+
+const PREFILL_F16_VLEN256: &str = "\
+func @mm(%0: tensor<12x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_f16_6x1(%0) : tensor<2x64x6x1xf16>
+  %4 = ukernel.call @iree_uk_pack_rhs_f16_32x1(%1) : tensor<4x64x32x1xf16>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32_6x32x1(%3, %4) : tensor<2x4x6x32xf32>
+  %2 = ukernel.call @iree_uk_unpack_f32_6x32(%5) : tensor<12x128xf32>
+  return %2
+}
+";
+
+const PREFILL_F16_VLEN512: &str = "\
+func @mm(%0: tensor<12x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_f16_6x1(%0) : tensor<2x64x6x1xf16>
+  %4 = ukernel.call @iree_uk_pack_rhs_f16_64x1(%1) : tensor<2x64x64x1xf16>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32_6x64x1(%3, %4) : tensor<2x2x6x64xf32>
+  %2 = ukernel.call @iree_uk_unpack_f32_6x64(%5) : tensor<12x128xf32>
+  return %2
+}
+";
+
+const DECODE_F16_VLEN128: &str = "\
+func @mm(%0: tensor<1x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_f16_1x1(%0) : tensor<1x64x1x1xf16>
+  %4 = ukernel.call @iree_uk_pack_rhs_f16_32x1(%1) : tensor<4x64x32x1xf16>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32_1x32x1(%3, %4) : tensor<1x4x1x32xf32>
+  %2 = ukernel.call @iree_uk_unpack_f32_1x32(%5) : tensor<1x128xf32>
+  return %2
+}
+";
+
+const DECODE_F16_VLEN256: &str = "\
+func @mm(%0: tensor<1x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_f16_1x1(%0) : tensor<1x64x1x1xf16>
+  %4 = ukernel.call @iree_uk_pack_rhs_f16_64x1(%1) : tensor<2x64x64x1xf16>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32_1x64x1(%3, %4) : tensor<1x2x1x64xf32>
+  %2 = ukernel.call @iree_uk_unpack_f32_1x64(%5) : tensor<1x128xf32>
+  return %2
+}
+";
+
+const DECODE_F16_VLEN512: &str = "\
+func @mm(%0: tensor<1x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_f16_1x1(%0) : tensor<1x64x1x1xf16>
+  %4 = ukernel.call @iree_uk_pack_rhs_f16_128x1(%1) : tensor<1x64x128x1xf16>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32_1x128x1(%3, %4) : tensor<1x1x1x128xf32>
+  %2 = ukernel.call @iree_uk_unpack_f32_1x128(%5) : tensor<1x128xf32>
+  return %2
+}
+";
+
+const PREFILL_I8_VLEN128: &str = "\
+func @mm(%0: tensor<12x64xi8>, %1: tensor<64x128xi8>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_i8_7x1(%0) : tensor<2x64x7x1xi8>
+  %4 = ukernel.call @iree_uk_pack_rhs_i8_16x1(%1) : tensor<8x64x16x1xi8>
+  %5 = ukernel.call @iree_uk_mmt4d_i8i8i32_7x16x1(%3, %4) : tensor<2x8x7x16xi32>
+  %2 = ukernel.call @iree_uk_unpack_i32_7x16(%5) : tensor<12x128xi32>
+  return %2
+}
+";
+
+const PREFILL_I8_VLEN256: &str = "\
+func @mm(%0: tensor<12x64xi8>, %1: tensor<64x128xi8>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_i8_7x1(%0) : tensor<2x64x7x1xi8>
+  %4 = ukernel.call @iree_uk_pack_rhs_i8_32x1(%1) : tensor<4x64x32x1xi8>
+  %5 = ukernel.call @iree_uk_mmt4d_i8i8i32_7x32x1(%3, %4) : tensor<2x4x7x32xi32>
+  %2 = ukernel.call @iree_uk_unpack_i32_7x32(%5) : tensor<12x128xi32>
+  return %2
+}
+";
+
+const PREFILL_I8_VLEN512: &str = "\
+func @mm(%0: tensor<12x64xi8>, %1: tensor<64x128xi8>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_i8_7x1(%0) : tensor<2x64x7x1xi8>
+  %4 = ukernel.call @iree_uk_pack_rhs_i8_64x1(%1) : tensor<2x64x64x1xi8>
+  %5 = ukernel.call @iree_uk_mmt4d_i8i8i32_7x64x1(%3, %4) : tensor<2x2x7x64xi32>
+  %2 = ukernel.call @iree_uk_unpack_i32_7x64(%5) : tensor<12x128xi32>
+  return %2
+}
+";
+
+const DECODE_I8_VLEN128: &str = "\
+func @mm(%0: tensor<1x64xi8>, %1: tensor<64x128xi8>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_i8_1x1(%0) : tensor<1x64x1x1xi8>
+  %4 = ukernel.call @iree_uk_pack_rhs_i8_64x1(%1) : tensor<2x64x64x1xi8>
+  %5 = ukernel.call @iree_uk_mmt4d_i8i8i32_1x64x1(%3, %4) : tensor<1x2x1x64xi32>
+  %2 = ukernel.call @iree_uk_unpack_i32_1x64(%5) : tensor<1x128xi32>
+  return %2
+}
+";
+
+const DECODE_I8_VLEN256: &str = "\
+func @mm(%0: tensor<1x64xi8>, %1: tensor<64x128xi8>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_i8_1x1(%0) : tensor<1x64x1x1xi8>
+  %4 = ukernel.call @iree_uk_pack_rhs_i8_128x1(%1) : tensor<1x64x128x1xi8>
+  %5 = ukernel.call @iree_uk_mmt4d_i8i8i32_1x128x1(%3, %4) : tensor<1x1x1x128xi32>
+  %2 = ukernel.call @iree_uk_unpack_i32_1x128(%5) : tensor<1x128xi32>
+  return %2
+}
+";
+
+const DECODE_I8_VLEN512: &str = "\
+func @mm(%0: tensor<1x64xi8>, %1: tensor<64x128xi8>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_i8_1x1(%0) : tensor<1x64x1x1xi8>
+  %4 = ukernel.call @iree_uk_pack_rhs_i8_256x1(%1) : tensor<1x64x256x1xi8>
+  %5 = ukernel.call @iree_uk_mmt4d_i8i8i32_1x256x1(%3, %4) : tensor<1x1x1x256xi32>
+  %2 = ukernel.call @iree_uk_unpack_i32_1x256(%5) : tensor<1x128xi32>
+  return %2
+}
+";
+
+#[test]
+fn golden_f16_prefill_across_vlens() {
+    for (vlen, want) in [(128, PREFILL_F16_VLEN128),
+                         (256, PREFILL_F16_VLEN256),
+                         (512, PREFILL_F16_VLEN512)] {
+        let got = lowered(vlen, ElemType::F16, 12, 64, 128, true, None);
+        assert_golden(&got, want, &format!("f16 prefill VLEN={vlen}"));
+    }
+}
+
+#[test]
+fn golden_f16_decode_across_vlens() {
+    for (vlen, want) in [(128, DECODE_F16_VLEN128),
+                         (256, DECODE_F16_VLEN256),
+                         (512, DECODE_F16_VLEN512)] {
+        let got = lowered(vlen, ElemType::F16, 1, 64, 128, true, None);
+        assert_golden(&got, want, &format!("f16 decode VLEN={vlen}"));
+    }
+}
+
+#[test]
+fn golden_i8_prefill_across_vlens() {
+    for (vlen, want) in [(128, PREFILL_I8_VLEN128),
+                         (256, PREFILL_I8_VLEN256),
+                         (512, PREFILL_I8_VLEN512)] {
+        let got = lowered(vlen, ElemType::I8, 12, 64, 128, true, None);
+        assert_golden(&got, want, &format!("i8 prefill VLEN={vlen}"));
+    }
+}
+
+#[test]
+fn golden_i8_decode_across_vlens() {
+    for (vlen, want) in [(128, DECODE_I8_VLEN128),
+                         (256, DECODE_I8_VLEN256),
+                         (512, DECODE_I8_VLEN512)] {
+        let got = lowered(vlen, ElemType::I8, 1, 64, 128, true, None);
+        assert_golden(&got, want, &format!("i8 decode VLEN={vlen}"));
+    }
+}
+
+#[test]
+fn golden_structural_stage() {
+    // The pack/mmt4d/unpack form before symbol lowering, for one
+    // representative case per dtype.
+    let want_f16 = "\
+func @mm(%0: tensor<12x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = tensor.pack %0 kind(lhs) tiles(6, 1) : tensor<2x64x6x1xf16>
+  %4 = tensor.pack %1 kind(rhs) tiles(32, 1) : tensor<4x64x32x1xf16>
+  %5 = linalg.mmt4d %3, %4 : tensor<2x4x6x32xf32>
+  %2 = tensor.unpack %5 : tensor<12x128xf32>
+  return %2
+}
+";
+    let got = lowered(256, ElemType::F16, 12, 64, 128, false, None);
+    assert_golden(&got, want_f16, "structural f16 prefill VLEN=256");
+
+    let want_i8 = "\
+func @mm(%0: tensor<1x64xi8>, %1: tensor<64x128xi8>) {
+  %3 = tensor.pack %0 kind(lhs) tiles(1, 1) : tensor<1x64x1x1xi8>
+  %4 = tensor.pack %1 kind(rhs) tiles(128, 1) : tensor<1x64x128x1xi8>
+  %5 = linalg.mmt4d %3, %4 : tensor<1x1x1x128xi32>
+  %2 = tensor.unpack %5 : tensor<1x128xi32>
+  return %2
+}
+";
+    let got = lowered(256, ElemType::I8, 1, 64, 128, false, None);
+    assert_golden(&got, want_i8, "structural i8 decode VLEN=256");
+}
+
+#[test]
+fn golden_tuned_profile_changes_symbols_predictably() {
+    // A tuning profile re-tiles the same matmul: the golden shows exactly
+    // which symbols and shapes move (and that nothing else does).
+    let tuned_tile = Tile { m0: 4, n0: 32, k0: 1 };
+    let mut reg = TileRegistry::empty();
+    reg.insert(256, ElemType::F16, Phase::Prefill, 1, TunedTile {
+        tile: tuned_tile,
+        cycles_per_mac: 0.5,
+        spills: 0,
+        pressure: pressure_for(256, ElemType::F16, tuned_tile),
+    });
+    let want = "\
+func @mm(%0: tensor<12x64xf16>, %1: tensor<64x128xf16>) {
+  %3 = ukernel.call @iree_uk_pack_lhs_f16_4x1(%0) : tensor<3x64x4x1xf16>
+  %4 = ukernel.call @iree_uk_pack_rhs_f16_32x1(%1) : tensor<4x64x32x1xf16>
+  %5 = ukernel.call @iree_uk_mmt4d_f16f16f32_4x32x1(%3, %4) : tensor<3x4x4x32xf32>
+  %2 = ukernel.call @iree_uk_unpack_f32_4x32(%5) : tensor<12x128xf32>
+  return %2
+}
+";
+    let got = lowered(256, ElemType::F16, 12, 64, 128, true, Some(reg));
+    assert_golden(&got, want, "tuned f16 prefill VLEN=256");
+}
+
+#[test]
+fn golden_empty_registry_is_byte_identical_to_static() {
+    // The fallback rule, pinned at text level: an explicitly-empty registry
+    // and the default static path print byte-identical modules.
+    for (elem, m) in [(ElemType::F16, 12), (ElemType::F16, 1),
+                      (ElemType::I8, 12), (ElemType::I8, 1)] {
+        let stat = lowered(256, elem, m, 64, 128, true, None);
+        let empty = lowered(256, elem, m, 64, 128, true,
+                            Some(TileRegistry::empty()));
+        assert_eq!(stat, empty, "{elem:?} m={m}");
+    }
+}

@@ -380,6 +380,216 @@ fn prop_vreg_pressure_monotone() {
     });
 }
 
+/// Accumulation-order-faithful scalar reference for the K0 = 1 f16 kernel:
+/// per output element, products accumulate over K in ascending order in
+/// f32 — exactly what both the serial and `_par` kernels do — so the
+/// comparison below can demand bit-identity, not a tolerance.
+fn scalar_mmt4d_f16_ref(lhs: &[F16], rhs: &[F16], p: &Mmt4dParams) -> Vec<f32> {
+    assert_eq!(p.k0, 1, "registry candidates are K0 = 1 strips");
+    let mut out = vec![0.0f32; p.out_len()];
+    for i1 in 0..p.m1 {
+        for j1 in 0..p.n1 {
+            let base = (i1 * p.n1 + j1) * p.m0 * p.n0;
+            for kk in 0..p.k1 {
+                for i0 in 0..p.m0 {
+                    let a = lhs[(i1 * p.k1 + kk) * p.m0 + i0].to_f32();
+                    for j0 in 0..p.n0 {
+                        let b = rhs[(j1 * p.k1 + kk) * p.n0 + j0].to_f32();
+                        out[base + i0 * p.n0 + j0] += a * b;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Integer scalar reference (order-free: i32 accumulation is exact).
+fn scalar_mmt4d_i8_ref(lhs: &[i8], rhs: &[i8], p: &Mmt4dParams) -> Vec<i32> {
+    assert_eq!(p.k0, 1);
+    let mut out = vec![0i32; p.out_len()];
+    for i1 in 0..p.m1 {
+        for j1 in 0..p.n1 {
+            for i0 in 0..p.m0 {
+                for j0 in 0..p.n0 {
+                    let mut acc = 0i32;
+                    for kk in 0..p.k1 {
+                        acc += lhs[(i1 * p.k1 + kk) * p.m0 + i0] as i32
+                            * rhs[(j1 * p.k1 + kk) * p.n0 + j0] as i32;
+                    }
+                    out[((i1 * p.n1 + j1) * p.m0 + i0) * p.n0 + j0] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Differential harness, f16: serial vs `_par` vs the scalar reference must
+/// be BIT-IDENTICAL for every kernel-variant-registry candidate tile at
+/// VLEN ∈ {128, 256, 512}, both phases, random shapes and pool widths.
+/// This is the property that makes the autotuner safe: whichever candidate
+/// it elects, the kernels compute the same bits.
+#[test]
+fn differential_f16_all_registry_candidates_across_vlens() {
+    use tenx_iree::autotune::enumerate_candidates;
+    use tenx_iree::ir::ElemType;
+    use tenx_iree::taskpool::Parallelism;
+    let mut rng = Rng::new(2024);
+    for vlen in [128usize, 256, 512] {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for tile in enumerate_candidates(vlen, ElemType::F16, phase) {
+                let p = Mmt4dParams {
+                    m1: rng.range(1, 4) as usize,
+                    n1: rng.range(1, 4) as usize,
+                    k1: rng.range(1, 13) as usize,
+                    m0: tile.m0,
+                    n0: tile.n0,
+                    k0: tile.k0,
+                    accumulate: false,
+                };
+                let lhs = rand_f16_vec(&mut rng, p.lhs_len());
+                let rhs = rand_f16_vec(&mut rng, p.rhs_len());
+                let mut serial = vec![0.0f32; p.out_len()];
+                ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut serial, &p);
+                let reference = scalar_mmt4d_f16_ref(&lhs, &rhs, &p);
+                assert_eq!(serial, reference,
+                           "VLEN={vlen} {phase:?} tile {tile:?}: serial vs \
+                            scalar reference");
+                for threads in [2usize, 5] {
+                    let mut par = vec![0.0f32; p.out_len()];
+                    ukernel::mmt4d_f16f16f32_par(&lhs, &rhs, &mut par, &p,
+                                                 Parallelism::new(threads));
+                    assert_eq!(serial, par,
+                               "VLEN={vlen} {phase:?} tile {tile:?}: \
+                                {threads}T vs serial");
+                }
+            }
+        }
+    }
+}
+
+/// Differential harness, i8: same sweep as the f16 one (serial vs `_par`
+/// vs scalar reference, every registry candidate, VLEN ∈ {128, 256, 512}).
+#[test]
+fn differential_i8_all_registry_candidates_across_vlens() {
+    use tenx_iree::autotune::enumerate_candidates;
+    use tenx_iree::ir::ElemType;
+    use tenx_iree::taskpool::Parallelism;
+    let mut rng = Rng::new(4711);
+    for vlen in [128usize, 256, 512] {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for tile in enumerate_candidates(vlen, ElemType::I8, phase) {
+                let p = Mmt4dParams {
+                    m1: rng.range(1, 4) as usize,
+                    n1: rng.range(1, 4) as usize,
+                    k1: rng.range(1, 13) as usize,
+                    m0: tile.m0,
+                    n0: tile.n0,
+                    k0: tile.k0,
+                    accumulate: false,
+                };
+                let lhs: Vec<i8> = (0..p.lhs_len())
+                    .map(|_| rng.range(-128, 128) as i8)
+                    .collect();
+                let rhs: Vec<i8> = (0..p.rhs_len())
+                    .map(|_| rng.range(-128, 128) as i8)
+                    .collect();
+                let mut serial = vec![0i32; p.out_len()];
+                ukernel::mmt4d_s8s8s32(&lhs, &rhs, &mut serial, &p);
+                let reference = scalar_mmt4d_i8_ref(&lhs, &rhs, &p);
+                assert_eq!(serial, reference,
+                           "VLEN={vlen} {phase:?} tile {tile:?}: serial vs \
+                            scalar reference");
+                for threads in [2usize, 5] {
+                    let mut par = vec![0i32; p.out_len()];
+                    ukernel::mmt4d_s8s8s32_par(&lhs, &rhs, &mut par, &p,
+                                               Parallelism::new(threads));
+                    assert_eq!(serial, par,
+                               "VLEN={vlen} {phase:?} tile {tile:?}: \
+                                {threads}T vs serial");
+                }
+            }
+        }
+    }
+}
+
+/// `symbol_for`/`parse_symbol` round-trip over every dtype/phase/tile
+/// combination the kernel-variant registry can emit (all VLENs the
+/// differential tests sweep), plus randomized tiles beyond the registry.
+#[test]
+fn prop_symbol_roundtrip_over_registry_variants() {
+    use tenx_iree::autotune::enumerate_candidates;
+    use tenx_iree::ir::ElemType;
+    use tenx_iree::ukernel::{parse_symbol, symbol_for, UkernelOp};
+    for vlen in [128usize, 256, 512] {
+        for elem in [ElemType::F16, ElemType::I8] {
+            let out = match elem {
+                ElemType::I8 => ElemType::I32,
+                _ => ElemType::F32,
+            };
+            for phase in [Phase::Prefill, Phase::Decode] {
+                for t in enumerate_candidates(vlen, elem, phase) {
+                    let ops = [
+                        UkernelOp::Mmt4d { lhs: elem, rhs: elem, out,
+                                           m0: t.m0, n0: t.n0, k0: t.k0 },
+                        UkernelOp::PackLhs { elem, m0: t.m0, k0: t.k0 },
+                        UkernelOp::PackRhs { elem, n0: t.n0, k0: t.k0 },
+                        UkernelOp::Unpack { elem: out, m0: t.m0, n0: t.n0 },
+                    ];
+                    for op in ops {
+                        let sym = symbol_for(&op);
+                        assert_eq!(parse_symbol(&sym).unwrap(), op, "{sym}");
+                    }
+                }
+            }
+        }
+    }
+    // Randomized tiles (beyond what the registry enumerates today): the
+    // grammar must round-trip any positive tile.
+    forall(Config::default().cases(150), |g| {
+        let dtypes = [tenx_iree::ir::ElemType::F16,
+                      tenx_iree::ir::ElemType::F32,
+                      tenx_iree::ir::ElemType::BF16,
+                      tenx_iree::ir::ElemType::I8];
+        let elem = *g.choose(&dtypes);
+        let out = match elem {
+            tenx_iree::ir::ElemType::I8 => tenx_iree::ir::ElemType::I32,
+            _ => tenx_iree::ir::ElemType::F32,
+        };
+        let (m0, n0, k0) = (g.usize_in(1, 64), g.usize_in(1, 512),
+                            g.usize_in(1, 8));
+        let op = tenx_iree::ukernel::UkernelOp::Mmt4d {
+            lhs: elem, rhs: elem, out, m0, n0, k0,
+        };
+        let sym = tenx_iree::ukernel::symbol_for(&op);
+        prop_assert(tenx_iree::ukernel::parse_symbol(&sym).ok() == Some(op),
+                    "mmt4d symbol must round-trip")
+    });
+}
+
+/// An empty tile registry IS the static table — for arbitrary VLEN, phase
+/// and dtype (the autotuner's no-profile fallback contract).
+#[test]
+fn prop_empty_registry_matches_static_tables() {
+    use tenx_iree::autotune::TileRegistry;
+    use tenx_iree::ir::ElemType;
+    forall(Config::default().cases(60), |g| {
+        let vlen = 64 << g.usize_in(1, 4); // 128..1024
+        let phase = if g.bool() { Phase::Prefill } else { Phase::Decode };
+        let dtypes = [ElemType::F16, ElemType::F32, ElemType::I8];
+        let elem = *g.choose(&dtypes);
+        let threads = g.usize_in(1, 16);
+        let arch = Arch::Riscv64 { vlen_bits: vlen };
+        let stat = target::select_tiles_for(arch, phase, elem)
+            .map_err(|e| e.to_string())?;
+        let reg = TileRegistry::empty()
+            .select(arch, phase, elem, threads)
+            .map_err(|e| e.to_string())?;
+        prop_assert(stat == reg, "empty registry must match static tables")
+    });
+}
+
 /// Scheduler invariant under generated workloads: every accepted request
 /// finishes exactly once with the requested token budget respected.
 #[test]

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Full local CI gate (documented in README.md):
-#   release build, Rust test suite, rustdoc, a quick 2-worker run of the
-#   ukernel bench (threaded rows always get smoke coverage), a docs link
-#   check, and the Python test suite.
+#   release build, Rust test suite (which includes the golden lowering
+#   snapshots), rustdoc, an autotuner smoke run (quick mode, VLEN=256,
+#   asserting the paper's tiles win the election), a quick 2-worker run of
+#   the ukernel bench (threaded rows always get smoke coverage), a docs
+#   link check, and the Python test suite.
 # The remaining benches are smoke-run in quick mode when RUN_BENCHES=1.
 set -euo pipefail
 
@@ -12,10 +14,45 @@ echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
+# Includes the golden lowering snapshots (rust/tests/golden_lowering.rs):
+# pass-pipeline tile selection is pinned as exact printed IR per VLEN/dtype.
 cargo test -q
 
 echo "== cargo doc --no-deps =="
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-}" cargo doc --no-deps --quiet
+
+echo "== autotune smoke (quick mode, VLEN=256) =="
+# The tuner must rediscover the paper's tiles by measurement: f16
+# 6xVLEN/8x1 prefill / 1xVLEN/4x1 decode (and the i8 7xVLEN/8 / 1xVLEN/2
+# counterparts), spill-free, from the quick candidate set.
+profile="$(mktemp /tmp/tenx-tuning-smoke.XXXXXX)"
+cargo run --release --quiet --bin tenx -- autotune --target milkv-jupiter \
+    --quick --threads 1 --out "$profile"
+check_tile() {
+    local sect="$1" m0="$2" n0="$3"
+    awk -v s="[$sect]" -v m="m0 = $m0" -v n="n0 = $n0" '
+        $0 == s { insect = 1; next }
+        /^\[/   { insect = 0 }
+        insect && $0 == m { gotm = 1 }
+        insect && $0 == n { gotn = 1 }
+        END { exit !(gotm && gotn) }' "$profile" || {
+        echo "autotune smoke: [$sect] did not elect the paper tile ${m0}xN0=${n0}"
+        echo "--- emitted profile ---"
+        cat "$profile"
+        exit 1
+    }
+}
+check_tile riscv64-vlen256.f16.prefill.t1 6 32
+check_tile riscv64-vlen256.f16.decode.t1 1 64
+check_tile riscv64-vlen256.i8.prefill.t1 7 32
+check_tile riscv64-vlen256.i8.decode.t1 1 128
+if grep -q 'spills = [^0]' "$profile"; then
+    echo "autotune smoke: a tuned entry reports spill traffic"
+    cat "$profile"
+    exit 1
+fi
+echo "autotune smoke: paper tiles re-elected by measurement, zero spills"
+rm -f "$profile"
 
 echo "== threaded ukernel bench (quick, 2 workers) =="
 TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
@@ -60,6 +97,13 @@ if [ "${RUN_BENCHES:-0}" = "1" ]; then
              cache_missrate; do
         TENX_BENCH_QUICK=1 cargo bench --bench "$b"
     done
+    echo "== tile_sweep A2d: tuned-vs-static (quick profile) =="
+    profile="$(mktemp /tmp/tenx-tuning-bench.XXXXXX)"
+    cargo run --release --quiet --bin tenx -- autotune --quick \
+        --out "$profile"
+    TENX_BENCH_QUICK=1 TENX_TUNING_PROFILE="$profile" \
+        cargo bench --bench tile_sweep
+    rm -f "$profile"
 fi
 
 echo "CI gate passed."
