@@ -15,8 +15,10 @@ use crate::cachesim::CacheHierarchy;
 use crate::config::manifest::Tile;
 use crate::ir::ElemType;
 use crate::kernels::{mmt4d_tile_rvv, mmt4d_tile_rvv_i8, Mmt4dLayout};
+use crate::perfmodel::traffic::{blocked_walk_traffic, ElemBytes, WalkShape};
 use crate::rvv::{Rvv, RvvConfig};
-use crate::target::TargetDesc;
+use crate::target::{Phase, TargetDesc};
+use crate::ukernel::Blocking;
 use crate::util::f16::F16;
 
 use super::registry;
@@ -162,6 +164,87 @@ pub fn measure_tile(target: &TargetDesc, elem: ElemType, tile: Tile,
     })
 }
 
+/// The serving-scale walk the blocking election is priced on: an LM-head
+/// shaped matmul (K = d_model 2048, N = 4096 columns — big enough that
+/// nothing fits in L2, which is the regime blocking exists for), M rows per
+/// phase (a prefill chunk vs. a decode batch). The *tile* sweep measures on
+/// small grids because the simulator executes real instructions; the
+/// *blocking* term is analytic, so it can afford the real serving extent.
+fn blocking_shape(phase: Phase, tile: Tile) -> WalkShape {
+    let (k, n) = (2048usize, 4096usize);
+    let m_total = match phase {
+        Phase::Prefill => 48,
+        Phase::Decode => 4,
+    };
+    WalkShape {
+        m1: m_total.div_ceil(tile.m0),
+        n1: n.div_ceil(tile.n0),
+        k1: k.div_ceil(tile.k0),
+        m0: tile.m0,
+        n0: tile.n0,
+        k0: tile.k0,
+    }
+}
+
+/// The cache-line-traffic term for one `(tile, blocking)` pair on `target`:
+/// modelled DRAM->L2 / L2->L1 penalty cycles of the blocked serving walk
+/// (`perfmodel::traffic`). This is what the blocking election adds to the
+/// RVV-sim kernel cost — the sim prices the in-tile instruction stream,
+/// this prices the traversal order around it.
+pub fn blocking_traffic_cycles(target: &TargetDesc, elem: ElemType,
+                               tile: Tile, blk: Blocking,
+                               phase: Phase) -> f64 {
+    let eb = match elem {
+        ElemType::I8 => ElemBytes::i8(),
+        _ => ElemBytes::f16(),
+    };
+    let shape = blocking_shape(phase, tile);
+    blocked_walk_traffic(&shape, eb, blk, &target.l1d, &target.l2)
+        .cycles(&target.l1d, &target.l2)
+}
+
+/// An elected blocking and the modelled traffic that elected it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElectedBlocking {
+    /// The winning (M1b, N1b, K1b).
+    pub blocking: Blocking,
+    /// Its modelled traffic cycles on the serving-scale walk.
+    pub traffic_cycles: f64,
+    /// The unblocked walk's traffic cycles on the same walk (the baseline
+    /// the reports compare against).
+    pub unblocked_cycles: f64,
+}
+
+/// Elect the cache blocking for `tile`: minimum modelled traffic over
+/// [`registry::enumerate_blockings`], ties broken toward
+/// [`Blocking::static_default`] and then toward smaller blocks (the least
+/// surprising schedule). Deterministic, and purely a scheduling choice —
+/// every candidate computes identical bits.
+pub fn elect_blocking(target: &TargetDesc, elem: ElemType, tile: Tile,
+                      phase: Phase) -> ElectedBlocking {
+    let unblocked_cycles = blocking_traffic_cycles(
+        target, elem, tile, Blocking::unblocked(), phase);
+    let mut best = ElectedBlocking {
+        blocking: Blocking::static_default(),
+        traffic_cycles: blocking_traffic_cycles(
+            target, elem, tile, Blocking::static_default(), phase),
+        unblocked_cycles,
+    };
+    for blk in registry::enumerate_blockings() {
+        let c = blocking_traffic_cycles(target, elem, tile, blk, phase);
+        let sz = |b: Blocking| (b.m1b, b.n1b, b.k1b);
+        if c < best.traffic_cycles * (1.0 - 1e-9)
+            || (c <= best.traffic_cycles * (1.0 + 1e-9)
+                && best.blocking != Blocking::static_default()
+                && sz(blk) < sz(best.blocking))
+        {
+            best.blocking = blk;
+            best.traffic_cycles = c;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +294,33 @@ mod tests {
         // non-RISC-V target
         assert!(measure_tile(&TargetDesc::generic_x86(), ElemType::F16,
                              Tile { m0: 6, n0: 32, k0: 1 }, &cfg).is_err());
+    }
+
+    #[test]
+    fn blocking_election_beats_or_ties_the_unblocked_walk() {
+        let t = TargetDesc::milkv_jupiter();
+        for (elem, tile, phase) in [
+            (ElemType::F16, Tile { m0: 6, n0: 32, k0: 1 }, Phase::Prefill),
+            (ElemType::F16, Tile { m0: 1, n0: 64, k0: 1 }, Phase::Decode),
+            (ElemType::I8, Tile { m0: 7, n0: 32, k0: 1 }, Phase::Prefill),
+            (ElemType::I8, Tile { m0: 1, n0: 128, k0: 1 }, Phase::Decode),
+        ] {
+            let e = elect_blocking(&t, elem, tile, phase);
+            assert!(e.traffic_cycles > 0.0, "{elem:?} {phase:?}");
+            assert!(e.traffic_cycles <= e.unblocked_cycles * (1.0 + 1e-9),
+                    "{elem:?} {phase:?}: elected blocking {:?} costs {} vs \
+                     unblocked {}",
+                    e.blocking, e.traffic_cycles, e.unblocked_cycles);
+            // deterministic
+            assert_eq!(e, elect_blocking(&t, elem, tile, phase));
+        }
+        // On the prefill GEMM the head is far larger than L2, so a real
+        // blocking must strictly beat the tile-at-a-time walk.
+        let e = elect_blocking(&t, ElemType::F16,
+                               Tile { m0: 6, n0: 32, k0: 1 }, Phase::Prefill);
+        assert!(e.traffic_cycles < e.unblocked_cycles,
+                "prefill head walk must benefit from blocking");
+        assert!(e.blocking.m1b > 1, "prefill election should block rows");
     }
 
     #[test]

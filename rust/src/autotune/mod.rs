@@ -30,8 +30,9 @@
 pub mod measure;
 pub mod registry;
 
-pub use measure::{measure_tile, MeasureConfig, Measurement};
-pub use registry::{candidate_n0s, enumerate_candidates,
+pub use measure::{blocking_traffic_cycles, elect_blocking, measure_tile,
+                  ElectedBlocking, MeasureConfig, Measurement};
+pub use registry::{candidate_n0s, enumerate_blockings, enumerate_candidates,
                    enumerate_candidates_quick, pressure_for, tile_is_legal,
                    TileRegistry, TunedTile};
 
@@ -91,6 +92,9 @@ pub struct PhaseSweep {
     pub threads: usize,
     /// Measured candidates, enumeration order.
     pub candidates: Vec<CandidateResult>,
+    /// Cache blocking elected for the winner's serving walk (modelled
+    /// line-traffic term — see [`measure::elect_blocking`]).
+    pub blocking: ElectedBlocking,
 }
 
 impl PhaseSweep {
@@ -138,6 +142,13 @@ impl AutotuneReport {
                     c.measurement.spill_insns, note.trim_end()
                 ));
             }
+            let b = sw.blocking;
+            s.push_str(&format!(
+                "blocking: {}x{}x{} (modelled traffic {:.2e} cycles, \
+                 unblocked {:.2e})\n",
+                b.blocking.m1b, b.blocking.n1b, b.blocking.k1b,
+                b.traffic_cycles, b.unblocked_cycles
+            ));
         }
         s
     }
@@ -232,14 +243,21 @@ pub fn tune_target(target: &TargetDesc, cfg: &AutotuneConfig)
                         elem.name(), phase.name()))?;
                 rows[winner_idx].chosen = true;
                 let w = rows[winner_idx];
+                // The serving walk's cache blocking rides on the winner:
+                // modelled line traffic on a serving-scale grid, added to
+                // the sim's kernel cost (it cannot change the tile ranking
+                // — every candidate blocking computes identical bits, and
+                // the kernel term is blocking-independent).
+                let eb = elect_blocking(target, elem, w.tile, phase);
                 reg.insert(vlen, elem, phase, threads, TunedTile {
                     tile: w.tile,
                     cycles_per_mac: w.measurement.cycles_per_mac,
                     spills: w.measurement.spill_insns,
                     pressure: w.pressure,
+                    blocking: eb.blocking,
                 });
                 report.sweeps.push(PhaseSweep {
-                    elem, phase, threads, candidates: rows,
+                    elem, phase, threads, candidates: rows, blocking: eb,
                 });
             }
         }
@@ -279,6 +297,17 @@ mod tests {
             let t = reg.tuned(256, elem, phase, 1).unwrap();
             assert_eq!(t.tile, want, "{} {}", elem.name(), phase.name());
             assert_eq!(t.spills, 0);
+            // every tuned entry carries an elected serving-walk blocking
+            assert!(t.blocking.m1b >= 1 && t.blocking.n1b >= 1
+                        && t.blocking.k1b >= 1,
+                    "{} {}: degenerate blocking", elem.name(), phase.name());
+        }
+        // the elected blockings never price worse than the unblocked walk
+        for sw in &report.sweeps {
+            assert!(sw.blocking.traffic_cycles
+                        <= sw.blocking.unblocked_cycles * (1.0 + 1e-9),
+                    "{} {}: blocking election regressed traffic",
+                    sw.elem.name(), sw.phase.name());
         }
         // every sweep's winner beats (or ties) the static tile
         for sw in &report.sweeps {
@@ -291,6 +320,7 @@ mod tests {
         let text = report.render();
         assert!(text.contains("<- chosen"));
         assert!(text.contains("paper"));
+        assert!(text.contains("blocking:"));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::config::toml::TomlDoc;
 use crate::ir::ElemType;
 use crate::target::{check_vlen, select_tiles_for, tile_spills, tile_spills_i8,
                     vreg_pressure, vreg_pressure_i8, Arch, Phase};
+use crate::ukernel::Blocking;
 
 /// Hard cap on M0 during enumeration (the pressure models cut earlier at
 /// every real VLEN; this only bounds the loop).
@@ -126,7 +127,9 @@ pub fn enumerate_candidates_quick(vlen: usize, elem: ElemType,
 }
 
 /// One tuned registry entry: the winning tile plus the measurement that
-/// elected it (kept in the profile so regressions are diffable).
+/// elected it (kept in the profile so regressions are diffable), and the
+/// cache blocking elected for the serving walk (never changes bits — only
+/// traversal order).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TunedTile {
     /// The elected tile shape.
@@ -137,6 +140,29 @@ pub struct TunedTile {
     pub spills: u64,
     /// Register pressure under the dtype's model.
     pub pressure: usize,
+    /// Elected (M1b, N1b, K1b) cache blocking of the outer mmt4d walk
+    /// (profile keys `m1b`/`n1b`/`k1b`; older profiles without them load
+    /// as [`Blocking::static_default`]).
+    pub blocking: Blocking,
+}
+
+/// Candidate (M1b, N1b, K1b) cache blockings the tuner prices with the
+/// cache-line-traffic model (`autotune::measure::blocking_traffic_cycles`).
+/// The grid covers the regimes that matter on a two-level hierarchy: row
+/// rectangles from streaming (1) to deep reuse (8), column rectangles up to
+/// 16 tiles, K chunks from L1-sized (32) to panel-sized (512). Every value
+/// is clamped to the concrete grid at the walk, so all candidates are legal
+/// for every shape.
+pub fn enumerate_blockings() -> Vec<Blocking> {
+    let mut out = Vec::new();
+    for m1b in [1usize, 2, 4, 8] {
+        for n1b in [1usize, 2, 4, 8, 16] {
+            for k1b in [32usize, 64, 128, 256, 512] {
+                out.push(Blocking { m1b, n1b, k1b });
+            }
+        }
+    }
+    out
 }
 
 /// Tuned tile selections keyed by `(vlen, dtype, phase, threads)`, with
@@ -229,6 +255,22 @@ impl TileRegistry {
         select_tiles_for(arch, phase, elem)
     }
 
+    /// Cache blocking for the serving walk: the tuned entry's election when
+    /// one matches (same fallback order as [`TileRegistry::select`]), else
+    /// [`Blocking::static_default`]. Infallible — blocking never changes
+    /// bits, so there is no illegal choice to reject.
+    pub fn select_blocking(&self, arch: Arch, phase: Phase, elem: ElemType,
+                           threads: usize) -> Blocking {
+        if elem != ElemType::I32 {
+            if let Arch::Riscv64 { vlen_bits } = arch {
+                if let Some(t) = self.tuned(vlen_bits, elem, phase, threads) {
+                    return t.blocking;
+                }
+            }
+        }
+        Blocking::static_default()
+    }
+
     /// Iterate entries as `(section key, entry)` in canonical order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &TunedTile)> {
         self.entries.iter()
@@ -253,6 +295,9 @@ impl TileRegistry {
             s.push_str(&format!("cycles_per_mac = {}\n", t.cycles_per_mac));
             s.push_str(&format!("spills = {}\n", t.spills));
             s.push_str(&format!("pressure = {}\n", t.pressure));
+            s.push_str(&format!("m1b = {}\n", t.blocking.m1b));
+            s.push_str(&format!("n1b = {}\n", t.blocking.n1b));
+            s.push_str(&format!("k1b = {}\n", t.blocking.k1b));
         }
         s
     }
@@ -305,6 +350,24 @@ impl TileRegistry {
                  {} kernel variant at VLEN={vlen}",
                 tile.m0, tile.n0, tile.k0, elem.name()
             );
+            // Blocking keys are optional (profiles predating the cache-
+            // blocked walks fall back to the static default), but when
+            // present they must be usable block sizes.
+            let blk_key = |k: &str, dflt: usize| -> anyhow::Result<usize> {
+                match doc.get_int(section, k)? {
+                    None => Ok(dflt),
+                    Some(v) => {
+                        anyhow::ensure!(v >= 1, "[{section}] {k} must be >= 1");
+                        Ok(v as usize)
+                    }
+                }
+            };
+            let dflt = Blocking::static_default();
+            let blocking = Blocking {
+                m1b: blk_key("m1b", dflt.m1b)?,
+                n1b: blk_key("n1b", dflt.n1b)?,
+                k1b: blk_key("k1b", dflt.k1b)?,
+            };
             let tuned = TunedTile {
                 tile,
                 cycles_per_mac: doc
@@ -316,6 +379,7 @@ impl TileRegistry {
                     .get_int(section, "pressure")?
                     .map(|v| v.max(0) as usize)
                     .unwrap_or_else(|| pressure_for(vlen, elem, tile)),
+                blocking,
             };
             reg.insert(vlen, elem, phase, threads, tuned);
         }
@@ -407,6 +471,7 @@ mod tests {
             spills: 0,
             pressure: pressure_for(256, ElemType::F16, Tile { m0: 4, n0: 32,
                                                               k0: 1 }),
+            blocking: Blocking::static_default(),
         };
         reg.insert(256, ElemType::F16, Phase::Prefill, 1, tuned);
         let arch = Arch::Riscv64 { vlen_bits: 256 };
@@ -438,12 +503,14 @@ mod tests {
             cycles_per_mac: 0.3125,
             spills: 0,
             pressure: 30,
+            blocking: Blocking { m1b: 8, n1b: 2, k1b: 128 },
         });
         reg.insert(256, ElemType::I8, Phase::Decode, 8, TunedTile {
             tile: Tile { m0: 1, n0: 128, k0: 1 },
             cycles_per_mac: 0.46875,
             spills: 0,
             pressure: 32,
+            blocking: Blocking { m1b: 1, n1b: 4, k1b: 256 },
         });
         let text = reg.render_toml("milkv-jupiter");
         let doc = TomlDoc::parse(&text).unwrap();
@@ -453,6 +520,53 @@ mod tests {
         assert_eq!(back.tuned(256, ElemType::I8, Phase::Decode, 8).unwrap()
                        .tile,
                    Tile { m0: 1, n0: 128, k0: 1 });
+        // the elected blockings round-trip too (they are non-default above)
+        assert_eq!(back.tuned(256, ElemType::F16, Phase::Prefill, 1).unwrap()
+                       .blocking,
+                   Blocking { m1b: 8, n1b: 2, k1b: 128 });
+    }
+
+    #[test]
+    fn profiles_without_blocking_keys_load_as_static_default() {
+        // Pre-blocking profiles stay loadable: missing m1b/n1b/k1b keys
+        // fall back to the static blocking, and selection reports it.
+        let doc = TomlDoc::parse("[riscv64-vlen256.f16.prefill.t1]\nm0 = 6\n\
+                                  n0 = 32\nk0 = 1\n").unwrap();
+        let reg = TileRegistry::from_toml(&doc).unwrap();
+        let arch = Arch::Riscv64 { vlen_bits: 256 };
+        let t = reg.tuned(256, ElemType::F16, Phase::Prefill, 1).unwrap();
+        assert_eq!(t.blocking, Blocking::static_default());
+        assert_eq!(reg.select_blocking(arch, Phase::Prefill, ElemType::F16, 1),
+                   Blocking::static_default());
+    }
+
+    #[test]
+    fn select_blocking_uses_tuned_entries_and_falls_back() {
+        let mut reg = TileRegistry::empty();
+        let blk = Blocking { m1b: 8, n1b: 4, k1b: 256 };
+        reg.insert(256, ElemType::F16, Phase::Prefill, 1, TunedTile {
+            tile: Tile { m0: 6, n0: 32, k0: 1 },
+            cycles_per_mac: 0.3,
+            spills: 0,
+            pressure: 30,
+            blocking: blk,
+        });
+        let arch = Arch::Riscv64 { vlen_bits: 256 };
+        // exact hit, thread fallback (t8 -> t1), f32 aliasing f16
+        assert_eq!(reg.select_blocking(arch, Phase::Prefill, ElemType::F16, 1),
+                   blk);
+        assert_eq!(reg.select_blocking(arch, Phase::Prefill, ElemType::F16, 8),
+                   blk);
+        assert_eq!(reg.select_blocking(arch, Phase::Prefill, ElemType::F32, 1),
+                   blk);
+        // everything else is the static default — never an error
+        assert_eq!(reg.select_blocking(arch, Phase::Decode, ElemType::F16, 1),
+                   Blocking::static_default());
+        assert_eq!(reg.select_blocking(Arch::X86_64, Phase::Prefill,
+                                       ElemType::F16, 1),
+                   Blocking::static_default());
+        assert_eq!(reg.select_blocking(arch, Phase::Prefill, ElemType::I32, 1),
+                   Blocking::static_default());
     }
 
     #[test]
@@ -476,6 +590,10 @@ mod tests {
         let doc = TomlDoc::parse("[riscv64-vlen100.f16.prefill.t1]\nm0 = 6\n\
                                   n0 = 32\nk0 = 1\n").unwrap();
         assert!(TileRegistry::from_toml(&doc).is_err());
+        // degenerate blocking (keys are optional, but 0 is never legal)
+        let doc = TomlDoc::parse("[riscv64-vlen256.f16.prefill.t1]\nm0 = 6\n\
+                                  n0 = 32\nk0 = 1\nm1b = 0\n").unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
         // f32 section aliases the f16 canonical key: collision is an error,
         // never a silent overwrite
         let doc = TomlDoc::parse(
@@ -494,6 +612,7 @@ mod tests {
             cycles_per_mac: 0.421875,
             spills: 0,
             pressure: 20,
+            blocking: Blocking::static_default(),
         });
         let dir = std::env::temp_dir().join("tenx-autotune-test");
         let path = dir.join("tuning-riscv64-vlen512.toml");

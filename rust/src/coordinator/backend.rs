@@ -30,6 +30,29 @@ pub trait ModelBackend {
     /// One decode step over the live cache; `tokens`/`pos` are [B];
     /// returns [B*V] logits.
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>>;
+
+    /// [`ModelBackend::prefill`] into a caller-owned buffer (resized to
+    /// [B*S*V]). The scheduler reuses one buffer across steps, so a backend
+    /// that overrides this (the native one writes its logits in place) can
+    /// serve a steady-state step with zero heap allocations; the default
+    /// just copies the allocating path's result.
+    fn prefill_into(&mut self, tokens: &[i32],
+                    out: &mut Vec<f32>) -> Result<()> {
+        let v = self.prefill(tokens)?;
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
+
+    /// [`ModelBackend::decode`] into a caller-owned buffer (resized to
+    /// [B*V]); see [`ModelBackend::prefill_into`].
+    fn decode_into(&mut self, tokens: &[i32], pos: &[i32],
+                   out: &mut Vec<f32>) -> Result<()> {
+        let v = self.decode(tokens, pos)?;
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
 }
 
 /// PJRT-backed implementation over the AOT artifacts.

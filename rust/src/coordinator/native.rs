@@ -11,6 +11,16 @@
 //! ([`quant::pack_quant_rhs`]) and routes the same matmuls through the
 //! s8s8s32 kernels — which is what lets `tenx serve --native` and the
 //! benches run the quantized workload next to f32/f16 with no other change.
+//!
+//! **Zero-repack steady state.** Both precisions pre-pack the head into the
+//! mmt4d RHS layout per serving phase at construction (sharing one buffer
+//! when the phases pack identically), and every per-call buffer — the
+//! embedding-gather staging row, the packed LHS, the packed accumulator,
+//! the int8 path's quantized activations and row scales — lives in a
+//! per-backend [`ukernel::scratch`] arena. A steady-state decode step
+//! therefore performs **zero RHS packs and zero heap allocations**, which
+//! the scratch counters assert in tests, `scripts/ci.sh` and
+//! `benches/decode_steady_state.rs`.
 
 #![deny(missing_docs)]
 
@@ -22,7 +32,7 @@ use crate::config::manifest::Tile;
 use crate::ir::ElemType;
 use crate::target::{Arch, Phase};
 use crate::taskpool::Parallelism;
-use crate::ukernel::{self, quant};
+use crate::ukernel::{self, quant, scratch, Blocking, Scratch};
 use crate::util::f16::F16;
 use crate::util::prng::Rng;
 
@@ -65,15 +75,31 @@ pub struct NativeBackend {
     parallelism: Parallelism,
     /// Token embedding [V, D] f16.
     embed: Vec<F16>,
-    /// LM head [D, V] f16 (the f16 path's RHS; empty in Int8 mode, which
-    /// keeps only the quantized copies below).
-    head: Vec<F16>,
-    /// Quantized head: scale + RHS pre-packed for each phase's tiles.
+    /// f16 head pre-packed into the mmt4d RHS layout for the prefill tile
+    /// (empty in Int8 mode).
+    head4_prefill: Vec<F16>,
+    /// Decode-tile f16 prepack; `None` shares `head4_prefill` (the phases
+    /// pack identically whenever their (N0, K0) agree — M0 never enters an
+    /// RHS pack).
+    head4_decode: Option<Vec<F16>>,
+    /// Quantized head: scale + RHS pre-packed per phase (empty / `None`
+    /// shares as above; both empty in F16 mode).
     head_scale: quant::QuantParams,
     head_q_prefill: Vec<i8>,
-    head_q_decode: Vec<i8>,
+    head_q_decode: Option<Vec<i8>>,
     prefill_tile: Tile,
     decode_tile: Tile,
+    /// Cache blocking of the serving mmt4d walks, per phase (tuned profile
+    /// entry or the static default; never changes bits).
+    prefill_blocking: Blocking,
+    decode_blocking: Blocking,
+    /// Embedding-gather staging rows, reused across calls (f16 path).
+    stage_f16: scratch::Buf<F16>,
+    /// Embedding-gather staging rows, widened for quantization (int8 path).
+    stage_f32: scratch::Buf<f32>,
+    /// Per-call kernel buffers (packed LHS/accumulator, quantized
+    /// activations, row scales) — reused across calls.
+    scratch: Scratch,
     /// live[slot] = tokens whose state is committed, by position (the same
     /// KV-slot bookkeeping contract the scheduler tests drive on the mock).
     pub live: Vec<Vec<i32>>,
@@ -113,6 +139,15 @@ impl NativeBackend {
         };
         let prefill_tile = tiles.select(arch, Phase::Prefill, elem, threads)?;
         let decode_tile = tiles.select(arch, Phase::Decode, elem, threads)?;
+        let prefill_blocking =
+            tiles.select_blocking(arch, Phase::Prefill, elem, threads);
+        let decode_blocking =
+            tiles.select_blocking(arch, Phase::Decode, elem, threads);
+        // An RHS prepack depends only on (N0, K0): when the decode tile
+        // packs like the prefill tile the phases share one buffer instead
+        // of packing twice into identical copies.
+        let phases_share_rhs = (prefill_tile.n0, prefill_tile.k0)
+            == (decode_tile.n0, decode_tile.k0);
 
         let mut rng = Rng::new(seed);
         let embed: Vec<F16> = (0..vocab * d_model)
@@ -132,21 +167,37 @@ impl NativeBackend {
             }
         }
         // Each precision keeps only the weight representation it serves
-        // with: Int8 quantizes + pre-packs the head per phase and drops the
-        // f16 copy; F16 keeps the f16 head and no quantized state.
-        let (head, head_scale, head_q_prefill, head_q_decode) = match precision {
+        // with, pre-packed per phase at load time: Int8 quantizes once and
+        // packs the quantized head; F16 packs the f16 head directly. The
+        // raw [D, V] head is dropped either way — serving only ever touches
+        // the packed copies.
+        let (head4_prefill, head4_decode, head_scale, head_q_prefill,
+             head_q_decode) = match precision {
             Precision::Int8 => {
                 let (head_q, scale) = quant::quantize_f16(&head);
-                (Vec::new(),
-                 scale,
-                 quant::pack_quant_rhs(&head_q, d_model, vocab,
-                                       prefill_tile.n0, prefill_tile.k0),
-                 quant::pack_quant_rhs(&head_q, d_model, vocab,
-                                       decode_tile.n0, decode_tile.k0))
+                let q_prefill = quant::pack_quant_rhs(
+                    &head_q, d_model, vocab, prefill_tile.n0, prefill_tile.k0);
+                let q_decode = if phases_share_rhs {
+                    None
+                } else {
+                    Some(quant::pack_quant_rhs(&head_q, d_model, vocab,
+                                               decode_tile.n0,
+                                               decode_tile.k0))
+                };
+                (Vec::new(), None, scale, q_prefill, q_decode)
             }
             Precision::F16 => {
-                (head, quant::QuantParams { scale: 1.0 }, Vec::new(),
-                 Vec::new())
+                let h_prefill = ukernel::prepack_rhs_f16(
+                    &head, d_model, vocab, prefill_tile.n0, prefill_tile.k0);
+                let h_decode = if phases_share_rhs {
+                    None
+                } else {
+                    Some(ukernel::prepack_rhs_f16(&head, d_model, vocab,
+                                                  decode_tile.n0,
+                                                  decode_tile.k0))
+                };
+                (h_prefill, h_decode, quant::QuantParams { scale: 1.0 },
+                 Vec::new(), None)
             }
         };
 
@@ -156,13 +207,20 @@ impl NativeBackend {
             precision,
             parallelism: Parallelism::serial(),
             embed,
-            head,
+            head4_prefill,
+            head4_decode,
             head_scale,
             head_q_prefill,
             head_q_decode,
             prefill_tile,
             decode_tile,
-            live: vec![vec![]; batch],
+            prefill_blocking,
+            decode_blocking,
+            stage_f16: scratch::Buf::new(),
+            stage_f32: scratch::Buf::new(),
+            scratch: Scratch::new(),
+            // Pre-sized KV bookkeeping: decode appends must not reallocate.
+            live: (0..batch).map(|_| Vec::with_capacity(max_seq)).collect(),
             staged: None,
         })
     }
@@ -170,6 +228,11 @@ impl NativeBackend {
     /// The (prefill, decode) tiles this backend's matmuls run on.
     pub fn tiles(&self) -> (Tile, Tile) {
         (self.prefill_tile, self.decode_tile)
+    }
+
+    /// The (prefill, decode) cache blockings the serving walks use.
+    pub fn blockings(&self) -> (Blocking, Blocking) {
+        (self.prefill_blocking, self.decode_blocking)
     }
 
     /// Which numeric path this backend serves with.
@@ -190,43 +253,61 @@ impl NativeBackend {
         (prev * 7 + 13).rem_euclid(vocab as i32)
     }
 
-    /// Logits for `rows` hidden vectors (one per token), [rows, V], through
-    /// the mmt4d path of the configured precision.
-    fn logits_for_tokens(&self, tokens: &[i32], phase: Phase) -> Vec<f32> {
+    /// Logits for `rows` hidden vectors (one per token) into `out`
+    /// (resized to [rows, V]), through the prepacked mmt4d path of the
+    /// configured precision. Every intermediate buffer is arena-owned, so
+    /// a steady-state call (same phase as the last) allocates nothing and
+    /// never touches a weight pack.
+    fn logits_into(&mut self, tokens: &[i32], phase: Phase,
+                   out: &mut Vec<f32>) {
         let (d, v) = (self.d_model, self.dims.vocab);
         let rows = tokens.len();
-        let tile = match phase {
-            Phase::Prefill => self.prefill_tile,
-            Phase::Decode => self.decode_tile,
+        if out.len() != rows * v {
+            out.resize(rows * v, 0.0);
+        }
+        let (tile, blk) = match phase {
+            Phase::Prefill => (self.prefill_tile, self.prefill_blocking),
+            Phase::Decode => (self.decode_tile, self.decode_blocking),
         };
         match self.precision {
             Precision::F16 => {
-                let mut lhs = Vec::with_capacity(rows * d);
-                for &t in tokens {
-                    let row = &self.embed[(t as usize % self.dims.vocab) * d..][..d];
-                    lhs.extend_from_slice(row);
+                let stage = self.stage_f16.take(rows * d);
+                for (dst, &t) in stage.chunks_mut(d).zip(tokens) {
+                    dst.copy_from_slice(
+                        &self.embed[(t as usize % v) * d..][..d]);
                 }
-                ukernel::matmul_f16_via_mmt4d_par(&lhs, &self.head, rows, d,
-                                                  v, tile.m0, tile.n0,
-                                                  tile.k0, self.parallelism)
+                let rhs4: &[F16] = match phase {
+                    Phase::Prefill => self.head4_prefill.as_slice(),
+                    Phase::Decode => self
+                        .head4_decode
+                        .as_deref()
+                        .unwrap_or(self.head4_prefill.as_slice()),
+                };
+                ukernel::matmul_prepacked_rhs_f16_into(
+                    stage, rhs4, rows, d, v, tile.m0, tile.n0, tile.k0, blk,
+                    self.parallelism, &mut self.scratch, &mut out[..]);
             }
             Precision::Int8 => {
-                let mut lhs = Vec::with_capacity(rows * d);
-                for &t in tokens {
-                    let row = &self.embed[(t as usize % self.dims.vocab) * d..][..d];
-                    lhs.extend(row.iter().map(|h| h.to_f32()));
+                let stage = self.stage_f32.take(rows * d);
+                for (dst, &t) in stage.chunks_mut(d).zip(tokens) {
+                    let row = &self.embed[(t as usize % v) * d..][..d];
+                    for (o, h) in dst.iter_mut().zip(row) {
+                        *o = h.to_f32();
+                    }
                 }
-                let rhs4 = match phase {
-                    Phase::Prefill => &self.head_q_prefill,
-                    Phase::Decode => &self.head_q_decode,
+                let rhs4: &[i8] = match phase {
+                    Phase::Prefill => self.head_q_prefill.as_slice(),
+                    Phase::Decode => self
+                        .head_q_decode
+                        .as_deref()
+                        .unwrap_or(self.head_q_prefill.as_slice()),
                 };
                 // Row-wise activation scales: a request's logits must not
                 // depend on which other requests share the batch.
-                quant::matmul_prepacked_rhs_rowwise_par(&lhs, rhs4,
-                                                        self.head_scale,
-                                                        rows, d, v, tile.m0,
-                                                        tile.n0, tile.k0,
-                                                        self.parallelism)
+                quant::matmul_prepacked_rhs_rowwise_into(
+                    stage, rhs4, self.head_scale, rows, d, v, tile.m0,
+                    tile.n0, tile.k0, blk, self.parallelism,
+                    &mut self.scratch, &mut out[..]);
             }
         }
     }
@@ -238,6 +319,12 @@ impl ModelBackend for NativeBackend {
     }
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.prefill_into(tokens, &mut out)?;
+        Ok(out)
+    }
+
+    fn prefill_into(&mut self, tokens: &[i32], out: &mut Vec<f32>) -> Result<()> {
         let BackendDims { batch, prefill_seq, .. } = self.dims;
         anyhow::ensure!(tokens.len() == batch * prefill_seq,
                         "prefill takes B*S tokens");
@@ -246,7 +333,8 @@ impl ModelBackend for NativeBackend {
             staged.push(tokens[b * prefill_seq..][..prefill_seq].to_vec());
         }
         self.staged = Some(staged);
-        Ok(self.logits_for_tokens(tokens, Phase::Prefill))
+        self.logits_into(tokens, Phase::Prefill, out);
+        Ok(())
     }
 
     fn commit_slots(&mut self, slots: &[usize]) -> Result<()> {
@@ -256,12 +344,22 @@ impl ModelBackend for NativeBackend {
             .ok_or_else(|| anyhow::anyhow!("no staged prefill"))?;
         for &s in slots {
             anyhow::ensure!(s < self.live.len(), "slot {s} out of range");
-            self.live[s] = staged[s].clone();
+            // Copy in place: the live row keeps its max_seq capacity, so
+            // subsequent decode appends stay allocation-free.
+            self.live[s].clear();
+            self.live[s].extend_from_slice(&staged[s]);
         }
         Ok(())
     }
 
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.decode_into(tokens, pos, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, tokens: &[i32], pos: &[i32],
+                   out: &mut Vec<f32>) -> Result<()> {
         let BackendDims { batch, max_seq, .. } = self.dims;
         anyhow::ensure!(tokens.len() == batch && pos.len() == batch);
         for b in 0..batch {
@@ -272,7 +370,8 @@ impl ModelBackend for NativeBackend {
             }
             self.live[b][p] = tokens[b];
         }
-        Ok(self.logits_for_tokens(tokens, Phase::Decode))
+        self.logits_into(tokens, Phase::Decode, out);
+        Ok(())
     }
 }
 
@@ -391,6 +490,7 @@ mod tests {
                 cycles_per_mac: 0.5,
                 spills: 0,
                 pressure: pressure_for(256, elem, tile),
+                blocking: Blocking { m1b: 2, n1b: 3, k1b: 16 },
             });
         }
         for p in [Precision::F16, Precision::Int8] {
@@ -410,6 +510,88 @@ mod tests {
     }
 
     #[test]
+    fn steady_state_decode_zero_rhs_packs_zero_allocs() {
+        // The tentpole claim, counter-asserted: after warmup, a decode step
+        // packs no weights and grows no scratch buffer — for both
+        // precisions, including interleaved prefills (which only ever touch
+        // their own, already-grown buffers).
+        for p in [Precision::F16, Precision::Int8] {
+            let mut b = backend(p);
+            let mut out = Vec::new();
+            b.prefill_into(&vec![3i32; 4 * 8], &mut out).unwrap();
+            b.commit_slots(&[0, 1, 2, 3]).unwrap();
+            // warmup: grow the decode-shaped buffers once
+            b.decode_into(&[1, 2, 3, 4], &[8; 4], &mut out).unwrap();
+            b.decode_into(&[5, 6, 7, 8], &[9; 4], &mut out).unwrap();
+            let base = scratch::stats();
+            for step in 0..12 {
+                b.decode_into(&[9, 8, 7, step], &[(10 + step) as i32; 4],
+                              &mut out)
+                    .unwrap();
+            }
+            let d = scratch::stats().delta_since(base);
+            assert_eq!(d.rhs_packs, 0,
+                       "{p:?}: steady-state decode re-packed weights");
+            assert_eq!(d.allocs, 0,
+                       "{p:?}: steady-state decode allocated scratch");
+            // Interleaving a prefill back in stays pack-free too (weights
+            // were packed at construction, for both phases).
+            b.prefill_into(&vec![5i32; 4 * 8], &mut out).unwrap();
+            assert_eq!(scratch::stats().delta_since(base).rhs_packs, 0,
+                       "{p:?}: prefill re-packed weights");
+        }
+    }
+
+    #[test]
+    fn equal_phase_tiles_share_one_prepacked_head() {
+        // When prefill and decode elect tiles with the same (N0, K0), the
+        // head must be packed once and shared — not twice into identical
+        // buffers (for the int8 path this also covers the historical
+        // double-pack bug).
+        use crate::autotune::{pressure_for, TileRegistry, TunedTile};
+        let mut reg = TileRegistry::empty();
+        for (elem, m0) in [(ElemType::F16, 4), (ElemType::I8, 5)] {
+            for phase in [Phase::Prefill, Phase::Decode] {
+                let tile = Tile { m0: if phase == Phase::Decode { 1 }
+                                      else { m0 },
+                                  n0: 32, k0: 1 };
+                reg.insert(256, elem, phase, 1, TunedTile {
+                    tile,
+                    cycles_per_mac: 0.5,
+                    spills: 0,
+                    pressure: pressure_for(256, elem, tile),
+                    blocking: Blocking::static_default(),
+                });
+            }
+        }
+        for p in [Precision::F16, Precision::Int8] {
+            let base = scratch::stats();
+            let shared = NativeBackend::new_with_tiles(
+                4, 8, 32, 128, 64, p, 42, &reg, 1).unwrap();
+            let packs = scratch::stats().delta_since(base).rhs_packs;
+            assert_eq!(packs, 1, "{p:?}: equal-tile phases must pack once");
+            match p {
+                Precision::F16 => assert!(shared.head4_decode.is_none()),
+                Precision::Int8 => assert!(shared.head_q_decode.is_none()),
+            }
+            // The default static tiles differ per phase -> two packs, and
+            // the shared and unshared backends still agree bit-for-bit on
+            // a decode step (the pack is (N0, K0)-determined).
+            let base = scratch::stats();
+            let stat = backend(p);
+            assert_eq!(scratch::stats().delta_since(base).rhs_packs, 2,
+                       "{p:?}: distinct-tile phases pack per phase");
+            drop(stat);
+            let mut a = NativeBackend::new_with_tiles(
+                4, 8, 32, 128, 64, p, 42, &reg, 1).unwrap();
+            let mut bb = NativeBackend::new_with_tiles(
+                4, 8, 32, 128, 64, p, 42, &reg, 1).unwrap();
+            assert_eq!(a.decode(&[1, 2, 3, 4], &[1; 4]).unwrap(),
+                       bb.decode(&[1, 2, 3, 4], &[1; 4]).unwrap());
+        }
+    }
+
+    #[test]
     fn serves_through_the_coordinator() {
         use crate::coordinator::server;
         use crate::llm::SamplingParams;
@@ -421,6 +603,14 @@ mod tests {
             let out = rx.recv().unwrap();
             assert_eq!(out.tokens.len(), 4, "{p:?}");
             assert!(out.tokens.iter().all(|&t| (t as usize) < 64));
+            // The serve loop observed the zero-repack steady state: the
+            // scheduler-side counters (measured around each decode call)
+            // saw no weight pack and no scratch growth.
+            assert!(h.metrics.decode_steps.get() >= 4, "{p:?}");
+            assert_eq!(h.metrics.decode_rhs_packs.get(), 0,
+                       "{p:?}: a decode step re-packed weights");
+            assert_eq!(h.metrics.decode_scratch_allocs.get(), 0,
+                       "{p:?}: a decode step grew the scratch arena");
             h.shutdown().unwrap();
         }
     }

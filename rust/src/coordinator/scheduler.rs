@@ -37,6 +37,12 @@ pub struct Scheduler<B: ModelBackend> {
     pub metrics: Arc<ServingMetrics>,
     rng: Rng,
     pub queue_capacity: usize,
+    // Reusable step buffers (`*_into` backend calls): the serve loop's own
+    // contribution to the zero-allocation steady state — token/pos staging
+    // and the logits buffer are built once and recycled every step.
+    logits: Vec<f32>,
+    step_tokens: Vec<i32>,
+    step_pos: Vec<i32>,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
@@ -51,6 +57,9 @@ impl<B: ModelBackend> Scheduler<B> {
             metrics,
             rng: Rng::new(seed),
             queue_capacity,
+            logits: Vec::new(),
+            step_tokens: Vec::new(),
+            step_pos: Vec::new(),
         }
     }
 
@@ -111,18 +120,20 @@ impl<B: ModelBackend> Scheduler<B> {
             })
             .collect();
 
-        // Build the prefill batch: admitted rows get their (truncated)
-        // prompt padded to S; unused rows are PAD.
+        // Build the prefill batch into the reusable staging buffer:
+        // admitted rows get their (truncated) prompt padded to S; unused
+        // rows are PAD.
         let s = dims.prefill_seq;
-        let mut tokens = vec![PAD as i32; dims.batch * s];
+        self.step_tokens.clear();
+        self.step_tokens.resize(dims.batch * s, PAD as i32);
         for (slot, req, _) in &admitted {
             let plen = req.prompt.len().min(s);
             for (j, &t) in req.prompt[..plen].iter().enumerate() {
-                tokens[slot * s + j] = t as i32;
+                self.step_tokens[slot * s + j] = t as i32;
             }
         }
         let t0 = Instant::now();
-        let logits = self.backend.prefill(&tokens)?;
+        self.backend.prefill_into(&self.step_tokens, &mut self.logits)?;
         let slots: Vec<usize> = admitted.iter().map(|(s, _, _)| *s).collect();
         self.backend.commit_slots(&slots)?;
         self.metrics.prefill_latency.observe(t0.elapsed());
@@ -132,7 +143,7 @@ impl<B: ModelBackend> Scheduler<B> {
             let plen = req.prompt.len().min(s);
             self.metrics.tokens_prefilled.add(plen as u64);
             // First generated token: sampled from the last prompt position.
-            let row = &logits[(slot * s + plen - 1) * dims.vocab..][..dims.vocab];
+            let row = &self.logits[(slot * s + plen - 1) * dims.vocab..][..dims.vocab];
             let first = sample(row, req.sampling, &mut self.rng);
             timing.prefill_done = Some(Instant::now());
             self.metrics
@@ -161,24 +172,36 @@ impl<B: ModelBackend> Scheduler<B> {
         if self.active_count() == 0 {
             return Ok(());
         }
-        let mut tokens = vec![PAD as i32; dims.batch];
-        let mut pos = vec![0i32; dims.batch];
+        self.step_tokens.clear();
+        self.step_tokens.resize(dims.batch, PAD as i32);
+        self.step_pos.clear();
+        self.step_pos.resize(dims.batch, 0);
         for (i, slot) in self.slots.iter().enumerate() {
             if let Some(seq) = slot {
-                tokens[i] = seq.next_token;
-                pos[i] = seq.pos as i32;
+                self.step_tokens[i] = seq.next_token;
+                self.step_pos[i] = seq.pos as i32;
             } else {
                 self.metrics.idle_slot_steps.inc();
             }
         }
         let t0 = Instant::now();
-        let logits = self.backend.decode(&tokens, &pos)?;
+        // The zero-repack invariant, measured where it matters: the scratch
+        // counters are thread-local and the backend call runs right here,
+        // so the delta is exactly this step's packs/allocs (pack entry
+        // points count on the calling thread even when the pack itself
+        // shards over workers).
+        let scratch_base = crate::ukernel::scratch::stats();
+        self.backend
+            .decode_into(&self.step_tokens, &self.step_pos, &mut self.logits)?;
+        let sd = crate::ukernel::scratch::stats().delta_since(scratch_base);
+        self.metrics.decode_rhs_packs.add(sd.rhs_packs);
+        self.metrics.decode_scratch_allocs.add(sd.allocs);
         self.metrics.decode_step_latency.observe(t0.elapsed());
         self.metrics.decode_steps.inc();
 
         for i in 0..dims.batch {
             let Some(seq) = &mut self.slots[i] else { continue };
-            let row = &logits[i * dims.vocab..][..dims.vocab];
+            let row = &self.logits[i * dims.vocab..][..dims.vocab];
             let tok = sample(row, seq.req.sampling, &mut self.rng);
             seq.generated.push(tok);
             seq.pos += 1;

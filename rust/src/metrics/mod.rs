@@ -114,6 +114,16 @@ pub struct ServingMetrics {
     /// Kernel worker-pool width the backend was configured with (1 =
     /// serial). Set once at server start; 0 means "not recorded".
     pub compute_threads: Counter,
+    /// Weight (RHS) packs observed during decode steps, measured on the
+    /// scheduler thread around each backend call via the
+    /// `ukernel::scratch` counters. The zero-repack steady-state invariant
+    /// says this stays **exactly 0** for the native backend — weights are
+    /// pre-packed at construction (asserted by `scripts/ci.sh`).
+    pub decode_rhs_packs: Counter,
+    /// Scratch-buffer growths (heap allocations in the kernel pipeline)
+    /// observed during decode steps. Prefill runs first and is the larger
+    /// shape, so the arena is already grown: steady state is 0.
+    pub decode_scratch_allocs: Counter,
     pub started: Mutex<Option<std::time::Instant>>,
     /// Taskpool counter snapshot at `mark_started`, so the report shows
     /// this server's pool activity rather than process-wide totals.
@@ -151,6 +161,12 @@ impl ServingMetrics {
             "decode: {} steps, {} tokens, mean step {:?}, idle-slot steps {}\n",
             self.decode_steps.get(), dec_tok,
             self.decode_step_latency.mean(), self.idle_slot_steps.get()
+        ));
+        s.push_str(&format!(
+            "steady-state: decode rhs packs {}, decode scratch allocs {} \
+             over {} steps\n",
+            self.decode_rhs_packs.get(), self.decode_scratch_allocs.get(),
+            self.decode_steps.get()
         ));
         s.push_str(&format!(
             "queue: mean wait {:?} p90 {:?}\n",
@@ -219,6 +235,8 @@ mod tests {
         let r = m.report();
         assert!(r.contains("requests: 1 submitted"));
         assert!(r.contains("decode:"));
+        assert!(r.contains("steady-state: decode rhs packs 0, decode \
+                            scratch allocs 0"));
         assert!(r.contains("queue: mean wait"));
         assert!(r.contains("compute: threads 4 configured"));
         assert!(r.contains("worker occupancy"));

@@ -342,6 +342,7 @@ mod tests {
             cycles_per_mac: 0.4,
             spills: 0,
             pressure: pressure_for(256, ET::F16, tuned_tile),
+            blocking: crate::ukernel::Blocking::static_default(),
         });
         let mut m = Module {
             funcs: vec![build_matmul_func("mm", 64, 256, 256, ElemType::F16)],

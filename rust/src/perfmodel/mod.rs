@@ -21,11 +21,18 @@
 //! wall-clock tokens/sec of the taskpool-sharded kernels at 1..N workers,
 //! plus an Amdahl [`ThreadModel`] over the pipeline's pack/reduction serial
 //! fractions — the machinery behind the bench's measured 1/8-thread rows.
+//!
+//! [`traffic`] prices the cache-line movement of a cache-blocked mmt4d
+//! walk (DRAM->L2 and L2->L1 bytes per blocking choice) — the term
+//! `autotune::measure` adds to the RVV-sim kernel cost when electing the
+//! serving walk's (M1b, N1b, K1b) blocking.
 
 pub mod schedule;
 pub mod threading;
+pub mod traffic;
 
 pub use schedule::{LlamaShapes, MatmulShape};
+pub use traffic::{blocked_walk_traffic, ElemBytes, WalkShape, WalkTraffic};
 pub use threading::{measure_native_phase, native_thread_model,
                     NativePhasePerf, ThreadModel};
 

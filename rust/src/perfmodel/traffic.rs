@@ -1,0 +1,266 @@
+//! Analytic cache-line-traffic model for the cache-blocked mmt4d walks —
+//! the term the autotuner adds to the RVV-sim kernel cost when it elects a
+//! `(M1b, N1b, K1b)` blocking (`autotune::measure::blocking_traffic_cycles`).
+//!
+//! The RVV simulator prices the *kernel* (one tile's instruction stream,
+//! registers and L1 behaviour); what it cannot see is how the outer walk
+//! re-streams panels through the hierarchy, because that depends on the
+//! traversal order, not the tile body. This module models exactly that: for
+//! a blocked walk (rectangles of `m1b × n1b` outer tiles, K accumulated in
+//! `k1b`-deep chunks — see `ukernel::mmt4d`), count the bytes each loop
+//! level must move across L2→L1 and DRAM→L2 given the reuse the blocking
+//! exposes, and convert lines to cycles with the target's miss penalties.
+//!
+//! The model is deliberately first-order (full LRU capture at half
+//! capacity, no conflict misses, no prefetch): it is a *ranking* function
+//! for the blocking election, not a cycle-accurate predictor, and — like
+//! everything about blocking — it never affects numerics. Its value is that
+//! it prices the three classic regimes correctly:
+//!
+//! * unblocked GEMM whose RHS exceeds L2 re-streams the whole RHS from
+//!   DRAM once per LHS row-panel;
+//! * row rectangles (`m1b > 1`) divide that re-streaming by the rectangle
+//!   height;
+//! * K chunks bound the panel footprint so a chunk's panels fit L1, at the
+//!   price of revisiting the accumulator tiles once per chunk.
+
+#![deny(missing_docs)]
+
+use crate::target::CacheDesc;
+use crate::ukernel::Blocking;
+
+/// The walk geometry being priced: outer grid × inner tile, in elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkShape {
+    /// Outer tile rows.
+    pub m1: usize,
+    /// Outer tile columns.
+    pub n1: usize,
+    /// K-loop trip count.
+    pub k1: usize,
+    /// Inner tile rows.
+    pub m0: usize,
+    /// Inner tile columns (the register strip).
+    pub n0: usize,
+    /// Inner K depth (1 for every kernel this repo emits).
+    pub k0: usize,
+}
+
+/// Bytes per element of the walk's operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElemBytes {
+    /// LHS/RHS input element size (2 for f16, 1 for i8).
+    pub input: usize,
+    /// Accumulator element size (4 for both f32 and i32 here).
+    pub acc: usize,
+}
+
+impl ElemBytes {
+    /// The f16 kernel family (f16 inputs, f32 accumulator).
+    pub fn f16() -> ElemBytes {
+        ElemBytes { input: 2, acc: 4 }
+    }
+
+    /// The int8 kernel family (i8 inputs, i32 accumulator).
+    pub fn i8() -> ElemBytes {
+        ElemBytes { input: 1, acc: 4 }
+    }
+}
+
+/// Modelled bytes moved across each boundary for one full walk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalkTraffic {
+    /// Bytes crossing L2 -> L1 (each costs `l1.miss_penalty` per line).
+    pub l2_to_l1_bytes: f64,
+    /// Bytes crossing DRAM -> L2 (each costs `l2.miss_penalty` per line,
+    /// on top of the L1 miss that exposed it).
+    pub dram_to_l2_bytes: f64,
+}
+
+impl WalkTraffic {
+    /// Convert modelled bytes to penalty cycles under the given hierarchy.
+    pub fn cycles(&self, l1: &CacheDesc, l2: &CacheDesc) -> f64 {
+        self.l2_to_l1_bytes / l1.line_bytes as f64 * l1.miss_penalty as f64
+            + self.dram_to_l2_bytes / l2.line_bytes as f64
+                * l2.miss_penalty as f64
+    }
+}
+
+/// Usable capacity of a level: half the nominal size, the standard working
+/// rule for "fits without thrashing" under LRU with conflict misses.
+fn usable(c: &CacheDesc) -> f64 {
+    c.size_bytes as f64 / 2.0
+}
+
+/// Price one blocked mmt4d walk. The loop structure being modelled is the
+/// one `ukernel::mmt4d` executes:
+///
+/// ```text
+/// for each rectangle (rows of m1b tiles x cols of n1b tiles):   # sharded
+///   for each K chunk of k1b iterations:
+///     for i1 in rect rows:        # LHS chunk strip   m0*k0*kc     bytes
+///       for j1 in rect cols:      # RHS chunk panel   n0*k0*kc     bytes
+///         accumulate tile (i1, j1)  # out tile        m0*n0        bytes
+/// ```
+pub fn blocked_walk_traffic(shape: &WalkShape, eb: ElemBytes, blk: Blocking,
+                            l1: &CacheDesc, l2: &CacheDesc) -> WalkTraffic {
+    let WalkShape { m1, n1, k1, m0, n0, k0 } = *shape;
+    if m1 == 0 || n1 == 0 || k1 == 0 {
+        return WalkTraffic { l2_to_l1_bytes: 0.0, dram_to_l2_bytes: 0.0 };
+    }
+    let (m1b, n1b, k1b) = blk.clamp_to(m1, n1, k1);
+    let (ein, eacc) = (eb.input as f64, eb.acc as f64);
+
+    // Average rectangle extents (edge rectangles are smaller; the average
+    // keeps the model smooth in the block sizes).
+    let (rb, cb) = (m1.div_ceil(m1b) as f64, n1.div_ceil(n1b) as f64);
+    let rows = m1 as f64 / rb; // avg tile-rows per rectangle
+    let cols = n1 as f64 / cb; // avg tile-cols per rectangle
+    let nk = k1.div_ceil(k1b) as f64; // K chunks
+    let kc = k1 as f64 / nk; // avg chunk depth
+
+    let lhs_total = (m1 * k1 * m0 * k0) as f64 * ein;
+    let rhs_total = (n1 * k1 * n0 * k0) as f64 * ein;
+    let out_total = (m1 * n1 * m0 * n0) as f64 * eacc;
+
+    // -- DRAM -> L2 --------------------------------------------------
+    // Each rectangle-row streams the whole RHS once; L2 captures the
+    // re-streaming only if the RHS fits. Symmetrically for the LHS across
+    // rectangle-columns (its per-rect panel is what must stay resident).
+    let dram_rhs = if rhs_total <= usable(l2) {
+        rhs_total
+    } else {
+        rhs_total * rb
+    };
+    let lhs_rect_panel = rows * kc.max(1.0) * (m0 * k0) as f64 * ein * nk;
+    let dram_lhs = if lhs_rect_panel.min(lhs_total) <= usable(l2) {
+        lhs_total
+    } else {
+        lhs_total * cb
+    };
+    // Accumulator tiles are revisited once per K chunk; the revisits hit
+    // L2 (read + write back) when the rectangle's out block stays resident,
+    // DRAM otherwise. First touch is a fill, not a fetch.
+    let out_block = rows * cols * (m0 * n0) as f64 * eacc;
+    let out_revisit = out_total * (nk - 1.0) * 2.0;
+    let dram_out = if out_block <= usable(l2) { 0.0 } else { out_revisit };
+
+    // -- L2 -> L1 ----------------------------------------------------
+    // Per rectangle and chunk, each tile-row walks the RHS chunk panel
+    // (cols * kc * n0 * k0 bytes); L1 captures the per-row re-walk only if
+    // the panel fits. The LHS chunk strip is read once per row per chunk
+    // (its per-column reuse is register/L1-resident by construction —
+    // that's what the kernel's packed layout is for).
+    let rhs_chunk_panel = cols * kc * (n0 * k0) as f64 * ein;
+    let rhs_l1_per_chunk = if rhs_chunk_panel <= usable(l1) {
+        rhs_chunk_panel
+    } else {
+        rhs_chunk_panel * rows
+    };
+    let l1_rhs = rhs_l1_per_chunk * nk * rb * cb;
+    // One LHS chunk strip read per (rect, chunk, row): rows*kc*m0*k0 bytes,
+    // which summed over the whole walk collapses to lhs_total * cb —
+    // chunk-count-independent.
+    let l1_lhs = lhs_total * cb;
+    let l1_out = out_total + out_revisit;
+    WalkTraffic {
+        l2_to_l1_bytes: l1_rhs + l1_lhs + l1_out,
+        dram_to_l2_bytes: dram_rhs + dram_lhs + dram_out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::target::TargetDesc;
+
+    fn l1l2() -> (CacheDesc, CacheDesc) {
+        let t = TargetDesc::milkv_jupiter();
+        (t.l1d, t.l2)
+    }
+
+    /// A GEMM head shape big enough that nothing fits anywhere: d_model
+    /// 2048 x 4096 columns of f16 at the paper's prefill tile.
+    fn big_gemm() -> WalkShape {
+        WalkShape { m1: 8, n1: 128, k1: 2048, m0: 6, n0: 32, k0: 1 }
+    }
+
+    #[test]
+    fn empty_walk_has_no_traffic() {
+        let (l1, l2) = l1l2();
+        let s = WalkShape { m1: 0, n1: 4, k1: 8, m0: 6, n0: 32, k0: 1 };
+        let t = blocked_walk_traffic(&s, ElemBytes::f16(),
+                                     Blocking::unblocked(), &l1, &l2);
+        assert_eq!(t.cycles(&l1, &l2), 0.0);
+    }
+
+    #[test]
+    fn row_blocking_cuts_dram_restreaming_of_a_large_rhs() {
+        let (l1, l2) = l1l2();
+        let s = big_gemm();
+        let un = blocked_walk_traffic(&s, ElemBytes::f16(),
+                                      Blocking::unblocked(), &l1, &l2);
+        let blk = blocked_walk_traffic(&s, ElemBytes::f16(),
+                                       Blocking { m1b: 8, n1b: 2, k1b: 64 },
+                                       &l1, &l2);
+        // The RHS (2048*4096*2 bytes) dwarfs L2: the unblocked walk fetches
+        // it once per tile row; one full-height rectangle fetches it once.
+        assert!(blk.dram_to_l2_bytes < un.dram_to_l2_bytes / 4.0,
+                "blocked {} vs unblocked {}", blk.dram_to_l2_bytes,
+                un.dram_to_l2_bytes);
+        assert!(blk.cycles(&l1, &l2) < un.cycles(&l1, &l2));
+    }
+
+    #[test]
+    fn k_chunks_cut_l1_restreaming_of_wide_panels() {
+        let (l1, l2) = l1l2();
+        let s = big_gemm();
+        let deep = Blocking { m1b: 8, n1b: 4, k1b: 2048 };
+        let chunked = Blocking { m1b: 8, n1b: 4, k1b: 32 };
+        let td = blocked_walk_traffic(&s, ElemBytes::f16(), deep, &l1, &l2);
+        let tc = blocked_walk_traffic(&s, ElemBytes::f16(), chunked, &l1,
+                                      &l2);
+        // A 4-tile x 2048-deep RHS panel (512 KiB) can't live in L1, so the
+        // deep walk re-reads it once per tile row; 32-deep chunks fit L1
+        // and beat it even after paying the per-chunk accumulator revisits.
+        assert!(tc.l2_to_l1_bytes < td.l2_to_l1_bytes,
+                "chunked {} vs deep {}", tc.l2_to_l1_bytes,
+                td.l2_to_l1_bytes);
+    }
+
+    #[test]
+    fn oversized_blocks_clamp_to_the_grid() {
+        let (l1, l2) = l1l2();
+        let s = WalkShape { m1: 3, n1: 5, k1: 16, m0: 6, n0: 32, k0: 1 };
+        let a = blocked_walk_traffic(&s, ElemBytes::i8(),
+                                     Blocking { m1b: 3, n1b: 5, k1b: 16 },
+                                     &l1, &l2);
+        let b = blocked_walk_traffic(&s, ElemBytes::i8(),
+                                     Blocking { m1b: 99, n1b: 99, k1b: 999 },
+                                     &l1, &l2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gemv_is_insensitive_to_row_blocking() {
+        let (l1, l2) = l1l2();
+        let s = WalkShape { m1: 1, n1: 64, k1: 2048, m0: 1, n0: 64, k0: 1 };
+        let a = blocked_walk_traffic(&s, ElemBytes::f16(),
+                                     Blocking { m1b: 1, n1b: 4, k1b: 128 },
+                                     &l1, &l2);
+        let b = blocked_walk_traffic(&s, ElemBytes::f16(),
+                                     Blocking { m1b: 8, n1b: 4, k1b: 128 },
+                                     &l1, &l2);
+        assert_eq!(a, b, "one tile row: m1b cannot matter");
+    }
+
+    #[test]
+    fn cycles_scale_with_miss_penalties() {
+        let (l1, l2) = l1l2();
+        let t = WalkTraffic { l2_to_l1_bytes: 6400.0,
+                              dram_to_l2_bytes: 640.0 };
+        let want = 6400.0 / l1.line_bytes as f64 * l1.miss_penalty as f64
+            + 640.0 / l2.line_bytes as f64 * l2.miss_penalty as f64;
+        assert_eq!(t.cycles(&l1, &l2), want);
+    }
+}

@@ -250,6 +250,86 @@ pub fn parallel_tiles2<T: Send, U: Send>(
     });
 }
 
+/// The rectangle of outer tiles one [`parallel_tile_blocks`] task owns in
+/// an `[M1, N1, M0, N0]`-shaped buffer. [`TileRect::tile_mut`] hands out the
+/// `(i1, j1)` output tile — and asserts the index is inside the owned
+/// rectangle, which is what keeps the raw-pointer arithmetic sound: distinct
+/// tasks own disjoint rectangles, so no element is ever mutably visible to
+/// two workers.
+pub struct TileRect<'a, T> {
+    base: *mut T,
+    /// Elements per outer tile (`M0 * N0`).
+    tile: usize,
+    /// Outer-tile columns of the whole grid (row stride in tiles).
+    n1: usize,
+    rows: std::ops::Range<usize>,
+    cols: std::ops::Range<usize>,
+    _buf: std::marker::PhantomData<&'a mut [T]>,
+}
+
+impl<T> TileRect<'_, T> {
+    /// Outer-tile rows this task owns.
+    pub fn rows(&self) -> std::ops::Range<usize> {
+        self.rows.clone()
+    }
+
+    /// Outer-tile columns this task owns.
+    pub fn cols(&self) -> std::ops::Range<usize> {
+        self.cols.clone()
+    }
+
+    /// Mutable view of output tile `(i1, j1)`; panics outside the owned
+    /// rectangle. Borrows `&mut self`, so a task holds at most one tile
+    /// slice at a time.
+    pub fn tile_mut(&mut self, i1: usize, j1: usize) -> &mut [T] {
+        assert!(self.rows.contains(&i1) && self.cols.contains(&j1),
+                "tile ({i1},{j1}) outside owned block {:?}x{:?}",
+                self.rows, self.cols);
+        // SAFETY: (i1, j1) is inside this task's rectangle; rectangles of
+        // distinct tasks are disjoint and in-bounds by construction in
+        // parallel_tile_blocks, and &mut self serializes access per task.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.base.add((i1 * self.n1 + j1) * self.tile), self.tile)
+        }
+    }
+}
+
+/// Shard an `[M1, N1, M0, N0]` output over an (⌈M1/m1b⌉ × ⌈N1/n1b⌉) grid of
+/// tile *rectangles* and run `f` once per rectangle on up to `threads`
+/// workers — the cache-blocked companion of [`parallel_tiles`], whose
+/// per-tile sharding is exactly the `m1b = n1b = 1` case. Each task receives
+/// a [`TileRect`] scoped to its rectangle; the K-loop order *within* every
+/// tile is whatever `f` makes it, so blocked and unblocked schedules remain
+/// bit-identical as long as `f` accumulates each tile's K in ascending
+/// order.
+pub fn parallel_tile_blocks<T: Send>(
+    threads: usize, out: &mut [T], tile: usize, m1: usize, n1: usize,
+    m1b: usize, n1b: usize, f: impl Fn(&mut TileRect<T>) + Sync,
+) {
+    if out.is_empty() {
+        assert_eq!(m1 * n1 * tile, 0, "empty out for a non-empty grid");
+        return;
+    }
+    assert!(tile > 0 && m1 > 0 && n1 > 0, "degenerate tile grid");
+    assert_eq!(out.len(), m1 * n1 * tile, "out must be the whole tile grid");
+    let (m1b, n1b) = (m1b.max(1), n1b.max(1));
+    let (mb, nb) = (m1.div_ceil(m1b), n1.div_ceil(n1b));
+    let base = SendPtr(out.as_mut_ptr());
+    run_tasks(threads, mb * nb, |t| {
+        let (bi, bj) = (t / nb, t % nb);
+        let mut rect = TileRect {
+            base: base.0,
+            tile,
+            n1,
+            rows: bi * m1b..((bi + 1) * m1b).min(m1),
+            cols: bj * n1b..((bj + 1) * n1b).min(n1),
+            _buf: std::marker::PhantomData,
+        };
+        f(&mut rect);
+    });
+}
+
 /// Raw-pointer wrapper that may cross the scoped-thread boundary. Sound
 /// because every dereference in this module targets a chunk owned by a
 /// single task index (see the SAFETY notes at the deref sites).
@@ -336,6 +416,57 @@ mod tests {
             panic!("no tasks to run")
         });
         assert_eq!(b, vec![7; 5]);
+    }
+
+    #[test]
+    fn tile_blocks_cover_every_tile_exactly_once() {
+        // Every (i1, j1) tile must be visited exactly once, whatever the
+        // block geometry or pool width — including blocks that overhang the
+        // grid edge.
+        for (m1, n1, m1b, n1b) in
+            [(5usize, 7usize, 2usize, 3usize), (1, 9, 4, 4), (6, 6, 1, 1),
+             (3, 3, 8, 8)]
+        {
+            for threads in [1usize, 4] {
+                let tile = 3;
+                let mut out = vec![0u32; m1 * n1 * tile];
+                parallel_tile_blocks(threads, &mut out, tile, m1, n1, m1b,
+                                     n1b, |rect| {
+                    for i1 in rect.rows() {
+                        for j1 in rect.cols() {
+                            for v in rect.tile_mut(i1, j1).iter_mut() {
+                                *v += (i1 * n1 + j1 + 1) as u32;
+                            }
+                        }
+                    }
+                });
+                for t in 0..m1 * n1 {
+                    assert_eq!(&out[t * tile..][..tile], &[(t + 1) as u32; 3],
+                               "{m1}x{n1} blocks {m1b}x{n1b} @{threads}T");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside owned block")]
+    fn tile_rect_rejects_foreign_tiles() {
+        let mut out = vec![0u32; 4 * 4 * 2];
+        parallel_tile_blocks(1, &mut out, 2, 4, 4, 2, 2, |rect| {
+            let i1 = rect.rows().start;
+            let j1 = rect.cols().start;
+            // A tile from another task's rectangle must be refused.
+            rect.tile_mut((i1 + 2) % 4, (j1 + 2) % 4);
+        });
+    }
+
+    #[test]
+    fn empty_tile_block_grid_is_a_no_op() {
+        let mut empty: Vec<f32> = vec![];
+        parallel_tile_blocks(4, &mut empty, 2, 0, 3, 2, 2,
+                             |_rect: &mut TileRect<f32>| {
+            panic!("no tiles to run")
+        });
     }
 
     #[test]

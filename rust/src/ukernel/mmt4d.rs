@@ -18,9 +18,61 @@
 //! only place floating point accumulates — is the *same code* either way and
 //! each output tile has exactly one owner, parallel output is bit-identical
 //! to serial (pinned by `rust/tests/props.rs`).
+//!
+//! **Cache blocking.** The `_blocked` entry points walk the same grid in
+//! L2/L1-friendly order: the M1×N1 tile grid is cut into [`Blocking`]
+//! rectangles of `m1b × n1b` outer tiles (the taskpool's sharding unit),
+//! and each rectangle accumulates its K loop in `k1b`-deep chunks so the
+//! LHS/RHS panels of the chunk stay cache-resident while every tile of the
+//! rectangle consumes them. Per output tile the K chunks run in ascending
+//! order through the very same tile bodies, so blocked, unblocked, serial
+//! and parallel schedules are all **bit-identical by construction** — the
+//! blocking only permutes *which tile* works when, never the in-tile
+//! accumulation order. The plain serial/`_par` entry points are the
+//! degenerate [`Blocking::unblocked`] walk (one tile per task, full K).
 
 use crate::taskpool::{self, Parallelism};
+use crate::ukernel::scratch;
 use crate::util::f16::F16;
+
+/// Cache-blocking of an mmt4d outer walk (see the module docs): rectangle
+/// sizes in outer tiles (`m1b × n1b`) and K-chunk depth in K1 iterations
+/// (`k1b`). All three are clamped to `[1, extent]` at the walk, so any
+/// positive blocking is legal for any grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    /// Outer-tile rows per block.
+    pub m1b: usize,
+    /// Outer-tile columns per block.
+    pub n1b: usize,
+    /// K1 iterations per accumulation chunk.
+    pub k1b: usize,
+}
+
+impl Blocking {
+    /// The degenerate blocking that reproduces the classic walk exactly:
+    /// one outer tile per task, the whole K loop in one chunk.
+    pub fn unblocked() -> Blocking {
+        Blocking { m1b: 1, n1b: 1, k1b: usize::MAX }
+    }
+
+    /// The profile-less fallback used by the serving backend: a fixed
+    /// L1/L2-derived blocking (≈8 KiB RHS chunks at the paper's strip
+    /// widths, row rectangles deep enough to reuse them). `tenx autotune`
+    /// elects a measured blocking per `(vlen, dtype, phase, threads)` key
+    /// instead; results are bit-identical either way.
+    pub fn static_default() -> Blocking {
+        Blocking { m1b: 4, n1b: 2, k1b: 64 }
+    }
+
+    /// Effective `(m1b, n1b, k1b)` for a concrete grid.
+    pub fn clamp_to(&self, m1: usize, n1: usize,
+                    k1: usize) -> (usize, usize, usize) {
+        (self.m1b.max(1).min(m1.max(1)),
+         self.n1b.max(1).min(n1.max(1)),
+         self.k1b.max(1).min(k1.max(1)))
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Mmt4dParams {
@@ -61,29 +113,18 @@ fn check(p: &Mmt4dParams, lhs: usize, rhs: usize, out: usize) {
 }
 
 /// Stack widening-buffer size: covers N0 up to VLEN=2048's f16 strip and
-/// VLEN=512's i8 strip; wider tiles fall back to a per-thread heap buffer.
+/// VLEN=512's i8 strip; wider tiles fall back to a per-worker heap buffer
+/// (`ukernel::scratch`'s thread-local strips — grown at most once per
+/// worker, fully rewritten every K step, so reuse is safe).
 const STRIP: usize = 256;
-
-// Widening buffers for the rare N0 > STRIP tiles: thread-local so each
-// taskpool worker (and the serial caller) allocates at most once, not once
-// per tile. Contents are fully rewritten every K step, so reuse is safe.
-thread_local! {
-    static WIDE_F32: std::cell::RefCell<Vec<f32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
-    static WIDE_I32: std::cell::RefCell<Vec<i32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
-}
 
 /// f16 x f16 -> f32 (the paper's precision case).
 ///
 /// Hot path: dispatches to the unrolled prefill/decode tile bodies when the
 /// tile matches (K0 = 1), generic loop otherwise.
 pub fn mmt4d_f16f16f32(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParams) {
-    check(p, lhs.len(), rhs.len(), out.len());
-    if !p.accumulate {
-        out.fill(0.0);
-    }
-    mmt4d_f16_grid_serial(lhs, rhs, out, p);
+    mmt4d_f16f16f32_blocked_par(lhs, rhs, out, p, Blocking::unblocked(),
+                                Parallelism::serial());
 }
 
 /// Multi-threaded f16 kernel: same numerics as [`mmt4d_f16f16f32`], with the
@@ -93,35 +134,52 @@ pub fn mmt4d_f16f16f32(lhs: &[F16], rhs: &[F16], out: &mut [f32], p: &Mmt4dParam
 /// grid or the total work is too small to win.
 pub fn mmt4d_f16f16f32_par(lhs: &[F16], rhs: &[F16], out: &mut [f32],
                            p: &Mmt4dParams, par: Parallelism) {
+    mmt4d_f16f16f32_blocked_par(lhs, rhs, out, p, Blocking::unblocked(), par);
+}
+
+/// Cache-blocked serial f16 walk (see the module docs): bit-identical to
+/// [`mmt4d_f16f16f32`] for every input and blocking.
+pub fn mmt4d_f16f16f32_blocked(lhs: &[F16], rhs: &[F16], out: &mut [f32],
+                               p: &Mmt4dParams, blk: Blocking) {
+    mmt4d_f16f16f32_blocked_par(lhs, rhs, out, p, blk, Parallelism::serial());
+}
+
+/// Cache-blocked multi-threaded f16 walk — the one grid traversal every
+/// other f16 entry point routes through. Blocks are the sharding unit; each
+/// block accumulates K in ascending `k1b`-deep chunks over the shared
+/// per-tile dispatch, so every schedule computes the same bits.
+pub fn mmt4d_f16f16f32_blocked_par(lhs: &[F16], rhs: &[F16], out: &mut [f32],
+                                   p: &Mmt4dParams, blk: Blocking,
+                                   par: Parallelism) {
     check(p, lhs.len(), rhs.len(), out.len());
     if !p.accumulate {
         out.fill(0.0);
     }
-    let threads = par.threads_for(p.m1 * p.n1, p.flops());
-    if threads <= 1 {
-        return mmt4d_f16_grid_serial(lhs, rhs, out, p);
+    if p.m1 == 0 || p.n1 == 0 {
+        return;
     }
-    let (n1, k1, m0, n0, k0) = (p.n1, p.k1, p.m0, p.n0, p.k0);
-    taskpool::parallel_tiles(threads, out, m0 * n0, |t, out_tile| {
-        let (i1, j1) = (t / n1, t % n1);
-        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
-        let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
-        mmt4d_f16_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
-    });
-}
-
-/// Serial M1×N1 grid walk (post-fill) over the shared per-tile dispatch.
-fn mmt4d_f16_grid_serial(lhs: &[F16], rhs: &[F16], out: &mut [f32],
-                         p: &Mmt4dParams) {
-    let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
-    for i1 in 0..m1 {
-        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
-        for j1 in 0..n1 {
-            let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
-            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
-            mmt4d_f16_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
+    let (m1b, n1b, k1b) = blk.clamp_to(p.m1, p.n1, p.k1);
+    let blocks = p.m1.div_ceil(m1b) * p.n1.div_ceil(n1b);
+    let threads = par.threads_for(blocks, p.flops());
+    let (k1, m0, n0, k0) = (p.k1, p.m0, p.n0, p.k0);
+    taskpool::parallel_tile_blocks(threads, out, m0 * n0, p.m1, p.n1, m1b,
+                                   n1b, |rect| {
+        let mut kb = 0;
+        while kb < k1 {
+            let kb_len = k1b.min(k1 - kb);
+            for i1 in rect.rows() {
+                let lhs_row =
+                    &lhs[(i1 * k1 + kb) * m0 * k0..][..kb_len * m0 * k0];
+                for j1 in rect.cols() {
+                    let rhs_tile =
+                        &rhs[(j1 * k1 + kb) * n0 * k0..][..kb_len * n0 * k0];
+                    mmt4d_f16_tile(lhs_row, rhs_tile, rect.tile_mut(i1, j1),
+                                   kb_len, m0, n0, k0);
+                }
+            }
+            kb += kb_len;
         }
-    }
+    });
 }
 
 /// One (i1, j1) f16 output tile: the single dispatch point (K0=1 strip
@@ -139,13 +197,8 @@ fn mmt4d_f16_tile(lhs_row: &[F16], rhs_tile: &[F16], out_tile: &mut [f32],
         mmt4d_f16_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
                              &mut bf[..n0]);
     } else {
-        WIDE_F32.with(|b| {
-            let mut bf = b.borrow_mut();
-            if bf.len() < n0 {
-                bf.resize(n0, 0.0);
-            }
-            mmt4d_f16_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
-                                 &mut bf[..n0]);
+        scratch::with_wide_f32(n0, |bf| {
+            mmt4d_f16_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0, bf);
         });
     }
 }
@@ -259,11 +312,8 @@ pub fn mmt4d_f32f32f32(lhs: &[f32], rhs: &[f32], out: &mut [f32], p: &Mmt4dParam
 /// kernel, the RVV-simulated kernel and a naive i32 matmul are all
 /// bit-identical by construction — the property `propcheck` tests pin down.
 pub fn mmt4d_s8s8s32(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
-    check(p, lhs.len(), rhs.len(), out.len());
-    if !p.accumulate {
-        out.fill(0);
-    }
-    mmt4d_s8_grid_serial(lhs, rhs, out, p);
+    mmt4d_s8s8s32_blocked_par(lhs, rhs, out, p, Blocking::unblocked(),
+                              Parallelism::serial());
 }
 
 /// Multi-threaded s8s8s32 kernel: the int8 counterpart of
@@ -272,36 +322,52 @@ pub fn mmt4d_s8s8s32(lhs: &[i8], rhs: &[i8], out: &mut [i32], p: &Mmt4dParams) {
 /// decides who computes which tile.
 pub fn mmt4d_s8s8s32_par(lhs: &[i8], rhs: &[i8], out: &mut [i32],
                          p: &Mmt4dParams, par: Parallelism) {
+    mmt4d_s8s8s32_blocked_par(lhs, rhs, out, p, Blocking::unblocked(), par);
+}
+
+/// Cache-blocked serial int8 walk: bit-identical to [`mmt4d_s8s8s32`] for
+/// every input and blocking (and trivially so — integer accumulation is
+/// order-free besides).
+pub fn mmt4d_s8s8s32_blocked(lhs: &[i8], rhs: &[i8], out: &mut [i32],
+                             p: &Mmt4dParams, blk: Blocking) {
+    mmt4d_s8s8s32_blocked_par(lhs, rhs, out, p, blk, Parallelism::serial());
+}
+
+/// Cache-blocked multi-threaded int8 walk — the one grid traversal every
+/// other s8s8s32 entry point routes through (see
+/// [`mmt4d_f16f16f32_blocked_par`]).
+pub fn mmt4d_s8s8s32_blocked_par(lhs: &[i8], rhs: &[i8], out: &mut [i32],
+                                 p: &Mmt4dParams, blk: Blocking,
+                                 par: Parallelism) {
     check(p, lhs.len(), rhs.len(), out.len());
     if !p.accumulate {
         out.fill(0);
     }
-    let threads = par.threads_for(p.m1 * p.n1, p.flops());
-    if threads <= 1 {
-        return mmt4d_s8_grid_serial(lhs, rhs, out, p);
+    if p.m1 == 0 || p.n1 == 0 {
+        return;
     }
-    let (n1, k1, m0, n0, k0) = (p.n1, p.k1, p.m0, p.n0, p.k0);
-    taskpool::parallel_tiles(threads, out, m0 * n0, |t, out_tile| {
-        let (i1, j1) = (t / n1, t % n1);
-        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
-        let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
-        mmt4d_s8_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
-    });
-}
-
-/// Serial int8 M1×N1 grid walk (post-fill) over the shared per-tile
-/// dispatch.
-fn mmt4d_s8_grid_serial(lhs: &[i8], rhs: &[i8], out: &mut [i32],
-                        p: &Mmt4dParams) {
-    let (m1, n1, k1, m0, n0, k0) = (p.m1, p.n1, p.k1, p.m0, p.n0, p.k0);
-    for i1 in 0..m1 {
-        let lhs_row = &lhs[i1 * k1 * m0 * k0..][..k1 * m0 * k0];
-        for j1 in 0..n1 {
-            let rhs_tile = &rhs[j1 * k1 * n0 * k0..][..k1 * n0 * k0];
-            let out_tile = &mut out[(i1 * n1 + j1) * m0 * n0..][..m0 * n0];
-            mmt4d_s8_tile(lhs_row, rhs_tile, out_tile, k1, m0, n0, k0);
+    let (m1b, n1b, k1b) = blk.clamp_to(p.m1, p.n1, p.k1);
+    let blocks = p.m1.div_ceil(m1b) * p.n1.div_ceil(n1b);
+    let threads = par.threads_for(blocks, p.flops());
+    let (k1, m0, n0, k0) = (p.k1, p.m0, p.n0, p.k0);
+    taskpool::parallel_tile_blocks(threads, out, m0 * n0, p.m1, p.n1, m1b,
+                                   n1b, |rect| {
+        let mut kb = 0;
+        while kb < k1 {
+            let kb_len = k1b.min(k1 - kb);
+            for i1 in rect.rows() {
+                let lhs_row =
+                    &lhs[(i1 * k1 + kb) * m0 * k0..][..kb_len * m0 * k0];
+                for j1 in rect.cols() {
+                    let rhs_tile =
+                        &rhs[(j1 * k1 + kb) * n0 * k0..][..kb_len * n0 * k0];
+                    mmt4d_s8_tile(lhs_row, rhs_tile, rect.tile_mut(i1, j1),
+                                  kb_len, m0, n0, k0);
+                }
+            }
+            kb += kb_len;
         }
-    }
+    });
 }
 
 /// One (i1, j1) int8 output tile: the single dispatch point shared by the
@@ -317,13 +383,8 @@ fn mmt4d_s8_tile(lhs_row: &[i8], rhs_tile: &[i8], out_tile: &mut [i32],
         mmt4d_s8_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
                             &mut bw[..n0]);
     } else {
-        WIDE_I32.with(|b| {
-            let mut bw = b.borrow_mut();
-            if bw.len() < n0 {
-                bw.resize(n0, 0);
-            }
-            mmt4d_s8_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0,
-                                &mut bw[..n0]);
+        scratch::with_wide_i32(n0, |bw| {
+            mmt4d_s8_tile_k0eq1(lhs_row, rhs_tile, out_tile, k1, m0, n0, bw);
         });
     }
 }
@@ -563,6 +624,66 @@ mod tests {
         // row i0, col j0: sum_k lhs[k,i0]*rhs[k,j0]
         // i0=0: k vals 1,3,5 ; j0=0: 1,2,3 -> 1+6+15=22
         assert_eq!(out, vec![22, 22, 28, 28]);
+    }
+
+    #[test]
+    fn blocked_walks_bit_identical_to_unblocked() {
+        // Every blocking geometry — including ones that overhang the grid
+        // and K chunks that don't divide K1 — must reproduce the unblocked
+        // walk bit-for-bit, serial and parallel, f16 and i8.
+        let p = Mmt4dParams { m1: 5, n1: 7, k1: 37, m0: 3, n0: 8, k0: 1,
+                              accumulate: false };
+        let mut rng = Rng::new(23);
+        let lhs = rand_f16(&mut rng, p.lhs_len());
+        let rhs = rand_f16(&mut rng, p.rhs_len());
+        let lhs8: Vec<i8> = (0..p.lhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let rhs8: Vec<i8> = (0..p.rhs_len())
+            .map(|_| rng.range(-128, 128) as i8)
+            .collect();
+        let mut want = vec![0.0f32; p.out_len()];
+        mmt4d_f16f16f32(&lhs, &rhs, &mut want, &p);
+        let mut want8 = vec![0i32; p.out_len()];
+        mmt4d_s8s8s32(&lhs8, &rhs8, &mut want8, &p);
+        let blockings = [
+            Blocking::unblocked(),
+            Blocking::static_default(),
+            Blocking { m1b: 2, n1b: 3, k1b: 5 },
+            Blocking { m1b: 8, n1b: 8, k1b: 16 },
+            Blocking { m1b: 1, n1b: 7, k1b: 1 },
+        ];
+        for blk in blockings {
+            let mut got = vec![0.0f32; p.out_len()];
+            mmt4d_f16f16f32_blocked(&lhs, &rhs, &mut got, &p, blk);
+            assert_eq!(want, got, "f16 serial {blk:?}");
+            let mut got8 = vec![0i32; p.out_len()];
+            mmt4d_s8s8s32_blocked(&lhs8, &rhs8, &mut got8, &p, blk);
+            assert_eq!(want8, got8, "i8 serial {blk:?}");
+            for threads in [2, 4] {
+                let par = Parallelism::new(threads);
+                let mut gp = vec![0.0f32; p.out_len()];
+                mmt4d_f16f16f32_blocked_par(&lhs, &rhs, &mut gp, &p, blk, par);
+                assert_eq!(want, gp, "f16 {threads}T {blk:?}");
+                let mut gp8 = vec![0i32; p.out_len()];
+                mmt4d_s8s8s32_blocked_par(&lhs8, &rhs8, &mut gp8, &p, blk,
+                                          par);
+                assert_eq!(want8, gp8, "i8 {threads}T {blk:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_walk_honours_accumulate() {
+        let p = Mmt4dParams { m1: 2, n1: 2, k1: 6, m0: 2, n0: 2, k0: 1,
+                              accumulate: true };
+        let one = F16::from_f32(1.0);
+        let lhs = vec![one; p.lhs_len()];
+        let rhs = vec![one; p.rhs_len()];
+        let blk = Blocking { m1b: 2, n1b: 1, k1b: 2 };
+        let mut out = vec![10.0f32; p.out_len()];
+        mmt4d_f16f16f32_blocked(&lhs, &rhs, &mut out, &p, blk);
+        assert_eq!(out, vec![16.0; p.out_len()]); // 10 + K(=6) * 1*1
     }
 
     #[test]

@@ -14,9 +14,14 @@
 pub mod mmt4d;
 pub mod pack;
 pub mod quant;
+pub mod scratch;
 
-pub use mmt4d::{mmt4d_f16f16f32, mmt4d_f16f16f32_par, mmt4d_f32f32f32,
-                mmt4d_s8s8s32, mmt4d_s8s8s32_par, Mmt4dParams};
+pub use mmt4d::{mmt4d_f16f16f32, mmt4d_f16f16f32_blocked,
+                mmt4d_f16f16f32_blocked_par, mmt4d_f16f16f32_par,
+                mmt4d_f32f32f32, mmt4d_s8s8s32, mmt4d_s8s8s32_blocked,
+                mmt4d_s8s8s32_blocked_par, mmt4d_s8s8s32_par, Blocking,
+                Mmt4dParams};
+pub use scratch::Scratch;
 
 use crate::ir::tensor::Tensor;
 use crate::ir::types::ElemType;
@@ -287,6 +292,68 @@ pub fn matmul_f16_via_mmt4d_par(a: &[F16], b: &[F16], m: usize, k: usize,
     out
 }
 
+/// Pre-pack f16 weights into the mmt4d RHS layout `[N1,K1,N0,K0]` — the f16
+/// counterpart of [`quant::pack_quant_rhs`]. IREE packs weights at compile
+/// time; the serving backend does it once at load time so that no decode
+/// step ever re-packs the head (the RHS-pack counter in
+/// [`scratch`] is how that claim is enforced).
+pub fn prepack_rhs_f16(b: &[F16], k: usize, n: usize, n0: usize,
+                       k0: usize) -> Vec<F16> {
+    let (n1, k1) = (n.div_ceil(n0), k.div_ceil(k0));
+    let mut dst = vec![F16::ZERO; n1 * k1 * n0 * k0];
+    pack::pack_rhs_f16(b, k, n, n0, k0, &mut dst);
+    dst
+}
+
+/// f16 matmul against an RHS already packed by [`prepack_rhs_f16`]: only
+/// the activations are packed per call. Allocating convenience wrapper over
+/// [`matmul_prepacked_rhs_f16_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_prepacked_rhs_f16(a: &[F16], rhs4: &[F16], m: usize, k: usize,
+                                n: usize, m0: usize, n0: usize,
+                                k0: usize) -> Vec<f32> {
+    matmul_prepacked_rhs_f16_par(a, rhs4, m, k, n, m0, n0, k0,
+                                 Parallelism::serial())
+}
+
+/// Multi-threaded [`matmul_prepacked_rhs_f16`]; bit-identical to the serial
+/// and to the repack-per-call pipeline on the same data.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_prepacked_rhs_f16_par(a: &[F16], rhs4: &[F16], m: usize,
+                                    k: usize, n: usize, m0: usize, n0: usize,
+                                    k0: usize, par: Parallelism) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let mut scratch = Scratch::new();
+    matmul_prepacked_rhs_f16_into(a, rhs4, m, k, n, m0, n0, k0,
+                                  Blocking::unblocked(), par, &mut scratch,
+                                  &mut out);
+    out
+}
+
+/// The f16 serving hot path: prepacked RHS, per-call buffers owned by the
+/// caller's [`Scratch`] arena, cache-blocked mmt4d walk. A steady-state
+/// call performs zero RHS packs and zero heap allocations, and its bits are
+/// identical to [`matmul_f16_via_mmt4d`] on the same logical operands (the
+/// pack→mmt4d→unpack pipeline is the same code; only who owns the buffers
+/// and when the RHS was packed differ).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_prepacked_rhs_f16_into(a: &[F16], rhs4: &[F16], m: usize,
+                                     k: usize, n: usize, m0: usize, n0: usize,
+                                     k0: usize, blk: mmt4d::Blocking,
+                                     par: Parallelism,
+                                     scratch: &mut Scratch,
+                                     out: &mut [f32]) {
+    let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+    assert_eq!(a.len(), m * k, "lhs length");
+    assert_eq!(rhs4.len(), n1 * k1 * n0 * k0, "prepacked rhs length");
+    assert_eq!(out.len(), m * n, "out length");
+    let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+    let (lhs4, out4) = scratch.f16_bufs(p.lhs_len(), p.out_len());
+    pack::pack_lhs_f16_par(a, m, k, m0, k0, lhs4, par);
+    mmt4d::mmt4d_f16f16f32_blocked_par(lhs4, rhs4, out4, &p, blk, par);
+    pack::unpack_acc_f32(out4, m1, n1, m0, n0, m, n, out);
+}
+
 /// Quantized matmul through pack -> s8s8s32 mmt4d -> (unpacked i32):
 /// the IREE quantized-path parity entry point.
 pub fn matmul_s8_via_mmt4d(a: &[i8], b: &[i8], m: usize, k: usize, n: usize,
@@ -386,6 +453,51 @@ mod tests {
         let out = execute(&op, &[&lhs, &rhs], &[1, 1, 8, 8]).unwrap();
         // K = 4*2 = 8 terms of 1*2
         assert_eq!(out.as_i32().unwrap(), &[16i32; 64][..]);
+    }
+
+    #[test]
+    fn prepacked_f16_bit_identical_to_repack_path() {
+        use crate::util::prng::Rng;
+        let (m, k, n) = (5, 40, 70);
+        let mut rng = Rng::new(61);
+        let a: Vec<F16> = (0..m * k)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let b: Vec<F16> = (0..k * n)
+            .map(|_| F16::from_f32(rng.f32_range(-1.0, 1.0)))
+            .collect();
+        let (m0, n0, k0) = (6, 32, 1);
+        let repack = matmul_f16_via_mmt4d(&a, &b, m, k, n, m0, n0, k0);
+        let rhs4 = prepack_rhs_f16(&b, k, n, n0, k0);
+        assert_eq!(repack,
+                   matmul_prepacked_rhs_f16(&a, &rhs4, m, k, n, m0, n0, k0),
+                   "weight pre-packing must not change bits");
+        for threads in [2, 4] {
+            assert_eq!(repack,
+                       matmul_prepacked_rhs_f16_par(&a, &rhs4, m, k, n, m0,
+                                                    n0, k0,
+                                                    Parallelism::new(threads)),
+                       "{threads}T prepacked path diverged");
+        }
+        // Scratch reuse + cache blocking: same bits, and after the first
+        // call the arena stops allocating and no RHS pack ever happens.
+        let mut sc = Scratch::new();
+        let mut out = vec![0.0f32; m * n];
+        let blk = Blocking::static_default();
+        matmul_prepacked_rhs_f16_into(&a, &rhs4, m, k, n, m0, n0, k0, blk,
+                                      Parallelism::serial(), &mut sc,
+                                      &mut out);
+        assert_eq!(repack, out);
+        let base = scratch::stats();
+        for _ in 0..3 {
+            matmul_prepacked_rhs_f16_into(&a, &rhs4, m, k, n, m0, n0, k0,
+                                          blk, Parallelism::serial(), &mut sc,
+                                          &mut out);
+        }
+        let d = scratch::stats().delta_since(base);
+        assert_eq!(repack, out);
+        assert_eq!(d.rhs_packs, 0, "steady state must not re-pack weights");
+        assert_eq!(d.allocs, 0, "steady state must not allocate");
     }
 
     #[test]

@@ -61,6 +61,7 @@ macro_rules! impl_pack_lhs {
         /// Multi-threaded LHS pack: M1 row-blocks sharded over the pool.
         pub fn $par_name(src: &[$t], m: usize, k: usize, m0: usize, k0: usize,
                          dst: &mut [$t], par: Parallelism) {
+            crate::ukernel::scratch::note_lhs_pack();
             assert_eq!(src.len(), m * k);
             let m1 = m.div_ceil(m0);
             let k1 = k.div_ceil(k0);
@@ -103,8 +104,11 @@ macro_rules! impl_pack_rhs {
         }
 
         /// Multi-threaded RHS pack: N1 column-blocks sharded over the pool.
+        /// Counted by `ukernel::scratch` — a steady-state serving step must
+        /// never reach this (weights are pre-packed at load time).
         pub fn $par_name(src: &[$t], k: usize, n: usize, n0: usize, k0: usize,
                          dst: &mut [$t], par: Parallelism) {
+            crate::ukernel::scratch::note_rhs_pack();
             assert_eq!(src.len(), k * n);
             let n1 = n.div_ceil(n0);
             let k1 = k.div_ceil(k0);
@@ -169,6 +173,32 @@ macro_rules! impl_unpack_acc {
 
 impl_unpack_acc!(unpack_acc_f32, f32);
 impl_unpack_acc!(unpack_acc_i32, i32);
+
+/// Fused unpack + row-wise dequantize for the int8 serving path: the
+/// `[M1,N1,M0,N0]` i32 accumulator goes straight to the `[M,N]` f32 output
+/// as `dst[i,j] = src[tile(i,j)] as f32 * row_scales[i] * rhs_scale` — one
+/// pass, no intermediate i32 matrix. The per-element expression (and its
+/// left-to-right multiplication order) is exactly the one the two-buffer
+/// dequantize used, so the fusion is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_dequant_acc_i32(src: &[i32], m1: usize, n1: usize, m0: usize,
+                              n0: usize, m: usize, n: usize,
+                              row_scales: &[f32], rhs_scale: f32,
+                              dst: &mut [f32]) {
+    assert_eq!(src.len(), m1 * n1 * m0 * n0);
+    assert_eq!(row_scales.len(), m);
+    assert_eq!(dst.len(), m * n);
+    assert!(m <= m1 * m0 && n <= n1 * n0);
+    for i in 0..m {
+        let (i1, i0) = (i / m0, i % m0);
+        let rs = row_scales[i];
+        for j in 0..n {
+            let (j1, j0) = (j / n0, j % n0);
+            let v = src[((i1 * n1 + j1) * m0 + i0) * n0 + j0];
+            dst[i * n + j] = v as f32 * rs * rhs_scale;
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -278,6 +308,35 @@ mod tests {
         pack_lhs_f32_par(&src, m, k, 6, 1, &mut par,
                          crate::taskpool::Parallelism::new(4));
         assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn unpack_dequant_fusion_bit_identical_to_two_pass() {
+        forall(Config::default().cases(40), |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(1, 20);
+            let m0 = g.usize_in(1, 7);
+            let n0 = g.usize_in(1, 9);
+            let (m1, n1) = (m.div_ceil(m0), n.div_ceil(n0));
+            let mut rng = Rng::new((m * 97 + n * 11 + m0) as u64);
+            let src: Vec<i32> = (0..m1 * n1 * m0 * n0)
+                .map(|_| rng.range(-100_000, 100_000) as i32)
+                .collect();
+            let scales: Vec<f32> =
+                (0..m).map(|_| rng.f32_range(0.001, 2.0)).collect();
+            let rhs_scale = rng.f32_range(0.001, 2.0);
+            // two-pass reference: unpack, then the rowwise dequantize
+            // expression exactly as quant.rs used to write it
+            let mut acc = vec![0i32; m * n];
+            unpack_acc_i32(&src, m1, n1, m0, n0, m, n, &mut acc);
+            let want: Vec<f32> = (0..m * n)
+                .map(|idx| acc[idx] as f32 * scales[idx / n] * rhs_scale)
+                .collect();
+            let mut got = vec![0.0f32; m * n];
+            unpack_dequant_acc_i32(&src, m1, n1, m0, n0, m, n, &scales,
+                                   rhs_scale, &mut got);
+            prop_assert(got == want, "fused dequantize changed bits")
+        });
     }
 
     #[test]

@@ -11,6 +11,8 @@
 
 #![deny(missing_docs)]
 
+use super::mmt4d::Blocking;
+use super::scratch::Scratch;
 use super::{matmul_s8_via_mmt4d, pack, Mmt4dParams};
 use crate::taskpool::{self, Parallelism};
 use crate::util::f16::F16;
@@ -133,21 +135,50 @@ pub fn matmul_prepacked_rhs_rowwise(a: &[f32], rhs4: &[i8], pb: QuantParams,
                                      Parallelism::serial())
 }
 
-/// Multi-threaded [`matmul_prepacked_rhs_rowwise`] — the native serving
-/// backend's hot path. Per-row quantization is embarrassingly parallel
-/// (each row emits its own quantized image + scale), the activation pack
-/// shards over M1 row-blocks, and the mmt4d shards over the M1×N1 tile
-/// grid; every stage is bit-identical to its serial form.
+/// Multi-threaded [`matmul_prepacked_rhs_rowwise`] — allocating convenience
+/// wrapper over [`matmul_prepacked_rhs_rowwise_into`] (fresh scratch,
+/// unblocked walk). Per-row quantization is embarrassingly parallel (each
+/// row emits its own quantized image + scale), the activation pack shards
+/// over M1 row-blocks, and the mmt4d shards over the tile grid; every stage
+/// is bit-identical to its serial form.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_prepacked_rhs_rowwise_par(a: &[f32], rhs4: &[i8],
                                         pb: QuantParams, m: usize, k: usize,
                                         n: usize, m0: usize, n0: usize,
                                         k0: usize,
                                         par: Parallelism) -> Vec<f32> {
-    let mut qa = vec![0i8; m * k];
-    let mut row_scales = vec![0.0f32; m];
+    let mut out = vec![0.0f32; m * n];
+    let mut scratch = Scratch::new();
+    matmul_prepacked_rhs_rowwise_into(a, rhs4, pb, m, k, n, m0, n0, k0,
+                                      Blocking::unblocked(), par,
+                                      &mut scratch, &mut out);
+    out
+}
+
+/// The int8 serving hot path: [`matmul_prepacked_rhs_rowwise_par`] with
+/// every per-call buffer owned by the caller's [`Scratch`] arena, the
+/// accumulator dequantized *during* unpack (one pass, no intermediate i32
+/// matrix — see [`pack::unpack_dequant_acc_i32`]), and the mmt4d walk
+/// cache-blocked by `blk`. A steady-state call performs zero RHS packs and
+/// zero heap allocations; bits are identical to every other schedule of
+/// this matmul.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_prepacked_rhs_rowwise_into(a: &[f32], rhs4: &[i8],
+                                         pb: QuantParams, m: usize, k: usize,
+                                         n: usize, m0: usize, n0: usize,
+                                         k0: usize, blk: Blocking,
+                                         par: Parallelism,
+                                         scratch: &mut Scratch,
+                                         out: &mut [f32]) {
+    let (m1, n1, k1) = (m.div_ceil(m0), n.div_ceil(n0), k.div_ceil(k0));
+    assert_eq!(a.len(), m * k, "lhs length");
+    assert_eq!(rhs4.len(), n1 * k1 * n0 * k0, "prepacked rhs length");
+    assert_eq!(out.len(), m * n, "out length");
+    let p = Mmt4dParams { m1, n1, k1, m0, n0, k0, accumulate: false };
+    let (qa, row_scales, lhs4, out4) =
+        scratch.i8_bufs(m * k, m, p.lhs_len(), p.out_len());
     let threads = par.threads_for(m, (m * k) as u64);
-    taskpool::parallel_tiles2(threads, &mut qa, k, &mut row_scales, 1,
+    taskpool::parallel_tiles2(threads, qa, k, row_scales, 1,
                               |i, qrow, scale| {
         let p = QuantParams::for_data(&a[i * k..][..k]);
         for (dst, &v) in qrow.iter_mut().zip(&a[i * k..][..k]) {
@@ -155,10 +186,10 @@ pub fn matmul_prepacked_rhs_rowwise_par(a: &[f32], rhs4: &[i8],
         }
         scale[0] = p.scale;
     });
-    let acc = matmul_qa_prepacked(&qa, rhs4, m, k, n, m0, n0, k0, par);
-    (0..m * n)
-        .map(|idx| acc[idx] as f32 * row_scales[idx / n] * pb.scale)
-        .collect()
+    pack::pack_lhs_i8_par(qa, m, k, m0, k0, lhs4, par);
+    super::mmt4d::mmt4d_s8s8s32_blocked_par(lhs4, rhs4, out4, &p, blk, par);
+    pack::unpack_dequant_acc_i32(out4, m1, n1, m0, n0, m, n, row_scales,
+                                 pb.scale, out);
 }
 
 /// Shared core: pre-quantized LHS x pre-packed RHS -> exact i32 accumulator.

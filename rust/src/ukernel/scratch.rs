@@ -1,0 +1,254 @@
+//! Reusable scratch arenas + steady-state counters for the serving hot
+//! path.
+//!
+//! The paper's mmt4d story is that layout work happens *once*: weights are
+//! packed at load time and the microkernel streams them. This module is the
+//! other half of that discipline for the per-call buffers — a [`Scratch`]
+//! arena owns the packed-LHS, packed-accumulator, quantized-activation and
+//! row-scale buffers across calls (per serving backend), and the kernels'
+//! per-worker widening strips live here as thread-locals (per taskpool
+//! worker). A steady-state decode step therefore performs **zero weight
+//! packs and zero buffer allocations**, and this module carries the
+//! counters that *prove* it:
+//!
+//! * `rhs_packs` / `lhs_packs` — one per `pack_rhs_*` / `pack_lhs_*` call
+//!   (counted at the entry point, on the calling thread, so a serving loop
+//!   observes its own packs even when the pack itself shards over workers).
+//! * `allocs` — one per scratch-buffer *growth* (a [`Buf::take`] or
+//!   widening-strip request beyond the buffer's current capacity). Steady
+//!   state means this counter stops moving.
+//!
+//! Counters are **thread-local**: a reader sees the events of its own
+//! thread, which makes the zero-pack/zero-alloc assertions in the tests and
+//! `benches/decode_steady_state.rs` immune to unrelated work on other
+//! threads (per-worker widening-strip growth lands on the worker that paid
+//! it — at most once per thread, never in steady state).
+
+#![deny(missing_docs)]
+
+use std::cell::{Cell, RefCell};
+
+use crate::util::f16::F16;
+
+thread_local! {
+    static RHS_PACKS: Cell<u64> = const { Cell::new(0) };
+    static LHS_PACKS: Cell<u64> = const { Cell::new(0) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    // Per-worker widening strips for the rare N0 > STRIP mmt4d tiles (see
+    // ukernel::mmt4d): each taskpool worker (and the serial caller)
+    // allocates at most once, not once per tile.
+    static WIDE_F32: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static WIDE_I32: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Record one RHS (weight-layout) pack on this thread.
+pub fn note_rhs_pack() {
+    RHS_PACKS.with(|c| c.set(c.get() + 1));
+}
+
+/// Record one LHS (activation-layout) pack on this thread.
+pub fn note_lhs_pack() {
+    LHS_PACKS.with(|c| c.set(c.get() + 1));
+}
+
+/// Record one scratch-buffer growth (heap allocation) on this thread.
+pub fn note_alloc() {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+/// Snapshot of this thread's pack/alloc counters since thread start.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// RHS (weight) packs performed.
+    pub rhs_packs: u64,
+    /// LHS (activation) packs performed.
+    pub lhs_packs: u64,
+    /// Scratch-buffer growth events (heap allocations).
+    pub allocs: u64,
+}
+
+impl ScratchStats {
+    /// Counters accumulated since `base` was snapshotted (saturating, so a
+    /// foreign baseline degrades to zeros rather than wrapping).
+    pub fn delta_since(&self, base: ScratchStats) -> ScratchStats {
+        ScratchStats {
+            rhs_packs: self.rhs_packs.saturating_sub(base.rhs_packs),
+            lhs_packs: self.lhs_packs.saturating_sub(base.lhs_packs),
+            allocs: self.allocs.saturating_sub(base.allocs),
+        }
+    }
+}
+
+/// Read this thread's counters.
+pub fn stats() -> ScratchStats {
+    ScratchStats {
+        rhs_packs: RHS_PACKS.with(|c| c.get()),
+        lhs_packs: LHS_PACKS.with(|c| c.get()),
+        allocs: ALLOCS.with(|c| c.get()),
+    }
+}
+
+/// One reusable scratch buffer: grows monotonically (counted via
+/// [`note_alloc`] when the growth actually reallocates), never shrinks.
+///
+/// [`Buf::take`] returns the first `len` elements with **unspecified stale
+/// contents** — every consumer here fully overwrites its buffer (packs
+/// write all elements including padding, mmt4d fills unless accumulating,
+/// quantization writes every row), which is what makes reuse safe.
+#[derive(Debug, Default)]
+pub struct Buf<T> {
+    data: Vec<T>,
+}
+
+impl<T: Clone + Default> Buf<T> {
+    /// An empty buffer (first `take` allocates).
+    pub fn new() -> Buf<T> {
+        Buf { data: Vec::new() }
+    }
+
+    /// The first `len` elements, growing the buffer if needed. Contents are
+    /// stale — the caller must fully write them.
+    pub fn take(&mut self, len: usize) -> &mut [T] {
+        if self.data.len() < len {
+            if len > self.data.capacity() {
+                note_alloc();
+            }
+            self.data.resize(len, T::default());
+        }
+        &mut self.data[..len]
+    }
+}
+
+/// Reusable per-call kernel buffers for the prepacked serving matmuls: one
+/// arena per serving backend (plus ad-hoc ones in tests/benches). Holds the
+/// packed-LHS and packed-accumulator buffers of both kernel dtypes and the
+/// int8 path's quantized activations + per-row scales, so a steady-state
+/// call allocates nothing.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    lhs4_f16: Buf<F16>,
+    out4_f32: Buf<f32>,
+    qa: Buf<i8>,
+    row_scales: Buf<f32>,
+    lhs4_i8: Buf<i8>,
+    out4_i32: Buf<i32>,
+}
+
+impl Scratch {
+    /// An empty arena.
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// The f16 path's per-call buffers: packed LHS (`lhs4_len` elements)
+    /// and packed f32 accumulator (`out4_len`).
+    pub fn f16_bufs(&mut self, lhs4_len: usize,
+                    out4_len: usize) -> (&mut [F16], &mut [f32]) {
+        (self.lhs4_f16.take(lhs4_len), self.out4_f32.take(out4_len))
+    }
+
+    /// The int8 path's per-call buffers: quantized activations, per-row
+    /// scales, packed LHS and packed i32 accumulator.
+    pub fn i8_bufs(&mut self, qa_len: usize, scales_len: usize,
+                   lhs4_len: usize, out4_len: usize)
+                   -> (&mut [i8], &mut [f32], &mut [i8], &mut [i32]) {
+        (self.qa.take(qa_len), self.row_scales.take(scales_len),
+         self.lhs4_i8.take(lhs4_len), self.out4_i32.take(out4_len))
+    }
+}
+
+/// Run `f` on this worker's f32 widening strip of at least `len` elements
+/// (grown — and counted — at most once per thread per high-water mark).
+pub(crate) fn with_wide_f32<R>(len: usize,
+                               f: impl FnOnce(&mut [f32]) -> R) -> R {
+    WIDE_F32.with(|b| {
+        let mut v = b.borrow_mut();
+        if v.len() < len {
+            if len > v.capacity() {
+                note_alloc();
+            }
+            v.resize(len, 0.0);
+        }
+        f(&mut v[..len])
+    })
+}
+
+/// Run `f` on this worker's i32 widening strip (see [`with_wide_f32`]).
+pub(crate) fn with_wide_i32<R>(len: usize,
+                               f: impl FnOnce(&mut [i32]) -> R) -> R {
+    WIDE_I32.with(|b| {
+        let mut v = b.borrow_mut();
+        if v.len() < len {
+            if len > v.capacity() {
+                note_alloc();
+            }
+            v.resize(len, 0);
+        }
+        f(&mut v[..len])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buf_grows_once_per_high_water_mark() {
+        let mut b: Buf<f32> = Buf::new();
+        let base = stats();
+        b.take(100).fill(1.0);
+        let after_first = stats().delta_since(base).allocs;
+        assert!(after_first >= 1, "first take must allocate");
+        // Smaller and equal takes are free; contents persist.
+        assert_eq!(b.take(50).len(), 50);
+        assert_eq!(b.take(100)[99], 1.0);
+        assert_eq!(stats().delta_since(base).allocs, after_first,
+                   "reuse must not allocate");
+    }
+
+    #[test]
+    fn scratch_bufs_are_disjoint_and_reusable() {
+        let mut s = Scratch::new();
+        {
+            let (lhs4, out4) = s.f16_bufs(8, 4);
+            lhs4.fill(F16::from_f32(1.0));
+            out4.fill(2.0);
+        }
+        let base = stats();
+        let (qa, scales, lhs4, out4) = s.i8_bufs(6, 2, 12, 8);
+        qa.fill(1);
+        scales.fill(0.5);
+        lhs4.fill(2);
+        out4.fill(3);
+        // A second pass at the same shapes is allocation-free.
+        let warm = stats();
+        let _ = s.f16_bufs(8, 4);
+        let _ = s.i8_bufs(6, 2, 12, 8);
+        assert_eq!(stats().delta_since(warm).allocs, 0);
+        assert!(stats().delta_since(base).allocs >= 1);
+    }
+
+    #[test]
+    fn counters_are_monotone_and_delta_saturates() {
+        let a = stats();
+        note_rhs_pack();
+        note_lhs_pack();
+        note_alloc();
+        let b = stats();
+        let d = b.delta_since(a);
+        assert_eq!((d.rhs_packs, d.lhs_packs, d.allocs), (1, 1, 1));
+        assert_eq!(a.delta_since(b), ScratchStats::default());
+    }
+
+    #[test]
+    fn wide_strips_grow_once() {
+        let base = stats();
+        with_wide_f32(300, |s| s.fill(1.0));
+        with_wide_i32(300, |s| s.fill(1));
+        let grown = stats().delta_since(base).allocs;
+        with_wide_f32(300, |s| assert_eq!(s.len(), 300));
+        with_wide_i32(200, |s| assert_eq!(s.len(), 200));
+        assert_eq!(stats().delta_since(base).allocs, grown,
+                   "steady-state strip requests must not allocate");
+    }
+}

@@ -249,6 +249,7 @@ fn golden_tuned_profile_changes_symbols_predictably() {
         cycles_per_mac: 0.5,
         spills: 0,
         pressure: pressure_for(256, ElemType::F16, tuned_tile),
+        blocking: tenx_iree::ukernel::Blocking::static_default(),
     });
     let want = "\
 func @mm(%0: tensor<12x64xf16>, %1: tensor<64x128xf16>) {

@@ -642,3 +642,187 @@ fn prop_scheduler_conserves_requests() {
         Ok(())
     });
 }
+
+/// Cache-blocked walks (serial and `_par`, f16 and i8) are bit-identical to
+/// the unblocked walk for every registry candidate tile across VLEN ∈
+/// {128, 256, 512} — blocking only permutes which tile works when, never
+/// the in-tile accumulation order, so this holds exactly, not approximately.
+#[test]
+fn differential_blocked_walks_all_registry_candidates_across_vlens() {
+    use tenx_iree::autotune::enumerate_candidates_quick;
+    use tenx_iree::ir::ElemType;
+    use tenx_iree::taskpool::Parallelism;
+    use tenx_iree::ukernel::Blocking;
+    let mut rng = Rng::new(97);
+    let blockings = [
+        Blocking::static_default(),
+        Blocking { m1b: 2, n1b: 2, k1b: 3 },
+        Blocking { m1b: 7, n1b: 1, k1b: 1 },
+    ];
+    for vlen in [128usize, 256, 512] {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for elem in [ElemType::F16, ElemType::I8] {
+                for tile in enumerate_candidates_quick(vlen, elem, phase) {
+                    let p = Mmt4dParams {
+                        m1: rng.range(1, 5) as usize,
+                        n1: rng.range(1, 5) as usize,
+                        k1: rng.range(1, 17) as usize,
+                        m0: tile.m0,
+                        n0: tile.n0,
+                        k0: tile.k0,
+                        accumulate: false,
+                    };
+                    if elem == ElemType::F16 {
+                        let lhs = rand_f16_vec(&mut rng, p.lhs_len());
+                        let rhs = rand_f16_vec(&mut rng, p.rhs_len());
+                        let mut want = vec![0.0f32; p.out_len()];
+                        ukernel::mmt4d_f16f16f32(&lhs, &rhs, &mut want, &p);
+                        for blk in blockings {
+                            let mut got = vec![0.0f32; p.out_len()];
+                            ukernel::mmt4d_f16f16f32_blocked(&lhs, &rhs,
+                                                             &mut got, &p,
+                                                             blk);
+                            assert_eq!(want, got,
+                                       "VLEN={vlen} {phase:?} {tile:?} \
+                                        {blk:?} serial");
+                            let mut par = vec![0.0f32; p.out_len()];
+                            ukernel::mmt4d_f16f16f32_blocked_par(
+                                &lhs, &rhs, &mut par, &p, blk,
+                                Parallelism::new(3));
+                            assert_eq!(want, par,
+                                       "VLEN={vlen} {phase:?} {tile:?} \
+                                        {blk:?} 3T");
+                        }
+                    } else {
+                        let lhs: Vec<i8> = (0..p.lhs_len())
+                            .map(|_| rng.range(-128, 128) as i8)
+                            .collect();
+                        let rhs: Vec<i8> = (0..p.rhs_len())
+                            .map(|_| rng.range(-128, 128) as i8)
+                            .collect();
+                        let mut want = vec![0i32; p.out_len()];
+                        ukernel::mmt4d_s8s8s32(&lhs, &rhs, &mut want, &p);
+                        for blk in blockings {
+                            let mut got = vec![0i32; p.out_len()];
+                            ukernel::mmt4d_s8s8s32_blocked(&lhs, &rhs,
+                                                           &mut got, &p, blk);
+                            assert_eq!(want, got,
+                                       "VLEN={vlen} {phase:?} {tile:?} \
+                                        {blk:?} serial");
+                            let mut par = vec![0i32; p.out_len()];
+                            ukernel::mmt4d_s8s8s32_blocked_par(
+                                &lhs, &rhs, &mut par, &p, blk,
+                                Parallelism::new(3));
+                            assert_eq!(want, par,
+                                       "VLEN={vlen} {phase:?} {tile:?} \
+                                        {blk:?} 3T");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The prepacked-f16 serving entry points are bit-identical to the
+/// repack-per-call pipeline for every registry candidate across VLENs —
+/// pre-packing moves *when* the RHS layout happens, never what it is.
+#[test]
+fn differential_prepacked_f16_all_registry_candidates_across_vlens() {
+    use tenx_iree::autotune::enumerate_candidates_quick;
+    use tenx_iree::ir::ElemType;
+    use tenx_iree::taskpool::Parallelism;
+    use tenx_iree::ukernel::{Blocking, Scratch};
+    let mut rng = Rng::new(271);
+    for vlen in [128usize, 256, 512] {
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for tile in enumerate_candidates_quick(vlen, ElemType::F16,
+                                                   phase) {
+                let m = rng.range(1, 10) as usize;
+                let k = rng.range(1, 40) as usize;
+                let n = rng.range(1, 80) as usize;
+                let a = rand_f16_vec(&mut rng, m * k);
+                let b = rand_f16_vec(&mut rng, k * n);
+                let want = ukernel::matmul_f16_via_mmt4d(
+                    &a, &b, m, k, n, tile.m0, tile.n0, tile.k0);
+                let rhs4 = ukernel::prepack_rhs_f16(&b, k, n, tile.n0,
+                                                    tile.k0);
+                assert_eq!(want,
+                           ukernel::matmul_prepacked_rhs_f16(
+                               &a, &rhs4, m, k, n, tile.m0, tile.n0,
+                               tile.k0),
+                           "VLEN={vlen} {phase:?} {tile:?} serial");
+                let mut scratch = Scratch::new();
+                let mut out = vec![0.0f32; m * n];
+                ukernel::matmul_prepacked_rhs_f16_into(
+                    &a, &rhs4, m, k, n, tile.m0, tile.n0, tile.k0,
+                    Blocking { m1b: 2, n1b: 3, k1b: 4 },
+                    Parallelism::new(3), &mut scratch, &mut out);
+                assert_eq!(want, out,
+                           "VLEN={vlen} {phase:?} {tile:?} blocked 3T");
+            }
+        }
+    }
+}
+
+/// One scratch arena interleaving prefill- and decode-shaped calls across
+/// both dtype paths: every call's bits must match a fresh-buffer reference
+/// (stale arena contents must never leak into a result), and once every
+/// shape has been seen the arena stops allocating for good.
+#[test]
+fn scratch_arena_interleaved_shapes_no_stale_data_no_allocs() {
+    use tenx_iree::taskpool::Parallelism;
+    use tenx_iree::ukernel::{quant, scratch, Blocking, Scratch};
+    let mut rng = Rng::new(1009);
+    let d = 48usize;
+    let v = 96usize;
+    // prefill: 24 rows at 6x32; decode: 2 rows at 1x64 — the serving
+    // phase alternation, sharing one arena like NativeBackend does.
+    let shapes = [(24usize, 6usize, 32usize), (2, 1, 64)];
+    let wf: Vec<F16> = rand_f16_vec(&mut rng, d * v);
+    let wq_src: Vec<f32> = wf.iter().map(|h| h.to_f32()).collect();
+    let (qw, pw) = quant::quantize(&wq_src);
+    let mut arena = Scratch::new();
+    // Deltas are measured around the *arena* calls only: the fresh-buffer
+    // reference calls allocate by design.
+    let arena_call = |arena: &mut Scratch, f: &mut dyn FnMut(&mut Scratch)|
+                     -> u64 {
+        let base = scratch::stats();
+        f(arena);
+        scratch::stats().delta_since(base).allocs
+    };
+    for round in 0..4 {
+        for &(m, m0, n0) in &shapes {
+            let a16 = rand_f16_vec(&mut rng, m * d);
+            let a32: Vec<f32> = a16.iter().map(|h| h.to_f32()).collect();
+            // f16 path through the shared arena vs fresh-buffer reference
+            let rhs4 = ukernel::prepack_rhs_f16(&wf, d, v, n0, 1);
+            let want = ukernel::matmul_f16_via_mmt4d(&a16, &wf, m, d, v, m0,
+                                                     n0, 1);
+            let mut out = vec![0.0f32; m * v];
+            let allocs = arena_call(&mut arena, &mut |arena| {
+                ukernel::matmul_prepacked_rhs_f16_into(
+                    &a16, &rhs4, m, d, v, m0, n0, 1,
+                    Blocking::static_default(), Parallelism::new(2), arena,
+                    &mut out);
+            });
+            assert_eq!(want, out, "round {round} f16 m={m} {m0}x{n0}");
+            assert!(round == 0 || allocs == 0,
+                    "round {round} f16 m={m}: warm arena allocated");
+            // i8 path through the same arena vs fresh-scratch reference
+            let rhs4q = quant::pack_quant_rhs(&qw, d, v, n0, 1);
+            let want = quant::matmul_prepacked_rhs_rowwise(
+                &a32, &rhs4q, pw, m, d, v, m0, n0, 1);
+            let mut out = vec![0.0f32; m * v];
+            let allocs = arena_call(&mut arena, &mut |arena| {
+                quant::matmul_prepacked_rhs_rowwise_into(
+                    &a32, &rhs4q, pw, m, d, v, m0, n0, 1,
+                    Blocking { m1b: 3, n1b: 1, k1b: 5 },
+                    Parallelism::serial(), arena, &mut out);
+            });
+            assert_eq!(want, out, "round {round} i8 m={m} {m0}x{n0}");
+            assert!(round == 0 || allocs == 0,
+                    "round {round} i8 m={m}: warm arena allocated");
+        }
+    }
+}

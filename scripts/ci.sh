@@ -54,6 +54,33 @@ fi
 echo "autotune smoke: paper tiles re-elected by measurement, zero spills"
 rm -f "$profile"
 
+echo "== zero-repack serve smoke (native, both precisions) =="
+# A short serve loop must report the zero-repack steady state: the
+# scheduler-side counters (measured around every decode call) show exactly
+# zero weight packs and zero scratch-arena growths across all decode steps.
+for prec in f16 i8; do
+    serve_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+        --precision "$prec" --requests 6 --max-new-tokens 8 --threads 2)"
+    line="$(printf '%s\n' "$serve_out" | grep '^steady-state:' || true)"
+    steps="$(printf '%s\n' "$line" | awk '{print $(NF-1)}')"
+    case "$line" in
+        "steady-state: decode rhs packs 0, decode scratch allocs 0 over"*)
+            if [ -z "$steps" ] || [ "$steps" -eq 0 ]; then
+                echo "serve smoke ($prec): no decode steps ran"
+                printf '%s\n' "$serve_out"
+                exit 1
+            fi
+            ;;
+        *)
+            echo "serve smoke ($prec): steady state regressed (packs or \
+allocs nonzero, or the metrics line is missing)"
+            printf '%s\n' "$serve_out"
+            exit 1
+            ;;
+    esac
+    echo "serve smoke ($prec): 0 packs, 0 allocs over $steps decode steps"
+done
+
 echo "== threaded ukernel bench (quick, 2 workers) =="
 TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
 
@@ -97,6 +124,9 @@ if [ "${RUN_BENCHES:-0}" = "1" ]; then
              cache_missrate; do
         TENX_BENCH_QUICK=1 cargo bench --bench "$b"
     done
+    # decode_steady_state self-asserts its zero-pack/zero-alloc counters;
+    # 2 workers exercise the NT rows too.
+    TENX_BENCH_QUICK=1 cargo bench --bench decode_steady_state -- --threads 2
     echo "== tile_sweep A2d: tuned-vs-static (quick profile) =="
     profile="$(mktemp /tmp/tenx-tuning-bench.XXXXXX)"
     cargo run --release --quiet --bin tenx -- autotune --quick \
