@@ -1,15 +1,90 @@
-//! **E2E**: serving throughput/latency of the full stack (PJRT engine +
-//! continuous-batching coordinator) on the tiny-llama artifacts, for both
-//! compilation paths. Requires `make artifacts`.
+//! **E2E**: serving throughput/latency of the full stack.
+//!
+//! Two sections:
+//!
+//! * **Admitted concurrency at fixed KV memory** (native backend, always
+//!   runs): the same KV token budget served as contiguous per-slot slabs
+//!   vs the paged KV cache (`docs/KVCACHE.md`). Short requests reserve
+//!   pages instead of `max_seq` slabs, so the paged scheduler keeps more
+//!   batch lanes busy on identical memory — the serving-comparison claim
+//!   the paper's Llama-3.2-1B section is bounded by. The section also
+//!   asserts paged-vs-slab token parity.
+//! * **PJRT engine rows** (requires `make artifacts`): continuous-batching
+//!   throughput/latency over the tiny-llama artifacts, both compilation
+//!   paths.
 //!
 //!     cargo bench --bench e2e_serving
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
-use tenx_iree::coordinator::{server, EngineBackend};
+use tenx_iree::coordinator::{server, EngineBackend, KvCacheConfig, KvChoice,
+                             NativeBackend, Precision, Request, Scheduler};
 use tenx_iree::llm::{SamplingParams, Tokenizer};
+use tenx_iree::metrics::ServingMetrics;
 use tenx_iree::runtime::EnginePath;
+
+/// Fixed-memory head-to-head: 512 KV token-positions as 8 slab slots of
+/// max_seq=64, vs 32 pages of 16 tokens backing 16 batch lanes. Requests
+/// are short (~10-token prompts + 8 new tokens ⇒ 2-page worst case), which
+/// is exactly the regime the slab layout wastes capacity on.
+fn bench_native_paged_vs_slab(quick: bool) -> anyhow::Result<()> {
+    let tok = Tokenizer::new(512);
+    let (n_req, max_new) = if quick { (24usize, 8usize) } else { (64, 8) };
+    let prompts = ["the sun heats the", "rain falls on", "a seed grows",
+                   "waves move sand"];
+    println!("== E2E serving: admitted concurrency at fixed KV memory \
+              (native f16, {n_req} requests, 512 KV token budget) ==");
+    let mut token_sets: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for (label, batch, kv) in [
+        ("slab:  8 slots x 64-token slabs", 8usize, KvChoice::Slab),
+        ("paged: 16 slots, 32 x 16-token pages", 16,
+         KvChoice::Paged(KvCacheConfig { page_tokens: 16, pool_pages: 32 })),
+    ] {
+        let backend = NativeBackend::new(batch, 16, 64, 512, 64,
+                                         Precision::F16, 7);
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut sched = Scheduler::with_kv(backend, 256, metrics.clone(), 7,
+                                           kv);
+        let t0 = Instant::now();
+        for i in 0..n_req {
+            let req = Request {
+                id: i as u64,
+                prompt: tok.encode(prompts[i % prompts.len()]),
+                max_new_tokens: max_new,
+                sampling: SamplingParams::Greedy,
+                eos_token: None,
+            };
+            assert!(sched.submit(req), "queue is sized for the workload");
+        }
+        let mut max_active = 0usize;
+        let mut steps = 0usize;
+        let mut outs = Vec::new();
+        while sched.has_work() {
+            sched.step()?;
+            max_active = max_active.max(sched.active_count());
+            steps += 1;
+            outs.extend(sched.take_finished());
+            assert!(steps < 100_000, "scheduler did not converge");
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let toks: usize = outs.iter().map(|o| o.tokens.len()).sum();
+        println!(
+            "{label:<38} {max_active:>2} max concurrent   {steps:>4} steps   \
+             {:>8.1} tok/s   shared-prefix hits {:>3}   evictions {:>3}",
+            toks as f64 / wall, metrics.kv_shared_prefix_hits.get(),
+            metrics.kv_evictions.get()
+        );
+        outs.sort_by_key(|o| o.id);
+        token_sets.push(outs.into_iter().map(|o| (o.id, o.tokens)).collect());
+    }
+    assert_eq!(token_sets[0], token_sets[1],
+               "paged serving changed tokens vs the slab layout");
+    println!("token parity paged vs slab: exact ({} requests)",
+             token_sets[0].len());
+    Ok(())
+}
 
 fn bench_path(dir: &PathBuf, path: EnginePath, n_requests: usize,
               max_new: usize) -> anyhow::Result<()> {
@@ -51,14 +126,16 @@ fn bench_path(dir: &PathBuf, path: EnginePath, n_requests: usize,
 }
 
 fn main() -> anyhow::Result<()> {
+    let quick = tenx_iree::bench::quick_mode();
+    bench_native_paged_vs_slab(quick)?;
+
     let dir = PathBuf::from("artifacts");
     if !dir.join("manifest.txt").exists() {
-        eprintln!("skipping e2e_serving: run `make artifacts` first");
+        eprintln!("\nskipping the PJRT rows: run `make artifacts` first");
         return Ok(());
     }
-    let quick = tenx_iree::bench::quick_mode();
     let (n, max_new) = if quick { (6, 6) } else { (16, 12) };
-    println!("== E2E serving (tiny-llama via PJRT, continuous batching) ==");
+    println!("\n== E2E serving (tiny-llama via PJRT, continuous batching) ==");
     bench_path(&dir, EnginePath::Mmt4d, n, max_new)?;
     bench_path(&dir, EnginePath::Baseline, n, max_new)?;
     println!("\nnote: host-CPU wall clock; the RISC-V comparison is \

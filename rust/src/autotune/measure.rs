@@ -13,9 +13,12 @@
 
 use crate::cachesim::CacheHierarchy;
 use crate::config::manifest::Tile;
+use crate::coordinator::kvcache::KV_PAGE_TOKENS_DEFAULT;
 use crate::ir::ElemType;
 use crate::kernels::{mmt4d_tile_rvv, mmt4d_tile_rvv_i8, Mmt4dLayout};
-use crate::perfmodel::traffic::{blocked_walk_traffic, ElemBytes, WalkShape};
+use crate::perfmodel::traffic::{blocked_walk_traffic, kv_page_overhead_cycles,
+                                ElemBytes, KvGatherShape, WalkShape};
+use crate::perfmodel::LlamaShapes;
 use crate::rvv::{Rvv, RvvConfig};
 use crate::target::{Phase, TargetDesc};
 use crate::ukernel::Blocking;
@@ -245,6 +248,52 @@ pub fn elect_blocking(target: &TargetDesc, elem: ElemType, tile: Tile,
     best
 }
 
+/// KV page sizes the election considers (power-of-two token counts from
+/// sub-line granularity to a quarter of a typical context).
+pub const KV_PAGE_CANDIDATES: [usize; 7] = [2, 4, 8, 16, 32, 64, 128];
+
+/// An elected KV page size and the modelled overhead that elected it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElectedKvPage {
+    /// The winning token positions per page.
+    pub page_tokens: usize,
+    /// Its modelled per-step gather overhead (cycles).
+    pub overhead_cycles: f64,
+}
+
+/// Elect the paged-KV page size for `target`: minimum
+/// [`kv_page_overhead_cycles`] over [`KV_PAGE_CANDIDATES`] on a
+/// Llama-3.2-1B-shaped gather (full K+V width across all layers, a
+/// 256-token operating point), ties broken toward the built-in default
+/// and then toward smaller pages. Deterministic, persisted as the
+/// optional `kv_page_tokens` key in the profile `[meta]` section, and —
+/// like the blocking election — pure schedule: page size never changes
+/// tokens, only traffic and admission granularity.
+pub fn elect_kv_page_tokens(target: &TargetDesc) -> ElectedKvPage {
+    let shapes = LlamaShapes::llama32_1b();
+    // K + V, f16 payload, every layer — bytes landed per token position.
+    let bpt = 2 * shapes.n_kv_heads * shapes.head_dim * 2 * shapes.n_layers;
+    let shape = KvGatherShape { seq_tokens: 256, kv_bytes_per_token: bpt };
+    let cost = |p: usize| {
+        kv_page_overhead_cycles(&shape, p, &target.l1d, &target.l2)
+    };
+    let mut best = ElectedKvPage {
+        page_tokens: KV_PAGE_TOKENS_DEFAULT,
+        overhead_cycles: cost(KV_PAGE_TOKENS_DEFAULT),
+    };
+    for &p in &KV_PAGE_CANDIDATES {
+        let c = cost(p);
+        if c < best.overhead_cycles * (1.0 - 1e-9)
+            || (c <= best.overhead_cycles * (1.0 + 1e-9)
+                && best.page_tokens != KV_PAGE_TOKENS_DEFAULT
+                && p < best.page_tokens)
+        {
+            best = ElectedKvPage { page_tokens: p, overhead_cycles: c };
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -321,6 +370,30 @@ mod tests {
         assert!(e.traffic_cycles < e.unblocked_cycles,
                 "prefill head walk must benefit from blocking");
         assert!(e.blocking.m1b > 1, "prefill election should block rows");
+    }
+
+    #[test]
+    fn kv_page_election_is_deterministic_and_beats_all_candidates() {
+        let t = TargetDesc::milkv_jupiter();
+        let e = elect_kv_page_tokens(&t);
+        assert_eq!(e, elect_kv_page_tokens(&t), "deterministic");
+        assert!(KV_PAGE_CANDIDATES.contains(&e.page_tokens));
+        assert!(e.overhead_cycles > 0.0);
+        // On the Jupiter hierarchy with Llama-3.2-1B KV widths the
+        // optimum is the built-in default: a profile-less deployment
+        // already serves the elected page size.
+        assert_eq!(e.page_tokens, KV_PAGE_TOKENS_DEFAULT);
+        // the winner prices no worse than any candidate
+        let shapes = LlamaShapes::llama32_1b();
+        let bpt = 2 * shapes.n_kv_heads * shapes.head_dim * 2
+            * shapes.n_layers;
+        let shape = KvGatherShape { seq_tokens: 256,
+                                    kv_bytes_per_token: bpt };
+        for &p in &KV_PAGE_CANDIDATES {
+            let c = kv_page_overhead_cycles(&shape, p, &t.l1d, &t.l2);
+            assert!(e.overhead_cycles <= c * (1.0 + 1e-9),
+                    "candidate {p} beats the elected {}", e.page_tokens);
+        }
     }
 
     #[test]

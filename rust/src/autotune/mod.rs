@@ -30,8 +30,10 @@
 pub mod measure;
 pub mod registry;
 
-pub use measure::{blocking_traffic_cycles, elect_blocking, measure_tile,
-                  ElectedBlocking, MeasureConfig, Measurement};
+pub use measure::{blocking_traffic_cycles, elect_blocking,
+                  elect_kv_page_tokens, measure_tile, ElectedBlocking,
+                  ElectedKvPage, MeasureConfig, Measurement,
+                  KV_PAGE_CANDIDATES};
 pub use registry::{candidate_n0s, enumerate_blockings, enumerate_candidates,
                    enumerate_candidates_quick, pressure_for, tile_is_legal,
                    TileRegistry, TunedTile};
@@ -113,6 +115,9 @@ pub struct AutotuneReport {
     pub vlen: usize,
     /// One sweep per `(dtype, phase, threads)`.
     pub sweeps: Vec<PhaseSweep>,
+    /// Elected paged-KV page size (profile `[meta] kv_page_tokens` — the
+    /// serving memory model's granularity, from the gather-traffic model).
+    pub kv_page: ElectedKvPage,
 }
 
 impl AutotuneReport {
@@ -150,6 +155,11 @@ impl AutotuneReport {
                 b.traffic_cycles, b.unblocked_cycles
             ));
         }
+        s.push_str(&format!(
+            "\nkv page size: {} tokens (modelled gather overhead {:.1} \
+             cycles/step)\n",
+            self.kv_page.page_tokens, self.kv_page.overhead_cycles
+        ));
         s
     }
 }
@@ -172,10 +182,16 @@ pub fn tune_target(target: &TargetDesc, cfg: &AutotuneConfig)
         anyhow::anyhow!("autotune needs a RISC-V target, got {}", target.name)
     })?;
     let mut reg = TileRegistry::empty();
+    // The paged-KV page size rides in every profile: it is tile- and
+    // dtype-independent (a property of the cache hierarchy and the KV
+    // payload width), elected once per target.
+    let kv_page = measure::elect_kv_page_tokens(target);
+    reg.set_kv_page_tokens(kv_page.page_tokens);
     let mut report = AutotuneReport {
         target_name: target.name.to_string(),
         vlen,
         sweeps: Vec::new(),
+        kv_page,
     };
     // Measurements are thread-independent; cache them across thread sweeps.
     let mut cache: BTreeMap<(&'static str, &'static str, usize, usize),
@@ -321,6 +337,9 @@ mod tests {
         assert!(text.contains("<- chosen"));
         assert!(text.contains("paper"));
         assert!(text.contains("blocking:"));
+        // every profile carries the elected paged-KV page size
+        assert_eq!(reg.kv_page_tokens(), Some(report.kv_page.page_tokens));
+        assert!(text.contains("kv page size:"));
     }
 
     #[test]

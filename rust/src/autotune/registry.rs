@@ -171,6 +171,14 @@ pub fn enumerate_blockings() -> Vec<Blocking> {
 pub struct TileRegistry {
     /// Canonical section key (`riscv64-vlen256.f16.prefill.t1`) → entry.
     entries: BTreeMap<String, TunedTile>,
+    /// Elected paged-KV page size (profile key `[meta] kv_page_tokens`,
+    /// from the gather-traffic model — see
+    /// `autotune::measure::elect_kv_page_tokens`). Optional like the
+    /// blocking keys: absent in older/hand-trimmed profiles, 0 rejected
+    /// by the loader; consumers fall back to
+    /// `coordinator::kvcache::KV_PAGE_TOKENS_DEFAULT`. Pure schedule —
+    /// page size never changes tokens.
+    kv_page_tokens: Option<usize>,
 }
 
 fn key_of(vlen: usize, elem: ElemType, phase: Phase, threads: usize) -> String {
@@ -229,6 +237,17 @@ impl TileRegistry {
         self.entries.insert(key_of(vlen, elem, phase, threads), tuned);
     }
 
+    /// The profile's elected paged-KV page size, if it carries one.
+    pub fn kv_page_tokens(&self) -> Option<usize> {
+        self.kv_page_tokens
+    }
+
+    /// Record the elected paged-KV page size (`tenx autotune`).
+    pub fn set_kv_page_tokens(&mut self, page_tokens: usize) {
+        debug_assert!(page_tokens >= 1);
+        self.kv_page_tokens = Some(page_tokens);
+    }
+
     /// The tuned entry for the key, falling back to the single-thread entry
     /// for the same `(vlen, dtype, phase)`.
     pub fn tuned(&self, vlen: usize, elem: ElemType, phase: Phase,
@@ -285,6 +304,9 @@ impl TileRegistry {
         s.push_str("[meta]\n");
         s.push_str(&format!("format_version = {PROFILE_FORMAT_VERSION}\n"));
         s.push_str(&format!("target = \"{target_name}\"\n"));
+        if let Some(p) = self.kv_page_tokens {
+            s.push_str(&format!("kv_page_tokens = {p}\n"));
+        }
         for (key, t) in &self.entries {
             s.push_str(&format!("\n[{key}]\n"));
             s.push_str(&format!("m0 = {}\n", t.tile.m0));
@@ -322,6 +344,12 @@ impl TileRegistry {
                             "unsupported profile format_version {v}");
         }
         let mut reg = TileRegistry::empty();
+        // Optional like the blocking keys: absent → built-in default at
+        // the consumer, but a present value of 0 is never legal.
+        if let Some(p) = doc.get_int("meta", "kv_page_tokens")? {
+            anyhow::ensure!(p >= 1, "[meta] kv_page_tokens must be >= 1");
+            reg.kv_page_tokens = Some(p as usize);
+        }
         for section in doc.sections() {
             if section == "meta" || section.is_empty() {
                 continue;
@@ -493,6 +521,26 @@ mod tests {
         assert_eq!(reg.select(Arch::Riscv64 { vlen_bits: 128 }, Phase::Prefill,
                               ElemType::F16, 1).unwrap(),
                    Tile { m0: 6, n0: 16, k0: 1 });
+    }
+
+    #[test]
+    fn kv_page_tokens_meta_key_round_trips_and_rejects_zero() {
+        let mut reg = TileRegistry::empty();
+        assert_eq!(reg.kv_page_tokens(), None);
+        reg.set_kv_page_tokens(16);
+        let text = reg.render_toml("milkv-jupiter");
+        assert!(text.contains("kv_page_tokens = 16"));
+        let back = TileRegistry::from_toml(&TomlDoc::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.kv_page_tokens(), Some(16));
+        assert_eq!(back, reg);
+        // a profile without the key loads as None (older profiles)
+        let doc = TomlDoc::parse("[meta]\nformat_version = 1\n").unwrap();
+        assert_eq!(TileRegistry::from_toml(&doc).unwrap().kv_page_tokens(),
+                   None);
+        // 0 is rejected, like a degenerate blocking key
+        let doc = TomlDoc::parse("[meta]\nkv_page_tokens = 0\n").unwrap();
+        assert!(TileRegistry::from_toml(&doc).is_err());
     }
 
     #[test]

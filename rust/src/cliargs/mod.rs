@@ -148,6 +148,16 @@ pub fn parse_thread_count(s: &str) -> Result<usize, String> {
     }
 }
 
+/// Parse a "0 = auto" sizing value (`--kv-page-tokens`,
+/// `--kv-pool-pages`): a non-negative integer where 0 means "elect
+/// automatically" (tuning profile, built-in election, or dims-derived).
+pub fn parse_zero_auto(s: &str, what: &str) -> Result<usize, String> {
+    s.parse::<usize>().map_err(|_| {
+        format!("invalid {what} {s:?} (want a non-negative integer; \
+                 0 = auto)")
+    })
+}
+
 /// Parse a comma-separated `--threads` list (`"1"`, `"1,8"`, `"2,auto"`):
 /// each entry via [`parse_thread_count`], deduplicated, ascending. Used by
 /// `tenx autotune` to tune one profile entry per worker count.
@@ -276,6 +286,15 @@ mod tests {
         assert!(parse_thread_list("").is_err());
         assert!(parse_thread_list("1,,2").is_err());
         assert!(parse_thread_list("1,zero").is_err());
+    }
+
+    #[test]
+    fn zero_auto_values_parse() {
+        assert_eq!(parse_zero_auto("0", "--kv-page-tokens"), Ok(0));
+        assert_eq!(parse_zero_auto("16", "--kv-page-tokens"), Ok(16));
+        let e = parse_zero_auto("-1", "--kv-pool-pages").unwrap_err();
+        assert!(e.contains("--kv-pool-pages"));
+        assert!(parse_zero_auto("auto", "--kv-page-tokens").is_err());
     }
 
     #[test]

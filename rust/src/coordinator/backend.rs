@@ -4,9 +4,19 @@
 //! cache; `commit_slots` splices chosen slots into the live cache — the
 //! cache-manager primitive that makes continuous batching possible with
 //! whole-batch compiled artifacts.
+//!
+//! Since the paged-KV refactor the per-step entry points
+//! (`prefill_into` / `commit_slots_kv` / `decode_into`) also carry a
+//! [`KvStepView`]: the scheduler's page-table indirection
+//! (`coordinator::kvcache`, see `docs/KVCACHE.md`). A backend that honours
+//! it (the native one) resolves every KV write and gather through the
+//! tables; backends with their own opaque cache (PJRT) or pure mocks
+//! ignore it — `KvStepView::Slab` reproduces the pre-paging contiguous
+//! layout bit-for-bit.
 
 use anyhow::Result;
 
+use super::kvcache::KvStepView;
 use crate::runtime::{Engine, EnginePath, Literal};
 
 #[derive(Debug, Clone, Copy)]
@@ -35,19 +45,34 @@ pub trait ModelBackend {
     /// [B*S*V]). The scheduler reuses one buffer across steps, so a backend
     /// that overrides this (the native one writes its logits in place) can
     /// serve a steady-state step with zero heap allocations; the default
-    /// just copies the allocating path's result.
-    fn prefill_into(&mut self, tokens: &[i32],
+    /// just copies the allocating path's result. `kv` is the step's
+    /// KV-layout view; backends without a paged store ignore it.
+    fn prefill_into(&mut self, tokens: &[i32], kv: KvStepView<'_>,
                     out: &mut Vec<f32>) -> Result<()> {
+        let _ = kv;
         let v = self.prefill(tokens)?;
         out.clear();
         out.extend_from_slice(&v);
         Ok(())
     }
 
+    /// [`ModelBackend::commit_slots`] with the step's KV view: a paged
+    /// backend writes the staged sequences through the page tables instead
+    /// of into per-slot slabs. Default: ignore the view (slab commit).
+    fn commit_slots_kv(&mut self, slots: &[usize],
+                       kv: KvStepView<'_>) -> Result<()> {
+        let _ = kv;
+        self.commit_slots(slots)
+    }
+
     /// [`ModelBackend::decode`] into a caller-owned buffer (resized to
-    /// [B*V]); see [`ModelBackend::prefill_into`].
+    /// [B*V]); see [`ModelBackend::prefill_into`]. A paged backend first
+    /// applies the view's pending copy-on-write page copies, then resolves
+    /// each lane's KV write through the page tables (PAD lanes — positions
+    /// no table covers — are skipped).
     fn decode_into(&mut self, tokens: &[i32], pos: &[i32],
-                   out: &mut Vec<f32>) -> Result<()> {
+                   kv: KvStepView<'_>, out: &mut Vec<f32>) -> Result<()> {
+        let _ = kv;
         let v = self.decode(tokens, pos)?;
         out.clear();
         out.extend_from_slice(&v);

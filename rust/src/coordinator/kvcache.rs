@@ -1,0 +1,764 @@
+//! Paged KV cache with copy-on-write prefix sharing — the serving memory
+//! model behind continuous batching (see `docs/KVCACHE.md`).
+//!
+//! The pre-paging scheduler reserved one contiguous `max_seq`-sized KV slab
+//! per batch slot: a 3-token request held as much cache as a 64-token one,
+//! and admission was gated on *slots* long before memory was actually
+//! exhausted. This module replaces the slabs with a **block pool of
+//! fixed-size pages** (`page_tokens` token positions each) and a
+//! **per-sequence page table** mapping logical positions to physical pages
+//! — the vLLM/PagedAttention memory model reduced to this repo's serving
+//! shape.
+//!
+//! Three mechanisms ride on the indirection:
+//!
+//! * **Prefix sharing.** Prompt pages are published in a prefix cache keyed
+//!   by a chained token-prefix hash (`hash(parent_key, page tokens)`, with
+//!   the page's exact tokens kept for verification, so a hash collision
+//!   degrades to a miss — never to wrong sharing). Two requests with the
+//!   same system prompt map the shared prefix to the *same physical
+//!   pages*; the pool only stores it once.
+//! * **Copy-on-write.** A page referenced by more than one sequence is
+//!   immutable: a decode append into a shared tail first allocates a
+//!   fresh page and records a `(src, dst)` copy for the backend to apply
+//!   — the writer diverges, every sharer keeps its bytes. A *sole owner*
+//!   appending into its published tail instead unpublishes the page and
+//!   extends it in place (no allocation — the key step in the worst-case
+//!   page accounting below).
+//! * **LRU eviction.** When a sequence finishes, its published pages stay
+//!   in the prefix cache with a zero reference count (still hittable by
+//!   future prompts); unpublished pages return to the free list. When the
+//!   pool runs dry, allocation evicts the least-recently-used zero-ref
+//!   cached page.
+//!
+//! Admission is priced in pages, not slots: an admitted sequence *reserves*
+//! its worst-case page count (`ceil(min(prompt + max_new, max_seq) /
+//! page_tokens)`), and the scheduler admits while `Σ reserved ≤ pool`.
+//! Because every live table is bounded by its reservation and zero-ref
+//! cached pages are always evictable, a mid-decode allocation can never
+//! fail — the admission check is the only gate (the soundness argument is
+//! spelled out in `docs/KVCACHE.md`).
+//!
+//! Everything here is **bookkeeping**: the manager never touches model
+//! payload. Backends receive a [`KvStepView`] with each call and resolve
+//! (slot, position) through it — the attention gather's indirection — or
+//! ignore it entirely (`KvStepView::Slab`, the bit-identical legacy
+//! layout, still compile-time electable via the `kv-slab` cargo feature).
+
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+/// Built-in page size (token positions per page) when neither the CLI nor a
+/// tuning profile elects one. 16 is what the traffic-model election
+/// (`autotune::measure::elect_kv_page_tokens`) picks on the MILK-V Jupiter
+/// hierarchy for Llama-3.2-1B-sized KV traffic.
+pub const KV_PAGE_TOKENS_DEFAULT: usize = 16;
+
+/// Physical page index into the pool.
+pub type PageId = usize;
+
+/// Paged-KV sizing: page granularity and pool capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCacheConfig {
+    /// Token positions per page (`--kv-page-tokens`; 0 = auto: the tuning
+    /// profile's `kv_page_tokens` key, else [`KV_PAGE_TOKENS_DEFAULT`]).
+    pub page_tokens: usize,
+    /// Physical pages in the pool (`--kv-pool-pages`; 0 = auto:
+    /// slab-equivalent capacity, `batch * ceil(max_seq / page_tokens)`).
+    pub pool_pages: usize,
+}
+
+impl KvCacheConfig {
+    /// Fully-auto sizing (resolved against the backend dims at scheduler
+    /// construction).
+    pub fn auto() -> KvCacheConfig {
+        KvCacheConfig { page_tokens: 0, pool_pages: 0 }
+    }
+
+    /// Resolve the 0-means-auto fields against the serving dims.
+    pub fn resolved(self, batch: usize, max_seq: usize) -> (usize, usize) {
+        let pt = if self.page_tokens == 0 {
+            KV_PAGE_TOKENS_DEFAULT
+        } else {
+            self.page_tokens
+        };
+        let pool = if self.pool_pages == 0 {
+            batch.max(1) * max_seq.max(1).div_ceil(pt)
+        } else {
+            self.pool_pages
+        };
+        (pt, pool)
+    }
+}
+
+/// KV layout the scheduler serves with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvChoice {
+    /// Legacy contiguous per-slot slabs (admission on free batch slots).
+    Slab,
+    /// Paged pool + page tables (admission on available pages).
+    Paged(KvCacheConfig),
+}
+
+impl KvChoice {
+    /// The compile-time-elected default layout: paged, unless the crate was
+    /// built with the `kv-slab` feature (the bit-identical fallback).
+    pub fn compile_default() -> KvChoice {
+        if cfg!(feature = "kv-slab") {
+            KvChoice::Slab
+        } else {
+            KvChoice::Paged(KvCacheConfig::auto())
+        }
+    }
+}
+
+/// The per-sequence page tables a backend resolves its KV writes and
+/// gathers through — the read-only half of the manager, borrowed into every
+/// `prefill_into` / `decode_into` call as [`KvStepView::Paged`].
+#[derive(Debug, Clone, Default)]
+pub struct PageTables {
+    /// Token positions per page.
+    page_tokens: usize,
+    /// `tables[slot]` = physical pages backing the slot, in logical order.
+    tables: Vec<Vec<PageId>>,
+    /// Committed token positions per slot (logical sequence length).
+    lens: Vec<usize>,
+    /// Copy-on-write page copies the backend must apply (src → dst, whole
+    /// pages) *before* this step's writes; cleared by the scheduler after
+    /// the backend call ([`KvCacheManager::take_copies`]).
+    copies: Vec<(PageId, PageId)>,
+}
+
+impl PageTables {
+    /// Token positions per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Committed logical length of `slot` (0 for an empty slot).
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens.get(slot).copied().unwrap_or(0)
+    }
+
+    /// True when no slot holds a sequence.
+    pub fn is_empty(&self) -> bool {
+        self.lens.iter().all(|&l| l == 0)
+    }
+
+    /// Pending copy-on-write page copies for this step.
+    pub fn copies(&self) -> &[(PageId, PageId)] {
+        &self.copies
+    }
+
+    /// Resolve logical position `pos` of `slot` to a physical token index
+    /// (`page * page_tokens + offset`). `None` when the position is not
+    /// covered by the slot's table — callers must treat that as "no write"
+    /// (e.g. a PAD lane in a decode batch).
+    pub fn resolve(&self, slot: usize, pos: usize) -> Option<usize> {
+        if pos >= self.len(slot) {
+            return None;
+        }
+        let page = *self.tables.get(slot)?.get(pos / self.page_tokens)?;
+        Some(page * self.page_tokens + pos % self.page_tokens)
+    }
+
+    /// Highest physical page id referenced by any table or pending copy
+    /// (`None` when nothing is mapped) — what a backend sizes its physical
+    /// store against.
+    pub fn max_page(&self) -> Option<PageId> {
+        self.tables
+            .iter()
+            .flatten()
+            .copied()
+            .chain(self.copies.iter().flat_map(|&(s, d)| [s, d]))
+            .max()
+    }
+}
+
+/// Per-call KV view handed to every backend step: either the legacy
+/// contiguous layout or a borrow of the scheduler's page tables.
+#[derive(Debug, Clone, Copy)]
+pub enum KvStepView<'a> {
+    /// Contiguous per-slot slabs — position `p` of slot `b` is the
+    /// backend's own `[b][p]` storage, exactly the pre-paging behaviour.
+    Slab,
+    /// Paged: resolve (slot, pos) through the tables; apply
+    /// [`PageTables::copies`] before writing.
+    Paged(&'a PageTables),
+}
+
+/// What one prompt allocation did (admission-side metric deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PromptAllocStats {
+    /// Full or tail prompt pages served from the prefix cache.
+    pub shared_hits: u64,
+    /// Cached pages evicted to satisfy the allocation.
+    pub evictions: u64,
+    /// Fresh pages allocated (not shared).
+    pub pages_allocated: u64,
+}
+
+/// What one decode-append did (step-side metric deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AppendStats {
+    /// Copy-on-write page copies scheduled for the backend.
+    pub cow_copies: u64,
+    /// Cached pages evicted to satisfy the allocation.
+    pub evictions: u64,
+}
+
+/// A published prefix-cache entry: the page plus the exact content that
+/// hashed to the key (chain verification — a colliding key with different
+/// content is a miss, never a false share).
+#[derive(Debug, Clone)]
+struct CachedPage {
+    page: PageId,
+    parent: u64,
+    tokens: Vec<i32>,
+}
+
+/// The paged-KV cache manager: page pool, per-slot tables, prefix cache,
+/// LRU clock and admission reservations. Owned by the scheduler; backends
+/// only ever see the borrowed [`KvStepView`].
+#[derive(Debug)]
+pub struct KvCacheManager {
+    page_tokens: usize,
+    pool_pages: usize,
+    tables: PageTables,
+    /// Sequence references per page (cache residency is not a reference).
+    ref_count: Vec<u32>,
+    /// Pages that are neither referenced nor cached.
+    free: Vec<PageId>,
+    /// page → prefix-cache key, for published pages.
+    page_key: Vec<Option<u64>>,
+    /// Prefix cache: chained prefix hash → published page.
+    cache: BTreeMap<u64, CachedPage>,
+    /// LRU clock: bumped on publish/last-release/re-share.
+    last_use: Vec<u64>,
+    tick: u64,
+    /// Worst-case page reservation per slot (admission accounting).
+    reserved: Vec<usize>,
+    reserved_total: usize,
+}
+
+/// Seed of the prefix-hash chain (the "parent" of a sequence's first page).
+const PREFIX_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// FNV-1a over the parent key and the page's tokens — the chained
+/// prefix hash. Equal chains ⇒ equal prefixes (verified exactly against
+/// the stored tokens at lookup; the parent link is trusted, as in vLLM).
+fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in parent.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+impl KvCacheManager {
+    /// A manager for `batch` slots over `pool_pages` pages of
+    /// `page_tokens` positions each.
+    pub fn new(page_tokens: usize, pool_pages: usize,
+               batch: usize) -> Result<KvCacheManager> {
+        anyhow::ensure!(page_tokens >= 1, "kv page_tokens must be >= 1");
+        anyhow::ensure!(pool_pages >= 1, "kv pool_pages must be >= 1");
+        Ok(KvCacheManager {
+            page_tokens,
+            pool_pages,
+            tables: PageTables {
+                page_tokens,
+                tables: vec![Vec::new(); batch],
+                lens: vec![0; batch],
+                copies: Vec::new(),
+            },
+            ref_count: vec![0; pool_pages],
+            // Pop from the back: pages hand out in ascending order.
+            free: (0..pool_pages).rev().collect(),
+            page_key: vec![None; pool_pages],
+            cache: BTreeMap::new(),
+            last_use: vec![0; pool_pages],
+            tick: 0,
+            reserved: vec![0; batch],
+            reserved_total: 0,
+        })
+    }
+
+    /// Token positions per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Physical pages in the pool.
+    pub fn pool_pages(&self) -> usize {
+        self.pool_pages
+    }
+
+    /// Pages referenced by at least one live sequence.
+    pub fn pages_in_use(&self) -> usize {
+        self.ref_count.iter().filter(|&&r| r > 0).count()
+    }
+
+    /// Zero-ref pages held in the prefix cache (evictable on demand).
+    pub fn pages_cached(&self) -> usize {
+        self.page_key
+            .iter()
+            .zip(&self.ref_count)
+            .filter(|(k, &r)| k.is_some() && r == 0)
+            .count()
+    }
+
+    /// Pages immediately allocatable: free-list plus evictable cached.
+    pub fn pages_available(&self) -> usize {
+        self.free.len() + self.pages_cached()
+    }
+
+    /// Worst-case page need of a sequence that may commit up to
+    /// `worst_tokens` positions.
+    pub fn pages_for(&self, worst_tokens: usize) -> usize {
+        worst_tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Could a request with this worst case *ever* be admitted (even into
+    /// an idle pool)? False means the pool is simply too small for it.
+    pub fn fits_ever(&self, worst_tokens: usize) -> bool {
+        self.pages_for(worst_tokens) <= self.pool_pages
+    }
+
+    /// Admission gate: reserve `slot`'s worst-case pages if the pool has
+    /// headroom (`Σ reserved + need ≤ pool`), else leave state untouched
+    /// and return false. Reservations — not free counts — are what make
+    /// mid-decode allocation infallible: every live table is bounded by
+    /// its own reservation, so distinct in-use pages never exceed
+    /// `Σ reserved`, and anything else is free or evictable.
+    pub fn try_reserve(&mut self, slot: usize, worst_tokens: usize) -> bool {
+        let need = self.pages_for(worst_tokens);
+        if self.reserved_total + need > self.pool_pages {
+            return false;
+        }
+        debug_assert_eq!(self.reserved[slot], 0, "slot reserved twice");
+        self.reserved[slot] = need;
+        self.reserved_total += need;
+        true
+    }
+
+    /// Total pages currently reserved by admitted sequences.
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved_total
+    }
+
+    /// The per-step view backends resolve through.
+    pub fn view(&self) -> KvStepView<'_> {
+        KvStepView::Paged(&self.tables)
+    }
+
+    /// Direct access to the tables (tests, gathers outside a step).
+    pub fn tables(&self) -> &PageTables {
+        &self.tables
+    }
+
+    /// Clear the pending copy-on-write list — call after the backend has
+    /// applied the copies of a step's view.
+    pub fn take_copies(&mut self) {
+        self.tables.copies.clear();
+    }
+
+    /// Allocate one page: free list first, else evict the LRU zero-ref
+    /// cached page. Errors only when every page is referenced by a live
+    /// sequence — impossible under reservation-gated admission.
+    fn alloc_page(&mut self, evictions: &mut u64) -> Result<PageId> {
+        if let Some(p) = self.free.pop() {
+            return Ok(p);
+        }
+        let victim = (0..self.pool_pages)
+            .filter(|&p| self.ref_count[p] == 0 && self.page_key[p].is_some())
+            .min_by_key(|&p| self.last_use[p])
+            .ok_or_else(|| anyhow::anyhow!(
+                "kv page pool exhausted ({} pages, all referenced) — \
+                 admission reservations should make this unreachable",
+                self.pool_pages))?;
+        let key = self.page_key[victim].take().expect("victim is cached");
+        self.cache.remove(&key);
+        *evictions += 1;
+        Ok(victim)
+    }
+
+    /// Build `slot`'s page table for a committed prompt: full prompt pages
+    /// (and the partial tail, keyed by the whole prompt) are served from
+    /// the prefix cache where the chained hash + exact tokens match, and
+    /// freshly allocated + published otherwise. The slot must be empty
+    /// ([`KvCacheManager::free_slot`] first) and reserved
+    /// ([`KvCacheManager::try_reserve`]).
+    pub fn allocate_prompt(&mut self, slot: usize,
+                           tokens: &[i32]) -> Result<PromptAllocStats> {
+        anyhow::ensure!(self.tables.tables[slot].is_empty()
+                            && self.tables.lens[slot] == 0,
+                        "slot {slot} already holds a sequence");
+        anyhow::ensure!(
+            self.pages_for(tokens.len()) <= self.reserved[slot],
+            "prompt needs {} pages but slot {slot} reserved {}",
+            self.pages_for(tokens.len()), self.reserved[slot]);
+        let mut stats = PromptAllocStats::default();
+        let mut parent = PREFIX_SEED;
+        let mut table: Vec<PageId> = Vec::with_capacity(
+            self.pages_for(tokens.len()));
+        for chunk in tokens.chunks(self.page_tokens) {
+            let key = chain_hash(parent, chunk);
+            let hit = self.cache.get(&key).and_then(|c| {
+                (c.parent == parent && c.tokens == chunk).then_some(c.page)
+            });
+            let page = match hit {
+                Some(page) => {
+                    self.ref_count[page] += 1;
+                    self.tick += 1;
+                    self.last_use[page] = self.tick;
+                    stats.shared_hits += 1;
+                    page
+                }
+                None => {
+                    let page = self.alloc_page(&mut stats.evictions)?;
+                    self.ref_count[page] = 1;
+                    stats.pages_allocated += 1;
+                    // Publish unless the key is (collision-)occupied.
+                    // Caching the partial tail (keyed by the exact full
+                    // prompt) is safe: a second sharer's append copies on
+                    // write, and the sole owner unpublishes before
+                    // extending in place — published bytes never mutate.
+                    if let std::collections::btree_map::Entry::Vacant(e) =
+                        self.cache.entry(key)
+                    {
+                        e.insert(CachedPage {
+                            page,
+                            parent,
+                            tokens: chunk.to_vec(),
+                        });
+                        self.page_key[page] = Some(key);
+                        self.tick += 1;
+                        self.last_use[page] = self.tick;
+                    }
+                    page
+                }
+            };
+            table.push(page);
+            parent = key;
+        }
+        self.tables.tables[slot] = table;
+        self.tables.lens[slot] = tokens.len();
+        Ok(stats)
+    }
+
+    /// Extend `slot` by one decode position (the scheduler calls this
+    /// right before the backend's decode step writes it). Page-boundary
+    /// appends allocate a fresh page; appends into a *shared* tail
+    /// copy-on-write first (the copy lands in [`PageTables::copies`] for
+    /// the backend to apply); a sole owner's published tail is
+    /// unpublished and extended in place.
+    pub fn append_token(&mut self, slot: usize) -> Result<AppendStats> {
+        let mut stats = AppendStats::default();
+        let pos = self.tables.lens[slot];
+        anyhow::ensure!(
+            pos / self.page_tokens < self.reserved[slot],
+            "slot {slot} appending past its reservation ({} pages)",
+            self.reserved[slot]);
+        if pos % self.page_tokens == 0 {
+            let page = self.alloc_page(&mut stats.evictions)?;
+            self.ref_count[page] = 1;
+            self.tables.tables[slot].push(page);
+        } else {
+            let tail = *self.tables.tables[slot].last().expect("tail page");
+            if self.ref_count[tail] > 1 {
+                // Genuinely shared: the writer diverges onto a fresh page.
+                // The source keeps ref >= 1 (so it can never be evicted
+                // before the backend applies the copy) and stays counted
+                // by the remaining sharers' tables.
+                let fresh = self.alloc_page(&mut stats.evictions)?;
+                self.tables.copies.push((tail, fresh));
+                stats.cow_copies += 1;
+                self.ref_count[tail] -= 1;
+                self.ref_count[fresh] = 1;
+                *self.tables.tables[slot].last_mut().unwrap() = fresh;
+            } else if let Some(key) = self.page_key[tail].take() {
+                // Sole owner of a published tail: unpublish and extend in
+                // place. The cache entry must go — the page's bytes are
+                // about to extend past the published prefix — and the
+                // no-allocation path here is what closes the worst-case
+                // accounting: the *last* sharer never needs a page, so a
+                // sequence never owns more distinct pages than its
+                // reservation (docs/KVCACHE.md).
+                self.cache.remove(&key);
+            }
+        }
+        self.tables.lens[slot] = pos + 1;
+        Ok(stats)
+    }
+
+    /// Release `slot`'s sequence: published pages stay in the prefix cache
+    /// (zero-ref, LRU-evictable — this is where "finished-sequence pages"
+    /// become reclaimable), unpublished pages return to the free list, and
+    /// the admission reservation is dropped.
+    pub fn free_slot(&mut self, slot: usize) {
+        let table = std::mem::take(&mut self.tables.tables[slot]);
+        for page in table {
+            self.ref_count[page] -= 1;
+            if self.ref_count[page] == 0 {
+                if self.page_key[page].is_some() {
+                    self.tick += 1;
+                    self.last_use[page] = self.tick;
+                } else {
+                    self.free.push(page);
+                }
+            }
+        }
+        self.tables.lens[slot] = 0;
+        self.reserved_total -= self.reserved[slot];
+        self.reserved[slot] = 0;
+    }
+
+    /// Is this prefix currently resident in the cache? (Test/introspection
+    /// helper: exact-content chained lookup of a whole prompt.)
+    pub fn prefix_cached(&self, tokens: &[i32]) -> bool {
+        let mut parent = PREFIX_SEED;
+        for chunk in tokens.chunks(self.page_tokens) {
+            let key = chain_hash(parent, chunk);
+            match self.cache.get(&key) {
+                Some(c) if c.parent == parent && c.tokens == chunk => {}
+                _ => return false,
+            }
+            parent = key;
+        }
+        !tokens.is_empty()
+    }
+
+    /// Accounting invariant: every page is exactly one of in-use, cached,
+    /// or free. Debug/test helper.
+    pub fn check_invariants(&self) -> Result<()> {
+        let in_use = self.pages_in_use();
+        let cached = self.pages_cached();
+        anyhow::ensure!(
+            in_use + cached + self.free.len() == self.pool_pages,
+            "page accounting broken: {in_use} in use + {cached} cached + \
+             {} free != {} pool", self.free.len(), self.pool_pages);
+        anyhow::ensure!(self.reserved_total <= self.pool_pages,
+                        "over-reserved: {} > {}", self.reserved_total,
+                        self.pool_pages);
+        for (slot, t) in self.tables.tables.iter().enumerate() {
+            anyhow::ensure!(t.len() <= self.reserved[slot],
+                            "slot {slot} table exceeds its reservation");
+            anyhow::ensure!(
+                t.len() == self.tables.lens[slot].div_ceil(self.page_tokens),
+                "slot {slot} table/len mismatch");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(pt: usize, pool: usize, batch: usize) -> KvCacheManager {
+        KvCacheManager::new(pt, pool, batch).unwrap()
+    }
+
+    #[test]
+    fn config_resolution() {
+        // auto: slab-equivalent capacity at the default page size
+        let (pt, pool) = KvCacheConfig::auto().resolved(4, 64);
+        assert_eq!(pt, KV_PAGE_TOKENS_DEFAULT);
+        assert_eq!(pool, 4 * 64usize.div_ceil(KV_PAGE_TOKENS_DEFAULT));
+        // explicit values pass through
+        let cfg = KvCacheConfig { page_tokens: 4, pool_pages: 7 };
+        assert_eq!(cfg.resolved(4, 64), (4, 7));
+        // degenerate sizes rejected at construction
+        assert!(KvCacheManager::new(0, 8, 1).is_err());
+        assert!(KvCacheManager::new(8, 0, 1).is_err());
+    }
+
+    #[test]
+    fn resolve_walks_the_page_table() {
+        let mut m = mgr(4, 8, 2);
+        assert!(m.try_reserve(0, 10));
+        m.allocate_prompt(0, &[1, 2, 3, 4, 5, 6]).unwrap();
+        let t = m.tables();
+        assert_eq!(t.len(0), 6);
+        // positions 0..4 in page 0, 4..6 in page 1 (ascending hand-out)
+        assert_eq!(t.resolve(0, 0), Some(0));
+        assert_eq!(t.resolve(0, 3), Some(3));
+        assert_eq!(t.resolve(0, 4), Some(4));
+        assert_eq!(t.resolve(0, 5), Some(5));
+        // uncovered positions and empty slots resolve to None
+        assert_eq!(t.resolve(0, 6), None);
+        assert_eq!(t.resolve(1, 0), None);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn identical_prompts_share_pages() {
+        let mut m = mgr(4, 8, 2);
+        let prompt = [7i32, 8, 9, 10, 11, 12];
+        assert!(m.try_reserve(0, 8));
+        let a = m.allocate_prompt(0, &prompt).unwrap();
+        assert_eq!(a.shared_hits, 0);
+        assert_eq!(a.pages_allocated, 2);
+        assert!(m.try_reserve(1, 8));
+        let b = m.allocate_prompt(1, &prompt).unwrap();
+        // full first page AND the published partial tail both hit
+        assert_eq!(b.shared_hits, 2);
+        assert_eq!(b.pages_allocated, 0);
+        assert_eq!(m.pages_in_use(), 2, "one physical copy serves both");
+        assert_eq!(m.tables().tables[0], m.tables().tables[1]);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn diverging_prompts_share_only_the_common_prefix() {
+        let mut m = mgr(2, 8, 2);
+        assert!(m.try_reserve(0, 4));
+        m.allocate_prompt(0, &[1, 2, 3, 4]).unwrap();
+        assert!(m.try_reserve(1, 4));
+        let b = m.allocate_prompt(1, &[1, 2, 9, 9]).unwrap();
+        assert_eq!(b.shared_hits, 1, "only the [1,2] page is common");
+        assert_eq!(m.tables().tables[0][0], m.tables().tables[1][0]);
+        assert_ne!(m.tables().tables[0][1], m.tables().tables[1][1]);
+    }
+
+    #[test]
+    fn append_into_shared_tail_copies_on_write() {
+        let mut m = mgr(4, 8, 2);
+        let prompt = [5i32, 6, 7, 8, 9, 10]; // partial tail (2 of 4)
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &prompt).unwrap();
+        assert!(m.try_reserve(1, 8));
+        m.allocate_prompt(1, &prompt).unwrap();
+        let shared_tail = *m.tables().tables[0].last().unwrap();
+        // slot 0 appends position 6 (offset 2 in the shared tail) → COW
+        let st = m.append_token(0).unwrap();
+        assert_eq!(st.cow_copies, 1);
+        let copies = m.tables().copies().to_vec();
+        assert_eq!(copies.len(), 1);
+        assert_eq!(copies[0].0, shared_tail);
+        let new_tail = *m.tables().tables[0].last().unwrap();
+        assert_ne!(new_tail, shared_tail, "writer diverged");
+        assert_eq!(*m.tables().tables[1].last().unwrap(), shared_tail,
+                   "sharer keeps its page");
+        m.take_copies();
+        // slot 1 is now the tail's sole owner: its append unpublishes the
+        // page and extends it in place — no copy, no allocation (the
+        // accounting-closing path: the last sharer never needs a page).
+        let st = m.append_token(1).unwrap();
+        assert_eq!(st.cow_copies, 0);
+        assert!(m.tables().copies().is_empty());
+        assert_eq!(*m.tables().tables[1].last().unwrap(), shared_tail);
+        assert!(!m.prefix_cached(&prompt),
+                "an extended tail must leave the prefix cache");
+        // exclusive unpublished tails keep appending in place
+        m.append_token(0).unwrap(); // pos 7, offset 3 of slot 0's COW page
+        assert!(m.tables().copies().is_empty());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn finished_pages_cache_then_evict_lru() {
+        let mut m = mgr(2, 3, 1);
+        // A: one full published page + one appended page
+        assert!(m.try_reserve(0, 4));
+        m.allocate_prompt(0, &[1, 2]).unwrap();
+        m.append_token(0).unwrap();
+        m.free_slot(0);
+        assert!(m.prefix_cached(&[1, 2]));
+        assert_eq!(m.pages_cached(), 1);
+        // B: different prompt, published later than A
+        assert!(m.try_reserve(0, 4));
+        m.allocate_prompt(0, &[3, 4]).unwrap();
+        m.free_slot(0);
+        assert_eq!(m.pages_cached(), 2);
+        // C needs 2 pages; 1 free + evict the LRU cached page — A's
+        assert!(m.try_reserve(0, 4));
+        let st = m.allocate_prompt(0, &[5, 6, 7]).unwrap();
+        assert_eq!(st.evictions, 1);
+        assert!(!m.prefix_cached(&[1, 2]), "A was least recently used");
+        assert!(m.prefix_cached(&[3, 4]), "B survived");
+        m.free_slot(0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn recent_share_refreshes_lru_rank() {
+        let mut m = mgr(2, 3, 1);
+        for p in [[1i32, 2], [3, 4]] {
+            assert!(m.try_reserve(0, 2));
+            m.allocate_prompt(0, &p).unwrap();
+            m.free_slot(0);
+        }
+        // Re-touch A: it becomes the most recently used cached page.
+        assert!(m.try_reserve(0, 2));
+        assert_eq!(m.allocate_prompt(0, &[1, 2]).unwrap().shared_hits, 1);
+        m.free_slot(0);
+        // Pressure evicts B now, not A.
+        assert!(m.try_reserve(0, 4));
+        m.allocate_prompt(0, &[5, 6, 7]).unwrap();
+        assert!(m.prefix_cached(&[1, 2]));
+        assert!(!m.prefix_cached(&[3, 4]));
+    }
+
+    #[test]
+    fn reservations_gate_admission_and_release() {
+        let mut m = mgr(4, 4, 3);
+        assert!(m.fits_ever(16));
+        assert!(!m.fits_ever(17));
+        assert!(m.try_reserve(0, 8)); // 2 pages
+        assert!(m.try_reserve(1, 8)); // 2 pages → pool full
+        assert!(!m.try_reserve(2, 1), "no headroom left");
+        assert_eq!(m.reserved_pages(), 4);
+        m.allocate_prompt(0, &[1, 2, 3]).unwrap();
+        m.free_slot(0);
+        assert_eq!(m.reserved_pages(), 2);
+        assert!(m.try_reserve(2, 8), "freed reservation re-admits");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn appends_never_fail_under_reservation_gated_load() {
+        // Fill the pool with cached prefixes, then run a reserved sequence
+        // to its worst case: every allocation must succeed by evicting.
+        let mut m = mgr(2, 4, 2);
+        for p in [[1i32, 2], [3, 4], [5, 6]] {
+            assert!(m.try_reserve(0, 2));
+            m.allocate_prompt(0, &p).unwrap();
+            m.free_slot(0);
+        }
+        assert_eq!(m.pages_available(), 4);
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &[9, 9]).unwrap();
+        for _ in 0..6 {
+            m.append_token(0).unwrap();
+            m.take_copies();
+        }
+        assert_eq!(m.tables().len(0), 8);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hash_collision_degrades_to_miss() {
+        // Force a fake collision by inserting a cache entry under the key
+        // another prompt would compute, with different content: lookup
+        // must reject it (exact-content verification).
+        let mut m = mgr(4, 8, 2);
+        let key = chain_hash(PREFIX_SEED, &[1, 2, 3, 4]);
+        m.cache.insert(key, CachedPage { page: 7, parent: 123,
+                                         tokens: vec![9, 9, 9, 9] });
+        m.page_key[7] = Some(key);
+        m.free.retain(|&p| p != 7);
+        assert!(m.try_reserve(0, 4));
+        let st = m.allocate_prompt(0, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(st.shared_hits, 0, "colliding entry must not be shared");
+        assert_eq!(st.pages_allocated, 1);
+    }
+}

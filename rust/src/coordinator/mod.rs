@@ -1,15 +1,19 @@
 //! The serving coordinator (Layer 3): request types, the model-backend
-//! abstraction (PJRT engine, native-ukernel, or mock), the
-//! continuous-batching scheduler and the threaded server front-end.
+//! abstraction (PJRT engine, native-ukernel, or mock), the paged KV-cache
+//! manager, the continuous-batching scheduler and the threaded server
+//! front-end.
 
 pub mod backend;
+pub mod kvcache;
 pub mod native;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use backend::{BackendDims, EngineBackend, MockBackend, ModelBackend};
+pub use kvcache::{KvCacheConfig, KvCacheManager, KvChoice, KvStepView,
+                  PageTables, KV_PAGE_TOKENS_DEFAULT};
 pub use native::{NativeBackend, Precision};
 pub use request::{FinishReason, Request, RequestId, RequestOutput};
 pub use scheduler::Scheduler;
-pub use server::{start, start_with, ServerHandle};
+pub use server::{start, start_kv, start_with, start_with_kv, ServerHandle};

@@ -21,12 +21,20 @@
 //! therefore performs **zero RHS packs and zero heap allocations**, which
 //! the scratch counters assert in tests, `scripts/ci.sh` and
 //! `benches/decode_steady_state.rs`.
+//!
+//! **Paged KV.** The committed-token state honours the scheduler's
+//! [`KvStepView`]: under the default paged layout every KV write and
+//! gather resolves through per-sequence page tables into one physical
+//! `store` (with copy-on-write page copies applied before each step), and
+//! under [`KvStepView::Slab`] the pre-paging per-slot `live` rows are used
+//! bit-identically. See `coordinator::kvcache` and `docs/KVCACHE.md`.
 
 #![deny(missing_docs)]
 
 use anyhow::Result;
 
 use super::backend::{BackendDims, ModelBackend};
+use super::kvcache::KvStepView;
 use crate::autotune::TileRegistry;
 use crate::config::manifest::Tile;
 use crate::ir::ElemType;
@@ -102,7 +110,15 @@ pub struct NativeBackend {
     scratch: Scratch,
     /// live[slot] = tokens whose state is committed, by position (the same
     /// KV-slot bookkeeping contract the scheduler tests drive on the mock).
+    /// This is the **slab** layout's storage; under a paged
+    /// [`KvStepView`] the committed state lives in `store` instead.
     pub live: Vec<Vec<i32>>,
+    /// Physical paged KV store: token index `page * page_tokens + offset`,
+    /// written through the page tables of the step's [`KvStepView::Paged`]
+    /// view and read back by [`NativeBackend::gather_history`] (the
+    /// attention gather's indirection). Grown on demand to the highest
+    /// referenced page; unused in slab mode.
+    store: Vec<i32>,
     staged: Option<Vec<Vec<i32>>>,
 }
 
@@ -221,8 +237,52 @@ impl NativeBackend {
             scratch: Scratch::new(),
             // Pre-sized KV bookkeeping: decode appends must not reallocate.
             live: (0..batch).map(|_| Vec::with_capacity(max_seq)).collect(),
+            store: Vec::new(),
             staged: None,
         })
+    }
+
+    /// Grow the paged store to cover every page the view references (a
+    /// one-time cost per pool high-water mark; page recycling keeps the
+    /// steady state growth-free).
+    fn ensure_store(&mut self, kv: &KvStepView<'_>) {
+        if let KvStepView::Paged(pt) = kv {
+            if let Some(max_page) = pt.max_page() {
+                let need = (max_page + 1) * pt.page_tokens();
+                if self.store.len() < need {
+                    self.store.resize(need, 0);
+                }
+            }
+        }
+    }
+
+    /// Apply the view's pending copy-on-write page copies (src → dst,
+    /// whole pages) — must run before this step's KV writes so a diverging
+    /// writer starts from the shared page's bytes.
+    fn apply_kv_copies(&mut self, kv: &KvStepView<'_>) {
+        if let KvStepView::Paged(pt) = kv {
+            let p = pt.page_tokens();
+            for &(src, dst) in pt.copies() {
+                self.store.copy_within(src * p..(src + 1) * p, dst * p);
+            }
+        }
+    }
+
+    /// The attention gather: the committed token history of `slot`,
+    /// resolved position-by-position through the KV view — per-slot slab
+    /// reads in slab mode, page-table indirection into the physical store
+    /// in paged mode. The paged-vs-slab tests pin these bit-equal.
+    pub fn gather_history(&self, slot: usize, kv: KvStepView<'_>) -> Vec<i32> {
+        match kv {
+            KvStepView::Slab => self.live[slot].clone(),
+            KvStepView::Paged(pt) => (0..pt.len(slot))
+                .map(|pos| {
+                    let phys = pt.resolve(slot, pos)
+                        .expect("position below len always resolves");
+                    self.store[phys]
+                })
+                .collect(),
+        }
     }
 
     /// The (prefill, decode) tiles this backend's matmuls run on.
@@ -320,11 +380,14 @@ impl ModelBackend for NativeBackend {
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         let mut out = Vec::new();
-        self.prefill_into(tokens, &mut out)?;
+        self.prefill_into(tokens, KvStepView::Slab, &mut out)?;
         Ok(out)
     }
 
-    fn prefill_into(&mut self, tokens: &[i32], out: &mut Vec<f32>) -> Result<()> {
+    fn prefill_into(&mut self, tokens: &[i32], kv: KvStepView<'_>,
+                    out: &mut Vec<f32>) -> Result<()> {
+        // Prefill only stages: the KV view matters at commit/decode time.
+        let _ = kv;
         let BackendDims { batch, prefill_seq, .. } = self.dims;
         anyhow::ensure!(tokens.len() == batch * prefill_seq,
                         "prefill takes B*S tokens");
@@ -338,37 +401,84 @@ impl ModelBackend for NativeBackend {
     }
 
     fn commit_slots(&mut self, slots: &[usize]) -> Result<()> {
+        self.commit_slots_kv(slots, KvStepView::Slab)
+    }
+
+    fn commit_slots_kv(&mut self, slots: &[usize],
+                       kv: KvStepView<'_>) -> Result<()> {
+        self.ensure_store(&kv);
         let staged = self
             .staged
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("no staged prefill"))?;
-        for &s in slots {
-            anyhow::ensure!(s < self.live.len(), "slot {s} out of range");
-            // Copy in place: the live row keeps its max_seq capacity, so
-            // subsequent decode appends stay allocation-free.
-            self.live[s].clear();
-            self.live[s].extend_from_slice(&staged[s]);
+        match kv {
+            KvStepView::Slab => {
+                for &s in slots {
+                    anyhow::ensure!(s < self.live.len(),
+                                    "slot {s} out of range");
+                    // Copy in place: the live row keeps its max_seq
+                    // capacity, so subsequent decode appends stay
+                    // allocation-free.
+                    self.live[s].clear();
+                    self.live[s].extend_from_slice(&staged[s]);
+                }
+            }
+            KvStepView::Paged(pt) => {
+                for &s in slots {
+                    anyhow::ensure!(s < self.live.len(),
+                                    "slot {s} out of range");
+                    // The table covers exactly the committed prompt length
+                    // (which the scheduler truncated to prefill_seq).
+                    // Writing a shared prefix page re-stores the same
+                    // bytes its other references already see — idempotent
+                    // by the prefix-hash exact-match guarantee.
+                    let plen = pt.len(s);
+                    anyhow::ensure!(plen <= staged[s].len(),
+                                    "slot {s}: page table longer than the \
+                                     staged prompt");
+                    for (j, &t) in staged[s][..plen].iter().enumerate() {
+                        let phys = pt.resolve(s, j).ok_or_else(|| {
+                            anyhow::anyhow!("slot {s} pos {j} not mapped")
+                        })?;
+                        self.store[phys] = t;
+                    }
+                }
+            }
         }
         Ok(())
     }
 
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
         let mut out = Vec::new();
-        self.decode_into(tokens, pos, &mut out)?;
+        self.decode_into(tokens, pos, KvStepView::Slab, &mut out)?;
         Ok(out)
     }
 
     fn decode_into(&mut self, tokens: &[i32], pos: &[i32],
-                   out: &mut Vec<f32>) -> Result<()> {
+                   kv: KvStepView<'_>, out: &mut Vec<f32>) -> Result<()> {
         let BackendDims { batch, max_seq, .. } = self.dims;
         anyhow::ensure!(tokens.len() == batch && pos.len() == batch);
+        self.ensure_store(&kv);
+        self.apply_kv_copies(&kv);
         for b in 0..batch {
             let p = pos[b] as usize;
             anyhow::ensure!(p < max_seq, "pos out of cache");
-            if self.live[b].len() <= p {
-                self.live[b].resize(p + 1, 0);
+            match kv {
+                KvStepView::Slab => {
+                    if self.live[b].len() <= p {
+                        self.live[b].resize(p + 1, 0);
+                    }
+                    self.live[b][p] = tokens[b];
+                }
+                KvStepView::Paged(pt) => {
+                    // PAD lanes (no sequence in the slot) have no table
+                    // entry for p and are skipped; active lanes write the
+                    // position the scheduler just appended.
+                    if let Some(phys) = pt.resolve(b, p) {
+                        self.store[phys] = tokens[b];
+                    }
+                }
             }
-            self.live[b][p] = tokens[b];
         }
         self.logits_into(tokens, Phase::Decode, out);
         Ok(())
@@ -518,15 +628,18 @@ mod tests {
         for p in [Precision::F16, Precision::Int8] {
             let mut b = backend(p);
             let mut out = Vec::new();
-            b.prefill_into(&vec![3i32; 4 * 8], &mut out).unwrap();
+            b.prefill_into(&vec![3i32; 4 * 8], KvStepView::Slab, &mut out)
+                .unwrap();
             b.commit_slots(&[0, 1, 2, 3]).unwrap();
             // warmup: grow the decode-shaped buffers once
-            b.decode_into(&[1, 2, 3, 4], &[8; 4], &mut out).unwrap();
-            b.decode_into(&[5, 6, 7, 8], &[9; 4], &mut out).unwrap();
+            b.decode_into(&[1, 2, 3, 4], &[8; 4], KvStepView::Slab, &mut out)
+                .unwrap();
+            b.decode_into(&[5, 6, 7, 8], &[9; 4], KvStepView::Slab, &mut out)
+                .unwrap();
             let base = scratch::stats();
             for step in 0..12 {
                 b.decode_into(&[9, 8, 7, step], &[(10 + step) as i32; 4],
-                              &mut out)
+                              KvStepView::Slab, &mut out)
                     .unwrap();
             }
             let d = scratch::stats().delta_since(base);
@@ -536,7 +649,8 @@ mod tests {
                        "{p:?}: steady-state decode allocated scratch");
             // Interleaving a prefill back in stays pack-free too (weights
             // were packed at construction, for both phases).
-            b.prefill_into(&vec![5i32; 4 * 8], &mut out).unwrap();
+            b.prefill_into(&vec![5i32; 4 * 8], KvStepView::Slab, &mut out)
+                .unwrap();
             assert_eq!(scratch::stats().delta_since(base).rhs_packs, 0,
                        "{p:?}: prefill re-packed weights");
         }
@@ -588,6 +702,66 @@ mod tests {
                 4, 8, 32, 128, 64, p, 42, &reg, 1).unwrap();
             assert_eq!(a.decode(&[1, 2, 3, 4], &[1; 4]).unwrap(),
                        bb.decode(&[1, 2, 3, 4], &[1; 4]).unwrap());
+        }
+    }
+
+    #[test]
+    fn paged_kv_writes_resolve_through_the_page_tables() {
+        // The paged store driven exactly the way the scheduler drives it
+        // (reserve → allocate_prompt → commit through the view → append +
+        // COW per decode step): logits are KV-layout independent and the
+        // attention gather reads back bit-identical histories — including
+        // across a shared prefix whose tail both sequences diverge from.
+        use crate::coordinator::kvcache::KvCacheManager;
+        use crate::llm::PAD;
+        for p in [Precision::F16, Precision::Int8] {
+            let mut slab = backend(p);
+            let mut paged = backend(p);
+            let mut kv = KvCacheManager::new(4, 16, 4).unwrap();
+            let prompt = [3i32, 5, 7, 9, 11, 13]; // 6 tokens: full page + tail
+            let mut toks = vec![PAD as i32; 4 * 8];
+            for slot in [0usize, 1] {
+                for (j, &t) in prompt.iter().enumerate() {
+                    toks[slot * 8 + j] = t;
+                }
+                assert!(kv.try_reserve(slot, 10));
+            }
+            let st0 = kv.allocate_prompt(0, &prompt).unwrap();
+            let st1 = kv.allocate_prompt(1, &prompt).unwrap();
+            assert_eq!(st0.shared_hits, 0, "{p:?}");
+            assert_eq!(st1.shared_hits, 2,
+                       "{p:?}: full page + published tail shared");
+            let (mut la, mut lb) = (Vec::new(), Vec::new());
+            slab.prefill_into(&toks, KvStepView::Slab, &mut la).unwrap();
+            paged.prefill_into(&toks, kv.view(), &mut lb).unwrap();
+            assert_eq!(la, lb, "{p:?}: prefill logits KV-layout independent");
+            slab.commit_slots_kv(&[0, 1], KvStepView::Slab).unwrap();
+            paged.commit_slots_kv(&[0, 1], kv.view()).unwrap();
+            for step in 0..3i32 {
+                // scheduler order: append (may COW the shared tail), then
+                // the backend applies copies and writes through the table
+                for slot in [0, 1] {
+                    kv.append_token(slot).unwrap();
+                }
+                let tokens = [40 + step, 50 + step, 0, 0];
+                let pos = [6 + step, 6 + step, 0, 0];
+                slab.decode_into(&tokens, &pos, KvStepView::Slab, &mut la)
+                    .unwrap();
+                paged.decode_into(&tokens, &pos, kv.view(), &mut lb).unwrap();
+                kv.take_copies();
+                assert_eq!(la, lb, "{p:?} step {step}");
+            }
+            for slot in [0, 1] {
+                assert_eq!(slab.gather_history(slot, KvStepView::Slab),
+                           paged.gather_history(slot, kv.view()),
+                           "{p:?}: slot {slot} gathered history diverged");
+            }
+            // the two sequences really did diverge off the shared prefix
+            let h0 = paged.gather_history(0, kv.view());
+            let h1 = paged.gather_history(1, kv.view());
+            assert_eq!(h0[..6], h1[..6]);
+            assert_ne!(h0[6..], h1[6..]);
+            kv.check_invariants().unwrap();
         }
     }
 

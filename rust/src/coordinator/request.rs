@@ -23,8 +23,14 @@ pub enum FinishReason {
     Length,
     /// Produced the EOS token.
     Eos,
-    /// KV cache exhausted (prompt + generation reached max_seq).
+    /// KV cache exhausted: the sequence reached max_seq, or (paged layout)
+    /// the request's worst case exceeds the whole page pool.
     CacheFull,
+    /// Client disconnected or explicitly cancelled (`Scheduler::cancel` /
+    /// `ServerHandle::cancel`): the batch slot and KV pages were released
+    /// immediately; `tokens` holds whatever was generated before the
+    /// cancel landed.
+    Cancelled,
 }
 
 #[derive(Debug, Clone)]
@@ -70,6 +76,16 @@ pub struct RequestOutput {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cancelled_is_a_distinct_terminal_state() {
+        // Exhaustiveness guard: anything folding over FinishReason must
+        // treat a cancel as terminal but unlike a natural finish.
+        for r in [FinishReason::Length, FinishReason::Eos,
+                  FinishReason::CacheFull] {
+            assert_ne!(r, FinishReason::Cancelled);
+        }
+    }
 
     #[test]
     fn timing_monotonic() {

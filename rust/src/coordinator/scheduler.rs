@@ -3,15 +3,26 @@
 //! per decode step — the serving driver for the workload Table 2 measures
 //! (iteration-level batching in the Orca/vLLM style, over whole-batch
 //! compiled artifacts).
+//!
+//! **Admission is priced in KV pages, not batch slots.** Under the default
+//! paged layout (`coordinator::kvcache`, `docs/KVCACHE.md`) an admitted
+//! sequence reserves its worst-case page count; the queue head waits when
+//! the pool has no reservation headroom even if slots sit free, and a
+//! finished or cancelled sequence releases its pages (and reservation)
+//! immediately. The slab layout (`KvChoice::Slab`, compile-time electable
+//! via the `kv-slab` feature) keeps the historical slots-only admission
+//! bit-for-bit.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::backend::ModelBackend;
-use super::request::{FinishReason, Request, RequestOutput, RequestTiming};
+use super::kvcache::{KvCacheManager, KvChoice, KvStepView};
+use super::request::{FinishReason, Request, RequestId, RequestOutput,
+                     RequestTiming};
 use crate::llm::{sample, PAD};
 use crate::metrics::ServingMetrics;
 use crate::util::prng::Rng;
@@ -37,6 +48,9 @@ pub struct Scheduler<B: ModelBackend> {
     pub metrics: Arc<ServingMetrics>,
     rng: Rng,
     pub queue_capacity: usize,
+    /// Paged KV-cache manager (`None` = slab layout): page pool, tables,
+    /// prefix cache and admission reservations.
+    kv: Option<KvCacheManager>,
     // Reusable step buffers (`*_into` backend calls): the serve loop's own
     // contribution to the zero-allocation steady state — token/pos staging
     // and the logits buffer are built once and recycled every step.
@@ -48,24 +62,60 @@ pub struct Scheduler<B: ModelBackend> {
 impl<B: ModelBackend> Scheduler<B> {
     pub fn new(backend: B, queue_capacity: usize,
                metrics: Arc<ServingMetrics>, seed: u64) -> Scheduler<B> {
-        let b = backend.dims().batch;
+        Self::with_kv(backend, queue_capacity, metrics, seed,
+                      KvChoice::compile_default())
+    }
+
+    /// [`Scheduler::new`] with an explicit KV layout. [`Scheduler::new`]
+    /// itself uses the compile-time election (paged with auto sizing, or
+    /// slab when the crate is built with the `kv-slab` feature).
+    pub fn with_kv(backend: B, queue_capacity: usize,
+                   metrics: Arc<ServingMetrics>, seed: u64,
+                   kv: KvChoice) -> Scheduler<B> {
+        let dims = backend.dims();
+        let kv = match kv {
+            KvChoice::Slab => None,
+            KvChoice::Paged(cfg) => {
+                let (pt, pool) = cfg.resolved(dims.batch, dims.max_seq);
+                let m = KvCacheManager::new(pt, pool, dims.batch)
+                    .expect("resolved kv config is never degenerate");
+                metrics.kv_page_tokens.set(pt as u64);
+                metrics.kv_pages_total.set(pool as u64);
+                Some(m)
+            }
+        };
         Scheduler {
             backend,
             pending: VecDeque::new(),
-            slots: (0..b).map(|_| None).collect(),
+            slots: (0..dims.batch).map(|_| None).collect(),
             finished: Vec::new(),
             metrics,
             rng: Rng::new(seed),
             queue_capacity,
+            kv,
             logits: Vec::new(),
             step_tokens: Vec::new(),
             step_pos: Vec::new(),
         }
     }
 
-    /// Enqueue a request; returns false (rejected) when the queue is full.
+    /// The backend being served (introspection for tests and benches).
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// The KV view the next backend call would receive (slab when paged
+    /// mode is off) — what tests resolve gathers through.
+    pub fn kv_view(&self) -> KvStepView<'_> {
+        kv_step_view(&self.kv)
+    }
+
+    /// Enqueue a request; returns false (rejected) when the queue is full
+    /// or the prompt is empty (there is no last prompt position to sample
+    /// a first token from — admitting one would panic the serve loop).
     pub fn submit(&mut self, req: Request) -> bool {
-        if self.pending.len() >= self.queue_capacity {
+        if req.prompt.is_empty() || self.pending.len() >= self.queue_capacity
+        {
             self.metrics.queue_rejections.inc();
             return false;
         }
@@ -110,20 +160,75 @@ impl<B: ModelBackend> Scheduler<B> {
         if free.is_empty() {
             return Ok(());
         }
-        let n = free.len().min(self.pending.len());
+        let s = dims.prefill_seq;
         let admit_t = Instant::now();
-        let admitted: Vec<(usize, Request, RequestTiming)> = (0..n)
-            .map(|i| {
-                let (req, t) = self.pending.pop_front().unwrap();
-                self.metrics.queue_wait.observe(admit_t - t.submitted);
-                (free[i], req, t)
-            })
-            .collect();
+        // FIFO admission from the queue head into free slots, gated on KV
+        // pages when paged: a request enters the batch only if its
+        // worst-case page count still fits the pool's reservation
+        // headroom. Head-of-line blocking keeps submission order.
+        enum Gate {
+            Admit,
+            Blocked,
+            NeverFits,
+        }
+        let mut admitted: Vec<(usize, Request, RequestTiming)> = Vec::new();
+        let mut next_free = 0;
+        while next_free < free.len() && !self.pending.is_empty() {
+            let slot = free[next_free];
+            let gate = match &mut self.kv {
+                None => Gate::Admit,
+                Some(kv) => {
+                    let req = &self.pending.front().unwrap().0;
+                    let plen = req.prompt.len().min(s);
+                    // saturating: max_new_tokens = usize::MAX is the
+                    // natural "decode until EOS/CacheFull" sentinel.
+                    let worst = plen
+                        .saturating_add(req.max_new_tokens)
+                        .min(dims.max_seq);
+                    if !kv.fits_ever(worst) {
+                        Gate::NeverFits
+                    } else if kv.try_reserve(slot, worst) {
+                        Gate::Admit
+                    } else {
+                        Gate::Blocked
+                    }
+                }
+            };
+            match gate {
+                Gate::NeverFits => {
+                    // The pool is too small for this request even when
+                    // idle: fail it now instead of wedging the queue.
+                    // Deliberately routed through `finish` (counted in
+                    // requests_completed): it is a terminal verdict on an
+                    // *accepted* request, so `submitted = completed +
+                    // cancelled + in-flight` stays balanced.
+                    let (req, timing) = self.pending.pop_front().unwrap();
+                    self.finish(drained_output(req.id,
+                                               FinishReason::CacheFull,
+                                               timing));
+                }
+                Gate::Blocked => {
+                    // Pages, not slots, are the scarce resource here: the
+                    // head waits for finished sequences to release their
+                    // reservations.
+                    self.metrics.kv_admission_blocked.inc();
+                    break;
+                }
+                Gate::Admit => {
+                    let (req, t) = self.pending.pop_front().unwrap();
+                    self.metrics.queue_wait.observe(admit_t - t.submitted);
+                    admitted.push((slot, req, t));
+                    next_free += 1;
+                }
+            }
+        }
+        if admitted.is_empty() {
+            return Ok(());
+        }
 
         // Build the prefill batch into the reusable staging buffer:
         // admitted rows get their (truncated) prompt padded to S; unused
         // rows are PAD.
-        let s = dims.prefill_seq;
         self.step_tokens.clear();
         self.step_tokens.resize(dims.batch * s, PAD as i32);
         for (slot, req, _) in &admitted {
@@ -132,10 +237,24 @@ impl<B: ModelBackend> Scheduler<B> {
                 self.step_tokens[slot * s + j] = t as i32;
             }
         }
+        // Paged: build each admitted sequence's page table before the
+        // backend call — prefix-cache hits map shared prompt pages to the
+        // same physical pages, and allocation may evict LRU
+        // finished-sequence pages.
+        if let Some(kv) = &mut self.kv {
+            for (slot, req, _) in &admitted {
+                let plen = req.prompt.len().min(s);
+                let st = kv.allocate_prompt(
+                    *slot, &self.step_tokens[slot * s..][..plen])?;
+                self.metrics.kv_shared_prefix_hits.add(st.shared_hits);
+                self.metrics.kv_evictions.add(st.evictions);
+            }
+        }
         let t0 = Instant::now();
-        self.backend.prefill_into(&self.step_tokens, &mut self.logits)?;
+        self.backend.prefill_into(&self.step_tokens, kv_step_view(&self.kv),
+                                  &mut self.logits)?;
         let slots: Vec<usize> = admitted.iter().map(|(s, _, _)| *s).collect();
-        self.backend.commit_slots(&slots)?;
+        self.backend.commit_slots_kv(&slots, kv_step_view(&self.kv))?;
         self.metrics.prefill_latency.observe(t0.elapsed());
         self.metrics.prefill_batches.inc();
 
@@ -157,13 +276,16 @@ impl<B: ModelBackend> Scheduler<B> {
                 timing,
                 req,
             };
-            // A request can finish on its very first token.
+            // A request can finish on its very first token — its pages
+            // release immediately (published prompt pages stay cached).
             if let Some(reason) = finish_reason(&seq, dims.max_seq) {
+                self.release_kv(slot);
                 self.finish(slot_output(&mut seq, reason));
             } else {
                 self.slots[slot] = Some(seq);
             }
         }
+        self.sync_kv_gauges();
         Ok(())
     }
 
@@ -184,6 +306,19 @@ impl<B: ModelBackend> Scheduler<B> {
                 self.metrics.idle_slot_steps.inc();
             }
         }
+        // Paged: extend every active sequence's page table by the position
+        // this step writes. Appends may copy-on-write a shared tail (the
+        // copy rides in the view for the backend to apply) and may evict
+        // LRU cached pages — infallible under reservation-gated admission.
+        if let Some(kv) = &mut self.kv {
+            for (i, slot) in self.slots.iter().enumerate() {
+                if slot.is_some() {
+                    let st = kv.append_token(i)?;
+                    self.metrics.kv_cow_copies.add(st.cow_copies);
+                    self.metrics.kv_evictions.add(st.evictions);
+                }
+            }
+        }
         let t0 = Instant::now();
         // The zero-repack invariant, measured where it matters: the scratch
         // counters are thread-local and the backend call runs right here,
@@ -192,7 +327,11 @@ impl<B: ModelBackend> Scheduler<B> {
         // shards over workers).
         let scratch_base = crate::ukernel::scratch::stats();
         self.backend
-            .decode_into(&self.step_tokens, &self.step_pos, &mut self.logits)?;
+            .decode_into(&self.step_tokens, &self.step_pos,
+                         kv_step_view(&self.kv), &mut self.logits)?;
+        if let Some(kv) = &mut self.kv {
+            kv.take_copies();
+        }
         let sd = crate::ukernel::scratch::stats().delta_since(scratch_base);
         self.metrics.decode_rhs_packs.add(sd.rhs_packs);
         self.metrics.decode_scratch_allocs.add(sd.allocs);
@@ -209,16 +348,88 @@ impl<B: ModelBackend> Scheduler<B> {
             self.metrics.tokens_decoded.inc();
             if let Some(reason) = finish_reason(seq, dims.max_seq) {
                 let mut seq = self.slots[i].take().unwrap();
+                self.release_kv(i);
                 self.finish(slot_output(&mut seq, reason));
             }
         }
+        self.sync_kv_gauges();
         Ok(())
+    }
+
+    /// Cancel a request — the client-disconnect path. A pending request
+    /// leaves the queue with no tokens; an active one releases its batch
+    /// slot **and its KV pages immediately** (published prompt pages stay
+    /// in the prefix cache) and reports the tokens generated so far.
+    /// Returns false when the id is unknown — already finished, its output
+    /// delivered (or about to be) through the normal path.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(i) = self.pending.iter().position(|(r, _)| r.id == id) {
+            let (_req, timing) = self.pending.remove(i).unwrap();
+            self.metrics.requests_cancelled.inc();
+            self.finished
+                .push(drained_output(id, FinishReason::Cancelled, timing));
+            return true;
+        }
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].as_ref().is_some_and(|s| s.req.id == id) {
+                let mut seq = self.slots[slot].take().unwrap();
+                self.release_kv(slot);
+                self.metrics.requests_cancelled.inc();
+                self.finished
+                    .push(slot_output(&mut seq, FinishReason::Cancelled));
+                self.sync_kv_gauges();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Release a finished/cancelled sequence's pages: published prompt
+    /// pages stay in the prefix cache (LRU-evictable, re-sharable), the
+    /// rest return to the free pool, and the admission reservation drops.
+    fn release_kv(&mut self, slot: usize) {
+        if let Some(kv) = &mut self.kv {
+            kv.free_slot(slot);
+        }
+    }
+
+    fn sync_kv_gauges(&self) {
+        if let Some(kv) = &self.kv {
+            self.metrics.kv_pages_in_use.set(kv.pages_in_use() as u64);
+            self.metrics.kv_pages_cached.set(kv.pages_cached() as u64);
+        }
     }
 
     fn finish(&mut self, out: RequestOutput) {
         self.metrics.requests_completed.inc();
         self.metrics.e2e_latency.observe(out.e2e);
         self.finished.push(out);
+    }
+}
+
+/// Terminal output for a request that leaves the pending queue without
+/// ever being admitted (never-fits CacheFull, pending-cancel): no tokens,
+/// no prefill, e2e = time spent queued.
+fn drained_output(id: RequestId, finish: FinishReason,
+                  mut timing: RequestTiming) -> RequestOutput {
+    timing.finished = Some(Instant::now());
+    RequestOutput {
+        id,
+        prompt_len: 0,
+        tokens: Vec::new(),
+        finish,
+        ttft: Duration::ZERO,
+        e2e: timing.e2e().unwrap_or_default(),
+    }
+}
+
+/// The step's KV view from the scheduler's manager field. A free function
+/// (not a method) so call sites can borrow `self.kv` alone next to the
+/// `&mut self.backend` receiver.
+fn kv_step_view(kv: &Option<KvCacheManager>) -> KvStepView<'_> {
+    match kv {
+        Some(m) => m.view(),
+        None => KvStepView::Slab,
     }
 }
 
@@ -449,6 +660,18 @@ mod tests {
     }
 
     #[test]
+    fn empty_prompts_are_rejected_at_submit() {
+        // There is no last prompt position to sample a first token from;
+        // admitting an empty prompt would panic the serve loop, so submit
+        // bounces it like a full queue does.
+        let mut s = sched(2);
+        assert!(!s.submit(mk_req(1, vec![], 4)));
+        assert_eq!(s.metrics.queue_rejections.get(), 1);
+        assert_eq!(s.pending_count(), 0);
+        assert!(!s.has_work());
+    }
+
+    #[test]
     fn queue_capacity_rejects() {
         let mut s = Scheduler::new(MockBackend::new(1, 8, 32, 64), 2,
                                    Arc::new(ServingMetrics::default()), 1);
@@ -467,5 +690,175 @@ mod tests {
         }
         let done = s.take_finished();
         assert_eq!(done[0].prompt_len, 8);
+    }
+
+    use crate::coordinator::kvcache::{KvCacheConfig, KvChoice};
+
+    fn paged_sched(batch: usize, page_tokens: usize, pool_pages: usize,
+                   metrics: Arc<ServingMetrics>) -> Scheduler<MockBackend> {
+        Scheduler::with_kv(
+            MockBackend::new(batch, 8, 32, 64), 16, metrics, 1,
+            KvChoice::Paged(KvCacheConfig { page_tokens, pool_pages }))
+    }
+
+    #[test]
+    fn admission_blocks_on_pages_not_slots() {
+        // 4 free slots but a 4-page pool where every request's worst case
+        // reserves 2 pages: only two sequences may be concurrent. The
+        // queue head waits on pages, finishes release them, and every
+        // request still completes with its full budget, in FIFO order.
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(4, 4, 4, metrics.clone());
+        for id in 0..4 {
+            // worst case: plen 4 + max_new 4 = 8 tokens = 2 pages
+            assert!(s.submit(mk_req(id, vec![1, 2, 3, 4 + id as u32], 4)));
+        }
+        s.step().unwrap();
+        assert_eq!(s.active_count(), 2,
+                   "pages, not the 4 free slots, bound admission");
+        assert_eq!(s.pending_count(), 2);
+        assert!(metrics.kv_admission_blocked.get() >= 1);
+        let mut order = Vec::new();
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            order.extend(s.take_finished().into_iter().map(|d| d.id));
+            steps += 1;
+            assert!(steps < 100, "stuck");
+        }
+        assert_eq!(order, vec![0, 1, 2, 3], "page-gated admission is FIFO");
+        assert_eq!(metrics.kv_pages_in_use.get(), 0,
+                   "all pages released at drain");
+    }
+
+    #[test]
+    fn paged_and_slab_schedulers_generate_identical_tokens() {
+        // The tentpole's token-exactness claim at the scheduler level:
+        // with auto pool sizing (slab-equivalent capacity) the paged run
+        // admits, decodes and finishes identically to the slab run.
+        let mut outs = Vec::new();
+        for choice in [KvChoice::Slab,
+                       KvChoice::Paged(KvCacheConfig::auto())] {
+            let mut s = Scheduler::with_kv(
+                MockBackend::new(3, 8, 24, 64), 64,
+                Arc::new(ServingMetrics::default()), 1, choice);
+            for id in 0..9 {
+                let plen = 1 + (id as usize % 5);
+                s.submit(mk_req(id, (0..plen as u32).map(|i| i + 1).collect(),
+                                1 + (id as usize % 4)));
+            }
+            let mut steps = 0;
+            while s.has_work() {
+                s.step().unwrap();
+                steps += 1;
+                assert!(steps < 200, "stuck");
+            }
+            let mut done = s.take_finished();
+            done.sort_by_key(|d| d.id);
+            outs.push(done.iter()
+                .map(|d| (d.id, d.tokens.clone(), d.finish, d.prompt_len))
+                .collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1],
+                   "paged serving changed tokens vs the slab layout");
+    }
+
+    #[test]
+    fn identical_prompts_hit_the_prefix_cache() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(2, 2, 16, metrics.clone());
+        // same prompt, same admission wave: the second sequence maps its
+        // prompt pages onto the first's physical pages
+        for id in 0..2 {
+            s.submit(mk_req(id, vec![5, 6, 7, 8], 2));
+        }
+        s.step().unwrap();
+        assert!(metrics.kv_shared_prefix_hits.get() >= 2,
+                "two full prompt pages should be shared");
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        assert_eq!(s.take_finished().len(), 2);
+    }
+
+    #[test]
+    fn unbounded_max_new_tokens_runs_to_cache_full_under_paging() {
+        // usize::MAX is the natural "decode until EOS" sentinel: the paged
+        // admission's worst-case arithmetic must saturate (not overflow),
+        // reserve ceil(max_seq / P) pages, and let the sequence run all
+        // the way to CacheFull — exactly like the slab layout.
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(1, 4, 8, metrics);
+        assert!(s.submit(mk_req(1, vec![1, 2, 3], usize::MAX)));
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            steps += 1;
+            assert!(steps < 100, "stuck");
+        }
+        let done = s.take_finished();
+        assert_eq!(done[0].finish, FinishReason::CacheFull);
+        assert_eq!(done[0].prompt_len + done[0].tokens.len(), 32,
+                   "stops exactly at the max_seq boundary");
+    }
+
+    #[test]
+    fn request_too_big_for_the_pool_fails_instead_of_wedging() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(2, 4, 2, metrics.clone());
+        // worst case min(8 + 100, 32) = 32 tokens = 8 pages > 2-page pool
+        assert!(s.submit(mk_req(1, vec![1; 8], 100)));
+        // a modest request behind it still gets served
+        assert!(s.submit(mk_req(2, vec![1, 2], 2)));
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            steps += 1;
+            assert!(steps < 100, "stuck");
+        }
+        let mut done = s.take_finished();
+        done.sort_by_key(|d| d.id);
+        assert_eq!(done[0].finish, FinishReason::CacheFull);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(done[1].finish, FinishReason::Length);
+        assert_eq!(done[1].tokens.len(), 2);
+    }
+
+    #[test]
+    fn cancel_frees_pages_and_slots_immediately() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = Scheduler::with_kv(
+            MockBackend::new(1, 8, 32, 64), 16, metrics.clone(), 1,
+            KvChoice::Paged(KvCacheConfig { page_tokens: 4, pool_pages: 8 }));
+        assert!(s.submit(mk_req(1, vec![1, 2, 3], 50)));
+        assert!(s.submit(mk_req(2, vec![4, 5], 50)));
+        s.step().unwrap(); // req 1 active (batch 1), req 2 pending
+        assert_eq!(s.active_count(), 1);
+        assert!(metrics.kv_pages_in_use.get() > 0);
+        // cancel the pending request: it leaves the queue with no tokens
+        assert!(s.cancel(2));
+        assert_eq!(s.pending_count(), 0);
+        // cancel the active request: slot and pages release immediately
+        assert!(s.cancel(1));
+        assert_eq!(s.active_count(), 0);
+        assert_eq!(metrics.kv_pages_in_use.get(), 0,
+                   "an abandoned request must not hold pages until EOS");
+        assert!(!s.has_work());
+        let mut done = s.take_finished();
+        done.sort_by_key(|d| d.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert!(!done[0].tokens.is_empty(),
+                "active cancel returns the tokens generated so far");
+        assert_eq!(done[1].finish, FinishReason::Cancelled);
+        assert!(done[1].tokens.is_empty());
+        assert_eq!(metrics.requests_cancelled.get(), 2);
+        // unknown ids are a no-op; the freed slot is reusable
+        assert!(!s.cancel(99));
+        assert!(s.submit(mk_req(3, vec![7], 2)));
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        assert_eq!(s.take_finished()[0].tokens.len(), 2);
     }
 }

@@ -10,6 +10,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::backend::ModelBackend;
+use super::kvcache::KvChoice;
 use super::request::{Request, RequestId, RequestOutput};
 use super::scheduler::Scheduler;
 use crate::llm::SamplingParams;
@@ -17,6 +18,9 @@ use crate::metrics::ServingMetrics;
 
 enum Msg {
     Submit(Request, Sender<RequestOutput>),
+    /// Client-disconnect path: stop decoding for this request and release
+    /// its batch slot and KV pages immediately.
+    Cancel(RequestId),
     Shutdown,
 }
 
@@ -34,6 +38,15 @@ impl ServerHandle {
     pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize,
                   sampling: SamplingParams,
                   eos_token: Option<u32>) -> Result<Receiver<RequestOutput>> {
+        self.submit_with_id(prompt, max_new_tokens, sampling, eos_token)
+            .map(|(_, rx)| rx)
+    }
+
+    /// [`ServerHandle::submit`] that also returns the request id — the
+    /// handle a client needs to [`ServerHandle::cancel`] later.
+    pub fn submit_with_id(&self, prompt: Vec<u32>, max_new_tokens: usize,
+                          sampling: SamplingParams, eos_token: Option<u32>)
+                          -> Result<(RequestId, Receiver<RequestOutput>)> {
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (otx, orx) = mpsc::channel();
         self.tx
@@ -42,7 +55,17 @@ impl ServerHandle {
                 otx,
             ))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(orx)
+        Ok((id, orx))
+    }
+
+    /// Cancel an in-flight request (the client-disconnect path): its batch
+    /// slot and KV pages are released as soon as the worker drains the
+    /// message, and its receiver resolves with `FinishReason::Cancelled`.
+    /// Cancelling an already-finished or unknown id is a no-op.
+    pub fn cancel(&self, id: RequestId) -> Result<()> {
+        self.tx
+            .send(Msg::Cancel(id))
+            .map_err(|_| anyhow::anyhow!("server stopped"))
     }
 
     /// Stop the worker after it drains all in-flight work.
@@ -76,6 +99,18 @@ where
     B: ModelBackend + 'static,
     F: FnOnce() -> Result<B> + Send + 'static,
 {
+    start_with_kv(factory, queue_capacity, seed, KvChoice::compile_default())
+}
+
+/// [`start_with`] with an explicit KV layout for the scheduler (paged
+/// sizing from `--kv-page-tokens` / `--kv-pool-pages`, or the slab
+/// fallback).
+pub fn start_with_kv<B, F>(factory: F, queue_capacity: usize, seed: u64,
+                           kv: KvChoice) -> Result<ServerHandle>
+where
+    B: ModelBackend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
     let metrics = Arc::new(ServingMetrics::default());
     metrics.mark_started();
     let m2 = metrics.clone();
@@ -95,7 +130,7 @@ where
                     anyhow::bail!("backend init failed: {msg}");
                 }
             };
-            worker_loop(backend, queue_capacity, seed, m2, rx)
+            worker_loop(backend, queue_capacity, seed, m2, rx, kv)
         })
         .expect("spawn coordinator");
     ready_rx
@@ -110,14 +145,24 @@ where
 pub fn start<B: ModelBackend + Send + 'static>(backend: B,
                                                queue_capacity: usize,
                                                seed: u64) -> ServerHandle {
-    start_with(move || Ok(backend), queue_capacity, seed)
+    start_kv(backend, queue_capacity, seed, KvChoice::compile_default())
+}
+
+/// [`start`] with an explicit KV layout.
+pub fn start_kv<B: ModelBackend + Send + 'static>(backend: B,
+                                                  queue_capacity: usize,
+                                                  seed: u64,
+                                                  kv: KvChoice)
+                                                  -> ServerHandle {
+    start_with_kv(move || Ok(backend), queue_capacity, seed, kv)
         .expect("infallible backend factory")
 }
 
 fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
                                 metrics: Arc<ServingMetrics>,
-                                rx: Receiver<Msg>) -> Result<()> {
-    let mut sched = Scheduler::new(backend, queue_capacity, metrics, seed);
+                                rx: Receiver<Msg>, kv: KvChoice) -> Result<()> {
+    let mut sched = Scheduler::with_kv(backend, queue_capacity, metrics,
+                                       seed, kv);
     let mut waiters: Vec<(RequestId, Sender<RequestOutput>)> = Vec::new();
     let mut shutting_down = false;
     loop {
@@ -131,6 +176,9 @@ fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
                                 waiters.push((req.id, otx));
                             } // rejected: dropping otx signals the caller
                         }
+                        Msg::Cancel(id) => {
+                            sched.cancel(id);
+                        }
                         Msg::Shutdown => shutting_down = true,
                     }
                 }
@@ -141,6 +189,9 @@ fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
                             waiters.push((req.id, otx));
                         }
                     }
+                    Ok(Msg::Cancel(id)) => {
+                        sched.cancel(id);
+                    }
                     Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
                 }
             }
@@ -150,11 +201,13 @@ fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
         }
         if sched.has_work() {
             sched.step()?;
-            for out in sched.take_finished() {
-                if let Some(i) = waiters.iter().position(|(id, _)| *id == out.id) {
-                    let (_, otx) = waiters.swap_remove(i);
-                    let _ = otx.send(out);
-                }
+        }
+        // Deliver outside the has_work guard: a cancel can finish the last
+        // request without leaving any schedulable work behind.
+        for out in sched.take_finished() {
+            if let Some(i) = waiters.iter().position(|(id, _)| *id == out.id) {
+                let (_, otx) = waiters.swap_remove(i);
+                let _ = otx.send(out);
             }
         }
     }
@@ -192,6 +245,28 @@ mod tests {
             let out = rx.recv().unwrap();
             assert_eq!(out.tokens.len(), 2);
         }
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn cancel_resolves_a_queued_request() {
+        use crate::coordinator::request::FinishReason;
+        let h = start(MockBackend::new(1, 8, 32, 64), 16, 7);
+        // batch 1: the second request queues behind the first
+        let rx1 = h.submit(vec![3], 20, SamplingParams::Greedy, None).unwrap();
+        let (id2, rx2) = h
+            .submit_with_id(vec![4], 20, SamplingParams::Greedy, None)
+            .unwrap();
+        h.cancel(id2).unwrap();
+        let o2 = rx2.recv().unwrap();
+        assert_eq!(o2.finish, FinishReason::Cancelled);
+        assert!(o2.tokens.is_empty());
+        // the batch-holding request is unaffected
+        let o1 = rx1.recv().unwrap();
+        assert_eq!(o1.tokens.len(), 20);
+        assert_eq!(h.metrics.requests_cancelled.get(), 1);
+        // cancelling an already-finished id is a harmless no-op
+        h.cancel(1).unwrap();
         h.shutdown().unwrap();
     }
 

@@ -4,8 +4,11 @@
 use std::path::PathBuf;
 
 use tenx_iree::autotune::{self, TileRegistry};
-use tenx_iree::cliargs::{parse_thread_count, parse_thread_list, Command};
-use tenx_iree::coordinator::{self, EngineBackend, NativeBackend, Precision};
+use tenx_iree::cliargs::{parse_thread_count, parse_thread_list,
+                         parse_zero_auto, Command};
+use tenx_iree::coordinator::{self, EngineBackend, KvCacheConfig, KvChoice,
+                             NativeBackend, Precision,
+                             KV_PAGE_TOKENS_DEFAULT};
 use tenx_iree::ir::{build_matmul_func, ElemType, Module};
 use tenx_iree::kernels::System;
 use tenx_iree::llm::{SamplingParams, Tokenizer};
@@ -87,6 +90,21 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("tuning-profile", "",
              "TOML tile-tuning profile from `tenx autotune` for the native \
               kernels (empty = the paper's static tiles)")
+        .opt("kv-layout",
+             if cfg!(feature = "kv-slab") { "slab" } else { "paged" },
+             "KV-cache layout for the native scheduler: paged | slab \
+              (default is the compile-time election; build with the \
+              kv-slab feature to default to slab)")
+        .opt("kv-page-tokens", "0",
+             "token positions per KV page for the paged layout (0 = auto: \
+              the tuning profile's kv_page_tokens key, else the built-in \
+              election)")
+        .opt("kv-pool-pages", "0",
+             "physical pages in the KV pool (0 = auto: slab-equivalent \
+              capacity, batch * ceil(max_seq / page_tokens))")
+        .opt("prompt", "",
+             "use this prompt text for every synthetic request (empty = \
+              the built-in prompt cycle)")
         .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
@@ -96,6 +114,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let temp: f32 = m.parse("temperature")?;
     let threads = parse_thread_count(m.str("threads"))?;
     let queue_capacity: usize = m.usize("queue-capacity")?;
+    let kv_page_tokens = parse_zero_auto(m.str("kv-page-tokens"),
+                                         "--kv-page-tokens")?;
+    let kv_pool_pages = parse_zero_auto(m.str("kv-pool-pages"),
+                                        "--kv-pool-pages")?;
     let path = if m.flag("baseline") { EnginePath::Baseline } else { EnginePath::Mmt4d };
 
     let (handle, vocab) = if m.flag("native") {
@@ -121,17 +143,44 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                        entries; serving with the paper's static tiles",
                       precision.name());
         }
+        // KV layout: paged by default, slab as the bit-identical fallback.
+        // Page size resolves 0 → profile key → built-in election default.
+        let kv = match m.str("kv-layout") {
+            "slab" => {
+                if kv_page_tokens != 0 || kv_pool_pages != 0 {
+                    eprintln!("note: --kv-page-tokens/--kv-pool-pages apply \
+                               to the paged layout");
+                }
+                KvChoice::Slab
+            }
+            "paged" => {
+                let pt = if kv_page_tokens != 0 {
+                    kv_page_tokens
+                } else {
+                    tiles.kv_page_tokens().unwrap_or(KV_PAGE_TOKENS_DEFAULT)
+                };
+                KvChoice::Paged(KvCacheConfig { page_tokens: pt,
+                                                pool_pages: kv_pool_pages })
+            }
+            other => {
+                return Err(format!("unknown --kv-layout {other:?} \
+                                    (paged | slab)"))
+            }
+        };
         let vocab = 512;
         eprintln!("serving the native mmt4d backend ({} path, {threads} \
-                   kernel thread{}{})...",
+                   kernel thread{}{}, {} kv)...",
                   precision.name(), if threads == 1 { "" } else { "s" },
-                  if tuned_active { ", tuned tiles" } else { "" });
+                  if tuned_active { ", tuned tiles" } else { "" },
+                  match kv { KvChoice::Slab => "slab",
+                             KvChoice::Paged(_) => "paged" });
         let backend = NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
                                                     precision, 42, &tiles,
                                                     threads)
             .map_err(err_str)?
             .with_parallelism(Parallelism::new(threads));
-        let handle = coordinator::server::start(backend, queue_capacity, 42);
+        let handle = coordinator::server::start_kv(backend, queue_capacity,
+                                                   42, kv);
         handle.metrics.compute_threads.add(threads as u64);
         (handle, vocab)
     } else {
@@ -143,12 +192,18 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             eprintln!("note: --tuning-profile applies to the native \
                        backend; artifact tiles are baked in at AOT time");
         }
+        if kv_page_tokens != 0 || kv_pool_pages != 0 {
+            eprintln!("note: the paged KV cache applies to the native \
+                       backend; the artifact engine's whole-batch KV is \
+                       baked in at AOT time (serving slab)");
+        }
         eprintln!("loading artifacts from {dir:?} ({path:?})...");
         let manifest = tenx_iree::config::Manifest::load(&dir).map_err(err_str)?;
         let vocab = manifest.model.vocab_size;
         let dir2 = dir.clone();
-        let handle = coordinator::server::start_with(
-            move || EngineBackend::load(&dir2, path), queue_capacity, 42)
+        let handle = coordinator::server::start_with_kv(
+            move || EngineBackend::load(&dir2, path), queue_capacity, 42,
+            KvChoice::Slab)
             .map_err(err_str)?;
         // PJRT execution ignores the taskpool; record the serial truth.
         handle.metrics.compute_threads.add(1);
@@ -161,9 +216,15 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         "the moon turns", "waves move the", "rock forms in", "air cools at",
     ];
     let sampling = SamplingParams::from_temperature(temp);
+    let custom = m.str("prompt");
     let rxs: Vec<_> = (0..n)
         .map(|i| {
-            let p = tok.encode(prompts[i % prompts.len()]);
+            let text = if custom.is_empty() {
+                prompts[i % prompts.len()]
+            } else {
+                custom
+            };
+            let p = tok.encode(text);
             handle.submit(p, max_new, sampling, None).map_err(err_str)
         })
         .collect::<Result<_, _>>()?;

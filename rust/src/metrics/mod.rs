@@ -22,6 +22,21 @@ impl Counter {
     }
 }
 
+/// A last-value-wins instantaneous reading (pages in use, pool size) — the
+/// counterpart to the monotonic [`Counter`].
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Latency histogram with exponential bucket bounds (microseconds).
 #[derive(Debug)]
 pub struct Histogram {
@@ -124,6 +139,31 @@ pub struct ServingMetrics {
     /// observed during decode steps. Prefill runs first and is the larger
     /// shape, so the arena is already grown: steady state is 0.
     pub decode_scratch_allocs: Counter,
+    /// Requests cancelled (client disconnect / explicit cancel) — their
+    /// slots and KV pages were released before natural completion.
+    pub requests_cancelled: Counter,
+    /// Paged-KV pool size in pages; 0 means the slab layout is serving
+    /// (the discriminator the report uses).
+    pub kv_pages_total: Gauge,
+    /// Token positions per KV page (paged layout).
+    pub kv_page_tokens: Gauge,
+    /// Pages currently referenced by live sequences.
+    pub kv_pages_in_use: Gauge,
+    /// Zero-ref finished-prefix pages held in the prefix cache
+    /// (LRU-evictable, re-sharable).
+    pub kv_pages_cached: Gauge,
+    /// Prompt pages served from the prefix cache instead of fresh
+    /// allocation — each one is a whole page of prefill KV the pool did
+    /// not have to duplicate.
+    pub kv_shared_prefix_hits: Counter,
+    /// Cached pages evicted (LRU) to satisfy allocations under pressure.
+    pub kv_evictions: Counter,
+    /// Copy-on-write page copies (a writer diverging off a shared page).
+    pub kv_cow_copies: Counter,
+    /// Admission waves where the queue head had a free batch slot but no
+    /// page-reservation headroom — the signal that pages, not slots, are
+    /// the bottleneck.
+    pub kv_admission_blocked: Counter,
     pub started: Mutex<Option<std::time::Instant>>,
     /// Taskpool counter snapshot at `mark_started`, so the report shows
     /// this server's pool activity rather than process-wide totals.
@@ -148,10 +188,11 @@ impl ServingMetrics {
         let pre_tok = self.tokens_prefilled.get();
         let mut s = String::from("== serving metrics ==\n");
         s.push_str(&format!(
-            "requests: {} submitted, {} completed, {} rejected\n",
+            "requests: {} submitted, {} completed, {} rejected, {} cancelled\n",
             self.requests_submitted.get(),
             self.requests_completed.get(),
-            self.queue_rejections.get()
+            self.queue_rejections.get(),
+            self.requests_cancelled.get()
         ));
         s.push_str(&format!(
             "prefill: {} batches, {} tokens, mean {:?}\n",
@@ -168,6 +209,20 @@ impl ServingMetrics {
             self.decode_rhs_packs.get(), self.decode_scratch_allocs.get(),
             self.decode_steps.get()
         ));
+        if self.kv_pages_total.get() > 0 {
+            s.push_str(&format!(
+                "kv-cache: paged, {}-token pages, {}/{} pages in use \
+                 ({} cached), shared-prefix hits {}, evictions {}, cow \
+                 copies {}, page-blocked admissions {}\n",
+                self.kv_page_tokens.get(), self.kv_pages_in_use.get(),
+                self.kv_pages_total.get(), self.kv_pages_cached.get(),
+                self.kv_shared_prefix_hits.get(), self.kv_evictions.get(),
+                self.kv_cow_copies.get(), self.kv_admission_blocked.get()
+            ));
+        } else {
+            s.push_str("kv-cache: slab (contiguous per-slot max_seq \
+                        reservations)\n");
+        }
         s.push_str(&format!(
             "queue: mean wait {:?} p90 {:?}\n",
             self.queue_wait.mean(), self.queue_wait.quantile(0.9)
@@ -234,14 +289,38 @@ mod tests {
         m.compute_threads.add(4);
         let r = m.report();
         assert!(r.contains("requests: 1 submitted"));
+        assert!(r.contains("0 cancelled"));
         assert!(r.contains("decode:"));
         assert!(r.contains("steady-state: decode rhs packs 0, decode \
                             scratch allocs 0"));
+        assert!(r.contains("kv-cache: slab"),
+                "no pool recorded -> slab line");
         assert!(r.contains("queue: mean wait"));
         assert!(r.contains("compute: threads 4 configured"));
         assert!(r.contains("worker occupancy"));
         // the 0 sentinel is reported as such, not silently shown as 1
         let unset = ServingMetrics::default();
         assert!(unset.report().contains("threads not recorded"));
+    }
+
+    #[test]
+    fn gauges_and_the_paged_kv_line() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3, "gauges are last-value-wins");
+        let m = ServingMetrics::default();
+        m.kv_pages_total.set(16);
+        m.kv_page_tokens.set(4);
+        m.kv_pages_in_use.set(5);
+        m.kv_pages_cached.set(2);
+        m.kv_shared_prefix_hits.add(3);
+        m.kv_evictions.inc();
+        let r = m.report();
+        assert!(r.contains("kv-cache: paged, 4-token pages, 5/16 pages"));
+        assert!(r.contains("(2 cached)"));
+        assert!(r.contains("shared-prefix hits 3"));
+        assert!(r.contains("evictions 1"));
     }
 }

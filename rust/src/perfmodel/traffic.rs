@@ -169,6 +169,51 @@ pub fn blocked_walk_traffic(shape: &WalkShape, eb: ElemBytes, blk: Blocking,
     }
 }
 
+/// The per-decode-step KV gather the page-size election prices: one
+/// sequence reading its whole committed history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvGatherShape {
+    /// Committed sequence length at the operating point being priced.
+    pub seq_tokens: usize,
+    /// KV payload bytes per token position (all layers, K+V).
+    pub kv_bytes_per_token: usize,
+}
+
+/// Modelled *overhead* cycles of gathering one sequence's KV through a
+/// paged layout with `page_tokens`-position pages, per decode step. The
+/// useful payload traffic (`seq_tokens * kv_bytes_per_token`) is
+/// page-size-independent and omitted — this is a ranking function for the
+/// page-size election, first-order by design like
+/// [`blocked_walk_traffic`]:
+///
+/// * **per-page walk + stream break** — each page costs one page-table
+///   pointer chase (an L1-penalty-class serialization) and breaks the
+///   contiguous stream at its boundary (one extra line fill,
+///   L2-penalty-class): small pages pay this `ceil(L / P)` times;
+/// * **internal fragmentation** — the half-empty tail page
+///   (`(P - 1) / 2` tokens expected) holds pool capacity that would
+///   otherwise cache a shared prefix; its displacement cost is one
+///   re-stream of those bytes per sequence lifetime, amortized over the
+///   `L` steps of that lifetime: large pages pay linearly here.
+///
+/// Minimizing the sum trades the two off; on the MILK-V Jupiter hierarchy
+/// with Llama-3.2-1B KV widths the optimum lands at 16 tokens/page
+/// (`coordinator::kvcache::KV_PAGE_TOKENS_DEFAULT`). Like blocking, the
+/// page size never affects numerics — only traffic.
+pub fn kv_page_overhead_cycles(shape: &KvGatherShape, page_tokens: usize,
+                               l1: &CacheDesc, l2: &CacheDesc) -> f64 {
+    if shape.seq_tokens == 0 || page_tokens == 0 {
+        return 0.0;
+    }
+    let pages = shape.seq_tokens.div_ceil(page_tokens) as f64;
+    let per_page = (l1.miss_penalty + l2.miss_penalty) as f64;
+    let waste_lines = (page_tokens as f64 - 1.0) / 2.0
+        * shape.kv_bytes_per_token as f64 / l2.line_bytes as f64;
+    let frag = waste_lines * l2.miss_penalty as f64
+        / shape.seq_tokens as f64;
+    pages * per_page + frag
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +297,28 @@ mod tests {
                                      Blocking { m1b: 8, n1b: 4, k1b: 128 },
                                      &l1, &l2);
         assert_eq!(a, b, "one tile row: m1b cannot matter");
+    }
+
+    #[test]
+    fn kv_page_model_prices_both_regimes() {
+        let (l1, l2) = l1l2();
+        let shape = KvGatherShape { seq_tokens: 256,
+                                    kv_bytes_per_token: 32 * 1024 };
+        // degenerate shapes cost nothing
+        let empty = KvGatherShape { seq_tokens: 0, kv_bytes_per_token: 1 };
+        assert_eq!(kv_page_overhead_cycles(&empty, 8, &l1, &l2), 0.0);
+        // tiny pages drown in per-page walk cost, huge pages in
+        // fragmentation: both must price worse than the middle
+        let mid = kv_page_overhead_cycles(&shape, 16, &l1, &l2);
+        let tiny = kv_page_overhead_cycles(&shape, 2, &l1, &l2);
+        let huge = kv_page_overhead_cycles(&shape, 128, &l1, &l2);
+        assert!(mid > 0.0);
+        assert!(tiny > mid, "per-page overhead must punish tiny pages");
+        assert!(huge > mid, "fragmentation must punish huge pages");
+        // monotone in the per-token payload on the fragmentation side
+        let wide = KvGatherShape { seq_tokens: 256,
+                                   kv_bytes_per_token: 64 * 1024 };
+        assert!(kv_page_overhead_cycles(&wide, 128, &l1, &l2) > huge);
     }
 
     #[test]

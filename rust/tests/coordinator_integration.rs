@@ -181,3 +181,107 @@ fn temperature_sampling_stays_in_vocab() {
     assert!(out.tokens.iter().all(|&t| t < 64));
     handle.shutdown().unwrap();
 }
+
+#[test]
+fn paged_native_serving_token_exact_and_shares_prefixes() {
+    // The paged-vs-slab integration statement over the REAL ukernel
+    // backend, both precisions: 6 requests with a shared 4-token system
+    // prefix through a batch-2 backend (several admission waves, slot
+    // reuse). Tokens must be identical to the slab run, the shared prefix
+    // page must be served from the prefix cache for every later request,
+    // and every page must be released once the work drains.
+    use std::sync::Arc;
+    use tenx_iree::coordinator::{KvCacheConfig, KvChoice, Request, Scheduler};
+    use tenx_iree::metrics::ServingMetrics;
+    for precision in [Precision::F16, Precision::Int8] {
+        let mut outs = Vec::new();
+        let mut hits = 0;
+        for choice in [KvChoice::Slab,
+                       KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                                       pool_pages: 0 })] {
+            let backend = NativeBackend::new(2, 8, 32, 64, 64, precision, 7);
+            let metrics = Arc::new(ServingMetrics::default());
+            let mut s = Scheduler::with_kv(backend, 64, metrics.clone(), 5,
+                                           choice);
+            for id in 0..6u64 {
+                assert!(s.submit(Request {
+                    id,
+                    prompt: vec![9, 10, 11, 12, 13 + id as u32],
+                    max_new_tokens: 3 + (id as usize % 3),
+                    sampling: SamplingParams::Greedy,
+                    eos_token: None,
+                }));
+            }
+            let mut steps = 0;
+            while s.has_work() {
+                s.step().unwrap();
+                steps += 1;
+                assert!(steps < 1000, "stuck");
+            }
+            let mut done = s.take_finished();
+            done.sort_by_key(|d| d.id);
+            assert_eq!(done.len(), 6, "{precision:?}");
+            if let KvChoice::Paged(_) = choice {
+                hits = metrics.kv_shared_prefix_hits.get();
+                assert_eq!(metrics.kv_pages_in_use.get(), 0,
+                           "{precision:?}: pages leaked past drain");
+            }
+            outs.push(done
+                .iter()
+                .map(|d| (d.id, d.tokens.clone(), d.finish))
+                .collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1],
+                   "{precision:?}: paged serving changed greedy tokens");
+        assert_eq!(hits, 5,
+                   "{precision:?}: the [9,10,11,12] prefix page must be \
+                    shared by requests 1..=5");
+    }
+}
+
+#[test]
+fn finished_prefix_pages_evict_in_lru_order_under_pressure() {
+    // Scheduler-level LRU: a 4-page pool serves four sequential prompts;
+    // the fourth's decode append must evict the *oldest* finished prefix
+    // (A), so a later resubmission of A misses the prefix cache while a
+    // resubmission of the younger B still hits it.
+    use std::sync::Arc;
+    use tenx_iree::coordinator::{KvCacheConfig, KvChoice, MockBackend,
+                                 Request, Scheduler};
+    use tenx_iree::metrics::ServingMetrics;
+    let metrics = Arc::new(ServingMetrics::default());
+    let mut s = Scheduler::with_kv(
+        MockBackend::new(1, 8, 32, 64), 64, metrics.clone(), 1,
+        KvChoice::Paged(KvCacheConfig { page_tokens: 2, pool_pages: 4 }));
+    let mut next_id = 0u64;
+    let mut run = |s: &mut Scheduler<MockBackend>, prompt: Vec<u32>,
+                   max_new: usize| {
+        next_id += 1;
+        assert!(s.submit(Request { id: next_id, prompt,
+                                   max_new_tokens: max_new,
+                                   sampling: SamplingParams::Greedy,
+                                   eos_token: None }));
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            steps += 1;
+            assert!(steps < 100, "stuck");
+        }
+        s.take_finished();
+    };
+    run(&mut s, vec![1, 2], 2); // A: prefix page published, then cached
+    run(&mut s, vec![3, 4], 2); // B
+    run(&mut s, vec![5, 6], 2); // C
+    assert_eq!(metrics.kv_evictions.get(), 0, "pool not yet under pressure");
+    run(&mut s, vec![7, 8], 2); // D's decode append forces one eviction
+    assert_eq!(metrics.kv_evictions.get(), 1);
+    // A (least recently used) was the victim: resubmitting it misses...
+    let h0 = metrics.kv_shared_prefix_hits.get();
+    run(&mut s, vec![1, 2], 1);
+    assert_eq!(metrics.kv_shared_prefix_hits.get(), h0,
+               "A's prefix page should have been evicted first");
+    // ...while the younger B still hits.
+    run(&mut s, vec![3, 4], 1);
+    assert_eq!(metrics.kv_shared_prefix_hits.get(), h0 + 1,
+               "B's prefix page should have survived the eviction");
+}

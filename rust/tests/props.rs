@@ -826,3 +826,73 @@ fn scratch_arena_interleaved_shapes_no_stale_data_no_allocs() {
         }
     }
 }
+
+/// The paged KV cache is **token-exact** vs the slab layout across random
+/// batch/prefill/max_seq/page geometries and workloads: same tokens, same
+/// finish reasons, same truncation, request-for-request. Prompts come from
+/// a tiny alphabet so prefixes collide constantly — prefix sharing, COW
+/// divergence off shared tails, page recycling and LRU caching all fire,
+/// and none of it may change serving output (the paged tentpole's
+/// acceptance property; `docs/KVCACHE.md`).
+#[test]
+fn prop_paged_scheduler_token_exact_vs_slab() {
+    use std::sync::Arc;
+    use tenx_iree::coordinator::request::Request;
+    use tenx_iree::coordinator::{KvCacheConfig, KvChoice, MockBackend,
+                                 Scheduler};
+    use tenx_iree::llm::SamplingParams;
+    use tenx_iree::metrics::ServingMetrics;
+
+    forall(Config::default().cases(30), |g| {
+        let batch = g.usize_in(1, 5);
+        let prefill_seq = g.usize_in(2, 10);
+        let max_seq = prefill_seq + g.usize_in(1, 16);
+        let page_tokens = g.usize_in(1, 8);
+        let n_req = g.usize_in(1, 24);
+        let reqs: Vec<Request> = (0..n_req as u64)
+            .map(|id| {
+                // over-long prompts exercise truncation in both layouts
+                let plen = g.usize_in(1, prefill_seq + 2);
+                Request {
+                    id,
+                    prompt: (0..plen)
+                        .map(|_| g.usize_in(1, 3) as u32)
+                        .collect(),
+                    max_new_tokens: g.usize_in(1, 6),
+                    sampling: SamplingParams::Greedy,
+                    eos_token: None,
+                }
+            })
+            .collect();
+        let mut outs = Vec::new();
+        for choice in [KvChoice::Slab,
+                       KvChoice::Paged(KvCacheConfig { page_tokens,
+                                                       pool_pages: 0 })] {
+            let mut s = Scheduler::with_kv(
+                MockBackend::new(batch, prefill_seq, max_seq, 64), 64,
+                Arc::new(ServingMetrics::default()), 7, choice);
+            for r in &reqs {
+                if !s.submit(r.clone()) {
+                    return Err("queue unexpectedly full".into());
+                }
+            }
+            let mut iters = 0;
+            while s.has_work() {
+                s.step().map_err(|e| e.to_string())?;
+                iters += 1;
+                if iters > 10_000 {
+                    return Err("paged scheduler did not converge".into());
+                }
+            }
+            let mut done = s.take_finished();
+            done.sort_by_key(|d| d.id);
+            outs.push(
+                done.iter()
+                    .map(|d| (d.id, d.prompt_len, d.tokens.clone(), d.finish))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        prop_assert(outs[0] == outs[1],
+                    "paged and slab serving outputs diverged")
+    });
+}

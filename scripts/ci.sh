@@ -81,6 +81,40 @@ allocs nonzero, or the metrics line is missing)"
     echo "serve smoke ($prec): 0 packs, 0 allocs over $steps decode steps"
 done
 
+echo "== paged KV-cache serve smoke (prefix sharing + slab parity) =="
+# Two identical prompts served with 4-token pages must (a) share prefix
+# pages, (b) keep the zero-repack steady state on the paged path, and
+# (c) produce exactly the tokens the slab layout produces.
+paged_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+    --precision f16 --requests 2 --max-new-tokens 6 \
+    --prompt "the sun heats the ground" --kv-layout paged \
+    --kv-page-tokens 4)"
+slab_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+    --precision f16 --requests 2 --max-new-tokens 6 \
+    --prompt "the sun heats the ground" --kv-layout slab)"
+paged_toks="$(printf '%s\n' "$paged_out" | grep '^req ' | sed 's/.*-> //')"
+slab_toks="$(printf '%s\n' "$slab_out" | grep '^req ' | sed 's/.*-> //')"
+if [ -z "$paged_toks" ] || [ "$paged_toks" != "$slab_toks" ]; then
+    echo "paged serve smoke: token parity with the slab layout broken"
+    echo "--- paged ---"; printf '%s\n' "$paged_out"
+    echo "--- slab ----"; printf '%s\n' "$slab_out"
+    exit 1
+fi
+hits="$(printf '%s\n' "$paged_out" \
+    | sed -n 's/.*shared-prefix hits \([0-9]*\).*/\1/p')"
+if [ -z "$hits" ] || [ "$hits" -eq 0 ]; then
+    echo "paged serve smoke: expected shared-prefix page hits > 0"
+    printf '%s\n' "$paged_out"
+    exit 1
+fi
+if ! printf '%s\n' "$paged_out" | grep -q \
+    '^steady-state: decode rhs packs 0, decode scratch allocs 0'; then
+    echo "paged serve smoke: paged layout broke the zero-repack steady state"
+    printf '%s\n' "$paged_out"
+    exit 1
+fi
+echo "paged serve smoke: $hits shared-prefix hits, slab-exact tokens, 0 packs / 0 allocs"
+
 echo "== threaded ukernel bench (quick, 2 workers) =="
 TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
 
@@ -89,7 +123,7 @@ echo "== docs link check =="
 # Skipped: http(s)/mailto links, intra-page #anchors, fenced code blocks
 # (awk strips them), and optional markdown link titles ([x](path "title")).
 link_errors=0
-for f in docs/*.md README.md ROADMAP.md; do
+for f in docs/*.md README.md ROADMAP.md config/README.md; do
     while IFS= read -r link; do
         case "$link" in
             http://*|https://*|mailto:*|\#*) continue ;;
