@@ -55,6 +55,7 @@ fn bench_native_paged_vs_slab(quick: bool) -> anyhow::Result<()> {
                 max_new_tokens: max_new,
                 sampling: SamplingParams::Greedy,
                 eos_token: None,
+                speculative_k: None,
             };
             assert!(sched.submit(req), "queue is sized for the workload");
         }

@@ -62,12 +62,25 @@ impl MeasureConfig {
         }
     }
 
+    /// Verify (speculative-decode scoring) measurement shape: a short GEMM
+    /// of M = k+1 rows (k = 3 drafts is the serving default) over the
+    /// prefill column budget.
+    pub fn verify(vlen: usize, n0: usize, quick: bool) -> MeasureConfig {
+        let total_cols = vlen / 2;
+        MeasureConfig {
+            m_total: 4,
+            n1: total_cols.div_ceil(n0).max(1),
+            k1: if quick { 128 } else { 512 },
+        }
+    }
+
     /// The phase-appropriate shape.
     pub fn for_phase(phase: crate::target::Phase, vlen: usize, n0: usize,
                      quick: bool) -> MeasureConfig {
         match phase {
             crate::target::Phase::Prefill => Self::prefill(vlen, n0, quick),
             crate::target::Phase::Decode => Self::decode(vlen, n0, quick),
+            crate::target::Phase::Verify => Self::verify(vlen, n0, quick),
         }
     }
 }
@@ -178,6 +191,7 @@ fn blocking_shape(phase: Phase, tile: Tile) -> WalkShape {
     let m_total = match phase {
         Phase::Prefill => 48,
         Phase::Decode => 4,
+        Phase::Verify => 4,
     };
     WalkShape {
         m1: m_total.div_ceil(tile.m0),
@@ -307,6 +321,8 @@ mod tests {
             (ElemType::F16, Tile { m0: 1, n0: 64, k0: 1 }, Phase::Decode),
             (ElemType::I8, Tile { m0: 7, n0: 32, k0: 1 }, Phase::Prefill),
             (ElemType::I8, Tile { m0: 1, n0: 128, k0: 1 }, Phase::Decode),
+            (ElemType::F16, Tile { m0: 4, n0: 32, k0: 1 }, Phase::Verify),
+            (ElemType::I8, Tile { m0: 4, n0: 32, k0: 1 }, Phase::Verify),
         ] {
             let cfg = MeasureConfig::for_phase(phase, 256, tile.n0, true);
             let m = measure_tile(&t, elem, tile, &cfg).unwrap();

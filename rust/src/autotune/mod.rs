@@ -203,7 +203,7 @@ pub fn tune_target(target: &TargetDesc, cfg: &AutotuneConfig)
             "autotune tunes the f16 and i8 kernel families, not {}",
             elem.name()
         );
-        for phase in [Phase::Prefill, Phase::Decode] {
+        for phase in [Phase::Prefill, Phase::Decode, Phase::Verify] {
             let static_tile = select_tiles_for(target.arch, phase, elem)?;
             let candidates = if cfg.quick {
                 enumerate_candidates_quick(vlen, elem, phase)
@@ -303,12 +303,14 @@ mod tests {
         let target = TargetDesc::milkv_jupiter();
         let cfg = AutotuneConfig { quick: true, ..Default::default() };
         let (reg, report) = tune_target(&target, &cfg).unwrap();
-        assert_eq!(reg.len(), 4);
+        assert_eq!(reg.len(), 6); // 2 dtypes x 3 phases
         for (elem, phase, want) in [
             (ElemType::F16, Phase::Prefill, Tile { m0: 6, n0: 32, k0: 1 }),
             (ElemType::F16, Phase::Decode, Tile { m0: 1, n0: 64, k0: 1 }),
+            (ElemType::F16, Phase::Verify, Tile { m0: 4, n0: 32, k0: 1 }),
             (ElemType::I8, Phase::Prefill, Tile { m0: 7, n0: 32, k0: 1 }),
             (ElemType::I8, Phase::Decode, Tile { m0: 1, n0: 128, k0: 1 }),
+            (ElemType::I8, Phase::Verify, Tile { m0: 4, n0: 32, k0: 1 }),
         ] {
             let t = reg.tuned(256, elem, phase, 1).unwrap();
             assert_eq!(t.tile, want, "{} {}", elem.name(), phase.name());
@@ -351,7 +353,7 @@ mod tests {
             quick: true,
         };
         let (reg, _) = tune_target(&target, &cfg).unwrap();
-        assert_eq!(reg.len(), 4); // 2 phases x 2 thread keys
+        assert_eq!(reg.len(), 6); // 3 phases x 2 thread keys
         let text = reg.render_toml(target.name);
         let doc = crate::config::toml::TomlDoc::parse(&text).unwrap();
         let back = TileRegistry::from_toml(&doc).unwrap();

@@ -84,6 +84,9 @@ pub fn enumerate_candidates(vlen: usize, elem: ElemType,
     let max_m0 = match phase {
         Phase::Decode => 1,
         Phase::Prefill => MAX_M0,
+        // Verify scores a k+1-row draft batch (k ≤ 7 in practice): sweep a
+        // small-M regime that always contains the static 4-row tile.
+        Phase::Verify => 8,
     };
     for n0 in candidate_n0s(vlen, elem) {
         for m0 in 1..=max_m0 {
@@ -431,7 +434,7 @@ mod tests {
     fn paper_tiles_are_candidates_and_legal() {
         for vlen in [128usize, 256, 512] {
             let arch = Arch::Riscv64 { vlen_bits: vlen };
-            for phase in [Phase::Prefill, Phase::Decode] {
+            for phase in [Phase::Prefill, Phase::Decode, Phase::Verify] {
                 for elem in [ElemType::F16, ElemType::I8] {
                     let tile = select_tiles_for(arch, phase, elem).unwrap();
                     assert!(tile_is_legal(vlen, elem, tile),
@@ -454,7 +457,7 @@ mod tests {
     fn candidates_never_spill_and_fill_whole_registers() {
         for vlen in [128usize, 256, 512, 1024] {
             for elem in [ElemType::F16, ElemType::I8] {
-                for phase in [Phase::Prefill, Phase::Decode] {
+                for phase in [Phase::Prefill, Phase::Decode, Phase::Verify] {
                     for t in enumerate_candidates(vlen, elem, phase) {
                         assert_eq!(t.k0, 1);
                         assert!(pressure_for(vlen, elem, t) <= 32,
@@ -463,6 +466,9 @@ mod tests {
                         assert_eq!((t.n0 * bits) % vlen, 0, "{vlen} {t:?}");
                         if phase == Phase::Decode {
                             assert_eq!(t.m0, 1);
+                        }
+                        if phase == Phase::Verify {
+                            assert!(t.m0 <= 8, "{vlen} {elem:?} {t:?}");
                         }
                     }
                 }

@@ -78,6 +78,37 @@ pub trait ModelBackend {
         out.extend_from_slice(&v);
         Ok(())
     }
+
+    /// Does this backend implement [`ModelBackend::verify_into`]? The
+    /// scheduler only attempts speculative decoding when this is true;
+    /// everything else keeps the plain decode loop.
+    fn supports_verify(&self) -> bool {
+        false
+    }
+
+    /// Speculative verification: score `tokens` (the sampled next token
+    /// followed by `k` draft tokens) for **one** slot at consecutive
+    /// positions `pos[0]..=pos[k]`, writing all `k+1` KV entries and
+    /// returning `(k+1) * V` logits rows in `out` (row `j` = logits after
+    /// feeding `tokens[..=j]`). Causal masking makes row `j` independent of
+    /// the fed tokens after `j`, which is what lets the scheduler accept a
+    /// prefix of the draft and roll the rest back. A paged backend applies
+    /// the view's pending copy-on-write copies first, exactly like
+    /// [`ModelBackend::decode_into`].
+    fn verify_into(&mut self, slot: usize, tokens: &[i32], pos: &[i32],
+                   kv: KvStepView<'_>, out: &mut Vec<f32>) -> Result<()> {
+        let _ = (slot, tokens, pos, kv, out);
+        anyhow::bail!("backend does not support speculative verification")
+    }
+
+    /// Discard any backend-side KV state past logical position `len` of
+    /// `slot` — the rollback hook for rejected speculative tails. Paged
+    /// backends need no work (the page table *is* the truth: rolled-back
+    /// positions simply become unreachable), so the default is a no-op;
+    /// slab backends that mirror sequence contents truncate here.
+    fn truncate_slot(&mut self, slot: usize, len: usize) {
+        let _ = (slot, len);
+    }
 }
 
 /// PJRT-backed implementation over the AOT artifacts.
@@ -224,6 +255,36 @@ impl ModelBackend for MockBackend {
             logits.extend(self.favor(tokens[b]));
         }
         Ok(logits)
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn verify_into(&mut self, slot: usize, tokens: &[i32], pos: &[i32],
+                   kv: KvStepView<'_>, out: &mut Vec<f32>) -> Result<()> {
+        let _ = kv;
+        let BackendDims { vocab, max_seq, .. } = self.dims;
+        anyhow::ensure!(tokens.len() == pos.len() && !tokens.is_empty());
+        self.decode_calls += 1;
+        out.clear();
+        out.reserve(tokens.len() * vocab);
+        for (j, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
+            let p = p as usize;
+            anyhow::ensure!(p < max_seq, "verify pos out of cache");
+            anyhow::ensure!(j == 0 || p == pos[j - 1] as usize + 1,
+                            "verify positions must be consecutive");
+            if self.live[slot].len() <= p {
+                self.live[slot].resize(p + 1, 0);
+            }
+            self.live[slot][p] = t;
+            out.extend(self.favor(t));
+        }
+        Ok(())
+    }
+
+    fn truncate_slot(&mut self, slot: usize, len: usize) {
+        self.live[slot].truncate(len);
     }
 }
 

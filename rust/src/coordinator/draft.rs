@@ -1,0 +1,140 @@
+//! Draft-token proposers for speculative decoding.
+//!
+//! Speculative decoding splits a decode step into *propose* (guess the next
+//! `k` tokens cheaply) and *verify* (score all `k` guesses plus the
+//! committed next token in one batched forward pass — the autotuner's
+//! `verify` phase). Acceptance never depends on how good the proposer is:
+//! the scheduler emits the **greedy** token at every verified position and
+//! merely stops consuming rows at the first mismatch, so a bad draft costs
+//! speed, not correctness (emitted streams are bit-identical to plain
+//! greedy decode).
+//!
+//! The built-in proposer is **prompt-lookup decoding** (n-gram suffix
+//! matching against the sequence's own history): free of any extra model,
+//! zero-weight, and effective exactly on the repetitive continuations —
+//! structured output, quoted context, code — where serving wants the
+//! speedup most. A learned drafter would slot in behind the same
+//! [`DraftSource`] trait.
+
+#![deny(missing_docs)]
+
+/// A proposer of draft tokens for speculative decoding.
+pub trait DraftSource {
+    /// Propose up to `k` draft continuations of `history` (prompt followed
+    /// by every token generated so far) into `out` (cleared first).
+    /// Returning fewer than `k` tokens — or none — is fine: the scheduler
+    /// shrinks the verify batch, or falls back to plain decode.
+    fn propose(&mut self, history: &[i32], k: usize, out: &mut Vec<i32>);
+}
+
+/// Prompt-lookup drafting: find the longest recent n-gram suffix of the
+/// history that occurred earlier, and propose the tokens that followed that
+/// earlier occurrence. Matches are tried longest-n first and most-recent
+/// occurrence first.
+#[derive(Debug, Clone)]
+pub struct PromptLookupDraft {
+    /// Longest suffix n-gram to match (tried first; 1 = plain bigram
+    /// lookup).
+    max_ngram: usize,
+}
+
+impl PromptLookupDraft {
+    /// A proposer matching suffixes up to `max_ngram` tokens (clamped to at
+    /// least 1).
+    pub fn new(max_ngram: usize) -> PromptLookupDraft {
+        PromptLookupDraft { max_ngram: max_ngram.max(1) }
+    }
+}
+
+impl Default for PromptLookupDraft {
+    /// The serving default: trigram suffix matching.
+    fn default() -> PromptLookupDraft {
+        PromptLookupDraft::new(3)
+    }
+}
+
+impl DraftSource for PromptLookupDraft {
+    fn propose(&mut self, history: &[i32], k: usize, out: &mut Vec<i32>) {
+        out.clear();
+        let len = history.len();
+        if k == 0 || len < 2 {
+            return;
+        }
+        // n is capped at len - 1 so a match site always has at least one
+        // continuation token to propose.
+        for n in (1..=self.max_ngram.min(len - 1)).rev() {
+            let suffix = &history[len - n..];
+            for i in (0..len - n).rev() {
+                if &history[i..i + n] == suffix {
+                    out.extend(history[i + n..].iter().take(k));
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn propose(hist: &[i32], k: usize) -> Vec<i32> {
+        let mut d = PromptLookupDraft::new(3);
+        let mut out = Vec::new();
+        d.propose(hist, k, &mut out);
+        out
+    }
+
+    #[test]
+    fn repeating_pattern_is_predicted_from_its_last_occurrence() {
+        // ... 1 2 3 4 | 1 2 → the trigram fails, the bigram [1, 2] matches
+        // at the front and proposes its continuation [3, 4].
+        assert_eq!(propose(&[1, 2, 3, 4, 1, 2], 2), vec![3, 4]);
+        // shorter k truncates the proposal, not the match
+        assert_eq!(propose(&[1, 2, 3, 4, 1, 2], 1), vec![3]);
+    }
+
+    #[test]
+    fn longest_ngram_wins_over_a_shorter_more_recent_match() {
+        // suffix [7, 8, 9]: the trigram at position 0 continues with 5;
+        // the bigram [8, 9] also occurs later (positions 1..3 continue with
+        // 6) but the longer match must take precedence.
+        let h = [7, 8, 9, 5, 8, 9, 6, 7, 8, 9];
+        assert_eq!(propose(&h, 1), vec![5]);
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins_within_one_ngram_length() {
+        // suffix [2]: occurs at positions 0 (→ 5) and 2 (→ 9); the later
+        // occurrence is the better local model.
+        assert_eq!(propose(&[2, 5, 2, 9, 2], 1), vec![9]);
+    }
+
+    #[test]
+    fn no_match_or_degenerate_history_proposes_nothing() {
+        assert!(propose(&[1, 2, 3, 4], 2).is_empty(), "no repeated suffix");
+        assert!(propose(&[5], 2).is_empty(), "too short to match");
+        assert!(propose(&[], 2).is_empty());
+        assert!(propose(&[1, 2, 1, 2], 0).is_empty(), "k = 0");
+    }
+
+    #[test]
+    fn chain_model_histories_are_eventually_predictable() {
+        // The mock/native test model is t → (7t + 13) mod V: eventually
+        // periodic, so once the cycle repeats, lookup predicts it exactly —
+        // the property the speculative bench leans on for acceptance.
+        let mut h = vec![3i32];
+        for _ in 0..64 {
+            let prev = *h.last().unwrap();
+            h.push((prev * 7 + 13).rem_euclid(32));
+        }
+        let got = propose(&h, 4);
+        assert_eq!(got.len(), 4);
+        let mut prev = *h.last().unwrap();
+        for &t in &got {
+            let want = (prev * 7 + 13).rem_euclid(32);
+            assert_eq!(t, want, "cycle continuation must be exact");
+            prev = t;
+        }
+    }
+}

@@ -220,6 +220,33 @@ struct CachedPage {
     tokens: Vec<i32>,
 }
 
+/// A live speculative fork of one slot's page table
+/// ([`KvCacheManager::fork_slot`]). The fork holds one extra reference on
+/// every base page, which is what makes speculation rollback-safe: any
+/// append into the base tail sees `ref >= 2` and copies-on-write instead of
+/// mutating (or unpublishing) the shared page, so
+/// [`KvCacheManager::commit_fork`] can always restore the base table
+/// bit-exactly. Must be resolved with `commit_fork` — dropping it without
+/// committing leaks the held references.
+#[derive(Debug)]
+pub struct SlotFork {
+    slot: usize,
+    base_table: Vec<PageId>,
+    base_len: usize,
+}
+
+impl SlotFork {
+    /// The forked slot.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Committed logical length at fork time.
+    pub fn base_len(&self) -> usize {
+        self.base_len
+    }
+}
+
 /// The paged-KV cache manager: page pool, per-slot tables, prefix cache,
 /// LRU clock and admission reservations. Owned by the scheduler; backends
 /// only ever see the borrowed [`KvStepView`].
@@ -506,19 +533,92 @@ impl KvCacheManager {
     pub fn free_slot(&mut self, slot: usize) {
         let table = std::mem::take(&mut self.tables.tables[slot]);
         for page in table {
-            self.ref_count[page] -= 1;
-            if self.ref_count[page] == 0 {
-                if self.page_key[page].is_some() {
-                    self.tick += 1;
-                    self.last_use[page] = self.tick;
-                } else {
-                    self.free.push(page);
-                }
-            }
+            self.release_page(page);
         }
         self.tables.lens[slot] = 0;
         self.reserved_total -= self.reserved[slot];
         self.reserved[slot] = 0;
+    }
+
+    /// Drop one reference to `page`. On the last reference, published pages
+    /// move to the zero-ref cached state (LRU clock touched), unpublished
+    /// pages return to the free list.
+    fn release_page(&mut self, page: PageId) {
+        self.ref_count[page] -= 1;
+        if self.ref_count[page] == 0 {
+            if self.page_key[page].is_some() {
+                self.tick += 1;
+                self.last_use[page] = self.tick;
+            } else {
+                self.free.push(page);
+            }
+        }
+    }
+
+    /// Begin a speculative episode on `slot`: snapshot its table and take
+    /// one extra reference on every base page.
+    ///
+    /// The extra references are the correctness mechanism, not just
+    /// bookkeeping: they force `ref >= 2` on the base tail, so a
+    /// speculative [`KvCacheManager::append_token`] always diverges onto a
+    /// copy-on-write page instead of taking the sole-owner
+    /// unpublish-and-extend fast path. Without them, speculating on a slot
+    /// whose published tail had exactly one reference would destroy the
+    /// prefix-cache entry in place — unrecoverable on rollback (see the
+    /// `speculative_fork_never_unpublishes_a_sole_owner_tail` regression
+    /// test).
+    ///
+    /// At most one fork should be live at a time (the scheduler speculates
+    /// per-slot, sequentially): the transient pool cost of a fork is the
+    /// base pages it pins plus the COW divergence page, and the caller must
+    /// pre-check [`KvCacheManager::pages_available`] against that need
+    /// before forking (falling back to plain decode otherwise) to keep
+    /// reservation-gated allocation infallible for everyone else.
+    pub fn fork_slot(&mut self, slot: usize) -> SlotFork {
+        let base_table = self.tables.tables[slot].clone();
+        for &page in &base_table {
+            self.ref_count[page] += 1;
+        }
+        SlotFork { slot, base_table, base_len: self.tables.lens[slot] }
+    }
+
+    /// Resolve a fork: keep the first `accept` speculative positions and
+    /// roll everything after them back.
+    ///
+    /// `accept == 0` restores the base table bit-exactly (full rollback);
+    /// otherwise the committed table is the current table truncated to
+    /// cover `base_len + accept` positions. Uses add-then-release
+    /// refcounting — references on the final table are added before the
+    /// current-table and fork-held references are released — so pages
+    /// shared between base, current and final tables never transit through
+    /// zero, and rejected-tail pages (COW divergence pages, speculative
+    /// boundary pages) go back to the pool the moment they lose their last
+    /// reference. Any copies still pending must be taken by the caller
+    /// *before* committing a rollback ([`KvCacheManager::take_copies`]):
+    /// a freed dst page must never receive a late backend copy.
+    pub fn commit_fork(&mut self, fork: SlotFork, accept: usize) {
+        let SlotFork { slot, base_table, base_len } = fork;
+        debug_assert!(base_len + accept <= self.tables.lens[slot],
+                      "accepting more positions than were speculated");
+        let final_len = base_len + accept;
+        let final_table: Vec<PageId> = if accept == 0 {
+            base_table.clone()
+        } else {
+            let pages = final_len.div_ceil(self.page_tokens);
+            self.tables.tables[slot][..pages].to_vec()
+        };
+        for &page in &final_table {
+            self.ref_count[page] += 1;
+        }
+        let current = std::mem::replace(&mut self.tables.tables[slot],
+                                        final_table);
+        for page in current {
+            self.release_page(page);
+        }
+        for page in base_table {
+            self.release_page(page);
+        }
+        self.tables.lens[slot] = final_len;
     }
 
     /// Is this prefix currently resident in the cache? (Test/introspection
@@ -760,5 +860,160 @@ mod tests {
         let st = m.allocate_prompt(0, &[1, 2, 3, 4]).unwrap();
         assert_eq!(st.shared_hits, 0, "colliding entry must not be shared");
         assert_eq!(st.pages_allocated, 1);
+    }
+
+    #[test]
+    fn fork_then_accept_all_commits_the_speculated_tail() {
+        let mut m = mgr(4, 8, 1);
+        let prompt = [1i32, 2, 3, 4, 5, 6]; // partial tail: 2 of 4
+        assert!(m.try_reserve(0, 16));
+        m.allocate_prompt(0, &prompt).unwrap();
+        let fork = m.fork_slot(0);
+        // pos 6: in-page, fork-pinned tail → COW; pos 7: in-place on the
+        // fresh page; pos 8: page boundary → plain allocation.
+        let st = m.append_token(0).unwrap();
+        assert_eq!(st.cow_copies, 1);
+        m.append_token(0).unwrap();
+        let st = m.append_token(0).unwrap();
+        assert_eq!(st.cow_copies, 0);
+        assert_eq!(m.tables().copies().len(), 1);
+        m.take_copies(); // "backend applied the copy"
+        m.commit_fork(fork, 3);
+        assert_eq!(m.tables().len(0), 9);
+        assert_eq!(m.tables().tables[0].len(), 3);
+        assert_eq!(m.pages_in_use(), 3);
+        assert!(m.prefix_cached(&prompt),
+                "divergence went to the COW page; the prompt stays cached");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_then_reject_at_each_position_restores_and_leaks_nothing() {
+        for accept in 0..=3usize {
+            let mut m = mgr(4, 8, 1);
+            let prompt = [1i32, 2, 3, 4, 5, 6];
+            assert!(m.try_reserve(0, 16));
+            m.allocate_prompt(0, &prompt).unwrap();
+            let base_table = m.tables().tables[0].clone();
+            let fork = m.fork_slot(0);
+            for _ in 0..3 {
+                m.append_token(0).unwrap();
+            }
+            m.take_copies();
+            m.commit_fork(fork, accept);
+            assert_eq!(m.tables().len(0), 6 + accept, "accept={accept}");
+            assert_eq!(m.pages_in_use(), (6 + accept).div_ceil(4),
+                       "accept={accept}: rejected tail pages must be freed");
+            if accept == 0 {
+                assert_eq!(m.tables().tables[0], base_table,
+                           "full rollback restores the base table exactly");
+            }
+            assert!(m.prefix_cached(&prompt), "accept={accept}");
+            m.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn fork_under_pool_exhaustion_fails_clean_and_rolls_back() {
+        // Every pool page is referenced: the scheduler's pre-fork
+        // `pages_available()` check reads 0 and it must fall back to plain
+        // decode. If speculation were forced anyway, the COW allocation
+        // errors *cleanly* (no state mutated, no deadlock) and rollback
+        // restores the base — never leaking a page.
+        let mut m = mgr(4, 2, 1);
+        let prompt = [1i32, 2, 3, 4, 5, 6];
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &prompt).unwrap();
+        assert_eq!(m.pages_available(), 0);
+        let base_table = m.tables().tables[0].clone();
+        let fork = m.fork_slot(0);
+        assert!(m.append_token(0).is_err(),
+                "COW with an exhausted pool must error, not hang");
+        assert_eq!(m.tables().len(0), 6, "failed append mutates nothing");
+        m.take_copies();
+        m.commit_fork(fork, 0);
+        assert_eq!(m.tables().tables[0], base_table);
+        assert!(m.prefix_cached(&prompt));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_refs_pin_pages_against_eviction_until_rollback() {
+        let mut m = mgr(2, 2, 2);
+        // Publish A and finish it → zero-ref cached, evictable.
+        assert!(m.try_reserve(0, 2));
+        m.allocate_prompt(0, &[1, 2]).unwrap();
+        m.free_slot(0);
+        assert_eq!(m.pages_cached(), 1);
+        // Re-share, then fork: the page is referenced → off the LRU menu.
+        assert!(m.try_reserve(0, 2));
+        assert_eq!(m.allocate_prompt(0, &[1, 2]).unwrap().shared_hits, 1);
+        let fork = m.fork_slot(0);
+        assert_eq!(m.pages_cached(), 0,
+                   "a fork-pinned page must not be evictable");
+        m.commit_fork(fork, 0);
+        m.free_slot(0);
+        assert_eq!(m.pages_cached(), 1,
+                   "rollback + free make it evictable again");
+        // ...and pressure evicts it through the normal LRU path.
+        assert!(m.try_reserve(1, 4));
+        let st = m.allocate_prompt(1, &[5, 6, 7, 8]).unwrap();
+        assert_eq!(st.evictions, 1);
+        assert!(!m.prefix_cached(&[1, 2]));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn speculative_fork_never_unpublishes_a_sole_owner_tail() {
+        // THE refcount hazard the fork API exposes: slot 0 is the *sole
+        // owner* of its published partial tail. A plain decode append
+        // takes the unpublish-and-extend fast path (fine: the extension is
+        // permanent). A *speculative* append must not — unpublishing
+        // destroys the cache entry in place, and a rollback could not
+        // restore it. The fork's extra base reference forces `ref >= 2`,
+        // so the append diverges onto a COW page instead; before that fix
+        // this test failed with the prompt gone from the prefix cache.
+        let mut m = mgr(4, 8, 1);
+        let prompt = [1i32, 2, 3, 4, 5, 6]; // partial tail: 2 of 4
+        assert!(m.try_reserve(0, 12));
+        m.allocate_prompt(0, &prompt).unwrap();
+        assert!(m.prefix_cached(&prompt));
+        let base_table = m.tables().tables[0].clone();
+        let fork = m.fork_slot(0);
+        let st = m.append_token(0).unwrap();
+        assert_eq!(st.cow_copies, 1,
+                   "a forked tail must diverge, never extend in place");
+        m.take_copies(); // reject path: drop the pending copy first
+        m.commit_fork(fork, 0);
+        assert_eq!(m.tables().tables[0], base_table);
+        assert_eq!(m.tables().len(0), 6);
+        assert!(m.prefix_cached(&prompt),
+                "publication must survive a rolled-back speculation");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn accepted_speculation_keeps_the_shared_prefix_intact() {
+        let mut m = mgr(4, 12, 3);
+        let prompt = [7i32, 8, 9, 10, 11, 12];
+        assert!(m.try_reserve(0, 12));
+        m.allocate_prompt(0, &prompt).unwrap();
+        assert!(m.try_reserve(1, 8));
+        m.allocate_prompt(1, &prompt).unwrap();
+        let shared_tail = *m.tables().tables[1].last().unwrap();
+        let fork = m.fork_slot(0);
+        for _ in 0..3 {
+            m.append_token(0).unwrap();
+        }
+        m.take_copies();
+        m.commit_fork(fork, 2); // accept 2 of 3
+        assert_eq!(m.tables().len(0), 8);
+        assert_eq!(*m.tables().tables[1].last().unwrap(), shared_tail,
+                   "the sharer's view never moved");
+        assert!(m.prefix_cached(&prompt));
+        // a third identical prompt still shares every prompt page
+        assert!(m.try_reserve(2, 8));
+        assert_eq!(m.allocate_prompt(2, &prompt).unwrap().shared_hits, 2);
+        m.check_invariants().unwrap();
     }
 }

@@ -4,6 +4,7 @@
 //! front-end.
 
 pub mod backend;
+pub mod draft;
 pub mod kvcache;
 pub mod native;
 pub mod request;
@@ -11,9 +12,11 @@ pub mod scheduler;
 pub mod server;
 
 pub use backend::{BackendDims, EngineBackend, MockBackend, ModelBackend};
+pub use draft::{DraftSource, PromptLookupDraft};
 pub use kvcache::{KvCacheConfig, KvCacheManager, KvChoice, KvStepView,
-                  PageTables, KV_PAGE_TOKENS_DEFAULT};
+                  PageTables, SlotFork, KV_PAGE_TOKENS_DEFAULT};
 pub use native::{NativeBackend, Precision};
 pub use request::{FinishReason, Request, RequestId, RequestOutput};
-pub use scheduler::Scheduler;
-pub use server::{start, start_kv, start_with, start_with_kv, ServerHandle};
+pub use scheduler::{replay_scenario, Scheduler};
+pub use server::{start, start_kv, start_with, start_with_kv,
+                 start_with_kv_speculative, ServerHandle};

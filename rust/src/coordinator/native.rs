@@ -13,8 +13,10 @@
 //! benches run the quantized workload next to f32/f16 with no other change.
 //!
 //! **Zero-repack steady state.** Both precisions pre-pack the head into the
-//! mmt4d RHS layout per serving phase at construction (sharing one buffer
-//! when the phases pack identically), and every per-call buffer — the
+//! mmt4d RHS layout per serving phase at construction — prefill, decode and
+//! the speculative-decoding *verify* phase (a short M = k+1 GEMM scoring a
+//! drafted token run in one pass) — sharing one buffer whenever phases pack
+//! identically, and every per-call buffer — the
 //! embedding-gather staging row, the packed LHS, the packed accumulator,
 //! the int8 path's quantized activations and row scales — lives in a
 //! per-backend [`ukernel::scratch`] arena. A steady-state decode step
@@ -90,17 +92,25 @@ pub struct NativeBackend {
     /// pack identically whenever their (N0, K0) agree — M0 never enters an
     /// RHS pack).
     head4_decode: Option<Vec<F16>>,
+    /// Verify-tile f16 prepack; `None` shares whichever of the other two
+    /// phases packs with the same (N0, K0) — the static verify tile shares
+    /// the prefill strip width by design, so speculative serving adds no
+    /// third weight copy.
+    head4_verify: Option<Vec<F16>>,
     /// Quantized head: scale + RHS pre-packed per phase (empty / `None`
-    /// shares as above; both empty in F16 mode).
+    /// shares as above; all empty in F16 mode).
     head_scale: quant::QuantParams,
     head_q_prefill: Vec<i8>,
     head_q_decode: Option<Vec<i8>>,
+    head_q_verify: Option<Vec<i8>>,
     prefill_tile: Tile,
     decode_tile: Tile,
+    verify_tile: Tile,
     /// Cache blocking of the serving mmt4d walks, per phase (tuned profile
     /// entry or the static default; never changes bits).
     prefill_blocking: Blocking,
     decode_blocking: Blocking,
+    verify_blocking: Blocking,
     /// Embedding-gather staging rows, reused across calls (f16 path).
     stage_f16: scratch::Buf<F16>,
     /// Embedding-gather staging rows, widened for quantization (int8 path).
@@ -155,15 +165,24 @@ impl NativeBackend {
         };
         let prefill_tile = tiles.select(arch, Phase::Prefill, elem, threads)?;
         let decode_tile = tiles.select(arch, Phase::Decode, elem, threads)?;
+        let verify_tile = tiles.select(arch, Phase::Verify, elem, threads)?;
         let prefill_blocking =
             tiles.select_blocking(arch, Phase::Prefill, elem, threads);
         let decode_blocking =
             tiles.select_blocking(arch, Phase::Decode, elem, threads);
+        let verify_blocking =
+            tiles.select_blocking(arch, Phase::Verify, elem, threads);
         // An RHS prepack depends only on (N0, K0): when the decode tile
         // packs like the prefill tile the phases share one buffer instead
-        // of packing twice into identical copies.
+        // of packing twice into identical copies. The verify tile likewise
+        // shares any already-packed strip width (the static selection packs
+        // like prefill on purpose).
         let phases_share_rhs = (prefill_tile.n0, prefill_tile.k0)
             == (decode_tile.n0, decode_tile.k0);
+        let verify_shares_rhs = (verify_tile.n0, verify_tile.k0)
+            == (prefill_tile.n0, prefill_tile.k0)
+            || (verify_tile.n0, verify_tile.k0)
+                == (decode_tile.n0, decode_tile.k0);
 
         let mut rng = Rng::new(seed);
         let embed: Vec<F16> = (0..vocab * d_model)
@@ -187,8 +206,8 @@ impl NativeBackend {
         // packs the quantized head; F16 packs the f16 head directly. The
         // raw [D, V] head is dropped either way — serving only ever touches
         // the packed copies.
-        let (head4_prefill, head4_decode, head_scale, head_q_prefill,
-             head_q_decode) = match precision {
+        let (head4_prefill, head4_decode, head4_verify, head_scale,
+             head_q_prefill, head_q_decode, head_q_verify) = match precision {
             Precision::Int8 => {
                 let (head_q, scale) = quant::quantize_f16(&head);
                 let q_prefill = quant::pack_quant_rhs(
@@ -200,7 +219,14 @@ impl NativeBackend {
                                                decode_tile.n0,
                                                decode_tile.k0))
                 };
-                (Vec::new(), None, scale, q_prefill, q_decode)
+                let q_verify = if verify_shares_rhs {
+                    None
+                } else {
+                    Some(quant::pack_quant_rhs(&head_q, d_model, vocab,
+                                               verify_tile.n0,
+                                               verify_tile.k0))
+                };
+                (Vec::new(), None, None, scale, q_prefill, q_decode, q_verify)
             }
             Precision::F16 => {
                 let h_prefill = ukernel::prepack_rhs_f16(
@@ -212,8 +238,15 @@ impl NativeBackend {
                                                   decode_tile.n0,
                                                   decode_tile.k0))
                 };
-                (h_prefill, h_decode, quant::QuantParams { scale: 1.0 },
-                 Vec::new(), None)
+                let h_verify = if verify_shares_rhs {
+                    None
+                } else {
+                    Some(ukernel::prepack_rhs_f16(&head, d_model, vocab,
+                                                  verify_tile.n0,
+                                                  verify_tile.k0))
+                };
+                (h_prefill, h_decode, h_verify,
+                 quant::QuantParams { scale: 1.0 }, Vec::new(), None, None)
             }
         };
 
@@ -225,13 +258,17 @@ impl NativeBackend {
             embed,
             head4_prefill,
             head4_decode,
+            head4_verify,
             head_scale,
             head_q_prefill,
             head_q_decode,
+            head_q_verify,
             prefill_tile,
             decode_tile,
+            verify_tile,
             prefill_blocking,
             decode_blocking,
+            verify_blocking,
             stage_f16: scratch::Buf::new(),
             stage_f32: scratch::Buf::new(),
             scratch: Scratch::new(),
@@ -290,6 +327,11 @@ impl NativeBackend {
         (self.prefill_tile, self.decode_tile)
     }
 
+    /// The tile the speculative verify batches run on.
+    pub fn verify_tile(&self) -> Tile {
+        self.verify_tile
+    }
+
     /// The (prefill, decode) cache blockings the serving walks use.
     pub fn blockings(&self) -> (Blocking, Blocking) {
         (self.prefill_blocking, self.decode_blocking)
@@ -328,7 +370,12 @@ impl NativeBackend {
         let (tile, blk) = match phase {
             Phase::Prefill => (self.prefill_tile, self.prefill_blocking),
             Phase::Decode => (self.decode_tile, self.decode_blocking),
+            Phase::Verify => (self.verify_tile, self.verify_blocking),
         };
+        // Which (N0, K0)-determined pack a sharing verify tile rides on.
+        let verify_packs_like_prefill = (self.verify_tile.n0,
+                                         self.verify_tile.k0)
+            == (self.prefill_tile.n0, self.prefill_tile.k0);
         match self.precision {
             Precision::F16 => {
                 let stage = self.stage_f16.take(rows * d);
@@ -342,6 +389,16 @@ impl NativeBackend {
                         .head4_decode
                         .as_deref()
                         .unwrap_or(self.head4_prefill.as_slice()),
+                    Phase::Verify => match &self.head4_verify {
+                        Some(own) => own.as_slice(),
+                        None if verify_packs_like_prefill => {
+                            self.head4_prefill.as_slice()
+                        }
+                        None => self
+                            .head4_decode
+                            .as_deref()
+                            .unwrap_or(self.head4_prefill.as_slice()),
+                    },
                 };
                 ukernel::matmul_prepacked_rhs_f16_into(
                     stage, rhs4, rows, d, v, tile.m0, tile.n0, tile.k0, blk,
@@ -361,6 +418,16 @@ impl NativeBackend {
                         .head_q_decode
                         .as_deref()
                         .unwrap_or(self.head_q_prefill.as_slice()),
+                    Phase::Verify => match &self.head_q_verify {
+                        Some(own) => own.as_slice(),
+                        None if verify_packs_like_prefill => {
+                            self.head_q_prefill.as_slice()
+                        }
+                        None => self
+                            .head_q_decode
+                            .as_deref()
+                            .unwrap_or(self.head_q_prefill.as_slice()),
+                    },
                 };
                 // Row-wise activation scales: a request's logits must not
                 // depend on which other requests share the batch.
@@ -482,6 +549,52 @@ impl ModelBackend for NativeBackend {
         }
         self.logits_into(tokens, Phase::Decode, out);
         Ok(())
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn verify_into(&mut self, slot: usize, tokens: &[i32], pos: &[i32],
+                   kv: KvStepView<'_>, out: &mut Vec<f32>) -> Result<()> {
+        anyhow::ensure!(!tokens.is_empty() && tokens.len() == pos.len(),
+                        "verify takes matching, non-empty token/pos rows");
+        anyhow::ensure!(slot < self.live.len(), "slot {slot} out of range");
+        self.ensure_store(&kv);
+        self.apply_kv_copies(&kv);
+        for (j, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
+            let p = p as usize;
+            anyhow::ensure!(p < self.dims.max_seq, "verify pos out of cache");
+            anyhow::ensure!(j == 0 || p == pos[j - 1] as usize + 1,
+                            "verify positions must be consecutive");
+            match kv {
+                KvStepView::Slab => {
+                    if self.live[slot].len() <= p {
+                        self.live[slot].resize(p + 1, 0);
+                    }
+                    self.live[slot][p] = t;
+                }
+                KvStepView::Paged(pt) => {
+                    // Unlike a decode PAD lane, every verify position was
+                    // appended to the fork's table by the scheduler before
+                    // this call — an unmapped position is a bug, not a
+                    // skippable lane.
+                    let phys = pt.resolve(slot, p).ok_or_else(|| {
+                        anyhow::anyhow!("verify pos {p} not mapped")
+                    })?;
+                    self.store[phys] = t;
+                }
+            }
+        }
+        self.logits_into(tokens, Phase::Verify, out);
+        Ok(())
+    }
+
+    fn truncate_slot(&mut self, slot: usize, len: usize) {
+        // Slab rollback of rejected speculative positions; in paged mode
+        // the page-table commit already hides them (writes beyond a table's
+        // len never resolve), so there is nothing to unwind here.
+        self.live[slot].truncate(len);
     }
 }
 
@@ -684,9 +797,13 @@ mod tests {
                 4, 8, 32, 128, 64, p, 42, &reg, 1).unwrap();
             let packs = scratch::stats().delta_since(base).rhs_packs;
             assert_eq!(packs, 1, "{p:?}: equal-tile phases must pack once");
+            // ... and the verify phase (static fallback: the prefill strip
+            // width) rides the same single pack.
             match p {
-                Precision::F16 => assert!(shared.head4_decode.is_none()),
-                Precision::Int8 => assert!(shared.head_q_decode.is_none()),
+                Precision::F16 => assert!(shared.head4_decode.is_none()
+                                          && shared.head4_verify.is_none()),
+                Precision::Int8 => assert!(shared.head_q_decode.is_none()
+                                           && shared.head_q_verify.is_none()),
             }
             // The default static tiles differ per phase -> two packs, and
             // the shared and unshared backends still agree bit-for-bit on
@@ -702,6 +819,85 @@ mod tests {
                 4, 8, 32, 128, 64, p, 42, &reg, 1).unwrap();
             assert_eq!(a.decode(&[1, 2, 3, 4], &[1; 4]).unwrap(),
                        bb.decode(&[1, 2, 3, 4], &[1; 4]).unwrap());
+        }
+    }
+
+    #[test]
+    fn verify_rows_bit_match_decode_logits() {
+        // The speculative bit-exactness keystone at the backend level: a
+        // verify pass over [t0..tk] produces, row for row, exactly the
+        // logits a plain decode of each token produces. The verify tile's
+        // M0 differs from decode's, but K0 = 1 keeps the K-accumulation
+        // order identical, so the bits cannot move.
+        for p in [Precision::F16, Precision::Int8] {
+            let mut b = backend(p);
+            b.prefill(&vec![3i32; 4 * 8]).unwrap();
+            b.commit_slots(&[0]).unwrap();
+            let toks = [9i32, 8, 7];
+            let mut vout = Vec::new();
+            b.verify_into(0, &toks, &[8, 9, 10], KvStepView::Slab, &mut vout)
+                .unwrap();
+            assert_eq!(vout.len(), 3 * 128, "{p:?}");
+            for (j, &t) in toks.iter().enumerate() {
+                let d = b.decode(&[t, 0, 0, 0], &[11, 0, 0, 0]).unwrap();
+                assert_eq!(&vout[j * 128..][..128], &d[..128],
+                           "{p:?}: verify row {j} diverged from decode");
+            }
+        }
+    }
+
+    #[test]
+    fn verify_writes_commit_and_truncate_unwinds_rejections() {
+        let mut b = backend(Precision::F16);
+        b.prefill(&vec![3i32; 4 * 8]).unwrap();
+        b.commit_slots(&[0]).unwrap();
+        let mut out = Vec::new();
+        b.verify_into(0, &[21, 22, 23], &[8, 9, 10], KvStepView::Slab,
+                      &mut out)
+            .unwrap();
+        let h = b.gather_history(0, KvStepView::Slab);
+        assert_eq!(h.len(), 11);
+        assert_eq!(&h[8..], &[21, 22, 23]);
+        // reject the last two speculated tokens: roll the slab back to the
+        // accepted prefix, exactly like the scheduler's fork rollback
+        b.truncate_slot(0, 9);
+        let mut want = vec![3i32; 8];
+        want.push(21);
+        assert_eq!(b.gather_history(0, KvStepView::Slab), want);
+        // non-consecutive positions are a contract violation
+        assert!(b.verify_into(0, &[1, 2], &[9, 11], KvStepView::Slab,
+                              &mut out)
+            .is_err());
+        assert!(b.verify_into(0, &[], &[], KvStepView::Slab, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn steady_state_verify_zero_rhs_packs_zero_allocs() {
+        // The verify phase rides a construction-time prepack and the same
+        // arenas as decode: once one k+1-row pass has grown the staging
+        // shape, repeated verify passes pack nothing and allocate nothing —
+        // the property ci.sh asserts over `serve --speculative`.
+        for p in [Precision::F16, Precision::Int8] {
+            let mut b = backend(p);
+            let mut out = Vec::new();
+            b.prefill_into(&vec![3i32; 4 * 8], KvStepView::Slab, &mut out)
+                .unwrap();
+            b.commit_slots(&[0]).unwrap();
+            b.verify_into(0, &[1, 2, 3, 4], &[8, 9, 10, 11],
+                          KvStepView::Slab, &mut out)
+                .unwrap();
+            b.truncate_slot(0, 8);
+            let base = scratch::stats();
+            for step in 0..8 {
+                b.verify_into(0, &[5 + step, 6, 7, 8], &[8, 9, 10, 11],
+                              KvStepView::Slab, &mut out)
+                    .unwrap();
+                b.truncate_slot(0, 8);
+            }
+            let d = scratch::stats().delta_since(base);
+            assert_eq!(d.rhs_packs, 0, "{p:?}: verify re-packed weights");
+            assert_eq!(d.allocs, 0, "{p:?}: verify grew the scratch arena");
         }
     }
 

@@ -15,6 +15,12 @@ pub struct Request {
     pub sampling: SamplingParams,
     /// Stop generation at this token (besides max_new_tokens).
     pub eos_token: Option<u32>,
+    /// Per-request speculative-decoding draft length: propose up to `k`
+    /// draft tokens per step and verify them in one batched pass. `None`
+    /// inherits the scheduler default (`--speculative`); `Some(0)` forces
+    /// plain decode. Only greedy sampling speculates — emitted tokens are
+    /// bit-identical to plain greedy decode either way.
+    pub speculative_k: Option<usize>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -20,10 +20,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::backend::ModelBackend;
+use super::draft::{DraftSource, PromptLookupDraft};
 use super::kvcache::{KvCacheManager, KvChoice, KvStepView};
 use super::request::{FinishReason, Request, RequestId, RequestOutput,
                      RequestTiming};
-use crate::llm::{sample, PAD};
+use crate::llm::{argmax, sample, SamplingParams, PAD};
 use crate::metrics::ServingMetrics;
 use crate::util::prng::Rng;
 
@@ -51,12 +52,25 @@ pub struct Scheduler<B: ModelBackend> {
     /// Paged KV-cache manager (`None` = slab layout): page pool, tables,
     /// prefix cache and admission reservations.
     kv: Option<KvCacheManager>,
+    /// Scheduler-default speculative draft length (`--speculative`; 0 =
+    /// off). Per-request `Request::speculative_k` overrides it.
+    speculative_default: usize,
+    /// Draft proposer for speculative decoding (prompt-lookup by default).
+    draft: Box<dyn DraftSource + Send>,
     // Reusable step buffers (`*_into` backend calls): the serve loop's own
     // contribution to the zero-allocation steady state — token/pos staging
     // and the logits buffer are built once and recycled every step.
     logits: Vec<f32>,
     step_tokens: Vec<i32>,
     step_pos: Vec<i32>,
+    // Speculative-step scratch, same recycling discipline: history and
+    // draft staging for the proposer, token/pos rows for the verify batch,
+    // and the per-step "already advanced by a verify pass" slot marks.
+    draft_hist: Vec<i32>,
+    draft_buf: Vec<i32>,
+    verify_tokens: Vec<i32>,
+    verify_pos: Vec<i32>,
+    step_advanced: Vec<bool>,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
@@ -93,15 +107,35 @@ impl<B: ModelBackend> Scheduler<B> {
             rng: Rng::new(seed),
             queue_capacity,
             kv,
+            speculative_default: 0,
+            draft: Box::new(PromptLookupDraft::default()),
             logits: Vec::new(),
             step_tokens: Vec::new(),
             step_pos: Vec::new(),
+            draft_hist: Vec::new(),
+            draft_buf: Vec::new(),
+            verify_tokens: Vec::new(),
+            verify_pos: Vec::new(),
+            step_advanced: Vec::new(),
         }
     }
 
     /// The backend being served (introspection for tests and benches).
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// Set the scheduler-default speculative draft length (`--speculative`;
+    /// 0 disables). Engages only for greedy requests on a backend that
+    /// supports [`ModelBackend::verify_into`]; emitted token streams are
+    /// bit-identical to plain greedy decode at any setting.
+    pub fn set_speculative(&mut self, k: usize) {
+        self.speculative_default = k;
+    }
+
+    /// Replace the draft proposer (tests / alternative drafters).
+    pub fn set_draft_source(&mut self, draft: Box<dyn DraftSource + Send>) {
+        self.draft = draft;
     }
 
     /// The KV view the next backend call would receive (slab when paged
@@ -294,25 +328,56 @@ impl<B: ModelBackend> Scheduler<B> {
         if self.active_count() == 0 {
             return Ok(());
         }
+        // Speculative sub-steps first, one slot at a time. Sequential
+        // episodes mean at most one page-table fork is ever live, so the
+        // transient pool cost (fork-pinned base pages + one COW page) is
+        // bounded and pre-checked — the reservation-soundness argument for
+        // every other sequence's plain append is untouched.
+        self.step_advanced.clear();
+        self.step_advanced.resize(dims.batch, false);
+        if self.backend.supports_verify() {
+            for i in 0..dims.batch {
+                let k = self.slot_speculation_k(i, dims.max_seq);
+                if k > 0 && self.speculative_step(i, k)? {
+                    self.step_advanced[i] = true;
+                }
+            }
+        }
         self.step_tokens.clear();
         self.step_tokens.resize(dims.batch, PAD as i32);
         self.step_pos.clear();
         self.step_pos.resize(dims.batch, 0);
+        let mut any_plain = false;
         for (i, slot) in self.slots.iter().enumerate() {
             if let Some(seq) = slot {
-                self.step_tokens[i] = seq.next_token;
-                self.step_pos[i] = seq.pos as i32;
+                if self.step_advanced[i] {
+                    // Already advanced by its verify pass: ride along as a
+                    // neutral PAD lane at its next *uncommitted* position —
+                    // paged backends resolve it to no-write, slab backends
+                    // overwrite that scratch position next step.
+                    self.step_pos[i] = seq.pos as i32;
+                } else {
+                    self.step_tokens[i] = seq.next_token;
+                    self.step_pos[i] = seq.pos as i32;
+                    any_plain = true;
+                }
             } else {
                 self.metrics.idle_slot_steps.inc();
             }
         }
-        // Paged: extend every active sequence's page table by the position
-        // this step writes. Appends may copy-on-write a shared tail (the
-        // copy rides in the view for the backend to apply) and may evict
-        // LRU cached pages — infallible under reservation-gated admission.
+        if !any_plain {
+            // Every active sequence advanced speculatively this iteration.
+            self.sync_kv_gauges();
+            return Ok(());
+        }
+        // Paged: extend every plain-decoding sequence's page table by the
+        // position this step writes. Appends may copy-on-write a shared
+        // tail (the copy rides in the view for the backend to apply) and
+        // may evict LRU cached pages — infallible under reservation-gated
+        // admission.
         if let Some(kv) = &mut self.kv {
             for (i, slot) in self.slots.iter().enumerate() {
-                if slot.is_some() {
+                if slot.is_some() && !self.step_advanced[i] {
                     let st = kv.append_token(i)?;
                     self.metrics.kv_cow_copies.add(st.cow_copies);
                     self.metrics.kv_evictions.add(st.evictions);
@@ -339,6 +404,9 @@ impl<B: ModelBackend> Scheduler<B> {
         self.metrics.decode_steps.inc();
 
         for i in 0..dims.batch {
+            if self.step_advanced[i] {
+                continue;
+            }
             let Some(seq) = &mut self.slots[i] else { continue };
             let row = &self.logits[i * dims.vocab..][..dims.vocab];
             let tok = sample(row, seq.req.sampling, &mut self.rng);
@@ -354,6 +422,174 @@ impl<B: ModelBackend> Scheduler<B> {
         }
         self.sync_kv_gauges();
         Ok(())
+    }
+
+    /// Effective draft length for slot `i` this step, 0 = plain decode.
+    /// Speculation engages only for greedy sampling (a temperature
+    /// sequence's RNG stream would diverge from plain decode); the length
+    /// is clamped so full acceptance can neither overshoot the request's
+    /// `max_new_tokens` budget nor write a position at or past `max_seq`.
+    fn slot_speculation_k(&self, i: usize, max_seq: usize) -> usize {
+        let Some(seq) = &self.slots[i] else { return 0 };
+        if !matches!(seq.req.sampling, SamplingParams::Greedy) {
+            return 0;
+        }
+        let k = seq.req.speculative_k.unwrap_or(self.speculative_default);
+        // Full acceptance emits k+1 tokens; leave room for all of them.
+        let budget = seq.req.max_new_tokens
+            .saturating_sub(seq.generated.len())
+            .saturating_sub(1);
+        // The last verified position is seq.pos + k, and every written
+        // position must stay below max_seq.
+        let cache = (max_seq - 1).saturating_sub(seq.pos);
+        k.min(budget).min(cache)
+    }
+
+    /// One speculative draft/verify episode for slot `i`: propose up to
+    /// `k` draft tokens, fork the slot's page table, feed the committed
+    /// next token plus the drafts through one `verify_into` batch, then
+    /// accept the greedy token at each position while the draft matched —
+    /// rolling the rejected tail back through the fork. Returns false when
+    /// the episode fell back to plain decode (no draft, or no transient
+    /// page headroom) without touching any state.
+    ///
+    /// Emitted tokens are bit-identical to plain greedy decode by
+    /// construction: row `j` of the verify batch depends only on the
+    /// tokens fed at positions `<= pos + j` (causal masking), and a row is
+    /// only consumed when every fed token before it equals what greedy
+    /// decode would have fed.
+    fn speculative_step(&mut self, i: usize, k: usize) -> Result<bool> {
+        let dims = self.backend.dims();
+        {
+            let seq = self.slots[i].as_ref().expect("active slot");
+            self.draft_hist.clear();
+            self.draft_hist.extend(
+                seq.req.prompt[..seq.prompt_len].iter().map(|&t| t as i32));
+            self.draft_hist.extend(seq.generated.iter().map(|&t| t as i32));
+        }
+        self.draft.propose(&self.draft_hist, k, &mut self.draft_buf);
+        let k = k.min(self.draft_buf.len());
+        if k == 0 {
+            self.metrics.spec_fallbacks.inc();
+            return Ok(false);
+        }
+        let (base_len, next_token) = {
+            let seq = self.slots[i].as_ref().expect("active slot");
+            (seq.pos, seq.next_token)
+        };
+        // Paged: pre-check the episode's transient page need — one COW
+        // divergence page when the base tail is partial (the fork's extra
+        // reference forces the copy) plus one fresh page per crossed page
+        // boundary. Falling back here is what keeps mid-decode allocation
+        // infallible for every other admitted sequence.
+        if let Some(kv) = &self.kv {
+            let pt = kv.page_tokens();
+            let need = usize::from(base_len % pt != 0)
+                + (base_len..=base_len + k).filter(|p| p % pt == 0).count();
+            if kv.pages_available() < need {
+                self.metrics.spec_fallbacks.inc();
+                return Ok(false);
+            }
+        }
+        // Fork, then append the k+1 positions the verify batch writes. The
+        // appends cannot fail (headroom pre-checked) but unwind cleanly if
+        // they somehow do.
+        let mut fork = None;
+        if let Some(kv) = &mut self.kv {
+            fork = Some(kv.fork_slot(i));
+            for _ in 0..=k {
+                match kv.append_token(i) {
+                    Ok(st) => {
+                        self.metrics.kv_cow_copies.add(st.cow_copies);
+                        self.metrics.kv_evictions.add(st.evictions);
+                    }
+                    Err(_) => {
+                        kv.take_copies();
+                        kv.commit_fork(fork.take().expect("live fork"), 0);
+                        self.metrics.spec_fallbacks.inc();
+                        return Ok(false);
+                    }
+                }
+            }
+        }
+        self.verify_tokens.clear();
+        self.verify_tokens.push(next_token);
+        self.verify_tokens.extend_from_slice(&self.draft_buf[..k]);
+        self.verify_pos.clear();
+        for j in 0..=k {
+            self.verify_pos.push((base_len + j) as i32);
+        }
+        let t0 = Instant::now();
+        // Same steady-state accounting as the plain decode path: the
+        // verify batch must hit the prepacked verify head — zero weight
+        // packs, zero scratch growth (asserted by `scripts/ci.sh`).
+        let scratch_base = crate::ukernel::scratch::stats();
+        let r = self.backend.verify_into(i, &self.verify_tokens,
+                                         &self.verify_pos,
+                                         kv_step_view(&self.kv),
+                                         &mut self.logits);
+        if let Some(kv) = &mut self.kv {
+            kv.take_copies();
+        }
+        if let Err(e) = r {
+            // Roll back before surfacing the failure: no pages may leak.
+            if let (Some(kv), Some(f)) = (&mut self.kv, fork.take()) {
+                kv.commit_fork(f, 0);
+            }
+            self.backend.truncate_slot(i, base_len);
+            return Err(e);
+        }
+        let sd = crate::ukernel::scratch::stats().delta_since(scratch_base);
+        self.metrics.decode_rhs_packs.add(sd.rhs_packs);
+        self.metrics.decode_scratch_allocs.add(sd.allocs);
+        self.metrics.decode_step_latency.observe(t0.elapsed());
+
+        // Accept the greedy token row by row: stop at the first finish
+        // condition (EOS/Length/CacheFull — exactly where plain decode
+        // would stop) or the first draft mismatch (the following rows were
+        // conditioned on a token greedy decode would never feed).
+        let mut accepted = 0usize;
+        let mut finish = None;
+        for j in 0..=k {
+            let g = argmax(&self.logits[j * dims.vocab..][..dims.vocab]);
+            let seq = self.slots[i].as_mut().expect("active slot");
+            seq.generated.push(g);
+            seq.pos += 1;
+            seq.next_token = g as i32;
+            accepted += 1;
+            self.metrics.tokens_decoded.inc();
+            finish = finish_reason(seq, dims.max_seq);
+            if finish.is_some() || (j < k && self.draft_buf[j] != g as i32) {
+                break;
+            }
+        }
+        // Commit the accepted prefix; rejected-tail pages return to the
+        // pool, and slab-style backends drop their mirrored tail.
+        if let (Some(kv), Some(f)) = (&mut self.kv, fork.take()) {
+            kv.commit_fork(f, accepted);
+        }
+        self.backend.truncate_slot(i, base_len + accepted);
+
+        self.metrics.spec_verify_steps.inc();
+        self.metrics.spec_tokens_proposed.add(k as u64);
+        let drafts_accepted = (accepted - 1) as u64;
+        self.metrics.spec_tokens_accepted.add(drafts_accepted);
+        self.metrics.spec_tokens_rejected.add(k as u64 - drafts_accepted);
+        let proposed = self.metrics.spec_tokens_proposed.get();
+        if proposed > 0 {
+            self.metrics.spec_acceptance_permille.set(
+                1000 * self.metrics.spec_tokens_accepted.get() / proposed);
+        }
+        let steps = self.metrics.spec_verify_steps.get();
+        self.metrics.spec_tokens_per_step_x100.set(
+            100 * (steps + self.metrics.spec_tokens_accepted.get()) / steps);
+
+        if let Some(reason) = finish {
+            let mut seq = self.slots[i].take().expect("active slot");
+            self.release_kv(i);
+            self.finish(slot_output(&mut seq, reason));
+        }
+        Ok(true)
     }
 
     /// Cancel a request — the client-disconnect path. A pending request
@@ -460,6 +696,67 @@ fn slot_output(seq: &mut Sequence, finish: FinishReason) -> RequestOutput {
     }
 }
 
+/// Deterministic scenario replay (test support): drive `sched` through a
+/// seeded workload — every iteration submits one pseudo-random request,
+/// optionally cancels an earlier one, then steps — and record every
+/// submission, cancel and finish as a line in the returned trace.
+///
+/// The RNG stream depends only on `seed`, so two runs over deterministic
+/// backends produce **byte-identical traces**: the replay harness that
+/// makes order-sensitive scheduler behaviour (admission order under page
+/// pressure, cancellation races) assertable as a plain `Vec<String>`
+/// equality instead of set-wise comparisons. `cancel_period = 0` disables
+/// cancellation; otherwise every `cancel_period`-th iteration cancels a
+/// pseudo-random earlier id (which may already have finished — the trace
+/// records whether it hit).
+pub fn replay_scenario<B: ModelBackend>(sched: &mut Scheduler<B>, seed: u64,
+                                        requests: usize,
+                                        cancel_period: usize) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    let mut trace = Vec::new();
+    for id in 0..requests as u64 {
+        let plen = rng.range(1, 7) as usize;
+        let prompt: Vec<u32> =
+            (0..plen).map(|_| rng.range(3, 60) as u32).collect();
+        let max_new = rng.range(1, 6) as usize;
+        let ok = sched.submit(Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            sampling: SamplingParams::Greedy,
+            eos_token: None,
+            speculative_k: None,
+        });
+        trace.push(format!("submit {id} plen={plen} max_new={max_new} \
+                            ok={ok}"));
+        if cancel_period > 0 && (id as usize) % cancel_period
+            == cancel_period - 1
+        {
+            let victim = rng.below(id + 1);
+            let hit = sched.cancel(victim);
+            trace.push(format!("cancel {victim} hit={hit}"));
+        }
+        sched.step().expect("replay step");
+        trace_finishes(sched, &mut trace);
+    }
+    let mut steps = 0;
+    while sched.has_work() {
+        sched.step().expect("replay drain step");
+        trace_finishes(sched, &mut trace);
+        steps += 1;
+        assert!(steps < 10_000, "replay scenario did not drain");
+    }
+    trace
+}
+
+fn trace_finishes<B: ModelBackend>(sched: &mut Scheduler<B>,
+                                   trace: &mut Vec<String>) {
+    for out in sched.take_finished() {
+        trace.push(format!("finish {} {:?} tokens={}", out.id, out.finish,
+                           out.tokens.len()));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -468,7 +765,8 @@ mod tests {
 
     fn mk_req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
         Request { id, prompt, max_new_tokens: max_new,
-                  sampling: SamplingParams::Greedy, eos_token: None }
+                  sampling: SamplingParams::Greedy, eos_token: None,
+                  speculative_k: None }
     }
 
     fn sched(batch: usize) -> Scheduler<MockBackend> {
@@ -860,5 +1158,159 @@ mod tests {
             s.step().unwrap();
         }
         assert_eq!(s.take_finished()[0].tokens.len(), 2);
+    }
+
+    #[test]
+    fn speculative_streams_are_bit_exact_vs_plain_greedy() {
+        // The tentpole claim at the scheduler level: speculative decoding
+        // (any k) emits exactly the tokens plain greedy decode emits, in
+        // both KV layouts, and actually accepts drafts once the mock
+        // chain's mod-64 orbit closes (period 16 — prompt-lookup then
+        // predicts it exactly).
+        for choice in [KvChoice::Slab,
+                       KvChoice::Paged(KvCacheConfig::auto())] {
+            let mut outs = Vec::new();
+            let mut spec_metrics = None;
+            for k in [0usize, 3] {
+                let metrics = Arc::new(ServingMetrics::default());
+                let mut s = Scheduler::with_kv(
+                    MockBackend::new(2, 8, 64, 64), 16, metrics.clone(), 1,
+                    choice);
+                s.set_speculative(k);
+                s.submit(mk_req(1, vec![3], 40));
+                s.submit(mk_req(2, vec![5, 6, 7], 33));
+                let mut steps = 0;
+                while s.has_work() {
+                    s.step().unwrap();
+                    steps += 1;
+                    assert!(steps < 300, "stuck");
+                }
+                let mut done = s.take_finished();
+                done.sort_by_key(|d| d.id);
+                outs.push(done.iter()
+                    .map(|d| (d.id, d.tokens.clone(), d.finish))
+                    .collect::<Vec<_>>());
+                if k > 0 {
+                    spec_metrics = Some(metrics);
+                }
+            }
+            assert_eq!(outs[0], outs[1],
+                       "speculation changed the emitted stream");
+            let m = spec_metrics.unwrap();
+            assert!(m.spec_verify_steps.get() > 0,
+                    "speculation never engaged");
+            assert!(m.spec_tokens_accepted.get() > 0,
+                    "a periodic history must get drafts accepted");
+            assert_eq!(m.kv_pages_in_use.get(), 0, "leaked pages at drain");
+        }
+    }
+
+    #[test]
+    fn speculation_falls_back_cleanly_under_page_pressure() {
+        // Pool sized exactly to the request's reservation: the fork's
+        // transient pages (COW divergence + boundary) never have headroom,
+        // so every speculative attempt must fall back to plain decode —
+        // same tokens, zero verify passes, nothing leaked, never stuck.
+        let mut outs = Vec::new();
+        let mut pressured = None;
+        for k in [0usize, 3] {
+            let metrics = Arc::new(ServingMetrics::default());
+            let mut s = Scheduler::with_kv(
+                MockBackend::new(1, 8, 32, 64), 16, metrics.clone(), 1,
+                KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                                pool_pages: 2 }));
+            s.set_speculative(k);
+            // [34, 7, 3] reprises 34 immediately (f(3) = 34), so the very
+            // first speculative attempt has a real draft to verify — it
+            // must still bounce off the page check, not wedge the pool.
+            s.submit(mk_req(1, vec![34, 7, 3], 5));
+            let mut steps = 0;
+            while s.has_work() {
+                s.step().unwrap();
+                steps += 1;
+                assert!(steps < 100, "stuck");
+            }
+            outs.push(s.take_finished().iter()
+                .map(|d| (d.tokens.clone(), d.finish))
+                .collect::<Vec<_>>());
+            if k > 0 {
+                pressured = Some(metrics);
+            }
+        }
+        assert_eq!(outs[0], outs[1], "fallback changed the stream");
+        let m = pressured.unwrap();
+        assert_eq!(m.spec_verify_steps.get(), 0,
+                   "no transient headroom -> no verify pass may run");
+        assert!(m.spec_fallbacks.get() > 0, "fallbacks must be counted");
+        assert_eq!(m.kv_pages_in_use.get(), 0, "leaked pages at drain");
+    }
+
+    #[test]
+    fn non_greedy_requests_never_speculate() {
+        // A temperature sequence's RNG draws must match plain decode
+        // one-for-one; speculation is a greedy-only optimization and must
+        // not even be attempted (no fallback noise in the metrics either).
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = Scheduler::new(MockBackend::new(1, 8, 32, 64), 16,
+                                   metrics.clone(), 1);
+        s.set_speculative(4);
+        let mut req = mk_req(1, vec![3, 3, 3, 3], 6);
+        req.sampling = SamplingParams::Temperature { temperature: 0.8,
+                                                     top_k: Some(8) };
+        s.submit(req);
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        assert_eq!(metrics.spec_verify_steps.get(), 0);
+        assert_eq!(metrics.spec_fallbacks.get(), 0);
+        assert_eq!(s.take_finished()[0].tokens.len(), 6);
+    }
+
+    #[test]
+    fn per_request_speculative_k_overrides_the_scheduler_default() {
+        // default ON, request forces OFF
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = Scheduler::new(MockBackend::new(1, 8, 64, 64), 16,
+                                   metrics.clone(), 1);
+        s.set_speculative(3);
+        let mut req = mk_req(1, vec![3], 40);
+        req.speculative_k = Some(0);
+        s.submit(req);
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        assert_eq!(metrics.spec_verify_steps.get(), 0);
+        // default OFF, request forces ON
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = Scheduler::new(MockBackend::new(1, 8, 64, 64), 16,
+                                   metrics.clone(), 1);
+        let mut req = mk_req(1, vec![3], 40);
+        req.speculative_k = Some(3);
+        s.submit(req);
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        assert!(metrics.spec_verify_steps.get() > 0);
+    }
+
+    #[test]
+    fn replay_scenario_is_deterministic_and_conserves_requests() {
+        let run = || {
+            let mut s = paged_sched(2, 4, 16,
+                                    Arc::new(ServingMetrics::default()));
+            replay_scenario(&mut s, 0xC0FFEE, 24, 3)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must replay a byte-identical trace");
+        assert!(a.iter().any(|l| l.starts_with("cancel")),
+                "the scenario must exercise cancellation");
+        // every accepted submission produces exactly one finish line
+        // (natural or Cancelled)
+        let ok = a.iter().filter(|l| l.starts_with("submit")
+                                 && l.contains("ok=true")).count();
+        let fin = a.iter().filter(|l| l.starts_with("finish")).count();
+        assert_eq!(ok, fin, "accepted vs finished mismatch:\n{}",
+                   a.join("\n"));
     }
 }

@@ -51,7 +51,8 @@ impl ServerHandle {
         let (otx, orx) = mpsc::channel();
         self.tx
             .send(Msg::Submit(
-                Request { id, prompt, max_new_tokens, sampling, eos_token },
+                Request { id, prompt, max_new_tokens, sampling, eos_token,
+                          speculative_k: None },
                 otx,
             ))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
@@ -111,6 +112,22 @@ where
     B: ModelBackend + 'static,
     F: FnOnce() -> Result<B> + Send + 'static,
 {
+    start_with_kv_speculative(factory, queue_capacity, seed, kv, 0)
+}
+
+/// [`start_with_kv`] with a default speculative draft length for the
+/// scheduler (`serve --speculative k`): greedy requests propose up to `k`
+/// draft tokens per step and verify them in one batched pass. `0` serves
+/// plain decode; either way emitted tokens are bit-identical (requests may
+/// still override via [`Request::speculative_k`]).
+pub fn start_with_kv_speculative<B, F>(factory: F, queue_capacity: usize,
+                                       seed: u64, kv: KvChoice,
+                                       speculative_k: usize)
+                                       -> Result<ServerHandle>
+where
+    B: ModelBackend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
     let metrics = Arc::new(ServingMetrics::default());
     metrics.mark_started();
     let m2 = metrics.clone();
@@ -130,7 +147,8 @@ where
                     anyhow::bail!("backend init failed: {msg}");
                 }
             };
-            worker_loop(backend, queue_capacity, seed, m2, rx, kv)
+            worker_loop(backend, queue_capacity, seed, m2, rx, kv,
+                        speculative_k)
         })
         .expect("spawn coordinator");
     ready_rx
@@ -160,9 +178,11 @@ pub fn start_kv<B: ModelBackend + Send + 'static>(backend: B,
 
 fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
                                 metrics: Arc<ServingMetrics>,
-                                rx: Receiver<Msg>, kv: KvChoice) -> Result<()> {
+                                rx: Receiver<Msg>, kv: KvChoice,
+                                speculative_k: usize) -> Result<()> {
     let mut sched = Scheduler::with_kv(backend, queue_capacity, metrics,
                                        seed, kv);
+    sched.set_speculative(speculative_k);
     let mut waiters: Vec<(RequestId, Sender<RequestOutput>)> = Vec::new();
     let mut shutting_down = false;
     loop {
@@ -268,6 +288,34 @@ mod tests {
         // cancelling an already-finished id is a harmless no-op
         h.cancel(1).unwrap();
         h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn speculative_server_matches_plain_and_reports_acceptance() {
+        // The server-level wrap of the tentpole guarantee: `--speculative 3`
+        // emits the same tokens as plain serving, and on a periodic stream
+        // the acceptance counters actually move.
+        let mut outs = Vec::new();
+        for k in [0usize, 3] {
+            let h = start_with_kv_speculative(
+                move || Ok(MockBackend::new(2, 8, 64, 64)), 16, 7,
+                KvChoice::compile_default(), k)
+                .unwrap();
+            let toks = h.submit(vec![3], 24, SamplingParams::Greedy, None)
+                .unwrap()
+                .recv()
+                .unwrap()
+                .tokens;
+            if k > 0 {
+                assert!(h.metrics.spec_verify_steps.get() > 0,
+                        "speculation never engaged");
+                assert!(h.metrics.spec_tokens_accepted.get() > 0,
+                        "the periodic mock chain must get drafts accepted");
+            }
+            h.shutdown().unwrap();
+            outs.push(toks);
+        }
+        assert_eq!(outs[0], outs[1], "speculative serving changed tokens");
     }
 
     #[test]

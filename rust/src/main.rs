@@ -83,6 +83,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("max-new-tokens", "16", "decode budget per request")
         .opt("temperature", "0", "sampling temperature (0 = greedy)")
         .opt("precision", "f16", "native numeric path: f16 | i8 (quantized)")
+        .opt("vocab", "512",
+             "synthetic vocab size for the native demo model (tiny vocabs \
+              fold prompt bytes into range; must not be a multiple of 7)")
         .opt("threads", "1",
              "kernel worker threads for the native backend (N or \"auto\")")
         .opt("queue-capacity", "64",
@@ -105,6 +108,11 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("prompt", "",
              "use this prompt text for every synthetic request (empty = \
               the built-in prompt cycle)")
+        .opt("speculative", "0",
+             "speculative decoding: draft tokens per decode step for greedy \
+              requests (prompt-lookup proposer, one batched verify pass; \
+              0 = off — emitted tokens are bit-identical either way; \
+              native backend only)")
         .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
@@ -118,6 +126,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                                          "--kv-page-tokens")?;
     let kv_pool_pages = parse_zero_auto(m.str("kv-pool-pages"),
                                         "--kv-pool-pages")?;
+    let speculative: usize = m.usize("speculative")?;
+    let vocab_flag: usize = m.usize("vocab")?;
     let path = if m.flag("baseline") { EnginePath::Baseline } else { EnginePath::Mmt4d };
 
     let (handle, vocab) = if m.flag("native") {
@@ -167,20 +177,26 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                                     (paged | slab)"))
             }
         };
-        let vocab = 512;
+        let vocab = vocab_flag;
         eprintln!("serving the native mmt4d backend ({} path, {threads} \
-                   kernel thread{}{}, {} kv)...",
+                   kernel thread{}{}, {} kv{})...",
                   precision.name(), if threads == 1 { "" } else { "s" },
                   if tuned_active { ", tuned tiles" } else { "" },
                   match kv { KvChoice::Slab => "slab",
-                             KvChoice::Paged(_) => "paged" });
+                             KvChoice::Paged(_) => "paged" },
+                  if speculative > 0 {
+                      format!(", speculative k={speculative}")
+                  } else {
+                      String::new()
+                  });
         let backend = NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
                                                     precision, 42, &tiles,
                                                     threads)
             .map_err(err_str)?
             .with_parallelism(Parallelism::new(threads));
-        let handle = coordinator::server::start_kv(backend, queue_capacity,
-                                                   42, kv);
+        let handle = coordinator::server::start_with_kv_speculative(
+            move || Ok(backend), queue_capacity, 42, kv, speculative)
+            .map_err(err_str)?;
         handle.metrics.compute_threads.add(threads as u64);
         (handle, vocab)
     } else {
@@ -196,6 +212,15 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             eprintln!("note: the paged KV cache applies to the native \
                        backend; the artifact engine's whole-batch KV is \
                        baked in at AOT time (serving slab)");
+        }
+        if speculative != 0 {
+            eprintln!("note: --speculative applies to the native backend; \
+                       the artifact engine has no verify pass (serving \
+                       plain decode)");
+        }
+        if vocab_flag != 512 {
+            eprintln!("note: --vocab applies to the native demo model; the \
+                       artifact engine's vocab comes from its manifest");
         }
         eprintln!("loading artifacts from {dir:?} ({path:?})...");
         let manifest = tenx_iree::config::Manifest::load(&dir).map_err(err_str)?;
@@ -243,7 +268,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
 fn cmd_compile(argv: &[String]) -> Result<(), String> {
     let cmd = Command::new("compile", "run the pass pipeline on a matmul")
         .opt("target", "milkv-jupiter", "target name (milkv-jupiter, x86_64, aarch64, riscv64-vlenN)")
-        .opt("phase", "prefill", "prefill | decode")
+        .opt("phase", "prefill", "prefill | decode | verify (the \
+              speculative-decoding verification batch)")
         .opt("m", "64", "M dimension")
         .opt("k", "256", "K dimension")
         .opt("n", "256", "N dimension")
@@ -263,7 +289,7 @@ fn cmd_compile(argv: &[String]) -> Result<(), String> {
     if !tiles.is_empty() {
         let applies = target.vlen_bits().is_some_and(|v| {
             [ElemType::F16, ElemType::I8].iter().any(|&e| {
-                [Phase::Prefill, Phase::Decode]
+                [Phase::Prefill, Phase::Decode, Phase::Verify]
                     .iter()
                     .any(|&p| tiles.tuned(v, e, p, 1).is_some())
             })

@@ -164,6 +164,28 @@ pub struct ServingMetrics {
     /// page-reservation headroom — the signal that pages, not slots, are
     /// the bottleneck.
     pub kv_admission_blocked: Counter,
+    /// Speculative verify passes run (each one scores a drafted batch and
+    /// emits 1..=k+1 tokens; 0 means speculation is off or never engaged).
+    pub spec_verify_steps: Counter,
+    /// Draft tokens proposed across all verify passes.
+    pub spec_tokens_proposed: Counter,
+    /// Draft tokens accepted (they matched the greedy token at their
+    /// position, so the following row could be consumed too).
+    pub spec_tokens_accepted: Counter,
+    /// Draft tokens rejected — their KV tail was rolled back via the
+    /// page-table fork (paged) or slot truncation (slab).
+    pub spec_tokens_rejected: Counter,
+    /// Speculative episodes abandoned before verification: the proposer
+    /// had no draft, or the page pool lacked transient headroom for the
+    /// fork — the sequence took the plain decode path that step.
+    pub spec_fallbacks: Counter,
+    /// Draft acceptance rate over the server's lifetime, in tenths of a
+    /// percent (‰ of proposed drafts accepted; gauge refreshed after every
+    /// verify pass).
+    pub spec_acceptance_permille: Gauge,
+    /// Mean tokens emitted per speculative verify pass, in hundredths
+    /// (100 = 1.0 tokens/step, i.e. no better than plain decode).
+    pub spec_tokens_per_step_x100: Gauge,
     pub started: Mutex<Option<std::time::Instant>>,
     /// Taskpool counter snapshot at `mark_started`, so the report shows
     /// this server's pool activity rather than process-wide totals.
@@ -222,6 +244,19 @@ impl ServingMetrics {
         } else {
             s.push_str("kv-cache: slab (contiguous per-slot max_seq \
                         reservations)\n");
+        }
+        if self.spec_verify_steps.get() > 0 {
+            s.push_str(&format!(
+                "speculative: {} verify steps, {} proposed, {} accepted \
+                 ({:.1}%), {} rejected, {} fallbacks, {:.2} tokens/step\n",
+                self.spec_verify_steps.get(),
+                self.spec_tokens_proposed.get(),
+                self.spec_tokens_accepted.get(),
+                self.spec_acceptance_permille.get() as f64 / 10.0,
+                self.spec_tokens_rejected.get(),
+                self.spec_fallbacks.get(),
+                self.spec_tokens_per_step_x100.get() as f64 / 100.0
+            ));
         }
         s.push_str(&format!(
             "queue: mean wait {:?} p90 {:?}\n",
@@ -322,5 +357,23 @@ mod tests {
         assert!(r.contains("(2 cached)"));
         assert!(r.contains("shared-prefix hits 3"));
         assert!(r.contains("evictions 1"));
+    }
+
+    #[test]
+    fn speculative_line_appears_only_when_verifying() {
+        let m = ServingMetrics::default();
+        assert!(!m.report().contains("speculative:"),
+                "no verify steps -> no speculative line");
+        m.spec_verify_steps.add(4);
+        m.spec_tokens_proposed.add(12);
+        m.spec_tokens_accepted.add(9);
+        m.spec_tokens_rejected.add(3);
+        m.spec_fallbacks.inc();
+        m.spec_acceptance_permille.set(750);
+        m.spec_tokens_per_step_x100.set(325);
+        let r = m.report();
+        assert!(r.contains("speculative: 4 verify steps, 12 proposed, \
+                            9 accepted (75.0%)"));
+        assert!(r.contains("3 rejected, 1 fallbacks, 3.25 tokens/step"));
     }
 }

@@ -148,7 +148,8 @@ pub fn measure_matmul(system: System, phase: Phase, m: usize, k: usize,
             // (RHS/weights are packed at compile time in IREE).
             mach.stats.cycles as f64 * s.scale + pack_cost_cycles(m, k, target)
         }
-        (System::UpstreamIree, Phase::Prefill) => {
+        (System::UpstreamIree, Phase::Prefill)
+        | (System::UpstreamIree, Phase::Verify) => {
             // Vectorized-but-unwidened GEMM, M0=4 blocking.
             let sim_m = m.min(8);
             let sim_n = n.min(4 * (vlen / 8)).min(n);
@@ -291,6 +292,8 @@ fn roofline(system: System, phase: Phase, threads: usize,
     let m = match phase {
         Phase::Prefill => prefill_tokens,
         Phase::Decode => 1,
+        // speculative verify: score a k=3 draft + the anchor row per step
+        Phase::Verify => 4,
     };
     let mut cycles = 0.0;
     let mut dram = 0.0;
@@ -312,6 +315,7 @@ fn roofline(system: System, phase: Phase, threads: usize,
     let tokens = match phase {
         Phase::Prefill => prefill_tokens as f64,
         Phase::Decode => 1.0,
+        Phase::Verify => 4.0,
     };
     PhasePerf {
         system,

@@ -86,6 +86,9 @@ pub fn native_thread_model(phase: Phase) -> ThreadModel {
         // Decode: same 1/K epilogue but far fewer tiles per region, so
         // spawn/join and the final unpack weigh ~3x heavier.
         Phase::Decode => ThreadModel::new(0.10),
+        // Verify: k+1 rows amortize the per-region spawn over ~4x decode's
+        // parallel work, landing between the two.
+        Phase::Verify => ThreadModel::new(0.08),
     }
 }
 
@@ -114,6 +117,7 @@ pub fn measure_native_phase(phase: Phase, threads: usize,
     let (m, tile_m0, tile_n0) = match phase {
         Phase::Prefill => (prefill_tokens.max(1), 6, 32),
         Phase::Decode => (1, 1, 64),
+        Phase::Verify => (4, 4, 32),
     };
     let par = Parallelism::new(threads);
     let cfg = BenchConfig {
@@ -150,6 +154,7 @@ pub fn measure_native_phase(phase: Phase, threads: usize,
     let tokens = match phase {
         Phase::Prefill => prefill_tokens.max(1) as f64,
         Phase::Decode => 1.0,
+        Phase::Verify => 4.0,
     };
     NativePhasePerf {
         phase,
@@ -206,6 +211,11 @@ mod tests {
         assert_eq!(ThreadModel::new(-0.5).serial_fraction, 0.0);
         assert_eq!(ThreadModel::new(1.5).serial_fraction, 1.0);
         assert!(native_thread_model(Phase::Decode).serial_fraction
+                > native_thread_model(Phase::Prefill).serial_fraction);
+        // verify lands strictly between decode and prefill
+        assert!(native_thread_model(Phase::Verify).serial_fraction
+                < native_thread_model(Phase::Decode).serial_fraction);
+        assert!(native_thread_model(Phase::Verify).serial_fraction
                 > native_thread_model(Phase::Prefill).serial_fraction);
     }
 

@@ -51,15 +51,18 @@ impl Arch {
     }
 }
 
-/// Which phase of LLM inference a dispatch belongs to. The two phases reach
-/// the compiler with different static shapes (GEMM vs GEMV) and get
-/// different tile encodings.
+/// Which phase of LLM inference a dispatch belongs to. The phases reach
+/// the compiler with different static shapes (GEMM vs GEMV vs the short
+/// speculative-verify GEMM) and get different tile encodings.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     /// Prompt processing: M > 1 (GEMM-shaped contractions).
     Prefill,
     /// Token generation: M == 1 (GEMV-shaped contractions).
     Decode,
+    /// Speculative-decode verification: M = k+1 for small draft lengths k —
+    /// a short GEMM that scores a whole draft in one step.
+    Verify,
 }
 
 impl Phase {
@@ -68,14 +71,16 @@ impl Phase {
         match self {
             Phase::Prefill => "prefill",
             Phase::Decode => "decode",
+            Phase::Verify => "verify",
         }
     }
 
-    /// Parse `"prefill"` / `"decode"`.
+    /// Parse `"prefill"` / `"decode"` / `"verify"`.
     pub fn parse(s: &str) -> Option<Phase> {
         match s {
             "prefill" => Some(Phase::Prefill),
             "decode" => Some(Phase::Decode),
+            "verify" => Some(Phase::Verify),
             _ => None,
         }
     }
@@ -234,8 +239,16 @@ pub fn select_tiles_for(arch: Arch, phase: Phase,
                 (ElemType::I32, _) => {
                     anyhow::bail!("no mmt4d ukernel takes i32 operands")
                 }
+                // Speculative verify is a short GEMM (M = k+1, typically
+                // 2..=5 rows): 4 accumulator rows on the prefill-width strip
+                // stay spill-free for both dtypes at every VLEN, and sharing
+                // the prefill (N0, K0) lets verify reuse the prefill prepack.
+                (ElemType::I8, Phase::Verify) => {
+                    Tile { m0: 4, n0: vlen_bits / 8, k0: 1 }
+                }
                 (_, Phase::Prefill) => Tile { m0: 6, n0: vlen_bits / 8, k0: 1 },
                 (_, Phase::Decode) => Tile { m0: 1, n0: vlen_bits / 4, k0: 1 },
+                (_, Phase::Verify) => Tile { m0: 4, n0: vlen_bits / 8, k0: 1 },
             };
             Ok(tile)
         }
@@ -330,6 +343,28 @@ mod tests {
         assert!(tile_spills(Tile { m0: 10, n0: 32, k0: 1 }, 256, 32));
         // decode tile: rhs 4 + scratch 8 + 1 acc row x 8 = 20
         assert_eq!(vreg_pressure(Tile { m0: 1, n0: 64, k0: 1 }, 256), 20);
+    }
+
+    #[test]
+    fn verify_tiles_are_spill_free_and_share_the_prefill_strip() {
+        for vlen in [128usize, 256, 512, 1024] {
+            let arch = Arch::Riscv64 { vlen_bits: vlen };
+            for elem in [ElemType::F16, ElemType::I8] {
+                let v = select_tiles_for(arch, Phase::Verify, elem).unwrap();
+                let p = select_tiles_for(arch, Phase::Prefill, elem).unwrap();
+                assert_eq!(v, Tile { m0: 4, n0: vlen / 8, k0: 1 },
+                           "{elem:?} vlen={vlen}");
+                // same (N0, K0) as prefill → the prepacked head is shared
+                assert_eq!((v.n0, v.k0), (p.n0, p.k0), "{elem:?} vlen={vlen}");
+                let spills = match elem {
+                    ElemType::I8 => tile_spills_i8(v, vlen, 32),
+                    _ => tile_spills(v, vlen, 32),
+                };
+                assert!(!spills, "{elem:?} vlen={vlen} verify tile spills");
+            }
+        }
+        assert_eq!(Phase::parse("verify"), Some(Phase::Verify));
+        assert_eq!(Phase::Verify.name(), "verify");
     }
 
     #[test]

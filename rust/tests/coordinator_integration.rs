@@ -210,6 +210,7 @@ fn paged_native_serving_token_exact_and_shares_prefixes() {
                     max_new_tokens: 3 + (id as usize % 3),
                     sampling: SamplingParams::Greedy,
                     eos_token: None,
+                    speculative_k: None,
                 }));
             }
             let mut steps = 0;
@@ -240,6 +241,101 @@ fn paged_native_serving_token_exact_and_shares_prefixes() {
 }
 
 #[test]
+fn speculative_native_serving_token_exact_both_precisions() {
+    // The tentpole over the REAL ukernel backend, both precisions, paged
+    // KV: `--speculative 3` serving emits exactly the plain-greedy tokens,
+    // the chain's period-16 orbit guarantees drafts get accepted within a
+    // 20-token budget, and the verify passes ride the zero-repack steady
+    // state (no weight packs, no scratch growth, no leaked pages).
+    use std::sync::Arc;
+    use tenx_iree::coordinator::{KvCacheConfig, KvChoice, Request, Scheduler};
+    use tenx_iree::metrics::ServingMetrics;
+    for precision in [Precision::F16, Precision::Int8] {
+        let mut outs = Vec::new();
+        for spec in [0usize, 3] {
+            let backend = NativeBackend::new(2, 8, 32, 64, 64, precision, 7);
+            let metrics = Arc::new(ServingMetrics::default());
+            let mut s = Scheduler::with_kv(
+                backend, 64, metrics.clone(), 5,
+                KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                                pool_pages: 0 }));
+            s.set_speculative(spec);
+            for id in 0..4u64 {
+                assert!(s.submit(Request {
+                    id,
+                    prompt: vec![9, 10, 11, 12, 13 + id as u32],
+                    max_new_tokens: 20,
+                    sampling: SamplingParams::Greedy,
+                    eos_token: None,
+                    speculative_k: None,
+                }));
+            }
+            let mut steps = 0;
+            while s.has_work() {
+                s.step().unwrap();
+                steps += 1;
+                assert!(steps < 2000, "stuck");
+            }
+            let mut done = s.take_finished();
+            done.sort_by_key(|d| d.id);
+            assert_eq!(done.len(), 4, "{precision:?}");
+            if spec > 0 {
+                assert!(metrics.spec_verify_steps.get() > 0,
+                        "{precision:?}: speculation never engaged");
+                assert!(metrics.spec_tokens_accepted.get() > 0,
+                        "{precision:?}: the periodic chain must land drafts");
+                assert_eq!(metrics.decode_rhs_packs.get(), 0,
+                           "{precision:?}: a verify pass re-packed weights");
+                assert_eq!(metrics.decode_scratch_allocs.get(), 0,
+                           "{precision:?}: a verify pass grew the arena");
+                assert_eq!(metrics.kv_pages_in_use.get(), 0,
+                           "{precision:?}: pages leaked past drain");
+            }
+            outs.push(done
+                .iter()
+                .map(|d| (d.id, d.tokens.clone(), d.finish))
+                .collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1],
+                   "{precision:?}: speculative serving changed tokens");
+    }
+}
+
+#[test]
+fn replay_scenarios_make_cancellation_order_deterministic() {
+    // The seeded scenario-replay helper pins the full submit/cancel/finish
+    // interleaving under page pressure: two runs of one seed produce
+    // byte-identical traces (so any failure here reproduces exactly from
+    // the seed in the assert message), while distinct seeds explore
+    // distinct schedules without any test-local RNG plumbing.
+    use std::sync::Arc;
+    use tenx_iree::coordinator::{replay_scenario, KvCacheConfig, KvChoice,
+                                 Scheduler};
+    use tenx_iree::metrics::ServingMetrics;
+    let mk = || {
+        Scheduler::with_kv(
+            MockBackend::new(2, 8, 32, 64), 16,
+            Arc::new(ServingMetrics::default()), 1,
+            KvChoice::Paged(KvCacheConfig { page_tokens: 2, pool_pages: 8 }))
+    };
+    for seed in [1u64, 42, 0xFEED] {
+        let a = replay_scenario(&mut mk(), seed, 32, 4);
+        let b = replay_scenario(&mut mk(), seed, 32, 4);
+        assert_eq!(a, b, "seed {seed}: replay trace must be deterministic");
+        assert!(a.iter().any(|l| l.starts_with("cancel")),
+                "seed {seed}: the scenario must exercise cancellation");
+        // conservation: every accepted submission finishes exactly once
+        let ok = a.iter().filter(|l| l.starts_with("submit")
+                                 && l.contains("ok=true")).count();
+        let fin = a.iter().filter(|l| l.starts_with("finish")).count();
+        assert_eq!(ok, fin, "seed {seed}: accepted vs finished mismatch");
+    }
+    let x = replay_scenario(&mut mk(), 7, 32, 4);
+    let y = replay_scenario(&mut mk(), 8, 32, 4);
+    assert_ne!(x, y, "different seeds must explore different schedules");
+}
+
+#[test]
 fn finished_prefix_pages_evict_in_lru_order_under_pressure() {
     // Scheduler-level LRU: a 4-page pool serves four sequential prompts;
     // the fourth's decode append must evict the *oldest* finished prefix
@@ -260,7 +356,8 @@ fn finished_prefix_pages_evict_in_lru_order_under_pressure() {
         assert!(s.submit(Request { id: next_id, prompt,
                                    max_new_tokens: max_new,
                                    sampling: SamplingParams::Greedy,
-                                   eos_token: None }));
+                                   eos_token: None,
+                                   speculative_k: None }));
         let mut steps = 0;
         while s.has_work() {
             s.step().unwrap();

@@ -44,8 +44,10 @@ check_tile() {
 }
 check_tile riscv64-vlen256.f16.prefill.t1 6 32
 check_tile riscv64-vlen256.f16.decode.t1 1 64
+check_tile riscv64-vlen256.f16.verify.t1 4 32
 check_tile riscv64-vlen256.i8.prefill.t1 7 32
 check_tile riscv64-vlen256.i8.decode.t1 1 128
+check_tile riscv64-vlen256.i8.verify.t1 4 32
 if grep -q 'spills = [^0]' "$profile"; then
     echo "autotune smoke: a tuned entry reports spill traffic"
     cat "$profile"
@@ -115,6 +117,45 @@ if ! printf '%s\n' "$paged_out" | grep -q \
 fi
 echo "paged serve smoke: $hits shared-prefix hits, slab-exact tokens, 0 packs / 0 allocs"
 
+echo "== speculative serve smoke (draft/verify parity, both precisions) =="
+# Speculative decoding must (a) emit exactly the tokens plain greedy
+# decode emits, (b) actually engage — acceptance counters > 0 (vocab 64
+# makes every greedy chain close its 16-token cycle inside the budget,
+# so the prompt-lookup proposer is guaranteed to lock on), and (c) keep
+# the zero-repack steady state through the batched verify passes.
+for prec in f16 i8; do
+    spec_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+        --precision "$prec" --vocab 64 --requests 4 --max-new-tokens 24 \
+        --speculative 3)"
+    plain_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+        --precision "$prec" --vocab 64 --requests 4 --max-new-tokens 24 \
+        --speculative 0)"
+    spec_toks="$(printf '%s\n' "$spec_out" | grep '^req ' | sed 's/.*-> //')"
+    plain_toks="$(printf '%s\n' "$plain_out" | grep '^req ' | sed 's/.*-> //')"
+    if [ -z "$spec_toks" ] || [ "$spec_toks" != "$plain_toks" ]; then
+        echo "speculative smoke ($prec): tokens diverged from plain greedy"
+        echo "--- speculative ---"; printf '%s\n' "$spec_out"
+        echo "--- plain -------"; printf '%s\n' "$plain_out"
+        exit 1
+    fi
+    spec_line="$(printf '%s\n' "$spec_out" | grep '^speculative:' || true)"
+    accepted="$(printf '%s\n' "$spec_line" \
+        | sed -n 's/.* \([0-9]*\) accepted.*/\1/p')"
+    if [ -z "$accepted" ] || [ "$accepted" -eq 0 ]; then
+        echo "speculative smoke ($prec): expected accepted draft tokens > 0"
+        printf '%s\n' "$spec_out"
+        exit 1
+    fi
+    if ! printf '%s\n' "$spec_out" | grep -q \
+        '^steady-state: decode rhs packs 0, decode scratch allocs 0'; then
+        echo "speculative smoke ($prec): verify passes broke the \
+zero-repack steady state"
+        printf '%s\n' "$spec_out"
+        exit 1
+    fi
+    echo "speculative smoke ($prec): greedy-exact tokens, $accepted drafts accepted, 0 packs / 0 allocs"
+done
+
 echo "== threaded ukernel bench (quick, 2 workers) =="
 TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
 
@@ -161,6 +202,9 @@ if [ "${RUN_BENCHES:-0}" = "1" ]; then
     # decode_steady_state self-asserts its zero-pack/zero-alloc counters;
     # 2 workers exercise the NT rows too.
     TENX_BENCH_QUICK=1 cargo bench --bench decode_steady_state -- --threads 2
+    # speculative_decode self-asserts k>0 parity with plain greedy and
+    # > 1 tokens per verify forward on its chain prompts.
+    TENX_BENCH_QUICK=1 cargo bench --bench speculative_decode
     echo "== tile_sweep A2d: tuned-vs-static (quick profile) =="
     profile="$(mktemp /tmp/tenx-tuning-bench.XXXXXX)"
     cargo run --release --quiet --bin tenx -- autotune --quick \
