@@ -49,14 +49,9 @@ fn bench_native_paged_vs_slab(quick: bool) -> anyhow::Result<()> {
                                            kv);
         let t0 = Instant::now();
         for i in 0..n_req {
-            let req = Request {
-                id: i as u64,
-                prompt: tok.encode(prompts[i % prompts.len()]),
-                max_new_tokens: max_new,
-                sampling: SamplingParams::Greedy,
-                eos_token: None,
-                speculative_k: None,
-            };
+            let req = Request::greedy(i as u64,
+                                      tok.encode(prompts[i % prompts.len()]),
+                                      max_new);
             assert!(sched.submit(req), "queue is sized for the workload");
         }
         let mut max_active = 0usize;

@@ -24,7 +24,6 @@ use std::sync::Arc;
 use tenx_iree::bench::{self, BenchResult};
 use tenx_iree::coordinator::{KvCacheConfig, KvChoice, NativeBackend,
                              Precision, Request, Scheduler};
-use tenx_iree::llm::SamplingParams;
 use tenx_iree::metrics::ServingMetrics;
 
 /// A prompt lying on the model's greedy chain: the generation re-enters it
@@ -52,11 +51,7 @@ fn serve(precision: Precision, k: usize, requests: usize,
     s.set_speculative(k);
     let prompt = chain_prompt(12, 64);
     for id in 0..requests as u64 {
-        assert!(s.submit(Request { id, prompt: prompt.clone(),
-                                   max_new_tokens: max_new,
-                                   sampling: SamplingParams::Greedy,
-                                   eos_token: None,
-                                   speculative_k: None }));
+        assert!(s.submit(Request::greedy(id, prompt.clone(), max_new)));
     }
     let mut steps = 0;
     while s.has_work() {

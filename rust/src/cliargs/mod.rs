@@ -158,6 +158,19 @@ pub fn parse_zero_auto(s: &str, what: &str) -> Result<usize, String> {
     })
 }
 
+/// Parse an enumerated option value: `value` must be one of `allowed`
+/// (exact match), and the error spells out the choices. Shared by `tenx
+/// serve --admission / --preempt-mode / --workload`.
+pub fn parse_one_of<'a>(value: &'a str, what: &str,
+                        allowed: &[&str]) -> Result<&'a str, String> {
+    if allowed.contains(&value) {
+        Ok(value)
+    } else {
+        Err(format!("invalid {what} {value:?} (want one of: {})",
+                    allowed.join(" | ")))
+    }
+}
+
 /// Parse a comma-separated `--threads` list (`"1"`, `"1,8"`, `"2,auto"`):
 /// each entry via [`parse_thread_count`], deduplicated, ascending. Used by
 /// `tenx autotune` to tune one profile entry per worker count.
@@ -295,6 +308,17 @@ mod tests {
         let e = parse_zero_auto("-1", "--kv-pool-pages").unwrap_err();
         assert!(e.contains("--kv-pool-pages"));
         assert!(parse_zero_auto("auto", "--kv-page-tokens").is_err());
+    }
+
+    #[test]
+    fn one_of_values_parse() {
+        let allowed = ["auto", "recompute", "swap"];
+        assert_eq!(parse_one_of("swap", "--preempt-mode", &allowed),
+                   Ok("swap"));
+        let e = parse_one_of("sawp", "--preempt-mode", &allowed).unwrap_err();
+        assert!(e.contains("--preempt-mode"));
+        assert!(e.contains("auto | recompute | swap"),
+                "the error must list the choices: {e}");
     }
 
     #[test]

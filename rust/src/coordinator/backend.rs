@@ -109,6 +109,33 @@ pub trait ModelBackend {
     fn truncate_slot(&mut self, slot: usize, len: usize) {
         let _ = (slot, len);
     }
+
+    /// Does this backend implement [`ModelBackend::swap_out_slot`] /
+    /// [`ModelBackend::swap_in_slot`]? When false, a preempting scheduler
+    /// always resumes victims via recompute (docs/SERVING.md).
+    fn supports_swap(&self) -> bool {
+        false
+    }
+
+    /// Copy the first `len` logical KV positions of `slot` into a
+    /// host-side swap payload, reading through the step's KV view. The
+    /// scheduler frees the slot's pages right after, so the payload must be
+    /// self-contained; it round-trips through
+    /// [`ModelBackend::swap_in_slot`] unchanged.
+    fn swap_out_slot(&mut self, slot: usize, len: usize,
+                     kv: KvStepView<'_>) -> Result<Vec<i32>> {
+        let _ = (slot, len, kv);
+        anyhow::bail!("backend does not support KV swap")
+    }
+
+    /// Restore a payload produced by [`ModelBackend::swap_out_slot`] into
+    /// `slot`, writing through the step's KV view. The caller has already
+    /// re-allocated pages covering `payload.len()` positions for the slot.
+    fn swap_in_slot(&mut self, slot: usize, payload: &[i32],
+                    kv: KvStepView<'_>) -> Result<()> {
+        let _ = (slot, payload, kv);
+        anyhow::bail!("backend does not support KV swap")
+    }
 }
 
 /// PJRT-backed implementation over the AOT artifacts.
@@ -285,6 +312,26 @@ impl ModelBackend for MockBackend {
 
     fn truncate_slot(&mut self, slot: usize, len: usize) {
         self.live[slot].truncate(len);
+    }
+
+    fn supports_swap(&self) -> bool {
+        true
+    }
+
+    fn swap_out_slot(&mut self, slot: usize, len: usize,
+                     kv: KvStepView<'_>) -> Result<Vec<i32>> {
+        let _ = kv;
+        anyhow::ensure!(self.live[slot].len() >= len,
+                        "swap-out past the mock cache");
+        Ok(self.live[slot][..len].to_vec())
+    }
+
+    fn swap_in_slot(&mut self, slot: usize, payload: &[i32],
+                    kv: KvStepView<'_>) -> Result<()> {
+        let _ = kv;
+        self.live[slot].clear();
+        self.live[slot].extend_from_slice(payload);
+        Ok(())
     }
 }
 

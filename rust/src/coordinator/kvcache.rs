@@ -32,12 +32,24 @@
 //!   cached page.
 //!
 //! Admission is priced in pages, not slots: an admitted sequence *reserves*
-//! its worst-case page count (`ceil(min(prompt + max_new, max_seq) /
-//! page_tokens)`), and the scheduler admits while `Σ reserved ≤ pool`.
-//! Because every live table is bounded by its reservation and zero-ref
-//! cached pages are always evictable, a mid-decode allocation can never
-//! fail — the admission check is the only gate (the soundness argument is
-//! spelled out in `docs/KVCACHE.md`).
+//! pages and the scheduler admits while `Σ reserved ≤ pool`. Two
+//! reservation disciplines share the invariant `table.len() ≤ reserved[slot]
+//! ∧ Σ reserved ≤ pool` (which is what makes in-reservation allocation
+//! infallible — every live table is bounded by its reservation, so distinct
+//! in-use pages never exceed `Σ reserved`, and anything else is free or
+//! evictable):
+//!
+//! * **Worst-case** ([`KvCacheManager::try_reserve`] with
+//!   `min(prompt + max_new, max_seq)`): the PR 5 discipline — mid-decode
+//!   allocation can never fail, but short requests strand headroom.
+//! * **Optimistic** (reserve only the prompt pages, then grow one page at a
+//!   time via [`KvCacheManager::ensure_append_headroom`] /
+//!   [`KvCacheManager::try_grow_reservation`]): growth *can* fail when the
+//!   pool is genuinely full — the scheduler's cue to preempt a victim
+//!   ([`KvCacheManager::free_slot`] on it) and retry; the failed grow
+//!   mutates nothing. docs/SERVING.md covers the preemption policy.
+//!
+//! The soundness argument for both is spelled out in `docs/KVCACHE.md`.
 //!
 //! Everything here is **bookkeeping**: the manager never touches model
 //! payload. Backends receive a [`KvStepView`] with each call and resolve
@@ -381,6 +393,53 @@ impl KvCacheManager {
         self.reserved_total
     }
 
+    /// Pages reserved by `slot` specifically.
+    pub fn reserved_for(&self, slot: usize) -> usize {
+        self.reserved[slot]
+    }
+
+    /// Optimistic-admission growth: extend `slot`'s reservation by
+    /// `extra` pages if the pool has headroom, else mutate nothing and
+    /// return false — the preemption trigger (the caller frees a victim's
+    /// pages, which lowers `Σ reserved`, and retries).
+    pub fn try_grow_reservation(&mut self, slot: usize,
+                                extra: usize) -> bool {
+        if self.reserved_total + extra > self.pool_pages {
+            return false;
+        }
+        self.reserved[slot] += extra;
+        self.reserved_total += extra;
+        true
+    }
+
+    /// Make the next [`KvCacheManager::append_token`] on `slot` legal:
+    /// true when the append's page is already covered by the slot's
+    /// reservation, else a one-page [`KvCacheManager::try_grow_reservation`].
+    /// Under worst-case reservations this never grows (the reservation
+    /// already covers `max_seq`-bounded appends); under optimistic
+    /// admission a false return means "pool genuinely full — preempt".
+    pub fn ensure_append_headroom(&mut self, slot: usize) -> bool {
+        let pos = self.tables.lens[slot];
+        if pos / self.page_tokens < self.reserved[slot] {
+            return true;
+        }
+        self.try_grow_reservation(slot, 1)
+    }
+
+    /// Release the reservation headroom `slot` is not actually using
+    /// (reserved pages beyond its table). Called after speculative
+    /// rollbacks under optimistic admission, where a rolled-back boundary
+    /// append leaves the grown reservation behind; harmless elsewhere.
+    /// Never call it under worst-case reservations — it would surrender
+    /// exactly the headroom that makes appends infallible there.
+    pub fn shrink_reservation_to_table(&mut self, slot: usize) {
+        let need = self.tables.tables[slot].len();
+        if self.reserved[slot] > need {
+            self.reserved_total -= self.reserved[slot] - need;
+            self.reserved[slot] = need;
+        }
+    }
+
     /// The per-step view backends resolve through.
     pub fn view(&self) -> KvStepView<'_> {
         KvStepView::Paged(&self.tables)
@@ -479,6 +538,32 @@ impl KvCacheManager {
         self.tables.tables[slot] = table;
         self.tables.lens[slot] = tokens.len();
         Ok(stats)
+    }
+
+    /// Build `slot`'s page table for a swapped-in sequence: `len` positions
+    /// of freshly allocated, *unpublished* pages (the payload returns from
+    /// the swap arena, so nothing is shared or prefix-published — swap
+    /// trades memory duplication for zero recompute). The slot must be
+    /// empty and reserved for at least `ceil(len / page_tokens)` pages;
+    /// returns the eviction count the allocations caused.
+    pub fn allocate_raw(&mut self, slot: usize, len: usize) -> Result<u64> {
+        anyhow::ensure!(self.tables.tables[slot].is_empty()
+                            && self.tables.lens[slot] == 0,
+                        "slot {slot} already holds a sequence");
+        anyhow::ensure!(
+            self.pages_for(len) <= self.reserved[slot],
+            "swap-in needs {} pages but slot {slot} reserved {}",
+            self.pages_for(len), self.reserved[slot]);
+        let mut evictions = 0u64;
+        let mut table = Vec::with_capacity(self.pages_for(len));
+        for _ in 0..self.pages_for(len) {
+            let page = self.alloc_page(&mut evictions)?;
+            self.ref_count[page] = 1;
+            table.push(page);
+        }
+        self.tables.tables[slot] = table;
+        self.tables.lens[slot] = len;
+        Ok(evictions)
     }
 
     /// Extend `slot` by one decode position (the scheduler calls this
@@ -860,6 +945,181 @@ mod tests {
         let st = m.allocate_prompt(0, &[1, 2, 3, 4]).unwrap();
         assert_eq!(st.shared_hits, 0, "colliding entry must not be shared");
         assert_eq!(st.pages_allocated, 1);
+    }
+
+    #[test]
+    fn optimistic_reservations_grow_shrink_and_gate() {
+        let mut m = mgr(4, 3, 2);
+        // Optimistic admission: reserve only the prompt's pages.
+        assert!(m.try_reserve(0, 6)); // 2 pages
+        m.allocate_prompt(0, &[1, 2, 3, 4, 5, 6]).unwrap();
+        // Appends inside the reserved tail need no growth.
+        assert!(m.ensure_append_headroom(0));
+        m.append_token(0).unwrap(); // pos 6
+        m.append_token(0).unwrap(); // pos 7
+        // The boundary append (pos 8) needs page 3: grown from the pool.
+        assert!(m.ensure_append_headroom(0));
+        assert_eq!(m.reserved_for(0), 3);
+        m.append_token(0).unwrap();
+        // Pool is now fully reserved: a second admission is gated out...
+        assert!(!m.try_reserve(1, 1));
+        // ...and so is further growth (pos 12 would need page 4).
+        for _ in 0..3 {
+            assert!(m.ensure_append_headroom(0));
+            m.append_token(0).unwrap();
+        }
+        assert!(!m.ensure_append_headroom(0), "pool genuinely full");
+        assert_eq!(m.reserved_pages(), 3, "failed grow mutates nothing");
+        // Preempting the victim releases everything at once.
+        m.free_slot(0);
+        assert_eq!(m.reserved_pages(), 0);
+        assert!(m.try_reserve(1, 1));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shrink_releases_only_unused_headroom() {
+        let mut m = mgr(4, 8, 1);
+        assert!(m.try_reserve(0, 2)); // 1 page reserved, prompt uses it
+        m.allocate_prompt(0, &[1, 2]).unwrap();
+        assert!(m.try_grow_reservation(0, 3));
+        assert_eq!(m.reserved_pages(), 4);
+        m.shrink_reservation_to_table(0);
+        assert_eq!(m.reserved_pages(), 1, "table still holds one page");
+        // Shrink at exact fit is a no-op.
+        m.shrink_reservation_to_table(0);
+        assert_eq!(m.reserved_for(0), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_in_allocates_raw_unpublished_pages() {
+        let mut m = mgr(4, 8, 2);
+        // A published prompt leaves its pages cached after free...
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &[1, 2, 3, 4]).unwrap();
+        m.free_slot(0);
+        assert!(m.prefix_cached(&[1, 2, 3, 4]));
+        // ...while a swap-in of the same length allocates fresh pages and
+        // publishes nothing: the payload bytes come from the swap arena.
+        assert!(m.try_reserve(0, 7));
+        let ev = m.allocate_raw(0, 7).unwrap();
+        assert_eq!(ev, 0, "free pages first, no eviction needed");
+        assert_eq!(m.tables().len(0), 7);
+        assert_eq!(m.tables().tables[0].len(), 2);
+        assert_eq!(m.pages_in_use(), 2);
+        assert!(m.prefix_cached(&[1, 2, 3, 4]),
+                "swap-in must not disturb the prefix cache");
+        // Every swapped-in position resolves; the slot decodes normally.
+        assert!(m.tables().resolve(0, 6).is_some());
+        m.append_token(0).unwrap();
+        m.free_slot(0);
+        m.check_invariants().unwrap();
+    }
+
+    /// Satellite of the preemption PR: page conservation across every
+    /// preempt/resume/cancel/fork-rollback interleaving a seeded generator
+    /// can produce. Extends the fork accounting suite above — the manager
+    /// must never leak or double-free a page no matter how the scheduler
+    /// interleaves optimistic admission, reservation growth, speculation,
+    /// swap-style re-allocation and preemption.
+    #[test]
+    fn page_conservation_under_random_lifecycle_interleavings() {
+        use crate::util::prng::Rng;
+        for seed in 0..60u64 {
+            let (pt, pool, batch) = (4usize, 10usize, 4usize);
+            let mut m = mgr(pt, pool, batch);
+            let mut rng = Rng::new(0xFEED_F00D ^ seed);
+            // occupied[slot] = committed length (mirror of the manager).
+            let mut occupied = vec![None::<usize>; batch];
+            for _ in 0..300 {
+                let slot = rng.below(batch as u64) as usize;
+                match (rng.below(6), occupied[slot]) {
+                    // Optimistic admission: reserve the prompt pages only.
+                    (0, None) => {
+                        let plen = rng.range(1, 2 * pt as i64 + 1) as usize;
+                        let prompt: Vec<i32> = (0..plen)
+                            .map(|_| rng.below(4) as i32)
+                            .collect();
+                        if m.try_reserve(slot, plen) {
+                            m.allocate_prompt(slot, &prompt).unwrap();
+                            occupied[slot] = Some(plen);
+                        }
+                    }
+                    // Decode append; preempt a victim when the pool is
+                    // genuinely full, exactly like the scheduler.
+                    (1, Some(len)) => {
+                        if m.ensure_append_headroom(slot) {
+                            m.append_token(slot).unwrap();
+                            m.take_copies();
+                            occupied[slot] = Some(len + 1);
+                        } else {
+                            let victims: Vec<usize> = (0..batch)
+                                .filter(|&s| occupied[s].is_some())
+                                .collect();
+                            let v = victims
+                                [rng.below(victims.len() as u64) as usize];
+                            m.free_slot(v);
+                            occupied[v] = None;
+                            if v != slot {
+                                assert!(m.ensure_append_headroom(slot),
+                                        "a freed victim must unblock growth");
+                                m.append_token(slot).unwrap();
+                                m.take_copies();
+                                occupied[slot] = Some(len + 1);
+                            }
+                        }
+                    }
+                    // Speculative episode: fork, k appends, random accept
+                    // or error-path rollback; reservation shrunk after.
+                    (2, Some(len)) => {
+                        let k = rng.range(1, 4) as usize;
+                        let fork = m.fork_slot(slot);
+                        let mut done = 0;
+                        for _ in 0..k {
+                            if !m.ensure_append_headroom(slot)
+                                || m.append_token(slot).is_err()
+                            {
+                                break;
+                            }
+                            done += 1;
+                        }
+                        let accept = rng.below(done as u64 + 1) as usize;
+                        m.take_copies();
+                        m.commit_fork(fork, accept);
+                        m.shrink_reservation_to_table(slot);
+                        occupied[slot] = Some(len + accept);
+                    }
+                    // Cancel / recompute-preempt: release everything.
+                    (3, Some(_)) => {
+                        m.free_slot(slot);
+                        occupied[slot] = None;
+                    }
+                    // Swap round-trip: free, re-reserve, allocate raw.
+                    (4, Some(len)) => {
+                        m.free_slot(slot);
+                        occupied[slot] = None;
+                        let toks = len.min(3 * pt);
+                        if m.try_reserve(slot, toks) {
+                            m.allocate_raw(slot, toks).unwrap();
+                            occupied[slot] = Some(toks);
+                        }
+                    }
+                    _ => {}
+                }
+                m.check_invariants()
+                    .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            }
+            // Drain: every page must come back.
+            for slot in 0..batch {
+                m.free_slot(slot);
+            }
+            assert_eq!(m.pages_in_use(), 0, "seed {seed}: leaked pages");
+            assert_eq!(m.reserved_pages(), 0, "seed {seed}: leaked pages");
+            assert_eq!(m.pages_available(), pool,
+                       "seed {seed}: pool did not drain");
+            m.check_invariants().unwrap();
+        }
     }
 
     #[test]

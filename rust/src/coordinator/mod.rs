@@ -16,7 +16,10 @@ pub use draft::{DraftSource, PromptLookupDraft};
 pub use kvcache::{KvCacheConfig, KvCacheManager, KvChoice, KvStepView,
                   PageTables, SlotFork, KV_PAGE_TOKENS_DEFAULT};
 pub use native::{NativeBackend, Precision};
-pub use request::{FinishReason, Request, RequestId, RequestOutput};
-pub use scheduler::{replay_scenario, Scheduler};
+pub use request::{FinishReason, Priority, Request, RequestId,
+                  RequestOutput};
+pub use scheduler::{replay_scenario, replay_scenario_outputs,
+                    AdmissionPolicy, PreemptMode, Scheduler};
 pub use server::{start, start_kv, start_with, start_with_kv,
-                 start_with_kv_speculative, ServerHandle};
+                 start_with_kv_options, start_with_kv_speculative,
+                 SchedulerOptions, ServerHandle};

@@ -596,6 +596,60 @@ impl ModelBackend for NativeBackend {
         // len never resolve), so there is nothing to unwind here.
         self.live[slot].truncate(len);
     }
+
+    fn supports_swap(&self) -> bool {
+        true
+    }
+
+    fn swap_out_slot(&mut self, slot: usize, len: usize,
+                     kv: KvStepView<'_>) -> Result<Vec<i32>> {
+        // The preempting scheduler calls this *before* freeing the victim's
+        // pages, and only when no COW copy is pending, so every committed
+        // position still resolves to applied physical state.
+        match kv {
+            KvStepView::Slab => {
+                anyhow::ensure!(self.live[slot].len() >= len,
+                                "swap-out past the committed slab row");
+                Ok(self.live[slot][..len].to_vec())
+            }
+            KvStepView::Paged(pt) => {
+                self.ensure_store(&kv);
+                (0..len)
+                    .map(|p| {
+                        let phys = pt.resolve(slot, p).ok_or_else(|| {
+                            anyhow::anyhow!("swap-out pos {p} not mapped")
+                        })?;
+                        Ok(self.store[phys])
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn swap_in_slot(&mut self, slot: usize, payload: &[i32],
+                    kv: KvStepView<'_>) -> Result<()> {
+        // The slot the victim resumes in may differ from the one it was
+        // swapped out of — the payload is slot-agnostic by construction.
+        match kv {
+            KvStepView::Slab => {
+                self.live[slot].clear();
+                self.live[slot].extend_from_slice(payload);
+                Ok(())
+            }
+            KvStepView::Paged(pt) => {
+                self.ensure_store(&kv);
+                for (p, &t) in payload.iter().enumerate() {
+                    // The scheduler raw-allocated a table covering the
+                    // payload before this call; unmapped means a bug.
+                    let phys = pt.resolve(slot, p).ok_or_else(|| {
+                        anyhow::anyhow!("swap-in pos {p} not mapped")
+                    })?;
+                    self.store[phys] = t;
+                }
+                Ok(())
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -6,6 +6,28 @@ use crate::llm::SamplingParams;
 
 pub type RequestId = u64;
 
+/// Scheduling class of a request. Ordered: `Batch < Normal < Interactive`,
+/// so `Ord` comparisons read "higher priority wins". Under optimistic
+/// admission (docs/SERVING.md) the class steers victim selection — when the
+/// page pool runs dry mid-decode the scheduler preempts the lowest class
+/// first — and admission prefers resuming/starting higher classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Throughput traffic: preempted first, no latency expectations.
+    Batch,
+    /// Default class.
+    Normal,
+    /// Latency-sensitive traffic: preempted only when nothing lower is
+    /// active.
+    Interactive,
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Normal
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: RequestId,
@@ -21,6 +43,36 @@ pub struct Request {
     /// plain decode. Only greedy sampling speculates — emitted tokens are
     /// bit-identical to plain greedy decode either way.
     pub speculative_k: Option<usize>,
+    /// Scheduling class (victim selection preempts lower classes first).
+    pub priority: Priority,
+    /// Time-to-first-token target. Feeds SLO-attainment counters in
+    /// `ServingMetrics` and deadline-aware victim selection; `None` means
+    /// "no deadline" (such requests are preferred preemption victims
+    /// within their class).
+    pub ttft_target: Option<Duration>,
+    /// Per-output-token latency target (time-per-output-token, measured as
+    /// `(e2e - ttft) / (tokens - 1)` at finish). Same consumers as
+    /// `ttft_target`.
+    pub tpot_target: Option<Duration>,
+}
+
+impl Request {
+    /// Greedy request with the default class and no SLO targets — the
+    /// common case in tests and benches.
+    pub fn greedy(id: RequestId, prompt: Vec<u32>,
+                  max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::Greedy,
+            eos_token: None,
+            speculative_k: None,
+            priority: Priority::Normal,
+            ttft_target: None,
+            tpot_target: None,
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +143,25 @@ mod tests {
                   FinishReason::CacheFull] {
             assert_ne!(r, FinishReason::Cancelled);
         }
+    }
+
+    #[test]
+    fn priority_classes_are_ordered() {
+        // Victim selection leans on the derived Ord: Batch is preempted
+        // before Normal, Normal before Interactive.
+        assert!(Priority::Batch < Priority::Normal);
+        assert!(Priority::Normal < Priority::Interactive);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn greedy_constructor_fills_defaults() {
+        let r = Request::greedy(3, vec![1, 2], 4);
+        assert_eq!(r.id, 3);
+        assert_eq!(r.max_new_tokens, 4);
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.eos_token.is_none() && r.speculative_k.is_none());
+        assert!(r.ttft_target.is_none() && r.tpot_target.is_none());
     }
 
     #[test]

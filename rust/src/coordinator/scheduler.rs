@@ -5,14 +5,27 @@
 //! compiled artifacts).
 //!
 //! **Admission is priced in KV pages, not batch slots.** Under the default
-//! paged layout (`coordinator::kvcache`, `docs/KVCACHE.md`) an admitted
-//! sequence reserves its worst-case page count; the queue head waits when
-//! the pool has no reservation headroom even if slots sit free, and a
-//! finished or cancelled sequence releases its pages (and reservation)
-//! immediately. The slab layout (`KvChoice::Slab`, compile-time electable
-//! via the `kv-slab` feature) keeps the historical slots-only admission
-//! bit-for-bit.
+//! paged layout (`coordinator::kvcache`, `docs/KVCACHE.md`) admission is
+//! [`AdmissionPolicy::Optimistic`] (vLLM-style): a sequence reserves only
+//! its prompt pages and grows one page at a time as it decodes. When growth
+//! finds the pool dry the scheduler **preempts** a victim — lowest
+//! [`Priority`](super::request::Priority) class first, then the loosest
+//! deadline, then the youngest — releases its pages, and later resumes it
+//! either by *recompute* (re-prefill through the prefix cache, which
+//! recovers the shared head for free) or by *swap* (copy the KV payload to
+//! a host-side arena and back), whichever the
+//! [`PreemptCostModel`](crate::perfmodel::PreemptCostModel) prices cheaper.
+//! [`AdmissionPolicy::WorstCase`] keeps the conservative discipline: the
+//! worst-case page count is reserved up front, mid-decode allocation is
+//! infallible and preemption never triggers. The slab layout
+//! (`KvChoice::Slab`, compile-time electable via the `kv-slab` feature)
+//! keeps the historical slots-only admission bit-for-bit.
+//!
+//! Emitted token streams are identical under every policy — preemption
+//! moves *when* a sequence decodes, never *what* it decodes (asserted
+//! per-request by the fuzz harness in `rust/tests/props.rs`).
 
+use std::cmp::Reverse;
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -21,12 +34,39 @@ use anyhow::Result;
 
 use super::backend::ModelBackend;
 use super::draft::{DraftSource, PromptLookupDraft};
-use super::kvcache::{KvCacheManager, KvChoice, KvStepView};
-use super::request::{FinishReason, Request, RequestId, RequestOutput,
-                     RequestTiming};
+use super::kvcache::{KvCacheManager, KvChoice, KvStepView, SlotFork};
+use super::request::{FinishReason, Priority, Request, RequestId,
+                     RequestOutput, RequestTiming};
 use crate::llm::{argmax, sample, SamplingParams, PAD};
 use crate::metrics::ServingMetrics;
+use crate::perfmodel::{PreemptAction, PreemptCostModel};
 use crate::util::prng::Rng;
+
+/// How paged admission prices a request (`--admission`). Both policies
+/// share the reservation invariant `table pages <= reserved <= pool`; they
+/// differ in *when* the pages beyond the prompt are claimed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Reserve `min(prompt + max_new, max_seq)` pages at admission. No
+    /// sequence is ever preempted, at the cost of head-of-line blocking on
+    /// pages most requests never touch (EOS lands early).
+    WorstCase,
+    /// The default: reserve only the prompt pages and grow one page at a
+    /// time mid-decode. Growth failure preempts a victim instead of
+    /// failing the append — higher admitted concurrency for the same pool.
+    Optimistic,
+}
+
+/// Victim resume-path election (`--preempt-mode`). `Auto` asks the
+/// [`PreemptCostModel`]; the forced modes pin one path (tests, and
+/// backends whose swap path is known-degenerate). Either force falls back
+/// to recompute when the backend lacks swap support.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptMode {
+    Auto,
+    ForceRecompute,
+    ForceSwap,
+}
 
 struct Sequence {
     req: Request,
@@ -38,7 +78,29 @@ struct Sequence {
     pos: usize,
     /// Token to feed at the next decode step.
     next_token: i32,
+    /// Tokens of `generated` still to re-feed after a recompute resume
+    /// (0 = caught up / never preempted). While nonzero the sequence's
+    /// decode steps force `generated[len - replay_rem]` instead of
+    /// sampling, so the stream is untouched by the round trip.
+    replay_rem: usize,
     timing: RequestTiming,
+}
+
+/// A preemption victim waiting to re-enter the batch, ahead of all fresh
+/// arrivals (it already won admission once; parking it behind the queue
+/// would let sustained load starve it).
+struct PreemptedSeq {
+    seq: Sequence,
+    resume: ResumeKind,
+}
+
+enum ResumeKind {
+    /// Re-prefill the prompt (prefix cache recovers the shared head) and
+    /// replay the generated tokens through forced decode steps.
+    Recompute,
+    /// Restore the swapped-out KV payload into freshly allocated pages —
+    /// `seq.pos` committed positions, no recompute.
+    Swap(Vec<i32>),
 }
 
 pub struct Scheduler<B: ModelBackend> {
@@ -52,6 +114,17 @@ pub struct Scheduler<B: ModelBackend> {
     /// Paged KV-cache manager (`None` = slab layout): page pool, tables,
     /// prefix cache and admission reservations.
     kv: Option<KvCacheManager>,
+    admission: AdmissionPolicy,
+    preempt_mode: PreemptMode,
+    /// Prices recompute-vs-swap for `PreemptMode::Auto`.
+    preempt_cost: PreemptCostModel,
+    /// Victims waiting to resume, FIFO. Drained before `pending`.
+    preempted: VecDeque<PreemptedSeq>,
+    /// The at-most-one live page-table fork of the running speculative
+    /// episode. Held on the scheduler (not the episode's stack) so every
+    /// teardown path — cancel, preempt, error — can roll it back before
+    /// freeing the slot's pages; see [`Scheduler::release_kv`].
+    live_fork: Option<SlotFork>,
     /// Scheduler-default speculative draft length (`--speculative`; 0 =
     /// off). Per-request `Request::speculative_k` overrides it.
     speculative_default: usize,
@@ -107,6 +180,11 @@ impl<B: ModelBackend> Scheduler<B> {
             rng: Rng::new(seed),
             queue_capacity,
             kv,
+            admission: AdmissionPolicy::Optimistic,
+            preempt_mode: PreemptMode::Auto,
+            preempt_cost: PreemptCostModel::tiny_f16(),
+            preempted: VecDeque::new(),
+            live_fork: None,
             speculative_default: 0,
             draft: Box::new(PromptLookupDraft::default()),
             logits: Vec::new(),
@@ -138,6 +216,23 @@ impl<B: ModelBackend> Scheduler<B> {
         self.draft = draft;
     }
 
+    /// Elect the paged admission discipline (`--admission`). No effect on
+    /// the slab layout. Switching mid-flight is legal: reservations taken
+    /// under the old policy keep their meaning (the invariant is shared).
+    pub fn set_admission(&mut self, policy: AdmissionPolicy) {
+        self.admission = policy;
+    }
+
+    /// Override the victim resume-path election (`--preempt-mode`).
+    pub fn set_preempt_mode(&mut self, mode: PreemptMode) {
+        self.preempt_mode = mode;
+    }
+
+    /// The paged KV manager, when serving paged (tests / invariant audits).
+    pub fn kv_manager(&self) -> Option<&KvCacheManager> {
+        self.kv.as_ref()
+    }
+
     /// The KV view the next backend call would receive (slab when paged
     /// mode is off) — what tests resolve gathers through.
     pub fn kv_view(&self) -> KvStepView<'_> {
@@ -159,7 +254,8 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     pub fn has_work(&self) -> bool {
-        !self.pending.is_empty() || self.slots.iter().any(|s| s.is_some())
+        !self.pending.is_empty() || !self.preempted.is_empty()
+            || self.slots.iter().any(|s| s.is_some())
     }
 
     pub fn active_count(&self) -> usize {
@@ -184,7 +280,7 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     fn admit(&mut self) -> Result<()> {
-        if self.pending.is_empty() {
+        if self.pending.is_empty() && self.preempted.is_empty() {
             return Ok(());
         }
         let dims = self.backend.dims();
@@ -196,18 +292,76 @@ impl<B: ModelBackend> Scheduler<B> {
         }
         let s = dims.prefill_seq;
         let admit_t = Instant::now();
-        // FIFO admission from the queue head into free slots, gated on KV
-        // pages when paged: a request enters the batch only if its
-        // worst-case page count still fits the pool's reservation
-        // headroom. Head-of-line blocking keeps submission order.
+        let mut next_free = 0;
+
+        // Preempted victims resume first, FIFO among themselves: a swap
+        // resume restores its KV payload directly, a recompute resume
+        // joins the prefill batch below and then replays its generated
+        // tokens through forced decode steps. A blocked victim blocks all
+        // fresh admission behind it — letting new arrivals jump a starving
+        // victim would livelock under sustained pressure.
+        let mut resumed: Vec<(usize, Sequence)> = Vec::new();
+        let mut swapped_in = false;
+        let mut victims_blocked = false;
+        while next_free < free.len() && !self.preempted.is_empty() {
+            let slot = free[next_free];
+            let kv = self.kv.as_mut().expect("preemption is paged-only");
+            let head = self.preempted.front().expect("nonempty");
+            let need = match head.resume {
+                // A recompute resume re-enters like a fresh optimistic
+                // admission: prompt pages now, growth as it replays.
+                ResumeKind::Recompute => head.seq.prompt_len,
+                // A swap resume needs its whole committed context back.
+                ResumeKind::Swap(_) => head.seq.pos,
+            };
+            if !kv.try_reserve(slot, need) {
+                self.metrics.kv_admission_blocked.inc();
+                victims_blocked = true;
+                break;
+            }
+            let p = self.preempted.pop_front().expect("nonempty");
+            match p.resume {
+                ResumeKind::Swap(payload) => {
+                    let mut seq = p.seq;
+                    // Infallible after try_reserve: the victim's context
+                    // fit its own reservation when it was preempted, so
+                    // pages_for(pos) never exceeds the pool headroom.
+                    let evictions = self
+                        .kv
+                        .as_mut()
+                        .expect("paged")
+                        .allocate_raw(slot, seq.pos)?;
+                    self.metrics.kv_evictions.add(evictions);
+                    self.backend.swap_in_slot(slot, &payload,
+                                              kv_step_view(&self.kv))?;
+                    seq.replay_rem = 0;
+                    self.metrics.preempt_resumes.inc();
+                    self.slots[slot] = Some(seq);
+                    swapped_in = true;
+                }
+                ResumeKind::Recompute => {
+                    let mut seq = p.seq;
+                    seq.pos = seq.prompt_len;
+                    seq.next_token = seq.generated[0] as i32;
+                    seq.replay_rem = seq.generated.len() - 1;
+                    resumed.push((slot, seq));
+                }
+            }
+            next_free += 1;
+        }
+
+        // FIFO admission from the queue head into the remaining free
+        // slots, gated on KV pages when paged. Head-of-line blocking keeps
+        // submission order.
         enum Gate {
             Admit,
             Blocked,
             NeverFits,
         }
         let mut admitted: Vec<(usize, Request, RequestTiming)> = Vec::new();
-        let mut next_free = 0;
-        while next_free < free.len() && !self.pending.is_empty() {
+        while !victims_blocked && next_free < free.len()
+            && !self.pending.is_empty()
+        {
             let slot = free[next_free];
             let gate = match &mut self.kv {
                 None => Gate::Admit,
@@ -219,9 +373,19 @@ impl<B: ModelBackend> Scheduler<B> {
                     let worst = plen
                         .saturating_add(req.max_new_tokens)
                         .min(dims.max_seq);
+                    // Optimistic admission reserves only the prompt;
+                    // decode growth claims the rest page by page.
+                    let reserve = match self.admission {
+                        AdmissionPolicy::WorstCase => worst,
+                        AdmissionPolicy::Optimistic => plen,
+                    };
+                    // Both policies fail a never-fits request up front: a
+                    // sequence whose prompt alone can outgrow the whole
+                    // pool would only come back here as a mid-flight
+                    // CacheFull after burning decode steps.
                     if !kv.fits_ever(worst) {
                         Gate::NeverFits
-                    } else if kv.try_reserve(slot, worst) {
+                    } else if kv.try_reserve(slot, reserve) {
                         Gate::Admit
                     } else {
                         Gate::Blocked
@@ -256,13 +420,17 @@ impl<B: ModelBackend> Scheduler<B> {
                 }
             }
         }
-        if admitted.is_empty() {
+        if admitted.is_empty() && resumed.is_empty() {
+            if swapped_in {
+                self.sync_kv_gauges();
+            }
             return Ok(());
         }
 
         // Build the prefill batch into the reusable staging buffer:
-        // admitted rows get their (truncated) prompt padded to S; unused
-        // rows are PAD.
+        // admitted rows get their (truncated) prompt padded to S, resumed
+        // rows their original (already truncated) prompt; unused rows are
+        // PAD.
         self.step_tokens.clear();
         self.step_tokens.resize(dims.batch * s, PAD as i32);
         for (slot, req, _) in &admitted {
@@ -271,10 +439,19 @@ impl<B: ModelBackend> Scheduler<B> {
                 self.step_tokens[slot * s + j] = t as i32;
             }
         }
+        for (slot, seq) in &resumed {
+            for (j, &t) in seq.req.prompt[..seq.prompt_len].iter().enumerate()
+            {
+                self.step_tokens[slot * s + j] = t as i32;
+            }
+        }
         // Paged: build each admitted sequence's page table before the
         // backend call — prefix-cache hits map shared prompt pages to the
         // same physical pages, and allocation may evict LRU
-        // finished-sequence pages.
+        // finished-sequence pages. A recompute resume is where the prefix
+        // cache earns its keep at preemption time: its own published
+        // prompt pages (and any shared head) come back as hits, not fresh
+        // allocations.
         if let Some(kv) = &mut self.kv {
             for (slot, req, _) in &admitted {
                 let plen = req.prompt.len().min(s);
@@ -283,11 +460,22 @@ impl<B: ModelBackend> Scheduler<B> {
                 self.metrics.kv_shared_prefix_hits.add(st.shared_hits);
                 self.metrics.kv_evictions.add(st.evictions);
             }
+            for (slot, seq) in &resumed {
+                let st = kv.allocate_prompt(
+                    *slot,
+                    &self.step_tokens[slot * s..][..seq.prompt_len])?;
+                self.metrics.kv_shared_prefix_hits.add(st.shared_hits);
+                self.metrics.kv_evictions.add(st.evictions);
+            }
         }
         let t0 = Instant::now();
         self.backend.prefill_into(&self.step_tokens, kv_step_view(&self.kv),
                                   &mut self.logits)?;
-        let slots: Vec<usize> = admitted.iter().map(|(s, _, _)| *s).collect();
+        let slots: Vec<usize> = admitted
+            .iter()
+            .map(|(s, _, _)| *s)
+            .chain(resumed.iter().map(|(s, _)| *s))
+            .collect();
         self.backend.commit_slots_kv(&slots, kv_step_view(&self.kv))?;
         self.metrics.prefill_latency.observe(t0.elapsed());
         self.metrics.prefill_batches.inc();
@@ -307,6 +495,7 @@ impl<B: ModelBackend> Scheduler<B> {
                 generated: vec![first],
                 pos: plen,
                 next_token: first as i32,
+                replay_rem: 0,
                 timing,
                 req,
             };
@@ -314,10 +503,18 @@ impl<B: ModelBackend> Scheduler<B> {
             // release immediately (published prompt pages stay cached).
             if let Some(reason) = finish_reason(&seq, dims.max_seq) {
                 self.release_kv(slot);
-                self.finish(slot_output(&mut seq, reason));
+                self.finish_seq(seq, reason);
             } else {
                 self.slots[slot] = Some(seq);
             }
+        }
+        for (slot, seq) in resumed {
+            // No sampling and no TTFT observation: the first token was
+            // sampled at the original admission and `timing` still carries
+            // it. The prefill logits of this row are scratch work.
+            self.metrics.tokens_prefilled.add(seq.prompt_len as u64);
+            self.metrics.preempt_resumes.inc();
+            self.slots[slot] = Some(seq);
         }
         self.sync_kv_gauges();
         Ok(())
@@ -341,6 +538,35 @@ impl<B: ModelBackend> Scheduler<B> {
                 if k > 0 && self.speculative_step(i, k)? {
                     self.step_advanced[i] = true;
                 }
+            }
+        }
+        // Paged: extend every plain-decoding sequence's page table by the
+        // position this step writes — *before* staging the lanes, because
+        // under optimistic admission an append may first have to grow the
+        // slot's reservation, and when the pool has no headroom the
+        // scheduler preempts a victim (possibly one that already appended
+        // this step — its staged position simply vanishes with its table,
+        // uncommitted, and the resume replays it). Appends themselves may
+        // copy-on-write a shared tail (the copy rides in the view for the
+        // backend to apply) and may evict LRU cached pages; within a
+        // slot's reservation they are infallible.
+        if self.kv.is_some() {
+            for i in 0..dims.batch {
+                if self.slots[i].is_none() || self.step_advanced[i] {
+                    continue;
+                }
+                self.make_append_headroom(i);
+                if self.slots[i].is_none() {
+                    // Outgrew the pool alone: finished CacheFull above.
+                    continue;
+                }
+                let st = self
+                    .kv
+                    .as_mut()
+                    .expect("paged layout")
+                    .append_token(i)?;
+                self.metrics.kv_cow_copies.add(st.cow_copies);
+                self.metrics.kv_evictions.add(st.evictions);
             }
         }
         self.step_tokens.clear();
@@ -370,20 +596,6 @@ impl<B: ModelBackend> Scheduler<B> {
             self.sync_kv_gauges();
             return Ok(());
         }
-        // Paged: extend every plain-decoding sequence's page table by the
-        // position this step writes. Appends may copy-on-write a shared
-        // tail (the copy rides in the view for the backend to apply) and
-        // may evict LRU cached pages — infallible under reservation-gated
-        // admission.
-        if let Some(kv) = &mut self.kv {
-            for (i, slot) in self.slots.iter().enumerate() {
-                if slot.is_some() && !self.step_advanced[i] {
-                    let st = kv.append_token(i)?;
-                    self.metrics.kv_cow_copies.add(st.cow_copies);
-                    self.metrics.kv_evictions.add(st.evictions);
-                }
-            }
-        }
         let t0 = Instant::now();
         // The zero-repack invariant, measured where it matters: the scratch
         // counters are thread-local and the backend call runs right here,
@@ -408,6 +620,19 @@ impl<B: ModelBackend> Scheduler<B> {
                 continue;
             }
             let Some(seq) = &mut self.slots[i] else { continue };
+            if seq.replay_rem > 0 {
+                // Recompute-resume replay: the step re-committed the KV of
+                // a token this sequence already emitted. Force the next
+                // one instead of sampling (no RNG draw, no finish check —
+                // both already happened on the first pass) until the
+                // committed context catches back up to `generated`.
+                let idx = seq.generated.len() - seq.replay_rem;
+                seq.next_token = seq.generated[idx] as i32;
+                seq.pos += 1;
+                seq.replay_rem -= 1;
+                self.metrics.preempt_replayed_tokens.inc();
+                continue;
+            }
             let row = &self.logits[i * dims.vocab..][..dims.vocab];
             let tok = sample(row, seq.req.sampling, &mut self.rng);
             seq.generated.push(tok);
@@ -415,13 +640,109 @@ impl<B: ModelBackend> Scheduler<B> {
             seq.next_token = tok as i32;
             self.metrics.tokens_decoded.inc();
             if let Some(reason) = finish_reason(seq, dims.max_seq) {
-                let mut seq = self.slots[i].take().unwrap();
+                let seq = self.slots[i].take().unwrap();
                 self.release_kv(i);
-                self.finish(slot_output(&mut seq, reason));
+                self.finish_seq(seq, reason);
             }
         }
         self.sync_kv_gauges();
         Ok(())
+    }
+
+    /// Guarantee slot `i`'s next `append_token` has a reserved page,
+    /// preempting victims one at a time until it does. When no other
+    /// sequence is left to evict, `i` alone holds every reservation in the
+    /// pool: continuing it can never succeed, so it finishes `CacheFull` —
+    /// the mid-flight analogue of the admission-time `fits_ever` verdict.
+    /// A no-op under `AdmissionPolicy::WorstCase` (the reservation already
+    /// covers the worst case, so headroom always holds).
+    fn make_append_headroom(&mut self, i: usize) {
+        loop {
+            if self
+                .kv
+                .as_mut()
+                .expect("paged layout")
+                .ensure_append_headroom(i)
+            {
+                return;
+            }
+            match self.elect_victim(i) {
+                Some(v) => self.preempt(v),
+                None => {
+                    let seq = self.slots[i].take().expect("active slot");
+                    self.release_kv(i);
+                    self.finish_seq(seq, FinishReason::CacheFull);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// The slot to preempt so someone else can grow: lowest
+    /// [`Priority`] class first; within a class, requests without a
+    /// latency target go before loose targets before tight ones
+    /// (deadline-aware — tightest deadlines are protected longest); then
+    /// the youngest (most recently submitted, vLLM's tiebreak — it has the
+    /// least sunk work to replay); slot index settles exact ties. Purely a
+    /// function of request metadata and submission order, so replayed
+    /// scenarios elect identical victims.
+    fn elect_victim(&self, exclude: usize) -> Option<usize> {
+        (0..self.slots.len())
+            .filter(|&i| i != exclude)
+            .filter_map(|i| self.slots[i].as_ref().map(|s| (i, s)))
+            .min_by_key(|&(_, s)| {
+                let target = s.req.tpot_target.or(s.req.ttft_target);
+                (s.req.priority, target.is_some(),
+                 Reverse(target.unwrap_or(Duration::ZERO)),
+                 Reverse(s.timing.submitted))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Evict `victim` from the batch: elect its resume path, capture the
+    /// swap payload if swapping, release its pages (its published prompt
+    /// pages stay in the prefix cache — exactly what makes recompute cheap
+    /// for shared-prefix victims), and park it at the back of the resume
+    /// queue.
+    fn preempt(&mut self, victim: usize) {
+        let seq = self.slots[victim].take().expect("victim is active");
+        let kv = self.kv.as_ref().expect("preemption is paged-only");
+        let ctx = seq.pos;
+        let prompt: Vec<i32> = seq.req.prompt[..seq.prompt_len]
+            .iter()
+            .map(|&t| t as i32)
+            .collect();
+        let cached = if kv.prefix_cached(&prompt) { seq.prompt_len } else { 0 };
+        // Mid-step COW copies the backend has not applied yet make the
+        // victim's physical tail unreadable (the copy's destination page
+        // holds garbage until `decode_into` applies it) — recompute never
+        // reads old state, so it is always the safe fallback.
+        let copies_pending = !kv.tables().copies().is_empty();
+        let action = match self.preempt_mode {
+            _ if !self.backend.supports_swap() => PreemptAction::Recompute,
+            _ if copies_pending => PreemptAction::Recompute,
+            PreemptMode::ForceRecompute => PreemptAction::Recompute,
+            PreemptMode::ForceSwap => PreemptAction::Swap,
+            PreemptMode::Auto => self.preempt_cost.choose(ctx, cached),
+        };
+        let resume = match action {
+            PreemptAction::Swap => {
+                match self.backend.swap_out_slot(victim, ctx,
+                                                 kv_step_view(&self.kv)) {
+                    Ok(payload) => ResumeKind::Swap(payload),
+                    // Never lose the victim over a failed copy-out.
+                    Err(_) => ResumeKind::Recompute,
+                }
+            }
+            PreemptAction::Recompute => ResumeKind::Recompute,
+        };
+        self.release_kv(victim);
+        self.metrics.preemptions.inc();
+        match resume {
+            ResumeKind::Swap(_) => self.metrics.preempt_swap.inc(),
+            ResumeKind::Recompute => self.metrics.preempt_recompute.inc(),
+        }
+        self.preempted.push_back(PreemptedSeq { seq, resume });
     }
 
     /// Effective draft length for slot `i` this step, 0 = plain decode.
@@ -432,6 +753,11 @@ impl<B: ModelBackend> Scheduler<B> {
     fn slot_speculation_k(&self, i: usize, max_seq: usize) -> usize {
         let Some(seq) = &self.slots[i] else { return 0 };
         if !matches!(seq.req.sampling, SamplingParams::Greedy) {
+            return 0;
+        }
+        // A recompute-resumed sequence replays known tokens — drafting
+        // against them would verify work the first pass already did.
+        if seq.replay_rem > 0 {
             return 0;
         }
         let k = seq.req.speculative_k.unwrap_or(self.speculative_default);
@@ -492,20 +818,33 @@ impl<B: ModelBackend> Scheduler<B> {
             }
         }
         // Fork, then append the k+1 positions the verify batch writes. The
-        // appends cannot fail (headroom pre-checked) but unwind cleanly if
-        // they somehow do.
-        let mut fork = None;
+        // fork lives on `self` (not this stack frame) so any teardown that
+        // lands mid-episode rolls it back before freeing pages. Under
+        // optimistic admission each append may also need the reservation
+        // grown; a failed growth abandons the episode (plain decode's own
+        // growth path may then preempt a victim) rather than preempting
+        // from inside a live fork. Within the grown reservation the
+        // appends cannot fail (transient headroom pre-checked above) but
+        // unwind cleanly if they somehow do.
+        let optimistic = self.admission == AdmissionPolicy::Optimistic;
         if let Some(kv) = &mut self.kv {
-            fork = Some(kv.fork_slot(i));
+            self.live_fork = Some(kv.fork_slot(i));
             for _ in 0..=k {
-                match kv.append_token(i) {
+                let grown = kv.ensure_append_headroom(i);
+                let appended = if grown { kv.append_token(i) }
+                               else { Err(anyhow::anyhow!("pool dry")) };
+                match appended {
                     Ok(st) => {
                         self.metrics.kv_cow_copies.add(st.cow_copies);
                         self.metrics.kv_evictions.add(st.evictions);
                     }
                     Err(_) => {
                         kv.take_copies();
-                        kv.commit_fork(fork.take().expect("live fork"), 0);
+                        kv.commit_fork(
+                            self.live_fork.take().expect("live fork"), 0);
+                        if optimistic {
+                            kv.shrink_reservation_to_table(i);
+                        }
                         self.metrics.spec_fallbacks.inc();
                         return Ok(false);
                     }
@@ -533,8 +872,13 @@ impl<B: ModelBackend> Scheduler<B> {
         }
         if let Err(e) = r {
             // Roll back before surfacing the failure: no pages may leak.
-            if let (Some(kv), Some(f)) = (&mut self.kv, fork.take()) {
+            if let (Some(kv), Some(f)) =
+                (&mut self.kv, self.live_fork.take())
+            {
                 kv.commit_fork(f, 0);
+                if optimistic {
+                    kv.shrink_reservation_to_table(i);
+                }
             }
             self.backend.truncate_slot(i, base_len);
             return Err(e);
@@ -564,9 +908,13 @@ impl<B: ModelBackend> Scheduler<B> {
             }
         }
         // Commit the accepted prefix; rejected-tail pages return to the
-        // pool, and slab-style backends drop their mirrored tail.
-        if let (Some(kv), Some(f)) = (&mut self.kv, fork.take()) {
+        // pool (optimistic admission also hands back their reservation),
+        // and slab-style backends drop their mirrored tail.
+        if let (Some(kv), Some(f)) = (&mut self.kv, self.live_fork.take()) {
             kv.commit_fork(f, accepted);
+            if optimistic {
+                kv.shrink_reservation_to_table(i);
+            }
         }
         self.backend.truncate_slot(i, base_len + accepted);
 
@@ -585,9 +933,9 @@ impl<B: ModelBackend> Scheduler<B> {
             100 * (steps + self.metrics.spec_tokens_accepted.get()) / steps);
 
         if let Some(reason) = finish {
-            let mut seq = self.slots[i].take().expect("active slot");
+            let seq = self.slots[i].take().expect("active slot");
             self.release_kv(i);
-            self.finish(slot_output(&mut seq, reason));
+            self.finish_seq(seq, reason);
         }
         Ok(true)
     }
@@ -606,6 +954,17 @@ impl<B: ModelBackend> Scheduler<B> {
                 .push(drained_output(id, FinishReason::Cancelled, timing));
             return true;
         }
+        // A preempted victim holds no pages or slot — it just leaves the
+        // resume queue with the tokens it had.
+        if let Some(i) =
+            self.preempted.iter().position(|p| p.seq.req.id == id)
+        {
+            let mut p = self.preempted.remove(i).unwrap();
+            self.metrics.requests_cancelled.inc();
+            self.finished
+                .push(slot_output(&mut p.seq, FinishReason::Cancelled));
+            return true;
+        }
         for slot in 0..self.slots.len() {
             if self.slots[slot].as_ref().is_some_and(|s| s.req.id == id) {
                 let mut seq = self.slots[slot].take().unwrap();
@@ -620,11 +979,20 @@ impl<B: ModelBackend> Scheduler<B> {
         false
     }
 
-    /// Release a finished/cancelled sequence's pages: published prompt
-    /// pages stay in the prefix cache (LRU-evictable, re-sharable), the
-    /// rest return to the free pool, and the admission reservation drops.
+    /// Release a finished/cancelled/preempted sequence's pages: published
+    /// prompt pages stay in the prefix cache (LRU-evictable, re-sharable),
+    /// the rest return to the free pool, and the admission reservation
+    /// drops. Every teardown funnels through here so a slot with a live
+    /// speculative fork first rolls the fork back (taking its pending
+    /// copies with it) — freeing underneath the fork's extra page
+    /// references would leak the base pages.
     fn release_kv(&mut self, slot: usize) {
         if let Some(kv) = &mut self.kv {
+            if self.live_fork.as_ref().is_some_and(|f| f.slot() == slot) {
+                let f = self.live_fork.take().expect("checked above");
+                kv.take_copies();
+                kv.commit_fork(f, 0);
+            }
             kv.free_slot(slot);
         }
     }
@@ -633,6 +1001,38 @@ impl<B: ModelBackend> Scheduler<B> {
         if let Some(kv) = &self.kv {
             self.metrics.kv_pages_in_use.set(kv.pages_in_use() as u64);
             self.metrics.kv_pages_cached.set(kv.pages_cached() as u64);
+        }
+    }
+
+    /// Natural finish of an admitted sequence: build its output, score it
+    /// against its SLO targets, and route through [`Scheduler::finish`].
+    /// Cancels bypass this (an abandoned request can neither meet nor miss
+    /// a deadline).
+    fn finish_seq(&mut self, mut seq: Sequence, reason: FinishReason) {
+        let out = slot_output(&mut seq, reason);
+        self.observe_slo(&seq.req, &out);
+        self.finish(out);
+    }
+
+    /// SLO-attainment accounting. TTFT is measured at prefill; TPOT is the
+    /// mean inter-token gap `(e2e - ttft) / (tokens - 1)`, defined only
+    /// when at least two tokens were emitted.
+    fn observe_slo(&self, req: &Request, out: &RequestOutput) {
+        if let Some(target) = req.ttft_target {
+            self.metrics.slo_ttft_seen.inc();
+            if out.ttft <= target {
+                self.metrics.slo_ttft_met.inc();
+            }
+        }
+        if let Some(target) = req.tpot_target {
+            if out.tokens.len() >= 2 {
+                self.metrics.slo_tpot_seen.inc();
+                let tpot = (out.e2e - out.ttft)
+                    / (out.tokens.len() as u32 - 1);
+                if tpot <= target {
+                    self.metrics.slo_tpot_met.inc();
+                }
+            }
         }
     }
 
@@ -712,21 +1112,42 @@ fn slot_output(seq: &mut Sequence, finish: FinishReason) -> RequestOutput {
 pub fn replay_scenario<B: ModelBackend>(sched: &mut Scheduler<B>, seed: u64,
                                         requests: usize,
                                         cancel_period: usize) -> Vec<String> {
+    replay_scenario_outputs(sched, seed, requests, cancel_period).0
+}
+
+/// [`replay_scenario`] that also returns the finished outputs (submission
+/// order is in the trace; `outputs` is in completion order). The fuzz
+/// harness compares outputs *per request id* across scheduler
+/// configurations — completion order legitimately differs under
+/// preemption, finished token streams must not.
+pub fn replay_scenario_outputs<B: ModelBackend>(
+    sched: &mut Scheduler<B>, seed: u64, requests: usize,
+    cancel_period: usize) -> (Vec<String>, Vec<RequestOutput>) {
     let mut rng = Rng::new(seed);
     let mut trace = Vec::new();
+    let mut outputs = Vec::new();
     for id in 0..requests as u64 {
         let plen = rng.range(1, 7) as usize;
         let prompt: Vec<u32> =
             (0..plen).map(|_| rng.range(3, 60) as u32).collect();
         let max_new = rng.range(1, 6) as usize;
-        let ok = sched.submit(Request {
-            id,
-            prompt,
-            max_new_tokens: max_new,
-            sampling: SamplingParams::Greedy,
-            eos_token: None,
-            speculative_k: None,
-        });
+        let mut req = Request::greedy(id, prompt, max_new);
+        // Mixed scheduling classes and deadlines: victim election under
+        // preemption keys on these, so the replay must exercise them.
+        req.priority = match rng.below(3) {
+            0 => Priority::Batch,
+            1 => Priority::Normal,
+            _ => Priority::Interactive,
+        };
+        if rng.below(2) == 0 {
+            req.ttft_target =
+                Some(Duration::from_millis(rng.range(1, 50) as u64));
+        }
+        if rng.below(2) == 0 {
+            req.tpot_target =
+                Some(Duration::from_millis(rng.range(1, 20) as u64));
+        }
+        let ok = sched.submit(req);
         trace.push(format!("submit {id} plen={plen} max_new={max_new} \
                             ok={ok}"));
         if cancel_period > 0 && (id as usize) % cancel_period
@@ -737,23 +1158,25 @@ pub fn replay_scenario<B: ModelBackend>(sched: &mut Scheduler<B>, seed: u64,
             trace.push(format!("cancel {victim} hit={hit}"));
         }
         sched.step().expect("replay step");
-        trace_finishes(sched, &mut trace);
+        trace_finishes(sched, &mut trace, &mut outputs);
     }
     let mut steps = 0;
     while sched.has_work() {
         sched.step().expect("replay drain step");
-        trace_finishes(sched, &mut trace);
+        trace_finishes(sched, &mut trace, &mut outputs);
         steps += 1;
         assert!(steps < 10_000, "replay scenario did not drain");
     }
-    trace
+    (trace, outputs)
 }
 
 fn trace_finishes<B: ModelBackend>(sched: &mut Scheduler<B>,
-                                   trace: &mut Vec<String>) {
+                                   trace: &mut Vec<String>,
+                                   outputs: &mut Vec<RequestOutput>) {
     for out in sched.take_finished() {
         trace.push(format!("finish {} {:?} tokens={}", out.id, out.finish,
                            out.tokens.len()));
+        outputs.push(out);
     }
 }
 
@@ -764,9 +1187,7 @@ mod tests {
     use crate::llm::SamplingParams;
 
     fn mk_req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
-        Request { id, prompt, max_new_tokens: max_new,
-                  sampling: SamplingParams::Greedy, eos_token: None,
-                  speculative_k: None }
+        Request::greedy(id, prompt, max_new)
     }
 
     fn sched(batch: usize) -> Scheduler<MockBackend> {
@@ -1001,12 +1422,14 @@ mod tests {
 
     #[test]
     fn admission_blocks_on_pages_not_slots() {
-        // 4 free slots but a 4-page pool where every request's worst case
-        // reserves 2 pages: only two sequences may be concurrent. The
-        // queue head waits on pages, finishes release them, and every
-        // request still completes with its full budget, in FIFO order.
+        // Worst-case admission: 4 free slots but a 4-page pool where every
+        // request's worst case reserves 2 pages: only two sequences may be
+        // concurrent. The queue head waits on pages, finishes release
+        // them, and every request still completes with its full budget, in
+        // FIFO order.
         let metrics = Arc::new(ServingMetrics::default());
         let mut s = paged_sched(4, 4, 4, metrics.clone());
+        s.set_admission(AdmissionPolicy::WorstCase);
         for id in 0..4 {
             // worst case: plen 4 + max_new 4 = 8 tokens = 2 pages
             assert!(s.submit(mk_req(id, vec![1, 2, 3, 4 + id as u32], 4)));
@@ -1291,6 +1714,284 @@ mod tests {
             s.step().unwrap();
         }
         assert!(metrics.spec_verify_steps.get() > 0);
+    }
+
+    #[test]
+    fn optimistic_admission_overcommits_and_preempts_to_completion() {
+        // The tentpole, end to end: the geometry of
+        // `admission_blocks_on_pages_not_slots` (4 requests whose worst
+        // cases sum to 8 pages on a 4-page pool), but under the default
+        // optimistic policy. Every request is admitted in the *first*
+        // wave (prompt pages only: 4 of 4), decode growth runs the pool
+        // dry, victims are preempted and resumed — and every request
+        // still finishes its full budget with the exact same tokens the
+        // conservative policy produces.
+        let run = |policy: AdmissionPolicy| {
+            let metrics = Arc::new(ServingMetrics::default());
+            let mut s = paged_sched(4, 4, 4, metrics.clone());
+            s.set_admission(policy);
+            for id in 0..4 {
+                assert!(s.submit(mk_req(id, vec![1, 2, 3, 4 + id as u32],
+                                        4)));
+            }
+            s.step().unwrap();
+            let first_wave_pending = s.pending_count();
+            let mut steps = 0;
+            while s.has_work() {
+                s.step().unwrap();
+                steps += 1;
+                assert!(steps < 200, "stuck");
+            }
+            s.kv_manager().unwrap().check_invariants().unwrap();
+            let mut done = s.take_finished();
+            done.sort_by_key(|d| d.id);
+            (done, first_wave_pending, metrics)
+        };
+        let (worst, worst_pending, _) = run(AdmissionPolicy::WorstCase);
+        let (opt, opt_pending, m) = run(AdmissionPolicy::Optimistic);
+        assert_eq!(worst_pending, 2,
+                   "worst-case reservations keep half the queue waiting");
+        assert_eq!(opt_pending, 0,
+                   "optimistic admission seats the whole queue at once");
+        assert!(m.preemptions.get() >= 2, "overcommit must preempt");
+        assert_eq!(m.preemptions.get(), m.preempt_resumes.get(),
+                   "every victim resumed");
+        assert_eq!(m.kv_pages_in_use.get(), 0, "pages conserved at drain");
+        let streams = |outs: &[RequestOutput]| outs.iter()
+            .map(|d| (d.id, d.tokens.clone(), d.finish))
+            .collect::<Vec<_>>();
+        assert_eq!(streams(&worst), streams(&opt),
+                   "preemption changed a token stream");
+        assert!(opt.iter().all(|d| d.tokens.len() == 4),
+                "every request runs its full budget");
+    }
+
+    #[test]
+    fn victim_election_prefers_low_class_loose_deadlines_then_youngest() {
+        // Directed check of the election order on live slots: class first,
+        // then no-deadline before loose before tight, then youngest.
+        let mut s = paged_sched(4, 4, 64,
+                                Arc::new(ServingMetrics::default()));
+        let mut interactive = mk_req(0, vec![1], 8);
+        interactive.priority = Priority::Interactive;
+        let mut tight = mk_req(1, vec![2], 8);
+        tight.priority = Priority::Batch;
+        tight.tpot_target = Some(Duration::from_millis(1));
+        let mut loose = mk_req(2, vec![3], 8);
+        loose.priority = Priority::Batch;
+        loose.tpot_target = Some(Duration::from_secs(5));
+        let mut slack = mk_req(3, vec![4], 8);
+        slack.priority = Priority::Batch;
+        for r in [interactive, tight, loose, slack] {
+            assert!(s.submit(r));
+        }
+        s.step().unwrap();
+        assert_eq!(s.active_count(), 4);
+        // Batch before Interactive; within Batch, no target (slot 3)
+        // before the loose 5s target (slot 2) before the tight 1ms one
+        // (slot 1); the Interactive request is preempted last.
+        assert_eq!(s.elect_victim(0), Some(3));
+        assert_eq!(s.elect_victim(3), Some(2));
+        let youngest_of_equals = {
+            let mut t = paged_sched(4, 4, 64,
+                                    Arc::new(ServingMetrics::default()));
+            assert!(t.submit(mk_req(10, vec![1], 8)));
+            assert!(t.submit(mk_req(11, vec![2], 8)));
+            t.step().unwrap();
+            t.elect_victim(3)
+        };
+        assert_eq!(youngest_of_equals, Some(1),
+                   "equal class and deadline fall back to youngest");
+    }
+
+    #[test]
+    fn swap_preemption_round_trips_kv_state() {
+        // Two full-page prompts on a 4-page pool, `--preempt-mode swap`:
+        // the victim's committed context is copied out, its pages are
+        // reused by the survivor, and the resume restores it with zero
+        // replayed (recomputed) tokens.
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(2, 4, 4, metrics.clone());
+        s.set_preempt_mode(PreemptMode::ForceSwap);
+        assert!(s.submit(mk_req(1, vec![1, 2, 3, 9], 6)));
+        assert!(s.submit(mk_req(2, vec![1, 2, 3, 10], 6)));
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            steps += 1;
+            assert!(steps < 100, "stuck");
+        }
+        s.kv_manager().unwrap().check_invariants().unwrap();
+        assert!(metrics.preemptions.get() >= 1, "pool must run dry");
+        assert_eq!(metrics.preempt_swap.get(), metrics.preemptions.get(),
+                   "forced swap may not fall back here");
+        assert_eq!(metrics.preempt_replayed_tokens.get(), 0,
+                   "swap resume recomputes nothing");
+        assert_eq!(metrics.kv_pages_in_use.get(), 0);
+        let mut done = s.take_finished();
+        done.sort_by_key(|d| d.id);
+        let f = |p: i32| MockBackend::next_token(p, 64) as u32;
+        for (out, last) in done.iter().zip([9i32, 10]) {
+            assert_eq!(out.finish, FinishReason::Length);
+            assert_eq!(out.tokens.len(), 6);
+            let mut want = vec![f(last)];
+            for _ in 1..6 {
+                want.push(f(*want.last().unwrap() as i32));
+            }
+            assert_eq!(out.tokens, want,
+                       "swap round trip altered a stream");
+        }
+    }
+
+    #[test]
+    fn recompute_resume_rehits_shared_prefix_pages() {
+        // Preemption x prefix cache: two sequences share a full prompt
+        // page; the victim is forced down the recompute path, and its
+        // resume must recover the shared page from the prefix cache (a
+        // second shared-prefix hit, no duplicate physical page) before
+        // replaying its generated tail.
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(2, 4, 4, metrics.clone());
+        s.set_preempt_mode(PreemptMode::ForceRecompute);
+        assert!(s.submit(mk_req(1, vec![5, 6, 7, 8], 6)));
+        assert!(s.submit(mk_req(2, vec![5, 6, 7, 8], 6)));
+        s.step().unwrap();
+        assert_eq!(metrics.kv_shared_prefix_hits.get(), 1,
+                   "co-admission shares the prompt page");
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            steps += 1;
+            assert!(steps < 100, "stuck");
+        }
+        s.kv_manager().unwrap().check_invariants().unwrap();
+        assert!(metrics.preempt_recompute.get() >= 1);
+        assert_eq!(metrics.kv_shared_prefix_hits.get(), 2,
+                   "the recompute resume re-hits the shared prompt page \
+                    instead of allocating a duplicate");
+        assert_eq!(metrics.preempt_replayed_tokens.get(), 4,
+                   "the victim replays its four committed tokens");
+        assert_eq!(metrics.kv_pages_in_use.get(), 0);
+        let mut done = s.take_finished();
+        done.sort_by_key(|d| d.id);
+        assert_eq!(done[0].tokens, done[1].tokens,
+                   "identical prompts must stream identically through a \
+                    preemption round trip");
+        assert!(done.iter().all(|d| d.tokens.len() == 6));
+    }
+
+    #[test]
+    fn teardown_mid_episode_rolls_back_the_live_fork() {
+        // The PR 7 fix: a cancel landing while a speculative fork is live
+        // must roll the fork back before freeing the slot's pages —
+        // freeing underneath the fork's extra references leaked the base
+        // pages. The fork now lives on the scheduler precisely so this
+        // teardown path owns it.
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(1, 4, 8, metrics.clone());
+        assert!(s.submit(mk_req(1, vec![1, 2, 3], 50)));
+        s.step().unwrap();
+        let kv = s.kv.as_mut().unwrap();
+        let fork = kv.fork_slot(0);
+        assert!(kv.ensure_append_headroom(0));
+        kv.append_token(0).unwrap();
+        s.live_fork = Some(fork);
+        assert!(s.cancel(1));
+        assert!(s.live_fork.is_none(), "teardown must consume the fork");
+        assert_eq!(metrics.kv_pages_in_use.get(), 0,
+                   "fork references must not outlive the cancel");
+        s.kv_manager().unwrap().check_invariants().unwrap();
+        // the pool is whole again: a fresh request gets every page back
+        assert!(s.submit(mk_req(2, vec![7], 2)));
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        assert_eq!(s.take_finished().pop().unwrap().tokens.len(), 2);
+    }
+
+    #[test]
+    fn cancelling_a_preempted_victim_removes_it_from_the_resume_queue() {
+        // A victim parked for resume holds no pages or slot, but it is
+        // still an accepted request: cancel must find it there and return
+        // the tokens it had already generated.
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(4, 4, 4, metrics.clone());
+        for id in 0..4 {
+            assert!(s.submit(mk_req(id, vec![1, 2, 3, 4 + id as u32], 4)));
+        }
+        s.step().unwrap();
+        assert!(metrics.preemptions.get() >= 1);
+        // victims are the youngest first: id 3 is parked for resume
+        assert!(s.cancel(3));
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            steps += 1;
+            assert!(steps < 200, "stuck");
+        }
+        let mut done = s.take_finished();
+        done.sort_by_key(|d| d.id);
+        assert_eq!(done.len(), 4);
+        assert_eq!(done[3].finish, FinishReason::Cancelled);
+        assert_eq!(done[3].tokens.len(), 1,
+                   "the victim keeps the tokens from before preemption");
+        assert!(done[..3].iter().all(|d| d.tokens.len() == 4));
+        assert_eq!(metrics.kv_pages_in_use.get(), 0);
+    }
+
+    #[test]
+    fn slo_counters_score_only_targeted_finished_requests() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = Scheduler::new(MockBackend::new(2, 8, 32, 64), 16,
+                                   metrics.clone(), 1);
+        let mut with_targets = mk_req(1, vec![3, 4], 4);
+        with_targets.ttft_target = Some(Duration::from_secs(3600));
+        with_targets.tpot_target = Some(Duration::from_secs(3600));
+        assert!(s.submit(with_targets));
+        assert!(s.submit(mk_req(2, vec![5], 3))); // no targets
+        let mut cancelled = mk_req(3, vec![6], 50);
+        cancelled.ttft_target = Some(Duration::from_secs(3600));
+        assert!(s.submit(cancelled));
+        s.step().unwrap();
+        assert!(s.cancel(3));
+        while s.has_work() {
+            s.step().unwrap();
+        }
+        assert_eq!(metrics.slo_ttft_seen.get(), 1,
+                   "no-target and cancelled requests are not scored");
+        assert_eq!(metrics.slo_ttft_met.get(), 1,
+                   "an hour-long target is trivially met");
+        assert_eq!(metrics.slo_tpot_seen.get(), 1);
+        assert_eq!(metrics.slo_tpot_met.get(), 1);
+    }
+
+    #[test]
+    fn replay_with_speculation_and_preemption_conserves_pages() {
+        // The replay_scenario regression for the mid-episode teardown fix:
+        // a small pool forces preemption while speculation forks tables
+        // and every third iteration cancels — the interleavings that used
+        // to race the fork. Byte-identical traces, zero pages leaked.
+        let run = || {
+            let metrics = Arc::new(ServingMetrics::default());
+            let mut s = paged_sched(2, 4, 5, metrics.clone());
+            s.set_speculative(2);
+            let t = replay_scenario(&mut s, 0xBEEF, 32, 3);
+            s.kv_manager().unwrap().check_invariants().unwrap();
+            assert_eq!(metrics.kv_pages_in_use.get(), 0,
+                       "pages leaked across preempt/cancel/speculate");
+            assert_eq!(s.kv_manager().unwrap().reserved_pages(), 0,
+                       "reservations leaked at drain");
+            (t, metrics)
+        };
+        let (a, m) = run();
+        let (b, _) = run();
+        assert_eq!(a, b, "preemption must not break replay determinism");
+        assert!(m.preemptions.get() > 0,
+                "a 5-page pool under 2 growing slots must preempt");
+        let ok = a.iter().filter(|l| l.starts_with("submit")
+                                 && l.contains("ok=true")).count();
+        let fin = a.iter().filter(|l| l.starts_with("finish")).count();
+        assert_eq!(ok, fin, "accepted vs finished mismatch");
     }
 
     #[test]

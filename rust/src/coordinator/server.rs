@@ -12,9 +12,31 @@ use anyhow::Result;
 use super::backend::ModelBackend;
 use super::kvcache::KvChoice;
 use super::request::{Request, RequestId, RequestOutput};
-use super::scheduler::Scheduler;
+use super::scheduler::{AdmissionPolicy, PreemptMode, Scheduler};
 use crate::llm::SamplingParams;
 use crate::metrics::ServingMetrics;
+
+/// Scheduler tuning the worker applies before serving — the programmatic
+/// face of `serve --speculative / --admission / --preempt-mode`.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerOptions {
+    /// Default speculative draft length (0 = plain decode).
+    pub speculative_k: usize,
+    /// Page-reservation policy at admission (paged layouts only).
+    pub admission: AdmissionPolicy,
+    /// How preemption victims get their KV state back.
+    pub preempt_mode: PreemptMode,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> SchedulerOptions {
+        SchedulerOptions {
+            speculative_k: 0,
+            admission: AdmissionPolicy::Optimistic,
+            preempt_mode: PreemptMode::Auto,
+        }
+    }
+}
 
 enum Msg {
     Submit(Request, Sender<RequestOutput>),
@@ -47,14 +69,23 @@ impl ServerHandle {
     pub fn submit_with_id(&self, prompt: Vec<u32>, max_new_tokens: usize,
                           sampling: SamplingParams, eos_token: Option<u32>)
                           -> Result<(RequestId, Receiver<RequestOutput>)> {
+        let mut req = Request::greedy(0, prompt, max_new_tokens);
+        req.sampling = sampling;
+        req.eos_token = eos_token;
+        self.submit_request(req)
+    }
+
+    /// Submit a fully-specified [`Request`] — scheduling class, TTFT/TPOT
+    /// targets, per-request speculative override and all. The handle
+    /// assigns the id (the caller's `req.id` is overwritten), so ids stay
+    /// unique per server.
+    pub fn submit_request(&self, mut req: Request)
+                          -> Result<(RequestId, Receiver<RequestOutput>)> {
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
         let (otx, orx) = mpsc::channel();
         self.tx
-            .send(Msg::Submit(
-                Request { id, prompt, max_new_tokens, sampling, eos_token,
-                          speculative_k: None },
-                otx,
-            ))
+            .send(Msg::Submit(req, otx))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok((id, orx))
     }
@@ -128,6 +159,22 @@ where
     B: ModelBackend + 'static,
     F: FnOnce() -> Result<B> + Send + 'static,
 {
+    let opts = SchedulerOptions { speculative_k,
+                                  ..SchedulerOptions::default() };
+    start_with_kv_options(factory, queue_capacity, seed, kv, opts)
+}
+
+/// The fully-general entry point: [`start_with_kv`] plus every scheduler
+/// knob in [`SchedulerOptions`] (`serve --speculative --admission
+/// --preempt-mode`).
+pub fn start_with_kv_options<B, F>(factory: F, queue_capacity: usize,
+                                   seed: u64, kv: KvChoice,
+                                   opts: SchedulerOptions)
+                                   -> Result<ServerHandle>
+where
+    B: ModelBackend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
     let metrics = Arc::new(ServingMetrics::default());
     metrics.mark_started();
     let m2 = metrics.clone();
@@ -147,8 +194,7 @@ where
                     anyhow::bail!("backend init failed: {msg}");
                 }
             };
-            worker_loop(backend, queue_capacity, seed, m2, rx, kv,
-                        speculative_k)
+            worker_loop(backend, queue_capacity, seed, m2, rx, kv, opts)
         })
         .expect("spawn coordinator");
     ready_rx
@@ -179,10 +225,12 @@ pub fn start_kv<B: ModelBackend + Send + 'static>(backend: B,
 fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
                                 metrics: Arc<ServingMetrics>,
                                 rx: Receiver<Msg>, kv: KvChoice,
-                                speculative_k: usize) -> Result<()> {
+                                opts: SchedulerOptions) -> Result<()> {
     let mut sched = Scheduler::with_kv(backend, queue_capacity, metrics,
                                        seed, kv);
-    sched.set_speculative(speculative_k);
+    sched.set_speculative(opts.speculative_k);
+    sched.set_admission(opts.admission);
+    sched.set_preempt_mode(opts.preempt_mode);
     let mut waiters: Vec<(RequestId, Sender<RequestOutput>)> = Vec::new();
     let mut shutting_down = false;
     loop {
@@ -316,6 +364,47 @@ mod tests {
             outs.push(toks);
         }
         assert_eq!(outs[0], outs[1], "speculative serving changed tokens");
+    }
+
+    #[test]
+    fn submit_request_carries_class_and_targets() {
+        use crate::coordinator::request::Priority;
+        use std::time::Duration;
+        let h = start(MockBackend::new(2, 8, 32, 64), 16, 7);
+        let mut req = Request::greedy(999, vec![5, 6], 3);
+        req.priority = Priority::Interactive;
+        req.ttft_target = Some(Duration::from_secs(3600));
+        req.tpot_target = Some(Duration::from_secs(3600));
+        let (id, rx) = h.submit_request(req).unwrap();
+        assert_ne!(id, 999, "the handle owns id assignment");
+        assert_eq!(rx.recv().unwrap().tokens.len(), 3);
+        assert_eq!(h.metrics.slo_ttft_seen.get(), 1);
+        assert_eq!(h.metrics.slo_ttft_met.get(), 1,
+                   "an hour-long target is trivially met");
+        assert_eq!(h.metrics.slo_tpot_met.get(), 1);
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn options_start_path_applies_admission_policy() {
+        use crate::coordinator::kvcache::KvCacheConfig;
+        let opts = SchedulerOptions {
+            admission: AdmissionPolicy::WorstCase,
+            preempt_mode: PreemptMode::ForceRecompute,
+            ..SchedulerOptions::default()
+        };
+        let h = start_with_kv_options(
+            move || Ok(MockBackend::new(2, 8, 32, 64)), 16, 7,
+            KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                            pool_pages: 16 }),
+            opts)
+            .unwrap();
+        let rx = h.submit(vec![1, 2, 3], 4, SamplingParams::Greedy, None)
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+        assert_eq!(h.metrics.preemptions.get(), 0,
+                   "worst-case admission never preempts");
+        h.shutdown().unwrap();
     }
 
     #[test]

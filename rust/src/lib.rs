@@ -38,3 +38,4 @@ pub mod target;
 pub mod taskpool;
 pub mod ukernel;
 pub mod util;
+pub mod workload;

@@ -4,10 +4,11 @@
 use std::path::PathBuf;
 
 use tenx_iree::autotune::{self, TileRegistry};
-use tenx_iree::cliargs::{parse_thread_count, parse_thread_list,
-                         parse_zero_auto, Command};
-use tenx_iree::coordinator::{self, EngineBackend, KvCacheConfig, KvChoice,
-                             NativeBackend, Precision,
+use tenx_iree::cliargs::{parse_one_of, parse_thread_count,
+                         parse_thread_list, parse_zero_auto, Command};
+use tenx_iree::coordinator::{self, AdmissionPolicy, EngineBackend,
+                             KvCacheConfig, KvChoice, NativeBackend,
+                             Precision, PreemptMode, SchedulerOptions,
                              KV_PAGE_TOKENS_DEFAULT};
 use tenx_iree::ir::{build_matmul_func, ElemType, Module};
 use tenx_iree::kernels::System;
@@ -113,6 +114,20 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
               requests (prompt-lookup proposer, one batched verify pass; \
               0 = off — emitted tokens are bit-identical either way; \
               native backend only)")
+        .opt("admission", "optimistic",
+             "page-reservation policy for the paged layout: optimistic \
+              (seat requests on their prompt pages, preempt + resume when \
+              the pool runs dry) | worst-case (reserve prompt + max_new \
+              pages up front; emitted tokens are identical either way)")
+        .opt("preempt-mode", "auto",
+             "resume path for preemption victims: auto (per-victim cost \
+              model) | recompute (re-prefill through the prefix cache) | \
+              swap (copy pages out to the host arena and back)")
+        .opt("workload", "",
+             "replace the prompt cycle with a seeded scenario-mix \
+              workload: uniform | chat | bursty | agents | cancel-heavy. \
+              Requests carry priorities and TTFT/TPOT targets (see the \
+              report's slo: line); native backend only (empty = off)")
         .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
@@ -128,6 +143,26 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                                         "--kv-pool-pages")?;
     let speculative: usize = m.usize("speculative")?;
     let vocab_flag: usize = m.usize("vocab")?;
+    let admission = match parse_one_of(m.str("admission"), "--admission",
+                                       &["optimistic", "worst-case"])? {
+        "worst-case" => AdmissionPolicy::WorstCase,
+        _ => AdmissionPolicy::Optimistic,
+    };
+    let preempt_mode = match parse_one_of(m.str("preempt-mode"),
+                                          "--preempt-mode",
+                                          &["auto", "recompute", "swap"])? {
+        "recompute" => PreemptMode::ForceRecompute,
+        "swap" => PreemptMode::ForceSwap,
+        _ => PreemptMode::Auto,
+    };
+    let workload = m.str("workload");
+    let mix = if workload.is_empty() {
+        None
+    } else {
+        parse_one_of(workload, "--workload",
+                     tenx_iree::workload::ScenarioMix::preset_names())?;
+        tenx_iree::workload::ScenarioMix::from_name(workload)
+    };
     let path = if m.flag("baseline") { EnginePath::Baseline } else { EnginePath::Mmt4d };
 
     let (handle, vocab) = if m.flag("native") {
@@ -179,7 +214,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         };
         let vocab = vocab_flag;
         eprintln!("serving the native mmt4d backend ({} path, {threads} \
-                   kernel thread{}{}, {} kv{})...",
+                   kernel thread{}{}, {} kv{}{})...",
                   precision.name(), if threads == 1 { "" } else { "s" },
                   if tuned_active { ", tuned tiles" } else { "" },
                   match kv { KvChoice::Slab => "slab",
@@ -188,14 +223,20 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                       format!(", speculative k={speculative}")
                   } else {
                       String::new()
+                  },
+                  match admission {
+                      AdmissionPolicy::WorstCase => ", worst-case admission",
+                      AdmissionPolicy::Optimistic => "",
                   });
         let backend = NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
                                                     precision, 42, &tiles,
                                                     threads)
             .map_err(err_str)?
             .with_parallelism(Parallelism::new(threads));
-        let handle = coordinator::server::start_with_kv_speculative(
-            move || Ok(backend), queue_capacity, 42, kv, speculative)
+        let handle = coordinator::server::start_with_kv_options(
+            move || Ok(backend), queue_capacity, 42, kv,
+            SchedulerOptions { speculative_k: speculative, admission,
+                               preempt_mode })
             .map_err(err_str)?;
         handle.metrics.compute_threads.add(threads as u64);
         (handle, vocab)
@@ -217,6 +258,16 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             eprintln!("note: --speculative applies to the native backend; \
                        the artifact engine has no verify pass (serving \
                        plain decode)");
+        }
+        if !matches!(admission, AdmissionPolicy::Optimistic)
+            || !matches!(preempt_mode, PreemptMode::Auto) {
+            eprintln!("note: --admission/--preempt-mode apply to the \
+                       native paged scheduler; the artifact engine serves \
+                       the slab layout (no preemption)");
+        }
+        if mix.is_some() {
+            eprintln!("note: --workload drives the native demo model; the \
+                       artifact path serves the prompt cycle");
         }
         if vocab_flag != 512 {
             eprintln!("note: --vocab applies to the native demo model; the \
@@ -242,17 +293,58 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     ];
     let sampling = SamplingParams::from_temperature(temp);
     let custom = m.str("prompt");
-    let rxs: Vec<_> = (0..n)
-        .map(|i| {
-            let text = if custom.is_empty() {
-                prompts[i % prompts.len()]
-            } else {
-                custom
-            };
-            let p = tok.encode(text);
-            handle.submit(p, max_new, sampling, None).map_err(err_str)
-        })
-        .collect::<Result<_, _>>()?;
+    let rxs: Vec<_> = if let Some(mix) =
+        mix.filter(|_| m.flag("native"))
+    {
+        if !custom.is_empty() {
+            eprintln!("note: --prompt is ignored when --workload is set");
+        }
+        if temp != 0.0 {
+            eprintln!("note: --workload requests decode greedily; \
+                       --temperature is ignored");
+        }
+        if max_new < 2 || vocab <= 4 {
+            return Err("--workload needs --max-new-tokens >= 2 and \
+                        --vocab > 4"
+                .into());
+        }
+        eprintln!("workload: {} mix, {n} seeded requests", mix.name);
+        // The native demo backend prefills 16 positions; cap prompts there.
+        let reqs = tenx_iree::workload::WorkloadGen::new(42, mix, vocab, 16,
+                                                         max_new)
+            .generate(n);
+        let mut cancels = Vec::new();
+        let rxs = reqs
+            .iter()
+            .map(|w| {
+                let (id, rx) =
+                    handle.submit_request(w.to_request(0)).map_err(err_str)?;
+                if w.cancel_after.is_some() {
+                    cancels.push(id);
+                }
+                Ok(rx)
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        // Cancel-heavy arrivals hang up after submitting: the cancels race
+        // admission and decode, exercising mid-flight teardown. Cancelling
+        // an already-finished id is a no-op.
+        for id in cancels {
+            handle.cancel(id).map_err(err_str)?;
+        }
+        rxs
+    } else {
+        (0..n)
+            .map(|i| {
+                let text = if custom.is_empty() {
+                    prompts[i % prompts.len()]
+                } else {
+                    custom
+                };
+                let p = tok.encode(text);
+                handle.submit(p, max_new, sampling, None).map_err(err_str)
+            })
+            .collect::<Result<_, _>>()?
+    };
     for (i, rx) in rxs.into_iter().enumerate() {
         let out = rx.recv().map_err(err_str)?;
         println!(

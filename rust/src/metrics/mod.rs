@@ -164,6 +164,32 @@ pub struct ServingMetrics {
     /// page-reservation headroom — the signal that pages, not slots, are
     /// the bottleneck.
     pub kv_admission_blocked: Counter,
+    /// Sequences evicted from the running batch because an optimistic
+    /// reservation could not grow (the pool ran dry mid-decode). Each one
+    /// is parked for resume; worst-case admission never preempts.
+    pub preemptions: Counter,
+    /// Preemption victims parked for the recompute resume path (pages
+    /// dropped; the committed context is re-prefilled on resume, usually
+    /// re-hitting the prefix cache for the shared head).
+    pub preempt_recompute: Counter,
+    /// Preemption victims parked with a swapped-out KV payload (copied to
+    /// a host-side arena, copied back on resume; nothing recomputed).
+    pub preempt_swap: Counter,
+    /// Preempted sequences successfully re-admitted to a slot.
+    pub preempt_resumes: Counter,
+    /// Tokens a recompute-resumed sequence re-fed to restore its committed
+    /// KV (each was already streamed to the client once; none is sampled
+    /// again) — the realised cost of the recompute path.
+    pub preempt_replayed_tokens: Counter,
+    /// Finished requests that carried a TTFT target.
+    pub slo_ttft_seen: Counter,
+    /// Of those, the ones whose measured TTFT met the target.
+    pub slo_ttft_met: Counter,
+    /// Finished requests that carried a TPOT (per-output-token) target and
+    /// emitted at least two tokens (one inter-token gap to measure).
+    pub slo_tpot_seen: Counter,
+    /// Of those, the ones whose mean inter-token latency met the target.
+    pub slo_tpot_met: Counter,
     /// Speculative verify passes run (each one scores a drafted batch and
     /// emits 1..=k+1 tokens; 0 means speculation is off or never engaged).
     pub spec_verify_steps: Counter,
@@ -241,6 +267,13 @@ impl ServingMetrics {
                 self.kv_shared_prefix_hits.get(), self.kv_evictions.get(),
                 self.kv_cow_copies.get(), self.kv_admission_blocked.get()
             ));
+            s.push_str(&format!(
+                "preemption: {} preemptions ({} recompute, {} swap), {} \
+                 resumes, {} tokens replayed\n",
+                self.preemptions.get(), self.preempt_recompute.get(),
+                self.preempt_swap.get(), self.preempt_resumes.get(),
+                self.preempt_replayed_tokens.get()
+            ));
         } else {
             s.push_str("kv-cache: slab (contiguous per-slot max_seq \
                         reservations)\n");
@@ -266,6 +299,11 @@ impl ServingMetrics {
             "ttft: mean {:?} p90 {:?}\ne2e: mean {:?} p90 {:?}\n",
             self.ttft.mean(), self.ttft.quantile(0.9),
             self.e2e_latency.mean(), self.e2e_latency.quantile(0.9)
+        ));
+        s.push_str(&format!(
+            "slo: ttft {}/{} within target, tpot {}/{} within target\n",
+            self.slo_ttft_met.get(), self.slo_ttft_seen.get(),
+            self.slo_tpot_met.get(), self.slo_tpot_seen.get()
         ));
         // Scope the process-global pool counters to this server's lifetime
         // (other backends/benches in the same process don't pollute it).
@@ -357,6 +395,31 @@ mod tests {
         assert!(r.contains("(2 cached)"));
         assert!(r.contains("shared-prefix hits 3"));
         assert!(r.contains("evictions 1"));
+    }
+
+    #[test]
+    fn preemption_and_slo_lines() {
+        let m = ServingMetrics::default();
+        // slab: no preemption line (preemption is paged-only machinery),
+        // but SLO attainment is always reported.
+        assert!(!m.report().contains("preemption:"));
+        assert!(m.report().contains(
+            "slo: ttft 0/0 within target, tpot 0/0 within target"));
+        m.kv_pages_total.set(8);
+        m.preemptions.add(3);
+        m.preempt_recompute.add(2);
+        m.preempt_swap.add(1);
+        m.preempt_resumes.add(3);
+        m.preempt_replayed_tokens.add(17);
+        m.slo_ttft_seen.add(4);
+        m.slo_ttft_met.add(3);
+        m.slo_tpot_seen.add(2);
+        m.slo_tpot_met.add(2);
+        let r = m.report();
+        assert!(r.contains("preemption: 3 preemptions (2 recompute, 1 \
+                            swap), 3 resumes, 17 tokens replayed"));
+        assert!(r.contains(
+            "slo: ttft 3/4 within target, tpot 2/2 within target"));
     }
 
     #[test]

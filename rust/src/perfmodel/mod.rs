@@ -31,7 +31,7 @@ pub mod schedule;
 pub mod threading;
 pub mod traffic;
 
-pub use schedule::{LlamaShapes, MatmulShape};
+pub use schedule::{LlamaShapes, MatmulShape, PreemptAction, PreemptCostModel};
 pub use traffic::{blocked_walk_traffic, ElemBytes, WalkShape, WalkTraffic};
 pub use threading::{measure_native_phase, native_thread_model,
                     NativePhasePerf, ThreadModel};

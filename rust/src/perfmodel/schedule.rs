@@ -87,6 +87,93 @@ impl LlamaShapes {
     pub fn matmul_params(&self) -> f64 {
         self.macs_per_token()
     }
+
+    /// KV-cache bytes one token position occupies across all layers
+    /// (K + V, `bytes_per_elem`-wide elements).
+    pub fn kv_bytes_per_token(&self, bytes_per_elem: usize) -> f64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim
+         * bytes_per_elem) as f64
+    }
+}
+
+/// How a preempted sequence gets its KV state back when it is resumed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptAction {
+    /// Drop the pages and re-prefill the committed tokens on resume. The
+    /// prefix cache usually recovers the shared head, so only the private
+    /// tail is recomputed.
+    Recompute,
+    /// Copy the slot's KV payload to a host-side swap arena and copy it
+    /// back on resume. No recompute, but pays two memcpy passes over the
+    /// full context.
+    Swap,
+}
+
+/// Prices recompute-vs-swap for one preemption victim. Units are abstract
+/// "cost" (both sides are normalised to bytes moved through memory): a
+/// recomputed token streams the weight matmuls' operands once per token,
+/// a swapped token is copied out and back in. The model only has to rank
+/// the two options, not predict wall time, so first-order traffic is
+/// enough — the same reasoning behind `perfmodel/traffic.rs`.
+#[derive(Debug, Clone)]
+pub struct PreemptCostModel {
+    /// Bytes a single recomputed token moves: the per-token MAC count
+    /// scaled to operand traffic. Chunky prefill amortises weight reads
+    /// across the batch, captured by `prefill_reuse`.
+    recompute_bytes_per_token: f64,
+    /// Bytes a single swapped token moves (out + back in).
+    swap_bytes_per_token: f64,
+}
+
+impl PreemptCostModel {
+    /// Model for `shapes` at `bytes_per_elem`-wide weights/KV.
+    /// `prefill_reuse` is the effective operand-reuse factor of the chunked
+    /// prefill path (weights read once per tile row-block rather than once
+    /// per token); 8 matches the prefill tile heights the autotuner elects.
+    pub fn new(shapes: &LlamaShapes, bytes_per_elem: usize,
+               prefill_reuse: f64) -> PreemptCostModel {
+        let reuse = prefill_reuse.max(1.0);
+        PreemptCostModel {
+            recompute_bytes_per_token: shapes.macs_per_token()
+                * bytes_per_elem as f64 / reuse,
+            swap_bytes_per_token: 2.0
+                * shapes.kv_bytes_per_token(bytes_per_elem),
+        }
+    }
+
+    /// Default model for this repo's tiny serving shapes, f16 elements.
+    pub fn tiny_f16() -> PreemptCostModel {
+        PreemptCostModel::new(&LlamaShapes::tiny(), 2, 8.0)
+    }
+
+    /// Cost of resuming via recompute when `ctx_tokens` are committed and
+    /// `cached_prefix_tokens` of them are expected to re-hit the prefix
+    /// cache (those cost a hash lookup, not a forward pass).
+    pub fn recompute_cost(&self, ctx_tokens: usize,
+                          cached_prefix_tokens: usize) -> f64 {
+        let recomputed = ctx_tokens.saturating_sub(cached_prefix_tokens);
+        recomputed as f64 * self.recompute_bytes_per_token
+    }
+
+    /// Cost of resuming via swap: the whole context is copied out and back.
+    pub fn swap_cost(&self, ctx_tokens: usize) -> f64 {
+        ctx_tokens as f64 * self.swap_bytes_per_token
+    }
+
+    /// Elect the cheaper resume path for a victim with `ctx_tokens`
+    /// committed, of which `cached_prefix_tokens` should survive in the
+    /// prefix cache. Deterministic; ties go to `Recompute` (it also frees
+    /// the swap arena).
+    pub fn choose(&self, ctx_tokens: usize,
+                  cached_prefix_tokens: usize) -> PreemptAction {
+        if self.swap_cost(ctx_tokens)
+            < self.recompute_cost(ctx_tokens, cached_prefix_tokens)
+        {
+            PreemptAction::Swap
+        } else {
+            PreemptAction::Recompute
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,5 +202,28 @@ mod tests {
         let s = LlamaShapes::tiny();
         assert_eq!(s.d_model, 256);
         assert_eq!(s.weight_matmuls().len(), 4 * 7 + 1);
+    }
+
+    #[test]
+    fn preempt_cost_model_ranks_resume_paths() {
+        let m = PreemptCostModel::tiny_f16();
+        // Nothing cached: recompute replays a forward pass per token while
+        // swap only copies the (much smaller) KV payload — swap wins.
+        assert_eq!(m.choose(64, 0), PreemptAction::Swap);
+        // Fully cached prefix: recompute is a hash lookup, swap still
+        // copies every token both ways.
+        assert_eq!(m.choose(64, 64), PreemptAction::Recompute);
+        // Empty context ties at zero cost; ties elect Recompute.
+        assert_eq!(m.choose(0, 0), PreemptAction::Recompute);
+        // More cached prefix strictly cheapens recompute.
+        assert!(m.recompute_cost(32, 16) < m.recompute_cost(32, 0));
+        assert!(m.swap_cost(32) > 0.0);
+    }
+
+    #[test]
+    fn kv_bytes_count_both_k_and_v() {
+        let s = LlamaShapes::tiny();
+        // 2 (K+V) * 4 layers * 2 kv-heads * 64 head-dim * 2 bytes.
+        assert_eq!(s.kv_bytes_per_token(2), 2048.0);
     }
 }

@@ -1,0 +1,463 @@
+//! Seeded scenario-mix workload generation for the serving scheduler.
+//!
+//! Serving papers evaluate schedulers on *mixes* — chat traffic
+//! interleaved with long-document prefills, bursts of short queries, agent
+//! swarms hammering one shared system prompt — because each scenario
+//! stresses a different part of the stack: prefix sharing, page-pool
+//! pressure, admission latency, cancellation teardown. This module
+//! generates such mixes deterministically (same seed, same trace) and
+//! drives a [`Scheduler`] through them while sampling occupancy, so the
+//! same workload feeds both `benches/workload_mix.rs` (occupancy / SLO
+//! comparisons across admission policies) and the fuzz-style tests.
+
+use std::time::Duration;
+
+use crate::coordinator::{ModelBackend, Priority, Request, Scheduler};
+use crate::util::prng::Rng;
+
+/// One traffic archetype in a mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Interactive chat: mid-sized prompts, mid-sized completions, latency
+    /// targets on both TTFT and TPOT.
+    Chat,
+    /// Long-document ingestion: prompt at the prefill cap, short summary
+    /// out, batch priority, no latency targets — pure throughput filler
+    /// that hogs pages.
+    LongDoc,
+    /// Bursts of short interactive queries arriving together: tiny
+    /// prompts, tight TTFT targets, the head-of-line-blocking probe.
+    Bursty,
+    /// An agent swarm fanning out over one shared system prompt: identical
+    /// long prefix + tiny per-agent suffix, arriving together — the
+    /// prefix-cache / COW stressor.
+    AgentSwarm,
+    /// Requests likely to be torn down mid-flight (client disconnects) —
+    /// the cancellation/teardown stressor.
+    CancelHeavy,
+}
+
+const SCENARIOS: [Scenario; 5] = [Scenario::Chat, Scenario::LongDoc,
+                                  Scenario::Bursty, Scenario::AgentSwarm,
+                                  Scenario::CancelHeavy];
+
+/// Relative weights over the five scenarios (need not sum to anything).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScenarioMix {
+    /// Weights in [`Scenario`] declaration order.
+    pub weights: [u32; 5],
+    /// The preset name this mix parses back to (for reports).
+    pub name: &'static str,
+}
+
+impl ScenarioMix {
+    /// Every scenario equally likely.
+    pub fn uniform() -> ScenarioMix {
+        ScenarioMix { weights: [1; 5], name: "uniform" }
+    }
+
+    /// Mostly chat with background long-document traffic.
+    pub fn chat() -> ScenarioMix {
+        ScenarioMix { weights: [6, 2, 1, 0, 1], name: "chat" }
+    }
+
+    /// Burst-dominated: short interactive spikes over batch filler.
+    pub fn bursty() -> ScenarioMix {
+        ScenarioMix { weights: [1, 2, 6, 0, 1], name: "bursty" }
+    }
+
+    /// Agent swarms over a shared system prompt, plus some chat.
+    pub fn agents() -> ScenarioMix {
+        ScenarioMix { weights: [2, 0, 1, 6, 1], name: "agents" }
+    }
+
+    /// Disconnect-heavy traffic.
+    pub fn cancel_heavy() -> ScenarioMix {
+        ScenarioMix { weights: [2, 1, 1, 0, 6], name: "cancel-heavy" }
+    }
+
+    /// Parse a preset name (`serve --workload <name>`).
+    pub fn from_name(name: &str) -> Option<ScenarioMix> {
+        match name {
+            "uniform" => Some(ScenarioMix::uniform()),
+            "chat" => Some(ScenarioMix::chat()),
+            "bursty" => Some(ScenarioMix::bursty()),
+            "agents" => Some(ScenarioMix::agents()),
+            "cancel-heavy" => Some(ScenarioMix::cancel_heavy()),
+            _ => None,
+        }
+    }
+
+    /// The preset names `from_name` accepts.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["uniform", "chat", "bursty", "agents", "cancel-heavy"]
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Scenario {
+        let total: u32 = self.weights.iter().sum();
+        assert!(total > 0, "a mix needs at least one positive weight");
+        let mut pick = rng.below(total as u64) as u32;
+        for (s, &w) in SCENARIOS.iter().zip(&self.weights) {
+            if pick < w {
+                return *s;
+            }
+            pick -= w;
+        }
+        unreachable!("pick < total")
+    }
+}
+
+/// One generated request: the [`Request`] payload plus its arrival time
+/// and optional mid-flight cancellation, in scheduler steps.
+#[derive(Debug, Clone)]
+pub struct WorkloadRequest {
+    pub scenario: Scenario,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub priority: Priority,
+    pub ttft_target: Option<Duration>,
+    pub tpot_target: Option<Duration>,
+    /// Step index at which the request is submitted.
+    pub arrival_step: usize,
+    /// Cancel this many steps after submission (None = runs to finish).
+    pub cancel_after: Option<usize>,
+}
+
+impl WorkloadRequest {
+    /// The [`Request`] to submit for this workload entry.
+    pub fn to_request(&self, id: u64) -> Request {
+        let mut r = Request::greedy(id, self.prompt.clone(),
+                                    self.max_new_tokens);
+        r.priority = self.priority;
+        r.ttft_target = self.ttft_target;
+        r.tpot_target = self.tpot_target;
+        r
+    }
+}
+
+/// Seeded scenario-mix generator. Same `(seed, mix, caps)`, same requests.
+#[derive(Debug)]
+pub struct WorkloadGen {
+    rng: Rng,
+    mix: ScenarioMix,
+    /// Token alphabet: prompt tokens are drawn from [3, vocab).
+    vocab: usize,
+    /// Longest prompt to emit (the backend's prefill capacity).
+    max_prompt: usize,
+    /// Largest completion budget to emit.
+    max_new: usize,
+    /// The swarm's shared system prompt, generated once per generator so
+    /// every AgentSwarm request re-hits the same prefix pages.
+    system_prompt: Vec<u32>,
+    /// Current arrival step (advanced between non-burst arrivals).
+    clock: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, mix: ScenarioMix, vocab: usize, max_prompt: usize,
+               max_new: usize) -> WorkloadGen {
+        assert!(vocab > 4 && max_prompt >= 4 && max_new >= 2);
+        let mut rng = Rng::new(seed);
+        let sys_len = (max_prompt / 2).max(2);
+        let system_prompt = (0..sys_len)
+            .map(|_| rng.range(3, vocab as i64) as u32)
+            .collect();
+        WorkloadGen { rng, mix, vocab, max_prompt, max_new, system_prompt,
+                      clock: 0 }
+    }
+
+    fn tokens(&mut self, n: usize) -> Vec<u32> {
+        (0..n).map(|_| self.rng.range(3, self.vocab as i64) as u32).collect()
+    }
+
+    fn ms(&mut self, lo: u64, hi: u64) -> Option<Duration> {
+        Some(Duration::from_millis(
+            self.rng.range(lo as i64, hi as i64) as u64))
+    }
+
+    /// Generate the next request of the mix.
+    pub fn next_request(&mut self) -> WorkloadRequest {
+        let scenario = self.mix.sample(&mut self.rng);
+        let (cap, new_cap) = (self.max_prompt, self.max_new);
+        let frac = |lo: usize, hi: usize, r: &mut Rng| {
+            (cap * r.range(lo as i64, hi as i64 + 1) as usize / 100).max(1)
+        };
+        // Bursty and swarm arrivals share the current step; everything
+        // else trickles in 0-2 steps apart.
+        let clumped = matches!(scenario,
+                               Scenario::Bursty | Scenario::AgentSwarm);
+        if !clumped {
+            self.clock += self.rng.range(0, 3) as usize;
+        }
+        let arrival_step = self.clock;
+        let mut w = match scenario {
+            Scenario::Chat => WorkloadRequest {
+                scenario,
+                prompt: { let n = frac(25, 75, &mut self.rng);
+                          self.tokens(n) },
+                max_new_tokens: 2 + self.rng.below((new_cap - 1) as u64)
+                    as usize,
+                priority: Priority::Normal,
+                ttft_target: None,
+                tpot_target: None,
+                arrival_step,
+                cancel_after: None,
+            },
+            Scenario::LongDoc => WorkloadRequest {
+                scenario,
+                prompt: self.tokens(cap),
+                max_new_tokens: 2 + self.rng.below(3).min(new_cap as u64 - 2)
+                    as usize,
+                priority: Priority::Batch,
+                ttft_target: None,
+                tpot_target: None,
+                arrival_step,
+                cancel_after: None,
+            },
+            Scenario::Bursty => WorkloadRequest {
+                scenario,
+                prompt: { let n = frac(5, 25, &mut self.rng);
+                          self.tokens(n) },
+                max_new_tokens: 2 + self.rng.below(3).min(new_cap as u64 - 2)
+                    as usize,
+                priority: Priority::Interactive,
+                ttft_target: None,
+                tpot_target: None,
+                arrival_step,
+                cancel_after: None,
+            },
+            Scenario::AgentSwarm => {
+                let mut prompt = self.system_prompt.clone();
+                let suffix = 1 + self.rng.below(
+                    (cap - prompt.len()).max(1) as u64) as usize;
+                let tail = self.tokens(suffix);
+                prompt.extend_from_slice(&tail);
+                prompt.truncate(cap);
+                WorkloadRequest {
+                    scenario,
+                    prompt,
+                    max_new_tokens: 2 + self.rng.below(
+                        (new_cap - 1) as u64) as usize,
+                    priority: Priority::Normal,
+                    ttft_target: None,
+                    tpot_target: None,
+                    arrival_step,
+                    cancel_after: None,
+                }
+            }
+            Scenario::CancelHeavy => WorkloadRequest {
+                scenario,
+                prompt: { let n = frac(10, 60, &mut self.rng);
+                          self.tokens(n) },
+                max_new_tokens: new_cap,
+                priority: Priority::Normal,
+                ttft_target: None,
+                tpot_target: None,
+                arrival_step,
+                cancel_after: Some(1 + self.rng.below(4) as usize),
+            },
+        };
+        // Latency targets after the shape draws, so target sampling never
+        // perturbs prompt contents between scenarios.
+        match scenario {
+            Scenario::Chat => {
+                w.ttft_target = self.ms(20, 200);
+                w.tpot_target = self.ms(5, 50);
+            }
+            Scenario::Bursty => {
+                w.ttft_target = self.ms(1, 25);
+            }
+            Scenario::AgentSwarm => {
+                if self.rng.below(2) == 0 {
+                    w.tpot_target = self.ms(5, 50);
+                }
+            }
+            Scenario::LongDoc | Scenario::CancelHeavy => {}
+        }
+        w
+    }
+
+    /// Generate `n` requests, ordered by arrival step.
+    pub fn generate(&mut self, n: usize) -> Vec<WorkloadRequest> {
+        let mut reqs: Vec<WorkloadRequest> =
+            (0..n).map(|_| self.next_request()).collect();
+        // next_request's clock is already monotone; the sort is belt and
+        // braces for future non-monotone arrival processes.
+        reqs.sort_by_key(|r| r.arrival_step);
+        reqs
+    }
+}
+
+/// What a [`drive`] run observed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DriveStats {
+    /// Requests submitted / rejected at the queue.
+    pub submitted: usize,
+    pub rejected: usize,
+    /// Cancels that hit a live request.
+    pub cancels_hit: usize,
+    /// Requests that came back via `take_finished`.
+    pub finished: usize,
+    /// Scheduler steps to drain the workload.
+    pub steps: usize,
+    /// Peak concurrently-active sequences.
+    pub peak_active: usize,
+    /// Sum of active sequences over all steps (mean = sum / steps).
+    pub active_steps_sum: usize,
+    /// Peak paged-pool occupancy in permille (0 for slab runs).
+    pub peak_occupancy_permille: usize,
+    /// Sum of per-step occupancy permille (mean = sum / steps).
+    pub occupancy_permille_sum: usize,
+}
+
+impl DriveStats {
+    /// Mean concurrently-active sequences, x100.
+    pub fn mean_active_x100(&self) -> usize {
+        if self.steps == 0 { 0 }
+        else { self.active_steps_sum * 100 / self.steps }
+    }
+
+    /// Mean paged-pool occupancy in permille.
+    pub fn mean_occupancy_permille(&self) -> usize {
+        if self.steps == 0 { 0 }
+        else { self.occupancy_permille_sum / self.steps }
+    }
+}
+
+/// Drive `sched` through `reqs` (ids `base_id..`): submit each request at
+/// its arrival step, fire its scheduled cancel, and step the scheduler
+/// until the workload drains, sampling concurrency and pool occupancy
+/// after every step. Deterministic for deterministic backends.
+pub fn drive<B: ModelBackend>(sched: &mut Scheduler<B>,
+                              reqs: &[WorkloadRequest],
+                              base_id: u64) -> DriveStats {
+    let mut stats = DriveStats::default();
+    let mut cancels: Vec<(usize, u64)> = Vec::new(); // (due step, id)
+    let mut next = 0;
+    let mut step = 0usize;
+    loop {
+        while next < reqs.len() && reqs[next].arrival_step <= step {
+            let id = base_id + next as u64;
+            if sched.submit(reqs[next].to_request(id)) {
+                stats.submitted += 1;
+                if let Some(after) = reqs[next].cancel_after {
+                    cancels.push((step + after, id));
+                }
+            } else {
+                stats.rejected += 1;
+            }
+            next += 1;
+        }
+        cancels.retain(|&(due, id)| {
+            if due > step {
+                return true;
+            }
+            if sched.cancel(id) {
+                stats.cancels_hit += 1;
+            }
+            false
+        });
+        if next >= reqs.len() && !sched.has_work() {
+            break;
+        }
+        sched.step().expect("workload drive step");
+        step += 1;
+        stats.steps = step;
+        let active = sched.active_count();
+        stats.peak_active = stats.peak_active.max(active);
+        stats.active_steps_sum += active;
+        if let Some(kv) = sched.kv_manager() {
+            let occ = kv.pages_in_use() * 1000 / kv.pool_pages().max(1);
+            stats.peak_occupancy_permille =
+                stats.peak_occupancy_permille.max(occ);
+            stats.occupancy_permille_sum += occ;
+        }
+        stats.finished += sched.take_finished().len();
+        assert!(step < 100_000, "workload did not drain");
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use crate::coordinator::{KvCacheConfig, KvChoice, MockBackend};
+    use crate::metrics::ServingMetrics;
+
+    fn gen(seed: u64, mix: ScenarioMix) -> WorkloadGen {
+        WorkloadGen::new(seed, mix, 64, 8, 6)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a: Vec<_> = gen(7, ScenarioMix::uniform()).generate(40)
+            .iter().map(|r| (r.scenario, r.prompt.clone(),
+                             r.max_new_tokens, r.arrival_step,
+                             r.cancel_after)).collect();
+        let b: Vec<_> = gen(7, ScenarioMix::uniform()).generate(40)
+            .iter().map(|r| (r.scenario, r.prompt.clone(),
+                             r.max_new_tokens, r.arrival_step,
+                             r.cancel_after)).collect();
+        assert_eq!(a, b);
+        let c = gen(8, ScenarioMix::uniform()).generate(40);
+        assert!(c.iter().zip(gen(7, ScenarioMix::uniform()).generate(40))
+                    .any(|(x, y)| x.prompt != y.prompt),
+                "different seeds must differ somewhere");
+    }
+
+    #[test]
+    fn scenarios_have_their_shapes() {
+        let reqs = gen(11, ScenarioMix::uniform()).generate(300);
+        let of = |s: Scenario| reqs.iter().filter(move |r| r.scenario == s);
+        assert!(of(Scenario::LongDoc).all(|r| r.prompt.len() == 8),
+                "long docs fill the prefill cap");
+        assert!(of(Scenario::Bursty).all(|r| r.prompt.len() <= 2
+                                         && r.ttft_target.is_some()
+                                         && r.priority
+                                            == Priority::Interactive));
+        assert!(of(Scenario::CancelHeavy).all(|r| r.cancel_after.is_some()));
+        assert!(of(Scenario::Chat).all(|r| r.tpot_target.is_some()));
+        let sys: Vec<Vec<u32>> = of(Scenario::AgentSwarm)
+            .map(|r| r.prompt[..4].to_vec()).collect();
+        assert!(sys.len() > 10, "uniform mix must draw swarms");
+        assert!(sys.windows(2).all(|w| w[0] == w[1]),
+                "swarm agents share one system prompt");
+        for s in SCENARIOS {
+            assert!(of(s).count() > 20, "{s:?} missing from uniform mix");
+        }
+        assert!(reqs.windows(2).all(|w| w[0].arrival_step
+                                    <= w[1].arrival_step));
+    }
+
+    #[test]
+    fn mix_presets_parse_and_weight() {
+        for name in ScenarioMix::preset_names() {
+            let m = ScenarioMix::from_name(name).unwrap();
+            assert_eq!(m.name, *name);
+        }
+        assert!(ScenarioMix::from_name("nope").is_none());
+        let reqs = gen(3, ScenarioMix::bursty()).generate(200);
+        let bursts = reqs.iter()
+            .filter(|r| r.scenario == Scenario::Bursty).count();
+        assert!(bursts > 100, "bursty preset must be burst-dominated");
+    }
+
+    #[test]
+    fn drive_runs_a_mix_to_completion() {
+        let reqs = gen(5, ScenarioMix::uniform()).generate(24);
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = Scheduler::with_kv(
+            MockBackend::new(2, 8, 32, 64), 64, metrics.clone(), 7,
+            KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                            pool_pages: 0 }));
+        let stats = drive(&mut s, &reqs, 100);
+        assert_eq!(stats.submitted, 24);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.finished, 24, "every request comes back");
+        assert!(stats.peak_active >= 1 && stats.peak_active <= 2);
+        assert!(stats.peak_occupancy_permille > 0);
+        assert_eq!(metrics.kv_pages_in_use.get(), 0, "drained clean");
+        s.kv_manager().unwrap().check_invariants().unwrap();
+    }
+}

@@ -204,14 +204,11 @@ fn paged_native_serving_token_exact_and_shares_prefixes() {
             let mut s = Scheduler::with_kv(backend, 64, metrics.clone(), 5,
                                            choice);
             for id in 0..6u64 {
-                assert!(s.submit(Request {
+                assert!(s.submit(Request::greedy(
                     id,
-                    prompt: vec![9, 10, 11, 12, 13 + id as u32],
-                    max_new_tokens: 3 + (id as usize % 3),
-                    sampling: SamplingParams::Greedy,
-                    eos_token: None,
-                    speculative_k: None,
-                }));
+                    vec![9, 10, 11, 12, 13 + id as u32],
+                    3 + (id as usize % 3),
+                )));
             }
             let mut steps = 0;
             while s.has_work() {
@@ -261,14 +258,11 @@ fn speculative_native_serving_token_exact_both_precisions() {
                                                 pool_pages: 0 }));
             s.set_speculative(spec);
             for id in 0..4u64 {
-                assert!(s.submit(Request {
+                assert!(s.submit(Request::greedy(
                     id,
-                    prompt: vec![9, 10, 11, 12, 13 + id as u32],
-                    max_new_tokens: 20,
-                    sampling: SamplingParams::Greedy,
-                    eos_token: None,
-                    speculative_k: None,
-                }));
+                    vec![9, 10, 11, 12, 13 + id as u32],
+                    20,
+                )));
             }
             let mut steps = 0;
             while s.has_work() {
@@ -353,11 +347,7 @@ fn finished_prefix_pages_evict_in_lru_order_under_pressure() {
     let mut run = |s: &mut Scheduler<MockBackend>, prompt: Vec<u32>,
                    max_new: usize| {
         next_id += 1;
-        assert!(s.submit(Request { id: next_id, prompt,
-                                   max_new_tokens: max_new,
-                                   sampling: SamplingParams::Greedy,
-                                   eos_token: None,
-                                   speculative_k: None }));
+        assert!(s.submit(Request::greedy(next_id, prompt, max_new)));
         let mut steps = 0;
         while s.has_work() {
             s.step().unwrap();

@@ -156,6 +156,48 @@ zero-repack steady state"
     echo "speculative smoke ($prec): greedy-exact tokens, $accepted drafts accepted, 0 packs / 0 allocs"
 done
 
+echo "== preemption serve smoke (optimistic admission, undersized pool) =="
+# A bursty scenario mix on a pool deliberately too small for every
+# admitted sequence's decode growth must preempt and resume victims
+# mid-flight, score SLO targets, and keep the zero-repack steady state
+# through the preempt/resume churn. The same run under worst-case
+# reservations must never preempt (the policy flag actually routes).
+preempt_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+    --precision f16 --vocab 64 --workload bursty --requests 24 \
+    --max-new-tokens 8 --kv-page-tokens 4 --kv-pool-pages 6)"
+preempts="$(printf '%s\n' "$preempt_out" \
+    | sed -n 's/^preemption: \([0-9]*\) preemptions.*/\1/p')"
+if [ -z "$preempts" ] || [ "$preempts" -eq 0 ]; then
+    echo "preemption smoke: expected preemptions > 0 on the undersized pool"
+    printf '%s\n' "$preempt_out"
+    exit 1
+fi
+slo_seen="$(printf '%s\n' "$preempt_out" \
+    | sed -n 's|^slo: ttft [0-9]*/\([0-9]*\) .*|\1|p')"
+if [ -z "$slo_seen" ] || [ "$slo_seen" -eq 0 ]; then
+    echo "preemption smoke: expected TTFT-targeted requests on the slo: line"
+    printf '%s\n' "$preempt_out"
+    exit 1
+fi
+if ! printf '%s\n' "$preempt_out" | grep -q \
+    '^steady-state: decode rhs packs 0, decode scratch allocs 0'; then
+    echo "preemption smoke: preempt/resume churn broke the zero-repack \
+steady state"
+    printf '%s\n' "$preempt_out"
+    exit 1
+fi
+worst_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+    --precision f16 --vocab 64 --workload bursty --requests 24 \
+    --max-new-tokens 8 --kv-page-tokens 4 --kv-pool-pages 6 \
+    --admission worst-case)"
+if ! printf '%s\n' "$worst_out" | grep -q '^preemption: 0 preemptions'; then
+    echo "preemption smoke: worst-case admission must never preempt"
+    printf '%s\n' "$worst_out"
+    exit 1
+fi
+echo "preemption smoke: $preempts preemptions, $slo_seen ttft-targeted \
+requests scored, 0 packs / 0 allocs; worst-case preempted 0"
+
 echo "== threaded ukernel bench (quick, 2 workers) =="
 TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
 
@@ -205,6 +247,10 @@ if [ "${RUN_BENCHES:-0}" = "1" ]; then
     # speculative_decode self-asserts k>0 parity with plain greedy and
     # > 1 tokens per verify forward on its chain prompts.
     TENX_BENCH_QUICK=1 cargo bench --bench speculative_decode
+    # workload_mix self-asserts optimistic admission beats worst-case
+    # on peak concurrency and mean occupancy for the bursty and
+    # agent-swarm mixes at an equal, undersized pool.
+    TENX_BENCH_QUICK=1 cargo bench --bench workload_mix
     echo "== tile_sweep A2d: tuned-vs-static (quick profile) =="
     profile="$(mktemp /tmp/tenx-tuning-bench.XXXXXX)"
     cargo run --release --quiet --bin tenx -- autotune --quick \
