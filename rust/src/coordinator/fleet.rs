@@ -1,0 +1,550 @@
+//! The fleet tier: N in-process coordinator instances — each owning an
+//! independent page pool and scheduler — behind a prefix-affinity router.
+//!
+//! The millions-of-users step on the ROADMAP is horizontal: one host's
+//! page pool saturates long before its CPUs do, so serving scale comes
+//! from sharding the KV pool across coordinator instances. The routing
+//! decision is what makes sharding *cheap*: a [`FleetRouter`] under
+//! [`RouterPolicy::Prefix`] consistent-hashes the chained prefix key of a
+//! request's longest page-aligned prompt prefix — the **same** key the
+//! prefix cache publishes pages under
+//! ([`prefix_key`](crate::coordinator::kvcache::prefix_key); one shared
+//! helper, so router placement and cache lookup can never silently
+//! diverge) — which lands every request carrying an already-seen system
+//! prompt on the shard that still holds those pages. Identical prompts
+//! re-share whole pages instead of re-prefilling them once per shard,
+//! which is exactly the memory-bandwidth relief a cache-bound RISC-V host
+//! needs. [`RouterPolicy::RoundRobin`] is the control arm: perfect load
+//! spreading, zero affinity — `benches/fleet_serving.rs` holds the two
+//! against each other at equal total page memory.
+//!
+//! Everything here is in-process (threads, not sockets): the scheduling
+//! math — routing, shard-aware ids, N-way preemption/speculation/cancel —
+//! is proven before any network layer exists, per the roadmap. Two
+//! shapes are provided:
+//!
+//! * [`FleetScheduler`] — N bare [`Scheduler`]s stepped in lockstep by
+//!   the caller. Deterministic, so property tests can assert a fleet is
+//!   token-exact vs a single instance ([`crate::workload::drive_fleet`]).
+//! * [`FleetHandle`] — N threaded [`ServerHandle`]s for `tenx serve
+//!   --fleet N --router prefix|round-robin`. Request ids are
+//!   shard-namespaced (shard `i` of `n` issues `i+1, i+1+n, ...`), so ids
+//!   never collide across instances and `(id - 1) % n` recovers the owner
+//!   for fleet-wide cancel.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+
+use anyhow::Result;
+
+use super::backend::ModelBackend;
+use super::kvcache::{chain_hash, prefix_key, KvChoice,
+                     KV_PAGE_TOKENS_DEFAULT};
+use super::request::{Request, RequestId, RequestOutput};
+use super::scheduler::Scheduler;
+use super::server::{start_with_kv_options, SchedulerOptions, ServerHandle};
+use crate::llm::SamplingParams;
+use crate::metrics::ServingMetrics;
+
+/// How the fleet spreads requests over shards (`serve --router`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Consistent-hash the prompt's page-aligned prefix key (rendezvous
+    /// placement): shared system prompts co-locate with their cached
+    /// pages.
+    Prefix,
+    /// Ignore content, rotate shards — the affinity-free control arm.
+    RoundRobin,
+}
+
+impl RouterPolicy {
+    /// Parse a `--router` value.
+    pub fn from_name(name: &str) -> Option<RouterPolicy> {
+        match name {
+            "prefix" => Some(RouterPolicy::Prefix),
+            "round-robin" => Some(RouterPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    /// The names `from_name` accepts.
+    pub fn names() -> &'static [&'static str] {
+        &["prefix", "round-robin"]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::Prefix => "prefix",
+            RouterPolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Stateless-per-request shard placement (the round-robin arm carries an
+/// atomic cursor; prefix placement is a pure function of the prompt, so
+/// it is deterministic across threads, runs and processes).
+pub struct FleetRouter {
+    policy: RouterPolicy,
+    shards: usize,
+    /// Page size the placement key is chunked by — must match the
+    /// shards' KV page size or affinity silently degrades to random.
+    page_tokens: usize,
+    /// Prompts are truncated to the backend's prefill window before the
+    /// cache ever sees them; keying the route on the same truncation
+    /// keeps over-long prompts affine with their cached (truncated) head.
+    prompt_cap: usize,
+    rr_next: AtomicUsize,
+}
+
+impl FleetRouter {
+    pub fn new(policy: RouterPolicy, shards: usize,
+               page_tokens: usize) -> FleetRouter {
+        assert!(shards >= 1, "a fleet needs at least one shard");
+        assert!(page_tokens >= 1, "page_tokens must be >= 1");
+        FleetRouter { policy, shards, page_tokens,
+                      prompt_cap: usize::MAX,
+                      rr_next: AtomicUsize::new(0) }
+    }
+
+    /// Truncate routing keys at the backend's prefill window.
+    pub fn with_prompt_cap(mut self, cap: usize) -> FleetRouter {
+        self.prompt_cap = cap.max(1);
+        self
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard this prompt is served on. Prefix placement is rendezvous
+    /// (highest-random-weight) hashing: score every shard by re-chaining
+    /// the prefix key with the shard index and take the argmax. Unlike
+    /// `key % n` it moves only ~1/n of the keyspace when a shard is added
+    /// — the property that will matter once shards join and leave over a
+    /// network; in-process it costs nothing and keeps the math honest.
+    pub fn route(&self, prompt: &[u32]) -> usize {
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.shards
+            }
+            RouterPolicy::Prefix => {
+                let capped = &prompt[..prompt.len().min(self.prompt_cap)];
+                let toks: Vec<i32> =
+                    capped.iter().map(|&t| t as i32).collect();
+                let key = prefix_key(&toks, self.page_tokens);
+                (0..self.shards)
+                    .max_by_key(|&s| (chain_hash(key, &[s as i32]), s))
+                    .expect("shards >= 1")
+            }
+        }
+    }
+}
+
+/// One aggregated `fleet:` report block over per-shard
+/// [`ServingMetrics`]: a header, one line per shard, and a fleet-level
+/// total line. `scripts/ci.sh` greps these — per-shard `packs P / allocs
+/// A` for the N-way zero-repack invariant, the total's `hits` for the
+/// prefix-vs-round-robin comparison, and `arena peak` against the cap.
+pub fn fleet_report(policy: RouterPolicy, routed: &[u64],
+                    shards: &[&ServingMetrics]) -> String {
+    let mut s = format!(
+        "fleet: {} shards, {} router, routed {}\n",
+        shards.len(), policy.name(),
+        routed.iter().map(|r| r.to_string())
+            .collect::<Vec<_>>().join("/"));
+    let (mut sub, mut comp, mut hits, mut evic, mut pre, mut blocked) =
+        (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+    let (mut peak, mut dec) = (0u64, 0u64);
+    for (i, m) in shards.iter().enumerate() {
+        sub += m.requests_submitted.get();
+        comp += m.requests_completed.get();
+        hits += m.kv_shared_prefix_hits.get();
+        evic += m.kv_evictions.get();
+        pre += m.preemptions.get();
+        blocked += m.preempt_swap_blocked.get();
+        peak = peak.max(m.swap_arena_pages_peak.get());
+        dec += m.tokens_decoded.get();
+        s.push_str(&format!(
+            "fleet: shard {i}: {} submitted, {} completed, {} rejected, \
+             {} cancelled, hits {}, evictions {}, preemptions {}, arena \
+             peak {}/{}, packs {} / allocs {}\n",
+            m.requests_submitted.get(), m.requests_completed.get(),
+            m.queue_rejections.get(), m.requests_cancelled.get(),
+            m.kv_shared_prefix_hits.get(), m.kv_evictions.get(),
+            m.preemptions.get(), m.swap_arena_pages_peak.get(),
+            m.swap_arena_pages_cap.get(), m.decode_rhs_packs.get(),
+            m.decode_scratch_allocs.get()));
+    }
+    let cap = shards.iter().map(|m| m.swap_arena_pages_cap.get())
+        .max().unwrap_or(0);
+    s.push_str(&format!(
+        "fleet: total: {sub} submitted, {comp} completed, hits {hits}, \
+         evictions {evic}, preemptions {pre}, swap-blocked {blocked}, \
+         arena peak {peak} (cap {cap}/shard), decode tokens {dec}\n"));
+    s
+}
+
+/// N bare schedulers behind one router, stepped in lockstep — the
+/// deterministic in-process fleet for benches and property tests. Ids
+/// are caller-assigned (as with [`Scheduler::submit`]); the caller keeps
+/// them fleet-unique, which [`crate::workload::drive_fleet`] does by
+/// numbering the whole workload from one base.
+pub struct FleetScheduler<B: ModelBackend> {
+    shards: Vec<Scheduler<B>>,
+    router: FleetRouter,
+    routed: Vec<u64>,
+}
+
+impl<B: ModelBackend> FleetScheduler<B> {
+    /// Wrap already-built shards (each with its own pool) in a router.
+    /// The placement page size comes from shard 0's KV manager, so the
+    /// routing key chunks exactly like the caches it is courting.
+    pub fn new(shards: Vec<Scheduler<B>>,
+               policy: RouterPolicy) -> FleetScheduler<B> {
+        assert!(!shards.is_empty(), "a fleet needs at least one shard");
+        let pt = shards[0].kv_manager().map(|kv| kv.page_tokens())
+            .unwrap_or(KV_PAGE_TOKENS_DEFAULT);
+        let cap = shards[0].backend().dims().prefill_seq;
+        let n = shards.len();
+        let router =
+            FleetRouter::new(policy, n, pt).with_prompt_cap(cap);
+        FleetScheduler { shards, router, routed: vec![0; n] }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Scheduler<B>] {
+        &self.shards
+    }
+
+    /// The shard `prompt` would land on (tests probe the router through
+    /// the same path submissions take).
+    pub fn route(&self, prompt: &[u32]) -> usize {
+        self.router.route(prompt)
+    }
+
+    /// Route and enqueue; false = the owning shard's queue rejected it.
+    pub fn submit(&mut self, req: Request) -> bool {
+        let s = self.router.route(&req.prompt);
+        let ok = self.shards[s].submit(req);
+        if ok {
+            self.routed[s] += 1;
+        }
+        ok
+    }
+
+    /// Fleet-wide cancel: the id's owner is whichever shard knows it.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        self.shards.iter_mut().any(|s| s.cancel(id))
+    }
+
+    /// One lockstep iteration: every shard admits and decodes once.
+    pub fn step(&mut self) -> Result<()> {
+        for s in &mut self.shards {
+            s.step()?;
+        }
+        Ok(())
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.shards.iter().any(|s| s.has_work())
+    }
+
+    /// Concurrently-active sequences across the whole fleet — the
+    /// aggregate admitted concurrency the fleet bench compares against a
+    /// single pooled host.
+    pub fn active_count(&self) -> usize {
+        self.shards.iter().map(|s| s.active_count()).sum()
+    }
+
+    pub fn take_finished(&mut self) -> Vec<RequestOutput> {
+        self.shards.iter_mut().flat_map(|s| s.take_finished()).collect()
+    }
+
+    /// Pages referenced by live sequences, summed over shards.
+    pub fn pages_in_use(&self) -> usize {
+        self.shards.iter()
+            .filter_map(|s| s.kv_manager().map(|kv| kv.pages_in_use()))
+            .sum()
+    }
+
+    /// Total physical pages across all shard pools (the "equal total
+    /// memory" denominator).
+    pub fn pool_pages(&self) -> usize {
+        self.shards.iter()
+            .filter_map(|s| s.kv_manager().map(|kv| kv.pool_pages()))
+            .sum()
+    }
+
+    /// Every shard's pool invariants (tests call this after a drain).
+    pub fn check_invariants(&self) -> Result<()> {
+        for s in &self.shards {
+            if let Some(kv) = s.kv_manager() {
+                kv.check_invariants()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The aggregated per-shard + fleet-total report block.
+    pub fn report(&self) -> String {
+        let metrics: Vec<&ServingMetrics> =
+            self.shards.iter().map(|s| s.metrics.as_ref()).collect();
+        fleet_report(self.router.policy(), &self.routed, &metrics)
+    }
+}
+
+/// N threaded [`ServerHandle`]s behind one router — what `serve --fleet
+/// N` drives. Each shard runs its own worker thread, scheduler and page
+/// pool; ids are shard-namespaced at start, so concurrent submissions
+/// across shards can never collide.
+pub struct FleetHandle {
+    shards: Vec<ServerHandle>,
+    router: FleetRouter,
+    routed: Vec<AtomicU64>,
+    policy: RouterPolicy,
+}
+
+/// Start a fleet of `factories.len()` coordinator instances. Every shard
+/// gets the same `kv` sizing (the caller divides the total pool budget
+/// before calling — equal shards, equal memory story) and the same
+/// scheduler options; shard `i` issues ids `i+1, i+1+n, ...`.
+pub fn start_fleet<B, F>(factories: Vec<F>, queue_capacity: usize,
+                         seed: u64, kv: KvChoice, opts: SchedulerOptions,
+                         policy: RouterPolicy) -> Result<FleetHandle>
+where
+    B: ModelBackend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
+    anyhow::ensure!(!factories.is_empty(),
+                    "a fleet needs at least one shard");
+    let n = factories.len();
+    let shards = factories
+        .into_iter()
+        .enumerate()
+        .map(|(i, f)| {
+            start_with_kv_options(f, queue_capacity, seed, kv, opts)
+                .map(|h| h.with_id_namespace(i as u64 + 1, n as u64))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    // Chunk the routing key exactly as the shards' caches will. The
+    // workers resolve 0-means-auto through `KvCacheConfig::resolved`,
+    // whose page default is `KV_PAGE_TOKENS_DEFAULT` — derive from the
+    // same config here rather than racing the worker threads' gauge
+    // writes (the ready handshake fires before scheduler construction).
+    let pt = match kv {
+        KvChoice::Paged(cfg) if cfg.page_tokens != 0 => cfg.page_tokens,
+        _ => KV_PAGE_TOKENS_DEFAULT,
+    };
+    let router = FleetRouter::new(policy, n, pt);
+    let routed = (0..n).map(|_| AtomicU64::new(0)).collect();
+    Ok(FleetHandle { shards, router, routed, policy })
+}
+
+impl FleetHandle {
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard handles (metrics introspection; submissions should go
+    /// through the router).
+    pub fn shards(&self) -> &[ServerHandle] {
+        &self.shards
+    }
+
+    /// Cap routing keys at the backend's prefill window (mirrors the
+    /// scheduler's own prompt truncation).
+    pub fn set_prompt_cap(&mut self, cap: usize) {
+        let pc = &mut self.router;
+        pc.prompt_cap = cap.max(1);
+    }
+
+    /// Route a fully-specified request to its shard. The owning shard
+    /// assigns the (fleet-unique) id, as [`ServerHandle::submit_request`]
+    /// does for a single server.
+    pub fn submit_request(&self, req: Request)
+                          -> Result<(RequestId, Receiver<RequestOutput>)> {
+        let s = self.router.route(&req.prompt);
+        self.routed[s].fetch_add(1, Ordering::Relaxed);
+        self.shards[s].submit_request(req)
+    }
+
+    /// [`ServerHandle::submit`]'s shape, routed.
+    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize,
+                  sampling: SamplingParams, eos_token: Option<u32>)
+                  -> Result<Receiver<RequestOutput>> {
+        let mut req = Request::greedy(0, prompt, max_new_tokens);
+        req.sampling = sampling;
+        req.eos_token = eos_token;
+        self.submit_request(req).map(|(_, rx)| rx)
+    }
+
+    /// Fleet-wide cancel: the id namespace encodes the owner, so this is
+    /// a direct dispatch, not a broadcast.
+    pub fn cancel(&self, id: RequestId) -> Result<()> {
+        let n = self.shards.len() as u64;
+        let shard = ((id.saturating_sub(1)) % n) as usize;
+        self.shards[shard].cancel(id)
+    }
+
+    /// The fleet's clock for arrival-step pacing: the furthest shard's
+    /// scheduler-step counter (shards idle at different times; the
+    /// leader's clock keeps arrivals from outrunning every shard).
+    pub fn scheduler_steps(&self) -> u64 {
+        self.shards.iter()
+            .map(|h| h.metrics.scheduler_steps.get())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Requests accepted by some shard's scheduler and not yet resolved
+    /// (completed, cancelled or rejected). 0 means every submitted
+    /// request has been answered — the idle signal the arrival-pacing
+    /// loop uses to fast-forward its virtual clock.
+    pub fn in_flight(&self) -> u64 {
+        self.shards.iter()
+            .map(|h| {
+                let m = &h.metrics;
+                m.requests_submitted.get().saturating_sub(
+                    m.requests_completed.get()
+                        + m.requests_cancelled.get())
+            })
+            .sum()
+    }
+
+    /// The aggregated per-shard + fleet-total report block.
+    pub fn report(&self) -> String {
+        let metrics: Vec<&ServingMetrics> =
+            self.shards.iter().map(|h| h.metrics.as_ref()).collect();
+        let routed: Vec<u64> =
+            self.routed.iter().map(|r| r.load(Ordering::Relaxed)).collect();
+        fleet_report(self.policy, &routed, &metrics)
+    }
+
+    /// Drain and stop every shard.
+    pub fn shutdown(self) -> Result<()> {
+        for h in self.shards {
+            h.shutdown()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use crate::coordinator::kvcache::KvCacheConfig;
+    use crate::coordinator::request::FinishReason;
+    use std::sync::Arc;
+
+    fn fleet(n: usize, policy: RouterPolicy) -> FleetScheduler<MockBackend> {
+        let shards = (0..n)
+            .map(|_| {
+                Scheduler::with_kv(
+                    MockBackend::new(2, 8, 32, 64), 16,
+                    Arc::new(ServingMetrics::default()), 1,
+                    KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                                    pool_pages: 16 }))
+            })
+            .collect();
+        FleetScheduler::new(shards, policy)
+    }
+
+    #[test]
+    fn identical_prompts_route_to_one_shard_deterministically() {
+        let f = fleet(4, RouterPolicy::Prefix);
+        let g = fleet(4, RouterPolicy::Prefix);
+        let prompts: Vec<Vec<u32>> = (0..40)
+            .map(|i| (0..(1 + i % 11)).map(|j| (3 + i + j) as u32).collect())
+            .collect();
+        for p in &prompts {
+            let s = f.route(p);
+            assert!(s < 4);
+            assert_eq!(s, f.route(p), "same prompt, same shard");
+            assert_eq!(s, g.route(p),
+                       "routing must not depend on router instance state");
+        }
+        // Pinned placements guard cross-process determinism: FNV keys and
+        // rendezvous scoring have no per-process randomness to leak.
+        assert_eq!(f.route(&[3, 1, 4, 1, 5, 9, 2, 6]), 0);
+        assert_eq!(f.route(&[2, 7, 1, 8, 2, 8, 1, 8]), 3);
+    }
+
+    #[test]
+    fn prefix_routing_keys_on_the_page_aligned_head() {
+        let f = fleet(4, RouterPolicy::Prefix);
+        // Same two full pages + ragged tails of different content and
+        // length: one key, one shard — the swarm-affinity property.
+        let head: Vec<u32> = (3..11).collect();
+        let a = f.route(&head);
+        let mut b = head.clone();
+        b.extend_from_slice(&[50, 51]);
+        let mut c = head.clone();
+        c.push(60);
+        assert_eq!(a, f.route(&b));
+        assert_eq!(a, f.route(&c));
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let f = fleet(3, RouterPolicy::RoundRobin);
+        let p: Vec<u32> = vec![5, 6, 7];
+        let seen: Vec<usize> = (0..6).map(|_| f.route(&p)).collect();
+        assert_eq!(seen, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn fleet_serves_and_cancels_across_shards() {
+        let mut f = fleet(2, RouterPolicy::Prefix);
+        for id in 1..=6u64 {
+            let mut prompt = vec![3 + id as u32; 5];
+            prompt[0] = id as u32 * 7 % 50 + 3;
+            assert!(f.submit(Request::greedy(id, prompt, 4)));
+        }
+        assert!(f.cancel(3), "fleet-wide cancel finds the owning shard");
+        assert!(!f.cancel(99), "unknown ids are a no-op everywhere");
+        let mut steps = 0;
+        let mut done = Vec::new();
+        while f.has_work() {
+            f.step().unwrap();
+            done.extend(f.take_finished());
+            steps += 1;
+            assert!(steps < 200, "fleet did not drain");
+        }
+        done.extend(f.take_finished());
+        assert_eq!(done.len(), 6, "every request resolves exactly once");
+        let cancelled = done.iter()
+            .filter(|d| d.finish == FinishReason::Cancelled).count();
+        assert_eq!(cancelled, 1);
+        f.check_invariants().unwrap();
+        assert_eq!(f.pages_in_use(), 0, "all shard pools drain clean");
+        assert_eq!(f.pool_pages(), 32, "pool totals sum over shards");
+    }
+
+    #[test]
+    fn fleet_report_carries_shard_and_total_lines() {
+        let mut f = fleet(2, RouterPolicy::Prefix);
+        for id in 1..=4u64 {
+            assert!(f.submit(Request::greedy(id, vec![5, 6, 7], 2)));
+        }
+        while f.has_work() {
+            f.step().unwrap();
+            f.take_finished();
+        }
+        let r = f.report();
+        assert!(r.contains("fleet: 2 shards, prefix router, routed "));
+        assert!(r.contains("fleet: shard 0:"));
+        assert!(r.contains("fleet: shard 1:"));
+        assert!(r.contains("packs 0 / allocs 0"),
+                "per-shard steady-state counters are reported");
+        assert!(r.contains("fleet: total: 4 submitted, 4 completed"));
+        assert!(r.contains("arena peak 0 (cap 16/shard)"));
+    }
+}

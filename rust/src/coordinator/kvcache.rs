@@ -284,12 +284,15 @@ pub struct KvCacheManager {
 }
 
 /// Seed of the prefix-hash chain (the "parent" of a sequence's first page).
-const PREFIX_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+pub const PREFIX_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// FNV-1a over the parent key and the page's tokens — the chained
 /// prefix hash. Equal chains ⇒ equal prefixes (verified exactly against
 /// the stored tokens at lookup; the parent link is trusted, as in vLLM).
-fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+/// Public because the fleet router keys on the same chain: one
+/// implementation, so router placement and cache lookup can never
+/// silently diverge (see [`prefix_key`]).
+pub fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in parent.to_le_bytes() {
         h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
@@ -300,6 +303,27 @@ fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
         }
     }
     h
+}
+
+/// The chained prefix key of `tokens`' longest page-aligned prefix — the
+/// exact key [`KvCacheManager::allocate_prompt`] would publish (or hit)
+/// for that prefix's last full page. This is what the fleet router
+/// consistent-hashes: two prompts sharing their page-aligned head map to
+/// the same key, so prefix-affinity routing lands them on the shard that
+/// already caches those pages. A prompt shorter than one page has no full
+/// page; it falls back to the chain over the whole partial chunk, which
+/// is still the key `allocate_prompt` caches its tail under.
+pub fn prefix_key(tokens: &[i32], page_tokens: usize) -> u64 {
+    assert!(page_tokens >= 1, "page_tokens must be >= 1");
+    let aligned = (tokens.len() / page_tokens) * page_tokens;
+    if aligned == 0 {
+        return chain_hash(PREFIX_SEED, tokens);
+    }
+    let mut parent = PREFIX_SEED;
+    for chunk in tokens[..aligned].chunks(page_tokens) {
+        parent = chain_hash(parent, chunk);
+    }
+    parent
 }
 
 impl KvCacheManager {
@@ -945,6 +969,34 @@ mod tests {
         let st = m.allocate_prompt(0, &[1, 2, 3, 4]).unwrap();
         assert_eq!(st.shared_hits, 0, "colliding entry must not be shared");
         assert_eq!(st.pages_allocated, 1);
+    }
+
+    #[test]
+    fn prefix_key_is_pinned_on_a_golden_stream() {
+        // The chain is a wire-format-grade contract: the fleet router and
+        // the prefix cache must compute byte-identical keys forever, or
+        // routing silently stops landing prompts on their cached shard.
+        // Values mirrored by an independent FNV-1a implementation.
+        let golden: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        assert_eq!(chain_hash(PREFIX_SEED, &golden[..4]),
+                   0xcf80_6b67_d04e_0873);
+        assert_eq!(prefix_key(&golden, 4), 0x0d76_9f9e_f618_649b);
+        // The ragged tail past the last page boundary must not perturb
+        // the key: routing keys on *published whole pages* only.
+        let mut ragged = golden.clone();
+        ragged.extend_from_slice(&[5, 3]);
+        assert_eq!(prefix_key(&ragged, 4), prefix_key(&golden, 4));
+        // Sub-page prompts fall back to the partial-chunk chain (the key
+        // allocate_prompt caches the tail under), still deterministic.
+        assert_eq!(prefix_key(&golden[..3], 4), 0x3596_1e15_fdb4_06c2);
+        // And the chained form really is allocate_prompt's key: a second
+        // allocation of the same two-page prompt must hit both pages.
+        let mut m = mgr(4, 8, 2);
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &golden).unwrap();
+        assert!(m.try_reserve(1, 8));
+        let st = m.allocate_prompt(1, &golden).unwrap();
+        assert_eq!(st.shared_hits, 2, "page-aligned prefix must re-share");
     }
 
     #[test]

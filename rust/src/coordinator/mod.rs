@@ -5,6 +5,7 @@
 
 pub mod backend;
 pub mod draft;
+pub mod fleet;
 pub mod kvcache;
 pub mod native;
 pub mod request;
@@ -13,8 +14,11 @@ pub mod server;
 
 pub use backend::{BackendDims, EngineBackend, MockBackend, ModelBackend};
 pub use draft::{DraftSource, PromptLookupDraft};
-pub use kvcache::{KvCacheConfig, KvCacheManager, KvChoice, KvStepView,
-                  PageTables, SlotFork, KV_PAGE_TOKENS_DEFAULT};
+pub use fleet::{fleet_report, start_fleet, FleetHandle, FleetRouter,
+                FleetScheduler, RouterPolicy};
+pub use kvcache::{chain_hash, prefix_key, KvCacheConfig, KvCacheManager,
+                  KvChoice, KvStepView, PageTables, SlotFork,
+                  KV_PAGE_TOKENS_DEFAULT, PREFIX_SEED};
 pub use native::{NativeBackend, Precision};
 pub use request::{FinishReason, Priority, Request, RequestId,
                   RequestOutput};

@@ -120,6 +120,14 @@ pub struct Scheduler<B: ModelBackend> {
     preempt_cost: PreemptCostModel,
     /// Victims waiting to resume, FIFO. Drained before `pending`.
     preempted: VecDeque<PreemptedSeq>,
+    /// Host swap-arena capacity in pages. The arena is the sum of parked
+    /// swap payloads; without a cap a pathological preemption storm grows
+    /// host memory without limit (every victim parks `pos` tokens of KV).
+    /// When a swap election would overflow it, the victim falls back to
+    /// recompute — bounded memory, never a lost sequence.
+    swap_arena_cap: usize,
+    /// Arena pages currently held by parked swap victims.
+    swap_arena_pages: usize,
     /// The at-most-one live page-table fork of the running speculative
     /// episode. Held on the scheduler (not the episode's stack) so every
     /// teardown path — cancel, preempt, error — can roll it back before
@@ -171,6 +179,12 @@ impl<B: ModelBackend> Scheduler<B> {
                 Some(m)
             }
         };
+        // Default arena budget: as many host pages as the device pool —
+        // bounded by construction, and roomy enough that the cap only
+        // bites under sustained preemption storms.
+        let swap_arena_cap =
+            kv.as_ref().map(|m| m.pool_pages()).unwrap_or(0);
+        metrics.swap_arena_pages_cap.set(swap_arena_cap as u64);
         Scheduler {
             backend,
             pending: VecDeque::new(),
@@ -184,6 +198,8 @@ impl<B: ModelBackend> Scheduler<B> {
             preempt_mode: PreemptMode::Auto,
             preempt_cost: PreemptCostModel::tiny_f16(),
             preempted: VecDeque::new(),
+            swap_arena_cap,
+            swap_arena_pages: 0,
             live_fork: None,
             speculative_default: 0,
             draft: Box::new(PromptLookupDraft::default()),
@@ -226,6 +242,25 @@ impl<B: ModelBackend> Scheduler<B> {
     /// Override the victim resume-path election (`--preempt-mode`).
     pub fn set_preempt_mode(&mut self, mode: PreemptMode) {
         self.preempt_mode = mode;
+    }
+
+    /// Cap the host swap arena (`--swap-arena-pages`); 0 restores the
+    /// default bound (one device pool's worth of pages). Lowering the cap
+    /// below the current occupancy is legal: parked victims keep their
+    /// payloads, new swap elections fall back to recompute until resumes
+    /// drain the arena under the new cap.
+    pub fn set_swap_arena_cap(&mut self, pages: usize) {
+        self.swap_arena_cap = if pages == 0 {
+            self.kv.as_ref().map(|m| m.pool_pages()).unwrap_or(0)
+        } else {
+            pages
+        };
+        self.metrics.swap_arena_pages_cap.set(self.swap_arena_cap as u64);
+    }
+
+    /// Arena occupancy in pages (tests / the fleet report).
+    pub fn swap_arena_pages(&self) -> usize {
+        self.swap_arena_pages
     }
 
     /// The paged KV manager, when serving paged (tests / invariant audits).
@@ -274,6 +309,7 @@ impl<B: ModelBackend> Scheduler<B> {
     /// One scheduling iteration: admission (batched prefill) if possible,
     /// then one decode step for all active sequences.
     pub fn step(&mut self) -> Result<()> {
+        self.metrics.scheduler_steps.inc();
         self.admit()?;
         self.decode_step()?;
         Ok(())
@@ -334,6 +370,7 @@ impl<B: ModelBackend> Scheduler<B> {
                     self.metrics.kv_evictions.add(evictions);
                     self.backend.swap_in_slot(slot, &payload,
                                               kv_step_view(&self.kv))?;
+                    self.arena_release(seq.pos);
                     seq.replay_rem = 0;
                     self.metrics.preempt_resumes.inc();
                     self.slots[slot] = Some(seq);
@@ -718,18 +755,31 @@ impl<B: ModelBackend> Scheduler<B> {
         // holds garbage until `decode_into` applies it) — recompute never
         // reads old state, so it is always the safe fallback.
         let copies_pending = !kv.tables().copies().is_empty();
-        let action = match self.preempt_mode {
+        let arena_need = kv.pages_for(ctx);
+        let mut action = match self.preempt_mode {
             _ if !self.backend.supports_swap() => PreemptAction::Recompute,
             _ if copies_pending => PreemptAction::Recompute,
             PreemptMode::ForceRecompute => PreemptAction::Recompute,
             PreemptMode::ForceSwap => PreemptAction::Swap,
             PreemptMode::Auto => self.preempt_cost.choose(ctx, cached),
         };
+        // The cost model (or a forced swap) loses to the arena cap: a full
+        // arena downgrades the election to recompute so parked payloads
+        // can never outgrow the configured host budget.
+        if matches!(action, PreemptAction::Swap)
+            && self.swap_arena_pages + arena_need > self.swap_arena_cap
+        {
+            self.metrics.preempt_swap_blocked.inc();
+            action = PreemptAction::Recompute;
+        }
         let resume = match action {
             PreemptAction::Swap => {
                 match self.backend.swap_out_slot(victim, ctx,
                                                  kv_step_view(&self.kv)) {
-                    Ok(payload) => ResumeKind::Swap(payload),
+                    Ok(payload) => {
+                        self.arena_acquire(arena_need);
+                        ResumeKind::Swap(payload)
+                    }
                     // Never lose the victim over a failed copy-out.
                     Err(_) => ResumeKind::Recompute,
                 }
@@ -960,6 +1010,10 @@ impl<B: ModelBackend> Scheduler<B> {
             self.preempted.iter().position(|p| p.seq.req.id == id)
         {
             let mut p = self.preempted.remove(i).unwrap();
+            // A cancelled swap victim's payload leaves the arena with it.
+            if matches!(p.resume, ResumeKind::Swap(_)) {
+                self.arena_release(p.seq.pos);
+            }
             self.metrics.requests_cancelled.inc();
             self.finished
                 .push(slot_output(&mut p.seq, FinishReason::Cancelled));
@@ -1002,6 +1056,25 @@ impl<B: ModelBackend> Scheduler<B> {
             self.metrics.kv_pages_in_use.set(kv.pages_in_use() as u64);
             self.metrics.kv_pages_cached.set(kv.pages_cached() as u64);
         }
+    }
+
+    /// Account a parked swap payload into the arena (peak-tracked — the
+    /// high-water gauge is what CI checks against the cap).
+    fn arena_acquire(&mut self, pages: usize) {
+        self.swap_arena_pages += pages;
+        let cur = self.swap_arena_pages as u64;
+        self.metrics.swap_arena_pages.set(cur);
+        if cur > self.metrics.swap_arena_pages_peak.get() {
+            self.metrics.swap_arena_pages_peak.set(cur);
+        }
+    }
+
+    /// Return a resumed/cancelled swap victim's pages to the arena budget.
+    fn arena_release(&mut self, pos: usize) {
+        let pages =
+            self.kv.as_ref().map(|kv| kv.pages_for(pos)).unwrap_or(0);
+        self.swap_arena_pages = self.swap_arena_pages.saturating_sub(pages);
+        self.metrics.swap_arena_pages.set(self.swap_arena_pages as u64);
     }
 
     /// Natural finish of an admitted sequence: build its output, score it
@@ -1828,6 +1901,14 @@ mod tests {
         assert_eq!(metrics.preempt_replayed_tokens.get(), 0,
                    "swap resume recomputes nothing");
         assert_eq!(metrics.kv_pages_in_use.get(), 0);
+        // Arena accounting round-trips: payloads occupied the host arena
+        // while parked (peak moved, never past the cap) and every resume
+        // returned its pages.
+        assert!(metrics.swap_arena_pages_peak.get() >= 1,
+                "a parked swap payload must show in the arena gauge");
+        assert!(metrics.swap_arena_pages_peak.get()
+                    <= metrics.swap_arena_pages_cap.get());
+        assert_eq!(metrics.swap_arena_pages.get(), 0, "arena drains to 0");
         let mut done = s.take_finished();
         done.sort_by_key(|d| d.id);
         let f = |p: i32| MockBackend::next_token(p, 64) as u32;
@@ -1840,6 +1921,52 @@ mod tests {
             }
             assert_eq!(out.tokens, want,
                        "swap round trip altered a stream");
+        }
+    }
+
+    #[test]
+    fn full_swap_arena_falls_back_to_recompute() {
+        // `--swap-arena-pages 1` with two-page victim contexts: even a
+        // forced swap election must downgrade to recompute when the
+        // payload would overflow the host arena — the victim is never
+        // lost, tokens stay exact, and the arena gauge never crosses the
+        // cap.
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut s = paged_sched(2, 4, 5, metrics.clone());
+        s.set_preempt_mode(PreemptMode::ForceSwap);
+        s.set_swap_arena_cap(1);
+        assert_eq!(metrics.swap_arena_pages_cap.get(), 1);
+        assert!(s.submit(mk_req(1, vec![1, 2, 3, 4, 9], 6)));
+        assert!(s.submit(mk_req(2, vec![1, 2, 3, 4, 10], 6)));
+        let mut steps = 0;
+        while s.has_work() {
+            s.step().unwrap();
+            steps += 1;
+            assert!(steps < 200, "stuck");
+        }
+        s.kv_manager().unwrap().check_invariants().unwrap();
+        assert!(metrics.preemptions.get() >= 1, "pool must run dry");
+        assert_eq!(metrics.preempt_swap.get(), 0,
+                   "a 2-page payload can never fit a 1-page arena");
+        assert!(metrics.preempt_swap_blocked.get() >= 1,
+                "every blocked swap election is counted");
+        assert_eq!(metrics.preempt_recompute.get(),
+                   metrics.preemptions.get());
+        assert!(metrics.preempt_replayed_tokens.get() > 0,
+                "the fallback path really recomputed");
+        assert_eq!(metrics.swap_arena_pages_peak.get(), 0,
+                   "nothing may enter a too-small arena");
+        assert_eq!(metrics.kv_pages_in_use.get(), 0);
+        let mut done = s.take_finished();
+        done.sort_by_key(|d| d.id);
+        let f = |p: i32| MockBackend::next_token(p, 64) as u32;
+        for (out, last) in done.iter().zip([9i32, 10]) {
+            assert_eq!(out.finish, FinishReason::Length);
+            let mut want = vec![f(last)];
+            for _ in 1..6 {
+                want.push(f(*want.last().unwrap() as i32));
+            }
+            assert_eq!(out.tokens, want, "fallback altered a stream");
         }
     }
 

@@ -26,6 +26,9 @@ pub struct SchedulerOptions {
     pub admission: AdmissionPolicy,
     /// How preemption victims get their KV state back.
     pub preempt_mode: PreemptMode,
+    /// Host swap-arena capacity in pages (`--swap-arena-pages`; 0 = the
+    /// default bound, one device pool's worth).
+    pub swap_arena_pages: usize,
 }
 
 impl Default for SchedulerOptions {
@@ -34,6 +37,7 @@ impl Default for SchedulerOptions {
             speculative_k: 0,
             admission: AdmissionPolicy::Optimistic,
             preempt_mode: PreemptMode::Auto,
+            swap_arena_pages: 0,
         }
     }
 }
@@ -51,11 +55,27 @@ enum Msg {
 pub struct ServerHandle {
     tx: Sender<Msg>,
     next_id: AtomicU64,
+    /// Distance between consecutive ids this handle assigns. A standalone
+    /// server strides by 1 from 1; a fleet shard strides by the fleet
+    /// width from `shard_index + 1`, so the id spaces of N shards
+    /// interleave without ever colliding (and `(id - 1) % N` recovers the
+    /// owning shard — fleet-wide cancel needs no routing table).
+    id_stride: u64,
     pub metrics: Arc<ServingMetrics>,
     worker: Option<JoinHandle<Result<()>>>,
 }
 
 impl ServerHandle {
+    /// Re-key this handle's id assignment to `base, base + stride, ...`.
+    /// Must be called before the first submission (already-issued ids are
+    /// not re-spaced). This is how a fleet makes request ids shard-aware.
+    pub fn with_id_namespace(mut self, base: u64,
+                             stride: u64) -> ServerHandle {
+        assert!(stride >= 1, "id stride must be >= 1");
+        self.next_id = AtomicU64::new(base);
+        self.id_stride = stride;
+        self
+    }
     /// Submit a request; returns a receiver for its output.
     pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize,
                   sampling: SamplingParams,
@@ -81,7 +101,8 @@ impl ServerHandle {
     /// unique per server.
     pub fn submit_request(&self, mut req: Request)
                           -> Result<(RequestId, Receiver<RequestOutput>)> {
-        let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id: RequestId =
+            self.next_id.fetch_add(self.id_stride, Ordering::Relaxed);
         req.id = id;
         let (otx, orx) = mpsc::channel();
         self.tx
@@ -200,8 +221,8 @@ where
     ready_rx
         .recv()
         .map_err(|_| anyhow::anyhow!("coordinator died during init"))??;
-    Ok(ServerHandle { tx, next_id: AtomicU64::new(1), metrics,
-                      worker: Some(worker) })
+    Ok(ServerHandle { tx, next_id: AtomicU64::new(1), id_stride: 1,
+                      metrics, worker: Some(worker) })
 }
 
 /// Convenience for `Send` backends (e.g. the mock): moves it into the
@@ -231,6 +252,7 @@ fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
     sched.set_speculative(opts.speculative_k);
     sched.set_admission(opts.admission);
     sched.set_preempt_mode(opts.preempt_mode);
+    sched.set_swap_arena_cap(opts.swap_arena_pages);
     let mut waiters: Vec<(RequestId, Sender<RequestOutput>)> = Vec::new();
     let mut shutting_down = false;
     loop {

@@ -2,14 +2,17 @@
 //! reproduce the paper's tables, or poke the RVV simulator.
 
 use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
 
 use tenx_iree::autotune::{self, TileRegistry};
 use tenx_iree::cliargs::{parse_one_of, parse_thread_count,
                          parse_thread_list, parse_zero_auto, Command};
-use tenx_iree::coordinator::{self, AdmissionPolicy, EngineBackend,
-                             KvCacheConfig, KvChoice, NativeBackend,
-                             Precision, PreemptMode, SchedulerOptions,
-                             KV_PAGE_TOKENS_DEFAULT};
+use tenx_iree::coordinator::{self, start_fleet, AdmissionPolicy,
+                             EngineBackend, FleetHandle, KvCacheConfig,
+                             KvChoice, NativeBackend, Precision,
+                             PreemptMode, Request, RequestId,
+                             RequestOutput, RouterPolicy, SchedulerOptions,
+                             ServerHandle, KV_PAGE_TOKENS_DEFAULT};
 use tenx_iree::ir::{build_matmul_func, ElemType, Module};
 use tenx_iree::kernels::System;
 use tenx_iree::llm::{SamplingParams, Tokenizer};
@@ -77,6 +80,100 @@ fn load_tiles(path: &str) -> Result<TileRegistry, String> {
     }
 }
 
+/// The serving front a `serve` run drives: one coordinator, or a routed
+/// fleet of them (`--fleet N`). Submission, cancel, the arrival-pacing
+/// clock and the final report all go through this, so both shapes share
+/// one downstream code path.
+enum Front {
+    Single(ServerHandle),
+    Fleet(FleetHandle),
+}
+
+impl Front {
+    fn submit_request(&self, req: Request)
+                      -> anyhow::Result<(RequestId,
+                                         Receiver<RequestOutput>)> {
+        match self {
+            Front::Single(h) => h.submit_request(req),
+            Front::Fleet(f) => f.submit_request(req),
+        }
+    }
+
+    fn submit(&self, prompt: Vec<u32>, max_new: usize,
+              sampling: SamplingParams, eos: Option<u32>)
+              -> anyhow::Result<Receiver<RequestOutput>> {
+        match self {
+            Front::Single(h) => h.submit(prompt, max_new, sampling, eos),
+            Front::Fleet(f) => f.submit(prompt, max_new, sampling, eos),
+        }
+    }
+
+    fn cancel(&self, id: RequestId) -> anyhow::Result<()> {
+        match self {
+            Front::Single(h) => h.cancel(id),
+            Front::Fleet(f) => f.cancel(id),
+        }
+    }
+
+    /// The scheduler-step clock workload arrivals are paced against (a
+    /// fleet reads its furthest shard).
+    fn clock(&self) -> u64 {
+        match self {
+            Front::Single(h) => h.metrics.scheduler_steps.get(),
+            Front::Fleet(f) => f.scheduler_steps(),
+        }
+    }
+
+    /// Submitted requests whose fate is decided — completed, cancelled
+    /// or queue-rejected. When this catches up with the client's own
+    /// submission count the workers are idle (their step clocks frozen),
+    /// so the pacing loop may fast-forward to the next arrival.
+    fn resolved(&self) -> u64 {
+        let one = |m: &tenx_iree::metrics::ServingMetrics| {
+            m.requests_completed.get() + m.requests_cancelled.get()
+                + m.queue_rejections.get()
+        };
+        match self {
+            Front::Single(h) => one(&h.metrics),
+            Front::Fleet(f) => {
+                f.shards().iter().map(|h| one(&h.metrics)).sum()
+            }
+        }
+    }
+
+    fn add_compute_threads(&self, threads: u64) {
+        match self {
+            Front::Single(h) => h.metrics.compute_threads.add(threads),
+            Front::Fleet(f) => {
+                for h in f.shards() {
+                    h.metrics.compute_threads.add(threads);
+                }
+            }
+        }
+    }
+
+    fn report(&self) -> String {
+        match self {
+            Front::Single(h) => h.metrics.report(),
+            Front::Fleet(f) => {
+                let mut s = f.report();
+                for (i, h) in f.shards().iter().enumerate() {
+                    s.push_str(&format!("\n-- shard {i} --\n{}",
+                                        h.metrics.report()));
+                }
+                s
+            }
+        }
+    }
+
+    fn shutdown(self) -> anyhow::Result<()> {
+        match self {
+            Front::Single(h) => h.shutdown(),
+            Front::Fleet(f) => f.shutdown(),
+        }
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let cmd = Command::new("serve", "serve tiny-llama with continuous batching")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -123,6 +220,21 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
              "resume path for preemption victims: auto (per-victim cost \
               model) | recompute (re-prefill through the prefix cache) | \
               swap (copy pages out to the host arena and back)")
+        .opt("swap-arena-pages", "0",
+             "host swap-arena capacity in pages — bounds how much \
+              preempted KV state swap-mode preemption may park on the \
+              host at once; victims that would overflow the arena fall \
+              back to recompute (0 = auto: one device pool's worth)")
+        .opt("fleet", "1",
+             "serve N in-process coordinator instances, each with its \
+              own scheduler and KV page pool, behind a request router \
+              (an explicit --kv-pool-pages budget is the fleet total, \
+              split evenly across shards; native backend only)")
+        .opt("router", "prefix",
+             "fleet request router: prefix (consistent-hash the \
+              page-aligned prompt-prefix key so shared system prompts \
+              land on the shard already holding their cached pages) | \
+              round-robin")
         .opt("workload", "",
              "replace the prompt cycle with a seeded scenario-mix \
               workload: uniform | chat | bursty | agents | cancel-heavy. \
@@ -155,6 +267,15 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         "swap" => PreemptMode::ForceSwap,
         _ => PreemptMode::Auto,
     };
+    let swap_arena_pages = parse_zero_auto(m.str("swap-arena-pages"),
+                                           "--swap-arena-pages")?;
+    let fleet_n: usize = m.usize("fleet")?;
+    if fleet_n == 0 {
+        return Err("--fleet must be >= 1".into());
+    }
+    let router = RouterPolicy::from_name(
+        parse_one_of(m.str("router"), "--router", RouterPolicy::names())?)
+        .expect("parse_one_of validated the name");
     let workload = m.str("workload");
     let mix = if workload.is_empty() {
         None
@@ -165,7 +286,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     };
     let path = if m.flag("baseline") { EnginePath::Baseline } else { EnginePath::Mmt4d };
 
-    let (handle, vocab) = if m.flag("native") {
+    let (front, vocab) = if m.flag("native") {
         if m.flag("baseline") {
             return Err("--baseline selects an artifact engine path; with \
                         --native pick the numeric path via --precision"
@@ -228,18 +349,51 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                       AdmissionPolicy::WorstCase => ", worst-case admission",
                       AdmissionPolicy::Optimistic => "",
                   });
-        let backend = NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
-                                                    precision, 42, &tiles,
-                                                    threads)
-            .map_err(err_str)?
-            .with_parallelism(Parallelism::new(threads));
-        let handle = coordinator::server::start_with_kv_options(
-            move || Ok(backend), queue_capacity, 42, kv,
-            SchedulerOptions { speculative_k: speculative, admission,
-                               preempt_mode })
-            .map_err(err_str)?;
-        handle.metrics.compute_threads.add(threads as u64);
-        (handle, vocab)
+        let opts = SchedulerOptions { speculative_k: speculative, admission,
+                                      preempt_mode, swap_arena_pages };
+        let front = if fleet_n > 1 {
+            // Each shard is a full coordinator with its own pool; an
+            // explicit page budget is the fleet *total*, split evenly, so
+            // fleet and single-host runs compare at equal memory.
+            let shard_kv = match kv {
+                KvChoice::Slab => KvChoice::Slab,
+                KvChoice::Paged(cfg) => KvChoice::Paged(KvCacheConfig {
+                    page_tokens: cfg.page_tokens,
+                    pool_pages: if cfg.pool_pages == 0 {
+                        0
+                    } else {
+                        (cfg.pool_pages / fleet_n).max(1)
+                    },
+                }),
+            };
+            let mut backends = Vec::with_capacity(fleet_n);
+            for _ in 0..fleet_n {
+                backends.push(
+                    NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
+                                                  precision, 42, &tiles,
+                                                  threads)
+                        .map_err(err_str)?
+                        .with_parallelism(Parallelism::new(threads)));
+            }
+            let factories: Vec<_> =
+                backends.into_iter().map(|b| move || Ok(b)).collect();
+            eprintln!("fleet: {fleet_n} shards, {} router", router.name());
+            Front::Fleet(start_fleet(factories, queue_capacity, 42,
+                                     shard_kv, opts, router)
+                .map_err(err_str)?)
+        } else {
+            let backend =
+                NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
+                                              precision, 42, &tiles,
+                                              threads)
+                    .map_err(err_str)?
+                    .with_parallelism(Parallelism::new(threads));
+            Front::Single(coordinator::server::start_with_kv_options(
+                move || Ok(backend), queue_capacity, 42, kv, opts)
+                .map_err(err_str)?)
+        };
+        front.add_compute_threads(threads as u64);
+        (front, vocab)
     } else {
         if threads != 1 {
             eprintln!("note: --threads applies to the native backend; the \
@@ -269,6 +423,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             eprintln!("note: --workload drives the native demo model; the \
                        artifact path serves the prompt cycle");
         }
+        if fleet_n > 1 {
+            eprintln!("note: --fleet/--router apply to the native \
+                       backend; serving a single artifact engine");
+        }
         if vocab_flag != 512 {
             eprintln!("note: --vocab applies to the native demo model; the \
                        artifact engine's vocab comes from its manifest");
@@ -283,7 +441,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             .map_err(err_str)?;
         // PJRT execution ignores the taskpool; record the serial truth.
         handle.metrics.compute_threads.add(1);
-        (handle, vocab)
+        (Front::Single(handle), vocab)
     };
     let tok = Tokenizer::new(vocab);
 
@@ -310,26 +468,64 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         }
         eprintln!("workload: {} mix, {n} seeded requests", mix.name);
         // The native demo backend prefills 16 positions; cap prompts there.
-        let reqs = tenx_iree::workload::WorkloadGen::new(42, mix, vocab, 16,
-                                                         max_new)
+        let mut reqs = tenx_iree::workload::WorkloadGen::new(42, mix, vocab,
+                                                             16, max_new)
             .generate(n);
-        let mut cancels = Vec::new();
-        let rxs = reqs
-            .iter()
-            .map(|w| {
+        // Arrivals used to go out in one up-front burst that ignored each
+        // request's arrival_step, so every later request's TTFT silently
+        // included its synthetic arrival delay. Pace submissions against
+        // the workers' scheduler-step clock instead — the same time base
+        // `workload::drive` uses in-process — and fire cancel-heavy
+        // hang-ups at arrival + cancel_after on that clock, so TTFT and
+        // queueing are measured from when the request actually arrived.
+        reqs.sort_by_key(|w| w.arrival_step);
+        let clock0 = front.clock();
+        let mut skipped = 0u64; // idle fast-forward credit
+        let mut cancels: Vec<(u64, RequestId)> = Vec::new();
+        let mut rxs = Vec::with_capacity(reqs.len());
+        let mut next = 0usize;
+        while next < reqs.len() || !cancels.is_empty() {
+            let now = front.clock().saturating_sub(clock0) + skipped;
+            let mut progressed = false;
+            while next < reqs.len() && reqs[next].arrival_step as u64 <= now
+            {
+                let w = &reqs[next];
                 let (id, rx) =
-                    handle.submit_request(w.to_request(0)).map_err(err_str)?;
-                if w.cancel_after.is_some() {
-                    cancels.push(id);
+                    front.submit_request(w.to_request(0)).map_err(err_str)?;
+                if let Some(after) = w.cancel_after {
+                    cancels.push((w.arrival_step as u64 + after as u64, id));
                 }
-                Ok(rx)
-            })
-            .collect::<Result<Vec<_>, String>>()?;
-        // Cancel-heavy arrivals hang up after submitting: the cancels race
-        // admission and decode, exercising mid-flight teardown. Cancelling
-        // an already-finished id is a no-op.
-        for id in cancels {
-            handle.cancel(id).map_err(err_str)?;
+                rxs.push(rx);
+                next += 1;
+                progressed = true;
+            }
+            let mut i = 0;
+            while i < cancels.len() {
+                if cancels[i].0 <= now {
+                    let (_, id) = cancels.swap_remove(i);
+                    // Cancelling an already-finished id is a no-op.
+                    front.cancel(id).map_err(err_str)?;
+                    progressed = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if progressed || (next >= reqs.len() && cancels.is_empty()) {
+                continue;
+            }
+            // Nothing due yet. An idle worker blocks with its step clock
+            // frozen, so once every submitted request has resolved, jump
+            // the virtual clock to the next event instead of spinning.
+            if front.resolved() >= rxs.len() as u64 {
+                let due = reqs.get(next).map(|w| w.arrival_step as u64)
+                    .into_iter()
+                    .chain(cancels.iter().map(|&(s, _)| s))
+                    .min()
+                    .expect("loop guard: an event is outstanding");
+                skipped += due.saturating_sub(now);
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
         }
         rxs
     } else {
@@ -341,20 +537,23 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                     custom
                 };
                 let p = tok.encode(text);
-                handle.submit(p, max_new, sampling, None).map_err(err_str)
+                front.submit(p, max_new, sampling, None).map_err(err_str)
             })
             .collect::<Result<_, _>>()?
     };
     for (i, rx) in rxs.into_iter().enumerate() {
-        let out = rx.recv().map_err(err_str)?;
-        println!(
-            "req {i:>2}: {:>2} tokens in {:?} (ttft {:?}) -> {:?}",
-            out.tokens.len(), out.e2e, out.ttft,
-            tok.decode(&out.tokens)
-        );
+        match rx.recv() {
+            Ok(out) => println!(
+                "req {i:>2}: {:>2} tokens in {:?} (ttft {:?}) -> {:?}",
+                out.tokens.len(), out.e2e, out.ttft,
+                tok.decode(&out.tokens)
+            ),
+            // A dropped sender is the queue-rejection signal.
+            Err(_) => println!("req {i:>2}: rejected (queue full)"),
+        }
     }
-    println!("\n{}", handle.metrics.report());
-    handle.shutdown().map_err(err_str)
+    println!("\n{}", front.report());
+    front.shutdown().map_err(err_str)
 }
 
 fn cmd_compile(argv: &[String]) -> Result<(), String> {

@@ -181,6 +181,25 @@ pub struct ServingMetrics {
     /// KV (each was already streamed to the client once; none is sampled
     /// again) — the realised cost of the recompute path.
     pub preempt_replayed_tokens: Counter,
+    /// Host swap-arena pages currently held by parked swap victims (a
+    /// victim's payload occupies `ceil(pos / page_tokens)` arena pages
+    /// until it swaps back in or is cancelled).
+    pub swap_arena_pages: Gauge,
+    /// High-water mark of `swap_arena_pages` — the number CI asserts never
+    /// exceeds the cap.
+    pub swap_arena_pages_peak: Gauge,
+    /// Configured swap-arena capacity in pages (`--swap-arena-pages`;
+    /// defaults to the KV pool size, so the host arena is bounded by the
+    /// same budget as the device pool instead of growing without limit).
+    pub swap_arena_pages_cap: Gauge,
+    /// Swap elections denied because the arena lacked headroom — the
+    /// victim fell back to the recompute resume path instead.
+    pub preempt_swap_blocked: Counter,
+    /// Scheduler iterations (admit + decode), including idle-queue steps.
+    /// This is the workload generator's time base: `serve --workload`
+    /// paces arrivals against this clock so `arrival_step` means the same
+    /// thing under the threaded server as under `workload::drive`.
+    pub scheduler_steps: Counter,
     /// Finished requests that carried a TTFT target.
     pub slo_ttft_seen: Counter,
     /// Of those, the ones whose measured TTFT met the target.
@@ -269,10 +288,15 @@ impl ServingMetrics {
             ));
             s.push_str(&format!(
                 "preemption: {} preemptions ({} recompute, {} swap), {} \
-                 resumes, {} tokens replayed\n",
+                 resumes, {} tokens replayed, arena pages {}/{} in use \
+                 (peak {}, {} swap-blocked)\n",
                 self.preemptions.get(), self.preempt_recompute.get(),
                 self.preempt_swap.get(), self.preempt_resumes.get(),
-                self.preempt_replayed_tokens.get()
+                self.preempt_replayed_tokens.get(),
+                self.swap_arena_pages.get(),
+                self.swap_arena_pages_cap.get(),
+                self.swap_arena_pages_peak.get(),
+                self.preempt_swap_blocked.get()
             ));
         } else {
             s.push_str("kv-cache: slab (contiguous per-slot max_seq \
@@ -411,13 +435,18 @@ mod tests {
         m.preempt_swap.add(1);
         m.preempt_resumes.add(3);
         m.preempt_replayed_tokens.add(17);
+        m.swap_arena_pages.set(2);
+        m.swap_arena_pages_peak.set(5);
+        m.swap_arena_pages_cap.set(8);
+        m.preempt_swap_blocked.inc();
         m.slo_ttft_seen.add(4);
         m.slo_ttft_met.add(3);
         m.slo_tpot_seen.add(2);
         m.slo_tpot_met.add(2);
         let r = m.report();
         assert!(r.contains("preemption: 3 preemptions (2 recompute, 1 \
-                            swap), 3 resumes, 17 tokens replayed"));
+                            swap), 3 resumes, 17 tokens replayed, arena \
+                            pages 2/8 in use (peak 5, 1 swap-blocked)"));
         assert!(r.contains(
             "slo: ttft 3/4 within target, tpot 2/2 within target"));
     }

@@ -12,7 +12,8 @@
 
 use std::time::Duration;
 
-use crate::coordinator::{ModelBackend, Priority, Request, Scheduler};
+use crate::coordinator::{FleetScheduler, ModelBackend, Priority, Request,
+                         Scheduler};
 use crate::util::prng::Rng;
 
 /// One traffic archetype in a mix.
@@ -374,6 +375,66 @@ pub fn drive<B: ModelBackend>(sched: &mut Scheduler<B>,
         }
         stats.finished += sched.take_finished().len();
         assert!(step < 100_000, "workload did not drain");
+    }
+    stats
+}
+
+/// [`drive`] for a routed fleet: submit each request at its arrival step
+/// (the router picks the shard), fire its scheduled cancel fleet-wide,
+/// and step every shard in lockstep until the whole fleet drains. Ids
+/// are `base_id + index`, fleet-unique by construction. Occupancy is
+/// sampled against the *aggregate* pool (pages in use / total pages
+/// across shards), so fleet and single-host stats compare at equal
+/// total memory. Deterministic for deterministic backends and routers
+/// (round-robin state is part of the fleet, so a fresh fleet replays a
+/// trace identically).
+pub fn drive_fleet<B: ModelBackend>(fleet: &mut FleetScheduler<B>,
+                                    reqs: &[WorkloadRequest],
+                                    base_id: u64) -> DriveStats {
+    let mut stats = DriveStats::default();
+    let mut cancels: Vec<(usize, u64)> = Vec::new(); // (due step, id)
+    let mut next = 0;
+    let mut step = 0usize;
+    loop {
+        while next < reqs.len() && reqs[next].arrival_step <= step {
+            let id = base_id + next as u64;
+            if fleet.submit(reqs[next].to_request(id)) {
+                stats.submitted += 1;
+                if let Some(after) = reqs[next].cancel_after {
+                    cancels.push((step + after, id));
+                }
+            } else {
+                stats.rejected += 1;
+            }
+            next += 1;
+        }
+        cancels.retain(|&(due, id)| {
+            if due > step {
+                return true;
+            }
+            if fleet.cancel(id) {
+                stats.cancels_hit += 1;
+            }
+            false
+        });
+        if next >= reqs.len() && !fleet.has_work() {
+            break;
+        }
+        fleet.step().expect("fleet workload drive step");
+        step += 1;
+        stats.steps = step;
+        let active = fleet.active_count();
+        stats.peak_active = stats.peak_active.max(active);
+        stats.active_steps_sum += active;
+        let pool = fleet.pool_pages();
+        if pool > 0 {
+            let occ = fleet.pages_in_use() * 1000 / pool;
+            stats.peak_occupancy_permille =
+                stats.peak_occupancy_permille.max(occ);
+            stats.occupancy_permille_sum += occ;
+        }
+        stats.finished += fleet.take_finished().len();
+        assert!(step < 100_000, "fleet workload did not drain");
     }
     stats
 }

@@ -372,3 +372,88 @@ fn finished_prefix_pages_evict_in_lru_order_under_pressure() {
     assert_eq!(metrics.kv_shared_prefix_hits.get(), h0 + 1,
                "B's prefix page should have survived the eviction");
 }
+
+/// Fleet id namespaces under fire: many threads submitting concurrently
+/// through one routed [`FleetHandle`] must never see two requests share
+/// an id, every id must decode back to the shard that issued it
+/// (`(id - 1) % N`), and every submission must resolve. This is the
+/// property the shard-interleaved id scheme (shard i issues
+/// `i+1, i+1+N, ...`) exists to guarantee — a collision would cross the
+/// streams of two clients' outputs.
+#[test]
+fn fleet_ids_never_collide_under_concurrent_submission() {
+    use std::collections::HashSet;
+    use std::sync::Arc;
+    use tenx_iree::coordinator::{start_fleet, KvCacheConfig, KvChoice,
+                                 RouterPolicy, SchedulerOptions};
+
+    const SHARDS: usize = 4;
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 25;
+
+    let factories: Vec<_> = (0..SHARDS)
+        .map(|_| {
+            || -> anyhow::Result<MockBackend> {
+                Ok(MockBackend::new(2, 8, 32, 64))
+            }
+        })
+        .collect();
+    let fleet = Arc::new(
+        start_fleet(factories, 512, 7,
+                    KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                                    pool_pages: 0 }),
+                    SchedulerOptions::default(), RouterPolicy::Prefix)
+            .unwrap());
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let fleet = fleet.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..PER_THREAD {
+                    // Distinct prompts spread placement over shards.
+                    let prompt: Vec<u32> = (0..4)
+                        .map(|j| ((t * 31 + i * 7 + j) % 50 + 3) as u32)
+                        .collect();
+                    let req = tenx_iree::coordinator::Request::greedy(
+                        0, prompt, 3);
+                    let (id, rx) = fleet.submit_request(req).unwrap();
+                    got.push((id, rx));
+                }
+                got.into_iter()
+                    .map(|(id, rx)| {
+                        let out = rx.recv().expect("request resolves");
+                        assert_eq!(out.id, id, "output crossed streams");
+                        assert_eq!(out.tokens.len(), 3);
+                        id
+                    })
+                    .collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+
+    let ids: Vec<u64> =
+        workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    assert_eq!(ids.len(), THREADS * PER_THREAD);
+    let unique: HashSet<u64> = ids.iter().copied().collect();
+    assert_eq!(unique.len(), ids.len(), "fleet issued a duplicate id");
+
+    // Every shard's namespace is congruent to shard_index + 1 mod N, and
+    // the per-shard submitted counters account for every request.
+    let total: u64 = fleet.shards().iter()
+        .map(|h| h.metrics.requests_submitted.get())
+        .sum();
+    assert_eq!(total, (THREADS * PER_THREAD) as u64);
+    for (s, h) in fleet.shards().iter().enumerate() {
+        let congruent = ids.iter()
+            .filter(|&&id| (id - 1) % SHARDS as u64 == s as u64)
+            .count() as u64;
+        assert_eq!(congruent, h.metrics.requests_submitted.get(),
+                   "shard {s}: ids outside its namespace");
+    }
+    let report = fleet.report();
+    assert!(report.contains("fleet: total: 200 submitted, 200 completed"),
+            "unexpected fleet report:\n{report}");
+    Arc::try_unwrap(fleet).ok().expect("all clones joined")
+        .shutdown().unwrap();
+}

@@ -1078,3 +1078,145 @@ fn fuzz_preemptive_scheduling_token_exact_and_conserving() {
     assert!(preemptions_total > 0,
             "the undersized pool must actually exercise preemption");
 }
+
+/// Build an in-process fleet of `n` identical mock-backed shards for the
+/// routing/token-exactness properties below (auto-sized pools: pressure
+/// behaviour is the fuzz harness's job, stream identity is this file's).
+fn mock_fleet(n: usize, policy: tenx_iree::coordinator::RouterPolicy)
+              -> tenx_iree::coordinator::FleetScheduler<
+                     tenx_iree::coordinator::MockBackend> {
+    use std::sync::Arc;
+    use tenx_iree::coordinator::{FleetScheduler, KvCacheConfig, KvChoice,
+                                 MockBackend, Scheduler};
+    use tenx_iree::metrics::ServingMetrics;
+    let shards = (0..n)
+        .map(|_| {
+            Scheduler::with_kv(MockBackend::new(2, 8, 32, 64), 256,
+                               Arc::new(ServingMetrics::default()), 7,
+                               KvChoice::Paged(KvCacheConfig {
+                                   page_tokens: 4,
+                                   pool_pages: 0,
+                               }))
+        })
+        .collect();
+    FleetScheduler::new(shards, policy)
+}
+
+/// Fleet routing is a pure function of the prompt: the same prompt maps
+/// to the same shard on every call and on every independently-built
+/// router (no per-instance or per-process state leaks into placement —
+/// the property that lets any front-end replica route without
+/// coordination). The golden pinned placements live in the fleet module's
+/// unit tests; this is the generated-input sweep.
+#[test]
+fn prop_fleet_routing_deterministic_and_prompt_pure() {
+    use tenx_iree::coordinator::RouterPolicy;
+    forall(Config::default().cases(60), |g| {
+        let n = g.usize_in(1, 6);
+        let f = mock_fleet(n, RouterPolicy::Prefix);
+        let h = mock_fleet(n, RouterPolicy::Prefix);
+        let len = g.usize_in(1, 14);
+        let prompt: Vec<u32> =
+            (0..len).map(|_| g.usize_in(1, 50) as u32).collect();
+        let shard = f.route(&prompt);
+        prop_assert(shard < n, "route must stay in range")?;
+        prop_assert(shard == f.route(&prompt),
+                    "identical prompts must land on one shard")?;
+        prop_assert(shard == h.route(&prompt),
+                    "placement must not depend on router instance state")
+    });
+}
+
+/// A fleet of N shards is **token-exact** vs one single-instance
+/// coordinator over the same seeded workload: sharding decides *where* a
+/// request decodes, never *what* it emits. Holds under both router
+/// policies; requests keep their workload arrival steps, so routing,
+/// lockstep stepping and admission interleave realistically.
+#[test]
+fn prop_fleet_token_exact_vs_single_instance() {
+    use std::sync::Arc;
+    use tenx_iree::coordinator::request::RequestOutput;
+    use tenx_iree::coordinator::{FinishReason, KvCacheConfig, KvChoice,
+                                 MockBackend, RouterPolicy, Scheduler};
+    use tenx_iree::metrics::ServingMetrics;
+    use tenx_iree::workload::{ScenarioMix, WorkloadGen, WorkloadRequest};
+
+    fn summarize(mut outs: Vec<RequestOutput>)
+                 -> Vec<(u64, usize, Vec<u32>, FinishReason)> {
+        outs.sort_by_key(|o| o.id);
+        outs.into_iter()
+            .map(|o| (o.id, o.prompt_len, o.tokens, o.finish))
+            .collect()
+    }
+
+    forall(Config::default().cases(12), |g| {
+        let n_shards = g.usize_in(2, 4);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let name = *g.choose(&["uniform", "chat", "bursty", "agents"]);
+        let mix = ScenarioMix::from_name(name).expect("preset");
+        let n_req = g.usize_in(4, 24);
+        let policy = if g.bool() { RouterPolicy::Prefix }
+                     else { RouterPolicy::RoundRobin };
+        let mut reqs: Vec<WorkloadRequest> =
+            WorkloadGen::new(seed, mix, 64, 8, 6).generate(n_req);
+        // Cancels land at wall-step boundaries, and a fleet's extra batch
+        // slots legitimately shift how far a request got when its cancel
+        // hits — stream identity is only claimed for natural finishes.
+        for w in &mut reqs {
+            w.cancel_after = None;
+        }
+
+        // Single pooled instance.
+        let mut single = Scheduler::with_kv(
+            MockBackend::new(2, 8, 32, 64), 256,
+            Arc::new(ServingMetrics::default()), 7,
+            KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                            pool_pages: 0 }));
+        let mut single_outs = Vec::new();
+        let (mut next, mut step) = (0usize, 0usize);
+        loop {
+            while next < reqs.len() && reqs[next].arrival_step <= step {
+                if !single.submit(reqs[next].to_request(next as u64 + 1)) {
+                    return Err("single queue unexpectedly full".into());
+                }
+                next += 1;
+            }
+            if next >= reqs.len() && !single.has_work() {
+                break;
+            }
+            single.step().map_err(|e| e.to_string())?;
+            step += 1;
+            single_outs.extend(single.take_finished());
+            if step > 100_000 {
+                return Err("single instance did not drain".into());
+            }
+        }
+
+        // The routed fleet over the same requests with the same ids.
+        let mut fleet = mock_fleet(n_shards, policy);
+        let mut fleet_outs = Vec::new();
+        let (mut next, mut step) = (0usize, 0usize);
+        loop {
+            while next < reqs.len() && reqs[next].arrival_step <= step {
+                if !fleet.submit(reqs[next].to_request(next as u64 + 1)) {
+                    return Err("a shard queue unexpectedly full".into());
+                }
+                next += 1;
+            }
+            if next >= reqs.len() && !fleet.has_work() {
+                break;
+            }
+            fleet.step().map_err(|e| e.to_string())?;
+            step += 1;
+            fleet_outs.extend(fleet.take_finished());
+            if step > 100_000 {
+                return Err("fleet did not drain".into());
+            }
+        }
+        fleet.check_invariants().map_err(|e| e.to_string())?;
+        prop_assert(fleet.pages_in_use() == 0,
+                    "drained fleet must hold no pages")?;
+        prop_assert(summarize(single_outs) == summarize(fleet_outs),
+                    "fleet serving diverged from the single instance")
+    });
+}

@@ -198,6 +198,70 @@ fi
 echo "preemption smoke: $preempts preemptions, $slo_seen ttft-targeted \
 requests scored, 0 packs / 0 allocs; worst-case preempted 0"
 
+echo "== fleet serve smoke (4 shards, prefix vs round-robin router) =="
+# The same seeded agent-swarm workload served twice by a 4-shard fleet at
+# a deliberately undersized per-shard pool (48/4 = 12 pages against
+# up-to-5-page contexts), once per router policy. The prefix router keys
+# placement on the page-aligned prompt-prefix hash the cache publishes
+# under, so it must co-locate shared system-prompt pages: strictly more
+# fleet-wide shared-prefix hits than round-robin at identical shards,
+# pools and traffic. Every shard must also hold the zero-repack steady
+# state and keep its swap-arena peak within the configured cap.
+fleet_total_hits() {
+    printf '%s\n' "$1" \
+        | sed -n 's/^fleet: total: .* hits \([0-9]*\),.*/\1/p'
+}
+fleet_run() {
+    cargo run --release --quiet --bin tenx -- serve --native \
+        --precision f16 --vocab 64 --workload agents --requests 32 \
+        --max-new-tokens 6 --kv-page-tokens 4 --kv-pool-pages 48 \
+        --fleet 4 --router "$1"
+}
+check_fleet_shards() {
+    local router="$1" out="$2" line peak cap
+    if [ "$(printf '%s\n' "$out" | grep -c '^fleet: shard ')" -ne 4 ]; then
+        echo "fleet smoke ($router): expected 4 shard report lines"
+        printf '%s\n' "$out"
+        exit 1
+    fi
+    while IFS= read -r line; do
+        case "$line" in
+            *"packs 0 / allocs 0") ;;
+            *)
+                echo "fleet smoke ($router): a shard broke the \
+zero-repack steady state: $line"
+                printf '%s\n' "$out"
+                exit 1
+                ;;
+        esac
+        peak="$(printf '%s\n' "$line" \
+            | sed -n 's|.*arena peak \([0-9]*\)/[0-9]*,.*|\1|p')"
+        cap="$(printf '%s\n' "$line" \
+            | sed -n 's|.*arena peak [0-9]*/\([0-9]*\),.*|\1|p')"
+        if [ -z "$peak" ] || [ -z "$cap" ] || [ "$peak" -gt "$cap" ]; then
+            echo "fleet smoke ($router): swap arena exceeded its cap: $line"
+            printf '%s\n' "$out"
+            exit 1
+        fi
+    done < <(printf '%s\n' "$out" | grep '^fleet: shard ')
+}
+prefix_out="$(fleet_run prefix)"
+rr_out="$(fleet_run round-robin)"
+check_fleet_shards prefix "$prefix_out"
+check_fleet_shards round-robin "$rr_out"
+prefix_hits="$(fleet_total_hits "$prefix_out")"
+rr_hits="$(fleet_total_hits "$rr_out")"
+if [ -z "$prefix_hits" ] || [ -z "$rr_hits" ] \
+    || [ "$prefix_hits" -le "$rr_hits" ]; then
+    echo "fleet smoke: prefix routing must strictly beat round-robin on \
+shared-prefix hits (prefix ${prefix_hits:-?}, round-robin ${rr_hits:-?})"
+    echo "--- prefix ------"; printf '%s\n' "$prefix_out"
+    echo "--- round-robin -"; printf '%s\n' "$rr_out"
+    exit 1
+fi
+echo "fleet smoke: hits prefix $prefix_hits > round-robin $rr_hits; all \
+4 shards 0 packs / 0 allocs, swap-arena peaks within cap"
+
 echo "== threaded ukernel bench (quick, 2 workers) =="
 TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
 
@@ -251,6 +315,10 @@ if [ "${RUN_BENCHES:-0}" = "1" ]; then
     # on peak concurrency and mean occupancy for the bursty and
     # agent-swarm mixes at an equal, undersized pool.
     TENX_BENCH_QUICK=1 cargo bench --bench workload_mix
+    # fleet_serving self-asserts the prefix router beats round-robin on
+    # fleet-wide shared-prefix hits and the fleet holds the single
+    # pooled host's peak concurrency at equal total pages.
+    TENX_BENCH_QUICK=1 cargo bench --bench fleet_serving
     echo "== tile_sweep A2d: tuned-vs-static (quick profile) =="
     profile="$(mktemp /tmp/tenx-tuning-bench.XXXXXX)"
     cargo run --release --quiet --bin tenx -- autotune --quick \
