@@ -1,0 +1,80 @@
+//! The typed error taxonomy for the serve hot path.
+//!
+//! Before the reliability PR, any failure inside `Scheduler::step()` was
+//! an `anyhow::Error` bubbling out of the worker loop — which killed the
+//! whole coordinator, in-flight requests and all. The split now is:
+//!
+//! - **Absorbed**: per-request failures (a poison request, a transient
+//!   backend compute error, a failed speculative verify) finish the
+//!   affected sequences with `FinishReason::Failed`, release their pages,
+//!   and the scheduler keeps serving. These never become a `ServeError`.
+//! - **Fatal**: the scheduler itself is no longer trustworthy — a KV page
+//!   accounting operation was rejected (an invariant bug), the backend
+//!   returned malformed logits, or a fault plan scripted a crash. These
+//!   return [`ServeError`] from `step()`; the worker thread exits and the
+//!   fleet supervisor detects the dead shard, respawns it with a rebuilt
+//!   page pool, and re-routes its in-flight requests.
+//!
+//! `ServeError` implements `std::error::Error`, so existing call sites
+//! that collect into `anyhow::Result` keep working through the blanket
+//! `From` impl; supervisors match on the variant instead (an
+//! [`InjectedCrash`](ServeError::InjectedCrash) is expected chaos, not a
+//! bug).
+
+use std::fmt;
+
+/// A fatal serve-path error: the scheduler that raised it must be
+/// considered dead (details at module level).
+#[derive(Debug)]
+pub enum ServeError {
+    /// A fault plan scripted this scheduler's death at `step`.
+    InjectedCrash { shard: usize, step: u64 },
+    /// The backend broke its contract (e.g. returned a logits buffer too
+    /// short for the batch); distinct from a backend *compute* error,
+    /// which is absorbed per-request.
+    Backend { phase: &'static str, detail: String },
+    /// The KV cache manager rejected a page operation the scheduler's
+    /// accounting said must succeed — an invariant violation, not load.
+    KvCache { op: &'static str, detail: String },
+}
+
+impl ServeError {
+    pub fn is_injected_crash(&self) -> bool {
+        matches!(self, ServeError::InjectedCrash { .. })
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::InjectedCrash { shard, step } => {
+                write!(f, "injected crash: shard {shard} at step {step}")
+            }
+            ServeError::Backend { phase, detail } => {
+                write!(f, "backend contract violation in {phase}: {detail}")
+            }
+            ServeError::KvCache { op, detail } => {
+                write!(f, "kv-cache invariant violation in {op}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converts_into_anyhow_and_renders() {
+        let e = ServeError::KvCache { op: "allocate_prompt", detail: "pool dry".into() };
+        let any: anyhow::Error = e.into();
+        assert!(any.to_string().contains("allocate_prompt"));
+        let c = ServeError::InjectedCrash { shard: 2, step: 40 };
+        assert!(c.is_injected_crash());
+        assert!(c.to_string().contains("shard 2"));
+        assert!(!ServeError::Backend { phase: "decode", detail: String::new() }
+            .is_injected_crash());
+    }
+}

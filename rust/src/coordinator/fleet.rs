@@ -32,17 +32,23 @@
 //!   never collide across instances and `(id - 1) % n` recovers the owner
 //!   for fleet-wide cancel.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::backend::ModelBackend;
 use super::kvcache::{chain_hash, prefix_key, KvChoice,
                      KV_PAGE_TOKENS_DEFAULT};
-use super::request::{Request, RequestId, RequestOutput};
+use super::request::{FinishReason, Request, RequestId, RequestOutput};
 use super::scheduler::Scheduler;
-use super::server::{start_with_kv_options, SchedulerOptions, ServerHandle};
+use super::server::{start_with_kv_options, start_with_kv_options_metrics,
+                    SchedulerOptions, ServerHandle};
+use crate::faults::{FaultEvent, FaultKind, FaultPlan};
 use crate::llm::SamplingParams;
 use crate::metrics::ServingMetrics;
 
@@ -144,13 +150,62 @@ impl FleetRouter {
     }
 }
 
+/// Knobs for shard supervision (both the lockstep [`FleetScheduler`]
+/// with a fault plan and the threaded [`SupervisedFleetHandle`]).
+///
+/// Time-like fields are interpreted on each tier's own clock: the
+/// lockstep fleet counts **fleet iterations** (deterministic, so the
+/// chaos property tests replay exactly), the threaded supervisor counts
+/// **milliseconds** for backoff and wall-time for wedge detection.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisionConfig {
+    /// Retries per request before it is quarantined to the dead-letter
+    /// list (budget 2 = up to 3 attempts total).
+    pub retry_budget: u32,
+    /// First retry delay (iterations / ms); doubles per attempt.
+    pub backoff_base: u64,
+    /// Ceiling for the exponential backoff (iterations / ms).
+    pub backoff_cap: u64,
+    /// Lockstep heartbeat: a shard whose step clock stays frozen for this
+    /// many fleet iterations *while it has work* is declared wedged.
+    pub heartbeat_window: u64,
+    /// Threaded heartbeat: wall-clock analogue of `heartbeat_window`.
+    pub wedge_timeout_ms: u64,
+}
+
+impl Default for SupervisionConfig {
+    fn default() -> SupervisionConfig {
+        SupervisionConfig { retry_budget: 2, backoff_base: 2,
+                            backoff_cap: 16, heartbeat_window: 4,
+                            wedge_timeout_ms: 250 }
+    }
+}
+
+/// Capped exponential backoff before retry `attempts` (1-based).
+fn backoff(cfg: &SupervisionConfig, attempts: u32) -> u64 {
+    let shift = attempts.saturating_sub(1).min(16);
+    (cfg.backoff_base << shift).min(cfg.backoff_cap)
+}
+
+/// A terminal output minted by the supervisor itself (quarantine,
+/// cancel-while-parked): no tokens, zero timings — the finish reason is
+/// the payload.
+fn supervisor_output(id: RequestId, finish: FinishReason) -> RequestOutput {
+    RequestOutput { id, prompt_len: 0, tokens: Vec::new(), finish,
+                    ttft: Duration::ZERO, e2e: Duration::ZERO }
+}
+
 /// One aggregated `fleet:` report block over per-shard
 /// [`ServingMetrics`]: a header, one line per shard, and a fleet-level
 /// total line. `scripts/ci.sh` greps these — per-shard `packs P / allocs
 /// A` for the N-way zero-repack invariant, the total's `hits` for the
 /// prefix-vs-round-robin comparison, and `arena peak` against the cap.
+/// With `supervisor` metrics (or any nonzero reliability counter) a
+/// `fleet: reliability:` line is appended; it stays absent on fault-free
+/// runs so existing bench/ci output is byte-identical.
 pub fn fleet_report(policy: RouterPolicy, routed: &[u64],
-                    shards: &[&ServingMetrics]) -> String {
+                    shards: &[&ServingMetrics],
+                    supervisor: Option<&ServingMetrics>) -> String {
     let mut s = format!(
         "fleet: {} shards, {} router, routed {}\n",
         shards.len(), policy.name(),
@@ -185,7 +240,81 @@ pub fn fleet_report(policy: RouterPolicy, routed: &[u64],
         "fleet: total: {sub} submitted, {comp} completed, hits {hits}, \
          evictions {evic}, preemptions {pre}, swap-blocked {blocked}, \
          arena peak {peak} (cap {cap}/shard), decode tokens {dec}\n"));
+    let (mut inj, mut det, mut be, mut fail, mut retr) = (0u64, 0, 0, 0, 0);
+    let (mut resp, mut quar, mut dk, mut shed) = (0u64, 0, 0, 0);
+    for m in shards.iter().copied().chain(supervisor) {
+        inj += m.faults_injected.get();
+        det += m.faults_detected.get();
+        be += m.backend_errors.get();
+        fail += m.requests_failed.get();
+        retr += m.requests_retried.get();
+        resp += m.shard_respawns.get();
+        quar += m.requests_quarantined.get();
+        dk += m.deadline_kills.get();
+        shed += m.requests_shed.get();
+    }
+    if supervisor.is_some()
+        || inj + det + be + fail + retr + resp + quar + dk + shed > 0
+    {
+        s.push_str(&format!(
+            "fleet: reliability: faults {inj} injected / {det} detected, \
+             backend errors {be}, failed {fail}, retries {retr}, \
+             respawns {resp}, quarantined {quar}, deadline kills {dk}, \
+             shed {shed}\n"));
+    }
     s
+}
+
+/// One request the lockstep supervisor is accountable for, from accept
+/// to a client-visible terminal output.
+struct Flight {
+    req: Request,
+    /// Failures so far (failed finish or crashed shard); compared
+    /// against [`SupervisionConfig::retry_budget`].
+    attempts: u32,
+    /// Cancel intent recorded at the supervisor, so a crash-respawn
+    /// between the cancel and the shard's acknowledgement still resolves
+    /// to `Cancelled` instead of silently retrying a cancelled request.
+    cancelled: bool,
+    /// `Some(shard)` while submitted to a shard; `None` while parked in
+    /// the retry queue.
+    shard: Option<usize>,
+}
+
+/// The lockstep fleet's supervision state: scripted lifecycle faults,
+/// heartbeats on the shard step clocks, a retry queue with capped
+/// exponential backoff, and the dead-letter list. Deterministic by
+/// construction — everything is keyed to the fleet iteration counter, so
+/// the chaos property tests can replay a `(plan, workload)` pair
+/// bit-for-bit.
+struct Supervision<B: ModelBackend> {
+    cfg: SupervisionConfig,
+    plan: Arc<FaultPlan>,
+    /// Builds a replacement scheduler (fresh page pool) for a shard.
+    rebuild: Box<dyn FnMut(usize) -> Scheduler<B>>,
+    /// Fleet iteration counter — the clock lifecycle events fire on.
+    iter: u64,
+    /// Pending crash/stall events, sorted by step.
+    lifecycle: VecDeque<FaultEvent>,
+    /// Shard `i` skips its step while `stalled_until[i] > iter`.
+    stalled_until: Vec<u64>,
+    /// Heartbeat state: last observed `scheduler_steps` per shard, and
+    /// how many fleet iterations it has been frozen while busy.
+    last_steps: Vec<u64>,
+    stale_iters: Vec<u64>,
+    /// Every accepted, unresolved request.
+    in_flight: BTreeMap<RequestId, Flight>,
+    /// Parked retries: `(due_iter, id)`, resubmitted once due.
+    retry: Vec<(u64, RequestId)>,
+    /// Quarantined ids — requests that exhausted the retry budget.
+    dead_letter: Vec<RequestId>,
+    /// Supervisor-minted outputs awaiting the next `take_finished`.
+    pending_out: Vec<RequestOutput>,
+    /// Fleet-wide submission index (poison marking).
+    submitted_idx: u64,
+    /// Supervisor-level reliability counters (retries, respawns,
+    /// quarantines); shard counters stay per-shard.
+    metrics: Arc<ServingMetrics>,
 }
 
 /// N bare schedulers behind one router, stepped in lockstep — the
@@ -193,10 +322,17 @@ pub fn fleet_report(policy: RouterPolicy, routed: &[u64],
 /// are caller-assigned (as with [`Scheduler::submit`]); the caller keeps
 /// them fleet-unique, which [`crate::workload::drive_fleet`] does by
 /// numbering the whole workload from one base.
+///
+/// [`FleetScheduler::with_supervision`] layers the self-healing plane on
+/// top: scripted crash/stall events, heartbeat wedge detection,
+/// drain-and-respawn with page-pool rebuild, retry with capped backoff,
+/// and quarantine. Without it (the default), every supervised branch is
+/// a single `Option` check — the fault-free fleet is unchanged.
 pub struct FleetScheduler<B: ModelBackend> {
     shards: Vec<Scheduler<B>>,
     router: FleetRouter,
     routed: Vec<u64>,
+    supervision: Option<Supervision<B>>,
 }
 
 impl<B: ModelBackend> FleetScheduler<B> {
@@ -212,7 +348,49 @@ impl<B: ModelBackend> FleetScheduler<B> {
         let n = shards.len();
         let router =
             FleetRouter::new(policy, n, pt).with_prompt_cap(cap);
-        FleetScheduler { shards, router, routed: vec![0; n] }
+        FleetScheduler { shards, router, routed: vec![0; n],
+                         supervision: None }
+    }
+
+    /// A supervised fleet: `rebuild(i)` constructs shard `i`'s scheduler
+    /// (and is kept around to respawn it after a crash — each respawn
+    /// gets a **fresh page pool**; cached prefixes re-publish as traffic
+    /// re-prefixes them). Shard-level injectable faults (compute error,
+    /// queue overflow, swap-fail) are installed from the plan; crash and
+    /// stall events stay at the fleet tier, where supervision simulates
+    /// them on the deterministic iteration clock.
+    pub fn with_supervision(mut rebuild: Box<dyn FnMut(usize) -> Scheduler<B>>,
+                            shard_count: usize, policy: RouterPolicy,
+                            plan: Arc<FaultPlan>,
+                            cfg: SupervisionConfig) -> FleetScheduler<B> {
+        let shards: Vec<Scheduler<B>> = (0..shard_count)
+            .map(|i| {
+                let mut s = rebuild(i);
+                s.set_shard_index(i);
+                s.set_fault_injector(plan.injector_for_shard(i, false));
+                s
+            })
+            .collect();
+        let mut fleet = FleetScheduler::new(shards, policy);
+        let metrics = Arc::new(ServingMetrics::default());
+        metrics.mark_started();
+        fleet.supervision = Some(Supervision {
+            cfg,
+            lifecycle: VecDeque::from(plan.lifecycle_events()),
+            plan,
+            rebuild,
+            iter: 0,
+            stalled_until: vec![0; shard_count],
+            last_steps: vec![0; shard_count],
+            stale_iters: vec![0; shard_count],
+            in_flight: BTreeMap::new(),
+            retry: Vec::new(),
+            dead_letter: Vec::new(),
+            pending_out: Vec::new(),
+            submitted_idx: 0,
+            metrics,
+        });
+        fleet
     }
 
     pub fn shard_count(&self) -> usize {
@@ -230,30 +408,268 @@ impl<B: ModelBackend> FleetScheduler<B> {
     }
 
     /// Route and enqueue; false = the owning shard's queue rejected it.
-    pub fn submit(&mut self, req: Request) -> bool {
+    /// Supervised fleets additionally mark plan-poisoned submissions and
+    /// register every accepted request for retry accounting.
+    pub fn submit(&mut self, mut req: Request) -> bool {
+        if self.supervision.is_none() {
+            let s = self.router.route(&req.prompt);
+            let ok = self.shards[s].submit(req);
+            if ok {
+                self.routed[s] += 1;
+            }
+            return ok;
+        }
+        let marked = {
+            let sup = self.supervision.as_mut().expect("supervised");
+            if sup.plan.is_poison(sup.submitted_idx) {
+                req.poison = true;
+                true
+            } else {
+                false
+            }
+        };
         let s = self.router.route(&req.prompt);
+        let id = req.id;
+        let flight = Flight { req: req.clone(), attempts: 0,
+                              cancelled: false, shard: Some(s) };
         let ok = self.shards[s].submit(req);
+        let sup = self.supervision.as_mut().expect("supervised");
         if ok {
+            // The poison index is consumed only by accepted submissions,
+            // so a queue rejection doesn't shift the plan's targets.
+            sup.submitted_idx += 1;
+            if marked {
+                sup.metrics.faults_injected.inc();
+            }
+            sup.in_flight.insert(id, flight);
             self.routed[s] += 1;
         }
         ok
     }
 
     /// Fleet-wide cancel: the id's owner is whichever shard knows it.
+    /// Under supervision a request parked for retry (its shard crashed
+    /// and it is waiting out the backoff) resolves to `Cancelled` right
+    /// here — previously a cancel landing during drain-and-respawn had
+    /// no owner and was silently lost.
     pub fn cancel(&mut self, id: RequestId) -> bool {
-        self.shards.iter_mut().any(|s| s.cancel(id))
+        if self.supervision.is_none() {
+            return self.shards.iter_mut().any(|s| s.cancel(id));
+        }
+        let shard = {
+            let sup = self.supervision.as_ref().expect("supervised");
+            match sup.in_flight.get(&id) {
+                None => return false,
+                Some(f) => f.shard,
+            }
+        };
+        match shard {
+            Some(s) => {
+                self.shards[s].cancel(id);
+                let sup = self.supervision.as_mut().expect("supervised");
+                if let Some(f) = sup.in_flight.get_mut(&id) {
+                    // If the shard crashes before the cancel is
+                    // acknowledged, crash_shard resolves this flight to
+                    // Cancelled instead of retrying it.
+                    f.cancelled = true;
+                }
+                true
+            }
+            None => {
+                let sup = self.supervision.as_mut().expect("supervised");
+                sup.in_flight.remove(&id);
+                sup.retry.retain(|&(_, rid)| rid != id);
+                sup.metrics.requests_cancelled.inc();
+                sup.pending_out
+                    .push(supervisor_output(id, FinishReason::Cancelled));
+                true
+            }
+        }
     }
 
     /// One lockstep iteration: every shard admits and decodes once.
+    /// Supervised fleets run the full supervision cycle (lifecycle
+    /// faults, heartbeats, respawn, retry) around the shard steps; a
+    /// shard whose `step()` fails is respawned instead of poisoning the
+    /// fleet, so this only errs on unrecoverable caller bugs.
     pub fn step(&mut self) -> Result<()> {
+        if self.supervision.is_some() {
+            self.step_supervised();
+            return Ok(());
+        }
         for s in &mut self.shards {
             s.step()?;
         }
         Ok(())
     }
 
+    fn step_supervised(&mut self) {
+        // 1) Advance the fleet clock; fire scripted lifecycle events.
+        let (crashes, iter) = {
+            let sup = self.supervision.as_mut().expect("supervised");
+            sup.iter += 1;
+            let iter = sup.iter;
+            let mut crashes = Vec::new();
+            while let Some(e) = sup.lifecycle.front() {
+                if e.step > iter {
+                    break;
+                }
+                let e = *e;
+                sup.lifecycle.pop_front();
+                sup.metrics.faults_injected.inc();
+                match e.kind {
+                    FaultKind::ShardCrash => crashes.push(e.shard),
+                    FaultKind::ShardStall { steps } => {
+                        sup.stalled_until[e.shard] = iter + steps;
+                    }
+                    // Non-lifecycle kinds live in the shard injectors.
+                    _ => {}
+                }
+            }
+            (crashes, iter)
+        };
+        for s in crashes {
+            self.crash_shard(s);
+        }
+
+        // 2) Step every shard that isn't wedged; a failing shard is
+        //    respawned, not propagated.
+        let stalled: Vec<bool> = {
+            let sup = self.supervision.as_ref().expect("supervised");
+            sup.stalled_until.iter().map(|&u| u > iter).collect()
+        };
+        let mut dead = Vec::new();
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            if stalled[i] {
+                continue;
+            }
+            if s.step().is_err() {
+                dead.push(i);
+            }
+        }
+        for i in dead {
+            self.crash_shard(i);
+        }
+
+        // 3) Heartbeats: a frozen step clock on a shard that has work is
+        //    a wedge. (A scripted stall freezes the clock exactly this
+        //    way, so detection is exercised, not assumed.)
+        let wedged: Vec<usize> = {
+            let sup = self.supervision.as_mut().expect("supervised");
+            let mut wedged = Vec::new();
+            for (i, shard) in self.shards.iter().enumerate() {
+                let steps = shard.metrics.scheduler_steps.get();
+                let busy = sup.in_flight.values()
+                    .any(|f| f.shard == Some(i));
+                if steps == sup.last_steps[i] && busy {
+                    sup.stale_iters[i] += 1;
+                } else {
+                    sup.stale_iters[i] = 0;
+                }
+                sup.last_steps[i] = steps;
+                if sup.stale_iters[i] >= sup.cfg.heartbeat_window {
+                    sup.metrics.faults_detected.inc();
+                    wedged.push(i);
+                }
+            }
+            wedged
+        };
+        for i in wedged {
+            self.crash_shard(i);
+        }
+
+        // 4) Resubmit parked retries that are due.
+        let due: Vec<RequestId> = {
+            let sup = self.supervision.as_mut().expect("supervised");
+            sup.retry.sort_unstable();
+            let (due, keep): (Vec<_>, Vec<_>) =
+                sup.retry.drain(..).partition(|&(at, _)| at <= iter);
+            sup.retry = keep;
+            due.into_iter().map(|(_, id)| id).collect()
+        };
+        for id in due {
+            let req = {
+                let sup = self.supervision.as_ref().expect("supervised");
+                match sup.in_flight.get(&id) {
+                    Some(f) => f.req.clone(),
+                    // Cancelled while parked — already resolved.
+                    None => continue,
+                }
+            };
+            let s = self.router.route(&req.prompt);
+            let ok = self.shards[s].submit(req);
+            let sup = self.supervision.as_mut().expect("supervised");
+            if ok {
+                self.routed[s] += 1;
+                if let Some(f) = sup.in_flight.get_mut(&id) {
+                    f.shard = Some(s);
+                }
+            } else {
+                // Queue still full: try again next iteration.
+                sup.retry.push((iter + 1, id));
+            }
+        }
+    }
+
+    /// Drain-and-respawn shard `i`: rebuild its scheduler (fresh page
+    /// pool), then re-route every in-flight request it owned — parking
+    /// survivors for a backed-off retry, quarantining requests that
+    /// exhausted the budget, resolving cancelled ones to `Cancelled`.
+    fn crash_shard(&mut self, i: usize) {
+        let sup = self.supervision.as_mut().expect("supervised");
+        sup.metrics.faults_detected.inc();
+        sup.metrics.shard_respawns.inc();
+        let mut fresh = (sup.rebuild)(i);
+        fresh.set_shard_index(i);
+        // Respawns serve fault-free: the plan scripts the original
+        // incarnation only, so a scripted crash can't become a crash
+        // loop.
+        self.shards[i] = fresh;
+        sup.last_steps[i] = 0;
+        sup.stale_iters[i] = 0;
+        sup.stalled_until[i] = 0;
+        let iter = sup.iter;
+        let ids: Vec<RequestId> = sup.in_flight.iter()
+            .filter(|(_, f)| f.shard == Some(i))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            let (cancelled, attempts) = {
+                let f = sup.in_flight.get_mut(&id)
+                    .expect("flight ids were just collected");
+                if f.cancelled {
+                    (true, 0)
+                } else {
+                    f.attempts += 1;
+                    f.shard = None;
+                    (false, f.attempts)
+                }
+            };
+            if cancelled {
+                sup.in_flight.remove(&id);
+                sup.metrics.requests_cancelled.inc();
+                sup.pending_out
+                    .push(supervisor_output(id, FinishReason::Cancelled));
+            } else if attempts > sup.cfg.retry_budget {
+                sup.in_flight.remove(&id);
+                sup.metrics.requests_quarantined.inc();
+                sup.dead_letter.push(id);
+                sup.pending_out
+                    .push(supervisor_output(id, FinishReason::Failed));
+            } else {
+                sup.metrics.requests_retried.inc();
+                sup.retry.push((iter + backoff(&sup.cfg, attempts), id));
+            }
+        }
+    }
+
     pub fn has_work(&self) -> bool {
-        self.shards.iter().any(|s| s.has_work())
+        let shard_work = self.shards.iter().any(|s| s.has_work());
+        match &self.supervision {
+            None => shard_work,
+            Some(sup) => shard_work || !sup.retry.is_empty()
+                || !sup.pending_out.is_empty(),
+        }
     }
 
     /// Concurrently-active sequences across the whole fleet — the
@@ -264,7 +680,89 @@ impl<B: ModelBackend> FleetScheduler<B> {
     }
 
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
-        self.shards.iter_mut().flat_map(|s| s.take_finished()).collect()
+        let raw: Vec<RequestOutput> = self.shards.iter_mut()
+            .flat_map(|s| s.take_finished()).collect();
+        let Some(sup) = self.supervision.as_mut() else {
+            return raw;
+        };
+        // Supervisor-minted outputs (quarantine, cancel-while-parked)
+        // ride along with the shard drain.
+        let mut out = std::mem::take(&mut sup.pending_out);
+        let iter = sup.iter;
+        for o in raw {
+            enum Act { Drop, Deliver, Cancelled, Quarantine, Park(u32) }
+            let act = match sup.in_flight.get_mut(&o.id) {
+                // Already resolved at the supervisor (defensive: respawn
+                // discards the old shard's state wholesale, so this
+                // shouldn't trigger — but a stale duplicate must never
+                // reach the client twice).
+                None => Act::Drop,
+                Some(f) => {
+                    if o.finish != FinishReason::Failed {
+                        Act::Deliver
+                    } else if f.cancelled {
+                        Act::Cancelled
+                    } else {
+                        f.attempts += 1;
+                        if f.attempts > sup.cfg.retry_budget {
+                            Act::Quarantine
+                        } else {
+                            f.shard = None;
+                            Act::Park(f.attempts)
+                        }
+                    }
+                }
+            };
+            match act {
+                Act::Drop => {}
+                Act::Deliver => {
+                    sup.in_flight.remove(&o.id);
+                    out.push(o);
+                }
+                Act::Cancelled => {
+                    sup.in_flight.remove(&o.id);
+                    sup.metrics.requests_cancelled.inc();
+                    out.push(supervisor_output(o.id,
+                                               FinishReason::Cancelled));
+                }
+                Act::Quarantine => {
+                    sup.in_flight.remove(&o.id);
+                    sup.metrics.requests_quarantined.inc();
+                    sup.dead_letter.push(o.id);
+                    out.push(o);
+                }
+                Act::Park(attempts) => {
+                    sup.metrics.requests_retried.inc();
+                    sup.retry.push((iter + backoff(&sup.cfg, attempts),
+                                    o.id));
+                }
+            }
+        }
+        out
+    }
+
+    /// Quarantined request ids (empty when unsupervised or fault-free).
+    pub fn dead_letter(&self) -> &[RequestId] {
+        self.supervision.as_ref().map(|s| s.dead_letter.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Requests currently parked for a backed-off retry.
+    pub fn parked_requests(&self) -> Vec<RequestId> {
+        self.supervision.as_ref()
+            .map(|sup| {
+                sup.in_flight.iter()
+                    .filter(|(_, f)| f.shard.is_none())
+                    .map(|(&id, _)| id)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// The supervisor's own reliability counters (retries, respawns,
+    /// quarantines), if supervised.
+    pub fn supervision_metrics(&self) -> Option<&ServingMetrics> {
+        self.supervision.as_ref().map(|s| s.metrics.as_ref())
     }
 
     /// Pages referenced by live sequences, summed over shards.
@@ -296,7 +794,8 @@ impl<B: ModelBackend> FleetScheduler<B> {
     pub fn report(&self) -> String {
         let metrics: Vec<&ServingMetrics> =
             self.shards.iter().map(|s| s.metrics.as_ref()).collect();
-        fleet_report(self.router.policy(), &self.routed, &metrics)
+        fleet_report(self.router.policy(), &self.routed, &metrics,
+                     self.supervision_metrics())
     }
 }
 
@@ -329,7 +828,7 @@ where
         .into_iter()
         .enumerate()
         .map(|(i, f)| {
-            start_with_kv_options(f, queue_capacity, seed, kv, opts)
+            start_with_kv_options(f, queue_capacity, seed, kv, opts.clone())
                 .map(|h| h.with_id_namespace(i as u64 + 1, n as u64))
         })
         .collect::<Result<Vec<_>>>()?;
@@ -424,7 +923,7 @@ impl FleetHandle {
             self.shards.iter().map(|h| h.metrics.as_ref()).collect();
         let routed: Vec<u64> =
             self.routed.iter().map(|r| r.load(Ordering::Relaxed)).collect();
-        fleet_report(self.policy, &routed, &metrics)
+        fleet_report(self.policy, &routed, &metrics, None)
     }
 
     /// Drain and stop every shard.
@@ -434,6 +933,466 @@ impl FleetHandle {
         }
         Ok(())
     }
+}
+
+/// Control-plane messages from a [`SupervisedFleetHandle`] to its
+/// supervisor thread.
+enum SupMsg {
+    Submit(Request, Sender<RequestOutput>),
+    Cancel(RequestId),
+    Shutdown,
+}
+
+/// One request the threaded supervisor is accountable for.
+struct TFlight {
+    req: Request,
+    attempts: u32,
+    cancelled: bool,
+    /// Where the terminal output ultimately goes.
+    client: Sender<RequestOutput>,
+    /// The current shard attempt's output channel; `None` while parked.
+    rx: Option<Receiver<RequestOutput>>,
+    shard: Option<usize>,
+    /// Earliest wall-clock instant a parked flight may be resubmitted.
+    due: Instant,
+}
+
+/// The self-healing threaded fleet: N [`ServerHandle`]s owned by a
+/// supervisor thread that routes submissions, watches worker liveness
+/// (`JoinHandle::is_finished`) and step-clock heartbeats, respawns dead
+/// or wedged shards with a fresh page pool, retries their in-flight
+/// requests with capped exponential backoff, and quarantines requests
+/// that keep failing. `serve --fleet N --fault-plan ...` drives this;
+/// without a fault plan the plain [`FleetHandle`] is used, so the
+/// fault-free serve path is untouched.
+pub struct SupervisedFleetHandle {
+    tx: Sender<SupMsg>,
+    join: Option<JoinHandle<Result<()>>>,
+    next_id: AtomicU64,
+    routed: Arc<Vec<AtomicU64>>,
+    policy: RouterPolicy,
+    /// Supervisor-level reliability counters (detections, retries,
+    /// respawns, quarantines).
+    pub metrics: Arc<ServingMetrics>,
+    /// Per-shard metrics; these survive respawns (the replacement worker
+    /// inherits the same `Arc`), so completed-counts are cumulative per
+    /// shard slot, not per incarnation.
+    pub shard_metrics: Vec<Arc<ServingMetrics>>,
+    resolved: Arc<AtomicU64>,
+}
+
+/// Start a supervised fleet. Unlike [`start_fleet`], the factories are
+/// `Fn` (not `FnOnce`): the supervisor keeps them to rebuild crashed
+/// shards. The first incarnation of each shard gets its slice of
+/// `opts.fault_plan`; **respawns serve fault-free** — the plan scripts
+/// the original incarnation only, so a scripted crash can't loop.
+pub fn start_supervised_fleet<B, F>(factories: Vec<F>,
+                                    queue_capacity: usize, seed: u64,
+                                    kv: KvChoice, opts: SchedulerOptions,
+                                    policy: RouterPolicy,
+                                    cfg: SupervisionConfig)
+                                    -> Result<SupervisedFleetHandle>
+where
+    B: ModelBackend + 'static,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    anyhow::ensure!(!factories.is_empty(),
+                    "a fleet needs at least one shard");
+    let n = factories.len();
+    let plan = opts.fault_plan.clone();
+    let metrics = Arc::new(ServingMetrics::default());
+    metrics.mark_started();
+    let mut shards = Vec::with_capacity(n);
+    let mut shard_metrics = Vec::with_capacity(n);
+    let mut respawners: Vec<Box<dyn FnMut() -> Result<ServerHandle> + Send>> =
+        Vec::with_capacity(n);
+    for (i, f) in factories.into_iter().enumerate() {
+        let m = Arc::new(ServingMetrics::default());
+        m.mark_started();
+        let fc = Arc::new(f);
+        let first = SchedulerOptions { shard_index: i, ..opts.clone() };
+        let h = {
+            let fc = fc.clone();
+            start_with_kv_options_metrics(move || (fc)(), queue_capacity,
+                                          seed, kv, first, m.clone())?
+        };
+        let respawn_opts = SchedulerOptions { shard_index: i,
+                                              fault_plan: None,
+                                              ..opts.clone() };
+        let mr = m.clone();
+        respawners.push(Box::new(move || {
+            let fc = fc.clone();
+            start_with_kv_options_metrics(move || (fc)(), queue_capacity,
+                                          seed, kv, respawn_opts.clone(),
+                                          mr.clone())
+        }));
+        shards.push(h);
+        shard_metrics.push(m);
+    }
+    // Same routing-key page size derivation as `start_fleet`.
+    let pt = match kv {
+        KvChoice::Paged(kcfg) if kcfg.page_tokens != 0 => kcfg.page_tokens,
+        _ => KV_PAGE_TOKENS_DEFAULT,
+    };
+    let router = FleetRouter::new(policy, n, pt);
+    let routed: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let resolved = Arc::new(AtomicU64::new(0));
+    let (tx, rx) = mpsc::channel();
+    let loop_metrics = metrics.clone();
+    let loop_shard_metrics = shard_metrics.clone();
+    let loop_routed = routed.clone();
+    let loop_resolved = resolved.clone();
+    let join = std::thread::Builder::new()
+        .name("tenx-fleet-supervisor".into())
+        .spawn(move || {
+            supervisor_loop(shards, respawners, router, loop_routed,
+                            loop_metrics, loop_shard_metrics, plan, cfg,
+                            rx, loop_resolved)
+        })?;
+    Ok(SupervisedFleetHandle { tx, join: Some(join),
+                               next_id: AtomicU64::new(1), routed, policy,
+                               metrics, shard_metrics, resolved })
+}
+
+impl SupervisedFleetHandle {
+    pub fn shard_count(&self) -> usize {
+        self.shard_metrics.len()
+    }
+
+    /// Route a fully-specified request to the supervisor. Ids are
+    /// assigned here (stride 1 — the supervisor owns routing, so shard
+    /// namespacing is unnecessary and retried requests keep their id
+    /// across shards).
+    pub fn submit_request(&self, mut req: Request)
+                          -> Result<(RequestId, Receiver<RequestOutput>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let (otx, orx) = mpsc::channel();
+        self.tx
+            .send(SupMsg::Submit(req, otx))
+            .map_err(|_| anyhow::anyhow!("fleet supervisor stopped"))?;
+        Ok((id, orx))
+    }
+
+    /// [`ServerHandle::submit`]'s shape, supervised.
+    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize,
+                  sampling: SamplingParams, eos_token: Option<u32>)
+                  -> Result<Receiver<RequestOutput>> {
+        let mut req = Request::greedy(0, prompt, max_new_tokens);
+        req.sampling = sampling;
+        req.eos_token = eos_token;
+        self.submit_request(req).map(|(_, rx)| rx)
+    }
+
+    /// Fleet-wide cancel. The supervisor resolves requests parked for
+    /// retry to `Cancelled` directly — a cancel landing during
+    /// drain-and-respawn is acknowledged, never lost.
+    pub fn cancel(&self, id: RequestId) -> Result<()> {
+        self.tx
+            .send(SupMsg::Cancel(id))
+            .map_err(|_| anyhow::anyhow!("fleet supervisor stopped"))
+    }
+
+    /// The fleet's arrival-pacing clock (see
+    /// [`FleetHandle::scheduler_steps`]).
+    pub fn scheduler_steps(&self) -> u64 {
+        self.shard_metrics.iter()
+            .map(|m| m.scheduler_steps.get())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Requests the supervisor has resolved to a client-visible terminal
+    /// state (delivered output, quarantine, cancel, or rejection). The
+    /// per-shard completed/cancelled counters over-count under retries —
+    /// every incarnation of a request counts — so the supervisor keeps
+    /// its own resolution count for the drive loop.
+    pub fn resolved(&self) -> u64 {
+        self.resolved.load(Ordering::Relaxed)
+    }
+
+    /// The aggregated per-shard + fleet-total + reliability report.
+    pub fn report(&self) -> String {
+        let metrics: Vec<&ServingMetrics> =
+            self.shard_metrics.iter().map(|m| m.as_ref()).collect();
+        let routed: Vec<u64> =
+            self.routed.iter().map(|r| r.load(Ordering::Relaxed)).collect();
+        fleet_report(self.policy, &routed, &metrics, Some(&self.metrics))
+    }
+
+    /// Drain in-flight work and stop the supervisor and every shard.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(SupMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join()
+                .map_err(|_| anyhow::anyhow!("fleet supervisor panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SupervisedFleetHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(SupMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The supervisor thread: the threaded analogue of
+/// [`FleetScheduler::step_supervised`], with worker death
+/// (`is_alive`) and wall-clock wedge detection standing in for the
+/// lockstep simulation.
+#[allow(clippy::too_many_arguments)]
+fn supervisor_loop(mut shards: Vec<ServerHandle>,
+                   mut respawners: Vec<Box<dyn FnMut()
+                       -> Result<ServerHandle> + Send>>,
+                   router: FleetRouter, routed: Arc<Vec<AtomicU64>>,
+                   metrics: Arc<ServingMetrics>,
+                   shard_metrics: Vec<Arc<ServingMetrics>>,
+                   plan: Option<Arc<FaultPlan>>, cfg: SupervisionConfig,
+                   rx: Receiver<SupMsg>, resolved: Arc<AtomicU64>)
+                   -> Result<()> {
+    let n = shards.len();
+    let mut flights: BTreeMap<RequestId, TFlight> = BTreeMap::new();
+    let mut submitted_idx: u64 = 0;
+    let mut shutting_down = false;
+    let mut last_steps = vec![0u64; n];
+    let mut last_advance = vec![Instant::now(); n];
+    loop {
+        // 1) Control plane: block briefly when idle, then drain.
+        let mut msgs: Vec<SupMsg> = Vec::new();
+        if flights.is_empty() && !shutting_down {
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(m) => msgs.push(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    shutting_down = true;
+                }
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(m) => msgs.push(m),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+        let mut progressed = !msgs.is_empty();
+        for msg in msgs {
+            match msg {
+                SupMsg::Submit(mut req, client) => {
+                    if plan.as_ref()
+                        .is_some_and(|p| p.is_poison(submitted_idx))
+                    {
+                        req.poison = true;
+                        metrics.faults_injected.inc();
+                    }
+                    submitted_idx += 1;
+                    let s = router.route(&req.prompt);
+                    routed[s].fetch_add(1, Ordering::Relaxed);
+                    let id = req.id;
+                    match shards[s].submit_request_keep_id(req.clone()) {
+                        Ok(orx) => {
+                            flights.insert(id, TFlight {
+                                req, attempts: 0, cancelled: false,
+                                client, rx: Some(orx), shard: Some(s),
+                                due: Instant::now() });
+                        }
+                        Err(_) => {
+                            // The shard worker is dead (the death sweep
+                            // below respawns it); park for retry.
+                            flights.insert(id, TFlight {
+                                req, attempts: 0, cancelled: false,
+                                client, rx: None, shard: None,
+                                due: Instant::now() });
+                        }
+                    }
+                }
+                SupMsg::Cancel(id) => {
+                    let Some(f) = flights.get_mut(&id) else { continue };
+                    match f.shard {
+                        Some(s) => {
+                            f.cancelled = true;
+                            let _ = shards[s].cancel(id);
+                        }
+                        None => {
+                            // Parked for retry: resolve right here — the
+                            // drain/respawn cancel-loss fix.
+                            let f = flights.remove(&id)
+                                .expect("flight just looked up");
+                            metrics.requests_cancelled.inc();
+                            let _ = f.client.send(supervisor_output(
+                                id, FinishReason::Cancelled));
+                            resolved.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                SupMsg::Shutdown => shutting_down = true,
+            }
+        }
+        if shutting_down && flights.is_empty() {
+            break;
+        }
+
+        // 2) Poll every assigned flight's output channel.
+        let ids: Vec<RequestId> = flights.keys().copied().collect();
+        let mut needs_respawn = vec![false; n];
+        for id in ids {
+            let Some(f) = flights.get_mut(&id) else { continue };
+            let Some(orx) = f.rx.as_ref() else { continue };
+            match orx.try_recv() {
+                Err(mpsc::TryRecvError::Empty) => {}
+                Ok(out) => {
+                    progressed = true;
+                    if out.finish != FinishReason::Failed {
+                        let f = flights.remove(&id).expect("looked up");
+                        let _ = f.client.send(out);
+                        resolved.fetch_add(1, Ordering::Relaxed);
+                    } else if f.cancelled {
+                        let f = flights.remove(&id).expect("looked up");
+                        metrics.requests_cancelled.inc();
+                        let _ = f.client.send(supervisor_output(
+                            id, FinishReason::Cancelled));
+                        resolved.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        f.attempts += 1;
+                        if f.attempts > cfg.retry_budget {
+                            let f = flights.remove(&id).expect("looked up");
+                            metrics.requests_quarantined.inc();
+                            let _ = f.client.send(out);
+                            resolved.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            metrics.requests_retried.inc();
+                            f.rx = None;
+                            f.shard = None;
+                            f.due = Instant::now() + Duration::from_millis(
+                                backoff(&cfg, f.attempts));
+                        }
+                    }
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    progressed = true;
+                    let s = f.shard.expect("rx implies an assigned shard");
+                    if shards[s].is_alive() {
+                        // The worker dropped the channel without an
+                        // output: a queue-capacity rejection. Dropping
+                        // the client sender propagates it.
+                        flights.remove(&id);
+                        resolved.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        // Worker died mid-request; the respawn pass
+                        // below re-routes this flight.
+                        needs_respawn[s] = true;
+                    }
+                }
+            }
+        }
+
+        // 3) Death and wedge sweeps.
+        let now = Instant::now();
+        for s in 0..n {
+            if !shards[s].is_alive() {
+                needs_respawn[s] = true;
+                continue;
+            }
+            let steps = shard_metrics[s].scheduler_steps.get();
+            let busy = flights.values().any(|f| f.shard == Some(s));
+            if steps != last_steps[s] || !busy {
+                last_steps[s] = steps;
+                last_advance[s] = now;
+            } else if now.duration_since(last_advance[s])
+                >= Duration::from_millis(cfg.wedge_timeout_ms)
+            {
+                // Step clock frozen with work outstanding: wedged.
+                needs_respawn[s] = true;
+            }
+        }
+
+        // 4) Respawn dead/wedged shards and re-route their flights.
+        for s in 0..n {
+            if !needs_respawn[s] {
+                continue;
+            }
+            progressed = true;
+            metrics.faults_detected.inc();
+            metrics.shard_respawns.inc();
+            let fresh = (respawners[s])()?;
+            let old = std::mem::replace(&mut shards[s], fresh);
+            // Never join a wedged worker — detach it. Its sends go to
+            // receivers this loop has already dropped.
+            old.abandon();
+            last_steps[s] = 0;
+            last_advance[s] = Instant::now();
+            let ids: Vec<RequestId> = flights.iter()
+                .filter(|(_, f)| f.shard == Some(s))
+                .map(|(&id, _)| id)
+                .collect();
+            for id in ids {
+                let f = flights.get_mut(&id).expect("just collected");
+                if f.cancelled {
+                    let f = flights.remove(&id).expect("looked up");
+                    metrics.requests_cancelled.inc();
+                    let _ = f.client.send(supervisor_output(
+                        id, FinishReason::Cancelled));
+                    resolved.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                f.attempts += 1;
+                if f.attempts > cfg.retry_budget {
+                    let f = flights.remove(&id).expect("looked up");
+                    metrics.requests_quarantined.inc();
+                    let _ = f.client.send(supervisor_output(
+                        id, FinishReason::Failed));
+                    resolved.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    metrics.requests_retried.inc();
+                    f.rx = None;
+                    f.shard = None;
+                    f.due = Instant::now() + Duration::from_millis(
+                        backoff(&cfg, f.attempts));
+                }
+            }
+        }
+
+        // 5) Resubmit parked flights whose backoff has elapsed.
+        let now = Instant::now();
+        let parked: Vec<RequestId> = flights.iter()
+            .filter(|(_, f)| f.rx.is_none() && f.due <= now)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in parked {
+            let req = flights.get(&id).expect("just collected").req.clone();
+            let s = router.route(&req.prompt);
+            routed[s].fetch_add(1, Ordering::Relaxed);
+            match shards[s].submit_request_keep_id(req) {
+                Ok(orx) => {
+                    let f = flights.get_mut(&id).expect("just collected");
+                    f.rx = Some(orx);
+                    f.shard = Some(s);
+                    progressed = true;
+                }
+                Err(_) => {
+                    // Shard died between the sweep and the resubmit.
+                    let f = flights.get_mut(&id).expect("just collected");
+                    f.due = now + Duration::from_millis(cfg.backoff_base);
+                }
+            }
+        }
+
+        if !progressed && !flights.is_empty() {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    for h in shards {
+        h.shutdown()?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -526,6 +1485,200 @@ mod tests {
         f.check_invariants().unwrap();
         assert_eq!(f.pages_in_use(), 0, "all shard pools drain clean");
         assert_eq!(f.pool_pages(), 32, "pool totals sum over shards");
+    }
+
+    fn supervised(n: usize, plan: FaultPlan) -> FleetScheduler<MockBackend> {
+        let rebuild = Box::new(move |_i: usize| {
+            Scheduler::with_kv(
+                MockBackend::new(2, 8, 32, 64), 16,
+                Arc::new(ServingMetrics::default()), 1,
+                KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                                pool_pages: 16 }))
+        });
+        FleetScheduler::with_supervision(rebuild, n, RouterPolicy::Prefix,
+                                         Arc::new(plan),
+                                         SupervisionConfig::default())
+    }
+
+    fn drive(f: &mut FleetScheduler<MockBackend>) -> Vec<RequestOutput> {
+        let mut out = Vec::new();
+        let mut steps = 0;
+        while f.has_work() {
+            f.step().unwrap();
+            out.extend(f.take_finished());
+            steps += 1;
+            assert!(steps < 500, "fleet did not drain");
+        }
+        out.extend(f.take_finished());
+        out
+    }
+
+    fn six_requests() -> Vec<Request> {
+        (1..=6u64).map(|id| {
+            let mut prompt = vec![3 + id as u32; 5];
+            prompt[0] = id as u32 * 7 % 50 + 3;
+            Request::greedy(id, prompt, 4)
+        }).collect()
+    }
+
+    #[test]
+    fn crashed_shards_respawn_and_retried_requests_stay_token_exact() {
+        let plan = FaultPlan {
+            seed: 1,
+            events: vec![
+                FaultEvent { step: 3, shard: 0,
+                             kind: FaultKind::ShardCrash },
+                FaultEvent { step: 3, shard: 1,
+                             kind: FaultKind::ShardCrash },
+            ],
+            poison: vec![],
+        };
+        let mut golden = fleet(2, RouterPolicy::Prefix);
+        for r in six_requests() {
+            assert!(golden.submit(r));
+        }
+        let mut want: Vec<RequestOutput> = Vec::new();
+        while golden.has_work() {
+            golden.step().unwrap();
+            want.extend(golden.take_finished());
+        }
+        want.extend(golden.take_finished());
+
+        let mut f = supervised(2, plan);
+        for r in six_requests() {
+            assert!(f.submit(r));
+        }
+        let got = drive(&mut f);
+        assert_eq!(got.len(), 6, "every request resolves exactly once");
+        for g in &got {
+            let w = want.iter().find(|w| w.id == g.id).unwrap();
+            assert_eq!(g.finish, w.finish, "req {} finish", g.id);
+            assert_eq!(g.tokens, w.tokens,
+                       "req {} must be bit-exact after crash-retry", g.id);
+        }
+        let m = f.supervision_metrics().unwrap();
+        assert_eq!(m.shard_respawns.get(), 2, "both scripted crashes");
+        assert!(m.requests_retried.get() >= 6,
+                "everything in flight at the crash was retried");
+        assert!(f.dead_letter().is_empty());
+        f.check_invariants().unwrap();
+        assert_eq!(f.pages_in_use(), 0, "respawned pools drain clean");
+    }
+
+    #[test]
+    fn stalled_shard_is_detected_by_heartbeat_and_respawned() {
+        let plan = FaultPlan {
+            seed: 2,
+            events: vec![FaultEvent {
+                step: 2, shard: 0,
+                kind: FaultKind::ShardStall { steps: 12 } }],
+            poison: vec![],
+        };
+        let mut f = supervised(1, plan);
+        assert!(f.submit(Request::greedy(1, vec![5, 6, 7], 6)));
+        let got = drive(&mut f);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].finish, FinishReason::Length,
+                   "the wedged request completes after the respawn");
+        assert_eq!(got[0].tokens.len(), 6);
+        let m = f.supervision_metrics().unwrap();
+        assert!(m.faults_detected.get() >= 1,
+                "the frozen step clock was noticed");
+        assert_eq!(m.shard_respawns.get(), 1);
+    }
+
+    #[test]
+    fn poison_requests_are_quarantined_after_the_retry_budget() {
+        let plan = FaultPlan { seed: 3, events: vec![], poison: vec![0] };
+        let mut f = supervised(2, plan);
+        for r in six_requests() {
+            assert!(f.submit(r));
+        }
+        let got = drive(&mut f);
+        assert_eq!(got.len(), 6);
+        let failed: Vec<_> = got.iter()
+            .filter(|o| o.finish == FinishReason::Failed).collect();
+        assert_eq!(failed.len(), 1, "only the poisoned submission fails");
+        assert_eq!(f.dead_letter(), &[failed[0].id]);
+        let m = f.supervision_metrics().unwrap();
+        assert_eq!(m.requests_quarantined.get(), 1);
+        assert_eq!(m.requests_retried.get(), 2,
+                   "budget 2 = two retries before quarantine");
+        let natural = got.iter()
+            .filter(|o| o.finish == FinishReason::Length
+                || o.finish == FinishReason::Eos).count();
+        assert_eq!(natural, 5, "poison never disturbs its neighbours");
+        f.check_invariants().unwrap();
+        assert_eq!(f.pages_in_use(), 0);
+        let r = f.report();
+        assert!(r.contains("fleet: reliability:"), "report: {r}");
+        assert!(r.contains("quarantined 1"), "report: {r}");
+    }
+
+    #[test]
+    fn cancel_during_respawn_backoff_resolves_to_cancelled() {
+        // The regression this PR fixes: a cancel landing while the
+        // request is parked (its shard crashed, backoff pending) used to
+        // have no owner and was silently dropped.
+        let plan = FaultPlan {
+            seed: 4,
+            events: vec![FaultEvent { step: 2, shard: 0,
+                                      kind: FaultKind::ShardCrash }],
+            poison: vec![],
+        };
+        let mut f = supervised(1, plan);
+        assert!(f.submit(Request::greedy(1, vec![5, 6, 7], 8)));
+        f.step().unwrap(); // admitted, decoding
+        f.step().unwrap(); // scripted crash: parked for retry
+        assert_eq!(f.parked_requests(), vec![1]);
+        assert!(f.cancel(1), "parked requests are cancellable");
+        let got = drive(&mut f);
+        assert_eq!(got.len(), 1, "resolved exactly once");
+        assert_eq!(got[0].finish, FinishReason::Cancelled);
+        assert!(f.dead_letter().is_empty());
+        assert_eq!(f.supervision_metrics().unwrap()
+                       .requests_cancelled.get(), 1);
+        f.check_invariants().unwrap();
+        assert_eq!(f.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn threaded_supervised_fleet_survives_a_worker_crash() {
+        let plan = FaultPlan::from_toml_str(
+            "[plan]\nseed = 9\n\n[event-0]\nstep = 2\nkind = \"crash\"\n\
+             shard = 0\n").unwrap();
+        let opts = SchedulerOptions {
+            fault_plan: Some(Arc::new(plan)),
+            ..SchedulerOptions::default()
+        };
+        let factories: Vec<_> = (0..1)
+            .map(|_| || Ok(MockBackend::new(2, 8, 32, 64)))
+            .collect();
+        let fleet = start_supervised_fleet(
+            factories, 16, 1,
+            KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                            pool_pages: 16 }),
+            opts, RouterPolicy::Prefix, SupervisionConfig::default())
+            .unwrap();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let prompt = vec![5 + i as u32, 6, 7];
+                fleet.submit_request(Request::greedy(0, prompt, 4))
+                    .unwrap().1
+            })
+            .collect();
+        for rx in rxs {
+            let out = rx.recv_timeout(Duration::from_secs(10))
+                .expect("request resolves despite the crash");
+            assert_eq!(out.finish, FinishReason::Length);
+            assert_eq!(out.tokens.len(), 4);
+        }
+        assert!(fleet.metrics.shard_respawns.get() >= 1,
+                "the scripted crash forced a respawn");
+        assert_eq!(fleet.resolved(), 4);
+        let r = fleet.report();
+        assert!(r.contains("fleet: reliability:"), "report: {r}");
+        fleet.shutdown().unwrap();
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 pub mod backend;
 pub mod draft;
+pub mod errors;
 pub mod fleet;
 pub mod kvcache;
 pub mod native;
@@ -14,8 +15,10 @@ pub mod server;
 
 pub use backend::{BackendDims, EngineBackend, MockBackend, ModelBackend};
 pub use draft::{DraftSource, PromptLookupDraft};
-pub use fleet::{fleet_report, start_fleet, FleetHandle, FleetRouter,
-                FleetScheduler, RouterPolicy};
+pub use errors::ServeError;
+pub use fleet::{fleet_report, start_fleet, start_supervised_fleet,
+                FleetHandle, FleetRouter, FleetScheduler, RouterPolicy,
+                SupervisedFleetHandle, SupervisionConfig};
 pub use kvcache::{chain_hash, prefix_key, KvCacheConfig, KvCacheManager,
                   KvChoice, KvStepView, PageTables, SlotFork,
                   KV_PAGE_TOKENS_DEFAULT, PREFIX_SEED};
@@ -25,5 +28,6 @@ pub use request::{FinishReason, Priority, Request, RequestId,
 pub use scheduler::{replay_scenario, replay_scenario_outputs,
                     AdmissionPolicy, PreemptMode, Scheduler};
 pub use server::{start, start_kv, start_with, start_with_kv,
-                 start_with_kv_options, start_with_kv_speculative,
-                 SchedulerOptions, ServerHandle};
+                 start_with_kv_options, start_with_kv_options_metrics,
+                 start_with_kv_speculative, SchedulerOptions,
+                 ServerHandle};

@@ -54,6 +54,18 @@ pub struct Request {
     /// `(e2e - ttft) / (tokens - 1)` at finish). Same consumers as
     /// `ttft_target`.
     pub tpot_target: Option<Duration>,
+    /// Hard wall-clock deadline measured from submission. Unlike the SLO
+    /// *targets* above (which only steer victim election and attainment
+    /// counters), an expired deadline kills the request wherever it is —
+    /// queued, preempted, or mid-decode — finishing it as
+    /// [`FinishReason::DeadlineExceeded`] and releasing its pages.
+    pub deadline: Option<Duration>,
+    /// Fault-injection marker: a poisoned request burns its prefill and
+    /// then always fails ([`FinishReason::Failed`]). The fleet supervisor
+    /// retries it until the retry budget runs out, then quarantines it to
+    /// the dead-letter list — the test vector proving a deterministic
+    /// failure cannot crash-loop a shard.
+    pub poison: bool,
 }
 
 impl Request {
@@ -71,6 +83,8 @@ impl Request {
             priority: Priority::Normal,
             ttft_target: None,
             tpot_target: None,
+            deadline: None,
+            poison: false,
         }
     }
 }
@@ -89,6 +103,16 @@ pub enum FinishReason {
     /// immediately; `tokens` holds whatever was generated before the
     /// cancel landed.
     Cancelled,
+    /// The request itself failed (poison request, or a backend compute
+    /// error while it was in the batch). Its slot and pages were released
+    /// and the scheduler kept serving everyone else; under a supervised
+    /// fleet a `Failed` finish is retried up to the retry budget before
+    /// being surfaced (docs/SERVING.md, "Reliability").
+    Failed,
+    /// The request's hard wall-clock deadline (`Request::deadline`)
+    /// expired before it finished; killed wherever it was and its pages
+    /// released. Never retried — the deadline is absolute.
+    DeadlineExceeded,
 }
 
 #[derive(Debug, Clone)]
@@ -146,6 +170,22 @@ mod tests {
     }
 
     #[test]
+    fn failure_states_are_distinct_from_natural_finishes() {
+        // The chaos tests' exactness contract compares only natural
+        // finishes against the golden run; Failed / DeadlineExceeded /
+        // Cancelled are all excluded and must stay distinguishable.
+        let natural = [FinishReason::Length, FinishReason::Eos,
+                       FinishReason::CacheFull];
+        for bad in [FinishReason::Failed, FinishReason::DeadlineExceeded,
+                    FinishReason::Cancelled] {
+            for good in natural {
+                assert_ne!(bad, good);
+            }
+        }
+        assert_ne!(FinishReason::Failed, FinishReason::DeadlineExceeded);
+    }
+
+    #[test]
     fn priority_classes_are_ordered() {
         // Victim selection leans on the derived Ord: Batch is preempted
         // before Normal, Normal before Interactive.
@@ -162,6 +202,7 @@ mod tests {
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.eos_token.is_none() && r.speculative_k.is_none());
         assert!(r.ttft_target.is_none() && r.tpot_target.is_none());
+        assert!(r.deadline.is_none() && !r.poison);
     }
 
     #[test]

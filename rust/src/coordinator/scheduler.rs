@@ -34,9 +34,11 @@ use anyhow::Result;
 
 use super::backend::ModelBackend;
 use super::draft::{DraftSource, PromptLookupDraft};
+use super::errors::ServeError;
 use super::kvcache::{KvCacheManager, KvChoice, KvStepView, SlotFork};
 use super::request::{FinishReason, Priority, Request, RequestId,
                      RequestOutput, RequestTiming};
+use crate::faults::{FaultInjector, StepFault};
 use crate::llm::{argmax, sample, SamplingParams, PAD};
 use crate::metrics::ServingMetrics;
 use crate::perfmodel::{PreemptAction, PreemptCostModel};
@@ -152,6 +154,24 @@ pub struct Scheduler<B: ModelBackend> {
     verify_tokens: Vec<i32>,
     verify_pos: Vec<i32>,
     step_advanced: Vec<bool>,
+    /// Compiled fault script for this scheduler (`--fault-plan`); `None`
+    /// (the default) keeps every hot-path check a single branch — the
+    /// zero-cost-when-off contract the fleet benches pin.
+    faults: Option<FaultInjector>,
+    /// Which fleet shard this scheduler is (0 standalone) — only used to
+    /// label `ServeError::InjectedCrash` for the supervisor.
+    shard_index: usize,
+    /// Default hard wall-deadline applied to submissions that carry none
+    /// (`--deadline-ms`).
+    deadline_default: Option<Duration>,
+    /// Fast-path gate for deadline enforcement: set the first time any
+    /// admitted request carries a deadline, never cleared. While false,
+    /// `step()` skips the per-sequence deadline sweep entirely.
+    has_deadlines: bool,
+    /// Load-shedding admission threshold: submissions arriving with this
+    /// many requests already queued are shed (`Overloaded`-style rejection,
+    /// counted separately from bounded-queue rejections). 0 disables.
+    shed_queue_depth: usize,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
@@ -211,6 +231,11 @@ impl<B: ModelBackend> Scheduler<B> {
             verify_tokens: Vec::new(),
             verify_pos: Vec::new(),
             step_advanced: Vec::new(),
+            faults: None,
+            shard_index: 0,
+            deadline_default: None,
+            has_deadlines: false,
+            shed_queue_depth: 0,
         }
     }
 
@@ -263,6 +288,32 @@ impl<B: ModelBackend> Scheduler<B> {
         self.swap_arena_pages
     }
 
+    /// Install (or clear) a compiled fault script (`--fault-plan`). The
+    /// injector is consulted at the top of every `step()` and at `submit()`
+    /// for overflow windows; `None` restores the zero-cost default.
+    pub fn set_fault_injector(&mut self, inj: Option<FaultInjector>) {
+        self.faults = inj;
+    }
+
+    /// Label this scheduler with its fleet shard index (0 standalone) so a
+    /// supervisor can attribute `ServeError::InjectedCrash`.
+    pub fn set_shard_index(&mut self, shard: usize) {
+        self.shard_index = shard;
+    }
+
+    /// Default hard wall-deadline for submissions that carry none
+    /// (`--deadline-ms`); `None` disables the default (per-request
+    /// deadlines still apply).
+    pub fn set_deadline_default(&mut self, deadline: Option<Duration>) {
+        self.deadline_default = deadline;
+    }
+
+    /// Load-shedding admission threshold (0 disables): submissions
+    /// arriving at or above this queue depth are shed as overloaded.
+    pub fn set_shed_queue_depth(&mut self, depth: usize) {
+        self.shed_queue_depth = depth;
+    }
+
     /// The paged KV manager, when serving paged (tests / invariant audits).
     pub fn kv_manager(&self) -> Option<&KvCacheManager> {
         self.kv.as_ref()
@@ -274,18 +325,56 @@ impl<B: ModelBackend> Scheduler<B> {
         kv_step_view(&self.kv)
     }
 
-    /// Enqueue a request; returns false (rejected) when the queue is full
-    /// or the prompt is empty (there is no last prompt position to sample
-    /// a first token from — admitting one would panic the serve loop).
-    pub fn submit(&mut self, req: Request) -> bool {
+    /// Enqueue a request; returns false (rejected) when the queue is full,
+    /// the prompt is empty (there is no last prompt position to sample a
+    /// first token from — admitting one would panic the serve loop), or
+    /// admission sheds it as overloaded (depth threshold / injected
+    /// overflow window — counted in `requests_shed`, not
+    /// `queue_rejections`).
+    pub fn submit(&mut self, mut req: Request) -> bool {
         if req.prompt.is_empty() || self.pending.len() >= self.queue_capacity
         {
             self.metrics.queue_rejections.inc();
             return false;
         }
+        // Load shedding is a *policy* rejection on a queue that still has
+        // room: past the configured depth (or inside a scripted overflow
+        // window) the cheapest way to protect the TTFT of everything
+        // already queued is to turn new arrivals away at the door.
+        let shed = (self.shed_queue_depth > 0
+                    && self.pending.len() >= self.shed_queue_depth)
+            || self.faults.as_mut().is_some_and(|f| {
+                let hit = f.overflow_active();
+                if hit {
+                    self.metrics.faults_injected.inc();
+                }
+                hit
+            });
+        if shed {
+            self.metrics.requests_shed.inc();
+            self.update_shed_rate();
+            return false;
+        }
+        if req.deadline.is_none() {
+            req.deadline = self.deadline_default;
+        }
+        if req.deadline.is_some() {
+            self.has_deadlines = true;
+        }
         self.metrics.requests_submitted.inc();
+        if self.metrics.requests_shed.get() > 0 {
+            self.update_shed_rate();
+        }
         self.pending.push_back((req, RequestTiming::new()));
         true
+    }
+
+    fn update_shed_rate(&self) {
+        let shed = self.metrics.requests_shed.get();
+        let seen = shed + self.metrics.requests_submitted.get();
+        if seen > 0 {
+            self.metrics.shed_rate_permille.set(1000 * shed / seen);
+        }
     }
 
     pub fn has_work(&self) -> bool {
@@ -308,14 +397,110 @@ impl<B: ModelBackend> Scheduler<B> {
 
     /// One scheduling iteration: admission (batched prefill) if possible,
     /// then one decode step for all active sequences.
-    pub fn step(&mut self) -> Result<()> {
+    ///
+    /// An `Err` is **fatal** — this scheduler must be considered dead (see
+    /// `coordinator::errors`). Per-request failures never surface here:
+    /// they finish the affected sequences as `FinishReason::Failed` and
+    /// the step returns `Ok`.
+    pub fn step(&mut self) -> Result<(), ServeError> {
+        if let Some(f) = self.faults.as_mut() {
+            match f.on_step() {
+                StepFault::Crash => {
+                    self.metrics.faults_injected.inc();
+                    return Err(ServeError::InjectedCrash {
+                        shard: self.shard_index,
+                        step: self.metrics.scheduler_steps.get(),
+                    });
+                }
+                StepFault::Stalled => {
+                    // A wedged worker: the step clock freezes — that
+                    // freeze, with work outstanding, is exactly what
+                    // supervision heartbeats detect — and nothing
+                    // advances this call.
+                    return Ok(());
+                }
+                StepFault::ComputeError => {
+                    // The backend is down for one step: absorbed. The
+                    // clock still advances (time passed; nothing decoded),
+                    // so downstream pacing and heartbeats see a live but
+                    // unproductive scheduler.
+                    self.metrics.faults_injected.inc();
+                    self.metrics.backend_errors.inc();
+                    self.metrics.scheduler_steps.inc();
+                    return Ok(());
+                }
+                StepFault::None => {}
+            }
+        }
         self.metrics.scheduler_steps.inc();
+        if self.has_deadlines {
+            self.enforce_deadlines();
+        }
         self.admit()?;
         self.decode_step()?;
         Ok(())
     }
 
-    fn admit(&mut self) -> Result<()> {
+    /// Kill every request whose hard wall-deadline has expired, wherever
+    /// it is — queued, parked for resume, or mid-decode. Deadlines are
+    /// absolute (never retried), so this runs before admission: an
+    /// expired queued request must not burn a prefill first.
+    fn enforce_deadlines(&mut self) {
+        let now = Instant::now();
+        let expired = |deadline: Option<Duration>, submitted: Instant| {
+            deadline.is_some_and(|d| now.duration_since(submitted) >= d)
+        };
+        let mut i = 0;
+        while i < self.pending.len() {
+            if expired(self.pending[i].0.deadline,
+                       self.pending[i].1.submitted) {
+                // remove(i) is Some: i < len by the loop condition.
+                let (req, timing) = self.pending.remove(i).unwrap();
+                self.metrics.deadline_kills.inc();
+                self.finish(drained_output(req.id,
+                                           FinishReason::DeadlineExceeded,
+                                           timing));
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.preempted.len() {
+            let p = &self.preempted[i];
+            if expired(p.seq.req.deadline, p.seq.timing.submitted) {
+                // remove(i) is Some: i < len by the loop condition.
+                let mut p = self.preempted.remove(i).unwrap();
+                // Same arena bookkeeping as a cancelled swap victim.
+                if matches!(p.resume, ResumeKind::Swap(_)) {
+                    self.arena_release(p.seq.pos);
+                }
+                self.metrics.deadline_kills.inc();
+                self.finish(slot_output(&mut p.seq,
+                                        FinishReason::DeadlineExceeded));
+            } else {
+                i += 1;
+            }
+        }
+        let mut any_slot = false;
+        for slot in 0..self.slots.len() {
+            let kill = self.slots[slot].as_ref().is_some_and(
+                |s| expired(s.req.deadline, s.timing.submitted));
+            if kill {
+                // take() is Some: is_some_and held just above.
+                let mut seq = self.slots[slot].take().unwrap();
+                self.release_kv(slot);
+                self.metrics.deadline_kills.inc();
+                self.finish(slot_output(&mut seq,
+                                        FinishReason::DeadlineExceeded));
+                any_slot = true;
+            }
+        }
+        if any_slot {
+            self.sync_kv_gauges();
+        }
+    }
+
+    fn admit(&mut self) -> Result<(), ServeError> {
         if self.pending.is_empty() && self.preempted.is_empty() {
             return Ok(());
         }
@@ -361,15 +546,35 @@ impl<B: ModelBackend> Scheduler<B> {
                     let mut seq = p.seq;
                     // Infallible after try_reserve: the victim's context
                     // fit its own reservation when it was preempted, so
-                    // pages_for(pos) never exceeds the pool headroom.
+                    // pages_for(pos) never exceeds the pool headroom. An
+                    // Err here is a page-accounting invariant violation —
+                    // fatal, not load.
                     let evictions = self
                         .kv
                         .as_mut()
                         .expect("paged")
-                        .allocate_raw(slot, seq.pos)?;
+                        .allocate_raw(slot, seq.pos)
+                        .map_err(|e| ServeError::KvCache {
+                            op: "swap-resume allocate_raw",
+                            detail: format!("{e:#}"),
+                        })?;
                     self.metrics.kv_evictions.add(evictions);
-                    self.backend.swap_in_slot(slot, &payload,
-                                              kv_step_view(&self.kv))?;
+                    if self.backend.swap_in_slot(slot, &payload,
+                                                 kv_step_view(&self.kv))
+                        .is_err()
+                    {
+                        // The payload would not restore: the victim's
+                        // committed KV is unrecoverable, but only *its*.
+                        // Fail the one request and keep serving; its pages
+                        // and arena budget both return.
+                        self.metrics.backend_errors.inc();
+                        self.arena_release(seq.pos);
+                        self.release_kv(slot);
+                        self.fail_seq(seq);
+                        // The slot stays free for the next victim: skip
+                        // the next_free advance at the loop bottom.
+                        continue;
+                    }
                     self.arena_release(seq.pos);
                     seq.replay_rem = 0;
                     self.metrics.preempt_resumes.inc();
@@ -490,30 +695,78 @@ impl<B: ModelBackend> Scheduler<B> {
         // prompt pages (and any shared head) come back as hits, not fresh
         // allocations.
         if let Some(kv) = &mut self.kv {
+            // Admission already reserved these pages: an Err is a
+            // page-accounting invariant violation, fatal to the scheduler.
             for (slot, req, _) in &admitted {
                 let plen = req.prompt.len().min(s);
-                let st = kv.allocate_prompt(
-                    *slot, &self.step_tokens[slot * s..][..plen])?;
+                let st = kv
+                    .allocate_prompt(*slot,
+                                     &self.step_tokens[slot * s..][..plen])
+                    .map_err(|e| ServeError::KvCache {
+                        op: "admission allocate_prompt",
+                        detail: format!("{e:#}"),
+                    })?;
                 self.metrics.kv_shared_prefix_hits.add(st.shared_hits);
                 self.metrics.kv_evictions.add(st.evictions);
             }
             for (slot, seq) in &resumed {
-                let st = kv.allocate_prompt(
-                    *slot,
-                    &self.step_tokens[slot * s..][..seq.prompt_len])?;
+                let st = kv
+                    .allocate_prompt(
+                        *slot,
+                        &self.step_tokens[slot * s..][..seq.prompt_len])
+                    .map_err(|e| ServeError::KvCache {
+                        op: "resume allocate_prompt",
+                        detail: format!("{e:#}"),
+                    })?;
                 self.metrics.kv_shared_prefix_hits.add(st.shared_hits);
                 self.metrics.kv_evictions.add(st.evictions);
             }
         }
         let t0 = Instant::now();
-        self.backend.prefill_into(&self.step_tokens, kv_step_view(&self.kv),
-                                  &mut self.logits)?;
-        let slots: Vec<usize> = admitted
-            .iter()
-            .map(|(s, _, _)| *s)
-            .chain(resumed.iter().map(|(s, _)| *s))
-            .collect();
-        self.backend.commit_slots_kv(&slots, kv_step_view(&self.kv))?;
+        let prefilled = self
+            .backend
+            .prefill_into(&self.step_tokens, kv_step_view(&self.kv),
+                          &mut self.logits)
+            .and_then(|()| {
+                let slots: Vec<usize> = admitted
+                    .iter()
+                    .map(|(s, _, _)| *s)
+                    .chain(resumed.iter().map(|(s, _)| *s))
+                    .collect();
+                self.backend.commit_slots_kv(&slots, kv_step_view(&self.kv))
+            });
+        if prefilled.is_err() {
+            // A backend compute fault at prefill: fail this admission wave
+            // only. Sequences already decoding are untouched, the failed
+            // wave's pages (and a recompute victim's) all release, and the
+            // scheduler keeps serving — graceful degradation, not a dead
+            // worker.
+            self.metrics.backend_errors.inc();
+            for (slot, req, timing) in admitted {
+                self.release_kv(slot);
+                self.metrics.requests_failed.inc();
+                self.finish(drained_output(req.id, FinishReason::Failed,
+                                           timing));
+            }
+            for (slot, seq) in resumed {
+                self.release_kv(slot);
+                self.fail_seq(seq);
+            }
+            self.sync_kv_gauges();
+            return Ok(());
+        }
+        // Backend contract: prefill logits cover the whole [B*S*V] grid —
+        // the first-token sampling below slices into it, and a short
+        // buffer would otherwise panic the serve loop.
+        if self.logits.len() < dims.batch * s * dims.vocab {
+            return Err(ServeError::Backend {
+                phase: "prefill",
+                detail: format!("logits buffer {} < batch {} * seq {} * \
+                                 vocab {}",
+                                self.logits.len(), dims.batch, s,
+                                dims.vocab),
+            });
+        }
         self.metrics.prefill_latency.observe(t0.elapsed());
         self.metrics.prefill_batches.inc();
 
@@ -536,6 +789,17 @@ impl<B: ModelBackend> Scheduler<B> {
                 timing,
                 req,
             };
+            // A poison request (fault-plan test vector) burns its prefill
+            // — realistic: the failure manifests in compute, not at the
+            // queue — and then always fails. Its pages release like any
+            // other failure; the supervisor's retry/quarantine machinery
+            // takes it from here.
+            if seq.req.poison {
+                self.release_kv(slot);
+                seq.generated.clear();
+                self.fail_seq(seq);
+                continue;
+            }
             // A request can finish on its very first token — its pages
             // release immediately (published prompt pages stay cached).
             if let Some(reason) = finish_reason(&seq, dims.max_seq) {
@@ -557,7 +821,7 @@ impl<B: ModelBackend> Scheduler<B> {
         Ok(())
     }
 
-    fn decode_step(&mut self) -> Result<()> {
+    fn decode_step(&mut self) -> Result<(), ServeError> {
         let dims = self.backend.dims();
         if self.active_count() == 0 {
             return Ok(());
@@ -572,8 +836,24 @@ impl<B: ModelBackend> Scheduler<B> {
         if self.backend.supports_verify() {
             for i in 0..dims.batch {
                 let k = self.slot_speculation_k(i, dims.max_seq);
-                if k > 0 && self.speculative_step(i, k)? {
-                    self.step_advanced[i] = true;
+                if k == 0 {
+                    continue;
+                }
+                match self.speculative_step(i, k) {
+                    Ok(true) => self.step_advanced[i] = true,
+                    Ok(false) => {}
+                    Err(_) => {
+                        // A failed verify pass already rolled its fork and
+                        // slab tail back (speculative_step's error path),
+                        // so only this one sequence is tainted: fail it,
+                        // keep the rest of the batch decoding.
+                        self.metrics.backend_errors.inc();
+                        // take() is Some: slot_speculation_k returned > 0,
+                        // which requires an active sequence.
+                        let seq = self.slots[i].take().unwrap();
+                        self.release_kv(i);
+                        self.fail_seq(seq);
+                    }
                 }
             }
         }
@@ -597,11 +877,18 @@ impl<B: ModelBackend> Scheduler<B> {
                     // Outgrew the pool alone: finished CacheFull above.
                     continue;
                 }
+                // Infallible within the reservation make_append_headroom
+                // just guaranteed: an Err is page-accounting corruption,
+                // fatal to this scheduler.
                 let st = self
                     .kv
                     .as_mut()
                     .expect("paged layout")
-                    .append_token(i)?;
+                    .append_token(i)
+                    .map_err(|e| ServeError::KvCache {
+                        op: "decode append_token",
+                        detail: format!("{e:#}"),
+                    })?;
                 self.metrics.kv_cow_copies.add(st.cow_copies);
                 self.metrics.kv_evictions.add(st.evictions);
             }
@@ -640,17 +927,44 @@ impl<B: ModelBackend> Scheduler<B> {
         // points count on the calling thread even when the pack itself
         // shards over workers).
         let scratch_base = crate::ukernel::scratch::stats();
-        self.backend
+        let decoded = self
+            .backend
             .decode_into(&self.step_tokens, &self.step_pos,
-                         kv_step_view(&self.kv), &mut self.logits)?;
+                         kv_step_view(&self.kv), &mut self.logits);
         if let Some(kv) = &mut self.kv {
             kv.take_copies();
+        }
+        if decoded.is_err() {
+            // One failed decode batch fails exactly the lanes that were in
+            // it (their staged KV positions are garbage); sequences that
+            // advanced speculatively this iteration never entered the batch
+            // and keep going. The scheduler itself stays healthy.
+            self.metrics.backend_errors.inc();
+            for i in 0..dims.batch {
+                if self.step_advanced[i] || self.slots[i].is_none() {
+                    continue;
+                }
+                // take() is Some: is_none was checked just above.
+                let seq = self.slots[i].take().unwrap();
+                self.release_kv(i);
+                self.fail_seq(seq);
+            }
+            self.sync_kv_gauges();
+            return Ok(());
         }
         let sd = crate::ukernel::scratch::stats().delta_since(scratch_base);
         self.metrics.decode_rhs_packs.add(sd.rhs_packs);
         self.metrics.decode_scratch_allocs.add(sd.allocs);
         self.metrics.decode_step_latency.observe(t0.elapsed());
         self.metrics.decode_steps.inc();
+        // Backend contract: decode logits cover one vocab row per lane.
+        if self.logits.len() < dims.batch * dims.vocab {
+            return Err(ServeError::Backend {
+                phase: "decode",
+                detail: format!("logits buffer {} < batch {} * vocab {}",
+                                self.logits.len(), dims.batch, dims.vocab),
+            });
+        }
 
         for i in 0..dims.batch {
             if self.step_advanced[i] {
@@ -677,6 +991,7 @@ impl<B: ModelBackend> Scheduler<B> {
             seq.next_token = tok as i32;
             self.metrics.tokens_decoded.inc();
             if let Some(reason) = finish_reason(seq, dims.max_seq) {
+                // take() is Some: the let-else above bound this slot.
                 let seq = self.slots[i].take().unwrap();
                 self.release_kv(i);
                 self.finish_seq(seq, reason);
@@ -769,6 +1084,17 @@ impl<B: ModelBackend> Scheduler<B> {
         if matches!(action, PreemptAction::Swap)
             && self.swap_arena_pages + arena_need > self.swap_arena_cap
         {
+            self.metrics.preempt_swap_blocked.inc();
+            action = PreemptAction::Recompute;
+        }
+        // Scripted swap-arena failure (`--fault-plan`, kind = "swap-fail"):
+        // the arena "rejects" this payload, exercising the same downgrade
+        // path a real host-copy failure takes — the victim recomputes, it
+        // is never lost.
+        if matches!(action, PreemptAction::Swap)
+            && self.faults.as_mut().is_some_and(|f| f.take_swap_fault())
+        {
+            self.metrics.faults_injected.inc();
             self.metrics.preempt_swap_blocked.inc();
             action = PreemptAction::Recompute;
         }
@@ -998,6 +1324,7 @@ impl<B: ModelBackend> Scheduler<B> {
     /// delivered (or about to be) through the normal path.
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(i) = self.pending.iter().position(|(r, _)| r.id == id) {
+            // remove(i) is Some: position() returned an in-bounds index.
             let (_req, timing) = self.pending.remove(i).unwrap();
             self.metrics.requests_cancelled.inc();
             self.finished
@@ -1009,6 +1336,7 @@ impl<B: ModelBackend> Scheduler<B> {
         if let Some(i) =
             self.preempted.iter().position(|p| p.seq.req.id == id)
         {
+            // remove(i) is Some: position() returned an in-bounds index.
             let mut p = self.preempted.remove(i).unwrap();
             // A cancelled swap victim's payload leaves the arena with it.
             if matches!(p.resume, ResumeKind::Swap(_)) {
@@ -1021,6 +1349,7 @@ impl<B: ModelBackend> Scheduler<B> {
         }
         for slot in 0..self.slots.len() {
             if self.slots[slot].as_ref().is_some_and(|s| s.req.id == id) {
+                // take() is Some: is_some_and held just above.
                 let mut seq = self.slots[slot].take().unwrap();
                 self.release_kv(slot);
                 self.metrics.requests_cancelled.inc();
@@ -1087,6 +1416,16 @@ impl<B: ModelBackend> Scheduler<B> {
         self.finish(out);
     }
 
+    /// Terminal *failure* of a sequence that already owns tokens/timing:
+    /// finishes it `Failed` without SLO-attainment accounting — a failed
+    /// attempt is not a missed deadline, and under a supervised fleet it
+    /// may be retried and meet its targets on another shard. Callers have
+    /// already released the slot's pages.
+    fn fail_seq(&mut self, mut seq: Sequence) {
+        self.metrics.requests_failed.inc();
+        self.finish(slot_output(&mut seq, FinishReason::Failed));
+    }
+
     /// SLO-attainment accounting. TTFT is measured at prefill; TPOT is the
     /// mean inter-token gap `(e2e - ttft) / (tokens - 1)`, defined only
     /// when at least two tokens were emitted.
@@ -1143,6 +1482,8 @@ fn kv_step_view(kv: &Option<KvCacheManager>) -> KvStepView<'_> {
 }
 
 fn finish_reason(seq: &Sequence, max_seq: usize) -> Option<FinishReason> {
+    // last() is Some: admission pushes the first sampled token before any
+    // finish check, and decode only ever appends.
     let last = *seq.generated.last().unwrap();
     if seq.req.eos_token == Some(last) {
         return Some(FinishReason::Eos);

@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -13,12 +14,16 @@ use super::backend::ModelBackend;
 use super::kvcache::KvChoice;
 use super::request::{Request, RequestId, RequestOutput};
 use super::scheduler::{AdmissionPolicy, PreemptMode, Scheduler};
+use crate::faults::FaultPlan;
 use crate::llm::SamplingParams;
 use crate::metrics::ServingMetrics;
 
 /// Scheduler tuning the worker applies before serving — the programmatic
-/// face of `serve --speculative / --admission / --preempt-mode`.
-#[derive(Debug, Clone, Copy)]
+/// face of `serve --speculative / --admission / --preempt-mode
+/// --fault-plan --deadline-ms`. `Clone` (not `Copy`) since the fault plan
+/// rides along as a shared `Arc`; fleets clone one options value per
+/// shard.
+#[derive(Debug, Clone)]
 pub struct SchedulerOptions {
     /// Default speculative draft length (0 = plain decode).
     pub speculative_k: usize,
@@ -29,6 +34,17 @@ pub struct SchedulerOptions {
     /// Host swap-arena capacity in pages (`--swap-arena-pages`; 0 = the
     /// default bound, one device pool's worth).
     pub swap_arena_pages: usize,
+    /// Compiled fault script (`--fault-plan`); `None` (the default) keeps
+    /// every injection point a single branch — zero cost when off.
+    pub fault_plan: Option<Arc<FaultPlan>>,
+    /// Which shard of a fleet this worker serves (0 standalone): selects
+    /// the shard's slice of the fault plan and labels injected crashes.
+    pub shard_index: usize,
+    /// Default hard wall-deadline for requests that carry none
+    /// (`--deadline-ms`; `None` = no default).
+    pub deadline: Option<Duration>,
+    /// Load-shedding admission threshold (`--shed-queue-depth`; 0 = off).
+    pub shed_queue_depth: usize,
 }
 
 impl Default for SchedulerOptions {
@@ -38,6 +54,10 @@ impl Default for SchedulerOptions {
             admission: AdmissionPolicy::Optimistic,
             preempt_mode: PreemptMode::Auto,
             swap_arena_pages: 0,
+            fault_plan: None,
+            shard_index: 0,
+            deadline: None,
+            shed_queue_depth: 0,
         }
     }
 }
@@ -104,11 +124,29 @@ impl ServerHandle {
         let id: RequestId =
             self.next_id.fetch_add(self.id_stride, Ordering::Relaxed);
         req.id = id;
+        self.submit_request_keep_id(req).map(|rx| (id, rx))
+    }
+
+    /// Submit a [`Request`] keeping the caller's `req.id` verbatim. The
+    /// fleet supervisor owns id assignment (retried requests must keep
+    /// their id across shards — a respawn-rerouted request that changed
+    /// id would orphan its client channel); everyone else should prefer
+    /// [`ServerHandle::submit_request`].
+    pub fn submit_request_keep_id(&self, req: Request)
+                                  -> Result<Receiver<RequestOutput>> {
         let (otx, orx) = mpsc::channel();
         self.tx
             .send(Msg::Submit(req, otx))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok((id, orx))
+        Ok(orx)
+    }
+
+    /// Is the worker thread still running? `false` means it exited — a
+    /// drained shutdown, or a fatal `ServeError` (injected crash, invariant
+    /// violation). The fleet supervisor polls this to tell "shard died"
+    /// from "shard rejected one message".
+    pub fn is_alive(&self) -> bool {
+        self.worker.as_ref().is_some_and(|w| !w.is_finished())
     }
 
     /// Cancel an in-flight request (the client-disconnect path): its batch
@@ -128,6 +166,19 @@ impl ServerHandle {
             h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
         }
         Ok(())
+    }
+
+    /// Abandon the worker **without joining it** — the supervisor's exit
+    /// path for a *wedged* (stalled, not dead) shard. Joining a thread
+    /// that never returns would deadlock the supervisor; detaching leaves
+    /// it to run out its stall (or the process) while a replacement serves.
+    /// The shutdown message is still sent so a merely-slow worker drains
+    /// and exits instead of leaking forever.
+    pub fn abandon(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        // Dropping the JoinHandle detaches the thread; the Drop impl's
+        // join is skipped because `worker` is now None.
+        let _ = self.worker.take();
     }
 }
 
@@ -198,6 +249,24 @@ where
 {
     let metrics = Arc::new(ServingMetrics::default());
     metrics.mark_started();
+    start_with_kv_options_metrics(factory, queue_capacity, seed, kv, opts,
+                                  metrics)
+}
+
+/// [`start_with_kv_options`] against a caller-owned metrics sink. The
+/// fleet supervisor uses this when respawning a crashed shard: the
+/// replacement worker keeps accumulating into the dead incarnation's
+/// counters, so per-shard reports span the whole shard slot, not just the
+/// current thread.
+pub fn start_with_kv_options_metrics<B, F>(factory: F, queue_capacity: usize,
+                                           seed: u64, kv: KvChoice,
+                                           opts: SchedulerOptions,
+                                           metrics: Arc<ServingMetrics>)
+                                           -> Result<ServerHandle>
+where
+    B: ModelBackend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
     let m2 = metrics.clone();
     let (tx, rx) = mpsc::channel::<Msg>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -253,6 +322,17 @@ fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
     sched.set_admission(opts.admission);
     sched.set_preempt_mode(opts.preempt_mode);
     sched.set_swap_arena_cap(opts.swap_arena_pages);
+    // Reliability plumbing: a threaded worker owns its whole shard, so it
+    // takes the plan's lifecycle events too (crash = this thread exits,
+    // stall = this thread wedges — exactly what the supervisor must
+    // detect from outside).
+    if let Some(plan) = &opts.fault_plan {
+        sched.set_fault_injector(
+            plan.injector_for_shard(opts.shard_index, true));
+    }
+    sched.set_shard_index(opts.shard_index);
+    sched.set_deadline_default(opts.deadline);
+    sched.set_shed_queue_depth(opts.shed_queue_depth);
     let mut waiters: Vec<(RequestId, Sender<RequestOutput>)> = Vec::new();
     let mut shutting_down = false;
     loop {
@@ -427,6 +507,31 @@ mod tests {
         assert_eq!(h.metrics.preemptions.get(), 0,
                    "worst-case admission never preempts");
         h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn injected_crash_kills_the_worker_not_the_process() {
+        use crate::faults::FaultPlan;
+        let plan = FaultPlan::from_toml_str(
+            "[plan]\nseed = 1\n\n[event-0]\nstep = 2\nkind = \"crash\"\n")
+            .unwrap();
+        let opts = SchedulerOptions { fault_plan: Some(Arc::new(plan)),
+                                      ..SchedulerOptions::default() };
+        let h = start_with_kv_options(
+            move || Ok(MockBackend::new(2, 8, 32, 64)), 16, 7,
+            KvChoice::compile_default(), opts)
+            .unwrap();
+        let rx = h.submit(vec![5], 30, SamplingParams::Greedy, None).unwrap();
+        // The scripted crash at step 2 kills the worker mid-request: the
+        // client's channel disconnects instead of hanging forever...
+        assert!(rx.recv().is_err(), "a dead worker must drop its waiters");
+        // ...and the handle reports the death (the supervisor's signal).
+        let t0 = std::time::Instant::now();
+        while h.is_alive() && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::yield_now();
+        }
+        assert!(!h.is_alive());
+        assert!(h.metrics.faults_injected.get() >= 1);
     }
 
     #[test]

@@ -1,0 +1,489 @@
+//! Deterministic fault-injection plane for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded script of failure events keyed to the
+//! scheduler-step clock — the same clock the metrics layer exposes as
+//! `scheduler_steps` and the fleet supervisor heartbeats on. Replaying the
+//! same plan against the same workload reproduces the same failure
+//! sequence bit-for-bit, which is what lets the chaos property tests
+//! assert token-exactness and page conservation *under* failures instead
+//! of merely after them.
+//!
+//! Two consumers split the plan between them:
+//!
+//! - [`FaultPlan::injector_for_shard`] compiles the events owned by one
+//!   shard into a [`FaultInjector`] that the scheduler consults at the top
+//!   of every `step()`. Compute errors, queue-overflow windows and
+//!   swap-arena failures always live here; crash and stall events are
+//!   included only when the caller asks for lifecycle events too (the
+//!   threaded serve path, where a crash must kill the worker thread for
+//!   the supervisor to detect).
+//! - [`FaultPlan::lifecycle_events`] returns the crash/stall events for
+//!   the lockstep `FleetScheduler`, which simulates them at the fleet
+//!   iteration clock (skipping a stalled shard's step, rebuilding a
+//!   crashed shard's scheduler) so that supervision itself stays
+//!   deterministic and testable without threads.
+//!
+//! The plan is zero-cost when absent: schedulers hold an
+//! `Option<FaultInjector>` that stays `None` unless `--fault-plan` (or a
+//! test) installs one, and every hot-path check is a single branch on
+//! that option.
+//!
+//! ## TOML format
+//!
+//! The in-repo TOML parser (`config::toml`) is a strict scalar-only
+//! subset — no arrays — so events are numbered sections:
+//!
+//! ```toml
+//! [plan]
+//! seed = 42
+//! poison = "3,7"      # fleet-wide submission indices that always fail
+//!
+//! [event-0]
+//! step = 25           # scheduler-step clock of the owning shard
+//! kind = "crash"      # crash | stall | compute-error | queue-overflow | swap-fail
+//! shard = 1
+//!
+//! [event-1]
+//! step = 40
+//! kind = "stall"
+//! shard = 0
+//! steps = 8           # window length (stall / queue-overflow only)
+//! ```
+//!
+//! Section names only need to start with `event`; events are sorted by
+//! `(step, shard)` after parsing, so numbering gaps and lexicographic
+//! section order (`event-10` < `event-2`) are both harmless.
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml::TomlDoc;
+use crate::util::prng::Rng;
+
+/// One scripted failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Kill the shard's scheduler: the threaded worker exits with
+    /// `ServeError::InjectedCrash`; the lockstep fleet rebuilds the shard.
+    ShardCrash,
+    /// Wedge the shard for `steps` step-calls: the step clock freezes and
+    /// no work advances, which is exactly what supervision heartbeats key
+    /// on.
+    ShardStall { steps: u64 },
+    /// The backend is unavailable for one step: the scheduler skips
+    /// admission and decode for that step (a transient compute fault).
+    ComputeError,
+    /// Admission rejects every submission for `steps` step-calls
+    /// (overload shedding territory: callers see an `Overloaded`-style
+    /// rejection and the shed counters move).
+    QueueOverflow { steps: u64 },
+    /// The next attempted KV swap-out fails; the scheduler falls back to
+    /// recompute-resume for that victim.
+    SwapFail,
+}
+
+impl FaultKind {
+    /// Crash/stall change which scheduler exists or runs; everything else
+    /// perturbs a live scheduler from the inside.
+    pub fn is_lifecycle(self) -> bool {
+        matches!(self, FaultKind::ShardCrash | FaultKind::ShardStall { .. })
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::ShardCrash => "crash",
+            FaultKind::ShardStall { .. } => "stall",
+            FaultKind::ComputeError => "compute-error",
+            FaultKind::QueueOverflow { .. } => "queue-overflow",
+            FaultKind::SwapFail => "swap-fail",
+        }
+    }
+}
+
+/// A [`FaultKind`] pinned to a shard and a step on that shard's clock.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub shard: usize,
+    pub kind: FaultKind,
+}
+
+/// A seeded, deterministic script of failures plus poisoned submissions.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Sorted by `(step, shard)`.
+    pub events: Vec<FaultEvent>,
+    /// Fleet-wide submission indices (0-based, in submission order) whose
+    /// requests always fail — the quarantine path's test vector.
+    pub poison: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// Parse the numbered-section TOML format documented at module level.
+    pub fn from_toml_str(text: &str) -> Result<FaultPlan> {
+        let doc = TomlDoc::parse(text)?;
+        let seed = doc.get_int("plan", "seed")?.unwrap_or(0) as u64;
+        let mut poison = Vec::new();
+        if let Some(list) = doc.get_str("plan", "poison") {
+            for part in list.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                poison.push(part.parse::<u64>().with_context(|| {
+                    format!("fault plan: bad poison index {part:?}")
+                })?);
+            }
+        }
+        poison.sort_unstable();
+        poison.dedup();
+
+        let mut events = Vec::new();
+        for section in doc.sections() {
+            if !section.starts_with("event") {
+                continue;
+            }
+            let step = doc
+                .get_int(section, "step")?
+                .with_context(|| format!("fault plan: [{section}] missing step"))?;
+            if step < 0 {
+                bail!("fault plan: [{section}] step must be >= 0");
+            }
+            let shard = doc.get_int(section, "shard")?.unwrap_or(0);
+            if shard < 0 {
+                bail!("fault plan: [{section}] shard must be >= 0");
+            }
+            let window = doc.get_int(section, "steps")?.unwrap_or(1).max(1) as u64;
+            let kind_name = doc
+                .get_str(section, "kind")
+                .with_context(|| format!("fault plan: [{section}] missing kind"))?;
+            let kind = match kind_name {
+                "crash" | "shard-crash" => FaultKind::ShardCrash,
+                "stall" | "shard-stall" => FaultKind::ShardStall { steps: window },
+                "compute-error" => FaultKind::ComputeError,
+                "queue-overflow" => FaultKind::QueueOverflow { steps: window },
+                "swap-fail" => FaultKind::SwapFail,
+                other => bail!("fault plan: [{section}] unknown kind {other:?}"),
+            };
+            events.push(FaultEvent { step: step as u64, shard: shard as usize, kind });
+        }
+        let mut plan = FaultPlan { seed, events, poison };
+        plan.normalize();
+        Ok(plan)
+    }
+
+    /// Load a plan from a TOML file.
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {}", path.display()))?;
+        Self::from_toml_str(&text)
+            .with_context(|| format!("parsing fault plan {}", path.display()))
+    }
+
+    /// Generate a random plan: the chaos property test's input space.
+    ///
+    /// Events land within `horizon` steps and target one of `shards`
+    /// shards; up to two submissions out of `requests` are poisoned. Every
+    /// kind can appear, so a fuzz run exercises crash-respawn, stall
+    /// detection, transient compute faults, shedding windows and swap
+    /// fallback in one go.
+    pub fn random(seed: u64, shards: usize, horizon: u64, requests: u64) -> FaultPlan {
+        assert!(shards > 0 && horizon > 4);
+        let mut rng = Rng::new(seed ^ 0xFA17_0BAD);
+        let mut events = Vec::new();
+        let n_events = rng.below(5) as usize; // 0..=4
+        for _ in 0..n_events {
+            let step = 2 + rng.below(horizon - 2);
+            let shard = rng.below(shards as u64) as usize;
+            let kind = match rng.below(5) {
+                0 => FaultKind::ShardCrash,
+                1 => FaultKind::ShardStall { steps: 1 + rng.below(8) },
+                2 => FaultKind::ComputeError,
+                3 => FaultKind::QueueOverflow { steps: 1 + rng.below(6) },
+                _ => FaultKind::SwapFail,
+            };
+            events.push(FaultEvent { step, shard, kind });
+        }
+        let mut poison = Vec::new();
+        if requests > 0 {
+            for _ in 0..rng.below(3) {
+                poison.push(rng.below(requests));
+            }
+        }
+        poison.sort_unstable();
+        poison.dedup();
+        let mut plan = FaultPlan { seed, events, poison };
+        plan.normalize();
+        plan
+    }
+
+    fn normalize(&mut self) {
+        self.events.sort_by_key(|e| (e.step, e.shard));
+    }
+
+    /// Is the `index`-th submission (fleet-wide, 0-based) poisoned?
+    pub fn is_poison(&self, index: u64) -> bool {
+        self.poison.binary_search(&index).is_ok()
+    }
+
+    /// The crash/stall events, for a lockstep fleet that simulates shard
+    /// lifecycle at the fleet-iteration clock.
+    pub fn lifecycle_events(&self) -> Vec<FaultEvent> {
+        self.events.iter().copied().filter(|e| e.kind.is_lifecycle()).collect()
+    }
+
+    /// Compile this shard's events into an injector, or `None` if the
+    /// shard has none (keeping the disabled path zero-cost). With
+    /// `lifecycle` false, crash/stall events are left to the fleet tier.
+    pub fn injector_for_shard(&self, shard: usize, lifecycle: bool)
+        -> Option<FaultInjector>
+    {
+        let mut inj = FaultInjector::default();
+        let mut any = false;
+        for e in &self.events {
+            if e.shard != shard {
+                continue;
+            }
+            match e.kind {
+                FaultKind::ShardCrash if lifecycle => {
+                    inj.crash.push_back(e.step);
+                    any = true;
+                }
+                FaultKind::ShardStall { steps } if lifecycle => {
+                    inj.stall.push_back((e.step, steps));
+                    any = true;
+                }
+                FaultKind::ComputeError => {
+                    inj.compute.push_back(e.step);
+                    any = true;
+                }
+                FaultKind::QueueOverflow { steps } => {
+                    inj.overflow.push_back((e.step, e.step + steps));
+                    any = true;
+                }
+                FaultKind::SwapFail => {
+                    inj.swap.push_back(e.step);
+                    any = true;
+                }
+                _ => {}
+            }
+        }
+        if any { Some(inj) } else { None }
+    }
+}
+
+/// What the injector tells the scheduler to do with the current step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepFault {
+    /// Run the step normally.
+    None,
+    /// Wedge: return without stepping and without advancing the step
+    /// clock — heartbeats see a frozen clock with work outstanding.
+    Stalled,
+    /// The backend is down this step: count the fault, advance the clock,
+    /// do no work.
+    ComputeError,
+    /// Die: the scheduler returns `ServeError::InjectedCrash`.
+    Crash,
+}
+
+/// A single shard's compiled fault script.
+///
+/// The injector keeps its **own** monotone call clock (`calls`), advanced
+/// on every `on_step` regardless of what it returns. A stall freezes the
+/// scheduler's `scheduler_steps` clock — that freeze is the detection
+/// signal — so windows must be measured on a clock that still moves.
+#[derive(Debug, Clone, Default)]
+pub struct FaultInjector {
+    calls: u64,
+    crash: VecDeque<u64>,
+    stall: VecDeque<(u64, u64)>,
+    stalled_until: u64,
+    compute: VecDeque<u64>,
+    overflow: VecDeque<(u64, u64)>,
+    swap: VecDeque<u64>,
+}
+
+impl FaultInjector {
+    /// Consult at the top of `Scheduler::step()`. Crash wins over stall
+    /// wins over compute error; each scripted event fires exactly once, on
+    /// the first call at or after its step.
+    pub fn on_step(&mut self) -> StepFault {
+        self.calls += 1;
+        let now = self.calls;
+        if let Some(&at) = self.crash.front() {
+            if at <= now {
+                self.crash.pop_front();
+                return StepFault::Crash;
+            }
+        }
+        if let Some(&(at, steps)) = self.stall.front() {
+            if at <= now {
+                self.stall.pop_front();
+                self.stalled_until = now + steps;
+            }
+        }
+        if now < self.stalled_until {
+            return StepFault::Stalled;
+        }
+        if let Some(&at) = self.compute.front() {
+            if at <= now {
+                self.compute.pop_front();
+                return StepFault::ComputeError;
+            }
+        }
+        StepFault::None
+    }
+
+    /// Is an injected queue-overflow window open right now? Consulted by
+    /// `submit()`; expired windows are dropped as a side effect.
+    pub fn overflow_active(&mut self) -> bool {
+        while let Some(&(start, end)) = self.overflow.front() {
+            if end <= self.calls {
+                self.overflow.pop_front();
+                continue;
+            }
+            return start <= self.calls;
+        }
+        false
+    }
+
+    /// Should the next swap-out attempt fail? Consumes the armed event.
+    pub fn take_swap_fault(&mut self) -> bool {
+        if let Some(&at) = self.swap.front() {
+            if at <= self.calls {
+                self.swap.pop_front();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The injector's call clock (step-call count observed so far).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PLAN: &str = r#"
+[plan]
+seed = 42
+poison = "3,7"
+
+[event-0]
+step = 25
+kind = "crash"
+shard = 1
+
+[event-1]
+step = 10
+kind = "stall"
+shard = 0
+steps = 4
+
+[event-2]
+step = 12
+kind = "compute-error"
+shard = 0
+
+[event-3]
+step = 5
+kind = "queue-overflow"
+shard = 2
+steps = 3
+
+[event-4]
+step = 30
+kind = "swap-fail"
+shard = 0
+"#;
+
+    #[test]
+    fn parses_and_sorts_numbered_sections() {
+        let plan = FaultPlan::from_toml_str(PLAN).unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.poison, vec![3, 7]);
+        assert!(plan.is_poison(3) && plan.is_poison(7) && !plan.is_poison(4));
+        let steps: Vec<u64> = plan.events.iter().map(|e| e.step).collect();
+        assert_eq!(steps, vec![5, 10, 12, 25, 30], "sorted by step");
+        assert_eq!(plan.lifecycle_events().len(), 2);
+    }
+
+    #[test]
+    fn unknown_kind_is_an_error() {
+        let bad = "[event-0]\nstep = 1\nkind = \"meteor\"\n";
+        assert!(FaultPlan::from_toml_str(bad).is_err());
+    }
+
+    #[test]
+    fn injector_fires_each_event_once_in_order() {
+        let plan = FaultPlan::from_toml_str(PLAN).unwrap();
+        // Shard 0: stall at 10 for 4 steps, compute error at 12 (delayed
+        // past the stall), swap-fail armed from 30.
+        let mut inj = plan.injector_for_shard(0, true).unwrap();
+        let mut stalled = 0;
+        let mut compute = 0;
+        for _ in 0..40 {
+            match inj.on_step() {
+                StepFault::Stalled => stalled += 1,
+                StepFault::ComputeError => compute += 1,
+                StepFault::Crash => panic!("no crash scripted for shard 0"),
+                StepFault::None => {}
+            }
+        }
+        assert_eq!(stalled, 4, "stall window is exactly `steps` calls");
+        assert_eq!(compute, 1, "compute error fires once, after the stall");
+        assert!(inj.take_swap_fault(), "swap fault armed by call 40");
+        assert!(!inj.take_swap_fault(), "and consumed");
+    }
+
+    #[test]
+    fn injector_crash_and_lifecycle_split() {
+        let plan = FaultPlan::from_toml_str(PLAN).unwrap();
+        let mut inj = plan.injector_for_shard(1, true).unwrap();
+        let mut crashed_at = None;
+        for i in 1..=30 {
+            if inj.on_step() == StepFault::Crash {
+                crashed_at = Some(i);
+                break;
+            }
+        }
+        assert_eq!(crashed_at, Some(25));
+        // Without lifecycle, shard 1 has no remaining events at all.
+        assert!(plan.injector_for_shard(1, false).is_none());
+        // Shard 2's overflow window survives the lifecycle split.
+        let mut inj2 = plan.injector_for_shard(2, false).unwrap();
+        let mut open = 0;
+        for _ in 0..12 {
+            inj2.on_step();
+            if inj2.overflow_active() {
+                open += 1;
+            }
+        }
+        assert_eq!(open, 3, "overflow window is `steps` calls wide");
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_in_range() {
+        let a = FaultPlan::random(7, 4, 60, 24);
+        let b = FaultPlan::random(7, 4, 60, 24);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!((x.step, x.shard, x.kind), (y.step, y.shard, y.kind));
+        }
+        assert_eq!(a.poison, b.poison);
+        for e in &a.events {
+            assert!(e.step <= 60 && e.shard < 4);
+        }
+        for &p in &a.poison {
+            assert!(p < 24);
+        }
+    }
+}

@@ -25,6 +25,7 @@ pub mod cliargs;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod ir;
 pub mod kernels;
 pub mod llm;

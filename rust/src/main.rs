@@ -3,16 +3,21 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
 
 use tenx_iree::autotune::{self, TileRegistry};
 use tenx_iree::cliargs::{parse_one_of, parse_thread_count,
                          parse_thread_list, parse_zero_auto, Command};
-use tenx_iree::coordinator::{self, start_fleet, AdmissionPolicy,
-                             EngineBackend, FleetHandle, KvCacheConfig,
-                             KvChoice, NativeBackend, Precision,
-                             PreemptMode, Request, RequestId,
-                             RequestOutput, RouterPolicy, SchedulerOptions,
-                             ServerHandle, KV_PAGE_TOKENS_DEFAULT};
+use tenx_iree::coordinator::{self, start_fleet, start_supervised_fleet,
+                             AdmissionPolicy, EngineBackend, FinishReason,
+                             FleetHandle, KvCacheConfig, KvChoice,
+                             NativeBackend, Precision, PreemptMode,
+                             Request, RequestId, RequestOutput,
+                             RouterPolicy, SchedulerOptions, ServerHandle,
+                             SupervisedFleetHandle, SupervisionConfig,
+                             KV_PAGE_TOKENS_DEFAULT};
+use tenx_iree::faults::FaultPlan;
 use tenx_iree::ir::{build_matmul_func, ElemType, Module};
 use tenx_iree::kernels::System;
 use tenx_iree::llm::{SamplingParams, Tokenizer};
@@ -87,6 +92,9 @@ fn load_tiles(path: &str) -> Result<TileRegistry, String> {
 enum Front {
     Single(ServerHandle),
     Fleet(FleetHandle),
+    /// A self-healing fleet behind a supervisor thread — what
+    /// `--fault-plan` engages (docs/SERVING.md, "Reliability").
+    Supervised(SupervisedFleetHandle),
 }
 
 impl Front {
@@ -96,6 +104,7 @@ impl Front {
         match self {
             Front::Single(h) => h.submit_request(req),
             Front::Fleet(f) => f.submit_request(req),
+            Front::Supervised(f) => f.submit_request(req),
         }
     }
 
@@ -105,6 +114,7 @@ impl Front {
         match self {
             Front::Single(h) => h.submit(prompt, max_new, sampling, eos),
             Front::Fleet(f) => f.submit(prompt, max_new, sampling, eos),
+            Front::Supervised(f) => f.submit(prompt, max_new, sampling, eos),
         }
     }
 
@@ -112,6 +122,7 @@ impl Front {
         match self {
             Front::Single(h) => h.cancel(id),
             Front::Fleet(f) => f.cancel(id),
+            Front::Supervised(f) => f.cancel(id),
         }
     }
 
@@ -121,6 +132,7 @@ impl Front {
         match self {
             Front::Single(h) => h.metrics.scheduler_steps.get(),
             Front::Fleet(f) => f.scheduler_steps(),
+            Front::Supervised(f) => f.scheduler_steps(),
         }
     }
 
@@ -138,6 +150,9 @@ impl Front {
             Front::Fleet(f) => {
                 f.shards().iter().map(|h| one(&h.metrics)).sum()
             }
+            // Per-shard counters over-count under retries (each
+            // incarnation counts); the supervisor keeps the true tally.
+            Front::Supervised(f) => f.resolved(),
         }
     }
 
@@ -147,6 +162,11 @@ impl Front {
             Front::Fleet(f) => {
                 for h in f.shards() {
                     h.metrics.compute_threads.add(threads);
+                }
+            }
+            Front::Supervised(f) => {
+                for m in &f.shard_metrics {
+                    m.compute_threads.add(threads);
                 }
             }
         }
@@ -163,6 +183,14 @@ impl Front {
                 }
                 s
             }
+            Front::Supervised(f) => {
+                let mut s = f.report();
+                for (i, m) in f.shard_metrics.iter().enumerate() {
+                    s.push_str(&format!("\n-- shard {i} --\n{}",
+                                        m.report()));
+                }
+                s
+            }
         }
     }
 
@@ -170,6 +198,7 @@ impl Front {
         match self {
             Front::Single(h) => h.shutdown(),
             Front::Fleet(f) => f.shutdown(),
+            Front::Supervised(f) => f.shutdown(),
         }
     }
 }
@@ -240,6 +269,23 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
               workload: uniform | chat | bursty | agents | cancel-heavy. \
               Requests carry priorities and TTFT/TPOT targets (see the \
               report's slo: line); native backend only (empty = off)")
+        .opt("fault-plan", "",
+             "TOML fault-injection script (scripted shard crash/stall, \
+              compute errors, queue overflow, swap failures, poisoned \
+              requests — see docs/SERVING.md \"Reliability\"); engages \
+              the self-healing supervised fleet; native backend only \
+              (empty = off, zero cost)")
+        .opt("deadline-ms", "0",
+             "hard per-request wall-clock deadline in ms: an expired \
+              request is killed wherever it is (queued, preempted or \
+              mid-decode) and reported DEADLINE EXCEEDED (0 = off)")
+        .opt("retry-budget", "2",
+             "supervised-fleet retries per request before it is \
+              quarantined to the dead-letter list (with --fault-plan)")
+        .opt("shed-queue-depth", "0",
+             "load-shedding admission: reject new submissions while a \
+              shard's pending queue is at least this deep (0 = off; see \
+              the report's reliability: shed counters)")
         .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
@@ -276,6 +322,17 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let router = RouterPolicy::from_name(
         parse_one_of(m.str("router"), "--router", RouterPolicy::names())?)
         .expect("parse_one_of validated the name");
+    let fault_plan = if m.str("fault-plan").is_empty() {
+        None
+    } else {
+        Some(Arc::new(FaultPlan::load(
+            std::path::Path::new(m.str("fault-plan"))).map_err(err_str)?))
+    };
+    let deadline_ms: u64 = m.parse("deadline-ms")?;
+    let deadline = (deadline_ms > 0)
+        .then(|| Duration::from_millis(deadline_ms));
+    let retry_budget: u32 = m.parse("retry-budget")?;
+    let shed_queue_depth: usize = m.usize("shed-queue-depth")?;
     let workload = m.str("workload");
     let mix = if workload.is_empty() {
         None
@@ -350,8 +407,48 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                       AdmissionPolicy::Optimistic => "",
                   });
         let opts = SchedulerOptions { speculative_k: speculative, admission,
-                                      preempt_mode, swap_arena_pages };
-        let front = if fleet_n > 1 {
+                                      preempt_mode, swap_arena_pages,
+                                      fault_plan: fault_plan.clone(),
+                                      shard_index: 0, deadline,
+                                      shed_queue_depth };
+        let front = if fault_plan.is_some() {
+            // A fault plan engages the self-healing supervised fleet:
+            // worker-liveness + heartbeat watching, drain-and-respawn
+            // with page-pool rebuild, retry with capped backoff, and
+            // quarantine. Factories are `Fn` so crashed shards can be
+            // rebuilt; the fault-free serve paths below are untouched.
+            let shard_kv = match kv {
+                KvChoice::Slab => KvChoice::Slab,
+                KvChoice::Paged(cfg) => KvChoice::Paged(KvCacheConfig {
+                    page_tokens: cfg.page_tokens,
+                    pool_pages: if cfg.pool_pages == 0 {
+                        0
+                    } else {
+                        (cfg.pool_pages / fleet_n).max(1)
+                    },
+                }),
+            };
+            let factories: Vec<_> = (0..fleet_n)
+                .map(|_| {
+                    let tiles = tiles.clone();
+                    move || {
+                        NativeBackend::new_with_tiles(4, 16, 64, vocab, 64,
+                                                      precision, 42, &tiles,
+                                                      threads)
+                            .map(|b| b.with_parallelism(
+                                Parallelism::new(threads)))
+                    }
+                })
+                .collect();
+            eprintln!("fleet: {fleet_n} supervised shard{}, {} router, \
+                       retry budget {retry_budget}",
+                      if fleet_n == 1 { "" } else { "s" }, router.name());
+            let cfg = SupervisionConfig { retry_budget,
+                                          ..SupervisionConfig::default() };
+            Front::Supervised(start_supervised_fleet(
+                factories, queue_capacity, 42, shard_kv, opts, router, cfg)
+                .map_err(err_str)?)
+        } else if fleet_n > 1 {
             // Each shard is a full coordinator with its own pool; an
             // explicit page budget is the fleet *total*, split evenly, so
             // fleet and single-host runs compare at equal memory.
@@ -426,6 +523,12 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         if fleet_n > 1 {
             eprintln!("note: --fleet/--router apply to the native \
                        backend; serving a single artifact engine");
+        }
+        if fault_plan.is_some() || deadline.is_some() || shed_queue_depth > 0
+        {
+            eprintln!("note: --fault-plan/--deadline-ms/--shed-queue-depth \
+                       apply to the native backend; the artifact engine \
+                       serves without the reliability plane");
         }
         if vocab_flag != 512 {
             eprintln!("note: --vocab applies to the native demo model; the \
@@ -543,6 +646,13 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     };
     for (i, rx) in rxs.into_iter().enumerate() {
         match rx.recv() {
+            Ok(out) if out.finish == FinishReason::Failed => println!(
+                "req {i:>2}: FAILED (quarantined after retries)"),
+            Ok(out) if out.finish == FinishReason::DeadlineExceeded => {
+                println!("req {i:>2}: DEADLINE EXCEEDED ({:>2} tokens in \
+                          {:?})",
+                         out.tokens.len(), out.e2e)
+            }
             Ok(out) => println!(
                 "req {i:>2}: {:>2} tokens in {:?} (ttft {:?}) -> {:?}",
                 out.tokens.len(), out.e2e, out.ttft,

@@ -231,6 +231,40 @@ pub struct ServingMetrics {
     /// Mean tokens emitted per speculative verify pass, in hundredths
     /// (100 = 1.0 tokens/step, i.e. no better than plain decode).
     pub spec_tokens_per_step_x100: Gauge,
+    /// Scripted faults fired by the fault-injection plane (`--fault-plan`):
+    /// crashes, stalls, compute errors, overflow windows, swap failures,
+    /// and poison markings. Always 0 without a plan — the reliability
+    /// machinery is zero-cost when off.
+    pub faults_injected: Counter,
+    /// Failures the supervision tier *noticed* (dead worker, frozen
+    /// heartbeat with work outstanding) — injected or genuine.
+    pub faults_detected: Counter,
+    /// Backend compute faults absorbed without killing the scheduler: the
+    /// step was skipped or the affected sequences finished `Failed`.
+    pub backend_errors: Counter,
+    /// Requests that finished `FinishReason::Failed` (each retry attempt
+    /// counts — a quarantined poison request shows budget+1 failures).
+    pub requests_failed: Counter,
+    /// Re-submissions of in-flight requests by a supervisor after their
+    /// shard crashed/wedged or their attempt failed (capped-exponential
+    /// backoff between attempts).
+    pub requests_retried: Counter,
+    /// Shard schedulers torn down and rebuilt (fresh page pool) by the
+    /// supervisor.
+    pub shard_respawns: Counter,
+    /// Requests moved to the dead-letter list after exhausting the retry
+    /// budget — surfaced `Failed` and never resubmitted again.
+    pub requests_quarantined: Counter,
+    /// Requests killed by their hard wall-clock deadline
+    /// (`FinishReason::DeadlineExceeded`), wherever they were.
+    pub deadline_kills: Counter,
+    /// Submissions refused by load-shedding admission (depth threshold or
+    /// an injected overflow window) — the `Overloaded` rejection, distinct
+    /// from plain bounded-queue `queue_rejections`.
+    pub requests_shed: Counter,
+    /// Lifetime shed fraction in permille:
+    /// `1000 * shed / (shed + submitted)`.
+    pub shed_rate_permille: Gauge,
     pub started: Mutex<Option<std::time::Instant>>,
     /// Taskpool counter snapshot at `mark_started`, so the report shows
     /// this server's pool activity rather than process-wide totals.
@@ -313,6 +347,30 @@ impl ServingMetrics {
                 self.spec_tokens_rejected.get(),
                 self.spec_fallbacks.get(),
                 self.spec_tokens_per_step_x100.get() as f64 / 100.0
+            ));
+        }
+        // Only rendered when something reliability-related actually
+        // happened, so fault-free reports (and the tests pinned to them)
+        // are byte-identical to the pre-reliability format.
+        let reliability_active = self.faults_injected.get()
+            + self.faults_detected.get()
+            + self.backend_errors.get()
+            + self.requests_failed.get()
+            + self.requests_retried.get()
+            + self.shard_respawns.get()
+            + self.requests_quarantined.get()
+            + self.deadline_kills.get()
+            + self.requests_shed.get();
+        if reliability_active > 0 {
+            s.push_str(&format!(
+                "reliability: {} faults injected / {} detected, {} backend \
+                 errors, {} failed, {} retries, {} respawns, {} quarantined, \
+                 {} deadline kills, {} shed ({} permille)\n",
+                self.faults_injected.get(), self.faults_detected.get(),
+                self.backend_errors.get(), self.requests_failed.get(),
+                self.requests_retried.get(), self.shard_respawns.get(),
+                self.requests_quarantined.get(), self.deadline_kills.get(),
+                self.requests_shed.get(), self.shed_rate_permille.get()
             ));
         }
         s.push_str(&format!(
@@ -467,5 +525,31 @@ mod tests {
         assert!(r.contains("speculative: 4 verify steps, 12 proposed, \
                             9 accepted (75.0%)"));
         assert!(r.contains("3 rejected, 1 fallbacks, 3.25 tokens/step"));
+    }
+
+    #[test]
+    fn reliability_line_appears_only_under_faults() {
+        let m = ServingMetrics::default();
+        assert!(!m.report().contains("reliability:"),
+                "fault-free reports keep the pre-reliability format");
+        m.faults_injected.add(3);
+        m.faults_detected.add(2);
+        m.backend_errors.inc();
+        m.requests_failed.add(3);
+        m.requests_retried.add(2);
+        m.shard_respawns.inc();
+        m.requests_quarantined.inc();
+        m.deadline_kills.add(2);
+        m.requests_shed.add(4);
+        m.shed_rate_permille.set(40);
+        let r = m.report();
+        assert!(r.contains("reliability: 3 faults injected / 2 detected, \
+                            1 backend errors, 3 failed, 2 retries, \
+                            1 respawns, 1 quarantined, 2 deadline kills, \
+                            4 shed (40 permille)"));
+        // A single deadline kill is enough to surface the line.
+        let d = ServingMetrics::default();
+        d.deadline_kills.inc();
+        assert!(d.report().contains("reliability:"));
     }
 }

@@ -1,0 +1,234 @@
+//! Chaos property tests for the fault-injection plane + self-healing
+//! fleet (docs/SERVING.md, "Reliability").
+//!
+//! The core property: a supervised 4-shard fleet driven by a **random
+//! seeded fault plan** (shard crashes, stalls, transient compute errors,
+//! queue-overflow windows, swap failures, poisoned requests) must
+//!
+//! 1. resolve every accepted request exactly once,
+//! 2. emit **bit-exact** token streams for every request that finishes
+//!    naturally, compared against a fault-free golden run of the same
+//!    workload (retries re-execute greedy decode from the prompt, so
+//!    recovery may never change what a client observes),
+//! 3. quarantine every poisoned request to the dead-letter list after
+//!    the retry budget, without disturbing its neighbours, and
+//! 4. leak zero KV pages: after the drain every shard pool — including
+//!    pools rebuilt by crash-respawn — is empty and internally
+//!    consistent.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tenx_iree::coordinator::{FinishReason, FleetScheduler, KvCacheConfig,
+                             KvChoice, MockBackend, Request, RequestOutput,
+                             RouterPolicy, Scheduler, SupervisionConfig};
+use tenx_iree::faults::FaultPlan;
+use tenx_iree::metrics::ServingMetrics;
+use tenx_iree::workload::{ScenarioMix, WorkloadGen, WorkloadRequest};
+
+const SHARDS: usize = 4;
+const REQUESTS: usize = 16;
+
+fn shard() -> Scheduler<MockBackend> {
+    Scheduler::with_kv(MockBackend::new(2, 8, 32, 64), 32,
+                       Arc::new(ServingMetrics::default()), 1,
+                       KvChoice::Paged(KvCacheConfig { page_tokens: 4,
+                                                       pool_pages: 16 }))
+}
+
+fn golden_fleet() -> FleetScheduler<MockBackend> {
+    FleetScheduler::new((0..SHARDS).map(|_| shard()).collect(),
+                        RouterPolicy::Prefix)
+}
+
+fn supervised_fleet(plan: FaultPlan) -> FleetScheduler<MockBackend> {
+    FleetScheduler::with_supervision(Box::new(|_| shard()), SHARDS,
+                                     RouterPolicy::Prefix, Arc::new(plan),
+                                     SupervisionConfig::default())
+}
+
+/// Submit each request at its arrival step, run the fleet dry, and
+/// collect (accepted ids in acceptance order, outputs by id). Panics on
+/// a duplicate resolution — conservation is checked on every drain.
+fn run_fleet(fleet: &mut FleetScheduler<MockBackend>,
+             reqs: &[WorkloadRequest])
+             -> (Vec<u64>, BTreeMap<u64, RequestOutput>) {
+    let mut accepted = Vec::new();
+    let mut outputs: BTreeMap<u64, RequestOutput> = BTreeMap::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    loop {
+        while next < reqs.len() && reqs[next].arrival_step <= step {
+            let id = 1 + next as u64;
+            if fleet.submit(reqs[next].to_request(id)) {
+                accepted.push(id);
+            }
+            next += 1;
+        }
+        if next >= reqs.len() && !fleet.has_work() {
+            break;
+        }
+        fleet.step().expect("fleet step");
+        step += 1;
+        for o in fleet.take_finished() {
+            assert!(outputs.insert(o.id, o).is_none(),
+                    "a request resolved twice");
+        }
+        assert!(step < 20_000, "chaos run did not drain");
+    }
+    for o in fleet.take_finished() {
+        assert!(outputs.insert(o.id, o).is_none(),
+                "a request resolved twice");
+    }
+    (accepted, outputs)
+}
+
+fn is_natural(f: FinishReason) -> bool {
+    matches!(f, FinishReason::Length | FinishReason::Eos
+        | FinishReason::CacheFull)
+}
+
+#[test]
+fn fuzz_fault_recovery_token_exact_and_conserving() {
+    for seed in 0..8u64 {
+        for mix_name in ["uniform", "chat", "bursty", "agents"] {
+            let mix = ScenarioMix::from_name(mix_name)
+                .expect("preset mix name");
+            let reqs = WorkloadGen::new(seed, mix, 64, 8, 6)
+                .generate(REQUESTS);
+            let plan = FaultPlan::random(seed, SHARDS, 40, REQUESTS as u64);
+            let ctx = format!("seed {seed} mix {mix_name} plan {plan:?}");
+
+            let mut golden = golden_fleet();
+            let (_, gold_out) = run_fleet(&mut golden, &reqs);
+            golden.check_invariants().unwrap();
+            assert_eq!(golden.pages_in_use(), 0, "{ctx}: golden leaked");
+
+            let mut fleet = supervised_fleet(plan.clone());
+            let (accepted, outs) = run_fleet(&mut fleet, &reqs);
+
+            // 1) Conservation: every accepted request resolves exactly
+            //    once (run_fleet already rejects duplicates).
+            assert_eq!(outs.len(), accepted.len(),
+                       "{ctx}: accepted vs resolved");
+            for id in &accepted {
+                assert!(outs.contains_key(id), "{ctx}: {id} lost");
+            }
+
+            // 2) Bit-exactness for natural finishes vs the golden run.
+            for (id, o) in &outs {
+                if !is_natural(o.finish) {
+                    continue;
+                }
+                let Some(g) = gold_out.get(id) else { continue };
+                if !is_natural(g.finish) {
+                    continue;
+                }
+                assert_eq!(o.finish, g.finish, "{ctx}: req {id} finish");
+                assert_eq!(o.tokens, g.tokens,
+                           "{ctx}: req {id} diverged under faults");
+            }
+
+            // 3) Poison → quarantine. The i-th *accepted* submission is
+            //    poisoned iff the plan says so; every poisoned request
+            //    must end in the dead-letter list with a Failed output.
+            //    (Crash storms may quarantine an unlucky healthy request
+            //    too, so dead_letter ⊇ poisoned, with every entry
+            //    surfaced as Failed.)
+            let poisoned: Vec<u64> = plan.poison.iter()
+                .filter_map(|&p| accepted.get(p as usize).copied())
+                .collect();
+            for id in &poisoned {
+                assert_eq!(outs[id].finish, FinishReason::Failed,
+                           "{ctx}: poison {id} must fail");
+                assert!(fleet.dead_letter().contains(id),
+                        "{ctx}: poison {id} must be quarantined");
+            }
+            for id in fleet.dead_letter() {
+                assert_eq!(outs[id].finish, FinishReason::Failed,
+                           "{ctx}: quarantined {id} must surface Failed");
+            }
+
+            // 4) Zero leaked pages, even through respawned pools.
+            fleet.check_invariants().unwrap();
+            assert_eq!(fleet.pages_in_use(), 0, "{ctx}: leaked pages");
+        }
+    }
+}
+
+#[test]
+fn injected_compute_error_is_absorbed_and_token_exact() {
+    let plan = FaultPlan::from_toml_str(
+        "[plan]\nseed = 5\n\n[event-0]\nstep = 2\nkind = \
+         \"compute-error\"\nshard = 0\n").unwrap();
+    let req = || Request::greedy(1, vec![5, 6, 7], 6);
+
+    let mut golden = FleetScheduler::new(vec![shard()],
+                                         RouterPolicy::Prefix);
+    assert!(golden.submit(req()));
+    let (_, gold_out) = run_fleet(&mut golden, &[]);
+    let gold_tokens = gold_out.get(&1).expect("golden resolves")
+        .tokens.clone();
+
+    let mut f = supervised_fleet(plan);
+    assert!(f.submit(req()));
+    let (_, outs) = run_fleet(&mut f, &[]);
+    let got = outs.get(&1).expect("request resolves");
+    assert_eq!(got.finish, FinishReason::Length,
+               "a transient backend error never fails the request");
+    assert_eq!(got.tokens, gold_tokens,
+               "the skipped step must not perturb the stream");
+    assert_eq!(f.shards()[0].metrics.faults_injected.get(), 1);
+    assert_eq!(f.supervision_metrics().unwrap().shard_respawns.get(), 0,
+               "absorbed faults never trigger a respawn");
+}
+
+#[test]
+fn expired_deadline_kills_the_request_and_releases_pages() {
+    let mut s = shard();
+    let mut req = Request::greedy(1, vec![5, 6, 7], 32);
+    req.deadline = Some(Duration::ZERO);
+    assert!(s.submit(req));
+    let mut out = None;
+    let mut steps = 0;
+    while s.has_work() {
+        s.step().unwrap();
+        for o in s.take_finished() {
+            out = Some(o);
+        }
+        steps += 1;
+        assert!(steps < 50, "deadline kill must be prompt");
+    }
+    let out = out.expect("request resolves");
+    assert_eq!(out.finish, FinishReason::DeadlineExceeded);
+    assert_eq!(s.metrics.deadline_kills.get(), 1);
+    assert_eq!(s.kv_manager().unwrap().pages_in_use(), 0,
+               "killed requests release their pages");
+}
+
+#[test]
+fn load_shedding_rejects_above_the_queue_depth() {
+    let mut s = shard();
+    s.set_shed_queue_depth(1);
+    assert!(s.submit(Request::greedy(1, vec![5, 6, 7], 4)));
+    // Queue depth is now 1 — at the shed threshold, so further
+    // submissions are rejected until the scheduler drains the queue.
+    assert!(!s.submit(Request::greedy(2, vec![6, 7, 8], 4)));
+    assert!(!s.submit(Request::greedy(3, vec![7, 8, 9], 4)));
+    assert_eq!(s.metrics.requests_shed.get(), 2);
+    assert!(s.metrics.shed_rate_permille.get() > 0);
+    let mut steps = 0;
+    while s.has_work() {
+        s.step().unwrap();
+        s.take_finished();
+        steps += 1;
+        assert!(steps < 100);
+    }
+    // Drained: admission opens again.
+    assert!(s.submit(Request::greedy(4, vec![8, 9, 10], 4)));
+    while s.has_work() {
+        s.step().unwrap();
+        s.take_finished();
+    }
+}

@@ -262,6 +262,66 @@ fi
 echo "fleet smoke: hits prefix $prefix_hits > round-robin $rr_hits; all \
 4 shards 0 packs / 0 allocs, swap-arena peaks within cap"
 
+echo "== chaos serve smoke (supervised fleet, crash + poison) =="
+# A scripted fault plan against a 4-shard supervised fleet: shard 1 is
+# killed ten steps in, and the 4th accepted request is poisoned (fails
+# deterministically on every attempt). The supervisor must detect the
+# crash, respawn the shard, re-route its in-flight requests, and
+# quarantine the poison after the retry budget — while every other
+# request completes and every shard holds the zero-repack steady state.
+fault_plan="$(mktemp /tmp/tenx-fault-plan.XXXXXX)"
+cat > "$fault_plan" <<'EOF'
+[plan]
+seed = 42
+poison = "3"
+
+[event-0]
+step = 10
+kind = "crash"
+shard = 1
+EOF
+chaos_out="$(cargo run --release --quiet --bin tenx -- serve --native \
+    --precision f16 --vocab 64 --workload bursty --requests 24 \
+    --max-new-tokens 6 --kv-page-tokens 4 --kv-pool-pages 48 \
+    --fleet 4 --retry-budget 2 --fault-plan "$fault_plan")"
+rm -f "$fault_plan"
+rel_line="$(printf '%s\n' "$chaos_out" | grep '^fleet: reliability:' || true)"
+respawns="$(printf '%s\n' "$rel_line" \
+    | sed -n 's/.*respawns \([0-9]*\),.*/\1/p')"
+quarantined="$(printf '%s\n' "$rel_line" \
+    | sed -n 's/.*quarantined \([0-9]*\),.*/\1/p')"
+if [ -z "$respawns" ] || [ "$respawns" -lt 1 ]; then
+    echo "chaos smoke: expected >= 1 shard respawn on the reliability line"
+    printf '%s\n' "$chaos_out"
+    exit 1
+fi
+if [ "${quarantined:-0}" -ne 1 ]; then
+    echo "chaos smoke: expected exactly 1 quarantined request, got \
+${quarantined:-none}"
+    printf '%s\n' "$chaos_out"
+    exit 1
+fi
+failed_lines="$(printf '%s\n' "$chaos_out" | grep -c '^req .*FAILED' || true)"
+if [ "$failed_lines" -ne 1 ]; then
+    echo "chaos smoke: expected exactly 1 FAILED request line, got \
+$failed_lines"
+    printf '%s\n' "$chaos_out"
+    exit 1
+fi
+while IFS= read -r line; do
+    case "$line" in
+        *"packs 0 / allocs 0") ;;
+        *)
+            echo "chaos smoke: a shard broke the zero-repack steady \
+state through the respawn: $line"
+            printf '%s\n' "$chaos_out"
+            exit 1
+            ;;
+    esac
+done < <(printf '%s\n' "$chaos_out" | grep '^fleet: shard ')
+echo "chaos smoke: $respawns respawn(s), 1 request quarantined, \
+survivors completed, 0 packs / 0 allocs through the rebuild"
+
 echo "== threaded ukernel bench (quick, 2 workers) =="
 TENX_BENCH_QUICK=1 cargo bench --bench ukernel_native -- --threads 2
 
@@ -319,6 +379,9 @@ if [ "${RUN_BENCHES:-0}" = "1" ]; then
     # fleet-wide shared-prefix hits and the fleet holds the single
     # pooled host's peak concurrency at equal total pages.
     TENX_BENCH_QUICK=1 cargo bench --bench fleet_serving
+    # fault_recovery self-asserts bit-exact token streams and equal
+    # goodput through an injected shard crash on the supervised fleet.
+    TENX_BENCH_QUICK=1 cargo bench --bench fault_recovery
     echo "== tile_sweep A2d: tuned-vs-static (quick profile) =="
     profile="$(mktemp /tmp/tenx-tuning-bench.XXXXXX)"
     cargo run --release --quiet --bin tenx -- autotune --quick \
