@@ -9,6 +9,12 @@
 //!   batch lanes busy on identical memory — the serving-comparison claim
 //!   the paper's Llama-3.2-1B section is bounded by. The section also
 //!   asserts paged-vs-slab token parity.
+//! * **Sub-page prefix trie** (native backend, always runs): a
+//!   short-prompt mix whose prompts share an 8-token head inside a
+//!   16-token page — invisible to page-granular sharing — served trie-off
+//!   vs trie-on (`--prefix-trie on`). Asserts bit-exact tokens, a
+//!   strictly higher hit count, and strictly fewer prefill tokens
+//!   computed at equal pool size.
 //! * **PJRT engine rows** (requires `make artifacts`): continuous-batching
 //!   throughput/latency over the tiny-llama artifacts, both compilation
 //!   paths.
@@ -82,6 +88,78 @@ fn bench_native_paged_vs_slab(quick: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sub-page sharing head-to-head: six prompt variants share an 8-token
+/// head and diverge in their last 4 tokens, all inside one 16-token
+/// page. Page-granular sharing only matches exact repeats; the trie
+/// additionally adopts the shared head of every first-seen variant, so
+/// trie-on must show strictly more hits and strictly fewer prefill
+/// tokens computed — on bit-identical output tokens.
+fn bench_native_prefix_trie(quick: bool) -> anyhow::Result<()> {
+    let (n_req, max_new) = if quick { (24usize, 6usize) } else { (64, 6) };
+    let head: Vec<u32> = (10..18).collect();
+    let variants = 6usize;
+    let prompts: Vec<Vec<u32>> = (0..variants)
+        .map(|v| {
+            let mut p = head.clone();
+            p.extend((0..4).map(|j| 30 + (v * 7 + j) as u32));
+            p
+        })
+        .collect();
+    println!("\n== E2E serving: sub-page prefix trie (native f16, {n_req} \
+              short prompts, 8-token shared head in 16-token pages) ==");
+    let mut rows = Vec::new();
+    for (label, trie) in [("paged, trie off", false),
+                          ("paged, trie on ", true)] {
+        let backend = NativeBackend::new(16, 16, 64, 512, 64,
+                                         Precision::F16, 7);
+        let metrics = Arc::new(ServingMetrics::default());
+        let mut sched = Scheduler::with_kv(
+            backend, 256, metrics.clone(), 7,
+            KvChoice::Paged(KvCacheConfig { page_tokens: 16,
+                                            pool_pages: 32 }));
+        sched.set_prefix_trie(trie);
+        for i in 0..n_req {
+            let req = Request::greedy(i as u64,
+                                      prompts[i % variants].clone(),
+                                      max_new);
+            assert!(sched.submit(req), "queue is sized for the workload");
+        }
+        let mut outs = Vec::new();
+        let mut steps = 0usize;
+        while sched.has_work() {
+            sched.step()?;
+            steps += 1;
+            outs.extend(sched.take_finished());
+            assert!(steps < 100_000, "scheduler did not converge");
+        }
+        sched.kv_manager().unwrap().check_invariants()?;
+        let shared = metrics.kv_shared_prefix_hits.get();
+        let partial = metrics.kv_partial_prefix_hits.get();
+        let saved = metrics.kv_prefix_tokens_saved.get();
+        let prefilled = metrics.tokens_prefilled.get();
+        println!("{label:<18} hits {shared:>3} (+{partial} partial)   \
+                  prefill computed {:>4}/{prefilled} tokens   ({} saved)",
+                 prefilled - saved, saved);
+        outs.sort_by_key(|o| o.id);
+        let tokens: Vec<(u64, Vec<u32>)> =
+            outs.into_iter().map(|o| (o.id, o.tokens)).collect();
+        rows.push((tokens, shared, partial, saved, prefilled));
+    }
+    let (off, on) = (&rows[0], &rows[1]);
+    assert_eq!(off.0, on.0, "the prefix trie changed emitted tokens");
+    assert_eq!(off.2, 0, "trie-off must not count partial hits");
+    assert_eq!(off.3, 0, "trie-off must not count saved tokens");
+    assert!(on.1 + on.2 > off.1,
+            "trie-on must strictly raise the hit count ({} + {} vs {})",
+            on.1, on.2, off.1);
+    assert!(on.3 > 0 && on.4 - on.3 < off.4 - off.3,
+            "trie-on must compute strictly fewer prefill tokens \
+             ({} vs {})", on.4 - on.3, off.4 - off.3);
+    println!("token parity trie on vs off: exact ({} requests); computed \
+              prefill strictly lower", off.0.len());
+    Ok(())
+}
+
 fn bench_path(dir: &PathBuf, path: EnginePath, n_requests: usize,
               max_new: usize) -> anyhow::Result<()> {
     let tok = Tokenizer::new(512);
@@ -124,6 +202,7 @@ fn bench_path(dir: &PathBuf, path: EnginePath, n_requests: usize,
 fn main() -> anyhow::Result<()> {
     let quick = tenx_iree::bench::quick_mode();
     bench_native_paged_vs_slab(quick)?;
+    bench_native_prefix_trie(quick)?;
 
     let dir = PathBuf::from("artifacts");
     if !dir.join("manifest.txt").exists() {

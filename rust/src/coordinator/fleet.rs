@@ -118,6 +118,12 @@ impl FleetRouter {
         self
     }
 
+    /// The routing-key truncation window (callers probing shard caches
+    /// must cap their probe tokens identically or affinity drifts).
+    pub fn prompt_cap(&self) -> usize {
+        self.prompt_cap
+    }
+
     pub fn policy(&self) -> RouterPolicy {
         self.policy
     }
@@ -147,6 +153,33 @@ impl FleetRouter {
                     .expect("shards >= 1")
             }
         }
+    }
+
+    /// Trie-aware placement (`--prefix-trie on` fleets): prefer the
+    /// shard whose published trie covers the deepest head of `prompt`
+    /// (`coverage[s]`, in tokens); break coverage ties toward the least
+    /// loaded shard (`loads[s]`), then rendezvous-hash among shards
+    /// still tied, so a cold fleet (all-zero coverage, equal load)
+    /// spreads exactly like plain prefix routing. The load tiebreak is
+    /// the hot-prefix fix: page-aligned rendezvous pins every carrier
+    /// of a popular prefix to one shard, while here a second shard that
+    /// has *also* published the prefix (after a respawn, or from its
+    /// own earlier traffic) wins the moment it is less loaded.
+    /// RoundRobin fleets ignore the probes and keep rotating.
+    pub fn route_trie(&self, prompt: &[u32], coverage: &[usize],
+                      loads: &[u64]) -> usize {
+        if self.policy != RouterPolicy::Prefix {
+            return self.route(prompt);
+        }
+        debug_assert_eq!(coverage.len(), self.shards);
+        debug_assert_eq!(loads.len(), self.shards);
+        let capped = &prompt[..prompt.len().min(self.prompt_cap)];
+        let toks: Vec<i32> = capped.iter().map(|&t| t as i32).collect();
+        let key = prefix_key(&toks, self.page_tokens);
+        (0..self.shards)
+            .max_by_key(|&s| (coverage[s], std::cmp::Reverse(loads[s]),
+                              chain_hash(key, &[s as i32]), s))
+            .expect("shards >= 1")
     }
 }
 
@@ -214,6 +247,7 @@ pub fn fleet_report(policy: RouterPolicy, routed: &[u64],
     let (mut sub, mut comp, mut hits, mut evic, mut pre, mut blocked) =
         (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
     let (mut peak, mut dec) = (0u64, 0u64);
+    let (mut part, mut saved) = (0u64, 0u64);
     for (i, m) in shards.iter().enumerate() {
         sub += m.requests_submitted.get();
         comp += m.requests_completed.get();
@@ -223,23 +257,30 @@ pub fn fleet_report(policy: RouterPolicy, routed: &[u64],
         blocked += m.preempt_swap_blocked.get();
         peak = peak.max(m.swap_arena_pages_peak.get());
         dec += m.tokens_decoded.get();
+        part += m.kv_partial_prefix_hits.get();
+        saved += m.kv_prefix_tokens_saved.get();
+        // `partial` sits *before* the trailing `packs P / allocs A` so
+        // the ci.sh zero-repack case-match on the line suffix survives.
         s.push_str(&format!(
             "fleet: shard {i}: {} submitted, {} completed, {} rejected, \
              {} cancelled, hits {}, evictions {}, preemptions {}, arena \
-             peak {}/{}, packs {} / allocs {}\n",
+             peak {}/{}, partial {}, packs {} / allocs {}\n",
             m.requests_submitted.get(), m.requests_completed.get(),
             m.queue_rejections.get(), m.requests_cancelled.get(),
             m.kv_shared_prefix_hits.get(), m.kv_evictions.get(),
             m.preemptions.get(), m.swap_arena_pages_peak.get(),
-            m.swap_arena_pages_cap.get(), m.decode_rhs_packs.get(),
-            m.decode_scratch_allocs.get()));
+            m.swap_arena_pages_cap.get(), m.kv_partial_prefix_hits.get(),
+            m.decode_rhs_packs.get(), m.decode_scratch_allocs.get()));
     }
     let cap = shards.iter().map(|m| m.swap_arena_pages_cap.get())
         .max().unwrap_or(0);
+    // The trie fields are worded without "hits" so the ci.sh greedy sed
+    // on `hits N,` still captures the shared-prefix count.
     s.push_str(&format!(
         "fleet: total: {sub} submitted, {comp} completed, hits {hits}, \
-         evictions {evic}, preemptions {pre}, swap-blocked {blocked}, \
-         arena peak {peak} (cap {cap}/shard), decode tokens {dec}\n"));
+         partial {part}, saved {saved}, evictions {evic}, preemptions \
+         {pre}, swap-blocked {blocked}, arena peak {peak} (cap \
+         {cap}/shard), decode tokens {dec}\n"));
     let (mut inj, mut det, mut be, mut fail, mut retr) = (0u64, 0, 0, 0, 0);
     let (mut resp, mut quar, mut dk, mut shed) = (0u64, 0, 0, 0);
     for m in shards.iter().copied().chain(supervisor) {
@@ -332,6 +373,11 @@ pub struct FleetScheduler<B: ModelBackend> {
     shards: Vec<Scheduler<B>>,
     router: FleetRouter,
     routed: Vec<u64>,
+    /// Probe shard tries at placement time ([`FleetRouter::route_trie`]).
+    /// Only the lockstep fleet can afford this — it owns its shards, so
+    /// the probe is a direct call; the threaded tiers keep page-aligned
+    /// rendezvous (their shards live behind worker threads).
+    trie_routing: bool,
     supervision: Option<Supervision<B>>,
 }
 
@@ -349,7 +395,39 @@ impl<B: ModelBackend> FleetScheduler<B> {
         let router =
             FleetRouter::new(policy, n, pt).with_prompt_cap(cap);
         FleetScheduler { shards, router, routed: vec![0; n],
-                         supervision: None }
+                         trie_routing: false, supervision: None }
+    }
+
+    /// Enable the sub-page prefix trie on every shard and switch prefix
+    /// placement to trie-aware routing (deepest shard coverage first,
+    /// coverage ties to the least-loaded shard). Off restores plain
+    /// page-aligned rendezvous and legacy shard caches, bit-identically.
+    pub fn set_prefix_trie(&mut self, on: bool) {
+        self.trie_routing = on;
+        for s in &mut self.shards {
+            s.set_prefix_trie(on);
+        }
+    }
+
+    /// The submission path's placement decision. With trie routing on,
+    /// every shard's published trie is probed for its coverage of the
+    /// (cap-truncated) prompt and current load is the tiebreak; off, the
+    /// pure rendezvous router decides alone.
+    fn pick_shard(&self, prompt: &[u32]) -> usize {
+        if !self.trie_routing {
+            return self.router.route(prompt);
+        }
+        let cap = prompt.len().min(self.router.prompt_cap());
+        let toks: Vec<i32> =
+            prompt[..cap].iter().map(|&t| t as i32).collect();
+        let coverage: Vec<usize> = self.shards.iter()
+            .map(|s| s.kv_manager()
+                .map_or(0, |kv| kv.trie_coverage(&toks)))
+            .collect();
+        let loads: Vec<u64> = self.shards.iter()
+            .map(|s| (s.active_count() + s.pending_count()) as u64)
+            .collect();
+        self.router.route_trie(prompt, &coverage, &loads)
     }
 
     /// A supervised fleet: `rebuild(i)` constructs shard `i`'s scheduler
@@ -402,9 +480,9 @@ impl<B: ModelBackend> FleetScheduler<B> {
     }
 
     /// The shard `prompt` would land on (tests probe the router through
-    /// the same path submissions take).
+    /// the same path submissions take — trie-aware when enabled).
     pub fn route(&self, prompt: &[u32]) -> usize {
-        self.router.route(prompt)
+        self.pick_shard(prompt)
     }
 
     /// Route and enqueue; false = the owning shard's queue rejected it.
@@ -412,7 +490,7 @@ impl<B: ModelBackend> FleetScheduler<B> {
     /// register every accepted request for retry accounting.
     pub fn submit(&mut self, mut req: Request) -> bool {
         if self.supervision.is_none() {
-            let s = self.router.route(&req.prompt);
+            let s = self.pick_shard(&req.prompt);
             let ok = self.shards[s].submit(req);
             if ok {
                 self.routed[s] += 1;
@@ -428,7 +506,7 @@ impl<B: ModelBackend> FleetScheduler<B> {
                 false
             }
         };
-        let s = self.router.route(&req.prompt);
+        let s = self.pick_shard(&req.prompt);
         let id = req.id;
         let flight = Flight { req: req.clone(), attempts: 0,
                               cancelled: false, shard: Some(s) };
@@ -596,7 +674,10 @@ impl<B: ModelBackend> FleetScheduler<B> {
                     None => continue,
                 }
             };
-            let s = self.router.route(&req.prompt);
+            // Re-route rather than replay the crashed placement: with
+            // trie routing on, a respawned shard's empty trie loses the
+            // coverage comparison and the retry lands on a warm shard.
+            let s = self.pick_shard(&req.prompt);
             let ok = self.shards[s].submit(req);
             let sup = self.supervision.as_mut().expect("supervised");
             if ok {
@@ -621,6 +702,10 @@ impl<B: ModelBackend> FleetScheduler<B> {
         sup.metrics.shard_respawns.inc();
         let mut fresh = (sup.rebuild)(i);
         fresh.set_shard_index(i);
+        // The factory predates the fleet's runtime toggles, so the trie
+        // flag must be re-applied or a respawned shard silently drops
+        // back to page-granular sharing.
+        fresh.set_prefix_trie(self.trie_routing);
         // Respawns serve fault-free: the plan scripts the original
         // incarnation only, so a scripted crash can't become a crash
         // loop.
@@ -1457,6 +1542,78 @@ mod tests {
         let p: Vec<u32> = vec![5, 6, 7];
         let seen: Vec<usize> = (0..6).map(|_| f.route(&p)).collect();
         assert_eq!(seen, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn route_trie_breaks_coverage_ties_toward_the_least_loaded_shard() {
+        let r = FleetRouter::new(RouterPolicy::Prefix, 4, 4);
+        let p: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        // Zero knowledge degrades to plain rendezvous — the golden
+        // placement pin carries over unchanged.
+        assert_eq!(r.route(&p), 0, "golden-stream rendezvous pin");
+        assert_eq!(r.route_trie(&p, &[0; 4], &[0; 4]), 0);
+        // Deepest coverage wins outright, regardless of load.
+        assert_eq!(r.route_trie(&p, &[0, 6, 0, 4], &[9, 9, 0, 0]), 1);
+        // Coverage tie: the least-loaded shard takes it (the hot-prefix
+        // pinning fix).
+        assert_eq!(r.route_trie(&p, &[6, 6, 0, 0], &[3, 1, 0, 0]), 1);
+        // Full tie: rendezvous decides, deterministically.
+        assert_eq!(r.route_trie(&p, &[6; 4], &[2; 4]), 0);
+        // Round-robin fleets ignore the probes and keep rotating.
+        let rr = FleetRouter::new(RouterPolicy::RoundRobin, 4, 4);
+        assert_eq!(rr.route_trie(&p, &[9, 0, 0, 0], &[0; 4]), 0);
+        assert_eq!(rr.route_trie(&p, &[9, 0, 0, 0], &[0; 4]), 1);
+    }
+
+    #[test]
+    fn a_hot_prefix_spreads_by_load_instead_of_pinning_one_shard() {
+        // Trie off: one shared prompt rendezvous-pins every submission
+        // to a single shard (the ROADMAP "hot prefix" complaint).
+        let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let mut g = fleet(4, RouterPolicy::Prefix);
+        for id in 1..=8u64 {
+            assert!(g.submit(Request::greedy(id, prompt.clone(), 4)));
+        }
+        assert_eq!(g.routed.iter().filter(|&&n| n > 0).count(), 1,
+                   "legacy routing pins the hot prefix: {:?}", g.routed);
+        let want = drive(&mut g);
+
+        // Trie on: cold probes tie at zero coverage, so queue depth
+        // spreads the same eight submissions across all four shards —
+        // and the streams stay bit-exact, placement never leaks into
+        // tokens.
+        let mut f = fleet(4, RouterPolicy::Prefix);
+        f.set_prefix_trie(true);
+        for id in 1..=8u64 {
+            assert!(f.submit(Request::greedy(id, prompt.clone(), 4)));
+        }
+        assert!(f.routed.iter().all(|&n| n >= 1),
+                "trie routing spreads the hot prefix: {:?}", f.routed);
+        let got = drive(&mut f);
+        assert_eq!(got.len(), 8);
+        for o in &got {
+            let w = want.iter().find(|w| w.id == o.id).unwrap();
+            assert_eq!(o.tokens, w.tokens,
+                       "req {} placement must not change tokens", o.id);
+        }
+        f.check_invariants().unwrap();
+        assert_eq!(f.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn trie_routing_follows_the_shard_that_published_the_prefix() {
+        let mut f = fleet(2, RouterPolicy::Prefix);
+        f.set_prefix_trie(true);
+        let p: Vec<u32> = vec![9, 9, 9, 9, 9];
+        assert!(f.submit(Request::greedy(1, p.clone(), 2)));
+        let s0 = f.routed.iter().position(|&n| n > 0).unwrap();
+        drive(&mut f);
+        // A prompt sharing the full first page follows the warm shard —
+        // its trie covers 4 tokens (the sub-page tail node was consumed
+        // by the sole-owner decode extend), the cold shard covers 0 —
+        // independent of what plain rendezvous would have picked.
+        let p2: Vec<u32> = vec![9, 9, 9, 9, 9, 1, 2];
+        assert_eq!(f.route(&p2), s0, "deepest trie coverage wins");
     }
 
     #[test]

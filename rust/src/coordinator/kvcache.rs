@@ -30,6 +30,16 @@
 //!   future prompts); unpublished pages return to the free list. When the
 //!   pool runs dry, allocation evicts the least-recently-used zero-ref
 //!   cached page.
+//! * **Sub-page prefix trie** (opt-in, `--prefix-trie on`). The chained
+//!   cache *is* a token-level radix trie: entries are nodes pinning
+//!   `(page, token run)`, parent keys are edges. With the trie enabled,
+//!   a prompt chunk that misses its exact key adopts the longest partial
+//!   head published under the same parent — a zero-ref source page is
+//!   unpublished and extended in place (sole-owner rule), a referenced
+//!   one is copy-truncated onto a private page — so short prompts and
+//!   ragged tails share what the page-granular path recomputes. Off (the
+//!   default) is bit-identical to the legacy behavior; docs/KVCACHE.md
+//!   "Sub-page sharing" has the invariants.
 //!
 //! Admission is priced in pages, not slots: an admitted sequence *reserves*
 //! pages and the scheduler admits while `Σ reserved ≤ pool`. Two
@@ -211,6 +221,33 @@ pub struct PromptAllocStats {
     pub evictions: u64,
     /// Fresh pages allocated (not shared).
     pub pages_allocated: u64,
+    /// Sub-page partial-prefix adoptions (trie path; at most one per
+    /// missed chunk). Always 0 while the trie is disabled.
+    pub partial_hits: u64,
+    /// Prompt tokens adopted from the cache: full-page hits plus partial
+    /// matched heads. Only counted while the trie is enabled, so trie-off
+    /// stats stay bit-identical to the legacy path.
+    pub tokens_covered: u64,
+}
+
+/// What [`KvCacheManager::trie_probe`] found for one prompt: the deepest
+/// walk of the sub-page prefix trie (the parent-linked published cache —
+/// nodes are cache entries pinning `(page, token run)`, edges are the
+/// runs themselves) that the prompt's token stream covers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TrieMatch {
+    /// Prompt tokens covered: fully-matched chunks plus the partial head
+    /// of the first diverging chunk.
+    pub covered: usize,
+    /// Chain key of the deepest fully-matched node ([`PREFIX_SEED`] when
+    /// the first chunk already diverges).
+    pub deepest_key: u64,
+    /// Pages the prompt would adopt whole (exact chunk hits, in order).
+    pub full_pages: Vec<PageId>,
+    /// The partial match, if any: (page, matched head length) of the
+    /// child whose token run shares the longest head with the first
+    /// diverging chunk.
+    pub partial: Option<(PageId, usize)>,
 }
 
 /// What one decode-append did (step-side metric deltas).
@@ -281,6 +318,14 @@ pub struct KvCacheManager {
     /// Worst-case page reservation per slot (admission accounting).
     reserved: Vec<usize>,
     reserved_total: usize,
+    /// Sub-page prefix trie enabled (`--prefix-trie on`). Off by default:
+    /// the legacy page-granular path, bit-identical to PR 5.
+    trie_enabled: bool,
+    /// Trie child index over the published cache: parent key → child keys
+    /// (sorted). Maintained at every publish/unpublish regardless of
+    /// `trie_enabled` (pure bookkeeping, no behavioral effect while off),
+    /// so toggling the trie never sees a stale index.
+    trie_children: BTreeMap<u64, Vec<u64>>,
 }
 
 /// Seed of the prefix-hash chain (the "parent" of a sequence's first page).
@@ -351,7 +396,21 @@ impl KvCacheManager {
             tick: 0,
             reserved: vec![0; batch],
             reserved_total: 0,
+            trie_enabled: false,
+            trie_children: BTreeMap::new(),
         })
+    }
+
+    /// Enable or disable the sub-page prefix trie. Off (the default) is
+    /// the bit-identical legacy path: allocation never consults the trie
+    /// and [`PromptAllocStats`] trie fields stay zero.
+    pub fn set_prefix_trie(&mut self, on: bool) {
+        self.trie_enabled = on;
+    }
+
+    /// Is the sub-page prefix trie enabled?
+    pub fn prefix_trie_enabled(&self) -> bool {
+        self.trie_enabled
     }
 
     /// Token positions per page.
@@ -480,6 +539,112 @@ impl KvCacheManager {
         self.tables.copies.clear();
     }
 
+    /// Drop the trie child link `parent → key`. Tolerant of missing
+    /// links: cache entries planted without a link (collision tests)
+    /// simply are not in the trie.
+    fn trie_unlink(&mut self, parent: u64, key: u64) {
+        if let Some(kids) = self.trie_children.get_mut(&parent) {
+            kids.retain(|&k| k != key);
+            if kids.is_empty() {
+                self.trie_children.remove(&parent);
+            }
+        }
+    }
+
+    /// The best partial match for `chunk` under `parent`: among the
+    /// published children of `parent`, the one whose token run shares the
+    /// longest nonempty head with `chunk` (ties break to the smallest
+    /// child key — deterministic, content-derived). Returns
+    /// `(matched head length, child key, child page)`.
+    fn trie_best_child(&self, parent: u64,
+                       chunk: &[i32]) -> Option<(usize, u64, PageId)> {
+        let kids = self.trie_children.get(&parent)?;
+        let mut best: Option<(usize, u64, PageId)> = None;
+        for &k in kids {
+            let Some(c) = self.cache.get(&k) else { continue };
+            let lcp = c.tokens.iter().zip(chunk.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            if lcp == 0 {
+                continue;
+            }
+            if best.map_or(true, |(bl, bk, _)| lcp > bl
+                || (lcp == bl && k < bk))
+            {
+                best = Some((lcp, k, c.page));
+            }
+        }
+        best
+    }
+
+    /// Walk the sub-page prefix trie with `tokens`: adopt every exactly-
+    /// matched chunk, then the longest partial head of the first
+    /// diverging chunk. Pure (no state change) and independent of
+    /// [`KvCacheManager::set_prefix_trie`] — the fleet router probes
+    /// shard caches through this to place a prompt on the shard holding
+    /// its deepest match.
+    pub fn trie_probe(&self, tokens: &[i32]) -> TrieMatch {
+        let mut m = TrieMatch { deepest_key: PREFIX_SEED,
+                                ..TrieMatch::default() };
+        let mut parent = PREFIX_SEED;
+        for chunk in tokens.chunks(self.page_tokens) {
+            let key = chain_hash(parent, chunk);
+            let hit = self.cache.get(&key).and_then(|c| {
+                (c.parent == parent && c.tokens == chunk).then_some(c.page)
+            });
+            if let Some(page) = hit {
+                m.covered += chunk.len();
+                m.deepest_key = key;
+                m.full_pages.push(page);
+                parent = key;
+                continue;
+            }
+            if let Some((lcp, _, page)) = self.trie_best_child(parent, chunk)
+            {
+                m.covered += lcp;
+                m.partial = Some((page, lcp));
+            }
+            break;
+        }
+        m
+    }
+
+    /// Prompt tokens of `tokens` the trie currently covers (the routing
+    /// depth the fleet compares across shards).
+    pub fn trie_coverage(&self, tokens: &[i32]) -> usize {
+        self.trie_probe(tokens).covered
+    }
+
+    /// Published trie nodes (= prefix-cache entries; each pins one page
+    /// and its token run).
+    pub fn trie_nodes(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Deepest chain in the published trie, in pages. Orphaned nodes
+    /// (parent evicted first) restart their count — they are unreachable
+    /// from the root walk anyway.
+    pub fn trie_depth(&self) -> usize {
+        let mut max = 0usize;
+        for c0 in self.cache.values() {
+            let mut d = 1usize;
+            let mut parent = c0.parent;
+            let mut hops = 0usize;
+            while parent != PREFIX_SEED && hops <= self.cache.len() {
+                match self.cache.get(&parent) {
+                    Some(c) => {
+                        d += 1;
+                        parent = c.parent;
+                    }
+                    None => break,
+                }
+                hops += 1;
+            }
+            max = max.max(d);
+        }
+        max
+    }
+
     /// Allocate one page: free list first, else evict the LRU zero-ref
     /// cached page. Errors only when every page is referenced by a live
     /// sequence — impossible under reservation-gated admission.
@@ -495,7 +660,9 @@ impl KvCacheManager {
                  admission reservations should make this unreachable",
                 self.pool_pages))?;
         let key = self.page_key[victim].take().expect("victim is cached");
-        self.cache.remove(&key);
+        if let Some(c) = self.cache.remove(&key) {
+            self.trie_unlink(c.parent, key);
+        }
         *evictions += 1;
         Ok(victim)
     }
@@ -530,12 +697,62 @@ impl KvCacheManager {
                     self.tick += 1;
                     self.last_use[page] = self.tick;
                     stats.shared_hits += 1;
+                    if self.trie_enabled {
+                        stats.tokens_covered += chunk.len() as u64;
+                    }
                     page
                 }
                 None => {
-                    let page = self.alloc_page(&mut stats.evictions)?;
-                    self.ref_count[page] = 1;
-                    stats.pages_allocated += 1;
+                    // Sub-page trie: before allocating, adopt the longest
+                    // partial head published under this parent. A zero-ref
+                    // (cache-owned) source extends in place — unpublish,
+                    // reuse the physical page, truncate to the matched
+                    // head (the sub-page analogue of `append_token`'s
+                    // sole-owner path). A referenced source copies: the
+                    // adopter gets a private page. No physical copy is
+                    // scheduled either way — `commit_slots_kv` rewrites
+                    // every committed prompt position, so the matched
+                    // head's bytes arrive with the commit; a
+                    // partial-prefill backend would memcpy the head and
+                    // skip recomputing it (that skip is what
+                    // `tokens_covered` accounts).
+                    let partial = if self.trie_enabled {
+                        self.trie_best_child(parent, chunk)
+                    } else {
+                        None
+                    };
+                    let page = match partial {
+                        Some((lcp, child_key, src))
+                            if self.ref_count[src] == 0 =>
+                        {
+                            let k = self.page_key[src].take()
+                                .expect("cached page carries its key");
+                            debug_assert_eq!(k, child_key);
+                            if let Some(c) = self.cache.remove(&k) {
+                                self.trie_unlink(c.parent, k);
+                            }
+                            self.ref_count[src] = 1;
+                            stats.partial_hits += 1;
+                            stats.tokens_covered += lcp as u64;
+                            src
+                        }
+                        Some((lcp, _, _)) => {
+                            let page =
+                                self.alloc_page(&mut stats.evictions)?;
+                            self.ref_count[page] = 1;
+                            stats.pages_allocated += 1;
+                            stats.partial_hits += 1;
+                            stats.tokens_covered += lcp as u64;
+                            page
+                        }
+                        None => {
+                            let page =
+                                self.alloc_page(&mut stats.evictions)?;
+                            self.ref_count[page] = 1;
+                            stats.pages_allocated += 1;
+                            page
+                        }
+                    };
                     // Publish unless the key is (collision-)occupied.
                     // Caching the partial tail (keyed by the exact full
                     // prompt) is safe: a second sharer's append copies on
@@ -552,6 +769,11 @@ impl KvCacheManager {
                         self.page_key[page] = Some(key);
                         self.tick += 1;
                         self.last_use[page] = self.tick;
+                        let kids =
+                            self.trie_children.entry(parent).or_default();
+                        if let Err(i) = kids.binary_search(&key) {
+                            kids.insert(i, key);
+                        }
                     }
                     page
                 }
@@ -628,7 +850,9 @@ impl KvCacheManager {
                 // accounting: the *last* sharer never needs a page, so a
                 // sequence never owns more distinct pages than its
                 // reservation (docs/KVCACHE.md).
-                self.cache.remove(&key);
+                if let Some(c) = self.cache.remove(&key) {
+                    self.trie_unlink(c.parent, key);
+                }
             }
         }
         self.tables.lens[slot] = pos + 1;
@@ -1327,5 +1551,142 @@ mod tests {
         assert!(m.try_reserve(2, 8));
         assert_eq!(m.allocate_prompt(2, &prompt).unwrap().shared_hits, 2);
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trie_match_is_pinned_on_the_golden_stream() {
+        // Satellite of the prefix_key golden pin: the trie walk is part
+        // of the same wire-format-grade contract — the fleet router
+        // places prompts by deepest trie match, so (deepest node key,
+        // covered token count, adopted page list) must never silently
+        // change. Values mirrored by an independent FNV-1a
+        // implementation.
+        let golden: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let mut m = mgr(4, 8, 2);
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &golden).unwrap(); // pages 0, 1
+        m.free_slot(0); // both zero-ref cached
+        m.set_prefix_trie(true);
+
+        // Probe a prompt sharing page 0 exactly and 2 of page 1's 4.
+        let probe: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 7, 7];
+        let t = m.trie_probe(&probe);
+        assert_eq!(t.covered, 6, "4 exact + 2 partial");
+        assert_eq!(t.deepest_key, 0xcf80_6b67_d04e_0873,
+                   "deepest fully-matched node = golden chunk-1 key");
+        assert_eq!(t.full_pages, vec![0]);
+        assert_eq!(t.partial, Some((1, 2)));
+        // The partial source's own key is the two-chunk chain — the same
+        // 0x0d76… constant prefix_key pins.
+        assert_eq!(chain_hash(t.deepest_key, &golden[4..]),
+                   0x0d76_9f9e_f618_649b);
+        assert_eq!(m.trie_nodes(), 2);
+        assert_eq!(m.trie_depth(), 2);
+
+        // Allocating the probe adopts page 0 whole and page 1 in place
+        // (zero-ref source → sole-owner extend), allocating nothing.
+        assert!(m.try_reserve(1, 8));
+        let st = m.allocate_prompt(1, &probe).unwrap();
+        assert_eq!(st.shared_hits, 1);
+        assert_eq!(st.partial_hits, 1);
+        assert_eq!(st.tokens_covered, 6);
+        assert_eq!(st.pages_allocated, 0, "both pages adopted");
+        assert_eq!(m.tables().tables[1], vec![0, 1]);
+        assert!(!m.prefix_cached(&golden),
+                "the truncated source left the cache");
+        assert!(m.prefix_cached(&probe),
+                "the adopter republished under its own chain");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trie_partial_adopt_copies_when_the_source_is_shared() {
+        let golden: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let mut m = mgr(4, 8, 2);
+        m.set_prefix_trie(true);
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &golden).unwrap(); // slot 0 stays live
+        assert!(m.try_reserve(1, 8));
+        let st = m.allocate_prompt(1, &[3, 1, 4, 1, 5, 9, 7, 7]).unwrap();
+        assert_eq!(st.shared_hits, 1);
+        assert_eq!(st.partial_hits, 1);
+        assert_eq!(st.tokens_covered, 6);
+        assert_eq!(st.pages_allocated, 1,
+                   "a referenced source copy-truncates onto a fresh page");
+        assert_eq!(m.tables().tables[1], vec![0, 2]);
+        assert_eq!(m.tables().tables[0], vec![0, 1],
+                   "the source sequence's table never moves");
+        assert!(m.prefix_cached(&golden),
+                "a shared source stays published");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trie_off_stays_bit_identical_to_the_legacy_path() {
+        let golden: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let mut m = mgr(4, 8, 2);
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &golden).unwrap();
+        m.free_slot(0);
+        // Trie off (default): the diverging chunk allocates fresh — no
+        // adoption, no trie stats.
+        assert!(m.try_reserve(1, 8));
+        let st = m.allocate_prompt(1, &[3, 1, 4, 1, 5, 9, 7, 7]).unwrap();
+        assert_eq!(st.shared_hits, 1);
+        assert_eq!(st.partial_hits, 0);
+        assert_eq!(st.tokens_covered, 0);
+        assert_eq!(st.pages_allocated, 1);
+        assert_ne!(m.tables().tables[1][1], 1,
+                   "the cached source page is not adopted");
+        assert!(m.prefix_cached(&golden));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trie_tie_breaks_to_the_smallest_child_key() {
+        // Two children under the same parent share the probe's first two
+        // tokens: the adopter must pick deterministically — the smaller
+        // key (0x0d76… < 0x0e61…, mirror-validated), i.e. [5,9,2,6]'s
+        // page.
+        let mut m = mgr(4, 8, 3);
+        m.set_prefix_trie(true);
+        assert!(m.try_reserve(0, 8));
+        m.allocate_prompt(0, &[3, 1, 4, 1, 5, 9, 2, 6]).unwrap();
+        assert!(m.try_reserve(1, 8));
+        m.allocate_prompt(1, &[3, 1, 4, 1, 5, 9, 3, 3]).unwrap();
+        assert_eq!(chain_hash(0xcf80_6b67_d04e_0873, &[5, 9, 3, 3]),
+                   0x0e61_34bf_9a35_c94f);
+        let t = m.trie_probe(&[3, 1, 4, 1, 5, 9, 7, 7]);
+        assert_eq!(t.partial, Some((1, 2)),
+                   "lcp ties resolve to the smaller child key");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trie_index_survives_eviction_and_unpublish() {
+        let mut m = mgr(2, 3, 1);
+        m.set_prefix_trie(true);
+        assert!(m.try_reserve(0, 4));
+        m.allocate_prompt(0, &[1, 2, 3, 4]).unwrap();
+        m.free_slot(0);
+        assert_eq!(m.trie_nodes(), 2);
+        assert_eq!(m.trie_depth(), 2);
+        // Pressure evicts both cached pages; the trie must forget them.
+        assert!(m.try_reserve(0, 6));
+        let st = m.allocate_prompt(0, &[7, 8, 9, 9, 9]).unwrap();
+        assert_eq!(st.evictions, 2);
+        assert_eq!(st.partial_hits, 0, "evicted runs are unmatchable");
+        m.free_slot(0);
+        // Sole-owner decode extend also unpublishes trie nodes.
+        let mut m2 = mgr(2, 3, 1);
+        m2.set_prefix_trie(true);
+        assert!(m2.try_reserve(0, 4));
+        m2.allocate_prompt(0, &[1, 2, 3]).unwrap();
+        assert_eq!(m2.trie_nodes(), 2);
+        m2.append_token(0).unwrap(); // unpublishes the [3] tail node
+        assert_eq!(m2.trie_nodes(), 1);
+        let t = m2.trie_probe(&[1, 2, 3]);
+        assert_eq!(t.covered, 2, "only the intact [1,2] node matches");
+        m2.check_invariants().unwrap();
     }
 }

@@ -314,6 +314,17 @@ impl<B: ModelBackend> Scheduler<B> {
         self.shed_queue_depth = depth;
     }
 
+    /// Enable the sub-page prefix trie on the paged KV cache
+    /// (`--prefix-trie on`). No effect on the slab layout; off (the
+    /// default) keeps admission bit-identical to the legacy page-granular
+    /// path. Toggling mid-flight is legal — the trie's child index is
+    /// maintained unconditionally, so it is never stale.
+    pub fn set_prefix_trie(&mut self, on: bool) {
+        if let Some(kv) = &mut self.kv {
+            kv.set_prefix_trie(on);
+        }
+    }
+
     /// The paged KV manager, when serving paged (tests / invariant audits).
     pub fn kv_manager(&self) -> Option<&KvCacheManager> {
         self.kv.as_ref()
@@ -708,6 +719,12 @@ impl<B: ModelBackend> Scheduler<B> {
                     })?;
                 self.metrics.kv_shared_prefix_hits.add(st.shared_hits);
                 self.metrics.kv_evictions.add(st.evictions);
+                self.metrics.kv_partial_prefix_hits.add(st.partial_hits);
+                // The last prompt position is always computed (its logits
+                // sample the first token), so a fully-covered prompt still
+                // costs one position.
+                self.metrics.kv_prefix_tokens_saved.add(
+                    st.tokens_covered.min(plen.saturating_sub(1) as u64));
             }
             for (slot, seq) in &resumed {
                 let st = kv
@@ -720,6 +737,10 @@ impl<B: ModelBackend> Scheduler<B> {
                     })?;
                 self.metrics.kv_shared_prefix_hits.add(st.shared_hits);
                 self.metrics.kv_evictions.add(st.evictions);
+                self.metrics.kv_partial_prefix_hits.add(st.partial_hits);
+                self.metrics.kv_prefix_tokens_saved.add(
+                    st.tokens_covered
+                        .min(seq.prompt_len.saturating_sub(1) as u64));
             }
         }
         let t0 = Instant::now();
@@ -1384,6 +1405,10 @@ impl<B: ModelBackend> Scheduler<B> {
         if let Some(kv) = &self.kv {
             self.metrics.kv_pages_in_use.set(kv.pages_in_use() as u64);
             self.metrics.kv_pages_cached.set(kv.pages_cached() as u64);
+            if kv.prefix_trie_enabled() {
+                self.metrics.kv_trie_nodes.set(kv.trie_nodes() as u64);
+                self.metrics.kv_trie_depth.set(kv.trie_depth() as u64);
+            }
         }
     }
 

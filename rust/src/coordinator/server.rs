@@ -45,6 +45,9 @@ pub struct SchedulerOptions {
     pub deadline: Option<Duration>,
     /// Load-shedding admission threshold (`--shed-queue-depth`; 0 = off).
     pub shed_queue_depth: usize,
+    /// Sub-page prefix trie on the paged KV cache (`--prefix-trie`;
+    /// false = bit-identical legacy page-granular sharing).
+    pub prefix_trie: bool,
 }
 
 impl Default for SchedulerOptions {
@@ -58,6 +61,7 @@ impl Default for SchedulerOptions {
             shard_index: 0,
             deadline: None,
             shed_queue_depth: 0,
+            prefix_trie: false,
         }
     }
 }
@@ -333,6 +337,7 @@ fn worker_loop<B: ModelBackend>(backend: B, queue_capacity: usize, seed: u64,
     sched.set_shard_index(opts.shard_index);
     sched.set_deadline_default(opts.deadline);
     sched.set_shed_queue_depth(opts.shed_queue_depth);
+    sched.set_prefix_trie(opts.prefix_trie);
     let mut waiters: Vec<(RequestId, Sender<RequestOutput>)> = Vec::new();
     let mut shutting_down = false;
     loop {

@@ -286,6 +286,12 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
              "load-shedding admission: reject new submissions while a \
               shard's pending queue is at least this deep (0 = off; see \
               the report's reliability: shed counters)")
+        .opt("prefix-trie", "off",
+             "sub-page prefix trie on the paged KV cache: on (prompts \
+              adopt cached pages at token granularity — partial page \
+              heads included — and report partial hits / tokens saved) \
+              | off (page-granular sharing, bit-identical legacy \
+              behavior)")
         .flag("native", "serve the native-ukernel backend (no artifacts/PJRT)")
         .flag("baseline", "serve the non-mmt4d baseline artifacts");
     let m = cmd.parse(argv)?;
@@ -333,6 +339,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .then(|| Duration::from_millis(deadline_ms));
     let retry_budget: u32 = m.parse("retry-budget")?;
     let shed_queue_depth: usize = m.usize("shed-queue-depth")?;
+    let prefix_trie = parse_one_of(m.str("prefix-trie"), "--prefix-trie",
+                                   &["on", "off"])? == "on";
     let workload = m.str("workload");
     let mix = if workload.is_empty() {
         None
@@ -410,7 +418,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
                                       preempt_mode, swap_arena_pages,
                                       fault_plan: fault_plan.clone(),
                                       shard_index: 0, deadline,
-                                      shed_queue_depth };
+                                      shed_queue_depth, prefix_trie };
         let front = if fault_plan.is_some() {
             // A fault plan engages the self-healing supervised fleet:
             // worker-liveness + heartbeat watching, drain-and-respawn
@@ -515,6 +523,11 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             eprintln!("note: --admission/--preempt-mode apply to the \
                        native paged scheduler; the artifact engine serves \
                        the slab layout (no preemption)");
+        }
+        if prefix_trie {
+            eprintln!("note: --prefix-trie applies to the native paged KV \
+                       cache; the artifact engine serves the slab layout \
+                       (no prefix sharing to refine)");
         }
         if mix.is_some() {
             eprintln!("note: --workload drives the native demo model; the \

@@ -164,6 +164,21 @@ pub struct ServingMetrics {
     /// page-reservation headroom — the signal that pages, not slots, are
     /// the bottleneck.
     pub kv_admission_blocked: Counter,
+    /// Sub-page partial-prefix adoptions (`--prefix-trie on`): prompt
+    /// pages whose *head* was adopted from the trie even though the full
+    /// page diverged. Always 0 while the trie is off.
+    pub kv_partial_prefix_hits: Counter,
+    /// Prompt tokens whose prefill KV was covered by the trie (full-page
+    /// hits plus partial matched heads, capped per prompt so the sampled
+    /// last position is always counted as computed) — subtract from
+    /// `tokens_prefilled` for the prefill tokens actually computed.
+    pub kv_prefix_tokens_saved: Counter,
+    /// Published trie nodes (= prefix-cache entries) at the last gauge
+    /// sync. Only set while the trie is enabled.
+    pub kv_trie_nodes: Gauge,
+    /// Deepest published trie chain, in pages. Only set while the trie is
+    /// enabled.
+    pub kv_trie_depth: Gauge,
     /// Sequences evicted from the running batch because an optimistic
     /// reservation could not grow (the pool ran dry mid-decode). Each one
     /// is parked for resume; worst-case admission never preempts.
@@ -336,6 +351,22 @@ impl ServingMetrics {
             s.push_str("kv-cache: slab (contiguous per-slot max_seq \
                         reservations)\n");
         }
+        // Rendered as its own line (not folded into `kv-cache:`) so
+        // trie-off reports — and every test/CI sed pinned to the legacy
+        // line — stay byte-identical.
+        let trie_active = self.kv_partial_prefix_hits.get()
+            + self.kv_prefix_tokens_saved.get()
+            + self.kv_trie_nodes.get()
+            + self.kv_trie_depth.get();
+        if self.kv_pages_total.get() > 0 && trie_active > 0 {
+            s.push_str(&format!(
+                "prefix-trie: partial hits {}, tokens saved {}, nodes {}, \
+                 depth {}\n",
+                self.kv_partial_prefix_hits.get(),
+                self.kv_prefix_tokens_saved.get(),
+                self.kv_trie_nodes.get(), self.kv_trie_depth.get()
+            ));
+        }
         if self.spec_verify_steps.get() > 0 {
             s.push_str(&format!(
                 "speculative: {} verify steps, {} proposed, {} accepted \
@@ -507,6 +538,27 @@ mod tests {
                             pages 2/8 in use (peak 5, 1 swap-blocked)"));
         assert!(r.contains(
             "slo: ttft 3/4 within target, tpot 2/2 within target"));
+    }
+
+    #[test]
+    fn prefix_trie_line_appears_only_when_the_trie_is_working() {
+        let m = ServingMetrics::default();
+        m.kv_pages_total.set(16);
+        m.kv_page_tokens.set(4);
+        assert!(!m.report().contains("prefix-trie:"),
+                "trie-off paged reports keep the legacy format");
+        m.kv_partial_prefix_hits.add(2);
+        m.kv_prefix_tokens_saved.add(11);
+        m.kv_trie_nodes.set(5);
+        m.kv_trie_depth.set(3);
+        let r = m.report();
+        assert!(r.contains(
+            "prefix-trie: partial hits 2, tokens saved 11, nodes 5, \
+             depth 3"));
+        // Slab serving never renders the line, even with stale counters.
+        let slab = ServingMetrics::default();
+        slab.kv_partial_prefix_hits.inc();
+        assert!(!slab.report().contains("prefix-trie:"));
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! 4. leak zero KV pages: after the drain every shard pool — including
 //!    pools rebuilt by crash-respawn — is empty and internally
 //!    consistent.
+//!
+//! The whole plan sweep runs twice, with the sub-page prefix trie off
+//! and on: partial-prefix adoption and trie-aware routing must uphold
+//! all four properties under the same chaos.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -93,19 +97,26 @@ fn is_natural(f: FinishReason) -> bool {
 fn fuzz_fault_recovery_token_exact_and_conserving() {
     for seed in 0..8u64 {
         for mix_name in ["uniform", "chat", "bursty", "agents"] {
+          // The sub-page trie axis: partial adoption and trie-aware
+          // routing must survive crash-respawn (rebuilt pools, re-applied
+          // trie flag) without changing a single emitted token.
+          for trie in [false, true] {
             let mix = ScenarioMix::from_name(mix_name)
                 .expect("preset mix name");
             let reqs = WorkloadGen::new(seed, mix, 64, 8, 6)
                 .generate(REQUESTS);
             let plan = FaultPlan::random(seed, SHARDS, 40, REQUESTS as u64);
-            let ctx = format!("seed {seed} mix {mix_name} plan {plan:?}");
+            let ctx =
+                format!("seed {seed} mix {mix_name} trie {trie} plan {plan:?}");
 
             let mut golden = golden_fleet();
+            golden.set_prefix_trie(trie);
             let (_, gold_out) = run_fleet(&mut golden, &reqs);
             golden.check_invariants().unwrap();
             assert_eq!(golden.pages_in_use(), 0, "{ctx}: golden leaked");
 
             let mut fleet = supervised_fleet(plan.clone());
+            fleet.set_prefix_trie(trie);
             let (accepted, outs) = run_fleet(&mut fleet, &reqs);
 
             // 1) Conservation: every accepted request resolves exactly
@@ -153,6 +164,7 @@ fn fuzz_fault_recovery_token_exact_and_conserving() {
             // 4) Zero leaked pages, even through respawned pools.
             fleet.check_invariants().unwrap();
             assert_eq!(fleet.pages_in_use(), 0, "{ctx}: leaked pages");
+          }
         }
     }
 }

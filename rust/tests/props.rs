@@ -889,6 +889,99 @@ fn prop_paged_scheduler_token_exact_vs_slab() {
     });
 }
 
+/// The sub-page prefix trie is **token-exact** vs the page-granular cache
+/// (the PR-10 tentpole's acceptance property; `docs/KVCACHE.md`): random
+/// prompt sets drawn from a handful of shared heads over a tiny alphabet —
+/// so sub-page prefix collisions fire constantly — served trie-off vs
+/// trie-on at identical geometry must stream identical tokens, finish
+/// reasons and truncation, and every drained trie run must leak zero pages
+/// and zero reservations. The suite as a whole must actually exercise the
+/// partial-adoption path (aggregate partial hits > 0), so the identity is
+/// not vacuous.
+#[test]
+fn prop_trie_scheduler_token_exact() {
+    use std::cell::Cell;
+    use std::sync::Arc;
+    use tenx_iree::coordinator::request::Request;
+    use tenx_iree::coordinator::{KvCacheConfig, KvChoice, MockBackend,
+                                 Scheduler};
+    use tenx_iree::metrics::ServingMetrics;
+
+    let partial_total = Cell::new(0u64);
+    forall(Config::default().cases(30), |g| {
+        let batch = g.usize_in(1, 5);
+        let prefill_seq = g.usize_in(4, 10);
+        let max_seq = prefill_seq + g.usize_in(1, 16);
+        let page_tokens = g.usize_in(2, 6);
+        let n_req = g.usize_in(2, 24);
+        let n_heads = g.usize_in(1, 3);
+        let heads: Vec<Vec<u32>> = (0..n_heads)
+            .map(|_| {
+                let hl = g.usize_in(1, prefill_seq);
+                (0..hl).map(|_| g.usize_in(1, 3) as u32).collect()
+            })
+            .collect();
+        let reqs: Vec<Request> = (0..n_req as u64)
+            .map(|id| {
+                // shared head + short random tail: prompts agree on a
+                // prefix that usually ends mid-page, which is exactly
+                // what page-granular sharing cannot see
+                let mut p = heads[g.usize_in(1, n_heads) - 1].clone();
+                let extra = g.usize_in(0, 4);
+                p.extend((0..extra).map(|_| g.usize_in(1, 3) as u32));
+                Request::greedy(id, p, g.usize_in(1, 6))
+            })
+            .collect();
+        let mut outs = Vec::new();
+        for trie in [false, true] {
+            let metrics = Arc::new(ServingMetrics::default());
+            let mut s = Scheduler::with_kv(
+                MockBackend::new(batch, prefill_seq, max_seq, 64), 64,
+                metrics.clone(), 7,
+                KvChoice::Paged(KvCacheConfig { page_tokens,
+                                                pool_pages: 0 }));
+            s.set_prefix_trie(trie);
+            for r in &reqs {
+                if !s.submit(r.clone()) {
+                    return Err("queue unexpectedly full".into());
+                }
+            }
+            let mut iters = 0;
+            while s.has_work() {
+                s.step().map_err(|e| e.to_string())?;
+                iters += 1;
+                if iters > 10_000 {
+                    return Err("trie scheduler did not converge".into());
+                }
+            }
+            let kv = s.kv_manager().expect("paged scheduler");
+            kv.check_invariants().map_err(|e| e.to_string())?;
+            prop_assert(kv.pages_in_use() == 0,
+                        "drained trie run leaked pages")?;
+            prop_assert(kv.reserved_pages() == 0,
+                        "drained trie run leaked reservations")?;
+            if trie {
+                partial_total.set(partial_total.get()
+                    + metrics.kv_partial_prefix_hits.get());
+            } else {
+                prop_assert(metrics.kv_partial_prefix_hits.get() == 0,
+                            "trie-off must not count partial hits")?;
+            }
+            let mut done = s.take_finished();
+            done.sort_by_key(|d| d.id);
+            outs.push(
+                done.iter()
+                    .map(|d| (d.id, d.prompt_len, d.tokens.clone(), d.finish))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        prop_assert(outs[0] == outs[1],
+                    "the prefix trie changed serving outputs")
+    });
+    assert!(partial_total.get() > 0,
+            "the generated prompt sets must exercise partial adoption");
+}
+
 /// Speculative decoding is **token-exact** vs plain greedy decode across
 /// random draft lengths (k ∈ 1..=4), both KV layouts and random workload
 /// geometries — and a drained speculative run leaks zero pool pages. The
@@ -970,7 +1063,10 @@ fn prop_speculative_token_exact_vs_plain_greedy() {
 /// interleavings, each replayed under four scheduler configurations — slab,
 /// paged with an auto-sized pool, and a deliberately undersized paged pool
 /// under both optimistic (preempting) and worst-case admission — with
-/// speculation on and off. Three invariants, checked on every trace:
+/// speculation on and off, each crossed with the sub-page prefix trie off
+/// and on (on slab the flag must be inert; on the undersized pool the trie
+/// rides eviction, preemption and COW pressure). Three invariants, checked
+/// on every trace:
 ///
 /// 1. **Token-exactness.** A request that finishes naturally streams the
 ///    same tokens under every configuration: preemption (recompute replay
@@ -1011,70 +1107,78 @@ fn fuzz_preemptive_scheduling_token_exact_and_conserving() {
     for seed in 0..125u64 {
         for k in [0usize, 2] {
             // id -> (tokens, prompt_len) of naturally finished requests,
-            // from the first config that finished that id.
+            // from the first config that finished that id. Shared across
+            // the trie axis too: trie-on must stream the same bits.
             let mut golden: HashMap<u64, (Vec<u32>, usize)> = HashMap::new();
-            for (choice, admission, name) in &configs {
-                let metrics = Arc::new(ServingMetrics::default());
-                let mut s = Scheduler::with_kv(
-                    MockBackend::new(2, 8, 32, 64), 64, metrics.clone(), 7,
-                    *choice);
-                s.set_admission(*admission);
-                s.set_speculative(k);
-                let (trace, outs) =
-                    replay_scenario_outputs(&mut s, seed, 8, 3);
-                traces += 1;
-                // conservation: every accepted request finishes once
-                let ok = trace.iter().filter(|l| l.starts_with("submit")
-                                             && l.contains("ok=true"))
-                    .count();
-                assert_eq!(ok, outs.len(),
-                           "{name} seed {seed} k {k}: accepted {ok} vs \
-                            finished {}", outs.len());
-                if let Some(kv) = s.kv_manager() {
-                    kv.check_invariants().unwrap_or_else(|e| panic!(
-                        "{name} seed {seed} k {k}: {e}"));
-                    assert_eq!(kv.pages_in_use(), 0,
-                               "{name} seed {seed} k {k}: leaked pages");
-                    assert_eq!(kv.reserved_pages(), 0,
-                               "{name} seed {seed} k {k}: leaked \
-                                reservations");
-                }
-                // determinism: the same (seed, config) replays bit-equal
-                let metrics2 = Arc::new(ServingMetrics::default());
-                let mut s2 = Scheduler::with_kv(
-                    MockBackend::new(2, 8, 32, 64), 64, metrics2, 7,
-                    *choice);
-                s2.set_admission(*admission);
-                s2.set_speculative(k);
-                let trace2 = tenx_iree::coordinator::replay_scenario(
-                    &mut s2, seed, 8, 3);
-                assert_eq!(trace, trace2,
-                           "{name} seed {seed} k {k}: nondeterministic");
-                // token-exactness per id across configurations (cancels
-                // may land differently when preemption shifts completion
-                // times, so only naturally finished requests compare)
-                for out in &outs {
-                    if out.finish == FinishReason::Cancelled {
-                        continue;
+            for trie in [false, true] {
+                for (choice, admission, name) in &configs {
+                    let metrics = Arc::new(ServingMetrics::default());
+                    let mut s = Scheduler::with_kv(
+                        MockBackend::new(2, 8, 32, 64), 64, metrics.clone(),
+                        7, *choice);
+                    s.set_admission(*admission);
+                    s.set_speculative(k);
+                    s.set_prefix_trie(trie);
+                    let (trace, outs) =
+                        replay_scenario_outputs(&mut s, seed, 8, 3);
+                    traces += 1;
+                    // conservation: every accepted request finishes once
+                    let ok = trace.iter().filter(|l| l.starts_with("submit")
+                                                 && l.contains("ok=true"))
+                        .count();
+                    assert_eq!(ok, outs.len(),
+                               "{name} trie {trie} seed {seed} k {k}: \
+                                accepted {ok} vs finished {}", outs.len());
+                    if let Some(kv) = s.kv_manager() {
+                        kv.check_invariants().unwrap_or_else(|e| panic!(
+                            "{name} trie {trie} seed {seed} k {k}: {e}"));
+                        assert_eq!(kv.pages_in_use(), 0,
+                                   "{name} trie {trie} seed {seed} k {k}: \
+                                    leaked pages");
+                        assert_eq!(kv.reserved_pages(), 0,
+                                   "{name} trie {trie} seed {seed} k {k}: \
+                                    leaked reservations");
                     }
-                    assert_eq!(out.finish, FinishReason::Length,
-                               "{name} seed {seed} k {k} id {}: the pool \
-                                is sized so nothing ever CacheFulls",
-                               out.id);
-                    let got = (out.tokens.clone(), out.prompt_len);
-                    match golden.get(&out.id) {
-                        None => { golden.insert(out.id, got); }
-                        Some(want) => assert_eq!(
-                            &got, want,
-                            "{name} seed {seed} k {k} id {}: stream \
-                             diverged across scheduler configs", out.id),
+                    // determinism: the same (seed, config) replays bit-equal
+                    let metrics2 = Arc::new(ServingMetrics::default());
+                    let mut s2 = Scheduler::with_kv(
+                        MockBackend::new(2, 8, 32, 64), 64, metrics2, 7,
+                        *choice);
+                    s2.set_admission(*admission);
+                    s2.set_speculative(k);
+                    s2.set_prefix_trie(trie);
+                    let trace2 = tenx_iree::coordinator::replay_scenario(
+                        &mut s2, seed, 8, 3);
+                    assert_eq!(trace, trace2,
+                               "{name} trie {trie} seed {seed} k {k}: \
+                                nondeterministic");
+                    // token-exactness per id across configurations (cancels
+                    // may land differently when preemption shifts completion
+                    // times, so only naturally finished requests compare)
+                    for out in &outs {
+                        if out.finish == FinishReason::Cancelled {
+                            continue;
+                        }
+                        assert_eq!(out.finish, FinishReason::Length,
+                                   "{name} trie {trie} seed {seed} k {k} \
+                                    id {}: the pool is sized so nothing \
+                                    ever CacheFulls", out.id);
+                        let got = (out.tokens.clone(), out.prompt_len);
+                        match golden.get(&out.id) {
+                            None => { golden.insert(out.id, got); }
+                            Some(want) => assert_eq!(
+                                &got, want,
+                                "{name} trie {trie} seed {seed} k {k} id \
+                                 {}: stream diverged across scheduler \
+                                 configs", out.id),
+                        }
                     }
+                    preemptions_total += metrics.preemptions.get();
                 }
-                preemptions_total += metrics.preemptions.get();
             }
         }
     }
-    assert_eq!(traces, 1000, "the harness must cover 1000 seeded traces");
+    assert_eq!(traces, 2000, "the harness must cover 2000 seeded traces");
     assert!(preemptions_total > 0,
             "the undersized pool must actually exercise preemption");
 }

@@ -117,6 +117,57 @@ if ! printf '%s\n' "$paged_out" | grep -q \
 fi
 echo "paged serve smoke: $hits shared-prefix hits, slab-exact tokens, 0 packs / 0 allocs"
 
+echo "== sub-page prefix-trie serve smoke (partial hits + parity) =="
+# The seeded agent-swarm workload shares an 8-token system prompt; with
+# 5-token pages that prompt ends mid-page (one full page plus a 3-token
+# head), so swarm members can only share the head through the trie.
+# Trie-on must (a) record partial-prefix hits and saved prefill tokens,
+# (b) keep the zero-repack steady state, and (c) emit exactly the
+# tokens the trie-off run emits — sub-page sharing is a memory
+# optimisation, never a decode change. Trie-off must stay silent: no
+# prefix-trie report line at all.
+trie_run() {
+    cargo run --release --quiet --bin tenx -- serve --native \
+        --precision f16 --vocab 64 --workload agents --requests 24 \
+        --max-new-tokens 4 --kv-layout paged --kv-page-tokens 5 \
+        --kv-pool-pages 96 --prefix-trie "$1"
+}
+trie_on_out="$(trie_run on)"
+trie_off_out="$(trie_run off)"
+trie_on_toks="$(printf '%s\n' "$trie_on_out" \
+    | grep '^req ' | sed 's/.*-> //')"
+trie_off_toks="$(printf '%s\n' "$trie_off_out" \
+    | grep '^req ' | sed 's/.*-> //')"
+if [ -z "$trie_on_toks" ] || [ "$trie_on_toks" != "$trie_off_toks" ]; then
+    echo "trie smoke: trie-on tokens diverged from trie-off"
+    echo "--- trie on ---"; printf '%s\n' "$trie_on_out"
+    echo "--- trie off --"; printf '%s\n' "$trie_off_out"
+    exit 1
+fi
+if printf '%s\n' "$trie_off_out" | grep -q '^prefix-trie:'; then
+    echo "trie smoke: --prefix-trie off must not report trie activity"
+    printf '%s\n' "$trie_off_out"
+    exit 1
+fi
+trie_partial="$(printf '%s\n' "$trie_on_out" \
+    | sed -n 's/^prefix-trie: partial hits \([0-9]*\),.*/\1/p')"
+trie_saved="$(printf '%s\n' "$trie_on_out" \
+    | sed -n 's/^prefix-trie:.*tokens saved \([0-9]*\),.*/\1/p')"
+if [ -z "$trie_partial" ] || [ "$trie_partial" -eq 0 ] \
+    || [ -z "$trie_saved" ] || [ "$trie_saved" -eq 0 ]; then
+    echo "trie smoke: expected partial hits > 0 and tokens saved > 0"
+    printf '%s\n' "$trie_on_out"
+    exit 1
+fi
+if ! printf '%s\n' "$trie_on_out" | grep -q \
+    '^steady-state: decode rhs packs 0, decode scratch allocs 0'; then
+    echo "trie smoke: the trie broke the zero-repack steady state"
+    printf '%s\n' "$trie_on_out"
+    exit 1
+fi
+echo "trie smoke: $trie_partial partial hits, $trie_saved tokens saved, \
+trie-off-exact tokens, 0 packs / 0 allocs"
+
 echo "== speculative serve smoke (draft/verify parity, both precisions) =="
 # Speculative decoding must (a) emit exactly the tokens plain greedy
 # decode emits, (b) actually engage — acceptance counters > 0 (vocab 64
@@ -375,9 +426,14 @@ if [ "${RUN_BENCHES:-0}" = "1" ]; then
     # on peak concurrency and mean occupancy for the bursty and
     # agent-swarm mixes at an equal, undersized pool.
     TENX_BENCH_QUICK=1 cargo bench --bench workload_mix
+    # e2e_serving self-asserts paged-vs-slab token parity and the
+    # sub-page trie's strictly-higher hit rate / strictly-fewer prefill
+    # tokens on its shared-head prompt mix.
+    TENX_BENCH_QUICK=1 cargo bench --bench e2e_serving
     # fleet_serving self-asserts the prefix router beats round-robin on
-    # fleet-wide shared-prefix hits and the fleet holds the single
-    # pooled host's peak concurrency at equal total pages.
+    # fleet-wide shared-prefix hits, the fleet holds the single pooled
+    # host's peak concurrency at equal total pages, and trie-on routing
+    # strictly beats trie-off on hits and prefill tokens computed.
     TENX_BENCH_QUICK=1 cargo bench --bench fleet_serving
     # fault_recovery self-asserts bit-exact token streams and equal
     # goodput through an injected shard crash on the supervised fleet.
